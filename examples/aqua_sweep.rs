@@ -1,0 +1,44 @@
+//! The controllable knob: sweep k_ratio on a fixed prompt and show the
+//! quality/cost trade-off (paper Table 7's qualitative story + the §5 cost
+//! model side by side).
+
+use std::sync::Arc;
+
+use aqua_serve::aqua::policy::{AquaConfig, CostModel};
+use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use aqua_serve::runtime::{Artifacts, ModelRuntime};
+use aqua_serve::tokenizer::ByteTokenizer;
+
+fn main() -> anyhow::Result<()> {
+    let arts = Artifacts::load(aqua_serve::ARTIFACTS_DIR)?;
+    let rt = Arc::new(ModelRuntime::load(arts.model("llama-analog")?)?);
+    let d = rt.cfg.d_head;
+    let cost = CostModel { d_head: d };
+    let tok = ByteTokenizer;
+    let mut engine = Engine::new(rt.clone(), EngineConfig { batch: 1, ..Default::default() })?;
+
+    let prompt = "the capital of ";
+    println!("# AQUA knob sweep — prompt {prompt:?} (greedy)\n");
+    println!("{:>8} {:>5} {:>14} {:>16}  generation",
+             "k_ratio", "k", "score FLOPs@512", "break-even i+1");
+    for r in [1.0, 0.9, 0.75, 0.5, 0.4, 0.3, 0.2, 0.1] {
+        let aqua = if r >= 1.0 {
+            AquaConfig::baseline()
+        } else {
+            AquaConfig { k_ratio: r, ..Default::default() }
+        };
+        engine.with_aqua(aqua);
+        let mut req = GenRequest::new(1, tok.encode(prompt), 40);
+        req.stop_token = Some(b'\n' as i32);
+        let res = engine.run_batch(vec![req])?.remove(0);
+        let k = aqua.k_dims(d);
+        let flops = if r >= 1.0 { cost.standard_flops(512) } else { cost.aqua_flops(512, k) };
+        let be = cost
+            .paper_breakeven(k)
+            .map(|b| b.to_string())
+            .unwrap_or_else(|| "never".into());
+        println!("{:>8.2} {:>5} {:>14} {:>16}  {:?}",
+                 r, k, flops, be, tok.decode(&res.tokens));
+    }
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Open-loop load test: Poisson arrivals against the threaded engine
+//! front-end (`EngineHandle`), the way a serving paper measures latency
+//! under load — queueing delay included, unlike the closed-loop
+//! serving_demo.
+//!
+//! ```bash
+//! cargo run --release --example openloop_load [-- <requests-per-second>...]
+//! ```
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use aqua_serve::aqua::policy::AquaConfig;
+use aqua_serve::coordinator::engine::{EngineCmd, EngineHandle};
+use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use aqua_serve::runtime::{Artifacts, ModelRuntime};
+use aqua_serve::tokenizer::ByteTokenizer;
+use aqua_serve::util::prng::Rng;
+use aqua_serve::util::{mean, percentile};
+
+fn main() -> anyhow::Result<()> {
+    let rates: Vec<f64> = {
+        let args: Vec<f64> =
+            std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
+        if args.is_empty() {
+            vec![2.0, 6.0, 12.0]
+        } else {
+            args
+        }
+    };
+    let arts = Artifacts::load(aqua_serve::ARTIFACTS_DIR)?;
+    let corpus = std::fs::read(arts.corpus_path("valid")?)?;
+    let mart = arts.model("llama-analog")?.clone();
+
+    // Engine lives on its own thread (PJRT handles are !Send).
+    let handle = EngineHandle::spawn(move || {
+        let rt = std::sync::Arc::new(ModelRuntime::load(&mart)?);
+        Engine::new(
+            rt,
+            EngineConfig {
+                batch: 4,
+                aqua: AquaConfig { k_ratio: 0.75, ..Default::default() },
+                ..Default::default()
+            },
+        )
+    });
+    let tok = ByteTokenizer;
+    let lines: Vec<&[u8]> = corpus.split(|&b| b == b'\n').filter(|l| l.len() > 10).collect();
+
+    // Warm the executables.
+    handle.cmd_tx.send(EngineCmd::Submit(GenRequest::new(
+        0,
+        tok.encode_bytes(lines[0]),
+        4,
+    )))?;
+    let _ = handle.result_rx.recv_timeout(Duration::from_secs(60));
+
+    println!("# open-loop Poisson load, 20 requests per rate, AQUA k=0.75, batch=4\n");
+    println!("{:>8} {:>12} {:>12} {:>12} {:>10}",
+             "req/s", "e2e p50", "e2e p99", "ttft p50", "done");
+    let mut next_id = 1u64;
+    for &rate in &rates {
+        let n = 20usize;
+        let mut rng = Rng::new(7);
+        let mut submit_times = std::collections::HashMap::new();
+        let t0 = Instant::now();
+        let mut e2e = vec![];
+        let mut ttft = vec![];
+        let mut done = 0usize;
+        let mut sent = 0usize;
+        let mut next_arrival = Duration::ZERO;
+        while done < n {
+            // submit according to the Poisson schedule
+            while sent < n && t0.elapsed() >= next_arrival {
+                let line = lines[rng.below(lines.len())];
+                let cut = 6 + rng.below(line.len() - 6);
+                let mut r = GenRequest::new(next_id, tok.encode_bytes(&line[..cut]), 24);
+                r.stop_token = Some(b'\n' as i32);
+                submit_times.insert(next_id, Instant::now());
+                handle.cmd_tx.send(EngineCmd::Submit(r))?;
+                next_id += 1;
+                sent += 1;
+                // exponential inter-arrival
+                let u: f64 = rng.f64().max(1e-9);
+                next_arrival += Duration::from_secs_f64(-u.ln() / rate);
+            }
+            match handle.result_rx.recv_timeout(Duration::from_millis(2)) {
+                Ok(res) => {
+                    let t_submit = submit_times[&res.id];
+                    e2e.push(t_submit.elapsed().as_secs_f64() * 1e3);
+                    ttft.push(res.ttft_us as f64 / 1e3);
+                    done += 1;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(e) => anyhow::bail!("engine thread died: {e}"),
+            }
+        }
+        println!("{:>8.1} {:>10.1}ms {:>10.1}ms {:>10.1}ms {:>10}",
+                 rate, percentile(&e2e, 50.0), percentile(&e2e, 99.0),
+                 percentile(&ttft, 50.0), done);
+        let _ = mean(&e2e);
+    }
+    let _ = handle.cmd_tx.send(EngineCmd::Shutdown);
+    Ok(())
+}

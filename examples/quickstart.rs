@@ -1,0 +1,41 @@
+//! Quickstart: load the artifacts, generate text, flip the AQUA knob.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use aqua_serve::aqua::policy::AquaConfig;
+use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use aqua_serve::runtime::{Artifacts, ModelRuntime};
+use aqua_serve::tokenizer::ByteTokenizer;
+
+fn main() -> anyhow::Result<()> {
+    let arts = Artifacts::load(aqua_serve::ARTIFACTS_DIR)?;
+    let rt = Arc::new(ModelRuntime::load(arts.model("llama-analog")?)?);
+    let tok = ByteTokenizer;
+
+    let mut engine = Engine::new(rt, EngineConfig { batch: 1, ..Default::default() })?;
+
+    let prompt = "the capital of ";
+    println!("prompt: {prompt:?}\n");
+    for (label, aqua) in [
+        ("standard attention (baseline)", AquaConfig::baseline()),
+        ("AQUA k_ratio=0.75 (the paper's sweet spot)",
+         AquaConfig { k_ratio: 0.75, ..Default::default() }),
+        ("AQUA k_ratio=0.30 (aggressive, quality degrades)",
+         AquaConfig { k_ratio: 0.30, ..Default::default() }),
+    ] {
+        engine.with_aqua(aqua);
+        let mut req = GenRequest::new(1, tok.encode(prompt), 48);
+        req.stop_token = Some(b'\n' as i32);
+        let res = engine.run_batch(vec![req])?.remove(0);
+        println!("{label}\n  -> {:?}", tok.decode(&res.tokens));
+        let d = engine.runtime().cfg.d_head;
+        println!("  k = {}/{} dims, effective ratio {:.2}\n",
+                 aqua.k_dims(d), d, aqua.effective_ratio());
+    }
+    println!("{}", engine.metrics.snapshot().report());
+    Ok(())
+}

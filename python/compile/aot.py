@@ -1,0 +1,227 @@
+"""AOT build orchestrator — the only python entry point (`make artifacts`).
+
+Idempotent pipeline (each stage skipped if its outputs already exist):
+
+  corpus    -> artifacts/corpus/{train,valid,calib,devan}.txt
+  train     -> artifacts/<model>/params.npz (+ loss curve in manifest)
+  calibrate -> artifacts/<model>/proj.npz, artifacts/<model>/calib_dump.npz
+  tasks     -> artifacts/tasks/*.jsonl
+  lower     -> artifacts/<model>/{decode_bN,prefill_bN_cC}.hlo.txt
+  manifest  -> artifacts/manifest.json
+
+HLO **text** is the interchange format (NOT serialized HloModuleProto): the
+image's xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction ids; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _log(msg: str):
+    print(f"[aot] {msg}", flush=True)
+
+
+def build(artifacts: str, force: bool = False, fast: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from . import calibrate as C
+    from . import corpus as CORP
+    from . import model as M
+    from . import tasks as T
+    from . import train as TR
+    from .config import (CalibConfig, CorpusConfig, DECODE_BATCHES, MODELS,
+                         PREFILL_CHUNK, TrainConfig)
+
+    os.makedirs(artifacts, exist_ok=True)
+    manifest_path = os.path.join(artifacts, "manifest.json")
+    manifest = {"models": {}, "corpus": {}, "tasks": {}, "train": {}}
+
+    # ------------------------------------------------------------------ corpus
+    ccfg = CorpusConfig()
+    corpus_dir = os.path.join(artifacts, "corpus")
+    marker = os.path.join(corpus_dir, "devan.txt")
+    if force or not os.path.exists(marker):
+        _log("generating corpora")
+        manifest["corpus"] = CORP.write_corpora(ccfg, corpus_dir)
+    else:
+        manifest["corpus"] = {n: {"path": os.path.join(corpus_dir, f"{n}.txt")}
+                              for n in ("train", "valid", "calib", "devan")}
+
+    def read(split):
+        with open(manifest["corpus"][split]["path"], "rb") as f:
+            return f.read()
+
+    # ------------------------------------------------------------------ tasks
+    tasks_dir = os.path.join(artifacts, "tasks")
+    if force or not os.path.exists(os.path.join(tasks_dir, "knowledge.jsonl")):
+        _log("generating SynthBench task files")
+        manifest["tasks"] = T.write_tasks(ccfg.seed, tasks_dir,
+                                          n_items=20 if fast else 60)
+    else:
+        manifest["tasks"] = {n: {"path": os.path.join(tasks_dir, f"{n}.jsonl"),
+                                 "analog_of": T.ANALOG_OF[n]} for n in T.TASKS}
+
+    # ------------------------------------------------- per-model: train/calib
+    tcfg = TrainConfig(steps=60 if fast else 400)
+    calcfg = CalibConfig(batches=4 if fast else 24)
+    for name, cfg in MODELS.items():
+        mdir = os.path.join(artifacts, name)
+        os.makedirs(mdir, exist_ok=True)
+        params_path = os.path.join(mdir, "params.npz")
+        proj_path = os.path.join(mdir, "proj.npz")
+        dump_path = os.path.join(mdir, "calib_dump.npz")
+
+        if force or not os.path.exists(params_path):
+            _log(f"training {name} ({tcfg.steps} steps)")
+            t0 = time.time()
+            params, curve = TR.train(cfg, tcfg, read("train"), read("valid"), log=_log)
+            TR.save_params(params, params_path)
+            manifest["train"][name] = {"curve": curve,
+                                       "wall_s": round(time.time() - t0, 1)}
+        else:
+            params = TR.load_params(params_path)
+            # keep the original run's curve if preserved
+            log_path = os.path.join(artifacts, "train_log.json")
+            prev = {}
+            if os.path.exists(log_path):
+                with open(log_path) as f:
+                    prev = json.load(f).get(name, {})
+            manifest["train"][name] = prev or {"curve": [], "wall_s": 0.0,
+                                               "note": "reused existing checkpoint"}
+
+        if force or not os.path.exists(proj_path):
+            _log(f"calibrating projections for {name}")
+            proj, _ = C.calibrate(cfg, params, read("calib"), calcfg)
+            np.savez(proj_path, proj=proj)
+            _log(f"dumping figure activations for {name}")
+            C.dump_for_figures(cfg, params, proj, read("valid"), read("devan"),
+                               calcfg, dump_path)
+        else:
+            with np.load(proj_path) as z:
+                proj = z["proj"]
+
+        # ------------------------------------------------------------- lower
+        import jax.numpy as jnp
+
+        d, L, nkv, nq = cfg.d_head, cfg.n_layers, cfg.n_kv_heads, cfg.n_q_heads
+        S, V = cfg.max_seq, cfg.vocab
+        f32, i32 = jnp.float32, jnp.int32
+        plist = [params[k] for k in sorted(params)]
+        pspecs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in plist]
+
+        hlo_entries = {}
+
+        def lower_fn(tag, fn, specs):
+            path = os.path.join(mdir, f"{tag}.hlo.txt")
+            if not force and os.path.exists(path):
+                hlo_entries[tag] = path
+                return
+            _log(f"lowering {name}/{tag}")
+            text = to_hlo_text(jax.jit(fn).lower(*specs))
+            with open(path, "w") as f:
+                f.write(text)
+            hlo_entries[tag] = path
+
+        for b in DECODE_BATCHES:
+            common = [
+                jax.ShapeDtypeStruct((L, nkv, d, d), f32),      # proj
+            ]
+            cache = jax.ShapeDtypeStruct((L, b, S, nkv, d), f32)
+            decode_specs = pspecs + common + [
+                jax.ShapeDtypeStruct((b,), i32),                # tokens
+                jax.ShapeDtypeStruct((b,), i32),                # pos
+                cache, cache,                                   # k_cache, v_cache
+                jax.ShapeDtypeStruct((b, S), f32),              # slot_mask
+                jax.ShapeDtypeStruct((), i32),                  # k_dims
+                jax.ShapeDtypeStruct((d,), f32),                # dim_keep
+            ]
+
+            def mk_decode(cfg=cfg, n=len(pspecs)):
+                def fn(*args):
+                    pl, rest = list(args[:n]), args[n:]
+                    return M.decode_step(cfg, pl, *rest, use_pallas=True)
+                return fn
+
+            lower_fn(f"decode_b{b}", mk_decode(), decode_specs)
+
+            C_chunk = PREFILL_CHUNK
+            prefill_specs = pspecs + common + [
+                jax.ShapeDtypeStruct((b, C_chunk), i32),        # tokens
+                jax.ShapeDtypeStruct((b,), i32),                # pos0
+                cache, cache,
+                jax.ShapeDtypeStruct((b, S), f32),
+                jax.ShapeDtypeStruct((), i32),
+                jax.ShapeDtypeStruct((d,), f32),
+            ]
+
+            def mk_prefill(cfg=cfg, n=len(pspecs)):
+                def fn(*args):
+                    pl, rest = list(args[:n]), args[n:]
+                    return M.prefill_chunk(cfg, pl, *rest, use_pallas=True)
+                return fn
+
+            lower_fn(f"prefill_b{b}_c{C_chunk}", mk_prefill(), prefill_specs)
+
+        manifest["models"][name] = {
+            "config": cfg.to_json_dict(),
+            "params": params_path,
+            "proj": proj_path,
+            "calib_dump": dump_path,
+            "param_order": sorted(params),
+            "hlo": hlo_entries,
+            "decode_batches": list(DECODE_BATCHES),
+            "prefill_chunk": PREFILL_CHUNK,
+            # decode outputs: (logits, k_cache, v_cache, attn_acc)
+            # prefill outputs: (logits[B,C,V], k_cache, v_cache, slot_mask, attn_acc)
+        }
+
+    def relativize(obj):
+        """Store all paths relative to the artifacts dir so the rust side
+        can resolve them against the manifest's own location."""
+        if isinstance(obj, dict):
+            return {k: (os.path.relpath(v, artifacts) if k == "path" or
+                        (isinstance(v, str) and v.endswith((".npz", ".hlo.txt", ".txt", ".jsonl")))
+                        else relativize(v))
+                    for k, v in obj.items()}
+        if isinstance(obj, str) and obj.endswith((".npz", ".hlo.txt", ".jsonl")):
+            return os.path.relpath(obj, artifacts)
+        return obj
+
+    manifest = relativize(manifest)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    _log(f"wrote {manifest_path}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny training run (CI smoke), not for experiments")
+    args = ap.parse_args()
+    build(args.artifacts, force=args.force, fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Offline projection-matrix calibration (paper §6.1) + activation dumps for
+the figure analyses.
+
+For each (layer, kv-group) we stack the group's query matrices and the shared
+key matrix vertically (paper §6.3):
+
+    D_calib = [ D_q1 ; D_q2 ; ... ; D_qN ; D_k ]  ∈ R^{(N+1)M × d}
+
+and take the right singular vectors V of its SVD as the projection P. P is
+orthogonal, so caching K̂ = K·P is a lossless rotation (Lemma A.4).
+
+Also dumps raw post-RoPE q/k samples (calibration split + held-out eval split
++ the cross-lingual ``devan`` split) that the rust analysis binaries use to
+regenerate Figures 2, 3/4 and 5.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .config import CalibConfig, ModelConfig
+from .train import ByteDataset
+
+
+def collect_activations(cfg: ModelConfig, params: dict, data: bytes,
+                        cc: CalibConfig, seed_salt: int = 0):
+    """Run the frozen model over a corpus; return per-layer post-RoPE
+    activations: qs [L][N, n_q, d], ks [L][N, n_kv, d] (N = batches·batch·seq,
+    subsampled to max_vectors_per_group rows)."""
+    ds = ByteDataset(data, cc.seq, cc.seed + seed_salt)
+    fwd = jax.jit(lambda p, t: M.train_forward(cfg, p, t, collect_qk=True)[1])
+    qs = [[] for _ in range(cfg.n_layers)]
+    ks = [[] for _ in range(cfg.n_layers)]
+    for _ in range(cc.batches):
+        toks = jnp.asarray(ds.batch(cc.batch)[:, :-1])
+        lq, lk = fwd(params, toks)
+        for l in range(cfg.n_layers):
+            qs[l].append(np.asarray(lq[l]).reshape(-1, cfg.n_q_heads, cfg.d_head))
+            ks[l].append(np.asarray(lk[l]).reshape(-1, cfg.n_kv_heads, cfg.d_head))
+    rng = np.random.default_rng(cc.seed + 100 + seed_salt)
+    out_q, out_k = [], []
+    for l in range(cfg.n_layers):
+        q = np.concatenate(qs[l])
+        k = np.concatenate(ks[l])
+        idx = rng.permutation(len(q))[: cc.max_vectors_per_group]
+        out_q.append(q[idx])
+        out_k.append(k[idx])
+    return out_q, out_k
+
+
+def gqa_stack(cfg: ModelConfig, q_l: np.ndarray, k_l: np.ndarray, group: int) -> np.ndarray:
+    """Build D_calib for kv-group ``group``: stack its query heads + the
+    shared key head."""
+    gsz = cfg.group_size
+    q_heads = [q_l[:, group * gsz + j, :] for j in range(gsz)]
+    return np.concatenate(q_heads + [k_l[:, group, :]], axis=0)
+
+
+def svd_projection(d_calib: np.ndarray) -> np.ndarray:
+    """P = V from D = UΣVᵀ (right singular vectors, columns ordered by
+    decreasing variance)."""
+    _, _, vt = np.linalg.svd(d_calib, full_matrices=True)
+    return vt.T.astype(np.float32)  # [d, d]
+
+
+def calibrate(cfg: ModelConfig, params: dict, calib_bytes: bytes,
+              cc: CalibConfig):
+    """Returns proj [L, n_kv, d, d] plus the raw activations used."""
+    qs, ks = collect_activations(cfg, params, calib_bytes, cc)
+    proj = np.zeros((cfg.n_layers, cfg.n_kv_heads, cfg.d_head, cfg.d_head),
+                    np.float32)
+    for l in range(cfg.n_layers):
+        for g in range(cfg.n_kv_heads):
+            p = svd_projection(gqa_stack(cfg, qs[l], ks[l], g))
+            err = np.abs(p.T @ p - np.eye(cfg.d_head)).max()
+            assert err < 1e-3, f"P not orthogonal (layer {l} group {g}): {err}"
+            proj[l, g] = p
+    return proj, (qs, ks)
+
+
+def dump_for_figures(cfg: ModelConfig, params: dict, proj: np.ndarray,
+                     eval_bytes: bytes, devan_bytes: bytes, cc: CalibConfig,
+                     path: str):
+    """Write the npz consumed by `aqua fig2|fig3|fig5`:
+
+    - eval-split q/k for layer 0 group 0 (Fig 2 online-vs-offline) and the
+      *last* layer (Fig 5 overlap),
+    - devan-split q/k for the same group (Fig 3/4 cross-lingual),
+    - the calibrated P for those groups.
+    Vectors capped at cc.dump_vectors rows.
+    """
+    n = cc.dump_vectors
+    qs_e, ks_e = collect_activations(cfg, params, eval_bytes, cc, seed_salt=31)
+    qs_d, ks_d = collect_activations(cfg, params, devan_bytes, cc, seed_salt=57)
+    last = cfg.n_layers - 1
+    gsz = cfg.group_size
+    out = {
+        "proj_l0_g0": proj[0, 0],
+        "proj_last_g0": proj[last, 0],
+        "group_size": np.int32(gsz),
+    }
+    for tag, (qs, ks) in (("eval", (qs_e, ks_e)), ("devan", (qs_d, ks_d))):
+        for j in range(gsz):
+            out[f"{tag}_l0_q{j}"] = qs[0][:n, j, :]
+        out[f"{tag}_l0_k"] = ks[0][:n, 0, :]
+    for j in range(gsz):
+        out[f"eval_last_q{j}"] = qs_e[last][:n, j, :]
+    out["eval_last_k"] = ks_e[last][:n, 0, :]
+    np.savez(path, **out)
+    return sorted(out)

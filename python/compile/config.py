@@ -1,0 +1,98 @@
+"""Shared build-time configuration for the AQUA reproduction.
+
+Two model variants mirror the paper's evaluation pair (scaled to the
+CPU-trainable regime; see DESIGN.md "Substitutions"):
+
+* ``llama-analog`` — Grouped-Query Attention with the paper's group size
+  (N_Q = 4 query heads per kv head, §6.3's Fig-2 group exactly).
+* ``olmoe-analog`` — Multi-Head Attention (one kv head per query head),
+  the paper's architecture-contrast model.
+
+Everything here is consumed by the build path only (train / calibrate /
+aot); the rust runtime reads the same values from ``artifacts/manifest.json``.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Transformer LM hyperparameters (byte-level)."""
+
+    name: str
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_q_heads: int = 4
+    n_kv_heads: int = 1  # GQA group size = n_q_heads // n_kv_heads
+    d_head: int = 32
+    d_ff: int = 512
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    max_seq: int = 512       # serving KV-cache capacity S
+    train_seq: int = 192     # training context length
+
+    @property
+    def group_size(self) -> int:
+        assert self.n_q_heads % self.n_kv_heads == 0
+        return self.n_q_heads // self.n_kv_heads
+
+    def to_json_dict(self):
+        d = asdict(self)
+        d["group_size"] = self.group_size
+        return d
+
+
+LLAMA_ANALOG = ModelConfig(name="llama-analog", n_q_heads=4, n_kv_heads=1)
+OLMOE_ANALOG = ModelConfig(name="olmoe-analog", n_q_heads=4, n_kv_heads=4)
+
+MODELS = {m.name: m for m in (LLAMA_ANALOG, OLMOE_ANALOG)}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Tiny-but-real training run; loss curve recorded in EXPERIMENTS.md."""
+
+    steps: int = 400
+    batch: int = 12
+    lr: float = 3e-3
+    lr_min_frac: float = 0.1   # cosine decay floor
+    warmup: int = 40
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    seed: int = 0
+    eval_every: int = 50
+    eval_batches: int = 4
+
+
+@dataclass(frozen=True)
+class CorpusConfig:
+    """Synthetic template-grammar corpora (see corpus.py)."""
+
+    seed: int = 1234
+    train_lines: int = 24_000
+    valid_lines: int = 1_200
+    calib_lines: int = 2_400
+    crossling_lines: int = 1_200
+
+
+@dataclass(frozen=True)
+class CalibConfig:
+    """Offline projection calibration (paper §6.1)."""
+
+    batches: int = 24
+    batch: int = 8
+    seq: int = 192
+    max_vectors_per_group: int = 4096  # subsample cap for SVD
+    dump_vectors: int = 1024           # per matrix, for Figures 2-5
+    seed: int = 7
+
+
+# AOT lowering grid: one executable per (model, fn, batch).
+DECODE_BATCHES = (1, 4)
+PREFILL_CHUNK = 32
+
+ARTIFACTS_DIR = "artifacts"

@@ -1,0 +1,203 @@
+"""Synthetic template-grammar corpora.
+
+Stand-ins for the paper's data (DESIGN.md "Substitutions"):
+
+* ``anglish`` — an ASCII pseudo-language. Train/calibration split plays the
+  role of BookCorpus; a held-out split plays WikiText (perplexity + figure
+  analyses); task files generated from the same grammar play the role of the
+  MMLU/GSM8K/HellaSwag/WinoGrande/TruthfulQA/ARC suite.
+* ``devan`` — a second pseudo-language over a *disjoint* high byte range
+  (0xA1..0xDA, one byte per "letter", mimicking a different script) with a
+  different syllable and sentence structure. Used only for the cross-lingual
+  projection-transfer analysis (paper Fig. 3/4).
+
+Everything is deterministic given the seed so python tests, the rust engine,
+and the benches all see the same world.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------------
+# Grammar worlds
+# ---------------------------------------------------------------------------
+
+_ANG_ONSETS = ["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z"]
+_ANG_VOWELS = ["a", "e", "i", "o", "u"]
+_ANG_CODAS = ["", "n", "r", "s", "l", "m"]
+
+_DEV_CHARS = [bytes([c]).decode("latin-1") for c in range(0xA1, 0xDB)]
+
+
+def _ang_word(rng: random.Random, syllables: int) -> str:
+    parts = []
+    for _ in range(syllables):
+        parts.append(rng.choice(_ANG_ONSETS) + rng.choice(_ANG_VOWELS) + rng.choice(_ANG_CODAS))
+    return "".join(parts)
+
+
+def _dev_word(rng: random.Random, length: int) -> str:
+    return "".join(rng.choice(_DEV_CHARS) for _ in range(length))
+
+
+@dataclass
+class World:
+    """The closed world of entities/facts that both the corpus and the
+    evaluation tasks are generated from. Facts are fixed per seed, so the
+    knowledge tasks query exactly what the training corpus taught."""
+
+    people: list = field(default_factory=list)
+    countries: list = field(default_factory=list)
+    cities: list = field(default_factory=list)
+    nouns: list = field(default_factory=list)
+    adjectives: list = field(default_factory=list)
+    antonyms: list = field(default_factory=list)  # (adj, opposite) pairs
+    colors: list = field(default_factory=list)
+    verbs: list = field(default_factory=list)
+    capital: dict = field(default_factory=dict)   # country -> city
+    color_of: dict = field(default_factory=dict)  # noun -> color
+
+
+def build_world(seed: int) -> World:
+    rng = random.Random(seed * 7919 + 13)
+    w = World()
+    used = set()
+
+    def fresh(gen):
+        for _ in range(1000):
+            word = gen()
+            if word not in used:
+                used.add(word)
+                return word
+        raise RuntimeError("word space exhausted")
+
+    w.people = [fresh(lambda: _ang_word(rng, 2)) for _ in range(12)]
+    w.countries = [fresh(lambda: _ang_word(rng, 3)) for _ in range(12)]
+    w.cities = [fresh(lambda: _ang_word(rng, 2)) for _ in range(12)]
+    w.nouns = [fresh(lambda: _ang_word(rng, 2)) for _ in range(12)]
+    w.adjectives = [fresh(lambda: _ang_word(rng, 2)) for _ in range(10)]
+    w.colors = [fresh(lambda: _ang_word(rng, 1)) for _ in range(8)]
+    w.verbs = [fresh(lambda: _ang_word(rng, 2)) for _ in range(8)]
+    w.antonyms = [(w.adjectives[i], w.adjectives[i + 1]) for i in range(0, 10, 2)]
+    cities = w.cities[:]
+    rng.shuffle(cities)
+    w.capital = dict(zip(w.countries, cities))
+    w.color_of = {n: rng.choice(w.colors) for n in w.nouns}
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Sentence templates (anglish)
+# ---------------------------------------------------------------------------
+
+
+def sent_fact_capital(w: World, rng: random.Random) -> str:
+    c = rng.choice(w.countries)
+    return f"the capital of {c} is {w.capital[c]} ."
+
+
+def sent_fact_color(w: World, rng: random.Random) -> str:
+    n = rng.choice(w.nouns)
+    return f"the color of {n} is {w.color_of[n]} ."
+
+
+def sent_arith(w: World, rng: random.Random) -> str:
+    # single-digit operands: 100 facts, memorizable at the ~1M-param scale
+    # (the GSM8K analog must sit *above* floor at baseline so Table 1 can
+    # show the paper's reasoning-collapses-first shape)
+    a, b = rng.randrange(0, 10), rng.randrange(0, 10)
+    return f"{a} plus {b} equals {a + b} ."
+
+
+def sent_narrative(w: World, rng: random.Random) -> str:
+    return (
+        f"the {rng.choice(w.adjectives)} {rng.choice(w.nouns)} "
+        f"{rng.choice(w.verbs)} the {rng.choice(w.nouns)} ."
+    )
+
+
+def sent_coref(w: World, rng: random.Random) -> str:
+    a, b = rng.sample(w.people, 2)
+    n = rng.choice(w.nouns)
+    return f"{a} gave the {n} to {b} . {b} now has the {n} ."
+
+
+def sent_negation(w: World, rng: random.Random) -> str:
+    adj, opp = rng.choice(w.antonyms)
+    p = rng.choice(w.people)
+    return f"{p} is {adj} . {p} is not {opp} ."
+
+
+_SENTENCES = [
+    (sent_narrative, 0.30),
+    (sent_fact_capital, 0.14),
+    (sent_fact_color, 0.12),
+    (sent_arith, 0.20),
+    (sent_coref, 0.12),
+    (sent_negation, 0.12),
+]
+
+
+def anglish_line(w: World, rng: random.Random) -> str:
+    r = rng.random()
+    acc = 0.0
+    for fn, p in _SENTENCES:
+        acc += p
+        if r <= acc:
+            return fn(w, rng)
+    return sent_narrative(w, rng)
+
+
+# ---------------------------------------------------------------------------
+# devan (cross-lingual set)
+# ---------------------------------------------------------------------------
+
+
+def devan_line(rng: random.Random) -> str:
+    """Different script AND different structure: longer words, no 'the',
+    verb-final order, danda-like terminator."""
+    n = rng.randrange(3, 7)
+    words = [_dev_word(rng, rng.randrange(2, 6)) for _ in range(n)]
+    return " ".join(words) + " ÿ"  # 0xFF as sentence mark (latin-1)
+
+
+# ---------------------------------------------------------------------------
+# Corpus assembly
+# ---------------------------------------------------------------------------
+
+
+def generate_anglish(seed: int, n_lines: int, salt: int) -> list[str]:
+    w = build_world(seed)
+    rng = random.Random(seed * 104729 + salt)
+    return [anglish_line(w, rng) for _ in range(n_lines)]
+
+
+def generate_devan(seed: int, n_lines: int) -> list[str]:
+    rng = random.Random(seed * 15485863 + 5)
+    return [devan_line(rng) for _ in range(n_lines)]
+
+
+def corpus_bytes(lines: list[str]) -> bytes:
+    return ("\n".join(lines) + "\n").encode("latin-1")
+
+
+def write_corpora(cfg, out_dir: str) -> dict:
+    """Emit all corpus splits; returns manifest fragment."""
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    splits = {
+        "train": generate_anglish(cfg.seed, cfg.train_lines, salt=1),
+        "valid": generate_anglish(cfg.seed, cfg.valid_lines, salt=2),
+        "calib": generate_anglish(cfg.seed, cfg.calib_lines, salt=3),
+        "devan": generate_devan(cfg.seed, cfg.crossling_lines),
+    }
+    out = {}
+    for name, lines in splits.items():
+        path = os.path.join(out_dir, f"{name}.txt")
+        with open(path, "wb") as f:
+            f.write(corpus_bytes(lines))
+        out[name] = {"path": path, "lines": len(lines)}
+    return out

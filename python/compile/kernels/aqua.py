@@ -1,0 +1,207 @@
+"""Layer-1 Pallas kernels for AQUA attention.
+
+Two kernels, both lowered with ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls; see DESIGN.md §Hardware-Adaptation for the real
+TPU mapping):
+
+* :func:`aqua_attention_fused` — the decode-path hot-spot. One grid step per
+  batch lane; the whole K̂/V cache row for that lane is the kernel's working
+  set (at this scale S·n_kv·d·4B·2 ≈ 0.5 MiB, comfortably VMEM-resident on a
+  real TPU, so no sequence tiling is required). Computes: project q → apply
+  AQUA-Memory dim mask → runtime top-k magnitude mask → masked scores →
+  softmax → context, and returns the attention weights for the H2O
+  accumulator.
+
+* :func:`aqua_attention_tiled` — the long-context variant: FlashAttention
+  style online-softmax accumulation over ``block_s``-sized K̂/V tiles,
+  expressing the HBM↔VMEM schedule via BlockSpec index maps. Returns the
+  context only (H2O weights need the full row, which defeats tiling).
+
+Numerics of both are property-tested against ``ref.aqua_attention``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Fused single-tile kernel (decode hot path)
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(q_ref, khat_ref, v_ref, proj_ref, kd_ref, keep_ref, bias_ref,
+                  ctx_ref, attn_ref, *, scale: float, n_kv: int):
+    q = q_ref[0]          # [n_q, d]
+    khat = khat_ref[0]    # [S, n_kv, d]
+    v = v_ref[0]          # [S, n_kv, d]
+    proj = proj_ref[...]  # [n_kv, d, d]
+    keep = keep_ref[...]  # [d]
+    bias = bias_ref[0]    # [S]
+    k_dims = kd_ref[0]
+
+    n_q, d = q.shape
+    group = n_q // n_kv
+
+    # Project each query head with its group's P, then AQUA-Memory mask.
+    qg = q.reshape(n_kv, group, d)
+    qhat = jnp.einsum("kgd,kde->kge", qg, proj).reshape(n_q, d) * keep
+
+    # Runtime top-k magnitude selection (threshold formulation of Alg. 1).
+    mag = jnp.abs(qhat)
+    srt = jnp.sort(mag, axis=-1)
+    idx = jnp.clip(d - k_dims, 0, d - 1)
+    thr = jax.lax.dynamic_slice_in_dim(srt, idx, 1, axis=-1)
+    mask = (mag >= thr).astype(qhat.dtype)
+    mask = jnp.where(k_dims >= d, jnp.ones_like(mask), mask)
+    qt = (qhat * mask).reshape(n_kv, group, d)
+
+    # Masked scores over the projected key cache (lossless rotation, §6.3.1).
+    s = jnp.einsum("kgd,skd->kgs", qt, khat) * scale
+    s = s.reshape(n_q, -1) + bias[None, :]
+
+    # Stable softmax + context.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    attn = e / jnp.sum(e, axis=-1, keepdims=True)
+    ag = attn.reshape(n_kv, group, -1)
+    ctx = jnp.einsum("kgs,skd->kgd", ag, v).reshape(n_q, d)
+
+    ctx_ref[0] = ctx
+    attn_ref[0] = attn
+
+
+def aqua_attention_fused(q, khat, v, proj, k_dims, dim_keep, slot_bias, scale):
+    """Pallas AQUA attention. Shapes as in ``ref.aqua_attention``;
+    ``k_dims`` is a runtime i32 scalar. Returns (ctx [B,n_q,d], attn [B,n_q,S])."""
+    b, n_q, d = q.shape
+    s = khat.shape[1]
+    n_kv = khat.shape[2]
+    kd = jnp.asarray(k_dims, jnp.int32).reshape(1)
+
+    kern = functools.partial(_fused_kernel, scale=scale, n_kv=n_kv)
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n_q, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, n_kv, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, s, n_kv, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((n_kv, d, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_q, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n_q, s), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_q, d), q.dtype),
+            jax.ShapeDtypeStruct((b, n_q, s), q.dtype),
+        ],
+        interpret=True,
+    )(q, khat, v, proj, kd, dim_keep, slot_bias)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style tiled kernel (long-context variant)
+# ---------------------------------------------------------------------------
+
+
+def _tiled_kernel(q_ref, khat_ref, v_ref, proj_ref, kd_ref, keep_ref, bias_ref,
+                  ctx_ref, m_ref, l_ref, acc_ref, *, scale: float, n_kv: int,
+                  n_blocks: int):
+    j = pl.program_id(1)
+
+    q = q_ref[0]
+    khat = khat_ref[0]   # [bs, n_kv, d] — current KV tile
+    v = v_ref[0]
+    proj = proj_ref[...]
+    keep = keep_ref[...]
+    bias = bias_ref[0]   # [bs]
+    k_dims = kd_ref[0]
+
+    n_q, d = q.shape
+    group = n_q // n_kv
+
+    # q̂ / mask recomputed per tile (d is tiny; keeps the kernel stateless).
+    qg = q.reshape(n_kv, group, d)
+    qhat = jnp.einsum("kgd,kde->kge", qg, proj).reshape(n_q, d) * keep
+    mag = jnp.abs(qhat)
+    srt = jnp.sort(mag, axis=-1)
+    idx = jnp.clip(d - k_dims, 0, d - 1)
+    thr = jax.lax.dynamic_slice_in_dim(srt, idx, 1, axis=-1)
+    mask = (mag >= thr).astype(qhat.dtype)
+    mask = jnp.where(k_dims >= d, jnp.ones_like(mask), mask)
+    qt = (qhat * mask).reshape(n_kv, group, d)
+
+    s = jnp.einsum("kgd,skd->kgs", qt, khat) * scale
+    s = s.reshape(n_q, -1) + bias[None, :]  # [n_q, bs]
+
+    first = j == 0
+    m_old = jnp.where(first, jnp.full((n_q,), NEG_INF, s.dtype), m_ref[0])
+    l_old = jnp.where(first, jnp.zeros((n_q,), s.dtype), l_ref[0])
+    acc_old = jnp.where(first, jnp.zeros_like(acc_ref[0]), acc_ref[0])
+
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_old - m_new)
+    e = jnp.exp(s - m_new[:, None])
+    l_new = l_old * corr + jnp.sum(e, axis=-1)
+    eg = e.reshape(n_kv, group, -1)
+    pv = jnp.einsum("kgs,skd->kgd", eg, v).reshape(n_q, d)
+    acc_new = acc_old * corr[:, None] + pv
+
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    acc_ref[0] = acc_new
+    # Last write (j == n_blocks-1) is the final context.
+    ctx_ref[0] = acc_new / jnp.maximum(l_new, 1e-30)[:, None]
+
+
+def aqua_attention_tiled(q, khat, v, proj, k_dims, dim_keep, slot_bias, scale,
+                         block_s: int = 128):
+    """Online-softmax AQUA attention over KV tiles. Returns ctx [B,n_q,d]."""
+    b, n_q, d = q.shape
+    s = khat.shape[1]
+    n_kv = khat.shape[2]
+    assert s % block_s == 0, "sequence capacity must be a multiple of block_s"
+    nb = s // block_s
+    kd = jnp.asarray(k_dims, jnp.int32).reshape(1)
+
+    kern = functools.partial(_tiled_kernel, scale=scale, n_kv=n_kv, n_blocks=nb)
+    ctx, _m, _l, _acc = pl.pallas_call(
+        kern,
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1, n_q, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_s, n_kv, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_s, n_kv, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((n_kv, d, d), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+            pl.BlockSpec((1, block_s), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_q, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, n_q), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n_q), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n_q, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_q, d), q.dtype),
+            jax.ShapeDtypeStruct((b, n_q), q.dtype),
+            jax.ShapeDtypeStruct((b, n_q), q.dtype),
+            jax.ShapeDtypeStruct((b, n_q, d), q.dtype),
+        ],
+        interpret=True,
+    )(q, khat, v, proj, kd, dim_keep, slot_bias)
+    return ctx

@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for the AQUA attention kernels.
+
+Every pallas kernel in ``aqua.py`` is validated against these references by
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes/dtypes). The rust
+native kernels (``rust/src/aqua/native.rs``) are cross-checked against the
+same semantics through the HLO executables.
+
+Notation follows the paper (§3, Algorithm 1):
+  q        [B, n_q, d]        current-step query (post-RoPE)
+  khat     [B, S, n_kv, d]    *projected* key cache  K̂ = K·P
+  v        [B, S, n_kv, d]    value cache
+  P        [n_kv, d, d]       per-kv-group orthogonal projection
+  k_dims   scalar i32         number of retained dimensions (k in the paper)
+  dim_keep [d]                AQUA-Memory static mask (1.0 keep / 0.0 slice)
+  slot_bias[B, S]             additive mask: 0 for valid slots, -1e9 else
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def project_q(q: jnp.ndarray, proj: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """q̂ = q·P using each query head's group projection.
+
+    q [B, n_q, d], proj [n_kv, d, d] -> [B, n_q, d]. Query head h belongs to
+    kv group h // (n_q/n_kv).
+    """
+    b, n_q, d = q.shape
+    group = n_q // n_kv
+    qg = q.reshape(b, n_kv, group, d)
+    qhat = jnp.einsum("bkgd,kde->bkge", qg, proj)
+    return qhat.reshape(b, n_q, d)
+
+
+def topk_mask(qhat: jnp.ndarray, k_dims) -> jnp.ndarray:
+    """Per-vector mask keeping the k largest-|·| dimensions (paper Alg. 1
+    lines 4-6), expressed as a threshold so ``k_dims`` can be a *runtime*
+    scalar. Ties at the threshold keep all tied dims (measure-zero for
+    continuous activations; equivalence with the gather formulation is
+    property-tested)."""
+    d = qhat.shape[-1]
+    k_dims = jnp.asarray(k_dims, jnp.int32)
+    mag = jnp.abs(qhat)
+    srt = jnp.sort(mag, axis=-1)  # ascending
+    idx = jnp.clip(d - k_dims, 0, d - 1)
+    thresh = jax.lax.dynamic_slice_in_dim(srt, idx, 1, axis=-1)
+    mask = (mag >= thresh).astype(qhat.dtype)
+    # k_dims >= d must keep everything even with ties at the minimum.
+    return jnp.where(k_dims >= d, jnp.ones_like(mask), mask)
+
+
+def topk_mask_static(qhat: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Mask from jax.lax.top_k (static k) — Algorithm 1's literal gather
+    selection, used to property-test the threshold formulation."""
+    d = qhat.shape[-1]
+    _, idx = jax.lax.top_k(jnp.abs(qhat), k)
+    return jax.nn.one_hot(idx, d, dtype=qhat.dtype).sum(axis=-2)
+
+
+def aqua_scores(qtilde: jnp.ndarray, khat: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """S̃ = q̃·K̂ᵀ over the masked dims. qtilde [B,n_q,d], khat [B,S,n_kv,d]
+    -> [B, n_q, S] (GQA head mapping applied)."""
+    b, n_q, d = qtilde.shape
+    n_kv = khat.shape[2]
+    group = n_q // n_kv
+    qg = qtilde.reshape(b, n_kv, group, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, khat) * scale
+    return s.reshape(b, n_q, -1)
+
+
+def aqua_attention(
+    q: jnp.ndarray,
+    khat: jnp.ndarray,
+    v: jnp.ndarray,
+    proj: jnp.ndarray,
+    k_dims,
+    dim_keep: jnp.ndarray,
+    slot_bias: jnp.ndarray,
+    scale: float,
+):
+    """Full AQUA attention step (reference).
+
+    Returns (context [B, n_q, d], attn [B, n_q, S]).
+    """
+    n_kv = khat.shape[2]
+    qhat = project_q(q, proj, n_kv) * dim_keep
+    mask = topk_mask(qhat, k_dims)
+    scores = aqua_scores(qhat * mask, khat, scale)
+    scores = scores + slot_bias[:, None, :]
+    attn = jax.nn.softmax(scores, axis=-1)
+    b, n_q, s = attn.shape
+    group = n_q // n_kv
+    ag = attn.reshape(b, n_kv, group, s)
+    ctx = jnp.einsum("bkgs,bskd->bkgd", ag, v).reshape(b, n_q, -1)
+    return ctx, attn
+
+
+def full_attention(q, k, v, slot_bias, scale):
+    """Standard attention (paper §3) — the P=I, k=d special case, used as an
+    independent oracle for the baseline-equivalence property."""
+    b, n_q, d = q.shape
+    n_kv = k.shape[2]
+    ident = jnp.tile(jnp.eye(d, dtype=q.dtype)[None], (n_kv, 1, 1))
+    return aqua_attention(
+        q, k, v, ident, jnp.array(d, jnp.int32), jnp.ones((d,), q.dtype), slot_bias, scale
+    )
+
+
+def info_retention_loss(v: jnp.ndarray, vhat: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Paper §6.2: L_info = | ||v|| - ||v̂[I_k]|| | / ||v||  (rowwise)."""
+    nv = jnp.linalg.norm(v, axis=-1)
+    nr = jnp.linalg.norm(vhat * mask, axis=-1)
+    return jnp.abs(nv - nr) / jnp.maximum(nv, 1e-12)

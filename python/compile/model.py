@@ -1,0 +1,322 @@
+"""Layer-2 JAX model: byte-level transformer LM with AQUA attention.
+
+Three entry points matter:
+
+* :func:`train_forward` — full-sequence causal forward with *standard*
+  attention (training never uses AQUA; the paper applies AQUA at inference
+  to frozen pre-trained weights). Can also return post-RoPE q/k activations
+  for offline calibration (paper §6.1 step 2).
+* :func:`decode_step` — the single-token auto-regressive step that is AOT
+  lowered to HLO and driven by the rust coordinator. All AQUA knobs
+  (projection stack P, runtime top-k ``k_dims``, AQUA-Memory ``dim_keep``)
+  are *inputs*, so one executable serves every table row — with ``P = I``
+  and ``k_dims = d`` it computes exactly standard attention.
+* :func:`prefill_chunk` — a ``lax.scan`` of decode steps over a fixed-size
+  prompt chunk (amortizes dispatch 32×); same knob semantics.
+
+KV-cache convention (shared with rust, documented in the manifest):
+  k_cache [L, B, S, n_kv, d]  — stores *projected* keys K̂ = K·P (+ the
+                                AQUA-Memory dim mask already applied).
+                                Lossless for attention by Lemma A.4.
+  v_cache [L, B, S, n_kv, d]
+  slot_mask [B, S] ∈ {0,1}    — valid cache slots. decode_step itself marks
+                                the slot it writes.
+  attn_acc [L, B, S]          — this step's attention mass per slot, summed
+                                over query heads (H2O accumulator food).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import aqua as kernels
+from .kernels import ref as kref
+
+NEG = -1e9
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    """Flat parameter names in the canonical (sorted) order used for HLO
+    argument passing. The rust runtime replicates this order from the
+    manifest."""
+    names = ["embed", "final_norm"]
+    for l in range(cfg.n_layers):
+        p = f"layers.{l:02d}."
+        names += [p + n for n in
+                  ("attn_norm", "mlp_norm", "w1", "w2", "w3", "wk", "wo", "wq", "wv")]
+    return sorted(names)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Scaled-normal init (GPT-2 style residual scaling on wo/w2)."""
+    d, h, f = cfg.d_model, cfg.d_head, cfg.d_ff
+    nq, nkv = cfg.n_q_heads, cfg.n_kv_heads
+    std = d ** -0.5
+    res_std = std / (2 * cfg.n_layers) ** 0.5
+    params = {}
+    key, k1 = jax.random.split(key)
+    params["embed"] = jax.random.normal(k1, (cfg.vocab, d), jnp.float32) * 0.02
+    params["final_norm"] = jnp.ones((d,), jnp.float32)
+    for l in range(cfg.n_layers):
+        p = f"layers.{l:02d}."
+        key, *ks = jax.random.split(key, 8)
+        params[p + "attn_norm"] = jnp.ones((d,), jnp.float32)
+        params[p + "mlp_norm"] = jnp.ones((d,), jnp.float32)
+        params[p + "wq"] = jax.random.normal(ks[0], (d, nq * h), jnp.float32) * std
+        params[p + "wk"] = jax.random.normal(ks[1], (d, nkv * h), jnp.float32) * std
+        params[p + "wv"] = jax.random.normal(ks[2], (d, nkv * h), jnp.float32) * std
+        params[p + "wo"] = jax.random.normal(ks[3], (nq * h, d), jnp.float32) * res_std
+        params[p + "w1"] = jax.random.normal(ks[4], (d, f), jnp.float32) * std
+        params[p + "w3"] = jax.random.normal(ks[5], (d, f), jnp.float32) * std
+        params[p + "w2"] = jax.random.normal(ks[6], (f, d), jnp.float32) * res_std
+    return params
+
+
+def params_to_list(params: dict) -> list:
+    return [params[n] for n in sorted(params)]
+
+
+def params_from_list(cfg: ModelConfig, flat: list) -> dict:
+    return dict(zip(param_names(cfg), flat))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def _rope_cos_sin(pos, d_head, theta):
+    """pos [...]-> cos/sin [..., d_head/2]."""
+    half = d_head // 2
+    inv = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, pos, theta):
+    """x [..., H, d], pos broadcastable to x.shape[:-2]. Rotates (even, odd)
+    interleaved pairs."""
+    d = x.shape[-1]
+    cos, sin = _rope_cos_sin(pos, d, theta)   # [..., d/2]
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out
+
+
+def _qkv(cfg: ModelConfig, params, prefix, x):
+    """x [..., d_model] -> q [..., n_q, d], k/v [..., n_kv, d]."""
+    h = cfg.d_head
+    q = (x @ params[prefix + "wq"]).reshape(*x.shape[:-1], cfg.n_q_heads, h)
+    k = (x @ params[prefix + "wk"]).reshape(*x.shape[:-1], cfg.n_kv_heads, h)
+    v = (x @ params[prefix + "wv"]).reshape(*x.shape[:-1], cfg.n_kv_heads, h)
+    return q, k, v
+
+
+def _mlp(params, prefix, x):
+    return (jax.nn.silu(x @ params[prefix + "w1"]) * (x @ params[prefix + "w3"])) @ params[prefix + "w2"]
+
+
+# ---------------------------------------------------------------------------
+# Training / calibration forward (standard attention, full sequence)
+# ---------------------------------------------------------------------------
+
+
+def train_forward(cfg: ModelConfig, params: dict, tokens, collect_qk: bool = False):
+    """tokens [B, T] int32 -> logits [B, T, vocab].
+
+    With ``collect_qk`` also returns post-RoPE per-layer activations
+    (qs: [L][B,T,n_q,d], ks: [L][B,T,n_kv,d]) for offline calibration.
+    """
+    b, t = tokens.shape
+    scale = cfg.d_head ** -0.5
+    x = params["embed"][tokens]
+    pos = jnp.arange(t, dtype=jnp.int32)
+    causal = jnp.where(pos[None, :] <= pos[:, None], 0.0, NEG)[None, None]  # [1,1,T,T]
+    group = cfg.group_size
+    qs, ks = [], []
+    for l in range(cfg.n_layers):
+        p = f"layers.{l:02d}."
+        hdd = rmsnorm(x, params[p + "attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, params, p, hdd)
+        q = apply_rope(q, pos[None, :].repeat(b, 0), cfg.rope_theta)
+        k = apply_rope(k, pos[None, :].repeat(b, 0), cfg.rope_theta)
+        if collect_qk:
+            qs.append(q)
+            ks.append(k)
+        qg = q.reshape(b, t, cfg.n_kv_heads, group, cfg.d_head)
+        s = jnp.einsum("bikgd,bjkd->bkgij", qg, k) * scale    # [B,nkv,g,T,T]
+        s = s + causal
+        a = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bkgij,bjkd->bikgd", a, v).reshape(b, t, -1)
+        x = x + ctx @ params[p + "wo"]
+        hdd = rmsnorm(x, params[p + "mlp_norm"], cfg.norm_eps)
+        x = x + _mlp(params, p, hdd)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T
+    if collect_qk:
+        return logits, (qs, ks)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Decode step (the AOT-lowered request-path function)
+# ---------------------------------------------------------------------------
+
+
+def _attend(cfg, q, khat_row, v_row, proj, k_dims, dim_keep, bias, use_pallas):
+    scale = cfg.d_head ** -0.5
+    if use_pallas:
+        return kernels.aqua_attention_fused(q, khat_row, v_row, proj, k_dims,
+                                            dim_keep, bias, scale)
+    return kref.aqua_attention(q, khat_row, v_row, proj, k_dims, dim_keep,
+                               bias, scale)
+
+
+def _decode_core(cfg: ModelConfig, params, proj, tokens, pos, k_cache, v_cache,
+                 slot_mask, k_dims, dim_keep, use_pallas):
+    """Single-token step shared by decode_step and prefill_chunk's scan body.
+
+    tokens [B] i32, pos [B] i32. Returns (logits, k_cache, v_cache,
+    slot_mask', attn_acc [L,B,S])."""
+    b = tokens.shape[0]
+    s_cap = k_cache.shape[2]
+
+    # Mark the slot being written this step as attendable.
+    cur = jax.nn.one_hot(pos, s_cap, dtype=slot_mask.dtype)  # [B,S]
+    slot_mask = jnp.maximum(slot_mask, cur)
+    bias = jnp.where(slot_mask > 0.5, 0.0, NEG)  # additive attention mask
+
+    x = params["embed"][tokens]
+    accs = []
+    for l in range(cfg.n_layers):
+        p = f"layers.{l:02d}."
+        hdd = rmsnorm(x, params[p + "attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, params, p, hdd)   # q [B,nq,d], k/v [B,nkv,d]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        # Project keys into the calibrated space and statically slice
+        # (AQUA-Memory) *before* caching — this is the memory saving.
+        khat = jnp.einsum("bkd,kde->bke", k, proj[l]) * dim_keep
+
+        def write(cache_l, val):
+            # cache_l [B,S,nkv,d], val [B,nkv,d] written at pos[b].
+            return jax.vmap(
+                lambda c, vv, pp: jax.lax.dynamic_update_slice(c, vv[None], (pp, 0, 0))
+            )(cache_l, val, pos)
+
+        k_cache = k_cache.at[l].set(write(k_cache[l], khat))
+        v_cache = v_cache.at[l].set(write(v_cache[l], v))
+
+        ctx, attn = _attend(cfg, q, k_cache[l], v_cache[l], proj[l], k_dims,
+                            dim_keep, bias, use_pallas)
+        accs.append(jnp.sum(attn, axis=1))   # [B,S] — H2O mass this step
+        x = x + ctx.reshape(b, -1) @ params[p + "wo"]
+        hdd = rmsnorm(x, params[p + "mlp_norm"], cfg.norm_eps)
+        x = x + _mlp(params, p, hdd)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T
+    return logits, k_cache, v_cache, slot_mask, jnp.stack(accs)
+
+
+def decode_step(cfg: ModelConfig, param_list, proj, tokens, pos, k_cache,
+                v_cache, slot_mask, k_dims, dim_keep, use_pallas: bool = True):
+    """The AOT entry point. ``param_list`` is the flat sorted param list
+    (matches :func:`param_names`). Returns (logits [B,V], k_cache, v_cache,
+    attn_acc [L,B,S])."""
+    params = params_from_list(cfg, param_list)
+    logits, kc, vc, _mask, acc = _decode_core(
+        cfg, params, proj, tokens, pos, k_cache, v_cache, slot_mask,
+        k_dims, dim_keep, use_pallas)
+    return logits, kc, vc, acc
+
+
+def prefill_chunk(cfg: ModelConfig, param_list, proj, tokens, pos0, k_cache,
+                  v_cache, slot_mask, k_dims, dim_keep, use_pallas: bool = True):
+    """Process a [B, C] chunk of prompt tokens via lax.scan of decode steps.
+
+    ``pos0`` [B] is each lane's starting write position; token c lands at
+    pos0+c. Lanes with fewer than C remaining tokens should be padded and
+    masked by the caller (rust) — every scanned position *is* written, so
+    the caller passes per-lane valid lengths through ``slot_mask`` cleanup
+    afterwards (the engine simply never marks padding slots as valid for
+    subsequent steps; see coordinator/kvcache.rs).
+
+    Returns (logits [B, C, V], k_cache, v_cache, slot_mask, attn_acc [L,B,S]
+    summed over the chunk).
+    """
+    params = params_from_list(cfg, param_list)
+
+    def body(carry, tok_c):
+        kc, vc, mask, acc, step = carry
+        pos = pos0 + step
+        logits, kc, vc, mask, a = _decode_core(
+            cfg, params, proj, tok_c, pos, kc, vc, mask, k_dims, dim_keep,
+            use_pallas)
+        return (kc, vc, mask, acc + a, step + 1), logits
+
+    acc0 = jnp.zeros((cfg.n_layers,) + slot_mask.shape, jnp.float32)
+    (kc, vc, mask, acc, _), logits = jax.lax.scan(
+        body, (k_cache, v_cache, slot_mask, acc0, jnp.int32(0)),
+        jnp.transpose(tokens, (1, 0)))
+    return jnp.transpose(logits, (1, 0, 2)), kc, vc, mask, acc
+
+
+# ---------------------------------------------------------------------------
+# Convenience: python-side generation (tests + sanity, not the request path)
+# ---------------------------------------------------------------------------
+
+
+def py_generate(cfg: ModelConfig, params: dict, proj, prompt: bytes,
+                n_new: int, k_ratio: float = 1.0, s_ratio: float = 0.0,
+                use_pallas: bool = False) -> bytes:
+    """Greedy generation entirely in python — the oracle the rust engine's
+    integration tests compare against."""
+    d = cfg.d_head
+    k_dims = jnp.int32(max(1, round(k_ratio * d)))
+    keep = (jnp.arange(d) < round((1.0 - s_ratio) * d)).astype(jnp.float32)
+    s_cap = cfg.max_seq
+    plist = params_to_list(params)
+    kc = jnp.zeros((cfg.n_layers, 1, s_cap, cfg.n_kv_heads, d), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    mask = jnp.zeros((1, s_cap), jnp.float32)
+    toks = list(prompt)
+    logits = None
+    for i, t in enumerate(toks):
+        logits, kc, vc, acc = decode_step(
+            cfg, plist, proj, jnp.array([t], jnp.int32), jnp.array([i], jnp.int32),
+            kc, vc, mask, k_dims, keep, use_pallas)
+        mask = mask.at[0, i].set(1.0)
+    out = []
+    for j in range(n_new):
+        nxt = int(jnp.argmax(logits[0]))
+        out.append(nxt)
+        i = len(toks) + j
+        if i >= s_cap:
+            break
+        logits, kc, vc, acc = decode_step(
+            cfg, plist, proj, jnp.array([nxt], jnp.int32), jnp.array([i], jnp.int32),
+            kc, vc, mask, k_dims, keep, use_pallas)
+        mask = mask.at[0, i].set(1.0)
+    return bytes(out)
+
+
+def identity_proj(cfg: ModelConfig):
+    return jnp.tile(jnp.eye(cfg.d_head, dtype=jnp.float32)[None, None],
+                    (cfg.n_layers, cfg.n_kv_heads, 1, 1))

@@ -1,0 +1,146 @@
+"""SynthBench: the synthetic analogs of the paper's benchmark suite.
+
+Task mechanics mirror the lm-evaluation-harness exactly; only the content is
+synthetic (DESIGN.md "Substitutions"):
+
+| analog of   | task id      | mechanism                                      |
+|-------------|--------------|------------------------------------------------|
+| MMLU        | knowledge    | MC by logprob: "the capital of X is" + choices |
+| GSM8K       | arithmetic   | greedy generation, exact match                 |
+| HellaSwag   | completion   | MC: grammatical vs corrupted sentence ending   |
+| WinoGrande  | coreference  | MC: who holds the object after a transfer      |
+| TruthfulQA  | negation     | MC: consistent vs contradictory continuation   |
+| ARC         | hard_completion | MC with 4 distractors (harder margin)       |
+
+Each task is a JSONL file; the rust eval harness (`rust/src/eval/`) scores MC
+items by summed continuation logprob and gen items by greedy exact-match.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+
+from .corpus import World, build_world
+
+
+def _mc(prompt: str, choices: list[str], answer: int) -> dict:
+    return {"type": "mc", "prompt": prompt, "choices": choices, "answer": answer}
+
+
+def _gen(prompt: str, target: str) -> dict:
+    return {"type": "gen", "prompt": prompt, "target": target}
+
+
+def gen_knowledge(w: World, rng: random.Random, n: int) -> list[dict]:
+    items = []
+    for _ in range(n):
+        c = rng.choice(w.countries)
+        right = w.capital[c]
+        wrong = rng.sample([x for x in w.cities if x != right], 3)
+        choices = wrong + [right]
+        rng.shuffle(choices)
+        items.append(_mc(f"the capital of {c} is", [" " + x for x in choices],
+                         choices.index(right)))
+    return items
+
+
+def gen_arithmetic(w: World, rng: random.Random, n: int) -> list[dict]:
+    items = []
+    for _ in range(n):
+        a, b = rng.randrange(0, 10), rng.randrange(0, 10)
+        items.append(_gen(f"{a} plus {b} equals", f" {a + b} ."))
+    return items
+
+
+def gen_completion(w: World, rng: random.Random, n: int) -> list[dict]:
+    items = []
+    for _ in range(n):
+        adj, noun, verb, obj = (rng.choice(w.adjectives), rng.choice(w.nouns),
+                                rng.choice(w.verbs), rng.choice(w.nouns))
+        good = f" {verb} the {obj} ."
+        # corrupted ending: word-order violation the grammar never produces
+        bad = f" the {verb} {obj} ."
+        choices = [good, bad]
+        rng.shuffle(choices)
+        items.append(_mc(f"the {adj} {noun}", choices, choices.index(good)))
+    return items
+
+
+def gen_coreference(w: World, rng: random.Random, n: int) -> list[dict]:
+    items = []
+    for _ in range(n):
+        a, b = rng.sample(w.people, 2)
+        noun = rng.choice(w.nouns)
+        prompt = f"{a} gave the {noun} to {b} ."
+        choices = [f" {b} now has the {noun} .", f" {a} now has the {noun} ."]
+        items.append(_mc(prompt, choices, 0))
+    return items
+
+
+def gen_negation(w: World, rng: random.Random, n: int) -> list[dict]:
+    items = []
+    for _ in range(n):
+        adj, opp = rng.choice(w.antonyms)
+        p = rng.choice(w.people)
+        prompt = f"{p} is {adj} ."
+        choices = [f" {p} is not {opp} .", f" {p} is not {adj} ."]
+        items.append(_mc(prompt, choices, 0))
+    return items
+
+
+def gen_hard_completion(w: World, rng: random.Random, n: int) -> list[dict]:
+    """4-way completion with subtler distractors (ARC-Challenge analog)."""
+    items = []
+    for _ in range(n):
+        adj, noun, verb, obj = (rng.choice(w.adjectives), rng.choice(w.nouns),
+                                rng.choice(w.verbs), rng.choice(w.nouns))
+        good = f" {verb} the {obj} ."
+        # distractors are never prefixes of the answer (length-bias guard;
+        # scoring is additionally length-normalized, lm-eval acc_norm style)
+        distract = [
+            f" {verb} the {verb} .",         # verb in noun slot
+            f" {verb} {obj} .",              # missing article
+            f" the {obj} {verb} .",          # inverted
+        ]
+        choices = [good] + distract
+        rng.shuffle(choices)
+        items.append(_mc(f"the {adj} {noun}", choices, choices.index(good)))
+    return items
+
+
+TASKS = {
+    "knowledge": gen_knowledge,
+    "arithmetic": gen_arithmetic,
+    "completion": gen_completion,
+    "coreference": gen_coreference,
+    "negation": gen_negation,
+    "hard_completion": gen_hard_completion,
+}
+
+# paper benchmark each task stands in for (manifest metadata for tables)
+ANALOG_OF = {
+    "knowledge": "MMLU",
+    "arithmetic": "GSM8K",
+    "completion": "HellaSwag",
+    "coreference": "WinoGrande",
+    "negation": "TruthfulQA-MC2",
+    "hard_completion": "ARC-Challenge",
+}
+
+
+def write_tasks(seed: int, out_dir: str, n_items: int = 60) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    w = build_world(seed)
+    manifest = {}
+    for name, fn in TASKS.items():
+        rng = random.Random(seed * 31337 + hash(name) % 100000)
+        items = fn(w, rng, n_items)
+        path = os.path.join(out_dir, f"{name}.jsonl")
+        with open(path, "w", encoding="latin-1") as f:
+            for it in items:
+                f.write(json.dumps(it) + "\n")
+        manifest[name] = {"path": path, "items": len(items),
+                          "analog_of": ANALOG_OF[name]}
+    return manifest

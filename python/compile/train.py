@@ -1,0 +1,128 @@
+"""Build-time training of the analog models (hand-rolled Adam; optax is not
+available in this image).
+
+The trained checkpoints play the role of the paper's pre-trained Llama/OLMoE
+weights: AQUA is applied *post-hoc* to them at inference time. The loss curve
+of each run is recorded in EXPERIMENTS.md (end-to-end validation
+requirement).
+"""
+
+from __future__ import annotations
+
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .config import ModelConfig, TrainConfig
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline: corpus bytes -> [B, T+1] windows
+# ---------------------------------------------------------------------------
+
+
+class ByteDataset:
+    def __init__(self, data: bytes, seq: int, seed: int):
+        self.arr = np.frombuffer(data, dtype=np.uint8).astype(np.int32)
+        self.seq = seq
+        self.rng = np.random.default_rng(seed)
+        assert len(self.arr) > seq + 2, "corpus too small"
+
+    def batch(self, b: int) -> np.ndarray:
+        starts = self.rng.integers(0, len(self.arr) - self.seq - 1, size=b)
+        return np.stack([self.arr[s:s + self.seq + 1] for s in starts])
+
+
+# ---------------------------------------------------------------------------
+# Loss / optimizer
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ModelConfig, params: dict, batch: jnp.ndarray) -> jnp.ndarray:
+    toks, targets = batch[:, :-1], batch[:, 1:]
+    logits = M.train_forward(cfg, params, toks)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def adam_init(params: dict):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.int32(0)}
+
+
+def adam_update(tc: TrainConfig, params, grads, state, lr):
+    t = state["t"] + 1
+    b1, b2, eps = tc.adam_b1, tc.adam_b2, tc.adam_eps
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+    clip = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-9))
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k] * clip
+        m = b1 * state["m"][k] + (1 - b1) * g
+        v = b2 * state["v"][k] + (1 - b2) * g * g
+        mh = m / (1 - b1 ** t)
+        vh = v / (1 - b2 ** t)
+        upd = mh / (jnp.sqrt(vh) + eps)
+        decay = 0.0 if params[k].ndim == 1 else tc.weight_decay
+        new_p[k] = params[k] - lr * (upd + decay * params[k])
+        new_m[k], new_v[k] = m, v
+    return new_p, {"m": new_m, "v": new_v, "t": t}
+
+
+def lr_at(tc: TrainConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / tc.warmup)
+    prog = jnp.clip((step - tc.warmup) / max(1, tc.steps - tc.warmup), 0.0, 1.0)
+    cos = tc.lr_min_frac + (1 - tc.lr_min_frac) * 0.5 * (1 + jnp.cos(math.pi * prog))
+    return tc.lr * warm * cos
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+
+def train(cfg: ModelConfig, tc: TrainConfig, train_bytes: bytes,
+          valid_bytes: bytes, log=print) -> tuple[dict, list]:
+    ds = ByteDataset(train_bytes, cfg.train_seq, tc.seed + 11)
+    vs = ByteDataset(valid_bytes, cfg.train_seq, tc.seed + 13)
+    params = M.init_params(cfg, jax.random.PRNGKey(tc.seed))
+    state = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, state, batch, step):
+        loss, grads = jax.value_and_grad(lambda p: lm_loss(cfg, p, batch))(params)
+        params, state = adam_update(tc, params, grads, state, lr_at(tc, step))
+        return params, state, loss
+
+    @jax.jit
+    def eval_fn(params, batch):
+        return lm_loss(cfg, params, batch)
+
+    curve = []
+    t0 = time.time()
+    for step in range(tc.steps):
+        batch = jnp.asarray(ds.batch(tc.batch))
+        params, state, loss = step_fn(params, state, batch, step)
+        if step % tc.eval_every == 0 or step == tc.steps - 1:
+            vloss = float(np.mean([eval_fn(params, jnp.asarray(vs.batch(tc.batch)))
+                                   for _ in range(tc.eval_batches)]))
+            curve.append({"step": step, "train_loss": float(loss), "valid_loss": vloss})
+            log(f"[train:{cfg.name}] step {step:4d} loss {float(loss):.4f} "
+                f"valid {vloss:.4f} ({time.time()-t0:.0f}s)")
+    return params, curve
+
+
+def save_params(params: dict, path: str):
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_params(path: str) -> dict:
+    with np.load(path) as z:
+        return {k: jnp.asarray(z[k]) for k in z.files}

@@ -1,0 +1,39 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile.config import LLAMA_ANALOG, OLMOE_ANALOG  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def small_cfg():
+    """A shrunken config so model tests stay fast."""
+    from dataclasses import replace
+
+    return replace(LLAMA_ANALOG, max_seq=64, train_seq=32, n_layers=2, d_ff=128)
+
+
+@pytest.fixture(scope="session")
+def small_mha_cfg(small_cfg):
+    from dataclasses import replace
+
+    return replace(small_cfg, name="mha", n_kv_heads=small_cfg.n_q_heads)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def artifacts_dir():
+    """Real artifacts if `make artifacts` has run; else skip dependents."""
+    path = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__)))), "artifacts")
+    if not os.path.exists(os.path.join(path, "manifest.json")):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    return path

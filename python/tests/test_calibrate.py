@@ -1,0 +1,67 @@
+"""Calibration pipeline: GQA stacking, SVD projection properties."""
+
+import jax
+import numpy as np
+import pytest
+
+from compile import calibrate as C
+from compile import model as M
+from compile.config import CalibConfig
+
+
+@pytest.fixture(scope="module")
+def tiny_calib(small_cfg):
+    params = M.init_params(small_cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    data = bytes(rng.integers(32, 127, size=4000, dtype=np.uint8))
+    cc = CalibConfig(batches=2, batch=2, seq=24, max_vectors_per_group=256,
+                     dump_vectors=64)
+    return small_cfg, params, data, cc
+
+
+def test_collect_shapes(tiny_calib):
+    cfg, params, data, cc = tiny_calib
+    qs, ks = C.collect_activations(cfg, params, data, cc)
+    assert len(qs) == cfg.n_layers
+    assert qs[0].shape[1:] == (cfg.n_q_heads, cfg.d_head)
+    assert ks[0].shape[1:] == (cfg.n_kv_heads, cfg.d_head)
+    assert qs[0].shape[0] <= cc.max_vectors_per_group
+
+
+def test_gqa_stack_shape(tiny_calib):
+    cfg, params, data, cc = tiny_calib
+    qs, ks = C.collect_activations(cfg, params, data, cc)
+    d = C.gqa_stack(cfg, qs[0], ks[0], 0)
+    n = qs[0].shape[0]
+    # N_Q query matrices + 1 key matrix stacked vertically (paper §6.3)
+    assert d.shape == ((cfg.group_size + 1) * n, cfg.d_head)
+
+
+def test_projection_orthogonal_and_variance_ordered(tiny_calib):
+    cfg, params, data, cc = tiny_calib
+    proj, _ = C.calibrate(cfg, params, data, cc)
+    assert proj.shape == (cfg.n_layers, cfg.n_kv_heads, cfg.d_head, cfg.d_head)
+    for l in range(cfg.n_layers):
+        for g in range(cfg.n_kv_heads):
+            p = proj[l, g]
+            np.testing.assert_allclose(p.T @ p, np.eye(cfg.d_head), atol=1e-4)
+
+
+def test_projected_variance_decreasing(tiny_calib):
+    """Columns of P must order projected variance decreasingly (that's what
+    makes the AQUA-Memory static slice of *trailing* dims principled)."""
+    cfg, params, data, cc = tiny_calib
+    qs, ks = C.collect_activations(cfg, params, data, cc)
+    d_calib = C.gqa_stack(cfg, qs[0], ks[0], 0)
+    p = C.svd_projection(d_calib)
+    var = ((d_calib @ p) ** 2).sum(axis=0)
+    assert np.all(var[:-1] >= var[1:] - 1e-2 * var[0])
+
+
+def test_svd_projection_matches_numpy_pca():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(200, 8)).astype(np.float32)
+    x[:, 0] *= 10  # dominant direction
+    p = C.svd_projection(x)
+    # first principal direction ≈ e0
+    assert abs(p[0, 0]) > 0.99

@@ -1,0 +1,76 @@
+"""Corpus + task generation: determinism, disjoint scripts, task soundness."""
+
+import json
+import random
+
+from compile import corpus as CORP
+from compile import tasks as T
+
+
+def test_world_deterministic():
+    w1 = CORP.build_world(7)
+    w2 = CORP.build_world(7)
+    assert w1.capital == w2.capital
+    assert w1.people == w2.people
+    w3 = CORP.build_world(8)
+    assert w1.capital != w3.capital
+
+
+def test_anglish_is_ascii_and_devan_is_high_bytes():
+    ang = CORP.corpus_bytes(CORP.generate_anglish(7, 50, salt=1))
+    dev = CORP.corpus_bytes(CORP.generate_devan(7, 50))
+    assert all(b < 128 for b in ang)
+    payload = [b for b in dev if b not in (0x20, 0x0A, 0xFF)]
+    assert payload and all(0xA1 <= b <= 0xDA for b in payload)
+    # disjoint token distributions (the cross-lingual premise)
+    assert not (set(ang) & set(payload))
+
+
+def test_facts_consistent_between_corpus_and_tasks():
+    seed = 7
+    w = CORP.build_world(seed)
+    rng = random.Random(0)
+    items = T.gen_knowledge(w, rng, 20)
+    for it in items:
+        country = it["prompt"].split()[3]
+        right = it["choices"][it["answer"]].strip()
+        assert w.capital[country] == right
+
+
+def test_arithmetic_targets_correct():
+    w = CORP.build_world(1)
+    rng = random.Random(0)
+    for it in T.gen_arithmetic(w, rng, 30):
+        toks = it["prompt"].split()
+        a, b = int(toks[0]), int(toks[2])
+        assert it["target"] == f" {a + b} ."
+
+
+def test_mc_answers_in_range():
+    w = CORP.build_world(2)
+    rng = random.Random(3)
+    for gen in [T.gen_knowledge, T.gen_completion, T.gen_coreference,
+                T.gen_negation, T.gen_hard_completion]:
+        for it in gen(w, rng, 10):
+            assert 0 <= it["answer"] < len(it["choices"])
+            assert len(set(it["choices"])) == len(it["choices"]), "duplicate choices"
+
+
+def test_write_tasks_jsonl(tmp_path):
+    man = T.write_tasks(5, str(tmp_path), n_items=4)
+    assert set(man) == set(T.TASKS)
+    for name, meta in man.items():
+        lines = open(meta["path"], encoding="latin-1").read().strip().splitlines()
+        assert len(lines) == 4
+        for line in lines:
+            json.loads(line)
+        assert meta["analog_of"] == T.ANALOG_OF[name]
+
+
+def test_sentence_distribution_covers_all_kinds():
+    lines = CORP.generate_anglish(3, 2000, salt=9)
+    text = "\n".join(lines)
+    assert "the capital of" in text
+    assert "plus" in text and "equals" in text
+    assert "gave the" in text and "now has the" in text
+    assert "is not" in text

@@ -1,0 +1,127 @@
+"""L1 correctness: pallas kernels vs the pure-jnp oracle (hypothesis sweeps
+shapes; the CORE correctness signal for the lowered hot path)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aqua, ref
+
+SCALE = 0.25
+
+
+def make_inputs(rng, b, s, n_q, n_kv, d, valid):
+    q = jnp.asarray(rng.normal(size=(b, n_q, d)), jnp.float32)
+    kh = jnp.asarray(rng.normal(size=(b, s, n_kv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, n_kv, d)), jnp.float32)
+    p = np.linalg.qr(rng.normal(size=(n_kv, d, d)))[0].astype(np.float32)
+    bias = jnp.where(jnp.arange(s)[None, :] < valid, 0.0, -1e9)
+    bias = jnp.broadcast_to(bias, (b, s)).astype(jnp.float32)
+    return q, kh, v, jnp.asarray(p), bias
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    s_blocks=st.integers(1, 4),
+    group=st.integers(1, 4),
+    n_kv=st.integers(1, 2),
+    d=st.sampled_from([4, 8, 16]),
+    k_frac=st.floats(0.2, 1.0),
+    data=st.integers(0, 2**31 - 1),
+)
+def test_fused_matches_ref(b, s_blocks, group, n_kv, d, k_frac, data):
+    rng = np.random.default_rng(data)
+    s = 8 * s_blocks
+    n_q = group * n_kv
+    valid = rng.integers(1, s + 1)
+    q, kh, v, p, bias = make_inputs(rng, b, s, n_q, n_kv, d, valid)
+    k_dims = jnp.int32(max(1, round(k_frac * d)))
+    keep = jnp.ones((d,), jnp.float32)
+    c_ref, a_ref = ref.aqua_attention(q, kh, v, p, k_dims, keep, bias, SCALE)
+    c_pl, a_pl = aqua.aqua_attention_fused(q, kh, v, p, k_dims, keep, bias, SCALE)
+    np.testing.assert_allclose(c_ref, c_pl, atol=1e-5)
+    np.testing.assert_allclose(a_ref, a_pl, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    nb=st.integers(2, 4),
+    d=st.sampled_from([4, 8]),
+    k_frac=st.floats(0.25, 1.0),
+    data=st.integers(0, 2**31 - 1),
+)
+def test_tiled_matches_ref(b, nb, d, k_frac, data):
+    rng = np.random.default_rng(data)
+    block = 8
+    s = block * nb
+    n_kv, group = 1, 4
+    valid = rng.integers(1, s + 1)
+    q, kh, v, p, bias = make_inputs(rng, b, s, group * n_kv, n_kv, d, valid)
+    k_dims = jnp.int32(max(1, round(k_frac * d)))
+    keep = jnp.ones((d,), jnp.float32)
+    c_ref, _ = ref.aqua_attention(q, kh, v, p, k_dims, keep, bias, SCALE)
+    c_t = aqua.aqua_attention_tiled(q, kh, v, p, k_dims, keep, bias, SCALE, block_s=block)
+    np.testing.assert_allclose(c_ref, c_t, atol=1e-4)
+
+
+def test_memory_mask_applies():
+    rng = np.random.default_rng(3)
+    b, s, n_q, n_kv, d = 1, 8, 4, 1, 8
+    q, kh, v, p, bias = make_inputs(rng, b, s, n_q, n_kv, d, s)
+    keep = jnp.asarray([1, 1, 1, 1, 1, 1, 0, 0], jnp.float32)
+    c1, _ = ref.aqua_attention(q, kh, v, p, jnp.int32(d), keep, bias, SCALE)
+    c2, _ = aqua.aqua_attention_fused(q, kh, v, p, jnp.int32(d), keep, bias, SCALE)
+    np.testing.assert_allclose(c1, c2, atol=1e-5)
+
+
+def test_threshold_equals_static_topk():
+    """Runtime-knob threshold mask == Algorithm 1's literal top-k gather."""
+    rng = np.random.default_rng(4)
+    for _ in range(20):
+        d = int(rng.integers(2, 33))
+        k = int(rng.integers(1, d + 1))
+        qhat = jnp.asarray(rng.normal(size=(3, d)), jnp.float32)
+        m_thr = ref.topk_mask(qhat, jnp.int32(k))
+        m_sta = ref.topk_mask_static(qhat, k)
+        np.testing.assert_array_equal(np.asarray(m_thr), np.asarray(m_sta))
+
+
+def test_rotational_invariance_lemma():
+    """Lemma A.4: with orthogonal P and k=d, AQUA scores == standard scores."""
+    rng = np.random.default_rng(5)
+    b, s, n_q, n_kv, d = 2, 16, 4, 2, 16
+    q, k_raw, v, p, bias = make_inputs(rng, b, s, n_q, n_kv, d, s)
+    # khat = k·P (projected cache)
+    khat = jnp.einsum("bskd,kde->bske", k_raw, p)
+    c_aqua, a_aqua = ref.aqua_attention(q, khat, v, p, jnp.int32(d),
+                                        jnp.ones((d,), jnp.float32), bias, SCALE)
+    c_std, a_std = ref.full_attention(q, k_raw, v, bias, SCALE)
+    np.testing.assert_allclose(a_aqua, a_std, atol=1e-4)
+    np.testing.assert_allclose(c_aqua, c_std, atol=1e-4)
+
+
+def test_info_loss_zero_at_full_k():
+    rng = np.random.default_rng(6)
+    v = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+    p = jnp.asarray(np.linalg.qr(rng.normal(size=(8, 8)))[0], jnp.float32)
+    vhat = v @ p
+    loss = ref.info_retention_loss(v, vhat, jnp.ones((8,), jnp.float32))
+    assert float(jnp.max(loss)) < 1e-4
+
+
+def test_masked_scores_zero_out_dropped_dims():
+    rng = np.random.default_rng(7)
+    qhat = jnp.asarray(rng.normal(size=(1, 4, 8)), jnp.float32)
+    mask = ref.topk_mask(qhat, jnp.int32(3))
+    assert int(mask.sum()) == 3 * 4
+    # masked entries are the smallest magnitudes
+    mags = np.abs(np.asarray(qhat))
+    for bi in range(1):
+        for h in range(4):
+            kept = mags[bi, h][np.asarray(mask)[bi, h] > 0.5]
+            dropped = mags[bi, h][np.asarray(mask)[bi, h] < 0.5]
+            assert kept.min() >= dropped.max() - 1e-6

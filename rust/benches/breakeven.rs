@@ -1,0 +1,24 @@
+//! §5 / Appendix A.4 break-even bench: measured crossover of the native
+//! AQUA sparse score kernel vs the dense baseline, against the paper's
+//! analytic bound i+1 > d²/(d−k). Regenerates the A.4 numerical-example
+//! table on real hardware.
+
+use aqua_serve::bench::Bencher;
+use aqua_serve::eval::experiments as exp;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let b = if fast { Bencher::quick() } else { Bencher { warmup: 2, iters: 20, ..Default::default() } };
+    // d=128 is the paper's numerical example; d=32 is our serving model.
+    let rows = exp::breakeven(&[32, 64, 128], &[0.125, 0.25, 0.5, 0.75, 0.875], &b);
+    exp::print_breakeven(&rows);
+
+    // Sanity summary: measured crossovers must exist whenever the bound is
+    // finite (pruning eventually wins).
+    let finite = rows.iter().filter(|r| r.paper_bound.is_some()).count();
+    let found = rows
+        .iter()
+        .filter(|r| r.paper_bound.is_some() && r.measured_crossover.is_some())
+        .count();
+    println!("\ncrossover found for {found}/{finite} finite-bound configs");
+}

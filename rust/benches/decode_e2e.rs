@@ -1,0 +1,54 @@
+//! End-to-end decode latency through the full PJRT stack, across AQUA
+//! operating points and batch sizes (the serving headline numbers;
+//! EXPERIMENTS.md §Perf before/after tracks this bench).
+//!
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use std::sync::Arc;
+
+use aqua_serve::aqua::policy::AquaConfig;
+use aqua_serve::bench::Bencher;
+use aqua_serve::runtime::{Artifacts, ModelRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
+        println!("skipped: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    };
+    let rt = Arc::new(ModelRuntime::load(arts.model("llama-analog")?)?);
+    let cfg = rt.cfg.clone();
+    let bench = Bencher { warmup: 3, iters: 25, ..Default::default() };
+
+    println!("# decode step latency (full PJRT round trip), S={}\n", cfg.max_seq);
+    for b in [1usize, 4] {
+        let (k_cache, v_cache) = rt.empty_cache(b)?;
+        let tokens = vec![5i32; b];
+        let pos = vec![100i32; b];
+        let mut slot_mask = vec![0.0f32; b * cfg.max_seq];
+        for lane in 0..b {
+            for s in 0..100 {
+                slot_mask[lane * cfg.max_seq + s] = 1.0;
+            }
+        }
+        for (label, aqua) in [
+            ("baseline P=I k=d", AquaConfig::baseline()),
+            ("aqua k=0.75", AquaConfig { k_ratio: 0.75, ..Default::default() }),
+            ("aqua k=0.25", AquaConfig { k_ratio: 0.25, ..Default::default() }),
+            ("aqua-mem S=0.25 k=0.75",
+             AquaConfig { k_ratio: 0.75, s_ratio: 0.25, ..Default::default() }),
+        ] {
+            let k_dims = aqua.k_dims(cfg.d_head) as i32;
+            let keep = aqua.dim_keep_mask(cfg.d_head);
+            let r = bench.run(&format!("decode b={b} {label}"), || {
+                let out = rt
+                    .decode(b, &tokens, &pos, &k_cache, &v_cache, &slot_mask, k_dims,
+                            &keep, aqua.use_projection)
+                    .expect("decode");
+                aqua_serve::bench::black_box(out.logits.len());
+            });
+            println!("{}  ({:.1} tok/s/lane)", r.report(), 1e9 / r.mean_ns);
+        }
+        println!();
+    }
+    Ok(())
+}

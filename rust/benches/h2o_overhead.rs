@@ -1,0 +1,81 @@
+//! H2O policy overhead: (a) the pure-policy microbench (accumulate + evict
+//! on synthetic lanes — the coordinator-side cost AQUA-H2O adds per step),
+//! and (b) end-to-end engine throughput with eviction on vs off.
+
+use aqua_serve::bench::{black_box, Bencher};
+use aqua_serve::coordinator::h2o::H2oPolicy;
+use aqua_serve::coordinator::kvcache::LaneKv;
+use aqua_serve::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bencher::default();
+    let mut rng = Rng::new(3);
+
+    println!("# H2O policy microbench (per decode step, one lane)\n");
+    for cap in [512usize, 2048] {
+        let acc: Vec<f32> = (0..cap).map(|_| rng.f32()).collect();
+        for ratio in [1.0, 0.5, 0.25] {
+            let policy = H2oPolicy::new(ratio, 16);
+            let r = bench.run(&format!("S={cap} h2o_ratio={ratio}"), || {
+                let mut lane = LaneKv::new(cap);
+                lane.commit_write(cap * 3 / 4);
+                lane.accumulate(&acc);
+                let evicted = policy.apply(&mut lane);
+                black_box(evicted);
+            });
+            println!("{}", r.report());
+        }
+        println!();
+    }
+
+    // End-to-end engine comparison (needs artifacts).
+    use aqua_serve::aqua::policy::AquaConfig;
+    use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
+    use aqua_serve::runtime::{Artifacts, ModelRuntime};
+    use aqua_serve::tokenizer::ByteTokenizer;
+    use std::sync::Arc;
+
+    let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
+        println!("engine comparison skipped: artifacts not built");
+        return Ok(());
+    };
+    let corpus = std::fs::read(arts.corpus_path("valid")?)?;
+    let rt = Arc::new(ModelRuntime::load(arts.model("llama-analog")?)?);
+    let tok = ByteTokenizer;
+    println!("# engine: 8 requests, h2o on/off\n");
+    {
+        // warm executables (compile time out of the comparison)
+        let mut warm = Engine::new(rt.clone(), EngineConfig { batch: 4, ..Default::default() })?;
+        let mut r = GenRequest::new(999, tok.encode_bytes(&corpus[..64]), 4);
+        r.stop_token = None;
+        warm.run_batch(vec![r])?;
+    }
+    for h2o in [1.0, 0.25] {
+        let mut engine = Engine::new(
+            rt.clone(),
+            EngineConfig {
+                batch: 4,
+                aqua: AquaConfig { k_ratio: 0.75, h2o_ratio: h2o, ..Default::default() },
+                ..Default::default()
+            },
+        )?;
+        let reqs: Vec<GenRequest> = (0..8)
+            .map(|i| {
+                let start = (i as usize * 97) % (corpus.len() - 200);
+                let mut r = GenRequest::new(
+                    i + 1,
+                    tok.encode_bytes(&corpus[start..start + 120]),
+                    24,
+                );
+                r.stop_token = None;
+                r
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        engine.run_batch(reqs)?;
+        let s = engine.metrics.snapshot();
+        println!("h2o_ratio={h2o}: {:.2}s wall, {} evictions, decode {:.1} tok/s",
+                 t0.elapsed().as_secs_f64(), s.h2o_evictions, s.decode_tok_per_s);
+    }
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! §Perf L1/L2 ablation: decode-step latency of the shipped
+//! pallas-interpret-lowered HLO vs a pure-jnp-lowered variant of the same
+//! decode function, both executed through the rust PJRT runtime
+//! (xla_extension 0.5.1). Quantifies the interpret-mode lowering overhead
+//! the old XLA cannot fuse away.
+//!
+//! Usage: cargo bench --bench hlo_variants -- [alt-hlo-path]
+//! (defaults to the shipped decode_b4; pass /tmp/decode_jnp_b4.hlo.txt
+//! produced by `python -m compile.aot` variants to compare.)
+
+use std::sync::Arc;
+
+use aqua_serve::bench::{black_box, Bencher};
+use aqua_serve::runtime::{Artifacts, ModelRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
+        println!("skipped: artifacts not built");
+        return Ok(());
+    };
+    let mart = arts.model("llama-analog")?.clone();
+    let b = 4usize;
+
+    // Variant A: shipped (pallas-lowered) decode.
+    let rt = Arc::new(ModelRuntime::load(&mart)?);
+    let bench = Bencher { warmup: 3, iters: 30, ..Default::default() };
+    let cfg = rt.cfg.clone();
+    let (kc, vc) = rt.empty_cache(b)?;
+    let tokens = vec![5i32; b];
+    let pos = vec![64i32; b];
+    let mut mask = vec![0.0f32; b * cfg.max_seq];
+    for lane in 0..b {
+        for s in 0..64 {
+            mask[lane * cfg.max_seq + s] = 1.0;
+        }
+    }
+    let keep = vec![1.0f32; cfg.d_head];
+    let r = bench.run("decode_b4 pallas-lowered (shipped)", || {
+        let out = rt
+            .decode(b, &tokens, &pos, &kc, &vc, &mask, cfg.d_head as i32, &keep, true)
+            .unwrap();
+        black_box(out.logits.len());
+    });
+    println!("{}", r.report());
+
+    // Variant B: alternate HLO file (e.g. jnp-lowered), same signature.
+    let alt = std::env::args()
+        .nth(1)
+        .filter(|a| a.ends_with(".hlo.txt"))
+        .unwrap_or_else(|| "/tmp/decode_jnp_b4.hlo.txt".to_string());
+    if std::path::Path::new(&alt).exists() {
+        let mut mart2 = mart.clone();
+        mart2.hlo.insert("decode_b4".into(), alt.clone().into());
+        let rt2 = Arc::new(ModelRuntime::load(&mart2)?);
+        let r2 = bench.run(&format!("decode_b4 alt ({alt})"), || {
+            let out = rt2
+                .decode(b, &tokens, &pos, &kc, &vc, &mask, cfg.d_head as i32, &keep, true)
+                .unwrap();
+            black_box(out.logits.len());
+        });
+        println!("{}", r2.report());
+        println!("\nratio alt/shipped = {:.2}×", r.mean_ns / r2.mean_ns.max(1.0));
+    } else {
+        println!("(no alternate HLO at {alt}; generate with python/compile variants)");
+    }
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Score-kernel microbench: dense vs AQUA sparse vs masked-dense vs packed
+//! layouts across sequence lengths (the §5 cost decomposition, plus the
+//! layout experiment behind DESIGN.md §Hardware-Adaptation).
+
+use aqua_serve::aqua::native;
+use aqua_serve::bench::{black_box, Bencher};
+use aqua_serve::tensor::topk::{topk_indices_by_abs, topk_mask_by_abs};
+use aqua_serve::util::prng::Rng;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let bench = if fast { Bencher::quick() } else { Bencher::default() };
+    let mut rng = Rng::new(7);
+    let d = 128;
+    let k = 32; // k_ratio 0.25
+    println!("# score kernels, d={d}, k={k} (k_ratio {:.2})\n", k as f64 / d as f64);
+    for seq in [128usize, 512, 2048, 8192] {
+        let q = rng.normal_vec(d, 1.0);
+        let keys = rng.normal_vec(seq * d, 1.0);
+        let mut out = vec![0.0f32; seq];
+
+        let r = bench.run(&format!("dense          seq={seq}"), || {
+            native::dense_scores(&q, &keys, seq, d, &mut out);
+            black_box(&out);
+        });
+        println!("{}", r.report());
+
+        let r = bench.run(&format!("aqua sparse    seq={seq}"), || {
+            native::aqua_scores_sparse(&q, &keys, seq, d, k, &mut out);
+            black_box(&out);
+        });
+        println!("{}", r.report());
+
+        let mask = topk_mask_by_abs(&q, k);
+        let r = bench.run(&format!("masked dense   seq={seq}"), || {
+            native::aqua_scores_masked(&q, &mask, &keys, seq, d, &mut out);
+            black_box(&out);
+        });
+        println!("{}", r.report());
+
+        let idx = topk_indices_by_abs(&q, k);
+        let qk: Vec<f32> = idx.iter().map(|&i| q[i]).collect();
+        let packed = native::pack_keys(&keys, seq, d, &idx);
+        let r = bench.run(&format!("packed sparse  seq={seq}"), || {
+            native::aqua_scores_packed(&qk, &packed, seq, k, &mut out);
+            black_box(&out);
+        });
+        println!("{}\n", r.report());
+    }
+}

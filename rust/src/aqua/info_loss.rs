@@ -1,0 +1,142 @@
+//! Information-retention loss (paper §6.2) and the Fig. 2 / Fig. 3-4
+//! analyses.
+//!
+//! L_info(v, v̂, I_k) = | ‖v‖₂ − ‖v̂[I_k]‖₂ | / ‖v‖₂
+//!
+//! Two projection sources ("Same Matrix" online SVD vs "Different Dataset"
+//! offline P) × two selection methods ("Top-K by Dimension" slicing vs
+//! "Top-K by Magnitude") give Fig. 2's four series.
+
+use crate::tensor::svd::projection_from_data;
+use crate::tensor::topk::topk_indices_by_abs;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Selection method for the retained index set I_k.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selection {
+    /// First k dims after projection (LoKi-style static slice).
+    ByDimension,
+    /// k largest-|·| dims of each projected vector (AQUA).
+    ByMagnitude,
+}
+
+/// L_info for one vector given its projected form and the keep set.
+pub fn info_loss(v: &[f32], vhat: &[f32], keep: &[usize]) -> f32 {
+    let nv = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if nv < 1e-12 {
+        return 0.0;
+    }
+    let nr = keep.iter().map(|&i| vhat[i] * vhat[i]).sum::<f32>().sqrt();
+    (nv - nr).abs() / nv
+}
+
+/// Mean L_info over the rows of `data` [n, d], projected by `p` [d, d],
+/// keeping k dims by `sel`.
+pub fn mean_info_loss(data: &Tensor, p: &Tensor, k: usize, sel: Selection) -> Result<f32> {
+    let d = data.cols();
+    let proj = data.matmul(p)?;
+    let mut total = 0.0f64;
+    for i in 0..data.rows() {
+        let v = data.row(i);
+        let vh = proj.row(i);
+        let keep = match sel {
+            Selection::ByDimension => (0..k.min(d)).collect::<Vec<_>>(),
+            Selection::ByMagnitude => topk_indices_by_abs(vh, k),
+        };
+        total += info_loss(v, vh, &keep) as f64;
+    }
+    Ok((total / data.rows() as f64) as f32)
+}
+
+/// One Fig.-2 style series: mean loss at each k-ratio for a fixed
+/// (projection, selection) condition.
+pub fn loss_series(data: &Tensor, p: &Tensor, ratios: &[f64], sel: Selection)
+                   -> Result<Vec<(f64, f32)>> {
+    let d = data.cols();
+    ratios
+        .iter()
+        .map(|&r| {
+            let k = ((r * d as f64).round() as usize).clamp(1, d);
+            Ok((r, mean_info_loss(data, p, k, sel)?))
+        })
+        .collect()
+}
+
+/// The Fig. 2 "Same Matrix" condition: SVD computed *from the evaluation
+/// data itself* (the ideal online approach §6.1 rules out as too slow).
+pub fn online_projection(data: &Tensor) -> Result<Tensor> {
+    projection_from_data(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::testkit::check;
+
+    fn gaussian(rng: &mut Rng, n: usize, d: usize) -> Tensor {
+        Tensor::new(&[n, d], rng.normal_vec(n * d, 1.0)).unwrap()
+    }
+
+    #[test]
+    fn zero_loss_at_full_k_with_orthogonal_p() {
+        let mut rng = Rng::new(11);
+        let data = gaussian(&mut rng, 64, 8);
+        let p = online_projection(&data).unwrap();
+        for sel in [Selection::ByDimension, Selection::ByMagnitude] {
+            let l = mean_info_loss(&data, &p, 8, sel).unwrap();
+            assert!(l < 1e-3, "loss {l} at k=d should vanish (rotation is lossless)");
+        }
+    }
+
+    #[test]
+    fn magnitude_never_worse_than_slicing() {
+        // Per-vector the magnitude top-k maximizes retained energy, so its
+        // loss is pointwise <= any other selection of the same size.
+        let mut rng = Rng::new(12);
+        let data = gaussian(&mut rng, 80, 16);
+        let p = online_projection(&data).unwrap();
+        for k in [2usize, 4, 8, 12] {
+            let lm = mean_info_loss(&data, &p, k, Selection::ByMagnitude).unwrap();
+            let ls = mean_info_loss(&data, &p, k, Selection::ByDimension).unwrap();
+            assert!(lm <= ls + 1e-5, "k={k}: magnitude {lm} > slice {ls}");
+        }
+    }
+
+    #[test]
+    fn loss_monotone_in_k_for_magnitude() {
+        let mut rng = Rng::new(13);
+        let data = gaussian(&mut rng, 50, 12);
+        let p = online_projection(&data).unwrap();
+        let series = loss_series(&data, &p, &[0.25, 0.5, 0.75, 1.0], Selection::ByMagnitude)
+            .unwrap();
+        for w in series.windows(2) {
+            assert!(w[0].1 >= w[1].1 - 1e-5, "loss should fall as k grows: {series:?}");
+        }
+    }
+
+    #[test]
+    fn prop_loss_bounded() {
+        check(
+            "info-loss-in-[0,1]",
+            100,
+            |g| {
+                let d = 2 + g.rng.below(16);
+                (g.vec_f32(d, 2.0), g.vec_f32(d, 2.0), d)
+            },
+            |(v, vh, d)| {
+                // any keep set
+                let keep: Vec<usize> = (0..*d / 2).collect();
+                let l = info_loss(v, vh, &keep);
+                // ‖v̂[I]‖ can exceed ‖v‖ for non-orthogonal v̂, so the loss is
+                // only guaranteed non-negative & finite here.
+                if l.is_finite() && l >= 0.0 {
+                    Ok(())
+                } else {
+                    Err(format!("loss {l}"))
+                }
+            },
+        );
+    }
+}

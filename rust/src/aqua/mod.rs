@@ -1,0 +1,14 @@
+//! The paper's algorithm, natively in rust.
+//!
+//! * [`policy`] — the knobs (`k_ratio`, `S_ratio`, `E_ratio`), the §5 cost
+//!   model and break-even point.
+//! * [`native`] — dense/sparse score kernels: the *real* O((i+1)·k) gather
+//!   implementation the complexity claims are measured on (the HLO path
+//!   uses the numerically-identical masked-dense formulation).
+//! * [`info_loss`] — §6.2 information-retention loss (Figures 2, 3/4).
+//! * [`overlap`] — §7 / Fig. 5 magnitude-vs-PCA overlap analysis.
+
+pub mod info_loss;
+pub mod native;
+pub mod overlap;
+pub mod policy;

@@ -1,0 +1,90 @@
+//! Magnitude-vs-PCA overlap analysis (paper §7 / Appendix A.6, Fig. 5).
+//!
+//! For a vector v: ρ(v, K, K′) = |S_mag(v,K) ∩ S_pca(K′)| / K where
+//! S_mag is the top-K |·| index set of the *unprojected* vector and
+//! S_pca(K′) = {0..K′-1} (the first K′ principal components).
+
+use crate::tensor::topk::topk_indices_by_abs;
+use crate::tensor::Tensor;
+
+/// Distribution summary of ρ over a set of vectors (what Fig. 5's violins
+/// show; we print quantiles).
+#[derive(Debug, Clone)]
+pub struct OverlapStats {
+    pub k_frac: f64,
+    pub kp_frac: f64,
+    pub mean: f64,
+    pub p10: f64,
+    pub p50: f64,
+    pub p90: f64,
+}
+
+/// ρ for one vector (projected form `vhat` used for magnitude ranking when
+/// analysing projected space; pass the raw vector for the paper's
+/// unprojected variant).
+pub fn rho(vhat: &[f32], k: usize, kp: usize) -> f64 {
+    if k == 0 {
+        return 0.0;
+    }
+    let mag = topk_indices_by_abs(vhat, k);
+    let hits = mag.iter().filter(|&&i| i < kp).count();
+    hits as f64 / k as f64
+}
+
+/// Overlap stats over the rows of `data` (already in the projected space —
+/// the PCA index set is only meaningful there).
+pub fn overlap_stats(data: &Tensor, p: &Tensor, k_frac: f64, kp_frac: f64) -> OverlapStats {
+    let d = data.cols();
+    let k = ((k_frac * d as f64).round() as usize).clamp(1, d);
+    let kp = ((kp_frac * d as f64).round() as usize).clamp(1, d);
+    let proj = data.matmul(p).expect("shape");
+    let mut rhos: Vec<f64> = (0..proj.rows()).map(|i| rho(proj.row(i), k, kp)).collect();
+    rhos.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = rhos.iter().sum::<f64>() / rhos.len().max(1) as f64;
+    let q = |f: f64| rhos[((rhos.len() - 1) as f64 * f).round() as usize];
+    OverlapStats { k_frac, kp_frac, mean, p10: q(0.1), p50: q(0.5), p90: q(0.9) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn rho_bounds_and_full_overlap() {
+        let v = [3.0f32, 2.0, 1.0, 0.5];
+        assert!((rho(&v, 2, 4) - 1.0).abs() < 1e-12); // top-2 ⊂ first 4
+        assert!((rho(&v, 2, 2) - 1.0).abs() < 1e-12); // sorted by magnitude already
+        assert_eq!(rho(&v, 0, 2), 0.0);
+    }
+
+    #[test]
+    fn rho_detects_mismatch() {
+        // magnitudes concentrated in the *last* dims -> zero overlap with
+        // leading PCA dims
+        let v = [0.1f32, 0.1, 5.0, 6.0];
+        assert_eq!(rho(&v, 2, 2), 0.0);
+    }
+
+    #[test]
+    fn stats_monotone_in_kp() {
+        let mut rng = Rng::new(21);
+        let data = Tensor::new(&[60, 16], rng.normal_vec(60 * 16, 1.0)).unwrap();
+        let p = Tensor::eye(16);
+        let a = overlap_stats(&data, &p, 0.25, 0.25);
+        let b = overlap_stats(&data, &p, 0.25, 0.75);
+        assert!(b.mean >= a.mean, "larger PCA set must not reduce overlap");
+        assert!(a.mean > 0.0 && a.mean <= 1.0);
+    }
+
+    #[test]
+    fn gaussian_overlap_near_kp_fraction() {
+        // For isotropic data, magnitudes are independent of index, so
+        // E[ρ(·, K, K′)] ≈ K′/d.
+        let mut rng = Rng::new(22);
+        let data = Tensor::new(&[400, 32], rng.normal_vec(400 * 32, 1.0)).unwrap();
+        let p = Tensor::eye(32);
+        let s = overlap_stats(&data, &p, 0.25, 0.5);
+        assert!((s.mean - 0.5).abs() < 0.1, "mean {}", s.mean);
+    }
+}

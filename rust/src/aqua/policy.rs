@@ -1,0 +1,169 @@
+//! AQUA knobs and the §5 cost model.
+//!
+//! `k_ratio` — fraction of projected dimensions retained by the dynamic
+//! magnitude selection. `S_ratio` — fraction of trailing principal
+//! dimensions statically sliced before caching (AQUA-Memory). The paper's
+//! effective ratio is `E_ratio = (1 - S_ratio) · k_ratio`.
+
+/// Resolved AQUA configuration for one engine run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AquaConfig {
+    /// Dynamic retention ratio (1.0 = no pruning; the 'B' baseline also
+    /// sets an identity projection).
+    pub k_ratio: f64,
+    /// AQUA-Memory static slice ratio (0.0 = off).
+    pub s_ratio: f64,
+    /// Use the calibrated projection (false = identity P: exact standard
+    /// attention; the baseline rows of every table).
+    pub use_projection: bool,
+    /// H2O heavy-hitter budget as a fraction of the live context
+    /// (1.0 = eviction off).
+    pub h2o_ratio: f64,
+}
+
+impl Default for AquaConfig {
+    fn default() -> Self {
+        AquaConfig { k_ratio: 1.0, s_ratio: 0.0, use_projection: true, h2o_ratio: 1.0 }
+    }
+}
+
+impl AquaConfig {
+    pub fn baseline() -> Self {
+        AquaConfig { k_ratio: 1.0, s_ratio: 0.0, use_projection: false, h2o_ratio: 1.0 }
+    }
+
+    /// Number of dims the *static* memory slice keeps of `d`.
+    pub fn mem_dims(&self, d: usize) -> usize {
+        (((1.0 - self.s_ratio) * d as f64).round() as usize).clamp(1, d)
+    }
+
+    /// Runtime top-k dims: `k_ratio` applied to the *remaining* dims
+    /// (paper §8.4: "the k_ratio hyperparameter is applied to this smaller
+    /// set of dimensions").
+    pub fn k_dims(&self, d: usize) -> usize {
+        ((self.k_ratio * self.mem_dims(d) as f64).round() as usize).clamp(1, d)
+    }
+
+    /// E_ratio = (1 - S_ratio) · k_ratio.
+    pub fn effective_ratio(&self) -> f64 {
+        (1.0 - self.s_ratio) * self.k_ratio
+    }
+
+    /// The AQUA-Memory keep mask over projected dims (leading principal
+    /// dims kept — the projection orders dims by decreasing variance).
+    pub fn dim_keep_mask(&self, d: usize) -> Vec<f32> {
+        let keep = self.mem_dims(d);
+        (0..d).map(|i| if i < keep { 1.0 } else { 0.0 }).collect()
+    }
+
+    /// Per-token-slot KV bytes (f32 K̂ slice + full V), the AQUA-Memory
+    /// saving the paper's Table 3 trades against accuracy.
+    pub fn kv_bytes_per_slot(&self, d: usize, n_kv: usize) -> usize {
+        n_kv * (self.mem_dims(d) + d) * 4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// §5 cost model
+// ---------------------------------------------------------------------------
+
+/// FLOP counts for the unnormalized-score stage at decode step `i+1`
+/// (paper §5; multiply-add pairs counted as 2 FLOPs).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub d_head: usize,
+}
+
+impl CostModel {
+    /// C_std = (i+1)·d
+    pub fn standard_flops(&self, seq: usize) -> u64 {
+        2 * (seq as u64) * self.d_head as u64
+    }
+
+    /// C_AQUA = d² (projection of q and k: 2·d² MACs) + (i+1)·k
+    pub fn aqua_flops(&self, seq: usize, k: usize) -> u64 {
+        let d = self.d_head as u64;
+        2 * (2 * d * d) + 2 * (seq as u64) * k as u64
+    }
+
+    /// The paper's break-even bound: AQUA wins for i+1 > d²/(d−k).
+    /// Returns None when k >= d (no savings, never breaks even — §A.4
+    /// case 4). NOTE: the paper's bound counts the projection as one d²
+    /// term; we expose both the paper bound and our 2·d² implementation
+    /// bound so benches can compare.
+    pub fn paper_breakeven(&self, k: usize) -> Option<usize> {
+        if k >= self.d_head {
+            return None;
+        }
+        let d = self.d_head as f64;
+        Some((d * d / (d - k as f64)).ceil() as usize)
+    }
+
+    /// Break-even of this implementation's cost model (2 projections).
+    pub fn impl_breakeven(&self, k: usize) -> Option<usize> {
+        if k >= self.d_head {
+            return None;
+        }
+        let d = self.d_head as f64;
+        Some((2.0 * d * d / (d - k as f64)).ceil() as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knob_resolution() {
+        let c = AquaConfig { k_ratio: 0.75, s_ratio: 0.0, ..Default::default() };
+        assert_eq!(c.k_dims(32), 24);
+        assert_eq!(c.mem_dims(32), 32);
+        assert!((c.effective_ratio() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_slice_composition() {
+        // paper Table 3: S=0.10, k=0.90 -> E = 0.81
+        let c = AquaConfig { k_ratio: 0.9, s_ratio: 0.1, ..Default::default() };
+        assert!((c.effective_ratio() - 0.81).abs() < 1e-12);
+        let d = 32;
+        assert_eq!(c.mem_dims(d), 29);
+        assert_eq!(c.k_dims(d), 26);
+        let mask = c.dim_keep_mask(d);
+        assert_eq!(mask.iter().filter(|&&m| m > 0.5).count(), 29);
+        assert!(mask[..29].iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn extreme_knobs_clamped() {
+        let c = AquaConfig { k_ratio: 0.0, s_ratio: 0.99, ..Default::default() };
+        assert!(c.k_dims(32) >= 1);
+        assert!(c.mem_dims(32) >= 1);
+    }
+
+    #[test]
+    fn paper_numerical_example() {
+        // §A.4: d=128 -> k=16: 147, k=64: 256, k=112: 1024, k=128: never.
+        let m = CostModel { d_head: 128 };
+        assert_eq!(m.paper_breakeven(16), Some(147));
+        assert_eq!(m.paper_breakeven(64), Some(256));
+        assert_eq!(m.paper_breakeven(112), Some(1024));
+        assert_eq!(m.paper_breakeven(128), None);
+    }
+
+    #[test]
+    fn crossover_matches_flop_model() {
+        let m = CostModel { d_head: 64 };
+        let k = 32;
+        let be = m.impl_breakeven(k).unwrap();
+        assert!(m.aqua_flops(be + 1, k) < m.standard_flops(be + 1));
+        assert!(m.aqua_flops(be.saturating_sub(2), k) >= m.standard_flops(be.saturating_sub(2)));
+    }
+
+    #[test]
+    fn kv_bytes_scale_with_slice() {
+        let base = AquaConfig::default().kv_bytes_per_slot(32, 2);
+        let sliced = AquaConfig { s_ratio: 0.25, ..Default::default() }.kv_bytes_per_slot(32, 2);
+        assert!(sliced < base);
+    }
+}

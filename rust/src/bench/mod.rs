@@ -1,0 +1,108 @@
+//! Criterion-lite measurement harness (criterion is unavailable offline).
+//!
+//! Warmup + timed iterations, reports mean/p50/p99 and derived throughput.
+//! Used by `rust/benches/*` (cargo bench targets with `harness = false`)
+//! and the CLI's table/figure regenerators.
+
+use std::time::{Duration, Instant};
+
+use crate::util::{mean, percentile, stddev};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.2}µs ±{:>8.2}µs  p50 {:>10.2}µs  p99 {:>10.2}µs  ({} iters)",
+            self.name,
+            self.mean_ns / 1e3,
+            self.std_ns / 1e3,
+            self.p50_ns / 1e3,
+            self.p99_ns / 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Measurement settings.
+#[derive(Debug, Clone, Copy)]
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+    /// Hard cap on total measurement time; iterations stop early past it.
+    pub max_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 3, iters: 30, max_time: Duration::from_secs(10) }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: 1, iters: 10, max_time: Duration::from_secs(5) }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let start = Instant::now();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+            if start.elapsed() > self.max_time && samples.len() >= 5 {
+                break;
+            }
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_ns: mean(&samples),
+            std_ns: stddev(&samples),
+            p50_ns: percentile(&samples, 50.0),
+            p99_ns: percentile(&samples, 99.0),
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value
+/// (std::hint::black_box stabilized alternative that works on all types).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher { warmup: 1, iters: 8, max_time: Duration::from_secs(2) };
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters >= 5);
+        assert!(r.p99_ns >= r.p50_ns);
+        assert!(!r.report().is_empty());
+    }
+}

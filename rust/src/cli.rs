@@ -1,0 +1,112 @@
+//! Hand-rolled CLI argument parsing (clap unavailable offline).
+//!
+//! Grammar: `aqua <subcommand> [--flag value]... [--switch]...`
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        if argv.is_empty() {
+            bail!("missing subcommand");
+        }
+        let subcommand = argv[0].clone();
+        let mut flags = BTreeMap::new();
+        let mut switches = vec![];
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    switches.push(name.to_string());
+                }
+            } else {
+                bail!("unexpected positional argument '{a}'");
+            }
+            i += 1;
+        }
+        Ok(Args { subcommand, flags, switches })
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    /// Comma-separated f64 list flag.
+    pub fn f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.flags.get(name) {
+            Some(v) => v.split(',').map(|s| Ok(s.trim().parse()?)).collect(),
+            None => Ok(default.to_vec()),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = Args::parse(&argv("table1 --model llama-analog --items 20 --fast")).unwrap();
+        assert_eq!(a.subcommand, "table1");
+        assert_eq!(a.str("model", "x"), "llama-analog");
+        assert_eq!(a.usize("items", 60).unwrap(), 20);
+        assert!(a.switch("fast"));
+        assert!(!a.switch("slow"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&argv("fig2 --model=m --ratios=0.5,0.75")).unwrap();
+        assert_eq!(a.str("model", ""), "m");
+        assert_eq!(a.f64_list("ratios", &[]).unwrap(), vec![0.5, 0.75]);
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(&argv("x stray")).is_err());
+        assert!(Args::parse(&[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv("serve")).unwrap();
+        assert_eq!(a.f64("k-ratio", 1.0).unwrap(), 1.0);
+        assert_eq!(a.str("addr", "127.0.0.1:8080"), "127.0.0.1:8080");
+    }
+}

@@ -1,0 +1,153 @@
+//! Admission queue + lane table (continuous batching).
+//!
+//! Requests enter a FIFO; the lane table assigns them to free batch lanes
+//! as capacity opens up (a finished request frees its lane immediately —
+//! no epoch barriers). Invariants (property-tested):
+//! * a request occupies at most one lane,
+//! * admission order is FIFO among waiting requests,
+//! * occupied lanes ≤ batch size.
+
+use std::collections::VecDeque;
+
+use super::request::GenRequest;
+
+/// FIFO admission queue (engine-internal; thread-safe wrapper lives in the
+/// engine).
+#[derive(Debug, Default)]
+pub struct AdmissionQueue {
+    q: VecDeque<GenRequest>,
+}
+
+impl AdmissionQueue {
+    pub fn push(&mut self, r: GenRequest) {
+        self.q.push_back(r);
+    }
+
+    pub fn pop(&mut self) -> Option<GenRequest> {
+        self.q.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+/// Which request (by id) occupies each lane.
+#[derive(Debug)]
+pub struct LaneTable {
+    lanes: Vec<Option<u64>>,
+}
+
+impl LaneTable {
+    pub fn new(batch: usize) -> Self {
+        LaneTable { lanes: vec![None; batch] }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn free_lane(&self) -> Option<usize> {
+        self.lanes.iter().position(|l| l.is_none())
+    }
+
+    pub fn occupy(&mut self, lane: usize, id: u64) {
+        debug_assert!(self.lanes[lane].is_none(), "lane {lane} already occupied");
+        self.lanes[lane] = Some(id);
+    }
+
+    pub fn release(&mut self, lane: usize) {
+        self.lanes[lane] = None;
+    }
+
+    pub fn occupant(&self, lane: usize) -> Option<u64> {
+        self.lanes[lane]
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.occupied() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::check;
+
+    #[test]
+    fn fifo_order() {
+        let mut q = AdmissionQueue::default();
+        for i in 0..5 {
+            q.push(GenRequest::new(i, vec![], 1));
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop().unwrap().id, i);
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn lane_lifecycle() {
+        let mut t = LaneTable::new(2);
+        assert!(t.is_idle());
+        let l0 = t.free_lane().unwrap();
+        t.occupy(l0, 10);
+        let l1 = t.free_lane().unwrap();
+        assert_ne!(l0, l1);
+        t.occupy(l1, 11);
+        assert_eq!(t.free_lane(), None);
+        assert_eq!(t.occupied(), 2);
+        t.release(l0);
+        assert_eq!(t.free_lane(), Some(l0));
+        assert_eq!(t.occupant(l1), Some(11));
+    }
+
+    #[test]
+    fn prop_no_double_occupancy() {
+        check(
+            "lane-exclusivity",
+            100,
+            |g| {
+                let batch = 1 + g.rng.below(8);
+                let ops: Vec<(bool, u64)> =
+                    (0..g.rng.below(40)).map(|i| (g.rng.f64() < 0.6, i as u64)).collect();
+                (batch, ops)
+            },
+            |(batch, ops)| {
+                let mut t = LaneTable::new(*batch);
+                let mut active: Vec<(usize, u64)> = vec![];
+                for &(is_add, id) in ops {
+                    if is_add {
+                        if let Some(l) = t.free_lane() {
+                            t.occupy(l, id);
+                            active.push((l, id));
+                        }
+                    } else if let Some((l, _)) = active.pop() {
+                        t.release(l);
+                    }
+                    if t.occupied() > *batch {
+                        return Err("over capacity".into());
+                    }
+                    // each live id in exactly one lane
+                    let mut seen = std::collections::HashSet::new();
+                    for lane in 0..t.batch() {
+                        if let Some(id) = t.occupant(lane) {
+                            if !seen.insert(id) {
+                                return Err(format!("id {id} in two lanes"));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

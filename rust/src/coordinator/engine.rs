@@ -1,0 +1,491 @@
+//! The engine: continuous-batching decode loop over the AOT executables.
+//!
+//! Single-threaded by design — PJRT handles in the `xla` crate are !Send,
+//! so the engine owns the runtime and the server front-end talks to it
+//! through channels (see `EngineHandle`). One engine run has a fixed
+//! [`AquaConfig`] (the knobs are runtime *inputs* to the HLO, so switching
+//! configs needs no recompilation — `with_aqua` just changes the scalars
+//! fed on the next call).
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use super::batcher::{AdmissionQueue, LaneTable};
+use super::h2o::H2oPolicy;
+use super::kvcache::LaneKv;
+use super::metrics::Metrics;
+use super::request::{ActiveReq, FinishReason, GenRequest, GenResult};
+use crate::aqua::policy::AquaConfig;
+use crate::model::sampling::Sampler;
+use crate::runtime::ModelRuntime;
+use crate::tensor::softmax::log_softmax_at;
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub batch: usize,
+    pub aqua: AquaConfig,
+    pub h2o_recent_window: usize,
+    pub sampler: Sampler,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            batch: 4,
+            aqua: AquaConfig::default(),
+            h2o_recent_window: 16,
+            sampler: Sampler::Greedy,
+            seed: 0,
+        }
+    }
+}
+
+pub struct Engine {
+    rt: Arc<ModelRuntime>,
+    pub cfg: EngineConfig,
+    queue: AdmissionQueue,
+    lanes: LaneTable,
+    active: Vec<Option<ActiveReq>>,
+    kv: Vec<LaneKv>,
+    k_cache: Literal,
+    v_cache: Literal,
+    results: HashMap<u64, GenResult>,
+    rng: Rng,
+    pub metrics: Metrics,
+    h2o: H2oPolicy,
+}
+
+impl Engine {
+    pub fn new(rt: Arc<ModelRuntime>, cfg: EngineConfig) -> Result<Self> {
+        if cfg.batch == 0 {
+            bail!("batch must be >= 1");
+        }
+        let (k, v) = rt.empty_cache(cfg.batch)?;
+        let cap = rt.cfg.max_seq;
+        let h2o = H2oPolicy::new(cfg.aqua.h2o_ratio, cfg.h2o_recent_window);
+        Ok(Engine {
+            rt,
+            queue: AdmissionQueue::default(),
+            lanes: LaneTable::new(cfg.batch),
+            active: (0..cfg.batch).map(|_| None).collect(),
+            kv: (0..cfg.batch).map(|_| LaneKv::new(cap)).collect(),
+            k_cache: k,
+            v_cache: v,
+            results: HashMap::new(),
+            rng: Rng::new(cfg.seed ^ 0xE17),
+            metrics: Metrics::default(),
+            h2o,
+            cfg,
+        })
+    }
+
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.rt
+    }
+
+    /// Swap the AQUA knobs (takes effect on the next call; no recompile).
+    pub fn with_aqua(&mut self, aqua: AquaConfig) {
+        self.cfg.aqua = aqua;
+        self.h2o = H2oPolicy::new(aqua.h2o_ratio, self.cfg.h2o_recent_window);
+    }
+
+    pub fn submit(&mut self, req: GenRequest) {
+        self.metrics.start_clock();
+        self.queue.push(req);
+    }
+
+    pub fn take_result(&mut self, id: u64) -> Option<GenResult> {
+        self.results.remove(&id)
+    }
+
+    /// Convenience: run a whole batch of requests to completion, results in
+    /// submission order.
+    pub fn run_batch(&mut self, reqs: Vec<GenRequest>) -> Result<Vec<GenResult>> {
+        let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        for r in reqs {
+            self.submit(r);
+        }
+        self.run_until_idle()?;
+        ids.iter()
+            .map(|id| {
+                self.take_result(*id)
+                    .ok_or_else(|| anyhow::anyhow!("request {id} produced no result"))
+            })
+            .collect()
+    }
+
+    pub fn run_until_idle(&mut self) -> Result<()> {
+        while self.step()? {}
+        Ok(())
+    }
+
+    /// One scheduling pass. Returns false when there is nothing to do.
+    pub fn step(&mut self) -> Result<bool> {
+        self.admit();
+        let needs_prefill = (0..self.cfg.batch).any(|l| {
+            matches!(&self.active[l], Some(a) if a.prompt_fed < a.req.prompt.len())
+        });
+        if needs_prefill {
+            self.prefill_pass()?;
+            return Ok(true);
+        }
+        if !self.lanes.is_idle() {
+            self.decode_pass()?;
+            return Ok(true);
+        }
+        Ok(!self.queue.is_empty())
+    }
+
+    // ------------------------------------------------------------- admission
+
+    fn admit(&mut self) {
+        while let Some(lane) = self.lanes.free_lane() {
+            let Some(req) = self.queue.pop() else { break };
+            if req.prompt.is_empty() || req.prompt.len() + req.max_new_tokens > self.rt.cfg.max_seq
+            {
+                let id = req.id;
+                self.results.insert(
+                    id,
+                    GenResult {
+                        id,
+                        tokens: vec![],
+                        prompt_logprobs: vec![],
+                        gen_logprobs: vec![],
+                        finish: FinishReason::PromptTooLong,
+                        ttft_us: 0,
+                        total_us: 0,
+                    },
+                );
+                continue;
+            }
+            self.kv[lane].reset();
+            self.lanes.occupy(lane, req.id);
+            self.active[lane] = Some(ActiveReq {
+                prompt_fed: 0,
+                generated: vec![],
+                prompt_logprobs: vec![],
+                gen_logprobs: vec![],
+                next_pos: 0,
+                pending_token: -1,
+                started_at: Instant::now(),
+                first_token_at: None,
+                req,
+            });
+        }
+    }
+
+    // --------------------------------------------------------------- prefill
+
+    fn prefill_pass(&mut self) -> Result<()> {
+        let b = self.cfg.batch;
+        let chunk = self.rt.prefill_chunk;
+        let s_cap = self.rt.cfg.max_seq;
+        let d = self.rt.cfg.d_head;
+        let n_layers = self.rt.cfg.n_layers;
+
+        let mut tokens = vec![0i32; b * chunk];
+        let mut pos0 = vec![0i32; b];
+        let mut fed_now = vec![0usize; b];
+        for lane in 0..b {
+            pos0[lane] = self.kv[lane].len as i32;
+            if let Some(a) = &self.active[lane] {
+                let remaining = a.req.prompt.len() - a.prompt_fed;
+                if remaining > 0 {
+                    let n = remaining.min(chunk);
+                    tokens[lane * chunk..lane * chunk + n]
+                        .copy_from_slice(&a.req.prompt[a.prompt_fed..a.prompt_fed + n]);
+                    fed_now[lane] = n;
+                }
+            }
+        }
+        let slot_mask = self.flat_mask();
+        let aq = self.cfg.aqua;
+        let k_dims = aq.k_dims(d) as i32;
+        let keep = aq.dim_keep_mask(d);
+
+        let t0 = Instant::now();
+        let out = self.rt.prefill(
+            b, &tokens, &pos0, &self.k_cache, &self.v_cache, &slot_mask, k_dims, &keep,
+            aq.use_projection,
+        )?;
+        let real_tokens: u64 = fed_now.iter().map(|&n| n as u64).sum();
+        self.metrics.record_prefill(t0.elapsed(), real_tokens);
+        self.k_cache = out.k_cache;
+        self.v_cache = out.v_cache;
+
+        let vocab = self.rt.cfg.vocab;
+        let mut finish_list: Vec<usize> = vec![];
+        for lane in 0..b {
+            let n = fed_now[lane];
+            if n == 0 {
+                continue;
+            }
+            self.kv[lane].commit_write(n);
+            // fold this chunk's attention mass (sum over layers)
+            let mut mass = vec![0.0f32; s_cap];
+            for l in 0..n_layers {
+                let base = (l * b + lane) * s_cap;
+                for s in 0..s_cap {
+                    mass[s] += out.attn_acc[base + s];
+                }
+            }
+            self.kv[lane].accumulate(&mass);
+            let evicted = self.h2o.apply(&mut self.kv[lane]) as u64;
+            self.metrics.record_evictions(evicted);
+
+            let a = self.active[lane].as_mut().unwrap();
+            let fed_before = a.prompt_fed;
+            a.prompt_fed += n;
+            a.next_pos = self.kv[lane].len;
+            // teacher-forced prompt logprobs
+            for c in 0..n {
+                let target_idx = fed_before + c + 1;
+                if target_idx < a.req.prompt.len() {
+                    let row = &out.logits[(lane * chunk + c) * vocab..(lane * chunk + c + 1) * vocab];
+                    a.prompt_logprobs.push(log_softmax_at(row, a.req.prompt[target_idx] as usize));
+                }
+            }
+            if a.prompt_fed == a.req.prompt.len() {
+                // prompt complete: the logits at chunk step n-1 predict the
+                // first new token
+                let row = &out.logits[(lane * chunk + n - 1) * vocab..(lane * chunk + n) * vocab];
+                if a.req.score_only || a.req.max_new_tokens == 0 {
+                    finish_list.push(lane);
+                } else {
+                    let tok = self.cfg.sampler.sample(row, &mut self.rng);
+                    a.first_token_at = Some(Instant::now());
+                    a.gen_logprobs.push(log_softmax_at(row, tok as usize));
+                    a.generated.push(tok);
+                    a.pending_token = tok;
+                    if self.lane_should_stop(lane) {
+                        finish_list.push(lane);
+                    }
+                }
+            }
+        }
+        for lane in finish_list {
+            self.finish_lane(lane, None);
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------- decode
+
+    fn decode_pass(&mut self) -> Result<()> {
+        let b = self.cfg.batch;
+        let s_cap = self.rt.cfg.max_seq;
+        let d = self.rt.cfg.d_head;
+        let n_layers = self.rt.cfg.n_layers;
+
+        let mut tokens = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut live = vec![false; b];
+        for lane in 0..b {
+            pos[lane] = self.kv[lane].len.min(s_cap - 1) as i32;
+            if let Some(a) = &self.active[lane] {
+                if a.pending_token >= 0 && !self.kv[lane].is_full() {
+                    tokens[lane] = a.pending_token;
+                    live[lane] = true;
+                }
+            }
+        }
+        if !live.iter().any(|&l| l) {
+            // every active lane is blocked (capacity) — finish them
+            for lane in 0..b {
+                if self.active[lane].is_some() {
+                    self.finish_lane(lane, Some(FinishReason::Length));
+                }
+            }
+            return Ok(());
+        }
+
+        let slot_mask = self.flat_mask();
+        let aq = self.cfg.aqua;
+        let k_dims = aq.k_dims(d) as i32;
+        let keep = aq.dim_keep_mask(d);
+
+        let t0 = Instant::now();
+        let out = self.rt.decode(
+            b, &tokens, &pos, &self.k_cache, &self.v_cache, &slot_mask, k_dims, &keep,
+            aq.use_projection,
+        )?;
+        self.metrics.record_decode(t0.elapsed(), live.iter().filter(|&&l| l).count() as u64);
+        self.k_cache = out.k_cache;
+        self.v_cache = out.v_cache;
+
+        let vocab = self.rt.cfg.vocab;
+        let mut finish_list: Vec<usize> = vec![];
+        for lane in 0..b {
+            if !live[lane] {
+                continue;
+            }
+            self.kv[lane].commit_write(1);
+            let mut mass = vec![0.0f32; s_cap];
+            for l in 0..n_layers {
+                let base = (l * b + lane) * s_cap;
+                for s in 0..s_cap {
+                    mass[s] += out.attn_acc[base + s];
+                }
+            }
+            self.kv[lane].accumulate(&mass);
+            let evicted = self.h2o.apply(&mut self.kv[lane]) as u64;
+            self.metrics.record_evictions(evicted);
+
+            let a = self.active[lane].as_mut().unwrap();
+            a.next_pos = self.kv[lane].len;
+            let row = &out.logits[lane * vocab..(lane + 1) * vocab];
+            let tok = self.cfg.sampler.sample(row, &mut self.rng);
+            if a.first_token_at.is_none() {
+                a.first_token_at = Some(Instant::now());
+            }
+            a.gen_logprobs.push(log_softmax_at(row, tok as usize));
+            a.generated.push(tok);
+            a.pending_token = tok;
+            if self.lane_should_stop(lane) {
+                finish_list.push(lane);
+            }
+        }
+        for lane in finish_list {
+            self.finish_lane(lane, None);
+        }
+        Ok(())
+    }
+
+    // --------------------------------------------------------------- helpers
+
+    fn flat_mask(&self) -> Vec<f32> {
+        let s = self.rt.cfg.max_seq;
+        let mut m = vec![0.0f32; self.cfg.batch * s];
+        for (lane, kv) in self.kv.iter().enumerate() {
+            m[lane * s..(lane + 1) * s].copy_from_slice(&kv.slot_mask);
+        }
+        m
+    }
+
+    fn lane_should_stop(&self, lane: usize) -> bool {
+        let a = self.active[lane].as_ref().unwrap();
+        if a.generated.len() >= a.req.max_new_tokens {
+            return true;
+        }
+        if let Some(stop) = a.req.stop_token {
+            if a.generated.last() == Some(&stop) {
+                return true;
+            }
+        }
+        self.kv[lane].is_full()
+    }
+
+    fn finish_lane(&mut self, lane: usize, forced: Option<FinishReason>) {
+        let Some(a) = self.active[lane].take() else { return };
+        let finish = forced.unwrap_or_else(|| {
+            if a.req.stop_token.is_some() && a.generated.last() == a.req.stop_token.as_ref() {
+                FinishReason::Stop
+            } else {
+                FinishReason::Length
+            }
+        });
+        let total = a.started_at.elapsed();
+        let ttft = a.first_token_at.map(|t| t.duration_since(a.started_at));
+        self.metrics.record_finish(ttft, total);
+        self.results.insert(
+            a.req.id,
+            GenResult {
+                id: a.req.id,
+                tokens: a.generated,
+                prompt_logprobs: a.prompt_logprobs,
+                gen_logprobs: a.gen_logprobs,
+                finish,
+                ttft_us: ttft.map(|t| t.as_micros() as u64).unwrap_or(0),
+                total_us: total.as_micros() as u64,
+            },
+        );
+        self.lanes.release(lane);
+        self.kv[lane].reset();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded front-end handle (for the HTTP server): the engine lives on its
+// own thread because PJRT handles are !Send.
+// ---------------------------------------------------------------------------
+
+pub enum EngineCmd {
+    Submit(GenRequest),
+    Stats(mpsc::Sender<super::metrics::Snapshot>),
+    Shutdown,
+}
+
+pub struct EngineHandle {
+    pub cmd_tx: mpsc::Sender<EngineCmd>,
+    pub result_rx: mpsc::Receiver<GenResult>,
+    pub join: std::thread::JoinHandle<()>,
+}
+
+impl EngineHandle {
+    /// Spawn an engine-owning thread. `make_engine` runs *on that thread*
+    /// (constructs the PJRT client there).
+    pub fn spawn<F>(make_engine: F) -> EngineHandle
+    where
+        F: FnOnce() -> Result<Engine> + Send + 'static,
+    {
+        let (cmd_tx, cmd_rx) = mpsc::channel::<EngineCmd>();
+        let (res_tx, result_rx) = mpsc::channel::<GenResult>();
+        let join = std::thread::spawn(move || {
+            let mut engine = match make_engine() {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("engine init failed: {e:#}");
+                    return;
+                }
+            };
+            let mut done_ids: Vec<u64> = vec![];
+            loop {
+                // drain commands (non-blocking while busy, blocking when idle)
+                loop {
+                    let cmd = if engine.lanes.is_idle() && engine.queue.is_empty() {
+                        match cmd_rx.recv() {
+                            Ok(c) => c,
+                            Err(_) => return,
+                        }
+                    } else {
+                        match cmd_rx.try_recv() {
+                            Ok(c) => c,
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => return,
+                        }
+                    };
+                    match cmd {
+                        EngineCmd::Submit(r) => {
+                            done_ids.push(r.id);
+                            engine.submit(r);
+                        }
+                        EngineCmd::Stats(tx) => {
+                            let _ = tx.send(engine.metrics.snapshot());
+                        }
+                        EngineCmd::Shutdown => return,
+                    }
+                }
+                if let Err(e) = engine.step() {
+                    eprintln!("engine step failed: {e:#}");
+                    return;
+                }
+                done_ids.retain(|id| {
+                    if let Some(res) = engine.take_result(*id) {
+                        let _ = res_tx.send(res);
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+        });
+        EngineHandle { cmd_tx, result_rx, join }
+    }
+}

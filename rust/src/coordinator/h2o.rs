@@ -1,0 +1,155 @@
+//! H2O heavy-hitter eviction policy (Zhang et al. 2023), driven by AQUA's
+//! *approximate* attention scores — the paper's §8.3 synergy.
+//!
+//! H2O keeps a budget of KV slots: the most recent `recent_window` tokens
+//! are always kept ("recency"), the remainder of the budget goes to the
+//! tokens with the largest accumulated attention mass ("heavy hitters").
+//! In AQUA-H2O the mass comes from the approximate scores the decode step
+//! already produced — no extra full-attention pass.
+//!
+//! The budget is `ceil(h2o_ratio · len)` where `len` is the number of
+//! tokens written so far — matching the paper's `H2O_ratio` (fraction of
+//! the context retained; 1.0 = eviction off).
+
+use super::kvcache::LaneKv;
+
+#[derive(Debug, Clone, Copy)]
+pub struct H2oPolicy {
+    /// Fraction of the live context to retain (1.0 disables eviction).
+    pub ratio: f64,
+    /// Most-recent tokens that are never evicted.
+    pub recent_window: usize,
+}
+
+impl H2oPolicy {
+    pub fn disabled() -> Self {
+        H2oPolicy { ratio: 1.0, recent_window: 16 }
+    }
+
+    pub fn new(ratio: f64, recent_window: usize) -> Self {
+        H2oPolicy { ratio: ratio.clamp(0.05, 1.0), recent_window }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.ratio < 0.999
+    }
+
+    /// Token budget for a lane that has written `len` tokens.
+    pub fn budget(&self, len: usize) -> usize {
+        ((self.ratio * len as f64).ceil() as usize).max(self.recent_window.min(len)).max(1)
+    }
+
+    /// Apply the policy to one lane: evict lowest-mass non-recent slots
+    /// until `live <= budget(len)`. Returns the number of evictions.
+    pub fn apply(&self, lane: &mut LaneKv) -> usize {
+        if !self.enabled() {
+            return 0;
+        }
+        let budget = self.budget(lane.len);
+        let live = lane.live_slots();
+        if live <= budget {
+            return 0;
+        }
+        let recent_start = lane.len.saturating_sub(self.recent_window);
+        // Candidates: live, non-recent slots, sorted by accumulated mass asc.
+        let mut cands: Vec<usize> = (0..recent_start)
+            .filter(|&i| lane.slot_mask[i] > 0.5)
+            .collect();
+        cands.sort_by(|&a, &b| {
+            lane.h2o_acc[a].partial_cmp(&lane.h2o_acc[b]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let need = live - budget;
+        let mut evicted = 0;
+        for &slot in cands.iter().take(need) {
+            lane.evict(slot);
+            evicted += 1;
+        }
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::testkit::check;
+
+    fn lane_with(len: usize, cap: usize, acc: &[f32]) -> LaneKv {
+        let mut l = LaneKv::new(cap);
+        l.commit_write(len);
+        l.accumulate(&{
+            let mut a = vec![0.0; cap];
+            a[..acc.len()].copy_from_slice(acc);
+            a
+        });
+        l
+    }
+
+    #[test]
+    fn disabled_never_evicts() {
+        let mut l = lane_with(10, 16, &[0.0; 10]);
+        assert_eq!(H2oPolicy::disabled().apply(&mut l), 0);
+        assert_eq!(l.live_slots(), 10);
+    }
+
+    #[test]
+    fn evicts_lowest_mass_first() {
+        // 8 tokens, keep ratio 0.5 (budget 4), recent window 2 protects 6,7.
+        let acc = [5.0, 0.1, 4.0, 0.2, 3.0, 0.3];
+        let mut l = lane_with(8, 16, &acc);
+        let p = H2oPolicy::new(0.5, 2);
+        let n = p.apply(&mut l);
+        assert_eq!(n, 4);
+        assert_eq!(l.live_slots(), 4);
+        // heavy hitters 0,2 survive; recents 6,7 survive
+        for &keep in &[0usize, 2, 6, 7] {
+            assert!(l.slot_mask[keep] > 0.5, "slot {keep} wrongly evicted");
+        }
+    }
+
+    #[test]
+    fn prop_budget_respected_and_recent_protected() {
+        check(
+            "h2o-invariants",
+            150,
+            |g| {
+                let cap = 16 + g.rng.below(64);
+                let len = 1 + g.rng.below(cap);
+                let ratio = 0.1 + g.rng.f64() * 0.9;
+                let window = 1 + g.rng.below(12);
+                let mut rng = Rng::new(g.rng.next_u64());
+                let acc: Vec<f32> = (0..len).map(|_| rng.f32() * 10.0).collect();
+                (cap, len, ratio, window, acc)
+            },
+            |(cap, len, ratio, window, acc)| {
+                let mut l = lane_with(*len, *cap, acc);
+                let p = H2oPolicy::new(*ratio, *window);
+                p.apply(&mut l);
+                let budget = p.budget(*len);
+                if l.live_slots() > budget {
+                    return Err(format!("live {} > budget {budget}", l.live_slots()));
+                }
+                // recent window never evicted
+                let recent_start = len.saturating_sub(*window);
+                for i in recent_start..*len {
+                    if l.slot_mask[i] < 0.5 {
+                        return Err(format!("recent slot {i} evicted"));
+                    }
+                }
+                // applying again is a no-op (idempotent at fixed len)
+                if p.apply(&mut l) != 0 {
+                    return Err("second apply evicted more".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn budget_monotone_in_ratio() {
+        let a = H2oPolicy::new(0.25, 4).budget(100);
+        let b = H2oPolicy::new(0.75, 4).budget(100);
+        assert!(a < b);
+        assert_eq!(H2oPolicy::new(1.0, 4).budget(100), 100);
+    }
+}

@@ -1,0 +1,148 @@
+//! Per-lane KV-slot bookkeeping.
+//!
+//! The HLO executables carry the actual cache tensors; the engine is the
+//! *authority* on which slots are attendable via the `slot_mask` input it
+//! passes each call. This module tracks, per batch lane:
+//!
+//! * the logical write position (`len`, drives RoPE and the write index),
+//! * the valid-slot mask,
+//! * the H2O accumulated attention mass per slot.
+//!
+//! Eviction (h2o.rs) clears mask bits; the cache values stay in place but
+//! become unreachable — equivalent to freeing the slot in a paged
+//! allocator (the memory saving is reported analytically; slot *reuse*
+//! would need a write-index decoupled from the RoPE position, noted as an
+//! extension in DESIGN.md).
+
+/// State for one batch lane.
+#[derive(Debug, Clone)]
+pub struct LaneKv {
+    pub capacity: usize,
+    /// 1.0 = slot attendable.
+    pub slot_mask: Vec<f32>,
+    /// Accumulated attention mass per slot (summed over layers & steps).
+    pub h2o_acc: Vec<f32>,
+    /// Tokens written so far == next write position.
+    pub len: usize,
+}
+
+impl LaneKv {
+    pub fn new(capacity: usize) -> Self {
+        LaneKv {
+            capacity,
+            slot_mask: vec![0.0; capacity],
+            h2o_acc: vec![0.0; capacity],
+            len: 0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.slot_mask.iter_mut().for_each(|m| *m = 0.0);
+        self.h2o_acc.iter_mut().for_each(|a| *a = 0.0);
+        self.len = 0;
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len >= self.capacity
+    }
+
+    /// Mark `n` freshly written slots (positions len..len+n) valid.
+    pub fn commit_write(&mut self, n: usize) {
+        let end = (self.len + n).min(self.capacity);
+        for i in self.len..end {
+            self.slot_mask[i] = 1.0;
+        }
+        self.len = end;
+    }
+
+    /// Number of currently attendable slots.
+    pub fn live_slots(&self) -> usize {
+        self.slot_mask.iter().filter(|&&m| m > 0.5).count()
+    }
+
+    /// Fold one step's attention mass (already summed over layers) into the
+    /// H2O accumulator. `acc` is [S].
+    pub fn accumulate(&mut self, acc: &[f32]) {
+        debug_assert_eq!(acc.len(), self.capacity);
+        for (a, &x) in self.h2o_acc.iter_mut().zip(acc) {
+            *a += x;
+        }
+    }
+
+    /// Evict a specific slot (used by the H2O policy).
+    pub fn evict(&mut self, slot: usize) {
+        self.slot_mask[slot] = 0.0;
+    }
+
+    /// KV bytes currently reachable (what a paged allocator would hold),
+    /// given per-slot cost.
+    pub fn live_bytes(&self, bytes_per_slot: usize) -> usize {
+        self.live_slots() * bytes_per_slot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::check;
+
+    #[test]
+    fn write_commit_advances() {
+        let mut l = LaneKv::new(8);
+        l.commit_write(3);
+        assert_eq!(l.len, 3);
+        assert_eq!(l.live_slots(), 3);
+        l.commit_write(2);
+        assert_eq!(l.len, 5);
+        assert!(!l.is_full());
+        l.commit_write(10); // clamped at capacity
+        assert_eq!(l.len, 8);
+        assert!(l.is_full());
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut l = LaneKv::new(4);
+        l.commit_write(4);
+        l.accumulate(&[1.0, 2.0, 3.0, 4.0]);
+        l.reset();
+        assert_eq!(l.len, 0);
+        assert_eq!(l.live_slots(), 0);
+        assert!(l.h2o_acc.iter().all(|&a| a == 0.0));
+    }
+
+    #[test]
+    fn eviction_reduces_live() {
+        let mut l = LaneKv::new(4);
+        l.commit_write(4);
+        l.evict(1);
+        assert_eq!(l.live_slots(), 3);
+        assert_eq!(l.slot_mask, vec![1.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn prop_live_never_exceeds_len() {
+        check(
+            "live<=len",
+            100,
+            |g| {
+                let cap = 4 + g.rng.below(32);
+                let writes = g.rng.below(cap + 4);
+                let evictions: Vec<usize> = (0..g.rng.below(8)).map(|_| g.rng.below(cap)).collect();
+                (cap, writes, evictions)
+            },
+            |(cap, writes, evictions)| {
+                let mut l = LaneKv::new(*cap);
+                l.commit_write(*writes);
+                for &e in evictions {
+                    l.evict(e);
+                }
+                if l.live_slots() <= l.len {
+                    Ok(())
+                } else {
+                    Err(format!("live {} > len {}", l.live_slots(), l.len))
+                }
+            },
+        );
+    }
+}

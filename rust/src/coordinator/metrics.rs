@@ -1,0 +1,150 @@
+//! Engine metrics: latency/throughput accounting for the serving benches.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests_done: u64,
+    tokens_generated: u64,
+    prompt_tokens: u64,
+    decode_calls: u64,
+    prefill_calls: u64,
+    decode_time: Duration,
+    prefill_time: Duration,
+    ttft_us: Vec<f64>,
+    req_latency_us: Vec<f64>,
+    h2o_evictions: u64,
+    wall_start: Option<std::time::Instant>,
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// A point-in-time snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub requests_done: u64,
+    pub tokens_generated: u64,
+    pub prompt_tokens: u64,
+    pub decode_calls: u64,
+    pub prefill_calls: u64,
+    pub decode_time_s: f64,
+    pub prefill_time_s: f64,
+    pub mean_ttft_ms: f64,
+    pub p50_ttft_ms: f64,
+    pub p99_ttft_ms: f64,
+    pub mean_latency_ms: f64,
+    pub decode_tok_per_s: f64,
+    pub wall_tok_per_s: f64,
+    pub h2o_evictions: u64,
+}
+
+impl Metrics {
+    pub fn start_clock(&self) {
+        let mut i = self.inner.lock().unwrap();
+        if i.wall_start.is_none() {
+            i.wall_start = Some(std::time::Instant::now());
+        }
+    }
+
+    pub fn record_decode(&self, d: Duration, lanes: u64) {
+        let mut i = self.inner.lock().unwrap();
+        i.decode_calls += 1;
+        i.decode_time += d;
+        i.tokens_generated += lanes;
+    }
+
+    pub fn record_prefill(&self, d: Duration, tokens: u64) {
+        let mut i = self.inner.lock().unwrap();
+        i.prefill_calls += 1;
+        i.prefill_time += d;
+        i.prompt_tokens += tokens;
+    }
+
+    pub fn record_finish(&self, ttft: Option<Duration>, total: Duration) {
+        let mut i = self.inner.lock().unwrap();
+        i.requests_done += 1;
+        if let Some(t) = ttft {
+            i.ttft_us.push(t.as_micros() as f64);
+        }
+        i.req_latency_us.push(total.as_micros() as f64);
+    }
+
+    pub fn record_evictions(&self, n: u64) {
+        self.inner.lock().unwrap().h2o_evictions += n;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        use crate::util::{mean, percentile};
+        let i = self.inner.lock().unwrap();
+        let decode_s = i.decode_time.as_secs_f64();
+        let wall_s = i.wall_start.map(|w| w.elapsed().as_secs_f64()).unwrap_or(0.0);
+        Snapshot {
+            requests_done: i.requests_done,
+            tokens_generated: i.tokens_generated,
+            prompt_tokens: i.prompt_tokens,
+            decode_calls: i.decode_calls,
+            prefill_calls: i.prefill_calls,
+            decode_time_s: decode_s,
+            prefill_time_s: i.prefill_time.as_secs_f64(),
+            mean_ttft_ms: mean(&i.ttft_us) / 1e3,
+            p50_ttft_ms: percentile(&i.ttft_us, 50.0) / 1e3,
+            p99_ttft_ms: percentile(&i.ttft_us, 99.0) / 1e3,
+            mean_latency_ms: mean(&i.req_latency_us) / 1e3,
+            decode_tok_per_s: if decode_s > 0.0 {
+                i.tokens_generated as f64 / decode_s
+            } else {
+                0.0
+            },
+            wall_tok_per_s: if wall_s > 0.0 {
+                (i.tokens_generated + i.prompt_tokens) as f64 / wall_s
+            } else {
+                0.0
+            },
+            h2o_evictions: i.h2o_evictions,
+        }
+    }
+}
+
+impl Snapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} gen_tokens={} prompt_tokens={} decode_calls={} prefill_calls={}\n\
+             decode {:.2}s ({:.1} tok/s) prefill {:.2}s | wall {:.1} tok/s\n\
+             ttft mean {:.2}ms p50 {:.2}ms p99 {:.2}ms | latency mean {:.2}ms | h2o_evictions={}",
+            self.requests_done, self.tokens_generated, self.prompt_tokens,
+            self.decode_calls, self.prefill_calls, self.decode_time_s,
+            self.decode_tok_per_s, self.prefill_time_s, self.wall_tok_per_s,
+            self.mean_ttft_ms, self.p50_ttft_ms, self.p99_ttft_ms,
+            self.mean_latency_ms, self.h2o_evictions,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let m = Metrics::default();
+        m.start_clock();
+        m.record_decode(Duration::from_millis(10), 4);
+        m.record_decode(Duration::from_millis(10), 4);
+        m.record_prefill(Duration::from_millis(5), 32);
+        m.record_finish(Some(Duration::from_millis(15)), Duration::from_millis(50));
+        m.record_evictions(3);
+        let s = m.snapshot();
+        assert_eq!(s.tokens_generated, 8);
+        assert_eq!(s.prompt_tokens, 32);
+        assert_eq!(s.decode_calls, 2);
+        assert_eq!(s.requests_done, 1);
+        assert_eq!(s.h2o_evictions, 3);
+        assert!((s.decode_tok_per_s - 400.0).abs() < 1.0);
+        assert!(s.mean_ttft_ms > 14.0 && s.mean_ttft_ms < 16.0);
+        assert!(!s.report().is_empty());
+    }
+}

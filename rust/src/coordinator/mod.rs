@@ -1,0 +1,26 @@
+//! Layer-3 coordinator: the serving system around the AOT decode step.
+//!
+//! Data flow (continuous batching, vLLM-style):
+//!
+//! ```text
+//! submit() ──► admission queue ──► Scheduler.pack() ──► lanes [0..B)
+//!                                       │ prefill chunks (C tokens/call)
+//!                                       ▼
+//!                              ModelRuntime.prefill/decode
+//!                                       │ attn_acc
+//!                                       ▼
+//!                    KvState per lane ──► H2oPolicy.evict() ──► slot_mask
+//!                                       │ logits
+//!                                       ▼
+//!                        Sampler ──► stream tokens ──► finish/stop
+//! ```
+
+pub mod batcher;
+pub mod engine;
+pub mod h2o;
+pub mod kvcache;
+pub mod metrics;
+pub mod request;
+
+pub use engine::{Engine, EngineConfig};
+pub use request::{FinishReason, GenRequest, GenResult};

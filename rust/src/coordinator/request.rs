@@ -1,0 +1,87 @@
+//! Request/response types and lifecycle states.
+
+use crate::aqua::policy::AquaConfig;
+
+/// A generation request as submitted by a client.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Stop at this byte (e.g. b'\n') if present.
+    pub stop_token: Option<i32>,
+    /// Per-request AQUA override; engine default used when None.
+    pub aqua: Option<AquaConfig>,
+    /// If true, also return per-token logprobs of the *prompt* continuation
+    /// (teacher forcing) instead of sampling — used by the eval harness for
+    /// MC scoring and perplexity.
+    pub score_only: bool,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        GenRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            stop_token: None,
+            aqua: None,
+            score_only: false,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Length,
+    Stop,
+    /// Prompt longer than the KV capacity.
+    PromptTooLong,
+}
+
+/// Completed request.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Log-prob of each *prompt* token given its prefix (teacher-forced),
+    /// starting from prompt position 1. Filled for score_only requests.
+    pub prompt_logprobs: Vec<f32>,
+    /// Log-prob of each generated token.
+    pub gen_logprobs: Vec<f32>,
+    pub finish: FinishReason,
+    /// Wall-clock metrics.
+    pub ttft_us: u64,
+    pub total_us: u64,
+}
+
+/// Per-lane request state inside the engine.
+#[derive(Debug)]
+pub(crate) struct ActiveReq {
+    pub req: GenRequest,
+    /// Next prompt index to feed (prefill progress).
+    pub prompt_fed: usize,
+    /// Generated tokens so far.
+    pub generated: Vec<i32>,
+    pub prompt_logprobs: Vec<f32>,
+    pub gen_logprobs: Vec<f32>,
+    /// Logical position of the next token to write (monotone, drives RoPE).
+    pub next_pos: usize,
+    /// Token to feed on the next decode step.
+    pub pending_token: i32,
+    pub started_at: std::time::Instant,
+    pub first_token_at: Option<std::time::Instant>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let r = GenRequest::new(7, vec![1, 2, 3], 16);
+        assert_eq!(r.id, 7);
+        assert!(r.aqua.is_none());
+        assert!(!r.score_only);
+    }
+}

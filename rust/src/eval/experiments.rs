@@ -1,0 +1,505 @@
+//! Regenerators for every table and figure in the paper's evaluation
+//! (DESIGN.md "Experiment index"). Each function prints the same rows /
+//! series the paper reports and returns the data for tests/benches.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{FromRawBytes, Literal};
+
+use crate::aqua::info_loss::{loss_series, online_projection, Selection};
+use crate::aqua::overlap::overlap_stats;
+use crate::aqua::policy::{AquaConfig, CostModel};
+use crate::bench::Bencher;
+use crate::coordinator::{Engine, EngineConfig};
+use crate::eval::ppl::{perplexity, PplConfig};
+use crate::eval::tasks::{run_task, EvalSummary, TaskSet};
+use crate::runtime::{Artifacts, ModelRuntime};
+use crate::tensor::Tensor;
+
+pub const TASK_ORDER: [&str; 6] = [
+    "knowledge", "arithmetic", "completion", "coreference", "negation", "hard_completion",
+];
+
+// ---------------------------------------------------------------------------
+// npz → Tensor helpers
+// ---------------------------------------------------------------------------
+
+pub fn load_dump(path: &std::path::Path) -> Result<BTreeMap<String, Tensor>> {
+    let entries = Literal::read_npz(path, &()).map_err(|e| anyhow!("reading {path:?}: {e:?}"))?;
+    let mut out = BTreeMap::new();
+    for (name, lit) in entries {
+        let shape = lit.array_shape().map_err(|e| anyhow!("{e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let lit32 = match shape.ty() {
+            xla::ElementType::F32 => lit,
+            _ => lit.convert(xla::ElementType::F32.primitive_type()).map_err(|e| anyhow!("{e:?}"))?,
+        };
+        let data = lit32.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        out.insert(name, Tensor::new(&dims, data)?);
+    }
+    Ok(out)
+}
+
+fn stack_rows(parts: &[&Tensor]) -> Result<Tensor> {
+    let cols = parts[0].cols();
+    let mut data = vec![];
+    for p in parts {
+        anyhow::ensure!(p.cols() == cols, "column mismatch");
+        data.extend_from_slice(p.data());
+    }
+    let rows = data.len() / cols;
+    Tensor::new(&[rows, cols], data)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2 — online-vs-offline projection × slice-vs-magnitude
+// ---------------------------------------------------------------------------
+
+pub struct Fig2Row {
+    pub condition: String,
+    pub series: Vec<(f64, f32)>,
+}
+
+pub fn fig2(arts: &Artifacts, model: &str) -> Result<Vec<Fig2Row>> {
+    let m = arts.model(model)?;
+    let dump = load_dump(&m.calib_dump_npz)?;
+    let gsz = m.config.group_size();
+    // Pool the GQA group's matrices (Q0..Qn + K) from the *held-out eval*
+    // split — the paper's Layer 0, Head 0 analysis.
+    let mut parts: Vec<&Tensor> = vec![];
+    for j in 0..gsz {
+        parts.push(dump.get(&format!("eval_l0_q{j}")).context("dump missing eval q")?);
+    }
+    parts.push(dump.get("eval_l0_k").context("dump missing eval k")?);
+    let data = stack_rows(&parts)?;
+    let p_offline = dump.get("proj_l0_g0").context("dump missing proj")?;
+    let p_online = online_projection(&data)?;
+
+    let ratios = [0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0];
+    let mut rows = vec![];
+    for (pname, p) in [("Same Matrix (online SVD)", &p_online), ("Different Dataset (offline P)", p_offline)] {
+        for (sname, sel) in [("Top-K by Dimension", Selection::ByDimension),
+                             ("Top-K by Magnitude", Selection::ByMagnitude)] {
+            rows.push(Fig2Row {
+                condition: format!("{pname} / {sname}"),
+                series: loss_series(&data, p, &ratios, sel)?,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn print_fig2(rows: &[Fig2Row]) {
+    println!("# Figure 2 — mean information-retention loss (L0, group 0)");
+    print!("{:<48}", "condition \\ k/d");
+    for (r, _) in &rows[0].series {
+        print!(" {r:>7.3}");
+    }
+    println!();
+    for row in rows {
+        print!("{:<48}", row.condition);
+        for (_, l) in &row.series {
+            print!(" {l:>7.4}");
+        }
+        println!();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3/4 — cross-lingual transfer of the offline projection
+// ---------------------------------------------------------------------------
+
+pub struct Fig3Row {
+    pub matrix: String,
+    pub language: String,
+    pub series: Vec<(f64, f32)>,
+}
+
+pub fn fig3(arts: &Artifacts, model: &str) -> Result<Vec<Fig3Row>> {
+    let m = arts.model(model)?;
+    let dump = load_dump(&m.calib_dump_npz)?;
+    let p = dump.get("proj_l0_g0").context("missing proj")?;
+    let gsz = m.config.group_size();
+    let ratios = [0.125, 0.25, 0.5, 0.75, 1.0];
+    let mut rows = vec![];
+    let mut matrices: Vec<(String, String)> = vec![("K".into(), "k".into())];
+    for j in 0..gsz {
+        matrices.push((format!("Q{j}"), format!("q{j}")));
+    }
+    for (label, key) in &matrices {
+        for (lang, tag) in [("anglish (calibration lang)", "eval"), ("devan (cross-lingual)", "devan")] {
+            let data = dump
+                .get(&format!("{tag}_l0_{key}"))
+                .with_context(|| format!("missing {tag}_l0_{key}"))?;
+            rows.push(Fig3Row {
+                matrix: label.clone(),
+                language: lang.to_string(),
+                series: loss_series(data, p, &ratios, Selection::ByMagnitude)?,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn print_fig3(rows: &[Fig3Row]) {
+    println!("# Figure 3/4 — cross-lingual info-retention loss (offline P, magnitude top-k)");
+    print!("{:<10}{:<28}", "matrix", "language");
+    for (r, _) in &rows[0].series {
+        print!(" {r:>7.3}");
+    }
+    println!();
+    for row in rows {
+        print!("{:<10}{:<28}", row.matrix, row.language);
+        for (_, l) in &row.series {
+            print!(" {l:>7.4}");
+        }
+        println!();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Figure 5 — magnitude-vs-PCA overlap
+// ---------------------------------------------------------------------------
+
+pub fn fig5(arts: &Artifacts, model: &str) -> Result<Vec<(String, Vec<crate::aqua::overlap::OverlapStats>)>> {
+    let m = arts.model(model)?;
+    let dump = load_dump(&m.calib_dump_npz)?;
+    let p = dump.get("proj_last_g0").context("missing last-layer proj")?;
+    let fracs = [0.125, 0.25, 0.5, 0.75];
+    let mut out = vec![];
+    for (label, key) in [("Query (Q0, last layer)", "eval_last_q0"), ("Key (last layer)", "eval_last_k")] {
+        let data = dump.get(key).with_context(|| format!("missing {key}"))?;
+        let mut stats = vec![];
+        for &kf in &fracs {
+            for &kp in &fracs {
+                stats.push(overlap_stats(data, p, kf, kp));
+            }
+        }
+        out.push((label.to_string(), stats));
+    }
+    Ok(out)
+}
+
+pub fn print_fig5(rows: &[(String, Vec<crate::aqua::overlap::OverlapStats>)]) {
+    println!("# Figure 5 — overlap ρ between top-K magnitude dims and top-K' PCA dims (L{{last}})");
+    for (label, stats) in rows {
+        println!("\n{label}:");
+        println!("{:>8} {:>8} {:>8} {:>8} {:>8} {:>8}", "K/d", "K'/d", "mean", "p10", "p50", "p90");
+        for s in stats {
+            println!(
+                "{:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3}",
+                s.k_frac, s.kp_frac, s.mean, s.p10, s.p50, s.p90
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tables 1/2/3 — benchmark sweeps through the engine
+// ---------------------------------------------------------------------------
+
+/// One table row: the 6 task accuracies + perplexity for a knob setting.
+pub struct TableRow {
+    pub label: String,
+    pub summaries: Vec<EvalSummary>,
+    pub ppl: f64,
+}
+
+pub struct SweepOptions {
+    pub batch: usize,
+    pub items_per_task: usize,
+    pub ppl_windows: usize,
+    pub tasks: Vec<String>,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            batch: 4,
+            items_per_task: 60,
+            ppl_windows: 8,
+            tasks: TASK_ORDER.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+pub fn eval_config(
+    arts: &Artifacts,
+    rt: &Arc<ModelRuntime>,
+    aqua: AquaConfig,
+    label: &str,
+    opt: &SweepOptions,
+) -> Result<TableRow> {
+    let mut engine = Engine::new(
+        rt.clone(),
+        EngineConfig { batch: opt.batch, aqua, ..Default::default() },
+    )?;
+    let mut summaries = vec![];
+    for tname in &opt.tasks {
+        let (path, analog) = arts
+            .tasks
+            .get(tname)
+            .ok_or_else(|| anyhow!("task '{tname}' missing from manifest"))?;
+        let set = TaskSet::load(tname, analog, path)?.truncated(opt.items_per_task);
+        summaries.push(run_task(&mut engine, &set)?);
+    }
+    let corpus = std::fs::read(arts.corpus_path("valid")?)?;
+    let ppl = perplexity(
+        &mut engine,
+        &corpus,
+        PplConfig { window: 256, windows: opt.ppl_windows },
+    )?;
+    crate::log_info!("config '{label}': {}", engine.metrics.snapshot().report());
+    Ok(TableRow { label: label.to_string(), summaries, ppl })
+}
+
+pub fn print_table(title: &str, rows: &[TableRow]) {
+    println!("# {title}");
+    print!("{:<26}", "config");
+    for t in &rows[0].summaries {
+        print!(" {:>16}", format!("{}({})", t.task, t.analog_of));
+    }
+    println!(" {:>9}", "ppl");
+    for r in rows {
+        print!("{:<26}", r.label);
+        for s in &r.summaries {
+            print!(" {:>16}", format!("{:.3}±{:.3}", s.acc, s.stderr));
+        }
+        println!(" {:>9.3}", r.ppl);
+    }
+}
+
+/// Table 1 / 4 — standalone AQUA sweep.
+pub fn table1(arts: &Artifacts, model: &str, ratios: &[f64], opt: &SweepOptions) -> Result<Vec<TableRow>> {
+    let rt = Arc::new(ModelRuntime::load(arts.model(model)?)?);
+    let mut rows = vec![eval_config(arts, &rt, AquaConfig::baseline(), "B (standard attn)", opt)?];
+    for &r in ratios {
+        let aqua = AquaConfig { k_ratio: r, ..Default::default() };
+        rows.push(eval_config(arts, &rt, aqua, &format!("k_ratio={r:.2}"), opt)?);
+    }
+    Ok(rows)
+}
+
+/// Table 2 / 5 — AQUA-H2O grid.
+pub fn table2(
+    arts: &Artifacts,
+    model: &str,
+    h2o_ratios: &[f64],
+    k_ratios: &[f64],
+    opt: &SweepOptions,
+) -> Result<Vec<TableRow>> {
+    let rt = Arc::new(ModelRuntime::load(arts.model(model)?)?);
+    let mut rows = vec![];
+    for &h in h2o_ratios {
+        for &k in k_ratios {
+            let aqua = AquaConfig { k_ratio: k, h2o_ratio: h, ..Default::default() };
+            rows.push(eval_config(
+                arts, &rt, aqua,
+                &format!("H2O={h:.2} k={k:.2}"),
+                opt,
+            )?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Table 3 / 6 — AQUA-Memory grid (static slice + dynamic top-k).
+pub fn table3(
+    arts: &Artifacts,
+    model: &str,
+    s_ratios: &[f64],
+    k_ratios: &[f64],
+    opt: &SweepOptions,
+) -> Result<Vec<TableRow>> {
+    let rt = Arc::new(ModelRuntime::load(arts.model(model)?)?);
+    let mut rows = vec![eval_config(arts, &rt, AquaConfig::baseline(), "Full Attn (E=1.000)", opt)?];
+    for &s in s_ratios {
+        for &k in k_ratios {
+            let aqua = AquaConfig { k_ratio: k, s_ratio: s, ..Default::default() };
+            rows.push(eval_config(
+                arts, &rt, aqua,
+                &format!("S={s:.2} k={k:.2} E={:.3}", aqua.effective_ratio()),
+                opt,
+            )?);
+        }
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Table 7 — qualitative generations vs k_ratio
+// ---------------------------------------------------------------------------
+
+pub fn table7(arts: &Artifacts, model: &str, prompt: &str, ratios: &[f64]) -> Result<Vec<(String, String)>> {
+    use crate::coordinator::GenRequest;
+    use crate::tokenizer::ByteTokenizer;
+    let rt = Arc::new(ModelRuntime::load(arts.model(model)?)?);
+    let tok = ByteTokenizer;
+    let mut out = vec![];
+    let mut engine = Engine::new(rt.clone(), EngineConfig { batch: 1, ..Default::default() })?;
+    for &r in ratios {
+        let label = if r >= 1.0 { "1.0 (baseline)".to_string() } else { format!("{r:.2}") };
+        let aqua = if r >= 1.0 {
+            AquaConfig::baseline()
+        } else {
+            AquaConfig { k_ratio: r, ..Default::default() }
+        };
+        engine.with_aqua(aqua);
+        let mut req = GenRequest::new(1000 + (r * 100.0) as u64, tok.encode(prompt), 96);
+        req.stop_token = Some(b'\n' as i32);
+        let res = engine.run_batch(vec![req])?.remove(0);
+        out.push((label, tok.decode(&res.tokens)));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Ablation — projection source (DESIGN.md "design choices")
+// ---------------------------------------------------------------------------
+
+pub struct AblationRow {
+    pub source: String,
+    pub series: Vec<(f64, f32)>,
+}
+
+/// The paper's P pools the GQA group's queries *and* the shared key
+/// (§6.3); LoKi-style calibration uses keys only. This ablation builds P
+/// from (a) keys only, (b) queries only, (c) the paper's combined stack —
+/// each from the first half of the dump — and measures magnitude-selection
+/// L_info on the *query* matrices of the held-out second half (queries are
+/// what AQUA's selection reads, so misalignment shows up there).
+pub fn ablation_projection_source(arts: &Artifacts, model: &str) -> Result<Vec<AblationRow>> {
+    let m = arts.model(model)?;
+    let dump = load_dump(&m.calib_dump_npz)?;
+    let gsz = m.config.group_size();
+
+    let split = |t: &Tensor| -> (Tensor, Tensor) {
+        let half = t.rows() / 2;
+        let cols = t.cols();
+        let a = Tensor::new(&[half, cols], t.data()[..half * cols].to_vec()).unwrap();
+        let b = Tensor::new(&[t.rows() - half, cols], t.data()[half * cols..].to_vec()).unwrap();
+        (a, b)
+    };
+
+    let k_t = dump.get("eval_l0_k").context("missing eval k")?;
+    let (k_fit, _k_eval) = split(k_t);
+    let mut q_fit_parts = vec![];
+    let mut q_eval_parts = vec![];
+    for j in 0..gsz {
+        let q = dump.get(&format!("eval_l0_q{j}")).context("missing eval q")?;
+        let (a, b) = split(q);
+        q_fit_parts.push(a);
+        q_eval_parts.push(b);
+    }
+    let q_fit_refs: Vec<&Tensor> = q_fit_parts.iter().collect();
+    let q_fit = stack_rows(&q_fit_refs)?;
+    let mut combined_refs: Vec<&Tensor> = q_fit_parts.iter().collect();
+    combined_refs.push(&k_fit);
+    let combined = stack_rows(&combined_refs)?;
+    let q_eval_refs: Vec<&Tensor> = q_eval_parts.iter().collect();
+    let eval_q = stack_rows(&q_eval_refs)?;
+
+    let ratios = [0.125, 0.25, 0.5, 0.75];
+    let mut rows = vec![];
+    for (name, fit) in [
+        ("keys only (LoKi-style)", &k_fit),
+        ("queries only", &q_fit),
+        ("queries+key combined (AQUA §6.3)", &combined),
+    ] {
+        let p = crate::tensor::svd::projection_from_data(fit)?;
+        rows.push(AblationRow {
+            source: name.to_string(),
+            series: loss_series(&eval_q, &p, &ratios, Selection::ByMagnitude)?,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print_ablation(rows: &[AblationRow]) {
+    println!("# Ablation — projection calibration source (held-out query L_info, magnitude top-k)");
+    print!("{:<38}", "P fitted on \\ k/d");
+    for (r, _) in &rows[0].series {
+        print!(" {r:>7.3}");
+    }
+    println!();
+    for row in rows {
+        print!("{:<38}", row.source);
+        for (_, l) in &row.series {
+            print!(" {l:>7.4}");
+        }
+        println!();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// §5 break-even measurement
+// ---------------------------------------------------------------------------
+
+pub struct BreakevenRow {
+    pub d: usize,
+    pub k: usize,
+    pub paper_bound: Option<usize>,
+    pub measured_crossover: Option<usize>,
+}
+
+/// Measure where the native sparse AQUA scores (+ per-step projection)
+/// become cheaper than the dense baseline, vs the paper's analytic bound.
+pub fn breakeven(d_values: &[usize], k_fracs: &[f64], bencher: &Bencher) -> Vec<BreakevenRow> {
+    use crate::aqua::native;
+    use crate::util::prng::Rng;
+    let mut rng = Rng::new(99);
+    let mut rows = vec![];
+    for &d in d_values {
+        let p: Vec<f32> = rng.normal_vec(d * d, (d as f32).powf(-0.5));
+        for &kf in k_fracs {
+            let k = ((kf * d as f64).round() as usize).clamp(1, d);
+            let model = CostModel { d_head: d };
+            let mut crossover = None;
+            let mut seq = 16usize;
+            while seq <= 1 << 14 {
+                let q: Vec<f32> = rng.normal_vec(d, 1.0);
+                let keys: Vec<f32> = rng.normal_vec(seq * d, 1.0);
+                let mut out = vec![0.0f32; seq];
+                let dense = bencher.run(&format!("dense d{d} s{seq}"), || {
+                    native::dense_scores(&q, &keys, seq, d, &mut out);
+                    crate::bench::black_box(&out);
+                });
+                let mut qh = vec![0.0f32; d];
+                let aqua = bencher.run(&format!("aqua d{d} k{k} s{seq}"), || {
+                    // per-step cost: project q, select, sparse dot
+                    native::project(&q, &p, d, &mut qh);
+                    native::aqua_scores_sparse(&qh, &keys, seq, d, k, &mut out);
+                    crate::bench::black_box(&out);
+                });
+                if aqua.mean_ns < dense.mean_ns {
+                    crossover = Some(seq);
+                    break;
+                }
+                seq *= 2;
+            }
+            rows.push(BreakevenRow {
+                d,
+                k,
+                paper_bound: model.paper_breakeven(k),
+                measured_crossover: crossover,
+            });
+        }
+    }
+    rows
+}
+
+pub fn print_breakeven(rows: &[BreakevenRow]) {
+    println!("# §5 break-even: AQUA vs standard scores (native kernels)");
+    println!("{:>6} {:>6} {:>16} {:>20}", "d", "k", "paper i+1 bound", "measured crossover");
+    for r in rows {
+        println!(
+            "{:>6} {:>6} {:>16} {:>20}",
+            r.d,
+            r.k,
+            r.paper_bound.map(|b| b.to_string()).unwrap_or_else(|| "never".into()),
+            r.measured_crossover.map(|c| format!("<= {c}")).unwrap_or_else(|| "none<=16384".into()),
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation harness: WikiText-analog perplexity + SynthBench tasks,
+//! scored exactly like the EleutherAI lm-evaluation-harness (MC by summed
+//! continuation logprob, generation by greedy exact-match).
+
+pub mod experiments;
+pub mod ppl;
+pub mod tasks;
+
+pub use tasks::{EvalSummary, TaskItem, TaskSet};

@@ -1,0 +1,57 @@
+//! WikiText-analog perplexity: teacher-forced NLL over held-out corpus
+//! windows, exp(mean NLL) — the paper's `WikiText (ppl ↓)` column.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Engine, GenRequest};
+
+/// Configuration for a perplexity run.
+#[derive(Debug, Clone, Copy)]
+pub struct PplConfig {
+    /// Window length in bytes (tokens).
+    pub window: usize,
+    /// Number of windows (evenly strided over the corpus).
+    pub windows: usize,
+}
+
+impl Default for PplConfig {
+    fn default() -> Self {
+        PplConfig { window: 256, windows: 16 }
+    }
+}
+
+/// Compute perplexity of the engine's model over `corpus` bytes.
+pub fn perplexity(engine: &mut Engine, corpus: &[u8], cfg: PplConfig) -> Result<f64> {
+    anyhow::ensure!(corpus.len() > cfg.window + 1, "corpus smaller than one window");
+    let stride = ((corpus.len() - cfg.window - 1) / cfg.windows.max(1)).max(1);
+    let mut reqs = vec![];
+    for w in 0..cfg.windows {
+        let start = (w * stride).min(corpus.len() - cfg.window - 1);
+        let ids: Vec<i32> = corpus[start..start + cfg.window].iter().map(|&b| b as i32).collect();
+        let mut r = GenRequest::new(w as u64 + 1, ids, 0);
+        r.score_only = true;
+        reqs.push(r);
+    }
+    let results = engine.run_batch(reqs).context("perplexity scoring")?;
+    let mut nll = 0.0f64;
+    let mut n = 0usize;
+    for res in &results {
+        for &lp in &res.prompt_logprobs {
+            nll -= lp as f64;
+            n += 1;
+        }
+    }
+    anyhow::ensure!(n > 0, "no scored tokens");
+    Ok((nll / n as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults() {
+        let c = PplConfig::default();
+        assert!(c.window > 0 && c.windows > 0);
+    }
+}

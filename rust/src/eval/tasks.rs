@@ -1,0 +1,208 @@
+//! SynthBench task loading + scoring through the engine.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{Engine, GenRequest};
+use crate::tokenizer::ByteTokenizer;
+use crate::util::json::Json;
+
+/// One benchmark item.
+#[derive(Debug, Clone)]
+pub enum TaskItem {
+    /// Multiple-choice: argmax over summed logprob of each choice
+    /// continuation given the prompt.
+    Mc { prompt: String, choices: Vec<String>, answer: usize },
+    /// Greedy generation, exact match against target.
+    Gen { prompt: String, target: String },
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskSet {
+    pub name: String,
+    /// Which paper benchmark this task stands in for (e.g. "MMLU").
+    pub analog_of: String,
+    pub items: Vec<TaskItem>,
+}
+
+impl TaskSet {
+    pub fn load(name: &str, analog_of: &str, path: impl AsRef<Path>) -> Result<TaskSet> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading task file {:?}", path.as_ref()))?;
+        let mut items = vec![];
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line).with_context(|| format!("task line {}", lineno + 1))?;
+            match j.req_str("type")? {
+                "mc" => {
+                    let choices = j
+                        .get("choices")
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("mc item missing choices"))?
+                        .iter()
+                        .map(|c| c.as_str().unwrap_or("").to_string())
+                        .collect::<Vec<_>>();
+                    items.push(TaskItem::Mc {
+                        prompt: j.req_str("prompt")?.to_string(),
+                        choices,
+                        answer: j.req_i64("answer")? as usize,
+                    });
+                }
+                "gen" => items.push(TaskItem::Gen {
+                    prompt: j.req_str("prompt")?.to_string(),
+                    target: j.req_str("target")?.to_string(),
+                }),
+                t => bail!("unknown task type '{t}'"),
+            }
+        }
+        Ok(TaskSet { name: name.to_string(), analog_of: analog_of.to_string(), items })
+    }
+
+    pub fn truncated(mut self, n: usize) -> TaskSet {
+        self.items.truncate(n);
+        self
+    }
+}
+
+/// Accuracy summary (mean ± standard error, the paper's format).
+#[derive(Debug, Clone)]
+pub struct EvalSummary {
+    pub task: String,
+    pub analog_of: String,
+    pub n: usize,
+    pub acc: f64,
+    pub stderr: f64,
+}
+
+impl EvalSummary {
+    fn from_hits(task: &str, analog: &str, hits: usize, n: usize) -> EvalSummary {
+        let acc = hits as f64 / n.max(1) as f64;
+        let stderr = if n > 1 { (acc * (1.0 - acc) / n as f64).sqrt() } else { 0.0 };
+        EvalSummary { task: task.to_string(), analog_of: analog.to_string(), n, acc, stderr }
+    }
+}
+
+/// Score a task set through the engine.
+///
+/// MC items submit one `score_only` request per choice (prompt+choice) and
+/// compare the summed logprob over the choice's byte span. Gen items greedy
+/// decode `target.len()+2` bytes and exact-match the prefix.
+pub fn run_task(engine: &mut Engine, set: &TaskSet) -> Result<EvalSummary> {
+    let tok = ByteTokenizer;
+    let mut hits = 0usize;
+    let mut next_id = 1u64;
+
+    // Build all requests first so the continuous batcher can pack lanes.
+    enum Pending {
+        Mc { item: usize, choice: usize, prompt_len: usize },
+        Gen { item: usize },
+    }
+    let mut reqs = vec![];
+    let mut meta = vec![];
+    for (i, item) in set.items.iter().enumerate() {
+        match item {
+            TaskItem::Mc { prompt, choices, .. } => {
+                for (c, choice) in choices.iter().enumerate() {
+                    let full = format!("{prompt}{choice}");
+                    let ids = tok.encode(&full);
+                    let mut r = GenRequest::new(next_id, ids, 0);
+                    r.score_only = true;
+                    next_id += 1;
+                    meta.push(Pending::Mc { item: i, choice: c, prompt_len: prompt.len() });
+                    reqs.push(r);
+                }
+            }
+            TaskItem::Gen { prompt, target } => {
+                let ids = tok.encode(prompt);
+                let mut r = GenRequest::new(next_id, ids, target.len() + 2);
+                r.stop_token = Some(b'\n' as i32);
+                next_id += 1;
+                meta.push(Pending::Gen { item: i });
+                reqs.push(r);
+            }
+        }
+    }
+
+    let results = engine.run_batch(reqs)?;
+
+    // Collate MC scores per item.
+    let mut mc_scores: Vec<Vec<(usize, f64)>> = vec![vec![]; set.items.len()];
+    for (res, m) in results.iter().zip(&meta) {
+        match m {
+            Pending::Mc { item, choice, prompt_len } => {
+                // prompt_logprobs[t] is logP(prompt[t+1] | prefix); the
+                // choice span starts at byte prompt_len, i.e. entries
+                // prompt_len-1 .. end. Length-normalized (lm-eval acc_norm)
+                // so shorter choices get no free ride.
+                let start = prompt_len.saturating_sub(1).min(res.prompt_logprobs.len());
+                let span = &res.prompt_logprobs[start..];
+                let lp: f64 = span.iter().map(|&x| x as f64).sum::<f64>()
+                    / span.len().max(1) as f64;
+                mc_scores[*item].push((*choice, lp));
+            }
+            Pending::Gen { item } => {
+                if let TaskItem::Gen { target, .. } = &set.items[*item] {
+                    let text = ByteTokenizer.decode(&res.tokens);
+                    if text.starts_with(target.as_str()) {
+                        hits += 1;
+                    }
+                }
+            }
+        }
+    }
+    for (i, item) in set.items.iter().enumerate() {
+        if let TaskItem::Mc { answer, .. } = item {
+            if mc_scores[i].is_empty() {
+                continue;
+            }
+            let best = mc_scores[i]
+                .iter()
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap()
+                .0;
+            if best == *answer {
+                hits += 1;
+            }
+        }
+    }
+    Ok(EvalSummary::from_hits(&set.name, &set.analog_of, hits, set.items.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_jsonl() {
+        let dir = std::env::temp_dir().join(format!("aqua_tasks_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.jsonl");
+        std::fs::write(
+            &p,
+            r#"{"type": "mc", "prompt": "the sky is", "choices": [" blue", " loud"], "answer": 0}
+{"type": "gen", "prompt": "2 plus 2 equals", "target": " 4"}
+"#,
+        )
+        .unwrap();
+        let t = TaskSet::load("demo", "MMLU", &p).unwrap();
+        assert_eq!(t.items.len(), 2);
+        match &t.items[0] {
+            TaskItem::Mc { choices, answer, .. } => {
+                assert_eq!(choices.len(), 2);
+                assert_eq!(*answer, 0);
+            }
+            _ => panic!("expected mc"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn summary_stderr() {
+        let s = EvalSummary::from_hits("t", "X", 30, 60);
+        assert!((s.acc - 0.5).abs() < 1e-12);
+        assert!(s.stderr > 0.0 && s.stderr < 0.1);
+    }
+}

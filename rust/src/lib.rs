@@ -1,0 +1,44 @@
+//! # aqua-serve — AQUA attention serving stack (paper reproduction)
+//!
+//! Layer-3 of the three-layer reproduction of *AQUA: Attention via QUery
+//! mAgnitudes for Memory and Compute Efficient Inference in LLMs*.
+//!
+//! The rust side owns the entire request path: request admission,
+//! continuous batching, prefill/decode scheduling, the KV-slot manager with
+//! the H2O heavy-hitter eviction policy, sampling, metrics, and the PJRT
+//! runtime that executes the AOT-compiled JAX/Pallas decode step. Python is
+//! build-time only (`make artifacts`).
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — JSON, PRNG, logging, small substrates (no external deps
+//!   beyond `xla`/`anyhow` are available offline).
+//! * [`tensor`] — row-major f32 tensors, one-sided Jacobi SVD, top-k,
+//!   softmax: the numerical substrate for the figure analyses and the
+//!   native kernels.
+//! * [`tokenizer`] — byte-level tokenizer.
+//! * [`runtime`] — PJRT client, artifact manifest, executable registry.
+//! * [`model`] — model configs, parameter loading, sampling.
+//! * [`aqua`] — the paper's algorithm in native rust: policy knobs +
+//!   cost model (§5), sparse/dense score kernels, information-retention
+//!   loss (§6.2), magnitude/PCA overlap (§7, Fig. 5).
+//! * [`coordinator`] — engine, scheduler, batcher, KV cache, H2O.
+//! * [`server`] — minimal HTTP/1.1 front-end.
+//! * [`eval`] — perplexity + SynthBench harness (the paper's tables).
+//! * [`bench`] — criterion-lite measurement harness.
+
+pub mod aqua;
+pub mod bench;
+pub mod coordinator;
+pub mod eval;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod tokenizer;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};
+
+/// Default artifacts directory (relative to the repo root / CWD).
+pub const ARTIFACTS_DIR: &str = "artifacts";

@@ -1,0 +1,223 @@
+//! `aqua` — CLI for the AQUA serving stack.
+//!
+//! Subcommands (see README):
+//!   serve       start the HTTP server
+//!   generate    one-off generation from a prompt
+//!   eval        run one SynthBench task / perplexity at given knobs
+//!   table1..3   regenerate the paper's Tables 1/4, 2/5, 3/6
+//!   table7      qualitative generations vs k_ratio
+//!   fig2 fig3 fig5   regenerate the paper's figures (printed series)
+//!   breakeven   §5 break-even measurement (native kernels)
+//!   selftest    engine smoke test against the artifacts
+
+mod cli;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use aqua_serve::aqua::policy::AquaConfig;
+use aqua_serve::bench::Bencher;
+use aqua_serve::coordinator::engine::EngineHandle;
+use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use aqua_serve::eval::experiments as exp;
+use aqua_serve::eval::ppl::{perplexity, PplConfig};
+use aqua_serve::eval::tasks::{run_task, TaskSet};
+use aqua_serve::runtime::{Artifacts, ModelRuntime};
+use aqua_serve::tokenizer::ByteTokenizer;
+use cli::Args;
+
+const USAGE: &str = "usage: aqua <serve|generate|eval|table1|table2|table3|table7|fig2|fig3|fig5|ablation|breakeven|selftest> [flags]
+common flags: --artifacts DIR --model NAME --k-ratio R --s-ratio R --h2o-ratio R --batch N --items N --fast";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    }
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn aqua_from(args: &Args) -> Result<AquaConfig> {
+    Ok(AquaConfig {
+        k_ratio: args.f64("k-ratio", 1.0)?,
+        s_ratio: args.f64("s-ratio", 0.0)?,
+        h2o_ratio: args.f64("h2o-ratio", 1.0)?,
+        use_projection: !args.switch("identity-proj"),
+    })
+}
+
+fn sweep_opts(args: &Args) -> Result<exp::SweepOptions> {
+    let mut opt = exp::SweepOptions {
+        batch: args.usize("batch", 4)?,
+        items_per_task: args.usize("items", 60)?,
+        ppl_windows: args.usize("ppl-windows", 8)?,
+        ..Default::default()
+    };
+    if args.switch("fast") {
+        opt.items_per_task = opt.items_per_task.min(12);
+        opt.ppl_windows = 2;
+    }
+    Ok(opt)
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let arts_dir = args.str("artifacts", aqua_serve::ARTIFACTS_DIR);
+    let model = args.str("model", "llama-analog");
+
+    match args.subcommand.as_str() {
+        "serve" => {
+            let addr = args.str("addr", "127.0.0.1:8080");
+            let aqua = aqua_from(&args)?;
+            let batch = args.usize("batch", 4)?;
+            let arts = Artifacts::load(&arts_dir)?;
+            let mart = arts.model(&model)?.clone();
+            let handle = EngineHandle::spawn(move || {
+                let rt = Arc::new(ModelRuntime::load(&mart)?);
+                Engine::new(rt, EngineConfig { batch, aqua, ..Default::default() })
+            });
+            aqua_serve::server::serve(&addr, handle)
+        }
+        "generate" => {
+            let prompt = args.str("prompt", "the capital of ");
+            let max_new = args.usize("max-new", 64)?;
+            let arts = Artifacts::load(&arts_dir)?;
+            let rt = Arc::new(ModelRuntime::load(arts.model(&model)?)?);
+            let mut engine = Engine::new(
+                rt,
+                EngineConfig { batch: 1, aqua: aqua_from(&args)?, ..Default::default() },
+            )?;
+            let tok = ByteTokenizer;
+            let mut req = GenRequest::new(1, tok.encode(&prompt), max_new);
+            req.stop_token = Some(b'\n' as i32);
+            let res = engine.run_batch(vec![req])?.remove(0);
+            println!("{}{}", prompt, tok.decode(&res.tokens));
+            eprintln!("-- {} tokens, ttft {}µs, total {}µs, finish {:?}",
+                      res.tokens.len(), res.ttft_us, res.total_us, res.finish);
+            Ok(())
+        }
+        "eval" => {
+            let arts = Artifacts::load(&arts_dir)?;
+            let rt = Arc::new(ModelRuntime::load(arts.model(&model)?)?);
+            let opt = sweep_opts(&args)?;
+            let mut engine = Engine::new(
+                rt,
+                EngineConfig { batch: opt.batch, aqua: aqua_from(&args)?, ..Default::default() },
+            )?;
+            let task = args.str("task", "all");
+            if task == "ppl" || task == "all" {
+                let corpus = std::fs::read(arts.corpus_path("valid")?)?;
+                let p = perplexity(&mut engine, &corpus,
+                                   PplConfig { window: 256, windows: opt.ppl_windows })?;
+                println!("perplexity(valid) = {p:.3}");
+            }
+            for name in exp::TASK_ORDER {
+                if task != "all" && task != name {
+                    continue;
+                }
+                let (path, analog) = arts.tasks.get(name)
+                    .with_context(|| format!("task {name} missing"))?;
+                let set = TaskSet::load(name, analog, path)?.truncated(opt.items_per_task);
+                let s = run_task(&mut engine, &set)?;
+                println!("{:<18} ({:<14}) acc {:.3} ± {:.3}  (n={})",
+                         s.task, s.analog_of, s.acc, s.stderr, s.n);
+            }
+            eprintln!("{}", engine.metrics.snapshot().report());
+            Ok(())
+        }
+        "table1" => {
+            let arts = Artifacts::load(&arts_dir)?;
+            let ratios = args.f64_list("ratios", &[0.9, 0.75, 0.5, 0.4, 0.3, 0.2, 0.1])?;
+            let rows = exp::table1(&arts, &model, &ratios, &sweep_opts(&args)?)?;
+            exp::print_table(&format!("Table 1/4 — standalone AQUA ({model})"), &rows);
+            Ok(())
+        }
+        "table2" => {
+            let arts = Artifacts::load(&arts_dir)?;
+            let h2o = args.f64_list("h2o-ratios", &[0.25, 0.5, 0.75, 1.0])?;
+            let k = args.f64_list("ratios", &[0.3, 0.5, 0.75, 1.0])?;
+            let rows = exp::table2(&arts, &model, &h2o, &k, &sweep_opts(&args)?)?;
+            exp::print_table(&format!("Table 2/5 — AQUA-H2O ({model})"), &rows);
+            Ok(())
+        }
+        "table3" => {
+            let arts = Artifacts::load(&arts_dir)?;
+            let s = args.f64_list("s-ratios", &[0.1, 0.25])?;
+            let k = args.f64_list("ratios", &[0.75, 0.9, 1.0])?;
+            let rows = exp::table3(&arts, &model, &s, &k, &sweep_opts(&args)?)?;
+            exp::print_table(&format!("Table 3/6 — AQUA-Memory ({model})"), &rows);
+            Ok(())
+        }
+        "table7" => {
+            let arts = Artifacts::load(&arts_dir)?;
+            let prompt = args.str("prompt", "the capital of ");
+            let ratios = args.f64_list("ratios", &[1.0, 0.9, 0.75, 0.5, 0.4, 0.3, 0.2])?;
+            println!("# Table 7 — qualitative generations (greedy), prompt: {prompt:?}");
+            for (label, text) in exp::table7(&arts, &model, &prompt, &ratios)? {
+                println!("k_ratio {label:<16} | {text:?}");
+            }
+            Ok(())
+        }
+        "fig2" => {
+            let arts = Artifacts::load(&arts_dir)?;
+            exp::print_fig2(&exp::fig2(&arts, &model)?);
+            Ok(())
+        }
+        "fig3" => {
+            let arts = Artifacts::load(&arts_dir)?;
+            exp::print_fig3(&exp::fig3(&arts, &model)?);
+            Ok(())
+        }
+        "fig5" => {
+            let arts = Artifacts::load(&arts_dir)?;
+            exp::print_fig5(&exp::fig5(&arts, &model)?);
+            Ok(())
+        }
+        "ablation" => {
+            let arts = Artifacts::load(&arts_dir)?;
+            exp::print_ablation(&exp::ablation_projection_source(&arts, &model)?);
+            Ok(())
+        }
+        "breakeven" => {
+            let bencher = if args.switch("fast") { Bencher::quick() } else { Bencher::default() };
+            let ds = args
+                .f64_list("d", &[32.0, 64.0, 128.0])?
+                .into_iter()
+                .map(|d| d as usize)
+                .collect::<Vec<_>>();
+            let kf = args.f64_list("k-fracs", &[0.125, 0.25, 0.5, 0.75, 0.875])?;
+            exp::print_breakeven(&exp::breakeven(&ds, &kf, &bencher));
+            Ok(())
+        }
+        "selftest" => {
+            let arts = Artifacts::load(&arts_dir)?;
+            let rt = Arc::new(ModelRuntime::load(arts.model(&model)?)?);
+            let mut engine = Engine::new(rt, EngineConfig { batch: 4, ..Default::default() })?;
+            let tok = ByteTokenizer;
+            let reqs: Vec<GenRequest> = (0..6)
+                .map(|i| {
+                    let mut r = GenRequest::new(
+                        i + 1,
+                        tok.encode("the capital of "),
+                        24,
+                    );
+                    r.stop_token = Some(b'\n' as i32);
+                    r
+                })
+                .collect();
+            let results = engine.run_batch(reqs)?;
+            for r in &results {
+                println!("req {}: {:?} ({:?})", r.id, tok.decode(&r.tokens), r.finish);
+            }
+            println!("{}", engine.metrics.snapshot().report());
+            println!("selftest OK");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}

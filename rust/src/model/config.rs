@@ -1,0 +1,92 @@
+//! Model configuration, mirrored 1:1 from `python/compile/config.py`
+//! through the manifest.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    /// KV-cache capacity S (slots per lane).
+    pub max_seq: usize,
+    pub train_seq: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(name: &str, j: &Json) -> Result<ModelConfig> {
+        let num = |k: &str| -> Result<usize> { Ok(j.req_i64(k)? as usize) };
+        let cfg = ModelConfig {
+            name: name.to_string(),
+            vocab: num("vocab")?,
+            d_model: num("d_model")?,
+            n_layers: num("n_layers")?,
+            n_q_heads: num("n_q_heads")?,
+            n_kv_heads: num("n_kv_heads")?,
+            d_head: num("d_head")?,
+            d_ff: num("d_ff")?,
+            rope_theta: j.get("rope_theta").as_f64().unwrap_or(10_000.0),
+            norm_eps: j.get("norm_eps").as_f64().unwrap_or(1e-5),
+            max_seq: num("max_seq")?,
+            train_seq: num("train_seq")?,
+        };
+        if cfg.n_q_heads % cfg.n_kv_heads != 0 {
+            bail!("n_q_heads must be a multiple of n_kv_heads");
+        }
+        Ok(cfg)
+    }
+
+    /// GQA group size N_Q (paper §6.3).
+    pub fn group_size(&self) -> usize {
+        self.n_q_heads / self.n_kv_heads
+    }
+
+    pub fn is_mha(&self) -> bool {
+        self.n_kv_heads == self.n_q_heads
+    }
+
+    /// Elements in one lane's K or V cache row: S × n_kv × d.
+    pub fn cache_row_elems(&self) -> usize {
+        self.max_seq * self.n_kv_heads * self.d_head
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{"vocab":256,"d_model":128,"n_layers":4,"n_q_heads":4,
+                "n_kv_heads":1,"d_head":32,"d_ff":512,"rope_theta":10000.0,
+                "norm_eps":1e-5,"max_seq":512,"train_seq":192}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_and_derived() {
+        let c = ModelConfig::from_json("llama-analog", &sample()).unwrap();
+        assert_eq!(c.group_size(), 4);
+        assert!(!c.is_mha());
+        assert_eq!(c.cache_row_elems(), 512 * 32);
+    }
+
+    #[test]
+    fn rejects_bad_heads() {
+        let mut j = sample();
+        if let Json::Obj(o) = &mut j {
+            o.insert("n_kv_heads".into(), Json::Num(3.0));
+        }
+        assert!(ModelConfig::from_json("x", &j).is_err());
+    }
+}

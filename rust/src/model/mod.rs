@@ -1,0 +1,7 @@
+//! Model-side types: configuration (mirrored from the manifest), parameter
+//! loading, and sampling.
+
+pub mod config;
+pub mod sampling;
+
+pub use config::ModelConfig;

@@ -1,0 +1,90 @@
+//! Sampling strategies over the decode logits.
+
+use crate::tensor::softmax::{argmax, softmax_inplace};
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampler {
+    /// Deterministic argmax (the paper's Table-7 qualitative setting,
+    /// `do_sample=False`).
+    Greedy,
+    /// Temperature sampling (τ > 0).
+    Temperature(f32),
+    /// Top-k then temperature.
+    TopK(usize, f32),
+}
+
+impl Sampler {
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> i32 {
+        match *self {
+            Sampler::Greedy => argmax(logits) as i32,
+            Sampler::Temperature(t) => {
+                let mut p: Vec<f32> = logits.iter().map(|&x| x / t.max(1e-6)).collect();
+                softmax_inplace(&mut p);
+                weighted_pick(&p, rng)
+            }
+            Sampler::TopK(k, t) => {
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+                idx.truncate(k.max(1));
+                let mut p: Vec<f32> = idx.iter().map(|&i| logits[i] / t.max(1e-6)).collect();
+                softmax_inplace(&mut p);
+                let j = weighted_pick(&p, rng) as usize;
+                idx[j] as i32
+            }
+        }
+    }
+}
+
+fn weighted_pick(probs: &[f32], rng: &mut Rng) -> i32 {
+    let mut r = rng.f32();
+    for (i, &p) in probs.iter().enumerate() {
+        r -= p;
+        if r <= 0.0 {
+            return i as i32;
+        }
+    }
+    (probs.len() - 1) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut rng = Rng::new(0);
+        let logits = vec![0.1, 5.0, -1.0];
+        assert_eq!(Sampler::Greedy.sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut rng = Rng::new(1);
+        let logits = vec![0.0, 10.0, 0.0];
+        for _ in 0..50 {
+            assert_eq!(Sampler::Temperature(0.1).sample(&logits, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn topk_restricts_support() {
+        let mut rng = Rng::new(2);
+        let logits = vec![1.0, 2.0, 3.0, -5.0];
+        for _ in 0..100 {
+            let s = Sampler::TopK(2, 1.0).sample(&logits, &mut rng);
+            assert!(s == 2 || s == 1, "sampled outside top-2: {s}");
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let mut rng = Rng::new(3);
+        let logits = vec![1.0f32, 1.0, 1.0];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[Sampler::Temperature(1.0).sample(&logits, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

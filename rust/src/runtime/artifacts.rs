@@ -1,0 +1,172 @@
+//! Artifact manifest: the contract between the python build path and the
+//! rust request path (written by `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::config::ModelConfig;
+use crate::util::json::Json;
+
+/// One model's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelArtifacts {
+    pub config: ModelConfig,
+    pub params_npz: PathBuf,
+    pub proj_npz: PathBuf,
+    pub calib_dump_npz: PathBuf,
+    /// tag ("decode_b1", "prefill_b4_c32", ...) -> HLO text path
+    pub hlo: BTreeMap<String, PathBuf>,
+    pub param_order: Vec<String>,
+    pub decode_batches: Vec<usize>,
+    pub prefill_chunk: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelArtifacts>,
+    /// split name -> corpus path
+    pub corpus: BTreeMap<String, PathBuf>,
+    /// task name -> (path, analog_of)
+    pub tasks: BTreeMap<String, (PathBuf, String)>,
+}
+
+impl Artifacts {
+    /// Load `<root>/manifest.json`. Paths inside the manifest are relative
+    /// to the directory the build ran from (the repo root), so we resolve
+    /// them against `root`'s parent.
+    pub fn load(root: impl AsRef<Path>) -> Result<Artifacts> {
+        let root = root.as_ref().to_path_buf();
+        let manifest_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        // Manifest paths are relative to the artifacts dir itself.
+        let base = root.clone();
+        let fix = |s: &str| -> PathBuf {
+            let p = PathBuf::from(s);
+            if p.is_absolute() {
+                p
+            } else {
+                base.join(s)
+            }
+        };
+
+        let mut models = BTreeMap::new();
+        let mobj = j
+            .get("models")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing 'models'"))?;
+        for (name, m) in mobj {
+            let config = ModelConfig::from_json(name, m.get("config"))?;
+            let mut hlo = BTreeMap::new();
+            if let Some(h) = m.get("hlo").as_obj() {
+                for (tag, p) in h {
+                    hlo.insert(tag.clone(), fix(p.as_str().unwrap_or_default()));
+                }
+            }
+            let param_order = m
+                .get("param_order")
+                .as_arr()
+                .ok_or_else(|| anyhow!("missing param_order"))?
+                .iter()
+                .map(|v| v.as_str().unwrap_or_default().to_string())
+                .collect();
+            let decode_batches = m
+                .get("decode_batches")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_i64()).map(|v| v as usize).collect())
+                .unwrap_or_else(|| vec![1]);
+            models.insert(
+                name.clone(),
+                ModelArtifacts {
+                    config,
+                    params_npz: fix(m.req_str("params")?),
+                    proj_npz: fix(m.req_str("proj")?),
+                    calib_dump_npz: fix(m.req_str("calib_dump")?),
+                    hlo,
+                    param_order,
+                    decode_batches,
+                    prefill_chunk: m.get("prefill_chunk").as_i64().unwrap_or(32) as usize,
+                },
+            );
+        }
+
+        let mut corpus = BTreeMap::new();
+        if let Some(c) = j.get("corpus").as_obj() {
+            for (name, e) in c {
+                corpus.insert(name.clone(), fix(e.req_str("path")?));
+            }
+        }
+        let mut tasks = BTreeMap::new();
+        if let Some(t) = j.get("tasks").as_obj() {
+            for (name, e) in t {
+                tasks.insert(
+                    name.clone(),
+                    (fix(e.req_str("path")?), e.get("analog_of").as_str().unwrap_or("").to_string()),
+                );
+            }
+        }
+        Ok(Artifacts { root, models, corpus, tasks })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn corpus_path(&self, split: &str) -> Result<&PathBuf> {
+        self.corpus.get(split).ok_or_else(|| anyhow!("corpus split '{split}' missing"))
+    }
+}
+
+impl ModelArtifacts {
+    pub fn hlo_path(&self, tag: &str) -> Result<&PathBuf> {
+        self.hlo.get(tag).ok_or_else(|| {
+            anyhow!("HLO '{tag}' not built (have: {:?})", self.hlo.keys().collect::<Vec<_>>())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("aqua_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+          "models": {"m": {
+            "config": {"name":"m","vocab":256,"d_model":128,"n_layers":4,
+                       "n_q_heads":4,"n_kv_heads":1,"d_head":32,"d_ff":512,
+                       "rope_theta":10000.0,"norm_eps":1e-5,"max_seq":512,
+                       "train_seq":192,"group_size":4},
+            "params": "artifacts/m/params.npz",
+            "proj": "artifacts/m/proj.npz",
+            "calib_dump": "artifacts/m/calib_dump.npz",
+            "param_order": ["embed","final_norm"],
+            "hlo": {"decode_b1": "artifacts/m/decode_b1.hlo.txt"},
+            "decode_batches": [1,4],
+            "prefill_chunk": 32
+          }},
+          "corpus": {"valid": {"path": "artifacts/corpus/valid.txt"}},
+          "tasks": {"knowledge": {"path": "artifacts/tasks/knowledge.jsonl",
+                                   "analog_of": "MMLU"}}
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let a = Artifacts::load(&dir).unwrap();
+        let m = a.model("m").unwrap();
+        assert_eq!(m.config.d_head, 32);
+        assert_eq!(m.config.group_size(), 4);
+        assert_eq!(m.decode_batches, vec![1, 4]);
+        assert!(a.model("nope").is_err());
+        assert_eq!(a.tasks["knowledge"].1, "MMLU");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

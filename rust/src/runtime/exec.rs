@@ -1,0 +1,363 @@
+//! Compiled-executable registry and typed call wrappers.
+//!
+//! One `ModelRuntime` per served model: it owns the PJRT client, the
+//! parameter/projection literals (uploaded once), and lazily-compiled
+//! decode/prefill executables per batch size. The KV caches round-trip as
+//! literals between steps (on the CPU plugin "device" memory is host
+//! memory, so this is a memcpy; see EXPERIMENTS.md §Perf for the measured
+//! overhead).
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifacts::ModelArtifacts;
+use crate::model::config::ModelConfig;
+
+/// Outputs of one decode step.
+pub struct DecodeOut {
+    /// [B, vocab] row-major.
+    pub logits: Vec<f32>,
+    /// Updated cache literals, fed back on the next call.
+    pub k_cache: Literal,
+    pub v_cache: Literal,
+    /// [L, B, S] attention mass per slot this step (H2O food).
+    pub attn_acc: Vec<f32>,
+}
+
+/// Outputs of one prefill chunk.
+pub struct PrefillOut {
+    /// [B, C, vocab] row-major.
+    pub logits: Vec<f32>,
+    pub k_cache: Literal,
+    pub v_cache: Literal,
+    /// [B, S] updated slot mask as computed by the model.
+    pub slot_mask: Vec<f32>,
+    /// [L, B, S] summed over the chunk.
+    pub attn_acc: Vec<f32>,
+}
+
+pub struct ModelRuntime {
+    pub cfg: ModelConfig,
+    client: PjRtClient,
+    /// Parameter buffers in manifest order, uploaded once and device-
+    /// resident for every call (§Perf: avoids ~40 serialized host→device
+    /// transfers per decode step).
+    params: Vec<PjRtBuffer>,
+    /// [L, n_kv, d, d] calibrated projection (device-resident).
+    proj: PjRtBuffer,
+    /// [L, n_kv, d, d] identity projection (exact-baseline mode).
+    proj_identity: PjRtBuffer,
+    /// tag -> compiled executable (lazy).
+    exes: Mutex<HashMap<String, std::sync::Arc<PjRtLoadedExecutable>>>,
+    hlo_paths: BTreeMap<String, std::path::PathBuf>,
+    pub prefill_chunk: usize,
+}
+
+impl ModelRuntime {
+    pub fn load(art: &ModelArtifacts) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let named: BTreeMap<String, Literal> =
+            Literal::read_npz(&art.params_npz, &())
+                .map_err(|e| anyhow!("reading {:?}: {e:?}", art.params_npz))?
+                .into_iter()
+                .collect();
+        let mut params = Vec::with_capacity(art.param_order.len());
+        for name in &art.param_order {
+            let lit = named
+                .get(name)
+                .ok_or_else(|| anyhow!("param '{name}' missing from params.npz"))?;
+            params.push(upload(&client, lit).with_context(|| format!("param '{name}'"))?);
+        }
+        let proj_lit = Literal::read_npz_by_name(&art.proj_npz, &(), &["proj"])
+            .map_err(|e| anyhow!("reading {:?}: {e:?}", art.proj_npz))?
+            .remove(0);
+        let proj = upload(&client, &proj_lit).context("proj")?;
+        let cfg = art.config.clone();
+        let proj_identity = upload(&client, &identity_proj_literal(&cfg)?)?;
+        Ok(ModelRuntime {
+            cfg,
+            client,
+            params,
+            proj,
+            proj_identity,
+            exes: Mutex::new(HashMap::new()),
+            hlo_paths: art.hlo.clone(),
+            prefill_chunk: art.prefill_chunk,
+        })
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Compile (or fetch) the executable for `tag` ("decode_b4", ...).
+    pub fn executable(&self, tag: &str) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.lock().unwrap().get(tag) {
+            return Ok(e.clone());
+        }
+        let path = self
+            .hlo_paths
+            .get(tag)
+            .ok_or_else(|| anyhow!("no HLO artifact '{tag}'"))?;
+        let t0 = std::time::Instant::now();
+        let exe = compile_hlo(&self.client, path)?;
+        crate::log_info!("compiled {tag} in {}", crate::util::fmt_duration(t0.elapsed()));
+        let arc = std::sync::Arc::new(exe);
+        self.exes.lock().unwrap().insert(tag.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Fresh zeroed KV cache literals + slot mask for batch `b`.
+    pub fn empty_cache(&self, b: usize) -> Result<(Literal, Literal)> {
+        let c = &self.cfg;
+        let dims = [c.n_layers, b, c.max_seq, c.n_kv_heads, c.d_head];
+        let n: usize = dims.iter().product();
+        let zeros = vec![0.0f32; n];
+        let k = literal_f32(&zeros, &dims)?;
+        let v = literal_f32(&zeros, &dims)?;
+        Ok((k, v))
+    }
+
+    fn common_args(&self, use_projection: bool) -> Vec<&PjRtBuffer> {
+        let mut args: Vec<&PjRtBuffer> = self.params.iter().collect();
+        args.push(if use_projection { &self.proj } else { &self.proj_identity });
+        args
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
+    }
+
+    fn upload_literal(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        upload(&self.client, lit)
+    }
+
+    /// One decode step for a batch of lanes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode(
+        &self,
+        b: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        k_cache: &Literal,
+        v_cache: &Literal,
+        slot_mask: &[f32],
+        k_dims: i32,
+        dim_keep: &[f32],
+        use_projection: bool,
+    ) -> Result<DecodeOut> {
+        let c = &self.cfg;
+        if tokens.len() != b || pos.len() != b || slot_mask.len() != b * c.max_seq {
+            bail!("decode arg shape mismatch");
+        }
+        let exe = self.executable(&format!("decode_b{b}"))?;
+        let tok = self.upload_i32(tokens, &[b])?;
+        let posl = self.upload_i32(pos, &[b])?;
+        let mask = self.upload_f32(slot_mask, &[b, c.max_seq])?;
+        let kd = self.upload_literal(&Literal::scalar(k_dims))?;
+        let keep = self.upload_f32(dim_keep, &[c.d_head])?;
+        let kc = self.upload_literal(k_cache)?;
+        let vc = self.upload_literal(v_cache)?;
+
+        let mut args = self.common_args(use_projection);
+        args.extend([&tok, &posl, &kc, &vc, &mask, &kd, &keep]);
+
+        let result = exe
+            .execute_b::<&PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("decode execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("decode output transfer: {e:?}"))?;
+        let mut outs = tuple.to_tuple().map_err(|e| anyhow!("decode untuple: {e:?}"))?;
+        if outs.len() != 4 {
+            bail!("decode expected 4 outputs, got {}", outs.len());
+        }
+        let attn_acc = outs.pop().unwrap();
+        let v_new = outs.pop().unwrap();
+        let k_new = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        Ok(DecodeOut {
+            logits: logits.to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))?,
+            k_cache: k_new,
+            v_cache: v_new,
+            attn_acc: attn_acc.to_vec::<f32>().map_err(|e| anyhow!("attn_acc: {e:?}"))?,
+        })
+    }
+
+    /// One prefill chunk ([B, C] tokens starting at per-lane pos0).
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill(
+        &self,
+        b: usize,
+        tokens: &[i32],
+        pos0: &[i32],
+        k_cache: &Literal,
+        v_cache: &Literal,
+        slot_mask: &[f32],
+        k_dims: i32,
+        dim_keep: &[f32],
+        use_projection: bool,
+    ) -> Result<PrefillOut> {
+        let c = &self.cfg;
+        let chunk = self.prefill_chunk;
+        if tokens.len() != b * chunk || pos0.len() != b {
+            bail!("prefill arg shape mismatch");
+        }
+        let exe = self.executable(&format!("prefill_b{b}_c{chunk}"))?;
+        let tok = self.upload_i32(tokens, &[b, chunk])?;
+        let posl = self.upload_i32(pos0, &[b])?;
+        let mask = self.upload_f32(slot_mask, &[b, c.max_seq])?;
+        let kd = self.upload_literal(&Literal::scalar(k_dims))?;
+        let keep = self.upload_f32(dim_keep, &[c.d_head])?;
+        let kc = self.upload_literal(k_cache)?;
+        let vc = self.upload_literal(v_cache)?;
+
+        let mut args = self.common_args(use_projection);
+        args.extend([&tok, &posl, &kc, &vc, &mask, &kd, &keep]);
+
+        let result = exe
+            .execute_b::<&PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("prefill execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("prefill output transfer: {e:?}"))?;
+        let mut outs = tuple.to_tuple().map_err(|e| anyhow!("prefill untuple: {e:?}"))?;
+        if outs.len() != 5 {
+            bail!("prefill expected 5 outputs, got {}", outs.len());
+        }
+        let attn_acc = outs.pop().unwrap();
+        let slot = outs.pop().unwrap();
+        let v_new = outs.pop().unwrap();
+        let k_new = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        Ok(PrefillOut {
+            logits: logits.to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))?,
+            k_cache: k_new,
+            v_cache: v_new,
+            slot_mask: slot.to_vec::<f32>().map_err(|e| anyhow!("slot_mask: {e:?}"))?,
+            attn_acc: attn_acc.to_vec::<f32>().map_err(|e| anyhow!("attn_acc: {e:?}"))?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow!("literal_f32 reshape {dims:?}: {e:?}"))
+}
+
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow!("literal_i32 reshape {dims:?}: {e:?}"))
+}
+
+/// Host→device upload via raw bytes (`buffer_from_host_literal` in this
+/// xla_extension build mis-sizes non-default-layout literals; raw-bytes
+/// transfer is layout-explicit and safe).
+fn upload(client: &PjRtClient, lit: &Literal) -> Result<PjRtBuffer> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("{e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let data = lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            client
+                .buffer_from_host_buffer(&data, &dims, None)
+                .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
+        }
+        xla::ElementType::S32 => {
+            let data = lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+            client
+                .buffer_from_host_buffer(&data, &dims, None)
+                .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
+        }
+        t => bail!("upload: unsupported element type {t:?}"),
+    }
+}
+
+fn identity_proj_literal(cfg: &ModelConfig) -> Result<Literal> {
+    let d = cfg.d_head;
+    let mut data = vec![0.0f32; cfg.n_layers * cfg.n_kv_heads * d * d];
+    for l in 0..cfg.n_layers {
+        for g in 0..cfg.n_kv_heads {
+            let base = (l * cfg.n_kv_heads + g) * d * d;
+            for i in 0..d {
+                data[base + i * d + i] = 1.0;
+            }
+        }
+    }
+    literal_f32(&data, &[cfg.n_layers, cfg.n_kv_heads, d, d])
+}
+
+pub fn compile_hlo(client: &PjRtClient, path: impl AsRef<Path>) -> Result<PjRtLoadedExecutable> {
+    let path = path.as_ref();
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))
+        .with_context(|| "run `make artifacts`?")?;
+    let comp = XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_helpers_shape_and_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let l = literal_i32(&[7, 8], &[2]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7, 8]);
+        // element-count mismatch is an error
+        assert!(literal_f32(&[1.0], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn identity_proj_is_block_identity() {
+        let cfg = crate::model::config::ModelConfig {
+            name: "t".into(),
+            vocab: 8,
+            d_model: 8,
+            n_layers: 2,
+            n_q_heads: 2,
+            n_kv_heads: 1,
+            d_head: 4,
+            d_ff: 8,
+            rope_theta: 1e4,
+            norm_eps: 1e-5,
+            max_seq: 8,
+            train_seq: 4,
+        };
+        let lit = identity_proj_literal(&cfg).unwrap();
+        let v = lit.to_vec::<f32>().unwrap();
+        assert_eq!(v.len(), 2 * 1 * 4 * 4);
+        for l in 0..2 {
+            for i in 0..4 {
+                for j in 0..4 {
+                    let got = v[l * 16 + i * 4 + j];
+                    assert_eq!(got, if i == j { 1.0 } else { 0.0 });
+                }
+            }
+        }
+    }
+}

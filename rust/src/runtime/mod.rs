@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts` and
+//! executes them on the request path.
+//!
+//! * [`artifacts`] — manifest.json parsing, model/corpus/task locations.
+//! * [`exec`] — HLO-text → compiled executable registry + typed call
+//!   wrappers for the decode/prefill entry points.
+
+pub mod artifacts;
+pub mod exec;
+
+pub use artifacts::{Artifacts, ModelArtifacts};
+pub use exec::{DecodeOut, ModelRuntime, PrefillOut};

@@ -1,0 +1,157 @@
+//! Hand-rolled HTTP/1.1 subset: one request per connection (Connection:
+//! close), request bodies via Content-Length. Enough for the JSON API and
+//! for `curl`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: String,
+}
+
+impl Response {
+    pub fn text(status: u16, body: &str) -> Response {
+        Response { status, content_type: "text/plain", body: body.to_string() }
+    }
+
+    pub fn json(status: u16, body: &Json) -> Response {
+        Response { status, content_type: "application/json", body: body.to_string() }
+    }
+}
+
+fn status_line(code: u16) -> &'static str {
+    match code {
+        200 => "200 OK",
+        400 => "400 Bad Request",
+        404 => "404 Not Found",
+        500 => "500 Internal Server Error",
+        504 => "504 Gateway Timeout",
+        _ => "500 Internal Server Error",
+    }
+}
+
+/// Parse one request from a reader.
+pub fn parse_request<R: BufRead>(reader: &mut R) -> Result<Request> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let (method, path) = match (parts.next(), parts.next()) {
+        (Some(m), Some(p)) => (m.to_string(), p.to_string()),
+        _ => bail!("malformed request line: {line:?}"),
+    };
+    let mut headers = vec![];
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+    let len: usize = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.parse().ok())
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(Request { method, path, headers, body: String::from_utf8_lossy(&body).into_owned() })
+}
+
+/// Serialize a response.
+pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        status_line(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        resp.body
+    )?;
+    Ok(())
+}
+
+/// Read one request off the stream, dispatch, write the response.
+pub fn handle_connection<F>(stream: TcpStream, handler: F) -> Result<()>
+where
+    F: FnOnce(&Request) -> Response,
+{
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let req = parse_request(&mut reader)?;
+    let resp = handler(&req);
+    let mut stream = stream;
+    write_response(&mut stream, &resp)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 14\r\n\r\n{\"prompt\":\"a\"}";
+        let mut r = BufReader::new(Cursor::new(raw.as_bytes()));
+        let req = parse_request(&mut r).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/generate");
+        assert_eq!(req.body, "{\"prompt\":\"a\"}");
+        assert_eq!(req.header("host"), Some("x"));
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let raw = "GET /stats HTTP/1.1\r\n\r\n";
+        let mut r = BufReader::new(Cursor::new(raw.as_bytes()));
+        let req = parse_request(&mut r).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let mut out = vec![];
+        write_response(&mut out, &Response::text(200, "hi")).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.ends_with("\r\n\r\nhi"));
+        assert!(s.contains("Content-Length: 2"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let mut r = BufReader::new(Cursor::new(b"\r\n".as_slice()));
+        assert!(parse_request(&mut r).is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Minimal HTTP/1.1 front-end (hyper/tokio unavailable offline).
+//!
+//! `POST /generate {"prompt": "...", "max_new_tokens": N}` → generated text
+//! `GET  /stats` → engine metrics snapshot
+//! `GET  /healthz` → ok
+//!
+//! The engine is !Send (PJRT handles), so it lives on its own thread behind
+//! an `EngineHandle`; the accept loop and per-connection workers only move
+//! plain data.
+
+pub mod http;
+
+use std::net::TcpListener;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::engine::{EngineCmd, EngineHandle};
+use crate::coordinator::GenRequest;
+use crate::tokenizer::ByteTokenizer;
+use crate::util::json::Json;
+use http::{Request, Response};
+
+/// Serve until the process is killed. `handle` must already be running.
+pub fn serve(addr: &str, handle: EngineHandle) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    crate::log_info!("listening on http://{addr}");
+    let cmd_tx = handle.cmd_tx.clone();
+    let results = Arc::new(Mutex::new(std::collections::HashMap::new()));
+
+    // Result pump: engine thread -> shared map.
+    {
+        let results = results.clone();
+        std::thread::spawn(move || {
+            while let Ok(res) = handle.result_rx.recv() {
+                results.lock().unwrap().insert(res.id, res);
+            }
+        });
+    }
+
+    let next_id = Arc::new(Mutex::new(1u64));
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let cmd_tx = cmd_tx.clone();
+        let results = results.clone();
+        let next_id = next_id.clone();
+        std::thread::spawn(move || {
+            let _ = http::handle_connection(stream, |req| {
+                route(req, &cmd_tx, &results, &next_id)
+            });
+        });
+    }
+    Ok(())
+}
+
+fn route(
+    req: &Request,
+    cmd_tx: &mpsc::Sender<EngineCmd>,
+    results: &Arc<Mutex<std::collections::HashMap<u64, crate::coordinator::GenResult>>>,
+    next_id: &Arc<Mutex<u64>>,
+) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::text(200, "ok"),
+        ("GET", "/stats") => {
+            let (tx, rx) = mpsc::channel();
+            if cmd_tx.send(EngineCmd::Stats(tx)).is_err() {
+                return Response::text(500, "engine gone");
+            }
+            match rx.recv_timeout(std::time::Duration::from_secs(5)) {
+                Ok(s) => Response::json(200, &Json::obj(vec![
+                    ("requests_done", Json::Num(s.requests_done as f64)),
+                    ("tokens_generated", Json::Num(s.tokens_generated as f64)),
+                    ("decode_tok_per_s", Json::Num(s.decode_tok_per_s)),
+                    ("mean_ttft_ms", Json::Num(s.mean_ttft_ms)),
+                    ("p99_ttft_ms", Json::Num(s.p99_ttft_ms)),
+                    ("h2o_evictions", Json::Num(s.h2o_evictions as f64)),
+                ])),
+                Err(_) => Response::text(504, "stats timeout"),
+            }
+        }
+        ("POST", "/generate") => {
+            let body = match Json::parse(&req.body) {
+                Ok(b) => b,
+                Err(e) => return Response::text(400, &format!("bad json: {e}")),
+            };
+            let prompt = match body.get("prompt").as_str() {
+                Some(p) => p.to_string(),
+                None => return Response::text(400, "missing 'prompt'"),
+            };
+            let max_new = body.get("max_new_tokens").as_i64().unwrap_or(64) as usize;
+            let id = {
+                let mut g = next_id.lock().unwrap();
+                *g += 1;
+                *g
+            };
+            let tok = ByteTokenizer;
+            let mut r = GenRequest::new(id, tok.encode(&prompt), max_new);
+            r.stop_token = Some(b'\n' as i32);
+            if cmd_tx.send(EngineCmd::Submit(r)).is_err() {
+                return Response::text(500, "engine gone");
+            }
+            // Poll the shared result map (bounded wait).
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+            loop {
+                if let Some(res) = results.lock().unwrap().remove(&id) {
+                    let text = tok.decode(&res.tokens);
+                    return Response::json(200, &Json::obj(vec![
+                        ("id", Json::Num(id as f64)),
+                        ("text", Json::Str(text)),
+                        ("tokens", Json::Num(res.tokens.len() as f64)),
+                        ("ttft_us", Json::Num(res.ttft_us as f64)),
+                        ("total_us", Json::Num(res.total_us as f64)),
+                    ]));
+                }
+                if std::time::Instant::now() > deadline {
+                    return Response::text(504, "generation timeout");
+                }
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+        _ => Response::text(404, "not found"),
+    }
+}

@@ -1,0 +1,170 @@
+//! Minimal row-major f32 tensor. Only what the analyses and native kernels
+//! need: views by row, matmul, transpose, norms, elementwise ops.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut t = Self::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Result<Self> {
+        let c = rows.first().map(|r| r.len()).unwrap_or(0);
+        if rows.iter().any(|r| r.len() != c) {
+            bail!("ragged rows");
+        }
+        Ok(Tensor {
+            shape: vec![rows.len(), c],
+            data: rows.iter().flatten().copied().collect(),
+        })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols() + j]
+    }
+
+    /// Matrix multiply (2-D only): [m,k]·[k,n] -> [m,n].
+    /// ikj loop order with a row accumulator — the cache-friendly layout for
+    /// row-major data.
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || other.shape.len() != 2 || self.cols() != other.rows() {
+            bail!("matmul shape mismatch {:?} x {:?}", self.shape, other.shape);
+        }
+        let (m, k, n) = (self.rows(), self.cols(), other.cols());
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (p, &a) in arow.iter().enumerate().take(k) {
+                let brow = &other.data[p * n..(p + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    pub fn transpose2(&self) -> Result<Tensor> {
+        if self.shape.len() != 2 {
+            bail!("transpose2 wants 2-D");
+        }
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Dot product of two slices.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm of a slice.
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let i = Tensor::eye(2);
+        assert_eq!(a.matmul(&i).unwrap(), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let b = Tensor::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let t = a.transpose2().unwrap().transpose2().unwrap();
+        assert_eq!(a, t);
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(Tensor::new(&[2, 2], vec![1.0]).is_err());
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+    }
+}

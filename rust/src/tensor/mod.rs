@@ -1,0 +1,10 @@
+//! Numerical substrate: row-major f32 tensors + the linear algebra the
+//! figure analyses need (notably a one-sided Jacobi SVD for the paper's
+//! Fig. 2 "online same-matrix SVD" condition).
+
+mod core;
+pub mod softmax;
+pub mod svd;
+pub mod topk;
+
+pub use core::{dot, norm, Tensor};

@@ -1,0 +1,99 @@
+//! Numerically-stable softmax (used by the native kernels and the eval
+//! harness's logprob scoring).
+
+/// In-place stable softmax over a slice.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let m = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    if sum > 0.0 {
+        for x in xs.iter_mut() {
+            *x /= sum;
+        }
+    }
+}
+
+/// log-softmax value at one index (stable), without materializing the
+/// full distribution twice.
+pub fn log_softmax_at(xs: &[f32], idx: usize) -> f32 {
+    let m = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse = xs.iter().map(|&x| (x - m).exp()).sum::<f32>().ln() + m;
+    xs[idx] - lse
+}
+
+/// Argmax index (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::check;
+
+    #[test]
+    fn sums_to_one_and_is_shift_invariant() {
+        check(
+            "softmax-props",
+            100,
+            |g| {
+                let n = 1 + g.rng.below(32);
+                g.vec_f32(n, 3.0)
+            },
+            |v| {
+                let mut a = v.clone();
+                softmax_inplace(&mut a);
+                let s: f32 = a.iter().sum();
+                if (s - 1.0).abs() > 1e-4 {
+                    return Err(format!("sum {s}"));
+                }
+                let mut b: Vec<f32> = v.iter().map(|x| x + 100.0).collect();
+                softmax_inplace(&mut b);
+                for (x, y) in a.iter().zip(&b) {
+                    if (x - y).abs() > 1e-4 {
+                        return Err("not shift invariant".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn handles_extremes() {
+        let mut v = vec![-1e9f32, 0.0, -1e9];
+        softmax_inplace(&mut v);
+        assert!((v[1] - 1.0).abs() < 1e-5);
+        let mut v = vec![1e4f32, 1e4];
+        softmax_inplace(&mut v);
+        assert!((v[0] - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn log_softmax_consistent() {
+        let v = [1.0f32, 2.0, 3.0];
+        let mut s = v.to_vec();
+        softmax_inplace(&mut s);
+        for i in 0..3 {
+            assert!((log_softmax_at(&v, i) - s[i].ln()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

@@ -1,0 +1,160 @@
+//! One-sided Jacobi SVD.
+//!
+//! Needed for the Fig. 2 "online Same-Matrix SVD" condition (paper §6.2):
+//! the ideal-but-impractical baseline computes the projection from the very
+//! activation matrix under evaluation. We only need the right singular
+//! vectors `V` (the principal directions), with columns ordered by
+//! decreasing singular value — the same convention as the python
+//! calibration path's `np.linalg.svd` (validated here by the Gram
+//! reconstruction and dominant-axis tests below).
+//!
+//! One-sided Jacobi orthogonalizes the *columns* of A by right rotations:
+//! A·J₁·J₂·… → A·V = U·Σ, so V is the accumulated rotation product. It is
+//! numerically robust and simple; complexity O(m·n²) per sweep, fine for
+//! the calibration-scale matrices (≤ a few thousand × d_head).
+
+use super::Tensor;
+use anyhow::Result;
+
+/// Result of `svd_right`: right singular vectors (columns) + singular
+/// values, ordered by decreasing σ.
+pub struct SvdRight {
+    /// [n, n]; column j is the j-th principal direction.
+    pub v: Tensor,
+    /// [n] decreasing.
+    pub sigma: Vec<f32>,
+}
+
+/// Compute V and Σ of A = UΣVᵀ for a (tall) [m, n] matrix.
+pub fn svd_right(a: &Tensor, max_sweeps: usize, tol: f32) -> Result<SvdRight> {
+    let (m, n) = (a.rows(), a.cols());
+    // Work on a column-major copy of A (columns contiguous) for cache-
+    // friendly column rotations.
+    let mut w: Vec<Vec<f32>> = (0..n)
+        .map(|j| (0..m).map(|i| a.at2(i, j)).collect())
+        .collect();
+    let mut v = vec![vec![0.0f32; n]; n];
+    for (j, col) in v.iter_mut().enumerate() {
+        col[j] = 1.0;
+    }
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let (x, y) = (w[p][i] as f64, w[q][i] as f64);
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                if apq.abs() <= tol as f64 * (app * aqq).sqrt() {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) entry of WᵀW.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (c, s) = (c as f32, s as f32);
+                for i in 0..m {
+                    let (x, y) = (w[p][i], w[q][i]);
+                    w[p][i] = c * x - s * y;
+                    w[q][i] = s * x + c * y;
+                }
+                for vrow in v.iter_mut() {
+                    let (x, y) = (vrow[p], vrow[q]);
+                    vrow[p] = c * x - s * y;
+                    vrow[q] = s * x + c * y;
+                }
+            }
+        }
+        if off == 0.0 {
+            break;
+        }
+    }
+
+    // Singular values = column norms; sort columns by decreasing σ.
+    let mut sig: Vec<(f32, usize)> = (0..n)
+        .map(|j| (w[j].iter().map(|x| x * x).sum::<f32>().sqrt(), j))
+        .collect();
+    sig.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut vt = Tensor::zeros(&[n, n]);
+    for (newj, &(_, oldj)) in sig.iter().enumerate() {
+        for i in 0..n {
+            vt.data_mut()[i * n + newj] = v[i][oldj];
+        }
+    }
+    Ok(SvdRight { v: vt, sigma: sig.into_iter().map(|(s, _)| s).collect() })
+}
+
+/// Convenience: principal-direction projection matrix P (= V) from a data
+/// matrix, as used by the paper's offline calibration.
+pub fn projection_from_data(data: &Tensor) -> Result<Tensor> {
+    Ok(svd_right(data, 30, 1e-10)?.v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_matrix(rng: &mut Rng, m: usize, n: usize) -> Tensor {
+        Tensor::new(&[m, n], rng.normal_vec(m * n, 1.0)).unwrap()
+    }
+
+    fn assert_orthogonal(v: &Tensor, tol: f32) {
+        let vtv = v.transpose2().unwrap().matmul(v).unwrap();
+        let err = vtv.max_abs_diff(&Tensor::eye(v.rows()));
+        assert!(err < tol, "VᵀV deviates from I by {err}");
+    }
+
+    #[test]
+    fn v_is_orthogonal() {
+        let mut rng = Rng::new(5);
+        let a = random_matrix(&mut rng, 64, 8);
+        let s = svd_right(&a, 30, 1e-10).unwrap();
+        assert_orthogonal(&s.v, 1e-4);
+    }
+
+    #[test]
+    fn sigma_decreasing_and_reconstructs_gram() {
+        let mut rng = Rng::new(6);
+        let a = random_matrix(&mut rng, 100, 6);
+        let s = svd_right(&a, 30, 1e-10).unwrap();
+        for w in s.sigma.windows(2) {
+            assert!(w[0] >= w[1] - 1e-4);
+        }
+        // AᵀA = V Σ² Vᵀ
+        let ata = a.transpose2().unwrap().matmul(&a).unwrap();
+        let mut sig2 = Tensor::zeros(&[6, 6]);
+        for i in 0..6 {
+            sig2.data_mut()[i * 6 + i] = s.sigma[i] * s.sigma[i];
+        }
+        let rec = s.v.matmul(&sig2).unwrap().matmul(&s.v.transpose2().unwrap()).unwrap();
+        let rel = rec.max_abs_diff(&ata) / ata.l2_norm();
+        assert!(rel < 1e-4, "gram reconstruction error {rel}");
+    }
+
+    #[test]
+    fn first_direction_captures_dominant_axis() {
+        // Data concentrated along a known direction -> v₀ ≈ ±that direction.
+        let mut rng = Rng::new(7);
+        let dir = [0.6f32, 0.8, 0.0, 0.0];
+        let rows: Vec<Vec<f32>> = (0..200)
+            .map(|_| {
+                let a = rng.normal() as f32 * 5.0;
+                let noise: Vec<f32> = rng.normal_vec(4, 0.05);
+                (0..4).map(|j| a * dir[j] + noise[j]).collect()
+            })
+            .collect();
+        let a = Tensor::from_rows(&rows).unwrap();
+        let s = svd_right(&a, 30, 1e-10).unwrap();
+        let v0: Vec<f32> = (0..4).map(|i| s.v.at2(i, 0)).collect();
+        let cos = super::super::core::dot(&v0, &dir).abs();
+        assert!(cos > 0.99, "cos = {cos}");
+    }
+}

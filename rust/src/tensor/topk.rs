@@ -1,0 +1,142 @@
+//! Top-k selection utilities (paper Algorithm 1 lines 4-6).
+//!
+//! `topk_indices_by_abs` is the O(d) average selection the paper's
+//! complexity analysis assumes (Blum et al. select / introselect — rust's
+//! `select_nth_unstable` is exactly that).
+
+/// Indices of the k largest |x| entries, ascending index order.
+pub fn topk_indices_by_abs(xs: &[f32], k: usize) -> Vec<usize> {
+    let d = xs.len();
+    let k = k.min(d);
+    if k == 0 {
+        return vec![];
+    }
+    if k == d {
+        return (0..d).collect();
+    }
+    let mut idx: Vec<usize> = (0..d).collect();
+    // Partition so the k largest-|·| are in the first k slots: O(d) average.
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        xs[b].abs().partial_cmp(&xs[a].abs()).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut out = idx[..k].to_vec();
+    out.sort_unstable();
+    out
+}
+
+/// Binary keep-mask (1.0/0.0) from the same selection.
+pub fn topk_mask_by_abs(xs: &[f32], k: usize) -> Vec<f32> {
+    let mut m = vec![0.0f32; xs.len()];
+    for i in topk_indices_by_abs(xs, k) {
+        m[i] = 1.0;
+    }
+    m
+}
+
+/// The runtime-knob *threshold* formulation used by the lowered HLO
+/// (`mask = |x| >= sorted|x|[d-k]`). Exposed so equivalence with the gather
+/// formulation can be property-tested from rust too.
+pub fn threshold_mask_by_abs(xs: &[f32], k: usize) -> Vec<f32> {
+    let d = xs.len();
+    if k >= d {
+        return vec![1.0; d];
+    }
+    if k == 0 {
+        return vec![0.0; d];
+    }
+    let mut mags: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let thr = mags[d - k];
+    xs.iter().map(|x| if x.abs() >= thr { 1.0 } else { 0.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::testkit::check;
+
+    #[test]
+    fn selects_largest() {
+        let xs = [0.1f32, -5.0, 3.0, -0.2, 4.0];
+        assert_eq!(topk_indices_by_abs(&xs, 2), vec![1, 4]);
+        assert_eq!(topk_indices_by_abs(&xs, 0), Vec::<usize>::new());
+        assert_eq!(topk_indices_by_abs(&xs, 5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(topk_indices_by_abs(&xs, 99), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn mask_matches_indices() {
+        let xs = [0.5f32, 2.0, -1.5];
+        assert_eq!(topk_mask_by_abs(&xs, 2), vec![0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn prop_threshold_equals_gather_without_ties() {
+        check(
+            "threshold==gather",
+            200,
+            |g| {
+                let d = 2 + g.rng.below(48);
+                let k = 1 + g.rng.below(d);
+                (g.vec_f32(d, 1.0), k)
+            },
+            |(xs, k)| {
+                let a = topk_mask_by_abs(xs, *k);
+                let b = threshold_mask_by_abs(xs, *k);
+                if a == b {
+                    Ok(())
+                } else {
+                    Err(format!("masks differ for k={k}: {a:?} vs {b:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_mask_keeps_exactly_k() {
+        check(
+            "mask-popcount",
+            200,
+            |g| {
+                let d = 1 + g.rng.below(64);
+                let k = g.rng.below(d + 1);
+                (g.vec_f32(d, 2.0), k)
+            },
+            |(xs, k)| {
+                let kept = topk_mask_by_abs(xs, *k).iter().filter(|&&m| m > 0.5).count();
+                if kept == *k {
+                    Ok(())
+                } else {
+                    Err(format!("kept {kept} != k {k}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_kept_energy_dominates() {
+        // The kept-k subset must hold at least k/d of the total energy.
+        check(
+            "energy-dominance",
+            100,
+            |g| {
+                let d = 4 + g.rng.below(60);
+                let k = 1 + g.rng.below(d);
+                (g.vec_f32(d, 1.0), k)
+            },
+            |(xs, k)| {
+                let mask = topk_mask_by_abs(xs, *k);
+                let kept: f32 = xs.iter().zip(&mask).map(|(x, m)| x * x * m).sum();
+                let total: f32 = xs.iter().map(|x| x * x).sum();
+                let frac = *k as f32 / xs.len() as f32;
+                if kept + 1e-6 >= total * frac {
+                    Ok(())
+                } else {
+                    Err(format!("kept energy {kept} < fair share {}", total * frac))
+                }
+            },
+        );
+        let _ = Rng::new(0); // silence unused import in some cfgs
+    }
+}

@@ -1,0 +1,69 @@
+//! Byte-level tokenizer (vocab = 256).
+//!
+//! The analog models are byte LMs: token id == byte value, mirroring the
+//! build-time python pipeline (latin-1 ↔ byte identity). Kept as a module
+//! so a subword tokenizer could slot in without touching the engine.
+
+/// Vocabulary size shared with the python model definition.
+pub const VOCAB: usize = 256;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        // latin-1 semantics: chars above U+00FF cannot appear in the synthetic
+        // corpora; map them to '?' defensively rather than panic.
+        text.chars()
+            .map(|c| if (c as u32) < 256 { c as u32 as i32 } else { b'?' as i32 })
+            .collect()
+    }
+
+    pub fn encode_bytes(&self, bytes: &[u8]) -> Vec<i32> {
+        bytes.iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&t| char::from_u32((t.clamp(0, 255)) as u32).unwrap())
+            .collect()
+    }
+
+    pub fn decode_bytes(&self, ids: &[i32]) -> Vec<u8> {
+        ids.iter().map(|&t| t.clamp(0, 255) as u8).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "the capital of velor is tamrin .";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_high_bytes() {
+        let t = ByteTokenizer;
+        // devan corpus uses latin-1 bytes 0xA1..0xDA
+        let s: String = (0xA1u32..0xA8).map(|c| char::from_u32(c).unwrap()).collect();
+        assert_eq!(t.decode(&t.encode(&s)), s);
+    }
+
+    #[test]
+    fn non_latin1_mapped_to_question_mark() {
+        let t = ByteTokenizer;
+        assert_eq!(t.encode("€"), vec![b'?' as i32]);
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        let t = ByteTokenizer;
+        for id in t.encode("any text ÿ") {
+            assert!((0..VOCAB as i32).contains(&id));
+        }
+    }
+}

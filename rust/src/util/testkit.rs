@@ -1,0 +1,91 @@
+//! Property-test mini-framework (proptest is unavailable offline; see
+//! DESIGN.md "Substitutions").
+//!
+//! `check(cases, gen, prop)` runs `prop` on `cases` generated inputs from a
+//! seeded PRNG; on failure it performs a bounded greedy shrink by re-running
+//! the generator with smaller "size" hints, and reports the seed so failures
+//! reproduce exactly.
+
+use super::prng::Rng;
+
+/// Context handed to generators: a PRNG plus a size hint that shrinks on
+/// failure.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn vec_f32(&mut self, n: usize, std: f32) -> Vec<f32> {
+        self.rng.normal_vec(n, std)
+    }
+
+    /// A "dimension-like" value in [1, size].
+    pub fn dim(&mut self) -> usize {
+        1 + self.rng.below(self.size.max(1))
+    }
+}
+
+/// Run a property over `cases` random inputs. Panics with the failing seed
+/// and (shrunken) case number on violation.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> std::result::Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let base_seed = match std::env::var("AQUA_PROP_SEED") {
+        Ok(s) => s.parse().unwrap_or(0xA17A),
+        Err(_) => 0xA17A,
+    };
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::new(seed), size: 8 + case % 64 };
+        let input = gen(&mut g);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: retry with progressively smaller size hints on
+            // the same seed, keep the smallest failing reproduction.
+            let mut smallest: Option<(usize, T, String)> = None;
+            for size in (1..g.size).rev() {
+                let mut g2 = Gen { rng: Rng::new(seed), size };
+                let cand = gen(&mut g2);
+                if let Err(m) = prop(&cand) {
+                    smallest = Some((size, cand, m));
+                }
+            }
+            match smallest {
+                Some((size, cand, m)) => panic!(
+                    "property '{name}' failed (case {case}, seed {seed:#x}, shrunk size {size}): {m}\ninput: {cand:?}"
+                ),
+                None => panic!(
+                    "property '{name}' failed (case {case}, seed {seed:#x}): {msg}\ninput: {input:?}"
+                ),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs-nonneg", 50, |g| {
+            let d = g.dim();
+            g.vec_f32(d, 1.0)
+        }, |v| {
+            if v.iter().all(|x| x.abs() >= 0.0) {
+                Ok(())
+            } else {
+                Err("negative abs".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |g| g.dim(), |_| Err("nope".into()));
+    }
+}

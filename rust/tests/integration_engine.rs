@@ -1,0 +1,174 @@
+//! Integration tests over the full stack: artifacts → PJRT runtime →
+//! engine. One #[test] per concern-group, executed sequentially inside
+//! (PJRT handles are !Send; a single ModelRuntime is reused).
+//!
+//! Skipped (pass trivially) when artifacts are not built.
+
+use std::sync::Arc;
+
+use aqua_serve::aqua::policy::AquaConfig;
+use aqua_serve::coordinator::{Engine, EngineConfig, FinishReason, GenRequest};
+use aqua_serve::runtime::{Artifacts, ModelRuntime};
+use aqua_serve::tokenizer::ByteTokenizer;
+
+fn artifacts() -> Option<Artifacts> {
+    let a = Artifacts::load(aqua_serve::ARTIFACTS_DIR).ok()?;
+    Some(a)
+}
+
+fn greedy(engine: &mut Engine, prompt: &str, n: usize) -> (String, FinishReason) {
+    let tok = ByteTokenizer;
+    let mut req = GenRequest::new(1, tok.encode(prompt), n);
+    req.stop_token = Some(b'\n' as i32);
+    let res = engine.run_batch(vec![req]).expect("run").remove(0);
+    (tok.decode(&res.tokens), res.finish)
+}
+
+#[test]
+fn engine_end_to_end() {
+    let Some(arts) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Arc::new(ModelRuntime::load(arts.model("llama-analog").unwrap()).unwrap());
+
+    // --- determinism: greedy generation is reproducible -------------------
+    let mut e1 = Engine::new(rt.clone(), EngineConfig { batch: 1, ..Default::default() }).unwrap();
+    let (a, _) = greedy(&mut e1, "the capital of ", 24);
+    let (b, _) = greedy(&mut e1, "the capital of ", 24);
+    assert_eq!(a, b, "greedy generation must be deterministic");
+    assert!(!a.is_empty());
+
+    // --- batch invariance: B=1 and B=4 lanes give the same greedy text ----
+    let mut e4 = Engine::new(rt.clone(), EngineConfig { batch: 4, ..Default::default() }).unwrap();
+    let tok = ByteTokenizer;
+    let reqs: Vec<GenRequest> = (0..4)
+        .map(|i| {
+            let mut r = GenRequest::new(i + 1, tok.encode("the capital of "), 24);
+            r.stop_token = Some(b'\n' as i32);
+            r
+        })
+        .collect();
+    let results = e4.run_batch(reqs).unwrap();
+    for r in &results {
+        assert_eq!(tok.decode(&r.tokens), a, "lane output differs from B=1 output");
+    }
+
+    // --- mixed-length batch: continuous batching must not cross-talk ------
+    // lanes finish at different times; each result must equal its B=1 run.
+    let prompts = ["the capital of ", "the color of ", "7 plus 5 equals", "the "];
+    let mut singles = vec![];
+    for p in prompts {
+        singles.push(greedy(&mut e1, p, 16).0);
+    }
+    let reqs: Vec<GenRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut r = GenRequest::new(i as u64 + 50, tok.encode(p), 16);
+            r.stop_token = Some(b'\n' as i32);
+            r
+        })
+        .collect();
+    let mixed = e4.run_batch(reqs).unwrap();
+    for (res, single) in mixed.iter().zip(&singles) {
+        assert_eq!(&tok.decode(&res.tokens), single, "lane cross-talk detected");
+    }
+
+    // --- rotation invariance through the whole stack ----------------------
+    // k_ratio=1.0 + calibrated orthogonal P must match the identity-P
+    // baseline (Lemma A.4), end to end.
+    let mut eb = Engine::new(
+        rt.clone(),
+        EngineConfig { batch: 1, aqua: AquaConfig::baseline(), ..Default::default() },
+    )
+    .unwrap();
+    let (base, _) = greedy(&mut eb, "the color of ", 24);
+    let mut ep = Engine::new(
+        rt.clone(),
+        EngineConfig {
+            batch: 1,
+            aqua: AquaConfig { k_ratio: 1.0, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (rot, _) = greedy(&mut ep, "the color of ", 24);
+    assert_eq!(base, rot, "orthogonal projection at k=d changed the output");
+
+    // --- score_only: prompt logprobs are sane ------------------------------
+    let mut req = GenRequest::new(9, tok.encode("the capital of "), 0);
+    req.score_only = true;
+    let res = eb.run_batch(vec![req]).unwrap().remove(0);
+    assert_eq!(res.prompt_logprobs.len(), "the capital of ".len() - 1);
+    assert!(res.prompt_logprobs.iter().all(|&lp| lp <= 0.0 && lp.is_finite()));
+    assert!(res.tokens.is_empty());
+
+    // --- moderate pruning barely moves scores; aggressive pruning does ----
+    let score = |engine: &mut Engine| -> f64 {
+        let mut req = GenRequest::new(11, tok.encode("the capital of "), 0);
+        req.score_only = true;
+        let res = engine.run_batch(vec![req]).unwrap().remove(0);
+        res.prompt_logprobs.iter().map(|&x| x as f64).sum()
+    };
+    let base_lp = score(&mut eb);
+    let mut e75 = Engine::new(
+        rt.clone(),
+        EngineConfig {
+            batch: 1,
+            aqua: AquaConfig { k_ratio: 0.75, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let lp75 = score(&mut e75);
+    let mut e10 = Engine::new(
+        rt.clone(),
+        EngineConfig {
+            batch: 1,
+            aqua: AquaConfig { k_ratio: 0.1, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let lp10 = score(&mut e10);
+    assert!((base_lp - lp75).abs() < (base_lp - lp10).abs(),
+            "k=0.75 ({lp75:.3}) should be closer to baseline ({base_lp:.3}) than k=0.1 ({lp10:.3})");
+
+    // --- H2O eviction engages and output stays sane ------------------------
+    let corpus = std::fs::read(arts.corpus_path("valid").unwrap()).unwrap();
+    let long_prompt = tok.encode_bytes(&corpus[..300]);
+    let mut eh = Engine::new(
+        rt.clone(),
+        EngineConfig {
+            batch: 1,
+            aqua: AquaConfig { k_ratio: 0.75, h2o_ratio: 0.25, ..Default::default() },
+            h2o_recent_window: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut req = GenRequest::new(21, long_prompt, 16);
+    req.stop_token = None;
+    let res = eh.run_batch(vec![req]).unwrap().remove(0);
+    assert_eq!(res.tokens.len(), 16);
+    assert!(eh.metrics.snapshot().h2o_evictions > 0, "H2O at ratio 0.25 must evict");
+
+    // --- request validation -------------------------------------------------
+    let too_long = GenRequest::new(31, vec![1i32; rt.cfg.max_seq + 1], 4);
+    let res = eb.run_batch(vec![too_long]).unwrap().remove(0);
+    assert_eq!(res.finish, FinishReason::PromptTooLong);
+
+    // --- AQUA-Memory: dim slice still produces coherent output -------------
+    let mut em = Engine::new(
+        rt.clone(),
+        EngineConfig {
+            batch: 1,
+            aqua: AquaConfig { k_ratio: 0.9, s_ratio: 0.1, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (mem_out, _) = greedy(&mut em, "the capital of ", 24);
+    assert!(!mem_out.is_empty());
+}

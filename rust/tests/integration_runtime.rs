@@ -1,0 +1,113 @@
+//! Runtime-level integration: HLO loading, decode/prefill consistency,
+//! HLO-vs-native-kernel numeric cross-check. Skips without artifacts.
+
+use aqua_serve::runtime::{Artifacts, ModelRuntime};
+
+#[test]
+fn runtime_decode_prefill_consistency() {
+    let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = ModelRuntime::load(arts.model("llama-analog").unwrap()).unwrap();
+    let cfg = rt.cfg.clone();
+    let d = cfg.d_head;
+    let s_cap = cfg.max_seq;
+    let keep = vec![1.0f32; d];
+
+    // Feed 8 tokens one-by-one via decode; then the same 8 via one prefill
+    // chunk; the resulting logits for the last position must agree.
+    let toks: Vec<i32> = "the blue ".bytes().map(|b| b as i32).collect();
+    let n = toks.len().min(8);
+
+    // decode chain (b=1)
+    let (mut kc, mut vc) = rt.empty_cache(1).unwrap();
+    let mut mask = vec![0.0f32; s_cap];
+    let mut last_logits = vec![];
+    for (i, &t) in toks.iter().take(n).enumerate() {
+        let out = rt
+            .decode(1, &[t], &[i as i32], &kc, &vc, &mask, d as i32, &keep, true)
+            .unwrap();
+        kc = out.k_cache;
+        vc = out.v_cache;
+        mask[i] = 1.0;
+        last_logits = out.logits;
+        // logits finite
+        assert!(last_logits.iter().all(|x| x.is_finite()));
+        // attn mass ≈ n_layers * n_q (each head's row sums to 1)
+        let mass: f32 = out.attn_acc.iter().sum();
+        let expect = (cfg.n_layers * cfg.n_q_heads) as f32;
+        assert!((mass - expect).abs() < 1e-2, "attn mass {mass} vs {expect}");
+    }
+
+    // prefill chunk (b=1), pad to chunk length
+    let chunk = rt.prefill_chunk;
+    let mut ptoks = vec![0i32; chunk];
+    ptoks[..n].copy_from_slice(&toks[..n]);
+    let (kc2, vc2) = rt.empty_cache(1).unwrap();
+    let mask2 = vec![0.0f32; s_cap];
+    let out = rt
+        .prefill(1, &ptoks, &[0], &kc2, &vc2, &mask2, d as i32, &keep, true)
+        .unwrap();
+    let vocab = cfg.vocab;
+    let pre_logits = &out.logits[(n - 1) * vocab..n * vocab];
+    let max_diff = pre_logits
+        .iter()
+        .zip(&last_logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "prefill/decode disagree by {max_diff}");
+
+    // model slot mask marks exactly the chunk's positions
+    assert!(out.slot_mask[..chunk].iter().all(|&m| m > 0.5));
+    assert!(out.slot_mask[chunk..].iter().all(|&m| m < 0.5));
+
+    // knob inputs actually matter: k=2 must change the logits
+    let out_k2 = rt
+        .decode(1, &[toks[0]], &[n as i32], &kc, &vc, &mask, 2, &keep, true)
+        .unwrap();
+    let out_kd = rt
+        .decode(1, &[toks[0]], &[n as i32], &kc, &vc, &mask, d as i32, &keep, true)
+        .unwrap();
+    let diff: f32 = out_k2
+        .logits
+        .iter()
+        .zip(&out_kd.logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(diff > 1e-4, "k_dims input has no effect");
+
+    // AQUA-Memory dim_keep must change cached keys (and logits downstream)
+    let mut keep_sliced = vec![1.0f32; d];
+    for k in keep_sliced.iter_mut().skip(d - d / 4) {
+        *k = 0.0;
+    }
+    let out_mem = rt
+        .decode(1, &[toks[0]], &[n as i32], &kc, &vc, &mask, d as i32, &keep_sliced, true)
+        .unwrap();
+    let diff: f32 = out_mem
+        .logits
+        .iter()
+        .zip(&out_kd.logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(diff > 1e-5, "dim_keep input has no effect");
+}
+
+#[test]
+fn manifest_covers_both_models() {
+    let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    for name in ["llama-analog", "olmoe-analog"] {
+        let m = arts.model(name).unwrap();
+        assert!(m.hlo.contains_key("decode_b1"), "{name} missing decode_b1");
+        assert!(m.hlo.contains_key("decode_b4"), "{name} missing decode_b4");
+        assert!(m.params_npz.exists());
+        assert!(m.proj_npz.exists());
+    }
+    // GQA vs MHA contrast present (the Table 1 architecture axis)
+    assert_eq!(arts.model("llama-analog").unwrap().config.group_size(), 4);
+    assert!(arts.model("olmoe-analog").unwrap().config.is_mha());
+}

@@ -1,0 +1,79 @@
+//! Property tests for the JSON substrate: parse ∘ print == id on random
+//! documents (proptest substitute — see util::testkit).
+
+use aqua_serve::util::json::Json;
+use aqua_serve::util::prng::Rng;
+use aqua_serve::util::testkit::{check, Gen};
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.f64() < 0.5),
+        2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+        3 => {
+            let n = rng.below(12);
+            let s: String = (0..n)
+                .map(|_| {
+                    let choices = ['a', 'Z', '0', ' ', '"', '\\', '\n', 'é', 'ÿ', '😀', '\t'];
+                    choices[rng.below(choices.len())]
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..rng.below(5) {
+                m.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_roundtrip_identity() {
+    check(
+        "json-roundtrip",
+        300,
+        |g: &mut Gen| random_json(&mut g.rng, 3),
+        |doc| {
+            let printed = doc.to_string();
+            let reparsed = Json::parse(&printed).map_err(|e| format!("reparse: {e}"))?;
+            if &reparsed == doc {
+                Ok(())
+            } else {
+                Err(format!("mismatch: {printed}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_printed_is_single_document() {
+    check(
+        "json-no-trailing",
+        100,
+        |g: &mut Gen| random_json(&mut g.rng, 2),
+        |doc| {
+            let printed = doc.to_string();
+            // appending junk must fail (parser consumes exactly one doc)
+            if Json::parse(&format!("{printed} x")).is_ok() {
+                return Err("accepted trailing garbage".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn parses_real_manifest_shapes() {
+    // The exact structural shape aot.py emits.
+    let doc = r#"{"models":{"llama-analog":{"config":{"d_head":32},"hlo":{"decode_b1":"llama-analog/decode_b1.hlo.txt"},"param_order":["embed"]}},"train":{"llama-analog":{"curve":[{"step":0,"train_loss":5.55}],"wall_s":296.7}}}"#;
+    let j = Json::parse(doc).unwrap();
+    assert_eq!(j.get("models").get("llama-analog").get("config").get("d_head").as_i64(), Some(32));
+    assert_eq!(
+        j.get("train").get("llama-analog").get("curve").idx(0).get("train_loss").as_f64(),
+        Some(5.55)
+    );
+}

@@ -1,0 +1,116 @@
+//! Figure/analysis regenerators produce the paper's qualitative *shape*
+//! (the actual series are recorded in EXPERIMENTS.md). Skips without
+//! artifacts.
+
+use aqua_serve::eval::experiments as exp;
+use aqua_serve::runtime::Artifacts;
+
+#[test]
+fn fig2_shape_matches_paper() {
+    let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rows = exp::fig2(&arts, "llama-analog").unwrap();
+    assert_eq!(rows.len(), 4);
+    let find = |s: &str| {
+        rows.iter()
+            .find(|r| r.condition.contains(s))
+            .unwrap_or_else(|| panic!("missing condition {s}"))
+    };
+    let online_mag = find("Same Matrix (online SVD) / Top-K by Magnitude");
+    let offline_mag = find("Different Dataset (offline P) / Top-K by Magnitude");
+    let offline_slice = find("Different Dataset (offline P) / Top-K by Dimension");
+
+    for i in 0..online_mag.series.len() {
+        let (ratio, lo) = online_mag.series[i];
+        let (_, lf) = offline_mag.series[i];
+        let (_, ls) = offline_slice.series[i];
+        // (a) offline ≈ online (paper's validation of offline calibration)
+        assert!((lf - lo).abs() < 0.05 + 0.1 * lo,
+                "offline far from online at {ratio}: {lf} vs {lo}");
+        // (b) magnitude beats slicing (paper §7.2 "halves the loss")
+        if ratio < 0.95 {
+            assert!(lf < ls, "magnitude ({lf}) not better than slice ({ls}) at {ratio}");
+        }
+        // (c) loss vanishes at k=d (lossless rotation)
+        if ratio > 0.99 {
+            assert!(lf < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn fig3_crosslingual_transfer() {
+    let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
+        eprintln!("skipping");
+        return;
+    };
+    let rows = exp::fig3(&arts, "llama-analog").unwrap();
+    // K + Q0..Q3, two languages each
+    assert_eq!(rows.len(), 2 * (1 + 4));
+    for m in ["K", "Q0", "Q1", "Q2", "Q3"] {
+        let ang = rows.iter().find(|r| r.matrix == m && r.language.starts_with("anglish")).unwrap();
+        let dev = rows.iter().find(|r| r.matrix == m && r.language.starts_with("devan")).unwrap();
+        for ((ra, la), (_, ld)) in ang.series.iter().zip(&dev.series) {
+            // Paper Fig. 3: profiles are "remarkably similar". Allow a loose
+            // envelope — the cross-lingual loss must not blow up.
+            assert!((ld - la).abs() < 0.22, "matrix {m} at {ra}: anglish {la} devan {ld}");
+        }
+    }
+}
+
+#[test]
+fn fig5_overlap_increases_with_kp() {
+    let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
+        eprintln!("skipping");
+        return;
+    };
+    let rows = exp::fig5(&arts, "llama-analog").unwrap();
+    for (label, stats) in &rows {
+        // overlap must rise along K' for fixed K, and be well below 1 at
+        // small K' (the paper's mismatch finding)
+        for w in stats.chunks(4) {
+            for pair in w.windows(2) {
+                assert!(pair[1].mean >= pair[0].mean - 1e-9,
+                        "{label}: overlap not monotone in K'");
+            }
+        }
+        let small = &stats[0]; // K=K'=0.125
+        assert!(small.mean < 0.85, "{label}: top-12.5% magnitude dims fully inside top-12.5% PCA — no mismatch, suspicious");
+    }
+}
+
+#[test]
+fn ablation_combined_projection_not_worse_for_queries() {
+    let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
+        eprintln!("skipping");
+        return;
+    };
+    let rows = exp::ablation_projection_source(&arts, "llama-analog").unwrap();
+    assert_eq!(rows.len(), 3);
+    let get = |s: &str| rows.iter().find(|r| r.source.contains(s)).unwrap();
+    let keys_only = get("keys only");
+    let combined = get("combined");
+    // The paper's claim (§1): pooling queries+keys aligns the projection
+    // with what the *query-magnitude* selection reads. On held-out query
+    // vectors the combined P must not lose to the key-only P.
+    for ((r, lc), (_, lk)) in combined.series.iter().zip(&keys_only.series) {
+        assert!(*lc <= lk + 0.01, "combined P worse than key-only at k/d={r}: {lc} vs {lk}");
+    }
+}
+
+#[test]
+fn breakeven_bound_sanity() {
+    use aqua_serve::bench::Bencher;
+    // tiny measurement (pure rust, no artifacts needed)
+    let rows = exp::breakeven(&[64], &[0.25], &Bencher::quick());
+    assert_eq!(rows.len(), 1);
+    let r = &rows[0];
+    assert_eq!(r.paper_bound, Some((64.0f64 * 64.0 / 48.0).ceil() as usize));
+    if let Some(c) = r.measured_crossover {
+        // measured crossover within two orders of the analytic bound — this
+        // is a noisy CPU, the *existence* and rough location is the claim
+        assert!(c <= r.paper_bound.unwrap() * 64, "crossover implausibly late: {c}");
+    }
+}
