@@ -1,24 +1,23 @@
 //! The controllable knob: sweep k_ratio on a fixed prompt and show the
 //! quality/cost trade-off (paper Table 7's qualitative story + the §5 cost
-//! model side by side).
-
-use std::sync::Arc;
+//! model side by side). Backend-generic — runs hermetically on the native
+//! backend without artifacts.
 
 use aqua_serve::aqua::policy::{AquaConfig, CostModel};
 use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
-use aqua_serve::runtime::{Artifacts, ModelRuntime};
+use aqua_serve::runtime::{default_backend, ExecBackend};
 use aqua_serve::tokenizer::ByteTokenizer;
 
 fn main() -> anyhow::Result<()> {
-    let arts = Artifacts::load(aqua_serve::ARTIFACTS_DIR)?;
-    let rt = Arc::new(ModelRuntime::load(arts.model("llama-analog")?)?);
-    let d = rt.cfg.d_head;
+    let backend = default_backend("llama-analog", 0)?;
+    let d = backend.model_config().d_head;
     let cost = CostModel { d_head: d };
     let tok = ByteTokenizer;
-    let mut engine = Engine::new(rt.clone(), EngineConfig { batch: 1, ..Default::default() })?;
+    let mut engine = Engine::new(backend, EngineConfig { batch: 1, ..Default::default() })?;
 
     let prompt = "the capital of ";
-    println!("# AQUA knob sweep — prompt {prompt:?} (greedy)\n");
+    println!("# AQUA knob sweep — prompt {prompt:?} (greedy, {} backend)\n",
+             engine.backend().name());
     println!("{:>8} {:>5} {:>14} {:>16}  generation",
              "k_ratio", "k", "score FLOPs@512", "break-even i+1");
     for r in [1.0, 0.9, 0.75, 0.5, 0.4, 0.3, 0.2, 0.1] {

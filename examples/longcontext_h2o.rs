@@ -1,41 +1,45 @@
 //! AQUA-H2O on long contexts: feed a long multi-fact prompt, sweep the H2O
 //! budget, and show (a) the KV memory the eviction policy reclaims and
 //! (b) that approximate-score-driven eviction keeps the answer intact at
-//! moderate budgets (paper §8.3's synergy claim).
-
-use std::sync::Arc;
+//! moderate budgets (paper §8.3's synergy claim). Backend-generic; the
+//! context length scales to the backend's KV capacity.
 
 use aqua_serve::aqua::policy::AquaConfig;
 use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
-use aqua_serve::runtime::{Artifacts, ModelRuntime};
+use aqua_serve::runtime::{corpus_or_synthetic, default_spec};
 use aqua_serve::tokenizer::ByteTokenizer;
 
 fn main() -> anyhow::Result<()> {
-    let arts = Artifacts::load(aqua_serve::ARTIFACTS_DIR)?;
-    let corpus = std::fs::read(arts.corpus_path("valid")?)?;
-    let rt = Arc::new(ModelRuntime::load(arts.model("llama-analog")?)?);
+    let spec = default_spec("llama-analog", 0)?;
+    let corpus = corpus_or_synthetic(1 << 14);
     let tok = ByteTokenizer;
-    let d = rt.cfg.d_head;
-    let n_kv = rt.cfg.n_kv_heads;
+    let (d, n_kv, max_seq) = {
+        let c = spec.model_config();
+        (c.d_head, c.n_kv_heads, c.max_seq)
+    };
+    let gen_len = 32usize;
 
-    // Long context: ~380 bytes of corpus text, then a fresh fact query.
-    let mut ctx: Vec<u8> = corpus[..380.min(corpus.len())].to_vec();
+    // Long context: as much corpus text as the KV capacity allows, then a
+    // fresh fact query.
+    let budget = max_seq.saturating_sub(gen_len + 20).max(16);
+    let mut ctx: Vec<u8> = corpus[..budget.min(corpus.len())].to_vec();
     if let Some(nl) = ctx.iter().rposition(|&b| b == b'\n') {
         ctx.truncate(nl + 1);
     }
     ctx.extend_from_slice(b"the capital of ");
     let prompt = tok.encode_bytes(&ctx);
-    println!("# longcontext_h2o — prompt {} bytes, generating 32\n", prompt.len());
+    println!("# longcontext_h2o — prompt {} bytes, generating {gen_len} ({} backend)\n",
+             prompt.len(), spec.name());
     println!("{:>10} {:>8} {:>10} {:>12} {:>12}  generation",
              "h2o_ratio", "k_ratio", "evictions", "kv bytes", "kv saved");
 
     for (h, k) in [(1.0, 1.0), (0.75, 0.75), (0.5, 0.75), (0.25, 0.75), (0.25, 0.5)] {
         let aqua = AquaConfig { k_ratio: k, h2o_ratio: h, ..Default::default() };
-        let mut engine = Engine::new(
-            rt.clone(),
+        let mut engine = Engine::with_spec(
+            &spec,
             EngineConfig { batch: 1, aqua, h2o_recent_window: 16, ..Default::default() },
         )?;
-        let mut req = GenRequest::new(1, prompt.clone(), 32);
+        let mut req = GenRequest::new(1, prompt.clone(), gen_len);
         req.stop_token = Some(b'\n' as i32);
         let res = engine.run_batch(vec![req])?.remove(0);
         let s = engine.metrics.snapshot();

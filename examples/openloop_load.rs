@@ -1,7 +1,9 @@
 //! Open-loop load test: Poisson arrivals against the threaded engine
 //! front-end (`EngineHandle`), the way a serving paper measures latency
 //! under load — queueing delay included, unlike the closed-loop
-//! serving_demo.
+//! serving_demo. The backend is constructed *on the engine thread* via
+//! `BackendRecipe` (PJRT handles are !Send; the native model moves
+//! freely).
 //!
 //! ```bash
 //! cargo run --release --example openloop_load [-- <requests-per-second>...]
@@ -13,7 +15,7 @@ use std::time::{Duration, Instant};
 use aqua_serve::aqua::policy::AquaConfig;
 use aqua_serve::coordinator::engine::{EngineCmd, EngineHandle};
 use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
-use aqua_serve::runtime::{Artifacts, ModelRuntime};
+use aqua_serve::runtime::{corpus_or_synthetic, default_spec};
 use aqua_serve::tokenizer::ByteTokenizer;
 use aqua_serve::util::prng::Rng;
 use aqua_serve::util::{mean, percentile};
@@ -28,15 +30,17 @@ fn main() -> anyhow::Result<()> {
             args
         }
     };
-    let arts = Artifacts::load(aqua_serve::ARTIFACTS_DIR)?;
-    let corpus = std::fs::read(arts.corpus_path("valid")?)?;
-    let mart = arts.model("llama-analog")?.clone();
+    let spec = default_spec("llama-analog", 0)?;
+    let backend_name = spec.name();
+    // clamp prompts to the backend's KV capacity (requests generate 24)
+    let max_prompt = spec.max_prompt(24);
+    let corpus = corpus_or_synthetic(1 << 15);
 
-    // Engine lives on its own thread (PJRT handles are !Send).
+    // Engine lives on its own thread; the recipe builds the backend there.
+    let recipe = spec.recipe();
     let handle = EngineHandle::spawn(move || {
-        let rt = std::sync::Arc::new(ModelRuntime::load(&mart)?);
         Engine::new(
-            rt,
+            recipe.build()?,
             EngineConfig {
                 batch: 4,
                 aqua: AquaConfig { k_ratio: 0.75, ..Default::default() },
@@ -47,15 +51,15 @@ fn main() -> anyhow::Result<()> {
     let tok = ByteTokenizer;
     let lines: Vec<&[u8]> = corpus.split(|&b| b == b'\n').filter(|l| l.len() > 10).collect();
 
-    // Warm the executables.
+    // Warm the backend (compiles executables on the pjrt path).
     handle.cmd_tx.send(EngineCmd::Submit(GenRequest::new(
         0,
-        tok.encode_bytes(lines[0]),
+        tok.encode_bytes(&lines[0][..lines[0].len().min(max_prompt)]),
         4,
     )))?;
     let _ = handle.result_rx.recv_timeout(Duration::from_secs(60));
 
-    println!("# open-loop Poisson load, 20 requests per rate, AQUA k=0.75, batch=4\n");
+    println!("# open-loop Poisson load, 20 requests per rate, AQUA k=0.75, batch=4, {backend_name} backend\n");
     println!("{:>8} {:>12} {:>12} {:>12} {:>10}",
              "req/s", "e2e p50", "e2e p99", "ttft p50", "done");
     let mut next_id = 1u64;
@@ -73,7 +77,7 @@ fn main() -> anyhow::Result<()> {
             // submit according to the Poisson schedule
             while sent < n && t0.elapsed() >= next_arrival {
                 let line = lines[rng.below(lines.len())];
-                let cut = 6 + rng.below(line.len() - 6);
+                let cut = (6 + rng.below(line.len() - 6)).min(max_prompt);
                 let mut r = GenRequest::new(next_id, tok.encode_bytes(&line[..cut]), 24);
                 r.stop_token = Some(b'\n' as i32);
                 submit_times.insert(next_id, Instant::now());

@@ -1,22 +1,23 @@
-//! Quickstart: load the artifacts, generate text, flip the AQUA knob.
+//! Quickstart: build a backend, generate text, flip the AQUA knob.
+//!
+//! Hermetic by default (native backend, seeded weights); picks up the
+//! PJRT artifacts when built with `--features pjrt` after `make artifacts`.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
-
-use std::sync::Arc;
 
 use aqua_serve::aqua::policy::AquaConfig;
 use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
-use aqua_serve::runtime::{Artifacts, ModelRuntime};
+use aqua_serve::runtime::{default_backend, ExecBackend};
 use aqua_serve::tokenizer::ByteTokenizer;
 
 fn main() -> anyhow::Result<()> {
-    let arts = Artifacts::load(aqua_serve::ARTIFACTS_DIR)?;
-    let rt = Arc::new(ModelRuntime::load(arts.model("llama-analog")?)?);
+    let backend = default_backend("llama-analog", 0)?;
     let tok = ByteTokenizer;
 
-    let mut engine = Engine::new(rt, EngineConfig { batch: 1, ..Default::default() })?;
+    let mut engine = Engine::new(backend, EngineConfig { batch: 1, ..Default::default() })?;
+    println!("backend: {}\n", engine.backend().name());
 
     let prompt = "the capital of ";
     println!("prompt: {prompt:?}\n");
@@ -32,7 +33,7 @@ fn main() -> anyhow::Result<()> {
         req.stop_token = Some(b'\n' as i32);
         let res = engine.run_batch(vec![req])?.remove(0);
         println!("{label}\n  -> {:?}", tok.decode(&res.tokens));
-        let d = engine.runtime().cfg.d_head;
+        let d = engine.model_config().d_head;
         println!("  k = {}/{} dims, effective ratio {:.2}\n",
                  aqua.k_dims(d), d, aqua.effective_ratio());
     }

@@ -1,33 +1,35 @@
 //! End-to-end serving driver (the repo's headline validation run).
 //!
-//! Loads the in-repo-trained model, serves a batched workload of real
-//! prompts drawn from the held-out corpus through the full stack
-//! (admission → continuous batching → prefill/decode → sampling), and
-//! reports latency/throughput at several AQUA operating points — the
-//! serving-paper analog of "load a small real model and serve batched
-//! requests". Results are recorded in EXPERIMENTS.md.
+//! Serves a batched workload of prompts through the full stack (admission
+//! → continuous batching → prefill/decode → sampling) and reports
+//! latency/throughput at several AQUA operating points. Backend-generic:
+//! the hermetic native backend by default, the in-repo-trained PJRT model
+//! when built with `--features pjrt` after `make artifacts`. Results are
+//! recorded in EXPERIMENTS.md.
 //!
 //! ```bash
 //! cargo run --release --example serving_demo [-- <n_requests>]
 //! ```
 
-use std::sync::Arc;
-
 use aqua_serve::aqua::policy::AquaConfig;
 use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
-use aqua_serve::runtime::{Artifacts, ModelRuntime};
+use aqua_serve::runtime::{corpus_or_synthetic, default_spec};
 use aqua_serve::tokenizer::ByteTokenizer;
 use aqua_serve::util::prng::Rng;
 
-fn workload(corpus: &[u8], n: usize, rng: &mut Rng) -> Vec<GenRequest> {
+const GEN_LEN: usize = 48;
+
+/// Prompts clamped to the backend's KV capacity, so a real-corpus line
+/// never turns into a silent PromptTooLong reject on the tiny native model.
+fn workload(corpus: &[u8], n: usize, max_prompt: usize, rng: &mut Rng) -> Vec<GenRequest> {
     let tok = ByteTokenizer;
     let lines: Vec<&[u8]> = corpus.split(|&b| b == b'\n').filter(|l| l.len() > 8).collect();
     (0..n)
         .map(|i| {
             // prompt = a corpus line prefix; generation completes it
             let line = lines[rng.below(lines.len())];
-            let cut = 4 + rng.below(line.len() - 4);
-            let mut r = GenRequest::new(i as u64 + 1, tok.encode_bytes(&line[..cut]), 48);
+            let cut = (4 + rng.below(line.len() - 4)).min(max_prompt);
+            let mut r = GenRequest::new(i as u64 + 1, tok.encode_bytes(&line[..cut]), GEN_LEN);
             r.stop_token = Some(b'\n' as i32);
             r
         })
@@ -36,19 +38,20 @@ fn workload(corpus: &[u8], n: usize, rng: &mut Rng) -> Vec<GenRequest> {
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(24);
-    let arts = Artifacts::load(aqua_serve::ARTIFACTS_DIR)?;
-    let corpus = std::fs::read(arts.corpus_path("valid")?)?;
-    let rt = Arc::new(ModelRuntime::load(arts.model("llama-analog")?)?);
+    let spec = default_spec("llama-analog", 0)?;
+    let corpus = corpus_or_synthetic(1 << 15);
+    let max_prompt = spec.max_prompt(GEN_LEN);
 
-    // Warm the prefill/decode executables so the first operating point
-    // doesn't pay HLO compile time in its latency numbers.
+    // Warm the backend (compiles the prefill/decode executables on the
+    // pjrt path) so the first operating point pays no one-time cost.
     {
-        let mut warm = Engine::new(rt.clone(), EngineConfig { batch: 4, ..Default::default() })?;
+        let mut warm = Engine::with_spec(&spec, EngineConfig { batch: 4, ..Default::default() })?;
         let mut rng = Rng::new(1);
-        warm.run_batch(workload(&corpus, 4, &mut rng))?;
+        warm.run_batch(workload(&corpus, 4, max_prompt, &mut rng))?;
     }
 
-    println!("# serving_demo — {n} batched requests per operating point (batch=4)\n");
+    println!("# serving_demo — {n} batched requests per operating point (batch=4, {} backend)\n",
+             spec.name());
     println!("{:<34} {:>10} {:>12} {:>12} {:>12} {:>10}",
              "operating point", "tok/s", "ttft p50", "ttft p99", "lat mean", "evictions");
     for (label, aqua) in [
@@ -60,12 +63,12 @@ fn main() -> anyhow::Result<()> {
         ("AQUA-Memory S=0.10 k=0.90",
          AquaConfig { k_ratio: 0.90, s_ratio: 0.10, ..Default::default() }),
     ] {
-        let mut engine = Engine::new(
-            rt.clone(),
+        let mut engine = Engine::with_spec(
+            &spec,
             EngineConfig { batch: 4, aqua, ..Default::default() },
         )?;
         let mut rng = Rng::new(42);
-        let reqs = workload(&corpus, n, &mut rng);
+        let reqs = workload(&corpus, n, max_prompt, &mut rng);
         let t0 = std::time::Instant::now();
         let results = engine.run_batch(reqs)?;
         let wall = t0.elapsed().as_secs_f64();
@@ -75,6 +78,6 @@ fn main() -> anyhow::Result<()> {
                  label, total_tokens as f64 / wall, s.p50_ttft_ms, s.p99_ttft_ms,
                  s.mean_latency_ms, s.h2o_evictions);
     }
-    println!("\n(model: in-repo-trained llama-analog; see DESIGN.md Substitutions)");
+    println!("\n(swap in the PJRT model via --features pjrt + make artifacts; see DESIGN.md)");
     Ok(())
 }

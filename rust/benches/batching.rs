@@ -1,24 +1,23 @@
 //! Continuous-batching throughput: the same request trace served at batch
 //! 1 vs 4 (the L3 coordinator's contribution to serving throughput).
 //!
-//! Requires `make artifacts`; skips gracefully otherwise.
-
-use std::sync::Arc;
+//! Runs hermetically on the native backend; picks up the PJRT artifacts
+//! automatically when built with `--features pjrt` after `make artifacts`.
 
 use aqua_serve::aqua::policy::AquaConfig;
 use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
-use aqua_serve::runtime::{Artifacts, ModelRuntime};
+use aqua_serve::runtime::{corpus_or_synthetic, default_spec};
 use aqua_serve::tokenizer::ByteTokenizer;
 use aqua_serve::util::prng::Rng;
 
-fn trace(corpus: &[u8], n: usize) -> Vec<GenRequest> {
+fn trace(corpus: &[u8], n: usize, max_prompt: usize) -> Vec<GenRequest> {
     let tok = ByteTokenizer;
     let mut rng = Rng::new(11);
     let lines: Vec<&[u8]> = corpus.split(|&b| b == b'\n').filter(|l| l.len() > 10).collect();
     (0..n)
         .map(|i| {
             let line = lines[rng.below(lines.len())];
-            let cut = 6 + rng.below(line.len() - 6);
+            let cut = (6 + rng.below(line.len() - 6)).min(max_prompt);
             let mut r = GenRequest::new(i as u64 + 1, tok.encode_bytes(&line[..cut]), 24);
             r.stop_token = Some(b'\n' as i32);
             r
@@ -27,37 +26,34 @@ fn trace(corpus: &[u8], n: usize) -> Vec<GenRequest> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
-        println!("skipped: artifacts not built (run `make artifacts`)");
-        return Ok(());
-    };
-    let corpus = std::fs::read(arts.corpus_path("valid")?)?;
-    let rt = Arc::new(ModelRuntime::load(arts.model("llama-analog")?)?);
+    let spec = default_spec("llama-analog", 0)?;
+    let corpus = corpus_or_synthetic(1 << 15);
+    let max_prompt = spec.max_prompt(24); // trace() generates 24 tokens
     let n = 16;
 
-    println!("# continuous batching: {n}-request trace, AQUA k=0.75\n");
-    // warm both batch sizes' executables so compile time stays out of wall
+    println!("# continuous batching: {n}-request trace, AQUA k=0.75, {} backend\n", spec.name());
+    // warm both batch sizes (compiles the executables on the pjrt path)
     for batch in [1usize, 4] {
-        let mut warm = Engine::new(rt.clone(), EngineConfig { batch, ..Default::default() })?;
-        warm.run_batch(trace(&corpus, 2))?;
+        let mut warm = Engine::with_spec(&spec, EngineConfig { batch, ..Default::default() })?;
+        warm.run_batch(trace(&corpus, 2, max_prompt))?;
     }
     for batch in [1usize, 4] {
-        let mut engine = Engine::new(
-            rt.clone(),
+        let mut engine = Engine::with_spec(
+            &spec,
             EngineConfig {
                 batch,
                 aqua: AquaConfig { k_ratio: 0.75, ..Default::default() },
                 ..Default::default()
             },
         )?;
-        let reqs = trace(&corpus, n);
+        let reqs = trace(&corpus, n, max_prompt);
         let t0 = std::time::Instant::now();
         let results = engine.run_batch(reqs)?;
         let wall = t0.elapsed().as_secs_f64();
         let toks: usize = results.iter().map(|r| r.tokens.len()).sum();
         let s = engine.metrics.snapshot();
         println!(
-            "batch={batch}: {:.2}s wall, {:.1} gen tok/s, ttft p50 {:.0}ms p99 {:.0}ms, {} decode calls",
+            "batch={batch}: {:.2}s wall, {:.1} gen tok/s, ttft p50 {:.2}ms p99 {:.2}ms, {} decode calls",
             wall, toks as f64 / wall, s.p50_ttft_ms, s.p99_ttft_ms, s.decode_calls
         );
     }

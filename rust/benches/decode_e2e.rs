@@ -1,32 +1,34 @@
-//! End-to-end decode latency through the full PJRT stack, across AQUA
+//! End-to-end decode latency through the execution backend, across AQUA
 //! operating points and batch sizes (the serving headline numbers;
 //! EXPERIMENTS.md §Perf before/after tracks this bench).
 //!
-//! Requires `make artifacts`; skips gracefully otherwise.
-
-use std::sync::Arc;
+//! Backend-generic: runs the hermetic native backend by default, the full
+//! PJRT round trip when built with `--features pjrt` after `make
+//! artifacts`.
 
 use aqua_serve::aqua::policy::AquaConfig;
 use aqua_serve::bench::Bencher;
-use aqua_serve::runtime::{Artifacts, ModelRuntime};
+use aqua_serve::runtime::{default_backend, AquaKnobs, ExecBackend};
 
 fn main() -> anyhow::Result<()> {
-    let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
-        println!("skipped: artifacts not built (run `make artifacts`)");
-        return Ok(());
-    };
-    let rt = Arc::new(ModelRuntime::load(arts.model("llama-analog")?)?);
-    let cfg = rt.cfg.clone();
+    let mut backend = default_backend("llama-analog", 0)?;
+    let cfg = backend.model_config().clone();
     let bench = Bencher { warmup: 3, iters: 25, ..Default::default() };
+    let ctx = cfg.max_seq / 2;
 
-    println!("# decode step latency (full PJRT round trip), S={}\n", cfg.max_seq);
+    println!(
+        "# decode step latency ({} backend round trip), S={}, {} live slots\n",
+        backend.name(),
+        cfg.max_seq,
+        ctx
+    );
     for b in [1usize, 4] {
-        let (k_cache, v_cache) = rt.empty_cache(b)?;
+        backend.empty_cache(b)?;
         let tokens = vec![5i32; b];
-        let pos = vec![100i32; b];
+        let pos = vec![ctx as i32; b];
         let mut slot_mask = vec![0.0f32; b * cfg.max_seq];
         for lane in 0..b {
-            for s in 0..100 {
+            for s in 0..ctx {
                 slot_mask[lane * cfg.max_seq + s] = 1.0;
             }
         }
@@ -37,12 +39,10 @@ fn main() -> anyhow::Result<()> {
             ("aqua-mem S=0.25 k=0.75",
              AquaConfig { k_ratio: 0.75, s_ratio: 0.25, ..Default::default() }),
         ] {
-            let k_dims = aqua.k_dims(cfg.d_head) as i32;
-            let keep = aqua.dim_keep_mask(cfg.d_head);
+            let knobs = AquaKnobs::from_config(&aqua, cfg.d_head);
             let r = bench.run(&format!("decode b={b} {label}"), || {
-                let out = rt
-                    .decode(b, &tokens, &pos, &k_cache, &v_cache, &slot_mask, k_dims,
-                            &keep, aqua.use_projection)
+                let out = backend
+                    .decode(b, &tokens, &pos, &slot_mask, &knobs)
                     .expect("decode");
                 aqua_serve::bench::black_box(out.logits.len());
             });

@@ -1,6 +1,7 @@
 //! H2O policy overhead: (a) the pure-policy microbench (accumulate + evict
 //! on synthetic lanes — the coordinator-side cost AQUA-H2O adds per step),
-//! and (b) end-to-end engine throughput with eviction on vs off.
+//! and (b) end-to-end engine throughput with eviction on vs off, through
+//! whichever execution backend is available (native by default).
 
 use aqua_serve::bench::{black_box, Bencher};
 use aqua_serve::coordinator::h2o::H2oPolicy;
@@ -28,31 +29,28 @@ fn main() -> anyhow::Result<()> {
         println!();
     }
 
-    // End-to-end engine comparison (needs artifacts).
+    // End-to-end engine comparison (native backend unless pjrt artifacts
+    // are available).
     use aqua_serve::aqua::policy::AquaConfig;
     use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
-    use aqua_serve::runtime::{Artifacts, ModelRuntime};
+    use aqua_serve::runtime::{corpus_or_synthetic, default_spec};
     use aqua_serve::tokenizer::ByteTokenizer;
-    use std::sync::Arc;
 
-    let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
-        println!("engine comparison skipped: artifacts not built");
-        return Ok(());
-    };
-    let corpus = std::fs::read(arts.corpus_path("valid")?)?;
-    let rt = Arc::new(ModelRuntime::load(arts.model("llama-analog")?)?);
+    let spec = default_spec("llama-analog", 0)?;
+    let corpus = corpus_or_synthetic(1 << 14);
     let tok = ByteTokenizer;
-    println!("# engine: 8 requests, h2o on/off\n");
+    let prompt_len = (spec.model_config().max_seq / 2).min(120);
+    println!("# engine: 8 requests, h2o on/off ({} backend)\n", spec.name());
     {
-        // warm executables (compile time out of the comparison)
-        let mut warm = Engine::new(rt.clone(), EngineConfig { batch: 4, ..Default::default() })?;
+        // warm (compiles executables on the pjrt path)
+        let mut warm = Engine::with_spec(&spec, EngineConfig { batch: 4, ..Default::default() })?;
         let mut r = GenRequest::new(999, tok.encode_bytes(&corpus[..64]), 4);
         r.stop_token = None;
         warm.run_batch(vec![r])?;
     }
     for h2o in [1.0, 0.25] {
-        let mut engine = Engine::new(
-            rt.clone(),
+        let mut engine = Engine::with_spec(
+            &spec,
             EngineConfig {
                 batch: 4,
                 aqua: AquaConfig { k_ratio: 0.75, h2o_ratio: h2o, ..Default::default() },
@@ -61,10 +59,10 @@ fn main() -> anyhow::Result<()> {
         )?;
         let reqs: Vec<GenRequest> = (0..8)
             .map(|i| {
-                let start = (i as usize * 97) % (corpus.len() - 200);
+                let start = (i as usize * 97) % (corpus.len() - prompt_len - 8);
                 let mut r = GenRequest::new(
                     i + 1,
-                    tok.encode_bytes(&corpus[start..start + 120]),
+                    tok.encode_bytes(&corpus[start..start + prompt_len]),
                     24,
                 );
                 r.stop_token = None;

@@ -4,7 +4,7 @@
 //! (xla_extension 0.5.1). Quantifies the interpret-mode lowering overhead
 //! the old XLA cannot fuse away.
 //!
-//! Usage: cargo bench --bench hlo_variants -- [alt-hlo-path]
+//! Usage: cargo bench --features pjrt --bench hlo_variants -- [alt-hlo-path]
 //! (defaults to the shipped decode_b4; pass /tmp/decode_jnp_b4.hlo.txt
 //! produced by `python -m compile.aot` variants to compare.)
 

@@ -52,6 +52,13 @@ impl Args {
         }
     }
 
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flags.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
     pub fn f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.flags.get(name) {
             Some(v) => Ok(v.parse()?),
@@ -108,5 +115,14 @@ mod tests {
         let a = Args::parse(&argv("serve")).unwrap();
         assert_eq!(a.f64("k-ratio", 1.0).unwrap(), 1.0);
         assert_eq!(a.str("addr", "127.0.0.1:8080"), "127.0.0.1:8080");
+        assert_eq!(a.u64("seed", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn backend_flags_parse() {
+        let a = Args::parse(&argv("generate --backend native --seed 42")).unwrap();
+        assert_eq!(a.str("backend", "auto"), "native");
+        assert_eq!(a.u64("seed", 0).unwrap(), 42);
+        assert!(Args::parse(&argv("generate --seed nope")).unwrap().u64("seed", 0).is_err());
     }
 }

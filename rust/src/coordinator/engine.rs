@@ -1,19 +1,20 @@
-//! The engine: continuous-batching decode loop over the AOT executables.
+//! The engine: continuous-batching decode loop over a pluggable
+//! [`ExecBackend`].
 //!
-//! Single-threaded by design — PJRT handles in the `xla` crate are !Send,
-//! so the engine owns the runtime and the server front-end talks to it
-//! through channels (see `EngineHandle`). One engine run has a fixed
-//! [`AquaConfig`] (the knobs are runtime *inputs* to the HLO, so switching
-//! configs needs no recompilation — `with_aqua` just changes the scalars
-//! fed on the next call).
+//! Single-threaded by design — the production PJRT backend's handles are
+//! !Send, so the engine owns its backend and the server front-end talks to
+//! it through channels (see `EngineHandle`). One engine run has a fixed
+//! [`AquaConfig`] (the knobs are runtime *inputs* to the backend step, so
+//! switching configs needs no recompilation — `with_aqua` just changes the
+//! scalars fed on the next call). The KV tensors live inside the backend;
+//! the engine stays the authority on slot validity via the `slot_mask` it
+//! passes on every call.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
-use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
-use xla::Literal;
 
 use super::batcher::{AdmissionQueue, LaneTable};
 use super::h2o::H2oPolicy;
@@ -22,7 +23,7 @@ use super::metrics::Metrics;
 use super::request::{ActiveReq, FinishReason, GenRequest, GenResult};
 use crate::aqua::policy::AquaConfig;
 use crate::model::sampling::Sampler;
-use crate::runtime::ModelRuntime;
+use crate::runtime::backend::{AquaKnobs, BackendSpec, ExecBackend};
 use crate::tensor::softmax::log_softmax_at;
 use crate::util::prng::Rng;
 
@@ -48,14 +49,12 @@ impl Default for EngineConfig {
 }
 
 pub struct Engine {
-    rt: Arc<ModelRuntime>,
+    backend: Box<dyn ExecBackend>,
     pub cfg: EngineConfig,
     queue: AdmissionQueue,
     lanes: LaneTable,
     active: Vec<Option<ActiveReq>>,
     kv: Vec<LaneKv>,
-    k_cache: Literal,
-    v_cache: Literal,
     results: HashMap<u64, GenResult>,
     rng: Rng,
     pub metrics: Metrics,
@@ -63,21 +62,19 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(rt: Arc<ModelRuntime>, cfg: EngineConfig) -> Result<Self> {
+    pub fn new(mut backend: Box<dyn ExecBackend>, cfg: EngineConfig) -> Result<Self> {
         if cfg.batch == 0 {
             bail!("batch must be >= 1");
         }
-        let (k, v) = rt.empty_cache(cfg.batch)?;
-        let cap = rt.cfg.max_seq;
+        backend.empty_cache(cfg.batch)?;
+        let cap = backend.model_config().max_seq;
         let h2o = H2oPolicy::new(cfg.aqua.h2o_ratio, cfg.h2o_recent_window);
         Ok(Engine {
-            rt,
+            backend,
             queue: AdmissionQueue::default(),
             lanes: LaneTable::new(cfg.batch),
             active: (0..cfg.batch).map(|_| None).collect(),
             kv: (0..cfg.batch).map(|_| LaneKv::new(cap)).collect(),
-            k_cache: k,
-            v_cache: v,
             results: HashMap::new(),
             rng: Rng::new(cfg.seed ^ 0xE17),
             metrics: Metrics::default(),
@@ -86,8 +83,19 @@ impl Engine {
         })
     }
 
-    pub fn runtime(&self) -> &ModelRuntime {
-        &self.rt
+    /// Build the engine from a backend spec (`spec.build()` + `new`).
+    pub fn with_spec(spec: &BackendSpec, cfg: EngineConfig) -> Result<Self> {
+        Engine::new(spec.build()?, cfg)
+    }
+
+    /// The execution backend this engine drives.
+    pub fn backend(&self) -> &dyn ExecBackend {
+        self.backend.as_ref()
+    }
+
+    /// Shorthand for `backend().model_config()`.
+    pub fn model_config(&self) -> &crate::model::config::ModelConfig {
+        self.backend.model_config()
     }
 
     /// Swap the AQUA knobs (takes effect on the next call; no recompile).
@@ -146,10 +154,10 @@ impl Engine {
     // ------------------------------------------------------------- admission
 
     fn admit(&mut self) {
+        let max_seq = self.backend.model_config().max_seq;
         while let Some(lane) = self.lanes.free_lane() {
             let Some(req) = self.queue.pop() else { break };
-            if req.prompt.is_empty() || req.prompt.len() + req.max_new_tokens > self.rt.cfg.max_seq
-            {
+            if req.prompt.is_empty() || req.prompt.len() + req.max_new_tokens > max_seq {
                 let id = req.id;
                 self.results.insert(
                     id,
@@ -185,12 +193,15 @@ impl Engine {
 
     fn prefill_pass(&mut self) -> Result<()> {
         let b = self.cfg.batch;
-        let chunk = self.rt.prefill_chunk;
-        let s_cap = self.rt.cfg.max_seq;
-        let d = self.rt.cfg.d_head;
-        let n_layers = self.rt.cfg.n_layers;
+        let chunk = self.backend.prefill_chunk();
+        let (s_cap, d, n_layers, vocab) = {
+            let c = self.backend.model_config();
+            (c.max_seq, c.d_head, c.n_layers, c.vocab)
+        };
 
-        let mut tokens = vec![0i32; b * chunk];
+        // -1 marks padding / lanes with nothing to feed; backends may skip
+        // those positions entirely (the native backend does).
+        let mut tokens = vec![-1i32; b * chunk];
         let mut pos0 = vec![0i32; b];
         let mut fed_now = vec![0usize; b];
         for lane in 0..b {
@@ -206,21 +217,13 @@ impl Engine {
             }
         }
         let slot_mask = self.flat_mask();
-        let aq = self.cfg.aqua;
-        let k_dims = aq.k_dims(d) as i32;
-        let keep = aq.dim_keep_mask(d);
+        let knobs = AquaKnobs::from_config(&self.cfg.aqua, d);
 
         let t0 = Instant::now();
-        let out = self.rt.prefill(
-            b, &tokens, &pos0, &self.k_cache, &self.v_cache, &slot_mask, k_dims, &keep,
-            aq.use_projection,
-        )?;
+        let out = self.backend.prefill(b, &tokens, &pos0, &slot_mask, &knobs)?;
         let real_tokens: u64 = fed_now.iter().map(|&n| n as u64).sum();
         self.metrics.record_prefill(t0.elapsed(), real_tokens);
-        self.k_cache = out.k_cache;
-        self.v_cache = out.v_cache;
 
-        let vocab = self.rt.cfg.vocab;
         let mut finish_list: Vec<usize> = vec![];
         for lane in 0..b {
             let n = fed_now[lane];
@@ -280,11 +283,13 @@ impl Engine {
 
     fn decode_pass(&mut self) -> Result<()> {
         let b = self.cfg.batch;
-        let s_cap = self.rt.cfg.max_seq;
-        let d = self.rt.cfg.d_head;
-        let n_layers = self.rt.cfg.n_layers;
+        let (s_cap, d, n_layers, vocab) = {
+            let c = self.backend.model_config();
+            (c.max_seq, c.d_head, c.n_layers, c.vocab)
+        };
 
-        let mut tokens = vec![0i32; b];
+        // -1 marks dead lanes; backends may skip them entirely.
+        let mut tokens = vec![-1i32; b];
         let mut pos = vec![0i32; b];
         let mut live = vec![false; b];
         for lane in 0..b {
@@ -307,20 +312,12 @@ impl Engine {
         }
 
         let slot_mask = self.flat_mask();
-        let aq = self.cfg.aqua;
-        let k_dims = aq.k_dims(d) as i32;
-        let keep = aq.dim_keep_mask(d);
+        let knobs = AquaKnobs::from_config(&self.cfg.aqua, d);
 
         let t0 = Instant::now();
-        let out = self.rt.decode(
-            b, &tokens, &pos, &self.k_cache, &self.v_cache, &slot_mask, k_dims, &keep,
-            aq.use_projection,
-        )?;
+        let out = self.backend.decode(b, &tokens, &pos, &slot_mask, &knobs)?;
         self.metrics.record_decode(t0.elapsed(), live.iter().filter(|&&l| l).count() as u64);
-        self.k_cache = out.k_cache;
-        self.v_cache = out.v_cache;
 
-        let vocab = self.rt.cfg.vocab;
         let mut finish_list: Vec<usize> = vec![];
         for lane in 0..b {
             if !live[lane] {
@@ -361,7 +358,7 @@ impl Engine {
     // --------------------------------------------------------------- helpers
 
     fn flat_mask(&self) -> Vec<f32> {
-        let s = self.rt.cfg.max_seq;
+        let s = self.backend.model_config().max_seq;
         let mut m = vec![0.0f32; self.cfg.batch * s];
         for (lane, kv) in self.kv.iter().enumerate() {
             m[lane * s..(lane + 1) * s].copy_from_slice(&kv.slot_mask);
@@ -413,7 +410,7 @@ impl Engine {
 
 // ---------------------------------------------------------------------------
 // Threaded front-end handle (for the HTTP server): the engine lives on its
-// own thread because PJRT handles are !Send.
+// own thread because the production backend's PJRT handles are !Send.
 // ---------------------------------------------------------------------------
 
 pub enum EngineCmd {
@@ -430,7 +427,7 @@ pub struct EngineHandle {
 
 impl EngineHandle {
     /// Spawn an engine-owning thread. `make_engine` runs *on that thread*
-    /// (constructs the PJRT client there).
+    /// (constructs the backend there — see `BackendRecipe`).
     pub fn spawn<F>(make_engine: F) -> EngineHandle
     where
         F: FnOnce() -> Result<Engine> + Send + 'static,

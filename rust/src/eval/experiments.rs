@@ -2,20 +2,28 @@
 //! (DESIGN.md "Experiment index"). Each function prints the same rows /
 //! series the paper reports and returns the data for tests/benches.
 
-use std::collections::BTreeMap;
-use std::sync::Arc;
+use anyhow::{anyhow, Result};
 
-use anyhow::{anyhow, Context, Result};
-use xla::{FromRawBytes, Literal};
-
-use crate::aqua::info_loss::{loss_series, online_projection, Selection};
-use crate::aqua::overlap::overlap_stats;
 use crate::aqua::policy::{AquaConfig, CostModel};
 use crate::bench::Bencher;
 use crate::coordinator::{Engine, EngineConfig};
 use crate::eval::ppl::{perplexity, PplConfig};
 use crate::eval::tasks::{run_task, EvalSummary, TaskSet};
-use crate::runtime::{Artifacts, ModelRuntime};
+use crate::runtime::{Artifacts, BackendSpec};
+
+#[cfg(feature = "pjrt")]
+use std::collections::BTreeMap;
+
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+#[cfg(feature = "pjrt")]
+use xla::{FromRawBytes, Literal};
+
+#[cfg(feature = "pjrt")]
+use crate::aqua::info_loss::{loss_series, online_projection, Selection};
+#[cfg(feature = "pjrt")]
+use crate::aqua::overlap::overlap_stats;
+#[cfg(feature = "pjrt")]
 use crate::tensor::Tensor;
 
 pub const TASK_ORDER: [&str; 6] = [
@@ -23,9 +31,10 @@ pub const TASK_ORDER: [&str; 6] = [
 ];
 
 // ---------------------------------------------------------------------------
-// npz → Tensor helpers
+// npz → Tensor helpers (calibration dumps only exist on the PJRT path)
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 pub fn load_dump(path: &std::path::Path) -> Result<BTreeMap<String, Tensor>> {
     let entries = Literal::read_npz(path, &()).map_err(|e| anyhow!("reading {path:?}: {e:?}"))?;
     let mut out = BTreeMap::new();
@@ -42,6 +51,7 @@ pub fn load_dump(path: &std::path::Path) -> Result<BTreeMap<String, Tensor>> {
     Ok(out)
 }
 
+#[cfg(feature = "pjrt")]
 fn stack_rows(parts: &[&Tensor]) -> Result<Tensor> {
     let cols = parts[0].cols();
     let mut data = vec![];
@@ -62,6 +72,7 @@ pub struct Fig2Row {
     pub series: Vec<(f64, f32)>,
 }
 
+#[cfg(feature = "pjrt")]
 pub fn fig2(arts: &Artifacts, model: &str) -> Result<Vec<Fig2Row>> {
     let m = arts.model(model)?;
     let dump = load_dump(&m.calib_dump_npz)?;
@@ -117,6 +128,7 @@ pub struct Fig3Row {
     pub series: Vec<(f64, f32)>,
 }
 
+#[cfg(feature = "pjrt")]
 pub fn fig3(arts: &Artifacts, model: &str) -> Result<Vec<Fig3Row>> {
     let m = arts.model(model)?;
     let dump = load_dump(&m.calib_dump_npz)?;
@@ -163,6 +175,7 @@ pub fn print_fig3(rows: &[Fig3Row]) {
 // Figure 5 — magnitude-vs-PCA overlap
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 pub fn fig5(arts: &Artifacts, model: &str) -> Result<Vec<(String, Vec<crate::aqua::overlap::OverlapStats>)>> {
     let m = arts.model(model)?;
     let dump = load_dump(&m.calib_dump_npz)?;
@@ -225,31 +238,45 @@ impl Default for SweepOptions {
     }
 }
 
-pub fn eval_config(
-    arts: &Artifacts,
-    rt: &Arc<ModelRuntime>,
-    aqua: AquaConfig,
-    label: &str,
-    opt: &SweepOptions,
-) -> Result<TableRow> {
-    let mut engine = Engine::new(
-        rt.clone(),
-        EngineConfig { batch: opt.batch, aqua, ..Default::default() },
-    )?;
-    let mut summaries = vec![];
+/// Task sets + corpus loaded once per sweep — every table row reuses them
+/// instead of re-reading the files per engine.
+pub struct SweepData {
+    pub sets: Vec<TaskSet>,
+    pub corpus: Vec<u8>,
+}
+
+pub fn load_sweep_data(arts: &Artifacts, opt: &SweepOptions) -> Result<SweepData> {
+    let mut sets = vec![];
     for tname in &opt.tasks {
         let (path, analog) = arts
             .tasks
             .get(tname)
             .ok_or_else(|| anyhow!("task '{tname}' missing from manifest"))?;
-        let set = TaskSet::load(tname, analog, path)?.truncated(opt.items_per_task);
-        summaries.push(run_task(&mut engine, &set)?);
+        sets.push(TaskSet::load(tname, analog, path)?.truncated(opt.items_per_task));
     }
     let corpus = std::fs::read(arts.corpus_path("valid")?)?;
+    Ok(SweepData { sets, corpus })
+}
+
+pub fn eval_config(
+    data: &SweepData,
+    spec: &BackendSpec,
+    aqua: AquaConfig,
+    label: &str,
+    opt: &SweepOptions,
+) -> Result<TableRow> {
+    let mut engine = Engine::with_spec(
+        spec,
+        EngineConfig { batch: opt.batch, aqua, ..Default::default() },
+    )?;
+    let mut summaries = vec![];
+    for set in &data.sets {
+        summaries.push(run_task(&mut engine, set)?);
+    }
     let ppl = perplexity(
         &mut engine,
-        &corpus,
-        PplConfig { window: 256, windows: opt.ppl_windows },
+        &data.corpus,
+        PplConfig::for_capacity(engine.model_config().max_seq, opt.ppl_windows),
     )?;
     crate::log_info!("config '{label}': {}", engine.metrics.snapshot().report());
     Ok(TableRow { label: label.to_string(), summaries, ppl })
@@ -272,12 +299,18 @@ pub fn print_table(title: &str, rows: &[TableRow]) {
 }
 
 /// Table 1 / 4 — standalone AQUA sweep.
-pub fn table1(arts: &Artifacts, model: &str, ratios: &[f64], opt: &SweepOptions) -> Result<Vec<TableRow>> {
-    let rt = Arc::new(ModelRuntime::load(arts.model(model)?)?);
-    let mut rows = vec![eval_config(arts, &rt, AquaConfig::baseline(), "B (standard attn)", opt)?];
+pub fn table1(
+    arts: &Artifacts,
+    spec: &BackendSpec,
+    ratios: &[f64],
+    opt: &SweepOptions,
+) -> Result<Vec<TableRow>> {
+    let data = load_sweep_data(arts, opt)?;
+    let mut rows =
+        vec![eval_config(&data, spec, AquaConfig::baseline(), "B (standard attn)", opt)?];
     for &r in ratios {
         let aqua = AquaConfig { k_ratio: r, ..Default::default() };
-        rows.push(eval_config(arts, &rt, aqua, &format!("k_ratio={r:.2}"), opt)?);
+        rows.push(eval_config(&data, spec, aqua, &format!("k_ratio={r:.2}"), opt)?);
     }
     Ok(rows)
 }
@@ -285,18 +318,18 @@ pub fn table1(arts: &Artifacts, model: &str, ratios: &[f64], opt: &SweepOptions)
 /// Table 2 / 5 — AQUA-H2O grid.
 pub fn table2(
     arts: &Artifacts,
-    model: &str,
+    spec: &BackendSpec,
     h2o_ratios: &[f64],
     k_ratios: &[f64],
     opt: &SweepOptions,
 ) -> Result<Vec<TableRow>> {
-    let rt = Arc::new(ModelRuntime::load(arts.model(model)?)?);
+    let data = load_sweep_data(arts, opt)?;
     let mut rows = vec![];
     for &h in h2o_ratios {
         for &k in k_ratios {
             let aqua = AquaConfig { k_ratio: k, h2o_ratio: h, ..Default::default() };
             rows.push(eval_config(
-                arts, &rt, aqua,
+                &data, spec, aqua,
                 &format!("H2O={h:.2} k={k:.2}"),
                 opt,
             )?);
@@ -308,18 +341,19 @@ pub fn table2(
 /// Table 3 / 6 — AQUA-Memory grid (static slice + dynamic top-k).
 pub fn table3(
     arts: &Artifacts,
-    model: &str,
+    spec: &BackendSpec,
     s_ratios: &[f64],
     k_ratios: &[f64],
     opt: &SweepOptions,
 ) -> Result<Vec<TableRow>> {
-    let rt = Arc::new(ModelRuntime::load(arts.model(model)?)?);
-    let mut rows = vec![eval_config(arts, &rt, AquaConfig::baseline(), "Full Attn (E=1.000)", opt)?];
+    let data = load_sweep_data(arts, opt)?;
+    let mut rows =
+        vec![eval_config(&data, spec, AquaConfig::baseline(), "Full Attn (E=1.000)", opt)?];
     for &s in s_ratios {
         for &k in k_ratios {
             let aqua = AquaConfig { k_ratio: k, s_ratio: s, ..Default::default() };
             rows.push(eval_config(
-                arts, &rt, aqua,
+                &data, spec, aqua,
                 &format!("S={s:.2} k={k:.2} E={:.3}", aqua.effective_ratio()),
                 opt,
             )?);
@@ -332,13 +366,12 @@ pub fn table3(
 // Table 7 — qualitative generations vs k_ratio
 // ---------------------------------------------------------------------------
 
-pub fn table7(arts: &Artifacts, model: &str, prompt: &str, ratios: &[f64]) -> Result<Vec<(String, String)>> {
+pub fn table7(spec: &BackendSpec, prompt: &str, ratios: &[f64]) -> Result<Vec<(String, String)>> {
     use crate::coordinator::GenRequest;
     use crate::tokenizer::ByteTokenizer;
-    let rt = Arc::new(ModelRuntime::load(arts.model(model)?)?);
     let tok = ByteTokenizer;
     let mut out = vec![];
-    let mut engine = Engine::new(rt.clone(), EngineConfig { batch: 1, ..Default::default() })?;
+    let mut engine = Engine::with_spec(spec, EngineConfig { batch: 1, ..Default::default() })?;
     for &r in ratios {
         let label = if r >= 1.0 { "1.0 (baseline)".to_string() } else { format!("{r:.2}") };
         let aqua = if r >= 1.0 {
@@ -370,6 +403,7 @@ pub struct AblationRow {
 /// each from the first half of the dump — and measures magnitude-selection
 /// L_info on the *query* matrices of the held-out second half (queries are
 /// what AQUA's selection reads, so misalignment shows up there).
+#[cfg(feature = "pjrt")]
 pub fn ablation_projection_source(arts: &Artifacts, model: &str) -> Result<Vec<AblationRow>> {
     let m = arts.model(model)?;
     let dump = load_dump(&m.calib_dump_npz)?;

@@ -20,6 +20,15 @@ impl Default for PplConfig {
     }
 }
 
+impl PplConfig {
+    /// The standard 256-byte scoring window, clamped to a backend's KV
+    /// capacity (the native backend's tiny preset is smaller than the
+    /// PJRT models; the margin leaves room for the final target byte).
+    pub fn for_capacity(max_seq: usize, windows: usize) -> PplConfig {
+        PplConfig { window: 256.min(max_seq.saturating_sub(8)), windows }
+    }
+}
+
 /// Compute perplexity of the engine's model over `corpus` bytes.
 pub fn perplexity(engine: &mut Engine, corpus: &[u8], cfg: PplConfig) -> Result<f64> {
     anyhow::ensure!(corpus.len() > cfg.window + 1, "corpus smaller than one window");
@@ -53,5 +62,12 @@ mod tests {
     fn config_defaults() {
         let c = PplConfig::default();
         assert!(c.window > 0 && c.windows > 0);
+    }
+
+    #[test]
+    fn window_clamps_to_capacity() {
+        assert_eq!(PplConfig::for_capacity(512, 4).window, 256);
+        assert_eq!(PplConfig::for_capacity(160, 4).window, 152);
+        assert_eq!(PplConfig::for_capacity(4, 4).window, 0);
     }
 }

@@ -139,8 +139,14 @@ pub fn run_task(engine: &mut Engine, set: &TaskSet) -> Result<EvalSummary> {
                 // so shorter choices get no free ride.
                 let start = prompt_len.saturating_sub(1).min(res.prompt_logprobs.len());
                 let span = &res.prompt_logprobs[start..];
-                let lp: f64 = span.iter().map(|&x| x as f64).sum::<f64>()
-                    / span.len().max(1) as f64;
+                // Requests rejected at admission (prompt+choice beyond the
+                // backend's KV capacity) come back with no logprobs; score
+                // them -inf so an oversized choice can never win argmax.
+                let lp = if span.is_empty() {
+                    f64::NEG_INFINITY
+                } else {
+                    span.iter().map(|&x| x as f64).sum::<f64>() / span.len() as f64
+                };
                 mc_scores[*item].push((*choice, lp));
             }
             Pending::Gen { item } => {
@@ -158,12 +164,12 @@ pub fn run_task(engine: &mut Engine, set: &TaskSet) -> Result<EvalSummary> {
             if mc_scores[i].is_empty() {
                 continue;
             }
-            let best = mc_scores[i]
+            let (best, best_lp) = *mc_scores[i]
                 .iter()
                 .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                .unwrap()
-                .0;
-            if best == *answer {
+                .unwrap();
+            // every choice rejected (capacity) -> scored as a miss
+            if best_lp.is_finite() && best == *answer {
                 hits += 1;
             }
         }

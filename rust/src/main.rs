@@ -6,13 +6,17 @@
 //!   eval        run one SynthBench task / perplexity at given knobs
 //!   table1..3   regenerate the paper's Tables 1/4, 2/5, 3/6
 //!   table7      qualitative generations vs k_ratio
-//!   fig2 fig3 fig5   regenerate the paper's figures (printed series)
+//!   fig2 fig3 fig5   regenerate the paper's figures (needs --features pjrt)
 //!   breakeven   §5 break-even measurement (native kernels)
-//!   selftest    engine smoke test against the artifacts
+//!   selftest    engine smoke test through the selected backend
+//!
+//! Backend selection (`--backend auto|native|pjrt`): `native` is the
+//! hermetic pure-rust reference backend (no artifacts needed, weights
+//! seeded from `--seed`); `pjrt` executes the AOT artifacts and requires
+//! building with `--features pjrt`; `auto` (default) picks pjrt when
+//! available and falls back to native.
 
 mod cli;
-
-use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -23,12 +27,13 @@ use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
 use aqua_serve::eval::experiments as exp;
 use aqua_serve::eval::ppl::{perplexity, PplConfig};
 use aqua_serve::eval::tasks::{run_task, TaskSet};
-use aqua_serve::runtime::{Artifacts, ModelRuntime};
+use aqua_serve::model::config::ModelConfig;
+use aqua_serve::runtime::{Artifacts, BackendSpec, ExecBackend};
 use aqua_serve::tokenizer::ByteTokenizer;
 use cli::Args;
 
 const USAGE: &str = "usage: aqua <serve|generate|eval|table1|table2|table3|table7|fig2|fig3|fig5|ablation|breakeven|selftest> [flags]
-common flags: --artifacts DIR --model NAME --k-ratio R --s-ratio R --h2o-ratio R --batch N --items N --fast";
+common flags: --backend auto|native|pjrt --seed N --artifacts DIR --model NAME --k-ratio R --s-ratio R --h2o-ratio R --batch N --items N --fast";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -65,6 +70,50 @@ fn sweep_opts(args: &Args) -> Result<exp::SweepOptions> {
     Ok(opt)
 }
 
+/// Resolve `--backend` into a spec. `auto` prefers the PJRT artifacts when
+/// the feature is compiled in and `make artifacts` has run.
+fn backend_spec(args: &Args, arts_dir: &str, model: &str) -> Result<BackendSpec> {
+    let choice = args.str("backend", "auto");
+    let seed = args.u64("seed", 0)?;
+    match choice.as_str() {
+        "native" => BackendSpec::native(ModelConfig::tiny(model), seed),
+        "pjrt" => pjrt_spec(arts_dir, model),
+        "auto" => aqua_serve::runtime::default_spec_in(arts_dir, model, seed),
+        other => bail!("unknown backend '{other}' (expected auto|native|pjrt)"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_spec(arts_dir: &str, model: &str) -> Result<BackendSpec> {
+    let arts = Artifacts::load(arts_dir)
+        .context("--backend pjrt needs artifacts (run `make artifacts`)")?;
+    Ok(BackendSpec::pjrt(arts.model(model)?.clone()))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_spec(_arts_dir: &str, _model: &str) -> Result<BackendSpec> {
+    bail!("--backend pjrt requires building with `--features pjrt`")
+}
+
+/// The npz-dump figure/ablation regenerators only exist on the PJRT path.
+#[cfg(feature = "pjrt")]
+fn run_figure(which: &str, arts_dir: &str, model: &str) -> Result<()> {
+    let arts = Artifacts::load(arts_dir)?;
+    match which {
+        "fig2" => exp::print_fig2(&exp::fig2(&arts, model)?),
+        "fig3" => exp::print_fig3(&exp::fig3(&arts, model)?),
+        "fig5" => exp::print_fig5(&exp::fig5(&arts, model)?),
+        "ablation" => exp::print_ablation(&exp::ablation_projection_source(&arts, model)?),
+        other => bail!("unknown figure '{other}'"),
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_figure(which: &str, _arts_dir: &str, _model: &str) -> Result<()> {
+    bail!("{which} reads the npz calibration dump; rebuild with `--features pjrt`")
+}
+
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     let arts_dir = args.str("artifacts", aqua_serve::ARTIFACTS_DIR);
@@ -75,21 +124,20 @@ fn run(argv: &[String]) -> Result<()> {
             let addr = args.str("addr", "127.0.0.1:8080");
             let aqua = aqua_from(&args)?;
             let batch = args.usize("batch", 4)?;
-            let arts = Artifacts::load(&arts_dir)?;
-            let mart = arts.model(&model)?.clone();
+            let spec = backend_spec(&args, &arts_dir, &model)?;
+            aqua_serve::log_info!("serving on the {} backend", spec.name());
+            let recipe = spec.recipe();
             let handle = EngineHandle::spawn(move || {
-                let rt = Arc::new(ModelRuntime::load(&mart)?);
-                Engine::new(rt, EngineConfig { batch, aqua, ..Default::default() })
+                Engine::new(recipe.build()?, EngineConfig { batch, aqua, ..Default::default() })
             });
             aqua_serve::server::serve(&addr, handle)
         }
         "generate" => {
             let prompt = args.str("prompt", "the capital of ");
             let max_new = args.usize("max-new", 64)?;
-            let arts = Artifacts::load(&arts_dir)?;
-            let rt = Arc::new(ModelRuntime::load(arts.model(&model)?)?);
-            let mut engine = Engine::new(
-                rt,
+            let spec = backend_spec(&args, &arts_dir, &model)?;
+            let mut engine = Engine::with_spec(
+                &spec,
                 EngineConfig { batch: 1, aqua: aqua_from(&args)?, ..Default::default() },
             )?;
             let tok = ByteTokenizer;
@@ -97,23 +145,25 @@ fn run(argv: &[String]) -> Result<()> {
             req.stop_token = Some(b'\n' as i32);
             let res = engine.run_batch(vec![req])?.remove(0);
             println!("{}{}", prompt, tok.decode(&res.tokens));
-            eprintln!("-- {} tokens, ttft {}µs, total {}µs, finish {:?}",
-                      res.tokens.len(), res.ttft_us, res.total_us, res.finish);
+            eprintln!("-- [{}] {} tokens, ttft {}µs, total {}µs, finish {:?}",
+                      engine.backend().name(), res.tokens.len(), res.ttft_us, res.total_us,
+                      res.finish);
             Ok(())
         }
         "eval" => {
-            let arts = Artifacts::load(&arts_dir)?;
-            let rt = Arc::new(ModelRuntime::load(arts.model(&model)?)?);
+            let arts = Artifacts::load(&arts_dir)
+                .context("eval needs the task/corpus artifacts (run `make artifacts`)")?;
+            let spec = backend_spec(&args, &arts_dir, &model)?;
             let opt = sweep_opts(&args)?;
-            let mut engine = Engine::new(
-                rt,
+            let mut engine = Engine::with_spec(
+                &spec,
                 EngineConfig { batch: opt.batch, aqua: aqua_from(&args)?, ..Default::default() },
             )?;
             let task = args.str("task", "all");
             if task == "ppl" || task == "all" {
                 let corpus = std::fs::read(arts.corpus_path("valid")?)?;
-                let p = perplexity(&mut engine, &corpus,
-                                   PplConfig { window: 256, windows: opt.ppl_windows })?;
+                let cfg = PplConfig::for_capacity(engine.model_config().max_seq, opt.ppl_windows);
+                let p = perplexity(&mut engine, &corpus, cfg)?;
                 println!("perplexity(valid) = {p:.3}");
             }
             for name in exp::TASK_ORDER {
@@ -132,56 +182,42 @@ fn run(argv: &[String]) -> Result<()> {
         }
         "table1" => {
             let arts = Artifacts::load(&arts_dir)?;
+            let spec = backend_spec(&args, &arts_dir, &model)?;
             let ratios = args.f64_list("ratios", &[0.9, 0.75, 0.5, 0.4, 0.3, 0.2, 0.1])?;
-            let rows = exp::table1(&arts, &model, &ratios, &sweep_opts(&args)?)?;
+            let rows = exp::table1(&arts, &spec, &ratios, &sweep_opts(&args)?)?;
             exp::print_table(&format!("Table 1/4 — standalone AQUA ({model})"), &rows);
             Ok(())
         }
         "table2" => {
             let arts = Artifacts::load(&arts_dir)?;
+            let spec = backend_spec(&args, &arts_dir, &model)?;
             let h2o = args.f64_list("h2o-ratios", &[0.25, 0.5, 0.75, 1.0])?;
             let k = args.f64_list("ratios", &[0.3, 0.5, 0.75, 1.0])?;
-            let rows = exp::table2(&arts, &model, &h2o, &k, &sweep_opts(&args)?)?;
+            let rows = exp::table2(&arts, &spec, &h2o, &k, &sweep_opts(&args)?)?;
             exp::print_table(&format!("Table 2/5 — AQUA-H2O ({model})"), &rows);
             Ok(())
         }
         "table3" => {
             let arts = Artifacts::load(&arts_dir)?;
+            let spec = backend_spec(&args, &arts_dir, &model)?;
             let s = args.f64_list("s-ratios", &[0.1, 0.25])?;
             let k = args.f64_list("ratios", &[0.75, 0.9, 1.0])?;
-            let rows = exp::table3(&arts, &model, &s, &k, &sweep_opts(&args)?)?;
+            let rows = exp::table3(&arts, &spec, &s, &k, &sweep_opts(&args)?)?;
             exp::print_table(&format!("Table 3/6 — AQUA-Memory ({model})"), &rows);
             Ok(())
         }
         "table7" => {
-            let arts = Artifacts::load(&arts_dir)?;
+            let spec = backend_spec(&args, &arts_dir, &model)?;
             let prompt = args.str("prompt", "the capital of ");
             let ratios = args.f64_list("ratios", &[1.0, 0.9, 0.75, 0.5, 0.4, 0.3, 0.2])?;
             println!("# Table 7 — qualitative generations (greedy), prompt: {prompt:?}");
-            for (label, text) in exp::table7(&arts, &model, &prompt, &ratios)? {
+            for (label, text) in exp::table7(&spec, &prompt, &ratios)? {
                 println!("k_ratio {label:<16} | {text:?}");
             }
             Ok(())
         }
-        "fig2" => {
-            let arts = Artifacts::load(&arts_dir)?;
-            exp::print_fig2(&exp::fig2(&arts, &model)?);
-            Ok(())
-        }
-        "fig3" => {
-            let arts = Artifacts::load(&arts_dir)?;
-            exp::print_fig3(&exp::fig3(&arts, &model)?);
-            Ok(())
-        }
-        "fig5" => {
-            let arts = Artifacts::load(&arts_dir)?;
-            exp::print_fig5(&exp::fig5(&arts, &model)?);
-            Ok(())
-        }
-        "ablation" => {
-            let arts = Artifacts::load(&arts_dir)?;
-            exp::print_ablation(&exp::ablation_projection_source(&arts, &model)?);
-            Ok(())
+        "fig2" | "fig3" | "fig5" | "ablation" => {
+            run_figure(args.subcommand.as_str(), &arts_dir, &model)
         }
         "breakeven" => {
             let bencher = if args.switch("fast") { Bencher::quick() } else { Bencher::default() };
@@ -195,9 +231,11 @@ fn run(argv: &[String]) -> Result<()> {
             Ok(())
         }
         "selftest" => {
-            let arts = Artifacts::load(&arts_dir)?;
-            let rt = Arc::new(ModelRuntime::load(arts.model(&model)?)?);
-            let mut engine = Engine::new(rt, EngineConfig { batch: 4, ..Default::default() })?;
+            let spec = backend_spec(&args, &arts_dir, &model)?;
+            let mut engine = Engine::with_spec(
+                &spec,
+                EngineConfig { batch: 4, aqua: aqua_from(&args)?, ..Default::default() },
+            )?;
             let tok = ByteTokenizer;
             let reqs: Vec<GenRequest> = (0..6)
                 .map(|i| {
@@ -215,7 +253,7 @@ fn run(argv: &[String]) -> Result<()> {
                 println!("req {}: {:?} ({:?})", r.id, tok.decode(&r.tokens), r.finish);
             }
             println!("{}", engine.metrics.snapshot().report());
-            println!("selftest OK");
+            println!("selftest OK ({} backend)", engine.backend().name());
             Ok(())
         }
         other => bail!("unknown subcommand '{other}'\n{USAGE}"),

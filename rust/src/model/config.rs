@@ -45,6 +45,26 @@ impl ModelConfig {
         Ok(cfg)
     }
 
+    /// Shape for the hermetic native backend: small enough that engine
+    /// integration tests run in milliseconds, structured enough (GQA,
+    /// multiple layers, byte vocab) to exercise every serving-path branch.
+    pub fn tiny(name: &str) -> ModelConfig {
+        ModelConfig {
+            name: name.to_string(),
+            vocab: crate::tokenizer::VOCAB,
+            d_model: 32,
+            n_layers: 2,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 64,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+            max_seq: 160,
+            train_seq: 64,
+        }
+    }
+
     /// GQA group size N_Q (paper §6.3).
     pub fn group_size(&self) -> usize {
         self.n_q_heads / self.n_kv_heads
@@ -79,6 +99,15 @@ mod tests {
         assert_eq!(c.group_size(), 4);
         assert!(!c.is_mha());
         assert_eq!(c.cache_row_elems(), 512 * 32);
+    }
+
+    #[test]
+    fn tiny_is_well_formed() {
+        let c = ModelConfig::tiny("native-test");
+        assert_eq!(c.vocab, 256);
+        assert_eq!(c.n_q_heads % c.n_kv_heads, 0);
+        assert!(c.d_head >= 4 && c.max_seq >= 2 * c.train_seq);
+        assert_eq!(c.group_size(), 2);
     }
 
     #[test]

@@ -1,0 +1,400 @@
+//! Pluggable execution backends: the contract between the coordinator and
+//! whatever actually runs the model.
+//!
+//! The engine consumes exactly three operations — allocate/zero the KV
+//! caches for a batch, run one prefill chunk, run one decode step — plus
+//! logits/attention readback. [`ExecBackend`] captures that surface; the
+//! caches themselves are *owned by the backend* (PJRT keeps them as
+//! device literals, the native backend as plain `Vec<f32>`), while the
+//! engine stays the authority on slot validity via the `slot_mask` input
+//! it passes on every call (see `coordinator::kvcache`).
+//!
+//! Implementations:
+//! * [`super::native::NativeBackend`] — hermetic pure-rust reference
+//!   backend (default; makes the full serving path testable offline).
+//! * `runtime::exec::ModelRuntime` behind [`PjrtBackend`] — the
+//!   AOT-compiled PJRT production path (`--features pjrt`).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::native::{synthetic_corpus, NativeBackend, NativeModel};
+use crate::aqua::policy::AquaConfig;
+use crate::model::config::ModelConfig;
+
+#[cfg(feature = "pjrt")]
+use super::artifacts::ModelArtifacts;
+#[cfg(feature = "pjrt")]
+use super::exec::ModelRuntime;
+
+/// Resolved AQUA runtime inputs for one prefill/decode call (the knobs are
+/// *inputs*, not compile-time state — switching configs never recompiles).
+#[derive(Debug, Clone)]
+pub struct AquaKnobs {
+    /// Top-k dims retained by the dynamic magnitude selection (≤ d_head).
+    pub k_dims: usize,
+    /// [d_head] AQUA-Memory static keep mask (leading dims kept).
+    pub dim_keep: Vec<f32>,
+    /// Calibrated projection on (false = identity P: exact baseline).
+    pub use_projection: bool,
+}
+
+impl AquaKnobs {
+    pub fn from_config(aqua: &AquaConfig, d_head: usize) -> AquaKnobs {
+        AquaKnobs {
+            k_dims: aqua.k_dims(d_head),
+            dim_keep: aqua.dim_keep_mask(d_head),
+            use_projection: aqua.use_projection,
+        }
+    }
+
+    /// Exact standard attention (k = d, all dims kept, identity P).
+    pub fn exact(d_head: usize) -> AquaKnobs {
+        AquaKnobs { k_dims: d_head, dim_keep: vec![1.0; d_head], use_projection: false }
+    }
+}
+
+/// Outputs of one backend step (prefill chunk or decode step).
+pub struct StepOut {
+    /// Decode: [B, vocab]. Prefill: [B, C, vocab]. Row-major.
+    pub logits: Vec<f32>,
+    /// [L, B, S] attention mass per KV slot accumulated over this call
+    /// (summed over query heads, and over the chunk for prefill) — the
+    /// H2O policy's food.
+    pub attn_acc: Vec<f32>,
+}
+
+/// One served model's execution surface. Object-safe: the engine holds a
+/// `Box<dyn ExecBackend>` and never learns which implementation it drives.
+pub trait ExecBackend {
+    /// Short implementation tag for logs/UIs ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// The model being served.
+    fn model_config(&self) -> &ModelConfig;
+
+    /// Tokens consumed per lane per prefill call.
+    fn prefill_chunk(&self) -> usize;
+
+    /// Allocate (or reset) zeroed KV caches for `b` lanes. Must be called
+    /// before the first prefill/decode and whenever the batch size changes.
+    fn empty_cache(&mut self, b: usize) -> Result<()>;
+
+    /// One prefill chunk: `tokens` is [B, C] row-major, `pos0` the per-lane
+    /// write position of the chunk's first token, `slot_mask` [B, S] the
+    /// currently attendable slots (freshly written chunk positions become
+    /// attendable causally within the call). Token values `< 0` are
+    /// padding/dead positions: backends may skip them and their logits are
+    /// unspecified (the engine never reads them).
+    fn prefill(
+        &mut self,
+        b: usize,
+        tokens: &[i32],
+        pos0: &[i32],
+        slot_mask: &[f32],
+        knobs: &AquaKnobs,
+    ) -> Result<StepOut>;
+
+    /// One decode step: `tokens`/`pos` are [B]; each lane's token is
+    /// written at `pos` and attends over `slot_mask` ∪ {pos}. Token values
+    /// `< 0` mark dead lanes (same contract as prefill padding).
+    fn decode(
+        &mut self,
+        b: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        slot_mask: &[f32],
+        knobs: &AquaKnobs,
+    ) -> Result<StepOut>;
+}
+
+// ---------------------------------------------------------------------------
+// PJRT adapter
+// ---------------------------------------------------------------------------
+
+/// `ModelRuntime` behind the trait: caches round-trip as device literals
+/// owned here; the runtime (params + compiled executables) is shared.
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend {
+    rt: Arc<ModelRuntime>,
+    cache: Option<(xla::Literal, xla::Literal)>,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    pub fn new(rt: Arc<ModelRuntime>) -> PjrtBackend {
+        PjrtBackend { rt, cache: None }
+    }
+
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.rt
+    }
+
+    fn caches(&self) -> Result<(&xla::Literal, &xla::Literal)> {
+        let (k, v) = self
+            .cache
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("PjrtBackend: empty_cache not called"))?;
+        Ok((k, v))
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn model_config(&self) -> &ModelConfig {
+        &self.rt.cfg
+    }
+
+    fn prefill_chunk(&self) -> usize {
+        self.rt.prefill_chunk
+    }
+
+    fn empty_cache(&mut self, b: usize) -> Result<()> {
+        self.cache = Some(self.rt.empty_cache(b)?);
+        Ok(())
+    }
+
+    fn prefill(
+        &mut self,
+        b: usize,
+        tokens: &[i32],
+        pos0: &[i32],
+        slot_mask: &[f32],
+        knobs: &AquaKnobs,
+    ) -> Result<StepOut> {
+        // The AOT executables have fixed shapes and gather embed[token]
+        // unconditionally — map the `< 0` padding sentinel back to the
+        // harmless token 0 they were compiled against.
+        let toks: Vec<i32> = tokens.iter().map(|&t| t.max(0)).collect();
+        let (k, v) = self.caches()?;
+        let out = self.rt.prefill(
+            b,
+            &toks,
+            pos0,
+            k,
+            v,
+            slot_mask,
+            knobs.k_dims as i32,
+            &knobs.dim_keep,
+            knobs.use_projection,
+        )?;
+        self.cache = Some((out.k_cache, out.v_cache));
+        Ok(StepOut { logits: out.logits, attn_acc: out.attn_acc })
+    }
+
+    fn decode(
+        &mut self,
+        b: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        slot_mask: &[f32],
+        knobs: &AquaKnobs,
+    ) -> Result<StepOut> {
+        let toks: Vec<i32> = tokens.iter().map(|&t| t.max(0)).collect();
+        let (k, v) = self.caches()?;
+        let out = self.rt.decode(
+            b,
+            &toks,
+            pos,
+            k,
+            v,
+            slot_mask,
+            knobs.k_dims as i32,
+            &knobs.dim_keep,
+            knobs.use_projection,
+        )?;
+        self.cache = Some((out.k_cache, out.v_cache));
+        Ok(StepOut { logits: out.logits, attn_acc: out.attn_acc })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend selection surface
+// ---------------------------------------------------------------------------
+
+/// A `Send`-able recipe that constructs its backend *on the calling
+/// thread* — required for `EngineHandle::spawn`, because PJRT handles are
+/// not `Send` (the native model, plain f32 buffers, is).
+pub enum BackendRecipe {
+    Native(Arc<NativeModel>),
+    #[cfg(feature = "pjrt")]
+    Pjrt(ModelArtifacts),
+}
+
+impl BackendRecipe {
+    pub fn build(&self) -> Result<Box<dyn ExecBackend>> {
+        match self {
+            BackendRecipe::Native(model) => {
+                Ok(Box::new(NativeBackend::from_model(model.clone())))
+            }
+            #[cfg(feature = "pjrt")]
+            BackendRecipe::Pjrt(mart) => {
+                let rt = Arc::new(ModelRuntime::load(mart)?);
+                Ok(Box::new(PjrtBackend::new(rt)))
+            }
+        }
+    }
+}
+
+/// How to construct backends for one serving/eval session. Sweeps build
+/// one engine per operating point; the spec shares the expensive state
+/// across builds (native weights; the PJRT runtime with its compiled
+/// executables, memoized on first use).
+pub enum BackendSpec {
+    Native(Arc<NativeModel>),
+    #[cfg(feature = "pjrt")]
+    Pjrt {
+        mart: ModelArtifacts,
+        rt: std::cell::RefCell<Option<Arc<ModelRuntime>>>,
+    },
+}
+
+impl BackendSpec {
+    /// Hermetic native backend: a deterministic tiny transformer seeded
+    /// from `seed` (see `NativeModel`).
+    pub fn native(cfg: ModelConfig, seed: u64) -> Result<BackendSpec> {
+        Ok(BackendSpec::Native(Arc::new(NativeModel::new(cfg, seed)?)))
+    }
+
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(mart: ModelArtifacts) -> BackendSpec {
+        BackendSpec::Pjrt { mart, rt: std::cell::RefCell::new(None) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendSpec::Native(_) => "native",
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt { .. } => "pjrt",
+        }
+    }
+
+    pub fn model_config(&self) -> &ModelConfig {
+        match self {
+            BackendSpec::Native(m) => &m.cfg,
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt { mart, .. } => &mart.config,
+        }
+    }
+
+    /// Longest prompt a request generating `gen_len` tokens can carry
+    /// without being rejected at admission (`prompt + max_new <= max_seq`).
+    /// Workload builders clamp their corpus cuts with this. If the KV
+    /// capacity cannot fit `gen_len` plus one prompt byte, no length
+    /// passes admission — shrink `gen_len` in that case.
+    pub fn max_prompt(&self, gen_len: usize) -> usize {
+        self.model_config().max_seq.saturating_sub(gen_len).max(1)
+    }
+
+    pub fn build(&self) -> Result<Box<dyn ExecBackend>> {
+        match self {
+            BackendSpec::Native(model) => {
+                Ok(Box::new(NativeBackend::from_model(model.clone())))
+            }
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt { mart, rt } => {
+                let mut slot = rt.borrow_mut();
+                if slot.is_none() {
+                    *slot = Some(Arc::new(ModelRuntime::load(mart)?));
+                }
+                Ok(Box::new(PjrtBackend::new(slot.as_ref().unwrap().clone())))
+            }
+        }
+    }
+
+    /// A `Send` recipe for constructing this spec's backend on another
+    /// thread (the threaded engine front-end).
+    pub fn recipe(&self) -> BackendRecipe {
+        match self {
+            BackendSpec::Native(m) => BackendRecipe::Native(m.clone()),
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt { mart, .. } => BackendRecipe::Pjrt(mart.clone()),
+        }
+    }
+}
+
+/// The auto-selection policy: the PJRT artifacts under `arts_dir` when the
+/// feature is on and `make artifacts` has run, the hermetic native backend
+/// otherwise. The CLI's `--backend auto` and `default_spec` both route
+/// through here so the fallback rule lives in one place.
+pub fn default_spec_in(arts_dir: &str, model: &str, seed: u64) -> Result<BackendSpec> {
+    #[cfg(feature = "pjrt")]
+    {
+        if let Ok(arts) = super::Artifacts::load(arts_dir) {
+            if let Ok(mart) = arts.model(model) {
+                return Ok(BackendSpec::pjrt(mart.clone()));
+            }
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    let _ = arts_dir;
+    BackendSpec::native(ModelConfig::tiny(model), seed)
+}
+
+/// `default_spec_in` against the default artifacts directory.
+pub fn default_spec(model: &str, seed: u64) -> Result<BackendSpec> {
+    default_spec_in(crate::ARTIFACTS_DIR, model, seed)
+}
+
+/// Convenience: `default_spec(..).build()`.
+pub fn default_backend(model: &str, seed: u64) -> Result<Box<dyn ExecBackend>> {
+    default_spec(model, seed)?.build()
+}
+
+/// The artifacts' validation corpus when present, else a deterministic
+/// synthetic corpus — so corpus-driven examples/benches run hermetically.
+pub fn corpus_or_synthetic(bytes: usize) -> Vec<u8> {
+    if let Ok(arts) = super::Artifacts::load(crate::ARTIFACTS_DIR) {
+        if let Ok(path) = arts.corpus_path("valid") {
+            if let Ok(data) = std::fs::read(path) {
+                if !data.is_empty() {
+                    return data;
+                }
+            }
+        }
+    }
+    synthetic_corpus(bytes, 0xC0FFEE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knobs_resolve_from_config() {
+        let aqua = AquaConfig { k_ratio: 0.5, ..Default::default() };
+        let k = AquaKnobs::from_config(&aqua, 8);
+        assert_eq!(k.k_dims, 4);
+        assert_eq!(k.dim_keep, vec![1.0; 8]);
+        assert!(k.use_projection);
+        let e = AquaKnobs::exact(4);
+        assert_eq!(e.k_dims, 4);
+        assert!(!e.use_projection);
+    }
+
+    #[test]
+    fn default_spec_is_native_without_artifacts() {
+        // Hermetic environments have no artifacts dir; the spec must fall
+        // back to the native backend and still build an engine-ready
+        // backend either way.
+        let spec = default_spec("llama-analog", 7).unwrap();
+        let mut be = spec.build().unwrap();
+        be.empty_cache(2).unwrap();
+        assert!(!be.model_config().name.is_empty());
+        assert!(be.prefill_chunk() > 0);
+        // clamped workload prompts always pass the admission check
+        assert!(spec.max_prompt(48) + 48 <= spec.model_config().max_seq);
+    }
+
+    #[test]
+    fn corpus_fallback_is_nonempty_text() {
+        let c = corpus_or_synthetic(4096);
+        assert!(c.len() >= 1024);
+        assert!(c.contains(&b'\n'));
+    }
+}

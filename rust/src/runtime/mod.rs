@@ -1,12 +1,31 @@
-//! PJRT runtime: loads the AOT artifacts produced by `make artifacts` and
-//! executes them on the request path.
+//! Execution runtimes behind the [`backend::ExecBackend`] trait.
 //!
-//! * [`artifacts`] — manifest.json parsing, model/corpus/task locations.
-//! * [`exec`] — HLO-text → compiled executable registry + typed call
-//!   wrappers for the decode/prefill entry points.
+//! * [`backend`] — the pluggable-backend contract the engine consumes
+//!   (empty_cache / prefill / decode with AQUA knob inputs), plus the
+//!   [`backend::BackendSpec`] selection surface and the PJRT adapter.
+//! * [`native`] — hermetic pure-rust reference backend (default): a tiny
+//!   deterministic transformer on `tensor::core` + `aqua::native`, real KV
+//!   tensors owned in rust. Makes the full serving path testable offline.
+//! * [`artifacts`] — manifest.json parsing, model/corpus/task locations
+//!   (feature-independent: the eval harness reads tasks from here).
+//! * [`exec`] (`--features pjrt`) — PJRT client, HLO-text → compiled
+//!   executable registry, typed decode/prefill call wrappers.
 
 pub mod artifacts;
+pub mod backend;
+pub mod native;
+
+#[cfg(feature = "pjrt")]
 pub mod exec;
 
 pub use artifacts::{Artifacts, ModelArtifacts};
+pub use backend::{
+    corpus_or_synthetic, default_backend, default_spec, default_spec_in, AquaKnobs, BackendRecipe,
+    BackendSpec, ExecBackend, StepOut,
+};
+pub use native::{synthetic_corpus, NativeBackend, NativeModel};
+
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
+#[cfg(feature = "pjrt")]
 pub use exec::{DecodeOut, ModelRuntime, PrefillOut};

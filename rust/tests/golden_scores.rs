@@ -1,0 +1,111 @@
+//! Golden parity: the AQUA score kernels against checked-in integer
+//! fixtures (exact in f32), and the sparse path against dense end-to-end
+//! through the engine on the native backend. Hermetic — no artifacts.
+
+use aqua_serve::aqua::native::{aqua_scores_masked, aqua_scores_sparse, dense_scores};
+use aqua_serve::aqua::policy::AquaConfig;
+use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use aqua_serve::model::config::ModelConfig;
+use aqua_serve::runtime::BackendSpec;
+use aqua_serve::tensor::topk::{topk_indices_by_abs, topk_mask_by_abs};
+use aqua_serve::tokenizer::ByteTokenizer;
+use aqua_serve::util::json::Json;
+
+fn fixture() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/aqua_scores.json");
+    let text = std::fs::read_to_string(path).expect("fixture file");
+    Json::parse(&text).expect("fixture json")
+}
+
+fn f32s(j: &Json) -> Vec<f32> {
+    j.as_arr().expect("array").iter().map(|v| v.as_f64().unwrap() as f32).collect()
+}
+
+#[test]
+fn kernels_match_checked_in_fixtures() {
+    let fix = fixture();
+    let d = fix.req_i64("d").unwrap() as usize;
+    let seq = fix.req_i64("seq").unwrap() as usize;
+    let q = f32s(fix.get("q"));
+    let keys = f32s(fix.get("keys"));
+    let dense_expected = f32s(fix.get("dense"));
+    assert_eq!(q.len(), d);
+    assert_eq!(keys.len(), seq * d);
+
+    // dense baseline matches
+    let mut out = vec![0.0f32; seq];
+    dense_scores(&q, &keys, seq, d, &mut out);
+    assert_eq!(out, dense_expected, "dense_scores drifted from fixture");
+
+    // every k case: sparse gather == masked-dense == fixture (exact — the
+    // fixture is integer-valued, so no tolerance is needed)
+    let cases = fix.get("cases").as_arr().expect("cases");
+    assert_eq!(cases.len(), 3, "fixture should cover k in {{d/4, d/2, d}}");
+    for case in cases {
+        let k = case.req_i64("k").unwrap() as usize;
+        let expected = f32s(case.get("expected"));
+        let dims: Vec<usize> = case
+            .get("topk_dims")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap() as usize)
+            .collect();
+        assert_eq!(topk_indices_by_abs(&q, k), dims, "selection drifted at k={k}");
+
+        let mut sparse = vec![0.0f32; seq];
+        aqua_scores_sparse(&q, &keys, seq, d, k, &mut sparse);
+        assert_eq!(sparse, expected, "sparse kernel vs fixture at k={k}");
+
+        let mask = topk_mask_by_abs(&q, k);
+        let mut masked = vec![0.0f32; seq];
+        aqua_scores_masked(&q, &mask, &keys, seq, d, &mut masked);
+        assert_eq!(masked, expected, "masked kernel vs fixture at k={k}");
+
+        if k == d {
+            assert_eq!(sparse, dense_expected, "k=d must equal dense");
+        }
+    }
+}
+
+/// End-to-end through the engine: at k = d the sparse path must equal the
+/// dense baseline (teacher-forced logprobs agree to f32 rounding), while
+/// k < d must actually change the scores — both on the native backend.
+#[test]
+fn sparse_equals_dense_at_k_d_through_engine() {
+    let spec = BackendSpec::native(ModelConfig::tiny("golden"), 0xD00D).unwrap();
+    let tok = ByteTokenizer;
+    let prompt = tok.encode("the capital of velor is tamrin and the sea is cold");
+
+    let score = |aqua: AquaConfig| -> Vec<f32> {
+        let mut engine = Engine::with_spec(
+            &spec,
+            EngineConfig { batch: 1, aqua, ..Default::default() },
+        )
+        .unwrap();
+        let mut req = GenRequest::new(1, prompt.clone(), 0);
+        req.score_only = true;
+        engine.run_batch(vec![req]).unwrap().remove(0).prompt_logprobs
+    };
+
+    // identity P, k = d: exact standard attention
+    let baseline = score(AquaConfig::baseline());
+    // orthogonal P, k = d: sparse-at-full-width + rotation — still exact
+    let full = score(AquaConfig { k_ratio: 1.0, ..Default::default() });
+    assert_eq!(baseline.len(), prompt.len() - 1);
+    let max_diff = baseline
+        .iter()
+        .zip(&full)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 2e-3, "k=d sparse path deviates from dense by {max_diff}");
+
+    // k = d/4: the knob must bite
+    let pruned = score(AquaConfig { k_ratio: 0.25, ..Default::default() });
+    let max_diff = baseline
+        .iter()
+        .zip(&pruned)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff > 1e-3, "k=d/4 left the scores untouched ({max_diff})");
+}

@@ -2,18 +2,24 @@
 //! engine. One #[test] per concern-group, executed sequentially inside
 //! (PJRT handles are !Send; a single ModelRuntime is reused).
 //!
-//! Skipped (pass trivially) when artifacts are not built.
+//! Skipped (pass trivially) when artifacts are not built. The hermetic
+//! equivalents that always run live in `integration_native.rs`.
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 
 use aqua_serve::aqua::policy::AquaConfig;
 use aqua_serve::coordinator::{Engine, EngineConfig, FinishReason, GenRequest};
-use aqua_serve::runtime::{Artifacts, ModelRuntime};
+use aqua_serve::runtime::{Artifacts, ExecBackend, ModelRuntime, PjrtBackend};
 use aqua_serve::tokenizer::ByteTokenizer;
 
 fn artifacts() -> Option<Artifacts> {
     let a = Artifacts::load(aqua_serve::ARTIFACTS_DIR).ok()?;
     Some(a)
+}
+
+fn backend(rt: &Arc<ModelRuntime>) -> Box<dyn ExecBackend> {
+    Box::new(PjrtBackend::new(rt.clone()))
 }
 
 fn greedy(engine: &mut Engine, prompt: &str, n: usize) -> (String, FinishReason) {
@@ -33,14 +39,14 @@ fn engine_end_to_end() {
     let rt = Arc::new(ModelRuntime::load(arts.model("llama-analog").unwrap()).unwrap());
 
     // --- determinism: greedy generation is reproducible -------------------
-    let mut e1 = Engine::new(rt.clone(), EngineConfig { batch: 1, ..Default::default() }).unwrap();
+    let mut e1 = Engine::new(backend(&rt), EngineConfig { batch: 1, ..Default::default() }).unwrap();
     let (a, _) = greedy(&mut e1, "the capital of ", 24);
     let (b, _) = greedy(&mut e1, "the capital of ", 24);
     assert_eq!(a, b, "greedy generation must be deterministic");
     assert!(!a.is_empty());
 
     // --- batch invariance: B=1 and B=4 lanes give the same greedy text ----
-    let mut e4 = Engine::new(rt.clone(), EngineConfig { batch: 4, ..Default::default() }).unwrap();
+    let mut e4 = Engine::new(backend(&rt), EngineConfig { batch: 4, ..Default::default() }).unwrap();
     let tok = ByteTokenizer;
     let reqs: Vec<GenRequest> = (0..4)
         .map(|i| {
@@ -79,13 +85,13 @@ fn engine_end_to_end() {
     // k_ratio=1.0 + calibrated orthogonal P must match the identity-P
     // baseline (Lemma A.4), end to end.
     let mut eb = Engine::new(
-        rt.clone(),
+        backend(&rt),
         EngineConfig { batch: 1, aqua: AquaConfig::baseline(), ..Default::default() },
     )
     .unwrap();
     let (base, _) = greedy(&mut eb, "the color of ", 24);
     let mut ep = Engine::new(
-        rt.clone(),
+        backend(&rt),
         EngineConfig {
             batch: 1,
             aqua: AquaConfig { k_ratio: 1.0, ..Default::default() },
@@ -113,7 +119,7 @@ fn engine_end_to_end() {
     };
     let base_lp = score(&mut eb);
     let mut e75 = Engine::new(
-        rt.clone(),
+        backend(&rt),
         EngineConfig {
             batch: 1,
             aqua: AquaConfig { k_ratio: 0.75, ..Default::default() },
@@ -123,7 +129,7 @@ fn engine_end_to_end() {
     .unwrap();
     let lp75 = score(&mut e75);
     let mut e10 = Engine::new(
-        rt.clone(),
+        backend(&rt),
         EngineConfig {
             batch: 1,
             aqua: AquaConfig { k_ratio: 0.1, ..Default::default() },
@@ -139,7 +145,7 @@ fn engine_end_to_end() {
     let corpus = std::fs::read(arts.corpus_path("valid").unwrap()).unwrap();
     let long_prompt = tok.encode_bytes(&corpus[..300]);
     let mut eh = Engine::new(
-        rt.clone(),
+        backend(&rt),
         EngineConfig {
             batch: 1,
             aqua: AquaConfig { k_ratio: 0.75, h2o_ratio: 0.25, ..Default::default() },
@@ -161,7 +167,7 @@ fn engine_end_to_end() {
 
     // --- AQUA-Memory: dim slice still produces coherent output -------------
     let mut em = Engine::new(
-        rt.clone(),
+        backend(&rt),
         EngineConfig {
             batch: 1,
             aqua: AquaConfig { k_ratio: 0.9, s_ratio: 0.1, ..Default::default() },

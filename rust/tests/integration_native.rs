@@ -1,0 +1,246 @@
+//! Hermetic integration tests: the full serving path (admission →
+//! continuous batching → prefill/decode → H2O → sampling → metrics) driven
+//! end-to-end through the native `ExecBackend`. No artifacts, no network —
+//! this is the tier-1 proof that the engine works.
+
+use aqua_serve::aqua::policy::AquaConfig;
+use aqua_serve::coordinator::{Engine, EngineConfig, FinishReason, GenRequest};
+use aqua_serve::model::config::ModelConfig;
+use aqua_serve::runtime::{synthetic_corpus, BackendSpec};
+use aqua_serve::tokenizer::ByteTokenizer;
+
+fn spec() -> BackendSpec {
+    BackendSpec::native(ModelConfig::tiny("native-test"), 42).unwrap()
+}
+
+/// AQUA sparsity on (k_dims = 6 < d = 8) for the whole batch run.
+fn sparse_aqua() -> AquaConfig {
+    AquaConfig { k_ratio: 0.75, ..Default::default() }
+}
+
+fn engine(spec: &BackendSpec, batch: usize) -> Engine {
+    Engine::with_spec(
+        spec,
+        EngineConfig { batch, aqua: sparse_aqua(), ..Default::default() },
+    )
+    .unwrap()
+}
+
+#[test]
+fn run_batch_end_to_end_with_aqua_sparsity() {
+    let spec = spec();
+    let max_seq = spec.model_config().max_seq;
+    assert_eq!(max_seq, 160, "test assumes the tiny preset capacity");
+    let tok = ByteTokenizer;
+    let corpus = synthetic_corpus(4096, 9);
+
+    // Mixed prompt lengths, mixed max_new, score-only, and two rejects.
+    let prompts: Vec<(usize, usize, bool)> = vec![
+        (12, 8, false),  // short prompt, short gen
+        (30, 16, false), // medium
+        (3, 4, false),   // tiny
+        (20, 0, true),   // score-only
+        (60, 100, false),// fills the KV cache exactly (60 + 100 = max_seq)
+    ];
+    let mut reqs = vec![];
+    for (i, &(plen, max_new, score)) in prompts.iter().enumerate() {
+        let mut r = GenRequest::new(
+            i as u64 + 1,
+            tok.encode_bytes(&corpus[i * 97..i * 97 + plen]),
+            max_new,
+        );
+        r.score_only = score;
+        reqs.push(r);
+    }
+    reqs.push(GenRequest::new(6, vec![1i32; max_seq + 40], 4)); // too long
+    reqs.push(GenRequest::new(7, vec![], 4)); // empty prompt
+
+    let mut e = engine(&spec, 4);
+    let results = e.run_batch(reqs.clone()).unwrap();
+
+    // --- completion order: results come back in submission order ----------
+    let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    assert_eq!(ids, vec![1, 2, 3, 4, 5, 6, 7]);
+
+    // --- finish reasons ----------------------------------------------------
+    for (i, &(_, max_new, score)) in prompts.iter().enumerate() {
+        let r = &results[i];
+        assert_eq!(r.finish, FinishReason::Length, "req {} finish", r.id);
+        if score {
+            assert!(r.tokens.is_empty());
+        } else {
+            assert_eq!(r.tokens.len(), max_new, "req {} length", r.id);
+            assert_eq!(r.gen_logprobs.len(), max_new);
+            assert!(r.gen_logprobs.iter().all(|&lp| lp <= 0.0 && lp.is_finite()));
+            assert!(r.ttft_us <= r.total_us);
+        }
+    }
+    assert_eq!(results[5].finish, FinishReason::PromptTooLong);
+    assert_eq!(results[6].finish, FinishReason::PromptTooLong);
+    assert!(results[5].tokens.is_empty() && results[6].tokens.is_empty());
+
+    // score-only returns teacher-forced logprobs over the whole prompt
+    let score_res = &results[3];
+    assert_eq!(score_res.prompt_logprobs.len(), prompts[3].0 - 1);
+    assert!(score_res.prompt_logprobs.iter().all(|&lp| lp <= 0.0 && lp.is_finite()));
+
+    // --- metrics reconcile with the emitted tokens -------------------------
+    let s = e.metrics.snapshot();
+    let admitted: u64 = prompts.len() as u64; // both rejects never ran
+    assert_eq!(s.requests_done, admitted);
+    let expected_prompt_tokens: u64 = prompts.iter().map(|&(p, _, _)| p as u64).sum();
+    assert_eq!(s.prompt_tokens, expected_prompt_tokens);
+    // every request's first token is sampled during prefill; the rest are
+    // decode-generated, one per live lane per decode call
+    let expected_decode_tokens: u64 = results
+        .iter()
+        .map(|r| (r.tokens.len() as u64).saturating_sub(1))
+        .sum();
+    assert_eq!(s.tokens_generated, expected_decode_tokens);
+    assert!(s.decode_calls > 0 && s.prefill_calls > 0);
+
+    // --- determinism: a fresh engine over the same spec reproduces ---------
+    let mut e2 = engine(&spec, 4);
+    let again = e2.run_batch(reqs).unwrap();
+    for (a, b) in results.iter().zip(&again) {
+        assert_eq!(a.tokens, b.tokens, "req {} not deterministic", a.id);
+        assert_eq!(a.finish, b.finish);
+    }
+}
+
+#[test]
+fn batch_lanes_match_single_lane_runs() {
+    let spec = spec();
+    let tok = ByteTokenizer;
+    let corpus = synthetic_corpus(2048, 3);
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|i| tok.encode_bytes(&corpus[i * 53..i * 53 + 10 + 7 * i]))
+        .collect();
+
+    // batch of 4 (mixed lengths finish at different times → lane churn)
+    let mut e4 = engine(&spec, 4);
+    let reqs: Vec<GenRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| GenRequest::new(i as u64 + 1, p.clone(), 12))
+        .collect();
+    let batched = e4.run_batch(reqs).unwrap();
+
+    // each prompt alone at batch=1 must produce identical greedy tokens
+    for (i, p) in prompts.iter().enumerate() {
+        let mut e1 = engine(&spec, 1);
+        let single = e1
+            .run_batch(vec![GenRequest::new(99, p.clone(), 12)])
+            .unwrap()
+            .remove(0);
+        assert_eq!(batched[i].tokens, single.tokens, "lane cross-talk on prompt {i}");
+    }
+}
+
+#[test]
+fn stop_token_finishes_with_stop_reason() {
+    let spec = spec();
+    let tok = ByteTokenizer;
+    let prompt = tok.encode("the capital of velor is ");
+
+    // discover what the model emits first, then stop on exactly that token
+    let mut probe = engine(&spec, 1);
+    let first = probe
+        .run_batch(vec![GenRequest::new(1, prompt.clone(), 4)])
+        .unwrap()
+        .remove(0)
+        .tokens[0];
+
+    let mut e = engine(&spec, 1);
+    let mut req = GenRequest::new(2, prompt, 16);
+    req.stop_token = Some(first);
+    let res = e.run_batch(vec![req]).unwrap().remove(0);
+    assert_eq!(res.finish, FinishReason::Stop);
+    assert_eq!(res.tokens, vec![first]);
+}
+
+#[test]
+fn h2o_eviction_engages_under_budget_pressure() {
+    let spec = spec();
+    let tok = ByteTokenizer;
+    let corpus = synthetic_corpus(2048, 5);
+    let long_prompt = tok.encode_bytes(&corpus[..120]);
+
+    let mut e = Engine::with_spec(
+        &spec,
+        EngineConfig {
+            batch: 1,
+            aqua: AquaConfig { k_ratio: 0.75, h2o_ratio: 0.25, ..Default::default() },
+            h2o_recent_window: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let res = e.run_batch(vec![GenRequest::new(1, long_prompt, 16)]).unwrap().remove(0);
+    assert_eq!(res.tokens.len(), 16);
+    assert!(res.gen_logprobs.iter().all(|&lp| lp.is_finite()));
+    assert!(e.metrics.snapshot().h2o_evictions > 0, "H2O at ratio 0.25 must evict");
+
+    // eviction off on the same spec: no evictions
+    let mut e_off = engine(&spec, 1);
+    let long_prompt = tok.encode_bytes(&corpus[..120]);
+    e_off.run_batch(vec![GenRequest::new(1, long_prompt, 16)]).unwrap();
+    assert_eq!(e_off.metrics.snapshot().h2o_evictions, 0);
+}
+
+#[test]
+fn rotation_invariance_through_the_engine() {
+    // Orthogonal P at k = d must match the identity-P baseline through the
+    // whole stack (Lemma A.4), measured on teacher-forced logprobs.
+    let spec = spec();
+    let tok = ByteTokenizer;
+    let prompt = tok.encode("the color of the sky is blue .");
+    let score = |aqua: AquaConfig| -> Vec<f32> {
+        let mut e = Engine::with_spec(
+            &spec,
+            EngineConfig { batch: 1, aqua, ..Default::default() },
+        )
+        .unwrap();
+        let mut r = GenRequest::new(1, prompt.clone(), 0);
+        r.score_only = true;
+        e.run_batch(vec![r]).unwrap().remove(0).prompt_logprobs
+    };
+    let base = score(AquaConfig::baseline());
+    let rot = score(AquaConfig { k_ratio: 1.0, ..Default::default() });
+    let diff = base.iter().zip(&rot).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(diff < 2e-3, "rotation changed teacher-forced scores by {diff}");
+
+    // moderate pruning stays closer to baseline than aggressive pruning
+    let sum = |v: &[f32]| v.iter().map(|&x| x as f64).sum::<f64>();
+    let lp75 = sum(&score(AquaConfig { k_ratio: 0.75, ..Default::default() }));
+    let lp25 = sum(&score(AquaConfig { k_ratio: 0.25, ..Default::default() }));
+    let b = sum(&base);
+    // (small slack: a random tiny model on one prompt is noisy, but the
+    // ordering must hold up to that noise)
+    assert!(
+        (b - lp75).abs() <= (b - lp25).abs() + 0.25,
+        "k=0.75 ({lp75:.3}) should be at least as close to baseline ({b:.3}) as k=0.25 ({lp25:.3})"
+    );
+}
+
+#[test]
+fn aqua_knobs_swap_mid_engine() {
+    let spec = spec();
+    let tok = ByteTokenizer;
+    let mut e = engine(&spec, 1);
+    let gen = |e: &mut Engine| -> Vec<i32> {
+        e.run_batch(vec![GenRequest::new(1, tok.encode("the king of "), 10)])
+            .unwrap()
+            .remove(0)
+            .tokens
+    };
+    let sparse = gen(&mut e);
+    e.with_aqua(AquaConfig::baseline());
+    let dense = gen(&mut e);
+    e.with_aqua(sparse_aqua());
+    let sparse_again = gen(&mut e);
+    assert_eq!(sparse, sparse_again, "knob swap must be stateless across runs");
+    // dense vs sparse may or may not produce identical greedy tokens, but
+    // both must be well-formed
+    assert_eq!(dense.len(), 10);
+}

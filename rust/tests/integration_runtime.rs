@@ -1,5 +1,7 @@
 //! Runtime-level integration: HLO loading, decode/prefill consistency,
 //! HLO-vs-native-kernel numeric cross-check. Skips without artifacts.
+//! The backend-generic equivalents live in `runtime::native` unit tests.
+#![cfg(feature = "pjrt")]
 
 use aqua_serve::runtime::{Artifacts, ModelRuntime};
 

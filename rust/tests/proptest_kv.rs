@@ -1,0 +1,150 @@
+//! Property tests for the KV-slot bookkeeping invariants under arbitrary
+//! interleavings of `commit_write` / `accumulate` / `H2oPolicy::apply`:
+//!
+//! * `live_slots() <= len <= capacity` at every point,
+//! * the policy never evicts a slot inside the recent window,
+//! * `reset` always restores the empty state.
+
+use aqua_serve::coordinator::h2o::H2oPolicy;
+use aqua_serve::coordinator::kvcache::LaneKv;
+use aqua_serve::util::prng::Rng;
+use aqua_serve::util::testkit::check;
+
+/// One step of the interleaving the engine can produce.
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    /// commit_write(n) after a prefill chunk or decode step
+    Commit(usize),
+    /// fold one step's attention mass, then run the eviction policy —
+    /// the exact order the engine uses
+    AccumulateAndApply(u64),
+}
+
+fn invariants(lane: &LaneKv, context: &str) -> Result<(), String> {
+    if lane.len > lane.capacity {
+        return Err(format!("{context}: len {} > capacity {}", lane.len, lane.capacity));
+    }
+    if lane.live_slots() > lane.len {
+        return Err(format!("{context}: live {} > len {}", lane.live_slots(), lane.len));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_interleavings_preserve_kv_invariants() {
+    check(
+        "kv-interleaving-invariants",
+        200,
+        |g| {
+            let cap = 8 + g.rng.below(64);
+            let ratio = 0.1 + g.rng.f64() * 0.9;
+            let window = 1 + g.rng.below(12);
+            let n_ops = 1 + g.rng.below(40);
+            let ops: Vec<Op> = (0..n_ops)
+                .map(|_| {
+                    if g.rng.f64() < 0.55 {
+                        Op::Commit(1 + g.rng.below(6))
+                    } else {
+                        Op::AccumulateAndApply(g.rng.next_u64())
+                    }
+                })
+                .collect();
+            (cap, ratio, window, ops)
+        },
+        |(cap, ratio, window, ops)| {
+            let mut lane = LaneKv::new(*cap);
+            let policy = H2oPolicy::new(*ratio, *window);
+            for (step, op) in ops.iter().enumerate() {
+                match *op {
+                    Op::Commit(n) => {
+                        let before = lane.len;
+                        lane.commit_write(n);
+                        if lane.len < before {
+                            return Err(format!("step {step}: commit_write shrank len"));
+                        }
+                    }
+                    Op::AccumulateAndApply(seed) => {
+                        let mut rng = Rng::new(seed);
+                        let mass: Vec<f32> = (0..*cap).map(|_| rng.f32()).collect();
+                        lane.accumulate(&mass);
+                        policy.apply(&mut lane);
+                        // eviction never clears slots inside the recent window
+                        let recent_start = lane.len.saturating_sub(*window);
+                        for s in recent_start..lane.len {
+                            if lane.slot_mask[s] < 0.5 {
+                                return Err(format!(
+                                    "step {step}: recent slot {s} evicted (len {}, window {window})",
+                                    lane.len
+                                ));
+                            }
+                        }
+                        // the budget is respected once eviction ran
+                        if lane.live_slots() > policy.budget(lane.len) {
+                            return Err(format!(
+                                "step {step}: live {} > budget {}",
+                                lane.live_slots(),
+                                policy.budget(lane.len)
+                            ));
+                        }
+                    }
+                }
+                invariants(&lane, &format!("step {step}"))?;
+            }
+            // reset restores the empty state no matter what happened
+            lane.reset();
+            if lane.len != 0 || lane.live_slots() != 0 {
+                return Err("reset left residue (len/live)".into());
+            }
+            if lane.h2o_acc.iter().any(|&a| a != 0.0) {
+                return Err("reset left residue (h2o_acc)".into());
+            }
+            if lane.slot_mask.iter().any(|&m| m != 0.0) {
+                return Err("reset left residue (slot_mask)".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_apply_is_idempotent_and_monotone_in_budget() {
+    // At fixed len: a second apply evicts nothing, and a looser ratio never
+    // keeps fewer slots than a tighter one on the same lane state.
+    check(
+        "h2o-idempotent-monotone",
+        150,
+        |g| {
+            let cap = 8 + g.rng.below(48);
+            let len = 1 + g.rng.below(cap);
+            let tight = 0.1 + g.rng.f64() * 0.4;
+            let loose = tight + g.rng.f64() * (1.0 - tight);
+            let window = 1 + g.rng.below(8);
+            let seed = g.rng.next_u64();
+            (cap, len, tight, loose, window, seed)
+        },
+        |(cap, len, tight, loose, window, seed)| {
+            let mut rng = Rng::new(*seed);
+            let mass: Vec<f32> = (0..*cap).map(|_| rng.f32() * 10.0).collect();
+            let build = |ratio: f64| -> LaneKv {
+                let mut lane = LaneKv::new(*cap);
+                lane.commit_write(*len);
+                lane.accumulate(&mass);
+                H2oPolicy::new(ratio, *window).apply(&mut lane);
+                lane
+            };
+            let mut tight_lane = build(*tight);
+            if H2oPolicy::new(*tight, *window).apply(&mut tight_lane) != 0 {
+                return Err("second apply evicted more".into());
+            }
+            let loose_lane = build(*loose);
+            if loose_lane.live_slots() < tight_lane.live_slots() {
+                return Err(format!(
+                    "looser ratio {loose:.2} kept {} < tighter {tight:.2} kept {}",
+                    loose_lane.live_slots(),
+                    tight_lane.live_slots()
+                ));
+            }
+            Ok(())
+        },
+    );
+}

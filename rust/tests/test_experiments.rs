@@ -1,11 +1,14 @@
 //! Figure/analysis regenerators produce the paper's qualitative *shape*
-//! (the actual series are recorded in EXPERIMENTS.md). Skips without
-//! artifacts.
+//! (the actual series are recorded in EXPERIMENTS.md). The npz-dump-based
+//! figure tests need the pjrt feature + artifacts (they skip without the
+//! latter); the break-even measurement is pure rust and always runs.
 
 use aqua_serve::eval::experiments as exp;
+#[cfg(feature = "pjrt")]
 use aqua_serve::runtime::Artifacts;
 
 #[test]
+#[cfg(feature = "pjrt")]
 fn fig2_shape_matches_paper() {
     let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
         eprintln!("skipping: run `make artifacts` first");
@@ -41,6 +44,7 @@ fn fig2_shape_matches_paper() {
 }
 
 #[test]
+#[cfg(feature = "pjrt")]
 fn fig3_crosslingual_transfer() {
     let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
         eprintln!("skipping");
@@ -61,6 +65,7 @@ fn fig3_crosslingual_transfer() {
 }
 
 #[test]
+#[cfg(feature = "pjrt")]
 fn fig5_overlap_increases_with_kp() {
     let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
         eprintln!("skipping");
@@ -82,6 +87,7 @@ fn fig5_overlap_increases_with_kp() {
 }
 
 #[test]
+#[cfg(feature = "pjrt")]
 fn ablation_combined_projection_not_worse_for_queries() {
     let Ok(arts) = Artifacts::load(aqua_serve::ARTIFACTS_DIR) else {
         eprintln!("skipping");

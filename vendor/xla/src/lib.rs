@@ -1,0 +1,294 @@
+//! API-surface stub of the `xla` (xla_extension) binding.
+//!
+//! The production PJRT path (`--features pjrt`) compiles against this
+//! in-tree stub so the whole workspace builds offline with no registry or
+//! C++ binary download. Host-side `Literal` operations are implemented for
+//! real (the PJRT wrappers in `runtime::exec` are unit-tested against
+//! them); everything that would touch an actual PJRT client or parse npz
+//! files returns a descriptive error at runtime. To serve against real
+//! AOT-compiled executables, point the `xla` path dependency in
+//! `rust/Cargo.toml` at the real `xla` crate — the API subset used by this
+//! repo matches it.
+
+use std::path::Path;
+
+/// Stub error; formats with enough context to explain itself.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is not available in the hermetic xla stub; link the real \
+         xla_extension binding (see vendor/xla/src/lib.rs) to use PJRT"
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Element types
+// ---------------------------------------------------------------------------
+
+// `non_exhaustive` mirrors the real binding's larger dtype set, and keeps
+// downstream wildcard match arms from tripping unreachable-pattern lints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum PrimitiveType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn primitive_type(self) -> PrimitiveType {
+        match self {
+            ElementType::F32 => PrimitiveType::F32,
+            ElementType::S32 => PrimitiveType::S32,
+        }
+    }
+}
+
+/// Typed element storage (public so `NativeType` can name it; not part of
+/// the real xla API, which hides this behind C++).
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Store {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Rust scalar types a `Literal` can hold.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    #[doc(hidden)]
+    fn to_store(v: Vec<Self>) -> Store;
+    #[doc(hidden)]
+    fn from_store(s: &Store) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn to_store(v: Vec<Self>) -> Store {
+        Store::F32(v)
+    }
+    fn from_store(s: &Store) -> Option<Vec<Self>> {
+        match s {
+            Store::F32(v) => Some(v.clone()),
+            Store::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn to_store(v: Vec<Self>) -> Store {
+        Store::I32(v)
+    }
+    fn from_store(s: &Store) -> Option<Vec<Self>> {
+        match s {
+            Store::I32(v) => Some(v.clone()),
+            Store::F32(_) => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shapes and literals (host-side: implemented for real)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    store: Store,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], store: T::to_store(data.to_vec()) }
+    }
+
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: vec![], store: T::to_store(vec![v]) }
+    }
+
+    fn len(&self) -> usize {
+        match &self.store {
+            Store::F32(v) => v.len(),
+            Store::I32(v) => v.len(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len() {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({n} elems) from {} elems",
+                self.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), store: self.store.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        let ty = match &self.store {
+            Store::F32(_) => ElementType::F32,
+            Store::I32(_) => ElementType::S32,
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::from_store(&self.store)
+            .ok_or_else(|| Error(format!("to_vec: literal holds {:?}", self.array_shape())))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(Error("stub literals are never tuples (tuples only come from PJRT execution)".into()))
+    }
+
+    pub fn convert(&self, ty: PrimitiveType) -> Result<Literal, Error> {
+        let store = match (&self.store, ty) {
+            (Store::F32(v), PrimitiveType::F32) => Store::F32(v.clone()),
+            (Store::I32(v), PrimitiveType::S32) => Store::I32(v.clone()),
+            (Store::I32(v), PrimitiveType::F32) => Store::F32(v.iter().map(|&x| x as f32).collect()),
+            (Store::F32(v), PrimitiveType::S32) => Store::I32(v.iter().map(|&x| x as i32).collect()),
+        };
+        Ok(Literal { dims: self.dims.clone(), store })
+    }
+}
+
+/// npz deserialization entry points (real binding reads numpy archives;
+/// the stub has no npz parser and errors out).
+pub trait FromRawBytes: Sized {
+    fn read_npz<P: AsRef<Path>, O>(path: P, opts: &O) -> Result<Vec<(String, Self)>, Error>;
+    fn read_npz_by_name<P: AsRef<Path>, O>(
+        path: P,
+        opts: &O,
+        names: &[&str],
+    ) -> Result<Vec<Self>, Error>;
+}
+
+impl FromRawBytes for Literal {
+    fn read_npz<P: AsRef<Path>, O>(path: P, _opts: &O) -> Result<Vec<(String, Self)>, Error> {
+        Err(unavailable(&format!("read_npz({:?})", path.as_ref())))
+    }
+
+    fn read_npz_by_name<P: AsRef<Path>, O>(
+        path: P,
+        _opts: &O,
+        _names: &[&str],
+    ) -> Result<Vec<Self>, Error> {
+        Err(unavailable(&format!("read_npz_by_name({:?})", path.as_ref())))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT surface (stubbed: constructors fail, so methods are unreachable)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable("buffer_from_host_buffer"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto, Error> {
+        Err(unavailable(&format!("HloModuleProto::from_text_file({:?})", path.as_ref())))
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let s = l.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn convert_casts() {
+        let l = Literal::vec1(&[1i32, 2]);
+        let f = l.convert(PrimitiveType::F32).unwrap();
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn pjrt_is_stubbed() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/x").is_err());
+    }
+}
