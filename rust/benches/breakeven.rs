@@ -1,14 +1,23 @@
 //! §5 / Appendix A.4 break-even bench: measured crossover of the native
-//! AQUA sparse score kernel vs the dense baseline, against the paper's
-//! analytic bound i+1 > d²/(d−k). Regenerates the A.4 numerical-example
-//! table on real hardware.
+//! AQUA sparse *and* dim-major packed score kernels vs the dense baseline,
+//! against the paper's analytic bound i+1 > d²/(d−k). Regenerates the A.4
+//! numerical-example table on real hardware and writes the
+//! `kernel_breakeven` section of `BENCH_decode.json` (see BENCHES.md).
 
+use std::path::Path;
+
+use aqua_serve::bench::report::{default_path, BenchReport};
 use aqua_serve::bench::Bencher;
 use aqua_serve::eval::experiments as exp;
+use aqua_serve::util::json::Json;
 
 fn main() {
     let fast = std::env::args().any(|a| a == "--fast");
-    let b = if fast { Bencher::quick() } else { Bencher { warmup: 2, iters: 20, ..Default::default() } };
+    let b = if fast {
+        Bencher::quick()
+    } else {
+        Bencher { warmup: 2, iters: 20, ..Default::default() }
+    };
     // d=128 is the paper's numerical example; d=32 is our serving model.
     let rows = exp::breakeven(&[32, 64, 128], &[0.125, 0.25, 0.5, 0.75, 0.875], &b);
     exp::print_breakeven(&rows);
@@ -21,4 +30,33 @@ fn main() {
         .filter(|r| r.paper_bound.is_some() && r.measured_crossover.is_some())
         .count();
     println!("\ncrossover found for {found}/{finite} finite-bound configs");
+
+    let opt_num = |v: Option<usize>| match v {
+        Some(n) => Json::Num(n as f64),
+        None => Json::Null,
+    };
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("d", Json::Num(r.d as f64)),
+                ("k", Json::Num(r.k as f64)),
+                ("paper_bound", opt_num(r.paper_bound)),
+                ("sparse_crossover", opt_num(r.measured_crossover)),
+                ("packed_crossover", opt_num(r.packed_crossover)),
+            ])
+        })
+        .collect();
+    let section = Json::obj(vec![
+        ("rows", Json::Arr(json_rows)),
+        ("units", Json::Str("crossover = smallest measured context length i+1 (tokens)".into())),
+        ("fast", Json::Bool(fast)),
+    ]);
+    let path = Path::new(default_path());
+    let mut rep = BenchReport::load_or_new(path);
+    rep.set_section("kernel_breakeven", section);
+    match rep.save(path) {
+        Ok(()) => println!("wrote kernel_breakeven section to {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e:#}", path.display()),
+    }
 }

@@ -1,54 +1,195 @@
-//! End-to-end decode latency through the execution backend, across AQUA
-//! operating points and batch sizes (the serving headline numbers;
-//! EXPERIMENTS.md §Perf before/after tracks this bench).
+//! End-to-end decode latency through the execution backends (the serving
+//! headline numbers; EXPERIMENTS.md §Perf before/after tracks this bench).
 //!
-//! Backend-generic: runs the hermetic native backend by default, the full
-//! PJRT round trip when built with `--features pjrt` after `make
-//! artifacts`.
+//! Two matrices, both written to the `decode_e2e` section of
+//! `BENCH_decode.json` (see BENCHES.md):
+//!
+//! * **score-kernel routing** on the native backend: the masked-dense
+//!   oracle vs the sparse and dim-major packed kernels at k = d/4, plus
+//!   the k = d dense reference — the steady-state form of the §5
+//!   break-even claim;
+//! * **sharded scaling**: the lane-sharded backend at 1/2/4 worker
+//!   threads on a batch-8 decode workload, vs the single-threaded native
+//!   backend.
+//!
+//! Pass `--fast` for a smoke run (CI uses it before validating the JSON).
+
+use std::path::Path;
+use std::sync::Arc;
 
 use aqua_serve::aqua::policy::AquaConfig;
-use aqua_serve::bench::Bencher;
-use aqua_serve::runtime::{default_backend, AquaKnobs, ExecBackend};
+use aqua_serve::bench::report::{default_path, BenchReport};
+use aqua_serve::bench::{black_box, BenchResult, Bencher};
+use aqua_serve::model::config::ModelConfig;
+use aqua_serve::runtime::{
+    AquaKnobs, ExecBackend, NativeBackend, NativeModel, ScoreMode, ShardedBackend,
+};
+use aqua_serve::util::json::Json;
+
+struct Row {
+    backend: &'static str,
+    score_mode: &'static str,
+    k_ratio: f64,
+    batch: usize,
+    threads: usize,
+    result: BenchResult,
+}
+
+impl Row {
+    fn tok_per_s(&self) -> f64 {
+        self.batch as f64 * 1e9 / self.result.mean_ns
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("backend", Json::Str(self.backend.into())),
+            ("score_mode", Json::Str(self.score_mode.into())),
+            ("k_ratio", Json::Num(self.k_ratio)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            ("mean_step_us", Json::Num(self.result.mean_ns / 1e3)),
+            ("p50_step_us", Json::Num(self.result.p50_ns / 1e3)),
+            ("p99_step_us", Json::Num(self.result.p99_ns / 1e3)),
+            ("tok_per_s", Json::Num(self.tok_per_s())),
+        ])
+    }
+}
+
+/// Steady-state decode: `ctx` committed slots, every step rewrites the
+/// same position (the cache stays warm, the attendable set fixed).
+fn measure_decode(
+    be: &mut dyn ExecBackend,
+    bench: &Bencher,
+    name: &str,
+    b: usize,
+    k_ratio: f64,
+) -> BenchResult {
+    let cfg = be.model_config().clone();
+    let ctx = cfg.max_seq / 2;
+    be.empty_cache(b).expect("empty_cache");
+    let tokens = vec![5i32; b];
+    let pos = vec![ctx as i32; b];
+    let mut slot_mask = vec![0.0f32; b * cfg.max_seq];
+    for lane in 0..b {
+        for s in 0..ctx {
+            slot_mask[lane * cfg.max_seq + s] = 1.0;
+        }
+    }
+    let aqua = AquaConfig { k_ratio, ..Default::default() };
+    let knobs = AquaKnobs::from_config(&aqua, cfg.d_head);
+    bench.run(name, || {
+        let out = be.decode(b, &tokens, &pos, &slot_mask, &knobs).expect("decode");
+        black_box(out.logits.len());
+    })
+}
 
 fn main() -> anyhow::Result<()> {
-    let mut backend = default_backend("llama-analog", 0)?;
-    let cfg = backend.model_config().clone();
-    let bench = Bencher { warmup: 3, iters: 25, ..Default::default() };
+    let fast = std::env::args().any(|a| a == "--fast");
+    let bench = if fast {
+        Bencher { warmup: 1, iters: 12, ..Bencher::quick() }
+    } else {
+        Bencher { warmup: 3, iters: 25, ..Default::default() }
+    };
+    let model = Arc::new(NativeModel::new(ModelConfig::tiny("llama-analog"), 0)?);
+    let cfg = model.cfg.clone();
     let ctx = cfg.max_seq / 2;
-
     println!(
-        "# decode step latency ({} backend round trip), S={}, {} live slots\n",
-        backend.name(),
-        cfg.max_seq,
-        ctx
+        "# decode step latency (backend round trip), S={}, {} live slots, d={}\n",
+        cfg.max_seq, ctx, cfg.d_head
     );
+
+    let mut rows: Vec<Row> = vec![];
+
+    // ---- score-kernel routing on the native backend ----------------------
+    let kernel_grid: [(&str, ScoreMode, f64); 4] = [
+        ("dense", ScoreMode::Auto, 1.0),
+        ("masked", ScoreMode::MaskedDense, 0.25),
+        ("sparse", ScoreMode::Sparse, 0.25),
+        ("packed", ScoreMode::Packed, 0.25),
+    ];
     for b in [1usize, 4] {
-        backend.empty_cache(b)?;
-        let tokens = vec![5i32; b];
-        let pos = vec![ctx as i32; b];
-        let mut slot_mask = vec![0.0f32; b * cfg.max_seq];
-        for lane in 0..b {
-            for s in 0..ctx {
-                slot_mask[lane * cfg.max_seq + s] = 1.0;
-            }
-        }
-        for (label, aqua) in [
-            ("baseline P=I k=d", AquaConfig::baseline()),
-            ("aqua k=0.75", AquaConfig { k_ratio: 0.75, ..Default::default() }),
-            ("aqua k=0.25", AquaConfig { k_ratio: 0.25, ..Default::default() }),
-            ("aqua-mem S=0.25 k=0.75",
-             AquaConfig { k_ratio: 0.75, s_ratio: 0.25, ..Default::default() }),
-        ] {
-            let knobs = AquaKnobs::from_config(&aqua, cfg.d_head);
-            let r = bench.run(&format!("decode b={b} {label}"), || {
-                let out = backend
-                    .decode(b, &tokens, &pos, &slot_mask, &knobs)
-                    .expect("decode");
-                aqua_serve::bench::black_box(out.logits.len());
+        for (label, mode, k_ratio) in kernel_grid {
+            let mut be = NativeBackend::from_model(model.clone());
+            be.set_score_mode(mode);
+            let name = format!("native b={b} {label} k={k_ratio:.2}");
+            let result = measure_decode(&mut be, &bench, &name, b, k_ratio);
+            println!("{}  ({:.1} tok/s)", result.report(), b as f64 * 1e9 / result.mean_ns);
+            rows.push(Row {
+                backend: "native",
+                score_mode: label,
+                k_ratio,
+                batch: b,
+                threads: 1,
+                result,
             });
-            println!("{}  ({:.1} tok/s/lane)", r.report(), 1e9 / r.mean_ns);
         }
         println!();
     }
+
+    // ---- sharded scaling at batch 8 --------------------------------------
+    let b = 8usize;
+    let k_ratio = 0.25;
+    {
+        let mut be = NativeBackend::from_model(model.clone());
+        let name = format!("native b={b} auto k={k_ratio:.2}");
+        let result = measure_decode(&mut be, &bench, &name, b, k_ratio);
+        println!("{}  ({:.1} tok/s)", result.report(), b as f64 * 1e9 / result.mean_ns);
+        rows.push(Row {
+            backend: "native",
+            score_mode: "auto",
+            k_ratio,
+            batch: b,
+            threads: 1,
+            result,
+        });
+    }
+    for threads in [1usize, 2, 4] {
+        let mut be = ShardedBackend::from_model(model.clone(), threads);
+        let name = format!("sharded t={threads} b={b} auto k={k_ratio:.2}");
+        let result = measure_decode(&mut be, &bench, &name, b, k_ratio);
+        println!("{}  ({:.1} tok/s)", result.report(), b as f64 * 1e9 / result.mean_ns);
+        rows.push(Row {
+            backend: "sharded",
+            score_mode: "auto",
+            k_ratio,
+            batch: b,
+            threads,
+            result,
+        });
+    }
+
+    // ---- PJRT round trip (only when --features pjrt + artifacts) ---------
+    // `default_backend` resolves to pjrt exactly when the production path
+    // is available; the native rows above already cover the fallback.
+    if let Ok(mut be) = aqua_serve::runtime::default_backend("llama-analog", 0) {
+        if be.name() == "pjrt" {
+            for (label, k_ratio) in [("dense", 1.0), ("masked", 0.25)] {
+                let name = format!("pjrt b=4 {label} k={k_ratio:.2}");
+                let result = measure_decode(be.as_mut(), &bench, &name, 4, k_ratio);
+                println!("{}  ({:.1} tok/s)", result.report(), 4.0 * 1e9 / result.mean_ns);
+                rows.push(Row {
+                    backend: "pjrt",
+                    score_mode: label,
+                    k_ratio,
+                    batch: 4,
+                    threads: 1,
+                    result,
+                });
+            }
+        }
+    }
+
+    let section = Json::obj(vec![
+        ("rows", Json::Arr(rows.iter().map(Row::json).collect())),
+        ("model", Json::Str(cfg.name.clone())),
+        ("live_slots", Json::Num(ctx as f64)),
+        ("units", Json::Str("mean_step_us per decode call; tok_per_s = batch/mean_step".into())),
+        ("fast", Json::Bool(fast)),
+    ]);
+    let path = Path::new(default_path());
+    let mut rep = BenchReport::load_or_new(path);
+    rep.set_section("decode_e2e", section);
+    rep.save(path)?;
+    println!("\nwrote decode_e2e section to {}", path.display());
     Ok(())
 }

@@ -24,12 +24,14 @@ pub fn dense_scores(q: &[f32], keys: &[f32], seq: usize, d: usize, out: &mut [f3
     }
 }
 
-/// AQUA sparse scores, Algorithm 1 literal: select top-k dims of |q|,
-/// then S̃ = q[I]·K[:, I]ᵀ — O(d) selection + O(seq·k) dot products.
-pub fn aqua_scores_sparse(q: &[f32], keys: &[f32], seq: usize, d: usize, k: usize,
-                          out: &mut [f32]) {
-    let idx = topk_indices_by_abs(q, k);
-    let qk: Vec<f32> = idx.iter().map(|&i| q[i]).collect();
+/// AQUA sparse scores with a *precomputed* index set and pre-gathered
+/// query values (`qk[j] = q[idx[j]]`): the zero-allocation variant the
+/// decode hot path and benches use. `idx` must be ascending so the
+/// accumulation order matches the masked-dense formulation exactly.
+pub fn aqua_scores_sparse_idx(qk: &[f32], idx: &[usize], keys: &[f32], seq: usize, d: usize,
+                              out: &mut [f32]) {
+    debug_assert!(qk.len() >= idx.len());
+    debug_assert!(keys.len() >= seq * d && out.len() >= seq);
     for s in 0..seq {
         let krow = &keys[s * d..(s + 1) * d];
         let mut acc = 0.0f32;
@@ -38,6 +40,17 @@ pub fn aqua_scores_sparse(q: &[f32], keys: &[f32], seq: usize, d: usize, k: usiz
         }
         out[s] = acc;
     }
+}
+
+/// AQUA sparse scores, Algorithm 1 literal: select top-k dims of |q|,
+/// then S̃ = q[I]·K[:, I]ᵀ — O(d) selection + O(seq·k) dot products.
+/// Allocating wrapper over [`aqua_scores_sparse_idx`] (kept for tests and
+/// one-shot callers).
+pub fn aqua_scores_sparse(q: &[f32], keys: &[f32], seq: usize, d: usize, k: usize,
+                          out: &mut [f32]) {
+    let idx = topk_indices_by_abs(q, k);
+    let qk: Vec<f32> = idx.iter().map(|&i| q[i]).collect();
+    aqua_scores_sparse_idx(&qk, &idx, keys, seq, d, out);
 }
 
 /// AQUA with a *pre-gathered* key cache (keys stored column-sliced as
@@ -56,6 +69,51 @@ pub fn aqua_scores_packed(qk: &[f32], keys_packed: &[f32], seq: usize, k: usize,
     }
 }
 
+/// Packed scores over a *dim-major* (column-major) key cache: `kcols` is
+/// [d, stride] with dimension i's values for every slot contiguous at
+/// `kcols[i*stride..]`. For each selected dim the kernel streams one
+/// contiguous run of `n` floats, so compute AND memory traffic scale with
+/// k — the kernel/layout co-design that makes the §5 savings observable on
+/// the decode hot path (the native analog of TurboAttention-style packed
+/// operand layouts). `idx` ascending keeps the accumulation order — and
+/// therefore the f32 result — bit-identical to the masked-dense oracle.
+pub fn aqua_scores_packed_cols(qk: &[f32], idx: &[usize], kcols: &[f32], stride: usize,
+                               n: usize, out: &mut [f32]) {
+    debug_assert!(n <= stride && out.len() >= n);
+    debug_assert!(qk.len() >= idx.len());
+    out[..n].fill(0.0);
+    for (j, &i) in idx.iter().enumerate() {
+        let qv = qk[j];
+        if qv == 0.0 {
+            // ±0.0 contributions never change an f32 accumulator; skipping
+            // them preserves bit-parity while honoring AQUA-Memory's
+            // statically zeroed dims for free.
+            continue;
+        }
+        let col = &kcols[i * stride..i * stride + n];
+        for (o, &kv) in out[..n].iter_mut().zip(col) {
+            *o += qv * kv;
+        }
+    }
+}
+
+/// Sparse scores at an explicit slot subset over the dim-major cache:
+/// writes `out[s]` for `s` in `slots` only — O(|slots|·k) regardless of the
+/// write cursor, the right shape once H2O has punched holes in the
+/// attendable set. Bit-identical to [`aqua_scores_packed_cols`] at the
+/// slots it touches (same ascending-dim accumulation order).
+pub fn aqua_scores_packed_cols_at(qk: &[f32], idx: &[usize], kcols: &[f32], stride: usize,
+                                  slots: &[usize], out: &mut [f32]) {
+    debug_assert!(qk.len() >= idx.len());
+    for &s in slots {
+        let mut acc = 0.0f32;
+        for (j, &i) in idx.iter().enumerate() {
+            acc += qk[j] * kcols[i * stride + s];
+        }
+        out[s] = acc;
+    }
+}
+
 /// Masked-dense formulation (what the HLO computes): zero the dropped dims,
 /// full-width dot. Numerically identical to the sparse gather.
 pub fn aqua_scores_masked(q: &[f32], mask: &[f32], keys: &[f32], seq: usize, d: usize,
@@ -64,29 +122,40 @@ pub fn aqua_scores_masked(q: &[f32], mask: &[f32], keys: &[f32], seq: usize, d: 
     dense_scores(&qm, keys, seq, d, out);
 }
 
-/// Gather keys into the packed layout for `aqua_scores_packed`.
-pub fn pack_keys(keys: &[f32], seq: usize, d: usize, idx: &[usize]) -> Vec<f32> {
+/// Gather keys into the packed layout for `aqua_scores_packed`, writing
+/// into a caller-provided buffer (`out` len ≥ seq·|idx|) — no allocation.
+pub fn pack_keys_into(keys: &[f32], seq: usize, d: usize, idx: &[usize], out: &mut [f32]) {
     let k = idx.len();
-    let mut out = vec![0.0f32; seq * k];
+    debug_assert!(keys.len() >= seq * d && out.len() >= seq * k);
     for s in 0..seq {
         let krow = &keys[s * d..(s + 1) * d];
-        for (j, &i) in idx.iter().enumerate() {
-            out[s * k + j] = krow[i];
+        let orow = &mut out[s * k..(s + 1) * k];
+        for (o, &i) in orow.iter_mut().zip(idx) {
+            *o = krow[i];
         }
     }
+}
+
+/// Allocating wrapper over [`pack_keys_into`] (tests / one-shot callers).
+pub fn pack_keys(keys: &[f32], seq: usize, d: usize, idx: &[usize]) -> Vec<f32> {
+    let mut out = vec![0.0f32; seq * idx.len()];
+    pack_keys_into(keys, seq, d, idx, &mut out);
     out
 }
 
-/// Project a vector: v·P with P row-major [d, d] — the per-step O(d²)
-/// overhead in the §5 cost model.
+/// Project a vector into a caller-provided buffer: v·P with P row-major
+/// [d, d] — the per-*token* O(d²) overhead in the §5 cost model (the
+/// native backend pays it once at cache-append for keys and once per step
+/// per head for queries).
 pub fn project(v: &[f32], p: &[f32], d: usize, out: &mut [f32]) {
-    for j in 0..d {
-        out[j] = 0.0;
-    }
+    out[..d].fill(0.0);
     for (i, &vi) in v.iter().enumerate().take(d) {
+        if vi == 0.0 {
+            continue;
+        }
         let prow = &p[i * d..(i + 1) * d];
-        for j in 0..d {
-            out[j] += vi * prow[j];
+        for (o, &pv) in out[..d].iter_mut().zip(prow) {
+            *o += vi * pv;
         }
     }
 }
@@ -135,6 +204,59 @@ mod tests {
                     if (a[s] - t[s]).abs() > 1e-4 {
                         return Err(format!("threshold mismatch at {s}"));
                     }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_colmajor_kernels_bit_match_masked_dense() {
+        // The dim-major packed kernels must match the masked-dense oracle
+        // *bitwise* (same ascending-dim accumulation order) — this is what
+        // lets the native backend route through them while the oracle stays
+        // the parity reference.
+        check(
+            "colmajor-bit-parity",
+            100,
+            |g| {
+                let d = 2 + g.rng.below(30);
+                let seq = 1 + g.rng.below(40);
+                let k = 1 + g.rng.below(d);
+                let q = g.vec_f32(d, 1.0);
+                let keys = g.vec_f32(seq * d, 1.0);
+                (q, keys, seq, d, k)
+            },
+            |(q, keys, seq, d, k)| {
+                let (seq, d, k) = (*seq, *d, *k);
+                let mut kcols = vec![0.0f32; d * seq];
+                for s in 0..seq {
+                    for i in 0..d {
+                        kcols[i * seq + s] = keys[s * d + i];
+                    }
+                }
+                let idx = topk_indices_by_abs(q, k);
+                let qk: Vec<f32> = idx.iter().map(|&i| q[i]).collect();
+                let mask = topk_mask_by_abs(q, k);
+                let mut oracle = vec![0.0; seq];
+                aqua_scores_masked(q, &mask, keys, seq, d, &mut oracle);
+                let mut packed = vec![0.0; seq];
+                aqua_scores_packed_cols(&qk, &idx, &kcols, seq, seq, &mut packed);
+                if packed != oracle {
+                    return Err("packed_cols != masked-dense bitwise".into());
+                }
+                let slots: Vec<usize> = (0..seq).step_by(2).collect();
+                let mut subset = vec![0.0; seq];
+                aqua_scores_packed_cols_at(&qk, &idx, &kcols, seq, &slots, &mut subset);
+                for &s in &slots {
+                    if subset[s] != oracle[s] {
+                        return Err(format!("packed_cols_at mismatch at slot {s}"));
+                    }
+                }
+                let mut sparse = vec![0.0; seq];
+                aqua_scores_sparse_idx(&qk, &idx, keys, seq, d, &mut sparse);
+                if sparse != oracle {
+                    return Err("sparse_idx != masked-dense bitwise".into());
                 }
                 Ok(())
             },

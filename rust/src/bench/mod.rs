@@ -2,7 +2,10 @@
 //!
 //! Warmup + timed iterations, reports mean/p50/p99 and derived throughput.
 //! Used by `rust/benches/*` (cargo bench targets with `harness = false`)
-//! and the CLI's table/figure regenerators.
+//! and the CLI's table/figure regenerators. The [`report`] submodule owns
+//! the machine-readable `BENCH_decode.json` trajectory file.
+
+pub mod report;
 
 use std::time::{Duration, Instant};
 

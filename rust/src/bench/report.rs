@@ -1,0 +1,246 @@
+//! Machine-readable bench trajectory: `BENCH_decode.json` at the repo
+//! root, written by the decode-path benches so the perf story is tracked
+//! PR-over-PR (schema documented in `BENCHES.md`).
+//!
+//! Layout:
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "sections": {
+//!     "kernel_breakeven": { "rows": [ {"d":…, "k":…, …} ] },
+//!     "decode_e2e":       { "rows": [ {"backend":…, "score_mode":…, …} ] }
+//!   }
+//! }
+//! ```
+//!
+//! Benches own one section each and leave the others intact, so running
+//! `cargo bench --bench breakeven` and `--bench decode_e2e` in either
+//! order converges to the same file. `aqua benchcheck` validates the
+//! schema (and, with `--strict`, the decode-overhaul perf invariants).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub const SCHEMA_VERSION: i64 = 1;
+
+/// Repo-root path of the report, resolved at compile time relative to the
+/// rust crate (stable no matter which directory the bench runs from).
+pub fn default_path() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json")
+}
+
+/// An on-disk report being updated section-by-section.
+pub struct BenchReport {
+    doc: Json,
+}
+
+impl BenchReport {
+    /// Load an existing report (preserving the sections other benches
+    /// wrote) or start a fresh one; malformed files are replaced.
+    pub fn load_or_new(path: &Path) -> BenchReport {
+        let parsed = std::fs::read_to_string(path).ok().and_then(|s| Json::parse(&s).ok());
+        let mut doc = match parsed {
+            Some(d @ Json::Obj(_)) => d,
+            _ => Json::obj(vec![]),
+        };
+        if let Json::Obj(o) = &mut doc {
+            o.insert("schema_version".into(), Json::Num(SCHEMA_VERSION as f64));
+            // a real bench run supersedes a cost-model-projected snapshot
+            // (the benches are the only writers; see BENCHES.md)
+            o.remove("projected");
+            if !matches!(o.get("sections"), Some(Json::Obj(_))) {
+                o.insert("sections".into(), Json::obj(vec![]));
+            }
+        }
+        BenchReport { doc }
+    }
+
+    /// Replace one named section (a `{"rows": [...]}`-shaped object).
+    pub fn set_section(&mut self, name: &str, section: Json) {
+        if let Json::Obj(o) = &mut self.doc {
+            if let Some(Json::Obj(sections)) = o.get_mut("sections") {
+                sections.insert(name.to_string(), section);
+            }
+        }
+    }
+
+    pub fn doc(&self) -> &Json {
+        &self.doc
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.doc)).with_context(|| format!("writing {path:?}"))
+    }
+}
+
+fn rows_of<'a>(doc: &'a Json, section: &str) -> Result<&'a [Json]> {
+    match doc.get("sections").get(section).get("rows").as_arr() {
+        Some(r) if !r.is_empty() => Ok(r),
+        _ => bail!("section '{section}' missing or empty"),
+    }
+}
+
+/// Validate a `BENCH_decode.json` document. Non-strict checks the schema
+/// both benches emit; `strict` additionally asserts the decode-overhaul
+/// acceptance invariants: packed sparse decode at k=d/4 beats the
+/// masked-dense oracle, and the sharded backend at 4 threads beats 1
+/// thread on a batch-8 decode workload.
+pub fn validate(doc: &Json, strict: bool) -> Result<()> {
+    let ver = doc.get("schema_version").as_i64().unwrap_or(0);
+    if ver != SCHEMA_VERSION {
+        bail!("schema_version {ver} != {SCHEMA_VERSION}");
+    }
+    for r in rows_of(doc, "kernel_breakeven")? {
+        if r.get("d").as_i64().is_none() || r.get("k").as_i64().is_none() {
+            bail!("kernel_breakeven row missing d/k: {r}");
+        }
+    }
+    let de = rows_of(doc, "decode_e2e")?;
+    for r in de {
+        for f in ["backend", "score_mode"] {
+            if r.get(f).as_str().is_none() {
+                bail!("decode_e2e row missing '{f}': {r}");
+            }
+        }
+        for f in ["k_ratio", "batch", "threads", "mean_step_us", "tok_per_s"] {
+            if r.get(f).as_f64().is_none() {
+                bail!("decode_e2e row missing '{f}': {r}");
+            }
+        }
+    }
+    if !strict {
+        return Ok(());
+    }
+    if doc.get("projected").as_bool() == Some(true) {
+        bail!("strict validation refused: numbers are cost-model projections, not measurements \
+               (regenerate with the benches)");
+    }
+
+    let find = |backend: &str, mode: &str, k: f64, batch: i64, threads: i64| -> Option<f64> {
+        de.iter()
+            .find(|r| {
+                r.get("backend").as_str() == Some(backend)
+                    && r.get("score_mode").as_str() == Some(mode)
+                    && (r.get("k_ratio").as_f64().unwrap_or(-1.0) - k).abs() < 1e-9
+                    && r.get("batch").as_i64() == Some(batch)
+                    && r.get("threads").as_i64() == Some(threads)
+            })
+            .and_then(|r| r.get("tok_per_s").as_f64())
+    };
+    let masked = find("native", "masked", 0.25, 4, 1).context("missing masked k=0.25 b=4 row")?;
+    let packed = find("native", "packed", 0.25, 4, 1).context("missing packed k=0.25 b=4 row")?;
+    if packed <= masked {
+        bail!("packed k=0.25 ({packed:.1} tok/s) does not beat masked-dense ({masked:.1} tok/s)");
+    }
+    let t1 = find("sharded", "auto", 0.25, 8, 1).context("missing sharded threads=1 row")?;
+    let t4 = find("sharded", "auto", 0.25, 8, 4).context("missing sharded threads=4 row")?;
+    if t4 <= t1 {
+        bail!("sharded threads=4 ({t4:.1} tok/s) does not beat threads=1 ({t1:.1} tok/s)");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e2e_row(backend: &str, mode: &str, k: f64, batch: f64, threads: f64, tps: f64) -> Json {
+        Json::obj(vec![
+            ("backend", Json::Str(backend.into())),
+            ("score_mode", Json::Str(mode.into())),
+            ("k_ratio", Json::Num(k)),
+            ("batch", Json::Num(batch)),
+            ("threads", Json::Num(threads)),
+            ("mean_step_us", Json::Num(1e6 / tps)),
+            ("tok_per_s", Json::Num(tps)),
+        ])
+    }
+
+    fn sample_report(packed_tps: f64, t4_tps: f64) -> Json {
+        let kb = Json::obj(vec![(
+            "rows",
+            Json::Arr(vec![Json::obj(vec![("d", Json::Num(32.0)), ("k", Json::Num(8.0))])]),
+        )]);
+        let de = Json::obj(vec![(
+            "rows",
+            Json::Arr(vec![
+                e2e_row("native", "masked", 0.25, 4.0, 1.0, 1000.0),
+                e2e_row("native", "packed", 0.25, 4.0, 1.0, packed_tps),
+                e2e_row("sharded", "auto", 0.25, 8.0, 1.0, 2000.0),
+                e2e_row("sharded", "auto", 0.25, 8.0, 4.0, t4_tps),
+            ]),
+        )]);
+        Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            ("sections", Json::obj(vec![("kernel_breakeven", kb), ("decode_e2e", de)])),
+        ])
+    }
+
+    #[test]
+    fn roundtrip_preserves_other_sections() {
+        let dir = std::env::temp_dir().join("aqua_bench_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_decode.json");
+        let _ = std::fs::remove_file(&path);
+
+        let mut rep = BenchReport::load_or_new(&path);
+        rep.set_section("kernel_breakeven", Json::obj(vec![("rows", Json::Arr(vec![]))]));
+        rep.save(&path).unwrap();
+
+        // a second bench writing its own section keeps the first
+        let mut rep2 = BenchReport::load_or_new(&path);
+        rep2.set_section("decode_e2e", Json::obj(vec![("rows", Json::Arr(vec![]))]));
+        rep2.save(&path).unwrap();
+
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(doc.get("sections").get("kernel_breakeven").get("rows").as_arr().is_some());
+        assert!(doc.get("sections").get("decode_e2e").get("rows").as_arr().is_some());
+        assert_eq!(doc.get("schema_version").as_i64(), Some(SCHEMA_VERSION));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn validate_accepts_good_and_rejects_bad() {
+        let good = sample_report(4000.0, 6000.0);
+        validate(&good, false).unwrap();
+        validate(&good, true).unwrap();
+
+        // packed slower than masked: schema-valid, strict-invalid
+        let slow = sample_report(500.0, 6000.0);
+        validate(&slow, false).unwrap();
+        assert!(validate(&slow, true).is_err());
+
+        // sharded scaling regression: strict-invalid
+        let flat = sample_report(4000.0, 1500.0);
+        assert!(validate(&flat, true).is_err());
+
+        // empty doc: schema-invalid
+        assert!(validate(&Json::obj(vec![]), false).is_err());
+
+        // projected snapshots pass the schema but refuse strict validation
+        let mut projected = sample_report(4000.0, 6000.0);
+        if let Json::Obj(o) = &mut projected {
+            o.insert("projected".into(), Json::Bool(true));
+        }
+        validate(&projected, false).unwrap();
+        assert!(validate(&projected, true).is_err());
+    }
+
+    #[test]
+    fn real_runs_clear_the_projected_flag() {
+        let dir = std::env::temp_dir().join("aqua_bench_report_projected");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_decode.json");
+        std::fs::write(&path, "{\"projected\":true,\"schema_version\":1,\"sections\":{}}\n")
+            .unwrap();
+        let rep = BenchReport::load_or_new(&path);
+        rep.save(&path).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("projected"), &Json::Null, "projected flag must not survive a run");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -223,6 +223,7 @@ impl Engine {
         let out = self.backend.prefill(b, &tokens, &pos0, &slot_mask, &knobs)?;
         let real_tokens: u64 = fed_now.iter().map(|&n| n as u64).sum();
         self.metrics.record_prefill(t0.elapsed(), real_tokens);
+        self.metrics.record_kernels(&out.kernels, false);
 
         let mut finish_list: Vec<usize> = vec![];
         for lane in 0..b {
@@ -317,6 +318,7 @@ impl Engine {
         let t0 = Instant::now();
         let out = self.backend.decode(b, &tokens, &pos, &slot_mask, &knobs)?;
         self.metrics.record_decode(t0.elapsed(), live.iter().filter(|&&l| l).count() as u64);
+        self.metrics.record_kernels(&out.kernels, true);
 
         let mut finish_list: Vec<usize> = vec![];
         for lane in 0..b {

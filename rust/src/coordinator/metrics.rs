@@ -1,7 +1,12 @@
-//! Engine metrics: latency/throughput accounting for the serving benches.
+//! Engine metrics: latency/throughput accounting for the serving benches,
+//! plus score-kernel observability (which AQUA kernel variant actually ran
+//! and how long the attention score path took) fed from the backend's
+//! [`KernelCounters`].
 
 use std::sync::Mutex;
 use std::time::Duration;
+
+use crate::runtime::KernelCounters;
 
 #[derive(Debug, Default)]
 struct Inner {
@@ -15,6 +20,11 @@ struct Inner {
     ttft_us: Vec<f64>,
     req_latency_us: Vec<f64>,
     h2o_evictions: u64,
+    kernels: KernelCounters,
+    /// Score-path time from decode calls only (the kernels pool above
+    /// also includes prefill), so per-decode timing stays honest on
+    /// prefill-heavy workloads.
+    decode_score_ns: u64,
     wall_start: Option<std::time::Instant>,
 }
 
@@ -40,6 +50,13 @@ pub struct Snapshot {
     pub decode_tok_per_s: f64,
     pub wall_tok_per_s: f64,
     pub h2o_evictions: u64,
+    /// Score-kernel variant counters + attention-score time, accumulated
+    /// over every backend call (see `runtime::KernelCounters`).
+    pub kernels: KernelCounters,
+    /// Mean attention-score-path time per decode call, µs, from decode
+    /// calls only (0 when the backend reports no timing, e.g. PJRT, or
+    /// before the first decode).
+    pub score_us_per_decode: f64,
 }
 
 impl Metrics {
@@ -77,6 +94,16 @@ impl Metrics {
         self.inner.lock().unwrap().h2o_evictions += n;
     }
 
+    /// Fold one backend call's kernel accounting in; `decode` routes the
+    /// score time into the decode-only pool as well.
+    pub fn record_kernels(&self, k: &KernelCounters, decode: bool) {
+        let mut i = self.inner.lock().unwrap();
+        i.kernels.merge(k);
+        if decode {
+            i.decode_score_ns += k.score_ns;
+        }
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         use crate::util::{mean, percentile};
         let i = self.inner.lock().unwrap();
@@ -105,6 +132,12 @@ impl Metrics {
                 0.0
             },
             h2o_evictions: i.h2o_evictions,
+            kernels: i.kernels,
+            score_us_per_decode: if i.decode_calls > 0 {
+                i.decode_score_ns as f64 / 1e3 / i.decode_calls as f64
+            } else {
+                0.0
+            },
         }
     }
 }
@@ -114,12 +147,15 @@ impl Snapshot {
         format!(
             "requests={} gen_tokens={} prompt_tokens={} decode_calls={} prefill_calls={}\n\
              decode {:.2}s ({:.1} tok/s) prefill {:.2}s | wall {:.1} tok/s\n\
-             ttft mean {:.2}ms p50 {:.2}ms p99 {:.2}ms | latency mean {:.2}ms | h2o_evictions={}",
+             ttft mean {:.2}ms p50 {:.2}ms p99 {:.2}ms | latency mean {:.2}ms | h2o_evictions={}\n\
+             kernels dense={} sparse={} packed={} | score path {:.2}µs/decode",
             self.requests_done, self.tokens_generated, self.prompt_tokens,
             self.decode_calls, self.prefill_calls, self.decode_time_s,
             self.decode_tok_per_s, self.prefill_time_s, self.wall_tok_per_s,
             self.mean_ttft_ms, self.p50_ttft_ms, self.p99_ttft_ms,
             self.mean_latency_ms, self.h2o_evictions,
+            self.kernels.dense, self.kernels.sparse, self.kernels.packed,
+            self.score_us_per_decode,
         )
     }
 }
@@ -137,14 +173,25 @@ mod tests {
         m.record_prefill(Duration::from_millis(5), 32);
         m.record_finish(Some(Duration::from_millis(15)), Duration::from_millis(50));
         m.record_evictions(3);
+        m.record_kernels(&KernelCounters { dense: 2, sparse: 1, packed: 5, score_ns: 4_000 }, true);
+        m.record_kernels(&KernelCounters { dense: 0, sparse: 0, packed: 3, score_ns: 2_000 }, true);
+        // prefill score time counts in the pooled counters, not per-decode
+        let prefill = KernelCounters { dense: 4, sparse: 0, packed: 0, score_ns: 9_000 };
+        m.record_kernels(&prefill, false);
         let s = m.snapshot();
         assert_eq!(s.tokens_generated, 8);
         assert_eq!(s.prompt_tokens, 32);
         assert_eq!(s.decode_calls, 2);
         assert_eq!(s.requests_done, 1);
         assert_eq!(s.h2o_evictions, 3);
+        assert_eq!(s.kernels.dense, 6);
+        assert_eq!(s.kernels.sparse, 1);
+        assert_eq!(s.kernels.packed, 8);
+        assert_eq!(s.kernels.score_ns, 15_000);
+        // (4000 + 2000) ns of *decode* score time over 2 decode calls
+        assert!((s.score_us_per_decode - 3.0).abs() < 1e-9);
         assert!((s.decode_tok_per_s - 400.0).abs() < 1.0);
         assert!(s.mean_ttft_ms > 14.0 && s.mean_ttft_ms < 16.0);
-        assert!(!s.report().is_empty());
+        assert!(s.report().contains("packed=8"));
     }
 }

@@ -476,12 +476,18 @@ pub struct BreakevenRow {
     pub k: usize,
     pub paper_bound: Option<usize>,
     pub measured_crossover: Option<usize>,
+    /// Crossover of the dim-major *packed* kernel (keys already in the
+    /// decode cache layout, as the native backend stores them).
+    pub packed_crossover: Option<usize>,
 }
 
-/// Measure where the native sparse AQUA scores (+ per-step projection)
-/// become cheaper than the dense baseline, vs the paper's analytic bound.
+/// Measure where the native sparse/packed AQUA scores (+ per-step query
+/// projection and selection, via the zero-allocation kernel variants the
+/// decode hot path uses) become cheaper than the dense baseline, vs the
+/// paper's analytic bound.
 pub fn breakeven(d_values: &[usize], k_fracs: &[f64], bencher: &Bencher) -> Vec<BreakevenRow> {
     use crate::aqua::native;
+    use crate::tensor::topk::topk_indices_into;
     use crate::util::prng::Rng;
     let mut rng = Rng::new(99);
     let mut rows = vec![];
@@ -491,24 +497,59 @@ pub fn breakeven(d_values: &[usize], k_fracs: &[f64], bencher: &Bencher) -> Vec<
             let k = ((kf * d as f64).round() as usize).clamp(1, d);
             let model = CostModel { d_head: d };
             let mut crossover = None;
+            let mut packed_crossover = None;
+            let mut qh = vec![0.0f32; d];
+            let mut qsel = vec![0.0f32; d];
+            let mut idx: Vec<usize> = Vec::with_capacity(d);
             let mut seq = 16usize;
             while seq <= 1 << 14 {
                 let q: Vec<f32> = rng.normal_vec(d, 1.0);
                 let keys: Vec<f32> = rng.normal_vec(seq * d, 1.0);
+                // the same keys in the dim-major decode-cache layout
+                // (transposed once here; the backend pays it at append)
+                let mut kcols = vec![0.0f32; d * seq];
+                for s in 0..seq {
+                    for i in 0..d {
+                        kcols[i * seq + s] = keys[s * d + i];
+                    }
+                }
                 let mut out = vec![0.0f32; seq];
                 let dense = bencher.run(&format!("dense d{d} s{seq}"), || {
                     native::dense_scores(&q, &keys, seq, d, &mut out);
                     crate::bench::black_box(&out);
                 });
-                let mut qh = vec![0.0f32; d];
-                let aqua = bencher.run(&format!("aqua d{d} k{k} s{seq}"), || {
-                    // per-step cost: project q, select, sparse dot
-                    native::project(&q, &p, d, &mut qh);
-                    native::aqua_scores_sparse(&qh, &keys, seq, d, k, &mut out);
-                    crate::bench::black_box(&out);
-                });
-                if aqua.mean_ns < dense.mean_ns {
-                    crossover = Some(seq);
+                if crossover.is_none() {
+                    // per-step cost: project q, select, gather, sparse dot
+                    let aqua = bencher.run(&format!("aqua d{d} k{k} s{seq}"), || {
+                        native::project(&q, &p, d, &mut qh);
+                        topk_indices_into(&qh, k, &mut idx);
+                        for (j, &i) in idx.iter().enumerate() {
+                            qsel[j] = qh[i];
+                        }
+                        native::aqua_scores_sparse_idx(&qsel[..k], &idx, &keys, seq, d, &mut out);
+                        crate::bench::black_box(&out);
+                    });
+                    if aqua.mean_ns < dense.mean_ns {
+                        crossover = Some(seq);
+                    }
+                }
+                if packed_crossover.is_none() {
+                    let packed = bencher.run(&format!("packed d{d} k{k} s{seq}"), || {
+                        native::project(&q, &p, d, &mut qh);
+                        topk_indices_into(&qh, k, &mut idx);
+                        for (j, &i) in idx.iter().enumerate() {
+                            qsel[j] = qh[i];
+                        }
+                        native::aqua_scores_packed_cols(
+                            &qsel[..k], &idx, &kcols, seq, seq, &mut out,
+                        );
+                        crate::bench::black_box(&out);
+                    });
+                    if packed.mean_ns < dense.mean_ns {
+                        packed_crossover = Some(seq);
+                    }
+                }
+                if crossover.is_some() && packed_crossover.is_some() {
                     break;
                 }
                 seq *= 2;
@@ -518,6 +559,7 @@ pub fn breakeven(d_values: &[usize], k_fracs: &[f64], bencher: &Bencher) -> Vec<
                 k,
                 paper_bound: model.paper_breakeven(k),
                 measured_crossover: crossover,
+                packed_crossover,
             });
         }
     }
@@ -526,14 +568,20 @@ pub fn breakeven(d_values: &[usize], k_fracs: &[f64], bencher: &Bencher) -> Vec<
 
 pub fn print_breakeven(rows: &[BreakevenRow]) {
     println!("# §5 break-even: AQUA vs standard scores (native kernels)");
-    println!("{:>6} {:>6} {:>16} {:>20}", "d", "k", "paper i+1 bound", "measured crossover");
+    println!(
+        "{:>6} {:>6} {:>16} {:>20} {:>20}",
+        "d", "k", "paper i+1 bound", "sparse crossover", "packed crossover"
+    );
+    let show =
+        |c: Option<usize>| c.map(|c| format!("<= {c}")).unwrap_or_else(|| "none<=16384".into());
     for r in rows {
         println!(
-            "{:>6} {:>6} {:>16} {:>20}",
+            "{:>6} {:>6} {:>16} {:>20} {:>20}",
             r.d,
             r.k,
             r.paper_bound.map(|b| b.to_string()).unwrap_or_else(|| "never".into()),
-            r.measured_crossover.map(|c| format!("<= {c}")).unwrap_or_else(|| "none<=16384".into()),
+            show(r.measured_crossover),
+            show(r.packed_crossover),
         );
     }
 }

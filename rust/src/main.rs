@@ -10,11 +10,13 @@
 //!   breakeven   §5 break-even measurement (native kernels)
 //!   selftest    engine smoke test through the selected backend
 //!
-//! Backend selection (`--backend auto|native|pjrt`): `native` is the
-//! hermetic pure-rust reference backend (no artifacts needed, weights
-//! seeded from `--seed`); `pjrt` executes the AOT artifacts and requires
-//! building with `--features pjrt`; `auto` (default) picks pjrt when
-//! available and falls back to native.
+//! Backend selection (`--backend auto|native|sharded|pjrt`): `native` is
+//! the hermetic pure-rust reference backend (no artifacts needed, weights
+//! seeded from `--seed`); `sharded` splits the batch's lanes and KV shards
+//! across `--threads N` worker threads (bit-identical to native); `pjrt`
+//! executes the AOT artifacts and requires building with `--features
+//! pjrt`; `auto` (default) picks pjrt when available and falls back to
+//! native.
 
 mod cli;
 
@@ -32,8 +34,8 @@ use aqua_serve::runtime::{Artifacts, BackendSpec, ExecBackend};
 use aqua_serve::tokenizer::ByteTokenizer;
 use cli::Args;
 
-const USAGE: &str = "usage: aqua <serve|generate|eval|table1|table2|table3|table7|fig2|fig3|fig5|ablation|breakeven|selftest> [flags]
-common flags: --backend auto|native|pjrt --seed N --artifacts DIR --model NAME --k-ratio R --s-ratio R --h2o-ratio R --batch N --items N --fast";
+const USAGE: &str = "usage: aqua <serve|generate|eval|table1|table2|table3|table7|fig2|fig3|fig5|ablation|breakeven|benchcheck|selftest> [flags]
+common flags: --backend auto|native|sharded|pjrt --threads N --seed N --artifacts DIR --model NAME --k-ratio R --s-ratio R --h2o-ratio R --batch N --items N --fast";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -77,9 +79,13 @@ fn backend_spec(args: &Args, arts_dir: &str, model: &str) -> Result<BackendSpec>
     let seed = args.u64("seed", 0)?;
     match choice.as_str() {
         "native" => BackendSpec::native(ModelConfig::tiny(model), seed),
+        "sharded" => {
+            let threads = args.usize("threads", 4)?;
+            BackendSpec::sharded(ModelConfig::tiny(model), seed, threads)
+        }
         "pjrt" => pjrt_spec(arts_dir, model),
         "auto" => aqua_serve::runtime::default_spec_in(arts_dir, model, seed),
-        other => bail!("unknown backend '{other}' (expected auto|native|pjrt)"),
+        other => bail!("unknown backend '{other}' (expected auto|native|sharded|pjrt)"),
     }
 }
 
@@ -218,6 +224,25 @@ fn run(argv: &[String]) -> Result<()> {
         }
         "fig2" | "fig3" | "fig5" | "ablation" => {
             run_figure(args.subcommand.as_str(), &arts_dir, &model)
+        }
+        "benchcheck" => {
+            // Validate BENCH_decode.json (CI runs this after the bench
+            // smoke; --strict additionally asserts the perf invariants —
+            // packed beats masked-dense at k=d/4, sharded t=4 beats t=1).
+            let default = aqua_serve::bench::report::default_path().to_string();
+            let path = args.str("path", &default);
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {path} (run the decode benches first)"))?;
+            let doc = aqua_serve::util::json::Json::parse(&text)
+                .with_context(|| format!("parsing {path}"))?;
+            aqua_serve::bench::report::validate(&doc, args.switch("strict"))
+                .with_context(|| format!("validating {path}"))?;
+            println!(
+                "{path} ok (schema v{}, strict={})",
+                aqua_serve::bench::report::SCHEMA_VERSION,
+                args.switch("strict")
+            );
+            Ok(())
         }
         "breakeven" => {
             let bencher = if args.switch("fast") { Bencher::quick() } else { Bencher::default() };

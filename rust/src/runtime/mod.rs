@@ -5,7 +5,11 @@
 //!   [`backend::BackendSpec`] selection surface and the PJRT adapter.
 //! * [`native`] — hermetic pure-rust reference backend (default): a tiny
 //!   deterministic transformer on `tensor::core` + `aqua::native`, real KV
-//!   tensors owned in rust. Makes the full serving path testable offline.
+//!   tensors owned in rust (dim-major packed key cache; see its docs).
+//!   Makes the full serving path testable offline.
+//! * [`sharded`] — multi-threaded lane-sharded backend over the native
+//!   model: the batch's lanes and their KV shards split across persistent
+//!   worker threads, bit-identical to [`native`].
 //! * [`artifacts`] — manifest.json parsing, model/corpus/task locations
 //!   (feature-independent: the eval harness reads tasks from here).
 //! * [`exec`] (`--features pjrt`) — PJRT client, HLO-text → compiled
@@ -14,6 +18,7 @@
 pub mod artifacts;
 pub mod backend;
 pub mod native;
+pub mod sharded;
 
 #[cfg(feature = "pjrt")]
 pub mod exec;
@@ -21,9 +26,10 @@ pub mod exec;
 pub use artifacts::{Artifacts, ModelArtifacts};
 pub use backend::{
     corpus_or_synthetic, default_backend, default_spec, default_spec_in, AquaKnobs, BackendRecipe,
-    BackendSpec, ExecBackend, StepOut,
+    BackendSpec, ExecBackend, KernelCounters, StepOut,
 };
-pub use native::{synthetic_corpus, NativeBackend, NativeModel};
+pub use native::{synthetic_corpus, NativeBackend, NativeModel, ScoreMode};
+pub use sharded::ShardedBackend;
 
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;

@@ -20,20 +20,38 @@
 //!
 //! AQUA integration matches the lowered HLO semantics: keys are projected
 //! by a per-(layer, kv-head) *orthogonal* P and statically sliced by
-//! `dim_keep` **at cache-write time**; queries are projected/sliced at
-//! read time, the top-`k_dims` magnitude mask is applied to the query, and
-//! scores come from `aqua_scores_masked` (numerically identical to the
-//! sparse gather — property-tested in `aqua::native`). With `k = d` and
-//! `use_projection = false` this is exact standard attention.
+//! `dim_keep` **once, at cache-write time** (the O(d²) projection is paid
+//! per token, never per decode step); queries are projected/sliced at read
+//! time and the top-`k_dims` magnitude selection picks the dims the score
+//! kernel touches. With `k = d` and `use_projection = false` this is exact
+//! standard attention.
+//!
+//! Decode hot path (this is the layout/kernel co-design the break-even
+//! bench measures):
+//! * the key cache is **dim-major** (`[L, B, n_kv, d, S]`): each projected
+//!   dimension's values are contiguous across slots, so the packed kernel
+//!   [`aqua_scores_packed_cols`] streams exactly `k` contiguous runs —
+//!   compute and memory traffic both scale with k;
+//! * when H2O has evicted enough of the context, scoring switches to
+//!   [`aqua_scores_packed_cols_at`], touching only the attendable slots;
+//! * the masked-dense formulation stays available as [`ScoreMode::MaskedDense`],
+//!   the parity oracle the property tests compare against (the packed
+//!   kernels are *bit-identical* to it — see `aqua::native` tests);
+//! * all step scratch (activations, selections, scores, the attendable
+//!   list) lives in a persistent [`Scratch`] owned by the backend, so the
+//!   steady-state decode path allocates nothing but its two output vectors.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use super::backend::{AquaKnobs, ExecBackend, StepOut};
-use crate::aqua::native::{aqua_scores_masked, project};
+use super::backend::{AquaKnobs, ExecBackend, KernelCounters, StepOut};
+use crate::aqua::native::{
+    aqua_scores_masked, aqua_scores_packed_cols, aqua_scores_packed_cols_at, project,
+};
 use crate::model::config::ModelConfig;
-use crate::tensor::topk::topk_mask_by_abs;
+use crate::tensor::topk::{topk_indices_into, topk_mask_into};
 use crate::util::prng::Rng;
 
 /// Default tokens per lane per prefill call (small: the native model is a
@@ -186,14 +204,94 @@ fn silu_inplace(xs: &mut [f32]) {
 // Backend
 // ---------------------------------------------------------------------------
 
-/// The hermetic reference [`ExecBackend`]: owns real per-batch KV tensors
-/// (layout `[L, B, n_kv, S, d]`, keys stored projected+sliced, values raw).
+/// Which score kernel the backend routes through (see the module docs).
+/// `Auto` is the production policy; the explicit variants exist for the
+/// parity tests and the break-even benches.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum ScoreMode {
+    /// k = d → dense; heavy eviction → sparse subset; otherwise packed.
+    #[default]
+    Auto,
+    /// Full-width masked-dense oracle (the lowered-HLO formulation).
+    MaskedDense,
+    /// Always the slot-subset sparse kernel.
+    Sparse,
+    /// Always the contiguous dim-major packed kernel.
+    Packed,
+}
+
+/// Persistent per-backend step scratch: every buffer the forward pass
+/// needs, sized once from the model config so the steady-state decode path
+/// performs zero allocations (satellite of the decode hot-path overhaul).
+struct Scratch {
+    x: Vec<f32>,
+    h: Vec<f32>,
+    qs: Vec<f32>,
+    ks: Vec<f32>,
+    vs: Vec<f32>,
+    khat: Vec<f32>,
+    qhat: Vec<f32>,
+    /// Gathered query values: `qsel[j] = qhat[idx[j]]`.
+    qsel: Vec<f32>,
+    /// Binary keep-mask for the oracle's masked-dense formulation.
+    mask: Vec<f32>,
+    /// Selected dim indices (ascending), reused across heads/steps.
+    idx: Vec<usize>,
+    /// The identity index set 0..d (the dense kernel's "selection").
+    all_dims: Vec<usize>,
+    scores: Vec<f32>,
+    attn_out: Vec<f32>,
+    o_proj: Vec<f32>,
+    ff1: Vec<f32>,
+    ff2: Vec<f32>,
+    xf: Vec<f32>,
+    /// Attendable slot list for the current lane (sorted ascending).
+    att: Vec<usize>,
+}
+
+impl Scratch {
+    fn new(c: &ModelConfig) -> Scratch {
+        let (dm, d, nq, nkv, dff, s_cap) =
+            (c.d_model, c.d_head, c.n_q_heads, c.n_kv_heads, c.d_ff, c.max_seq);
+        Scratch {
+            x: vec![0.0; dm],
+            h: vec![0.0; dm],
+            qs: vec![0.0; nq * d],
+            ks: vec![0.0; nkv * d],
+            vs: vec![0.0; nkv * d],
+            khat: vec![0.0; d],
+            qhat: vec![0.0; d],
+            qsel: vec![0.0; d],
+            mask: vec![0.0; d],
+            idx: Vec::with_capacity(d),
+            all_dims: (0..d).collect(),
+            scores: vec![0.0; s_cap],
+            attn_out: vec![0.0; nq * d],
+            o_proj: vec![0.0; dm],
+            ff1: vec![0.0; dff],
+            ff2: vec![0.0; dm],
+            xf: vec![0.0; dm],
+            att: Vec::with_capacity(s_cap),
+        }
+    }
+}
+
+/// The hermetic reference [`ExecBackend`]: owns real per-batch KV tensors.
+/// Keys are stored projected+sliced in **dim-major** layout
+/// `[L, B, n_kv, d, S]` (see module docs); values raw in `[L, B, n_kv, S, d]`.
 pub struct NativeBackend {
     model: Arc<NativeModel>,
     batch: usize,
     prefill_chunk: usize,
+    score_mode: ScoreMode,
     k_cache: Vec<f32>,
+    /// Row-major `[L, B, n_kv, S, d]` *shadow* key cache, populated only in
+    /// [`ScoreMode::MaskedDense`]: the oracle scores against its own layout
+    /// and write path, so a bug in the dim-major cache or packed kernels
+    /// cannot cancel out of the parity tests.
+    k_cache_rows: Vec<f32>,
     v_cache: Vec<f32>,
+    scratch: Scratch,
 }
 
 impl NativeBackend {
@@ -203,16 +301,54 @@ impl NativeBackend {
 
     pub fn from_model(model: Arc<NativeModel>) -> NativeBackend {
         let chunk = NATIVE_PREFILL_CHUNK.clamp(1, model.cfg.max_seq);
-        NativeBackend { model, batch: 0, prefill_chunk: chunk, k_cache: vec![], v_cache: vec![] }
+        let scratch = Scratch::new(&model.cfg);
+        NativeBackend {
+            model,
+            batch: 0,
+            prefill_chunk: chunk,
+            score_mode: ScoreMode::Auto,
+            k_cache: vec![],
+            k_cache_rows: vec![],
+            v_cache: vec![],
+            scratch,
+        }
     }
 
     pub fn model(&self) -> &NativeModel {
         &self.model
     }
 
-    fn cache_base(&self, l: usize, lane: usize, g: usize) -> usize {
+    /// Select the score-kernel routing policy (default [`ScoreMode::Auto`]).
+    pub fn set_score_mode(&mut self, mode: ScoreMode) {
+        self.score_mode = mode;
+        if mode == ScoreMode::MaskedDense {
+            self.sync_oracle_cache();
+        }
+    }
+
+    /// (Re)build the oracle's row-major shadow key cache. Tokens written
+    /// *before* switching into oracle mode are transposed over from the
+    /// dim-major cache (they mirror it); tokens written afterwards go
+    /// through the independent row-major write path — set the mode before
+    /// the first write for a fully independent oracle.
+    fn sync_oracle_cache(&mut self) {
         let c = &self.model.cfg;
-        (((l * self.batch + lane) * c.n_kv_heads + g) * c.max_seq) * c.d_head
+        let (d, s_cap) = (c.d_head, c.max_seq);
+        let n = self.k_cache.len();
+        self.k_cache_rows.clear();
+        self.k_cache_rows.resize(n, 0.0);
+        for gb in 0..n / (d * s_cap) {
+            let base = gb * d * s_cap;
+            for s in 0..s_cap {
+                for i in 0..d {
+                    self.k_cache_rows[base + s * d + i] = self.k_cache[base + i * s_cap + s];
+                }
+            }
+        }
+    }
+
+    pub fn score_mode(&self) -> ScoreMode {
+        self.score_mode
     }
 
     /// One forward pass over `t` sequential tokens per lane (t = 1 for
@@ -245,31 +381,36 @@ impl NativeBackend {
         let k_dims = knobs.k_dims.clamp(1, d);
         let scale = (d as f32).powf(-0.5);
         let eps = c.norm_eps as f32;
+        let score_mode = self.score_mode;
+        if score_mode == ScoreMode::MaskedDense && self.k_cache_rows.len() != self.k_cache.len() {
+            // mode was switched after empty_cache — bring the shadow up
+            self.sync_oracle_cache();
+        }
+
+        // Cache bases. Keys are dim-major ([L, B, n_kv, d, S]: one
+        // projected dimension contiguous across slots), values row-major
+        // ([L, B, n_kv, S, d]). Both strides are per-(layer, lane, group).
+        let kcol_base = |l: usize, lane: usize, g: usize| (((l * b + lane) * nkv + g) * d) * s_cap;
+        let vrow_base = |l: usize, lane: usize, g: usize| (((l * b + lane) * nkv + g) * s_cap) * d;
 
         let mut logits_out = vec![0.0f32; b * t * vocab];
         let mut attn_acc = vec![0.0f32; c.n_layers * b * s_cap];
+        let mut kernels = KernelCounters::default();
 
-        // Scratch buffers reused across tokens/layers/heads.
-        let mut x = vec![0.0f32; dm];
-        let mut h = vec![0.0f32; dm];
-        let mut qs = vec![0.0f32; nq * d];
-        let mut ks = vec![0.0f32; nkv * d];
-        let mut vs = vec![0.0f32; nkv * d];
-        let mut khat = vec![0.0f32; d];
-        let mut qhat = vec![0.0f32; d];
-        let mut scores = vec![0.0f32; s_cap];
-        let mut attn_out = vec![0.0f32; nq * d];
-        let mut o_proj = vec![0.0f32; dm];
-        let mut ff1 = vec![0.0f32; dff];
-        let mut ff2 = vec![0.0f32; dm];
-        let mut xf = vec![0.0f32; dm];
+        // Split disjoint field borrows once: the persistent scratch, the
+        // caches, and the (cloned-Arc) model are independent.
+        let k_cache = &mut self.k_cache;
+        let k_rows = &mut self.k_cache_rows;
+        let v_cache = &mut self.v_cache;
+        let sc = &mut self.scratch;
 
         for lane in 0..b {
             let lane_mask = &slot_mask[lane * s_cap..(lane + 1) * s_cap];
             // Attendable slots: committed (engine's slot_mask) + positions
             // written earlier in this call. Committed indices are always
             // below the write cursor, so the list stays sorted.
-            let mut att: Vec<usize> = (0..s_cap).filter(|&s| lane_mask[s] > 0.5).collect();
+            sc.att.clear();
+            sc.att.extend((0..s_cap).filter(|&s| lane_mask[s] > 0.5));
 
             for ci in 0..t {
                 let tok_raw = tokens[lane * t + ci];
@@ -285,112 +426,164 @@ impl NativeBackend {
                 // `att` stays sorted: committed slots all sit below the
                 // write cursor. The binary_search guards the clamped
                 // full-lane case where `pos` is already attendable.
-                if writable && att.binary_search(&pos).is_err() {
-                    att.push(pos);
+                if writable && sc.att.binary_search(&pos).is_err() {
+                    sc.att.push(pos);
                 }
                 let tok = tok_raw.min(vocab as i32 - 1) as usize;
                 let pe = pos.min(s_cap - 1);
-                for (j, xv) in x.iter_mut().enumerate() {
+                for (j, xv) in sc.x.iter_mut().enumerate() {
                     *xv = model.embed[tok * dm + j] + model.pos_embed[pe * dm + j];
                 }
 
                 for (l, lw) in model.layers.iter().enumerate() {
                     // ---- attention block --------------------------------
-                    rmsnorm(&x, &lw.attn_norm, eps, &mut h);
-                    matvec(&h, &lw.wq, nq * d, &mut qs);
-                    matvec(&h, &lw.wk, nkv * d, &mut ks);
-                    matvec(&h, &lw.wv, nkv * d, &mut vs);
+                    rmsnorm(&sc.x, &lw.attn_norm, eps, &mut sc.h);
+                    matvec(&sc.h, &lw.wq, nq * d, &mut sc.qs);
+                    matvec(&sc.h, &lw.wk, nkv * d, &mut sc.ks);
+                    matvec(&sc.h, &lw.wv, nkv * d, &mut sc.vs);
 
                     if writable {
                         for g in 0..nkv {
-                            let k_raw = &ks[g * d..(g + 1) * d];
+                            let k_raw = &sc.ks[g * d..(g + 1) * d];
                             if knobs.use_projection {
-                                project(k_raw, model.projection(l, g), d, &mut khat);
+                                project(k_raw, model.projection(l, g), d, &mut sc.khat);
                             } else {
-                                khat.copy_from_slice(k_raw);
+                                sc.khat.copy_from_slice(k_raw);
                             }
-                            for (kv, &keep) in khat.iter_mut().zip(&knobs.dim_keep) {
+                            for (kv, &keep) in sc.khat.iter_mut().zip(&knobs.dim_keep) {
                                 *kv *= keep;
                             }
-                            let kb = self.cache_base(l, lane, g) + pos * d;
-                            self.k_cache[kb..kb + d].copy_from_slice(&khat);
-                            let vb = kb; // same layout for both caches
-                            self.v_cache[vb..vb + d].copy_from_slice(&vs[g * d..(g + 1) * d]);
+                            // dim-major key write: one strided store per dim,
+                            // paid once per token (not per decode step)
+                            let kb = kcol_base(l, lane, g);
+                            for (i, &kv) in sc.khat.iter().enumerate() {
+                                k_cache[kb + i * s_cap + pos] = kv;
+                            }
+                            if score_mode == ScoreMode::MaskedDense {
+                                // oracle shadow: independent row-major write
+                                let rb = vrow_base(l, lane, g) + pos * d;
+                                k_rows[rb..rb + d].copy_from_slice(&sc.khat);
+                            }
+                            let vb = vrow_base(l, lane, g) + pos * d;
+                            v_cache[vb..vb + d].copy_from_slice(&sc.vs[g * d..(g + 1) * d]);
                         }
                     }
 
-                    attn_out.fill(0.0);
-                    if let Some(&hi) = att.last() {
+                    sc.attn_out.fill(0.0);
+                    let t_score = Instant::now();
+                    if let Some(&hi) = sc.att.last() {
+                        let n = hi + 1;
                         for qh in 0..nq {
                             let g = qh / gsz;
-                            let q_raw = &qs[qh * d..(qh + 1) * d];
+                            let q_raw = &sc.qs[qh * d..(qh + 1) * d];
                             if knobs.use_projection {
-                                project(q_raw, model.projection(l, g), d, &mut qhat);
+                                project(q_raw, model.projection(l, g), d, &mut sc.qhat);
                             } else {
-                                qhat.copy_from_slice(q_raw);
+                                sc.qhat.copy_from_slice(q_raw);
                             }
-                            for (qv, &keep) in qhat.iter_mut().zip(&knobs.dim_keep) {
+                            for (qv, &keep) in sc.qhat.iter_mut().zip(&knobs.dim_keep) {
                                 *qv *= keep;
                             }
-                            // AQUA Algorithm 1: top-k |q̂| dims, masked-dense
-                            // scores (== sparse gather; see aqua::native).
-                            let mask = topk_mask_by_abs(&qhat, k_dims);
-                            let kb = self.cache_base(l, lane, g);
-                            aqua_scores_masked(
-                                &qhat,
-                                &mask,
-                                &self.k_cache[kb..kb + (hi + 1) * d],
-                                hi + 1,
-                                d,
-                                &mut scores[..hi + 1],
-                            );
+                            // AQUA Algorithm 1: top-k |q̂| dims, then route to
+                            // the cheapest equivalent kernel (all variants are
+                            // bit-identical — see aqua::native tests).
+                            let kb = kcol_base(l, lane, g);
+                            let kcols = &k_cache[kb..kb + d * s_cap];
+                            if score_mode == ScoreMode::MaskedDense {
+                                // Oracle: the pre-overhaul formulation —
+                                // top-k mask, full-width masked-dense dot
+                                // over the independent row-major shadow.
+                                topk_mask_into(&sc.qhat, k_dims, &mut sc.idx, &mut sc.mask);
+                                let rb = vrow_base(l, lane, g);
+                                aqua_scores_masked(
+                                    &sc.qhat,
+                                    &sc.mask,
+                                    &k_rows[rb..rb + n * d],
+                                    n,
+                                    d,
+                                    &mut sc.scores[..n],
+                                );
+                                kernels.dense += 1;
+                            } else if k_dims == d && score_mode == ScoreMode::Auto {
+                                // Full width: the selection is the identity.
+                                aqua_scores_packed_cols(
+                                    &sc.qhat, &sc.all_dims, kcols, s_cap, n, &mut sc.scores,
+                                );
+                                kernels.dense += 1;
+                            } else {
+                                topk_indices_into(&sc.qhat, k_dims, &mut sc.idx);
+                                for (j, &i) in sc.idx.iter().enumerate() {
+                                    sc.qsel[j] = sc.qhat[i];
+                                }
+                                let use_sparse = match score_mode {
+                                    ScoreMode::Sparse => true,
+                                    ScoreMode::Packed => false,
+                                    // eviction heuristic: holes in more than
+                                    // half the prefix → touch only live slots
+                                    _ => 2 * sc.att.len() < n,
+                                };
+                                if use_sparse {
+                                    aqua_scores_packed_cols_at(
+                                        &sc.qsel, &sc.idx, kcols, s_cap, &sc.att, &mut sc.scores,
+                                    );
+                                    kernels.sparse += 1;
+                                } else {
+                                    aqua_scores_packed_cols(
+                                        &sc.qsel, &sc.idx, kcols, s_cap, n, &mut sc.scores,
+                                    );
+                                    kernels.packed += 1;
+                                }
+                            }
                             // Softmax over the attendable set only.
-                            let m = att
+                            let m = sc
+                                .att
                                 .iter()
-                                .map(|&s| scores[s] * scale)
+                                .map(|&s| sc.scores[s] * scale)
                                 .fold(f32::NEG_INFINITY, f32::max);
                             let mut denom = 0.0f32;
-                            for &s in &att {
-                                let e = (scores[s] * scale - m).exp();
-                                scores[s] = e; // reuse as unnormalized prob
+                            for &s in &sc.att {
+                                let e = (sc.scores[s] * scale - m).exp();
+                                sc.scores[s] = e; // reuse as unnormalized prob
                                 denom += e;
                             }
                             if denom <= 0.0 {
                                 continue;
                             }
                             let acc_base = (l * b + lane) * s_cap;
-                            let out_h = &mut attn_out[qh * d..(qh + 1) * d];
-                            for &s in &att {
-                                let p = scores[s] / denom;
+                            let vb = vrow_base(l, lane, g);
+                            let out_h = &mut sc.attn_out[qh * d..(qh + 1) * d];
+                            for &s in &sc.att {
+                                let p = sc.scores[s] / denom;
                                 attn_acc[acc_base + s] += p;
-                                let vrow = &self.v_cache[kb + s * d..kb + (s + 1) * d];
+                                let vrow = &v_cache[vb + s * d..vb + (s + 1) * d];
                                 for (o, &vv) in out_h.iter_mut().zip(vrow) {
                                     *o += p * vv;
                                 }
                             }
                         }
                     }
-                    matvec(&attn_out, &lw.wo, dm, &mut o_proj);
-                    for (xv, &ov) in x.iter_mut().zip(&o_proj) {
+                    kernels.score_ns += t_score.elapsed().as_nanos() as u64;
+                    matvec(&sc.attn_out, &lw.wo, dm, &mut sc.o_proj);
+                    for (xv, &ov) in sc.x.iter_mut().zip(&sc.o_proj) {
                         *xv += ov;
                     }
 
                     // ---- MLP block --------------------------------------
-                    rmsnorm(&x, &lw.mlp_norm, eps, &mut h);
-                    matvec(&h, &lw.w1, dff, &mut ff1);
-                    silu_inplace(&mut ff1);
-                    matvec(&ff1, &lw.w2, dm, &mut ff2);
-                    for (xv, &fv) in x.iter_mut().zip(&ff2) {
+                    rmsnorm(&sc.x, &lw.mlp_norm, eps, &mut sc.h);
+                    matvec(&sc.h, &lw.w1, dff, &mut sc.ff1);
+                    silu_inplace(&mut sc.ff1);
+                    matvec(&sc.ff1, &lw.w2, dm, &mut sc.ff2);
+                    for (xv, &fv) in sc.x.iter_mut().zip(&sc.ff2) {
                         *xv += fv;
                     }
                 }
 
-                rmsnorm(&x, &model.final_norm, eps, &mut xf);
+                rmsnorm(&sc.x, &model.final_norm, eps, &mut sc.xf);
                 let row = &mut logits_out[(lane * t + ci) * vocab..(lane * t + ci + 1) * vocab];
-                matvec(&xf, &model.unembed, vocab, row);
+                matvec(&sc.xf, &model.unembed, vocab, row);
             }
         }
-        Ok(StepOut { logits: logits_out, attn_acc })
+        Ok(StepOut { logits: logits_out, attn_acc, kernels })
     }
 }
 
@@ -416,6 +609,10 @@ impl ExecBackend for NativeBackend {
         self.batch = b;
         self.k_cache.clear();
         self.k_cache.resize(n, 0.0);
+        self.k_cache_rows.clear();
+        if self.score_mode == ScoreMode::MaskedDense {
+            self.k_cache_rows.resize(n, 0.0);
+        }
         self.v_cache.clear();
         self.v_cache.resize(n, 0.0);
         Ok(())
@@ -631,6 +828,48 @@ mod tests {
         let rot = run(true);
         let diff = base.iter().zip(&rot).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
         assert!(diff < 1e-2, "rotation changed logits by {diff}");
+    }
+
+    #[test]
+    fn score_modes_agree_and_count_their_kernels() {
+        // The four routings must produce identical logits (the kernels are
+        // bit-identical; the oracle differs only in touching zeroed dims)
+        // and must report the kernel variant they actually ran.
+        let cfg = tiny();
+        let d = cfg.d_head;
+        let toks: Vec<i32> = b"parity".iter().map(|&b| b as i32).collect();
+        let run = |mode: ScoreMode, k_dims: usize| -> (Vec<f32>, KernelCounters) {
+            let mut be = NativeBackend::new(tiny(), 21).unwrap();
+            be.set_score_mode(mode);
+            be.empty_cache(1).unwrap();
+            let knobs = AquaKnobs { k_dims, dim_keep: vec![1.0; d], use_projection: true };
+            let mut mask = vec![0.0f32; cfg.max_seq];
+            let mut last = vec![];
+            let mut counters = KernelCounters::default();
+            for (i, &t) in toks.iter().enumerate() {
+                let out = be.decode(1, &[t], &[i as i32], &mask, &knobs).unwrap();
+                counters.merge(&out.kernels);
+                last = out.logits;
+                mask[i] = 1.0;
+            }
+            (last, counters)
+        };
+        for k_dims in [d / 4, d / 2, d] {
+            let (oracle, co) = run(ScoreMode::MaskedDense, k_dims);
+            assert!(co.dense > 0 && co.sparse == 0 && co.packed == 0);
+            let (packed, cp) = run(ScoreMode::Packed, k_dims);
+            assert!(cp.packed > 0 && cp.dense == 0);
+            let (sparse, cs) = run(ScoreMode::Sparse, k_dims);
+            assert!(cs.sparse > 0 && cs.dense == 0);
+            let (auto, ca) = run(ScoreMode::Auto, k_dims);
+            assert!(ca.calls() > 0);
+            if k_dims == d {
+                assert!(ca.dense > 0, "auto at k=d must route dense");
+            }
+            assert_eq!(oracle, packed, "packed vs oracle at k={k_dims}");
+            assert_eq!(oracle, sparse, "sparse vs oracle at k={k_dims}");
+            assert_eq!(oracle, auto, "auto vs oracle at k={k_dims}");
+        }
     }
 
     #[test]

@@ -1,0 +1,374 @@
+//! Multi-threaded sharded execution backend.
+//!
+//! [`ShardedBackend`] splits the batch's lanes — and with them the KV-cache
+//! shards those lanes own — across persistent worker threads, each running
+//! the hermetic [`NativeBackend`] forward pass on its shard. Lanes never
+//! interact inside a step (attention is per-lane over per-lane caches), so
+//! the shard decomposition is exact: the assembled output is **bit-identical**
+//! to a single `NativeBackend` over the full batch, for every score mode
+//! and knob setting (property-tested in `tests/decode_parity.rs`).
+//!
+//! The model weights are shared (`Arc<NativeModel>`); only the per-lane KV
+//! tensors and scratch are per-worker, so memory overhead is the KV split
+//! plus one scratch set per thread. Workers are spawned once at
+//! construction and fed through channels; a step scatters the per-lane
+//! inputs, runs all shards concurrently, and gathers `StepOut` slices back
+//! into engine order. Layer-pipelined sharding (splitting *layers* across
+//! threads, overlapping microbatches) is the complementary strategy for
+//! single-lane latency and is left to a future PR — lane sharding is the
+//! one that pays off on batched decode throughput, which is what the
+//! serving stack optimizes for (see `BENCHES.md`).
+
+use std::ops::Range;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::backend::{AquaKnobs, ExecBackend, KernelCounters, StepOut};
+use super::native::{NativeBackend, NativeModel, ScoreMode};
+use crate::model::config::ModelConfig;
+
+/// One step's inputs, copied once and shared (`Arc`) by every worker —
+/// each worker slices out its own lane range, so scatter cost does not
+/// scale with the thread count.
+struct StepInputs {
+    decode: bool,
+    /// Tokens per lane (1 for decode, prefill chunk otherwise).
+    t: usize,
+    s_cap: usize,
+    tokens: Vec<i32>,
+    pos: Vec<i32>,
+    slot_mask: Vec<f32>,
+    knobs: AquaKnobs,
+}
+
+enum Cmd {
+    EmptyCache(usize),
+    SetScoreMode(ScoreMode),
+    Run { inputs: Arc<StepInputs>, lanes: Range<usize> },
+    Shutdown,
+}
+
+struct Worker {
+    tx: mpsc::Sender<Cmd>,
+    rx: mpsc::Receiver<Result<StepOut>>,
+    join: Option<JoinHandle<()>>,
+}
+
+fn spawn_worker(model: Arc<NativeModel>) -> Worker {
+    let (tx, cmd_rx) = mpsc::channel::<Cmd>();
+    let (res_tx, rx) = mpsc::channel::<Result<StepOut>>();
+    let join = std::thread::spawn(move || {
+        let mut be = NativeBackend::from_model(model);
+        while let Ok(cmd) = cmd_rx.recv() {
+            let resp = match cmd {
+                Cmd::EmptyCache(b) => be.empty_cache(b).map(|_| StepOut::default()),
+                Cmd::SetScoreMode(mode) => {
+                    be.set_score_mode(mode);
+                    continue;
+                }
+                Cmd::Run { inputs, lanes } => {
+                    let (bw, t, s_cap) = (lanes.len(), inputs.t, inputs.s_cap);
+                    let toks = &inputs.tokens[lanes.start * t..lanes.end * t];
+                    let pos = &inputs.pos[lanes.start..lanes.end];
+                    let mask = &inputs.slot_mask[lanes.start * s_cap..lanes.end * s_cap];
+                    if inputs.decode {
+                        be.decode(bw, toks, pos, mask, &inputs.knobs)
+                    } else {
+                        be.prefill(bw, toks, pos, mask, &inputs.knobs)
+                    }
+                }
+                Cmd::Shutdown => return,
+            };
+            if res_tx.send(resp).is_err() {
+                return;
+            }
+        }
+    });
+    Worker { tx, rx, join: Some(join) }
+}
+
+/// Contiguous lane ranges, sizes differing by at most one.
+fn split_lanes(b: usize, n: usize) -> Vec<Range<usize>> {
+    let n = n.max(1);
+    let (base, rem) = (b / n, b % n);
+    let mut shards = Vec::with_capacity(n);
+    let mut start = 0;
+    for w in 0..n {
+        let len = base + usize::from(w < rem);
+        shards.push(start..start + len);
+        start += len;
+    }
+    shards
+}
+
+/// Lane-sharded multi-threaded [`ExecBackend`] over the native model (see
+/// module docs). Selected via `--backend sharded --threads N`.
+pub struct ShardedBackend {
+    model: Arc<NativeModel>,
+    workers: Vec<Worker>,
+    /// Lane range per worker for the current batch (empty range = idle).
+    shards: Vec<Range<usize>>,
+    batch: usize,
+    prefill_chunk: usize,
+}
+
+impl ShardedBackend {
+    pub fn new(cfg: ModelConfig, seed: u64, threads: usize) -> Result<ShardedBackend> {
+        Ok(Self::from_model(Arc::new(NativeModel::new(cfg, seed)?), threads))
+    }
+
+    pub fn from_model(model: Arc<NativeModel>, threads: usize) -> ShardedBackend {
+        let threads = threads.clamp(1, 64);
+        let workers = (0..threads).map(|_| spawn_worker(model.clone())).collect();
+        let chunk = super::native::NATIVE_PREFILL_CHUNK.clamp(1, model.cfg.max_seq);
+        ShardedBackend { model, workers, shards: vec![], batch: 0, prefill_chunk: chunk }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+
+    /// Forward the score-kernel routing policy to every worker (takes
+    /// effect from the next step; the channel is ordered).
+    pub fn set_score_mode(&mut self, mode: ScoreMode) -> Result<()> {
+        for w in &self.workers {
+            w.tx.send(Cmd::SetScoreMode(mode)).map_err(|_| anyhow!("sharded worker died"))?;
+        }
+        Ok(())
+    }
+
+    /// Scatter one step across the shards, run concurrently, gather the
+    /// outputs back into engine lane order.
+    fn run(
+        &mut self,
+        decode: bool,
+        b: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        slot_mask: &[f32],
+        knobs: &AquaKnobs,
+    ) -> Result<StepOut> {
+        let c = &self.model.cfg;
+        let (s_cap, vocab, n_layers) = (c.max_seq, c.vocab, c.n_layers);
+        if b != self.batch {
+            bail!("sharded step: batch {b} but shards sized for {} (call empty_cache)", self.batch);
+        }
+        let t = if decode { 1 } else { self.prefill_chunk };
+        if tokens.len() != b * t || pos.len() != b || slot_mask.len() != b * s_cap {
+            bail!("sharded step: arg shape mismatch (b={b}, t={t})");
+        }
+
+        let inputs = Arc::new(StepInputs {
+            decode,
+            t,
+            s_cap,
+            tokens: tokens.to_vec(),
+            pos: pos.to_vec(),
+            slot_mask: slot_mask.to_vec(),
+            knobs: knobs.clone(),
+        });
+        // A failed send means that worker is dead (its result channel is
+        // dropped, so the gather below errors fast instead of blocking);
+        // keep scattering so live workers stay in step.
+        for (w, shard) in self.workers.iter().zip(&self.shards) {
+            if shard.is_empty() {
+                continue;
+            }
+            let cmd = Cmd::Run { inputs: inputs.clone(), lanes: shard.start..shard.end };
+            let _ = w.tx.send(cmd);
+        }
+
+        let mut logits = vec![0.0f32; b * t * vocab];
+        let mut attn_acc = vec![0.0f32; n_layers * b * s_cap];
+        let mut kernels = KernelCounters::default();
+        // Drain every dispatched shard even after a failure — an early
+        // return would leave the remaining StepOuts queued and pair them
+        // with the *next* call's gather (silent step desync).
+        let mut first_err: Option<anyhow::Error> = None;
+        for (w, shard) in self.workers.iter().zip(&self.shards) {
+            if shard.is_empty() {
+                continue;
+            }
+            let out = match w.rx.recv() {
+                Err(_) => {
+                    first_err.get_or_insert_with(|| anyhow!("sharded worker died"));
+                    continue;
+                }
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                    continue;
+                }
+                Ok(Ok(out)) => out,
+            };
+            let bw = shard.len();
+            if out.logits.len() != bw * t * vocab || out.attn_acc.len() != n_layers * bw * s_cap {
+                let e = anyhow!("sharded step: worker output shape mismatch");
+                first_err.get_or_insert(e);
+                continue;
+            }
+            // Lanes are contiguous per shard, so logits rows concatenate.
+            logits[shard.start * t * vocab..shard.end * t * vocab].copy_from_slice(&out.logits);
+            // attn_acc is [L, B, S]: interleave per layer.
+            for l in 0..n_layers {
+                let src = &out.attn_acc[l * bw * s_cap..(l + 1) * bw * s_cap];
+                let dst = (l * b + shard.start) * s_cap;
+                attn_acc[dst..dst + bw * s_cap].copy_from_slice(src);
+            }
+            kernels.merge(&out.kernels);
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(StepOut { logits, attn_acc, kernels })
+    }
+}
+
+impl ExecBackend for ShardedBackend {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn model_config(&self) -> &ModelConfig {
+        &self.model.cfg
+    }
+
+    fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
+    }
+
+    fn empty_cache(&mut self, b: usize) -> Result<()> {
+        if b == 0 {
+            bail!("sharded empty_cache: batch must be >= 1");
+        }
+        self.shards = split_lanes(b, self.workers.len());
+        self.batch = b;
+        // as in `run`: a failed send = dead worker, surfaced by the drain
+        for (w, shard) in self.workers.iter().zip(&self.shards) {
+            if shard.is_empty() {
+                continue;
+            }
+            let _ = w.tx.send(Cmd::EmptyCache(shard.len()));
+        }
+        // drain every ack before surfacing an error (same reasoning as in
+        // `run`: a leftover ack would desync the next gather)
+        let mut first_err: Option<anyhow::Error> = None;
+        for (w, shard) in self.workers.iter().zip(&self.shards) {
+            if shard.is_empty() {
+                continue;
+            }
+            match w.rx.recv() {
+                Err(_) => {
+                    first_err.get_or_insert_with(|| anyhow!("sharded worker died"));
+                }
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Ok(Ok(_)) => {}
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn prefill(
+        &mut self,
+        b: usize,
+        tokens: &[i32],
+        pos0: &[i32],
+        slot_mask: &[f32],
+        knobs: &AquaKnobs,
+    ) -> Result<StepOut> {
+        self.run(false, b, tokens, pos0, slot_mask, knobs)
+    }
+
+    fn decode(
+        &mut self,
+        b: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        slot_mask: &[f32],
+        knobs: &AquaKnobs,
+    ) -> Result<StepOut> {
+        self.run(true, b, tokens, pos, slot_mask, knobs)
+    }
+}
+
+impl Drop for ShardedBackend {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            let _ = w.tx.send(Cmd::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(join) = w.join.take() {
+                let _ = join.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::tiny("sharded-test")
+    }
+
+    #[test]
+    fn lane_split_covers_batch_evenly() {
+        assert_eq!(split_lanes(8, 4), vec![0..2, 2..4, 4..6, 6..8]);
+        assert_eq!(split_lanes(5, 2), vec![0..3, 3..5]);
+        assert_eq!(split_lanes(2, 4), vec![0..1, 1..2, 2..2, 2..2]);
+        assert_eq!(split_lanes(3, 1), vec![0..3]);
+    }
+
+    #[test]
+    fn matches_native_backend_exactly() {
+        let cfg = tiny();
+        let d = cfg.d_head;
+        let model = Arc::new(NativeModel::new(cfg.clone(), 13).unwrap());
+        let knobs = AquaKnobs { k_dims: d / 2, dim_keep: vec![1.0; d], use_projection: true };
+        let b = 5;
+
+        let mut native = NativeBackend::from_model(model.clone());
+        native.empty_cache(b).unwrap();
+        let mut sharded = ShardedBackend::from_model(model, 3);
+        sharded.empty_cache(b).unwrap();
+
+        let mut mask = vec![0.0f32; b * cfg.max_seq];
+        for i in 0..6usize {
+            let tokens: Vec<i32> = (0..b).map(|lane| 40 + (lane + i) as i32).collect();
+            let pos = vec![i as i32; b];
+            let a = native.decode(b, &tokens, &pos, &mask, &knobs).unwrap();
+            let s = sharded.decode(b, &tokens, &pos, &mask, &knobs).unwrap();
+            assert_eq!(a.logits, s.logits, "logits diverged at step {i}");
+            assert_eq!(a.attn_acc, s.attn_acc, "attn mass diverged at step {i}");
+            assert_eq!(a.kernels.calls(), s.kernels.calls());
+            for lane in 0..b {
+                mask[lane * cfg.max_seq + i] = 1.0;
+            }
+        }
+    }
+
+    #[test]
+    fn more_threads_than_lanes_is_fine() {
+        let cfg = tiny();
+        let d = cfg.d_head;
+        let mut be = ShardedBackend::new(cfg.clone(), 7, 8).unwrap();
+        be.empty_cache(2).unwrap();
+        let mask = vec![0.0f32; 2 * cfg.max_seq];
+        let out = be.decode(2, &[65, 66], &[0, 0], &mask, &AquaKnobs::exact(d)).unwrap();
+        assert_eq!(out.logits.len(), 2 * cfg.vocab);
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+        assert!(out.kernels.calls() > 0);
+    }
+}

@@ -1,7 +1,10 @@
 //! Minimal HTTP/1.1 front-end (hyper/tokio unavailable offline).
 //!
 //! `POST /generate {"prompt": "...", "max_new_tokens": N}` → generated text
-//! `GET  /stats` → engine metrics snapshot
+//! `GET  /stats` → engine metrics snapshot (latency/throughput headline)
+//! `GET  /metrics` → full snapshot incl. score-kernel variant counters
+//!                   (which AQUA kernel — dense/sparse/packed — actually
+//!                   ran) and attention-score-path timing
 //! `GET  /healthz` → ok
 //!
 //! The engine is !Send (PJRT handles), so it lives on its own thread behind
@@ -62,20 +65,35 @@ fn route(
 ) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => Response::text(200, "ok"),
-        ("GET", "/stats") => {
+        ("GET", "/stats") | ("GET", "/metrics") => {
             let (tx, rx) = mpsc::channel();
             if cmd_tx.send(EngineCmd::Stats(tx)).is_err() {
                 return Response::text(500, "engine gone");
             }
             match rx.recv_timeout(std::time::Duration::from_secs(5)) {
-                Ok(s) => Response::json(200, &Json::obj(vec![
-                    ("requests_done", Json::Num(s.requests_done as f64)),
-                    ("tokens_generated", Json::Num(s.tokens_generated as f64)),
-                    ("decode_tok_per_s", Json::Num(s.decode_tok_per_s)),
-                    ("mean_ttft_ms", Json::Num(s.mean_ttft_ms)),
-                    ("p99_ttft_ms", Json::Num(s.p99_ttft_ms)),
-                    ("h2o_evictions", Json::Num(s.h2o_evictions as f64)),
-                ])),
+                Ok(s) => {
+                    let mut fields = vec![
+                        ("requests_done", Json::Num(s.requests_done as f64)),
+                        ("tokens_generated", Json::Num(s.tokens_generated as f64)),
+                        ("decode_tok_per_s", Json::Num(s.decode_tok_per_s)),
+                        ("mean_ttft_ms", Json::Num(s.mean_ttft_ms)),
+                        ("p99_ttft_ms", Json::Num(s.p99_ttft_ms)),
+                        ("h2o_evictions", Json::Num(s.h2o_evictions as f64)),
+                    ];
+                    if req.path == "/metrics" {
+                        fields.extend([
+                            ("kernel_dense", Json::Num(s.kernels.dense as f64)),
+                            ("kernel_sparse", Json::Num(s.kernels.sparse as f64)),
+                            ("kernel_packed", Json::Num(s.kernels.packed as f64)),
+                            ("score_time_s", Json::Num(s.kernels.score_ns as f64 / 1e9)),
+                            ("score_us_per_decode", Json::Num(s.score_us_per_decode)),
+                            ("decode_calls", Json::Num(s.decode_calls as f64)),
+                            ("prefill_calls", Json::Num(s.prefill_calls as f64)),
+                            ("wall_tok_per_s", Json::Num(s.wall_tok_per_s)),
+                        ]);
+                    }
+                    Response::json(200, &Json::obj(fields))
+                }
                 Err(_) => Response::text(504, "stats timeout"),
             }
         }

@@ -4,32 +4,53 @@
 //! complexity analysis assumes (Blum et al. select / introselect — rust's
 //! `select_nth_unstable` is exactly that).
 
-/// Indices of the k largest |x| entries, ascending index order.
-pub fn topk_indices_by_abs(xs: &[f32], k: usize) -> Vec<usize> {
+/// Write the indices of the k largest |x| entries into `idx` (ascending
+/// index order), reusing the caller's allocation — the decode hot path
+/// calls this once per query head per step, so the buffer is provided by
+/// the backend's scratch rather than allocated here. O(d) average
+/// introselect partition + an O(k log k) tidy of the winners (k ≤ d).
+pub fn topk_indices_into(xs: &[f32], k: usize, idx: &mut Vec<usize>) {
     let d = xs.len();
     let k = k.min(d);
+    idx.clear();
     if k == 0 {
-        return vec![];
+        return;
     }
+    idx.extend(0..d);
     if k == d {
-        return (0..d).collect();
+        return;
     }
-    let mut idx: Vec<usize> = (0..d).collect();
     // Partition so the k largest-|·| are in the first k slots: O(d) average.
     idx.select_nth_unstable_by(k - 1, |&a, &b| {
         xs[b].abs().partial_cmp(&xs[a].abs()).unwrap_or(std::cmp::Ordering::Equal)
     });
-    let mut out = idx[..k].to_vec();
-    out.sort_unstable();
-    out
+    idx.truncate(k);
+    idx.sort_unstable();
+}
+
+/// Indices of the k largest |x| entries, ascending index order (allocating
+/// wrapper over [`topk_indices_into`]).
+pub fn topk_indices_by_abs(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx = Vec::with_capacity(xs.len());
+    topk_indices_into(xs, k, &mut idx);
+    idx
+}
+
+/// Binary keep-mask (1.0/0.0) from the same selection, written into a
+/// caller-provided mask buffer (len d) with `idx` as selection scratch.
+pub fn topk_mask_into(xs: &[f32], k: usize, idx: &mut Vec<usize>, mask: &mut [f32]) {
+    topk_indices_into(xs, k, idx);
+    mask[..xs.len()].fill(0.0);
+    for &i in idx.iter() {
+        mask[i] = 1.0;
+    }
 }
 
 /// Binary keep-mask (1.0/0.0) from the same selection.
 pub fn topk_mask_by_abs(xs: &[f32], k: usize) -> Vec<f32> {
     let mut m = vec![0.0f32; xs.len()];
-    for i in topk_indices_by_abs(xs, k) {
-        m[i] = 1.0;
-    }
+    let mut idx = Vec::with_capacity(xs.len());
+    topk_mask_into(xs, k, &mut idx, &mut m);
     m
 }
 
@@ -63,6 +84,18 @@ mod tests {
         assert_eq!(topk_indices_by_abs(&xs, 0), Vec::<usize>::new());
         assert_eq!(topk_indices_by_abs(&xs, 5), vec![0, 1, 2, 3, 4]);
         assert_eq!(topk_indices_by_abs(&xs, 99), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn into_variant_reuses_buffer_across_calls() {
+        let mut idx = Vec::new();
+        topk_indices_into(&[0.1f32, -5.0, 3.0, -0.2, 4.0], 2, &mut idx);
+        assert_eq!(idx, vec![1, 4]);
+        // a second call with a different k must fully overwrite the buffer
+        topk_indices_into(&[9.0f32, 1.0, 2.0], 1, &mut idx);
+        assert_eq!(idx, vec![0]);
+        topk_indices_into(&[1.0f32], 0, &mut idx);
+        assert!(idx.is_empty());
     }
 
     #[test]
