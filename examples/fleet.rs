@@ -1,0 +1,95 @@
+//! Fleet serving quickstart: load `examples/fleet.json` (two AQUA
+//! operating points of the same model), serve them behind one HTTP
+//! router, route requests by name, then mutate the fleet at runtime
+//! through the admin endpoints (`POST /models`, `DELETE /models/{name}`).
+//!
+//! ```bash
+//! cargo run --release --example fleet
+//! ```
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use aqua_serve::registry::ModelRegistry;
+use aqua_serve::server;
+use aqua_serve::server::http::client_request as http;
+use aqua_serve::util::json::Json;
+
+fn generate(addr: SocketAddr, model: Option<&str>, prompt: &str) -> Result<String> {
+    let model_field = match model {
+        Some(m) => format!(", \"model\": \"{m}\""),
+        None => String::new(),
+    };
+    let body = format!("{{\"prompt\": \"{prompt}\", \"max_new_tokens\": 24{model_field}}}");
+    let (status, resp) = http(addr, "POST", "/generate", &body)?;
+    anyhow::ensure!(status == 200, "generate failed ({status}): {resp}");
+    let doc = Json::parse(&resp)?;
+    Ok(format!(
+        "[{}] {:?} ({} tokens)",
+        doc.get("model").as_str().unwrap_or("?"),
+        doc.get("text").as_str().unwrap_or(""),
+        doc.get("tokens").as_i64().unwrap_or(0)
+    ))
+}
+
+fn main() -> Result<()> {
+    // Fleet config lives next to this example; resolved relative to the
+    // rust crate so the binary works from any CWD.
+    let cfg_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/fleet.json");
+    let text = std::fs::read_to_string(cfg_path).with_context(|| format!("reading {cfg_path}"))?;
+    let doc = Json::parse(&text)?;
+    let registry = Arc::new(ModelRegistry::from_fleet_json(&doc, aqua_serve::ARTIFACTS_DIR)?);
+    println!("fleet: {} (default: {})", registry.names().join(", "),
+             registry.default_name().unwrap_or_default());
+
+    // Serve on an ephemeral loopback port, accept loop on its own thread.
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    {
+        let registry = registry.clone();
+        std::thread::spawn(move || {
+            let _ = server::serve_on(listener, registry);
+        });
+    }
+    println!("listening on http://{addr}\n");
+
+    // --- route by name (and by fleet default) ---------------------------
+    println!("{}", generate(addr, Some("exact"), "the capital of ")?);
+    println!("{}", generate(addr, Some("pruned"), "the capital of ")?);
+    println!("{} <- default routing", generate(addr, None, "the capital of ")?);
+
+    // --- mutate the fleet at runtime ------------------------------------
+    let spec = r#"{"name": "mid", "backend": "native", "k_ratio": 0.5, "batch": 2}"#;
+    let (status, _) = http(addr, "POST", "/models", spec)?;
+    anyhow::ensure!(status == 200, "POST /models failed ({status})");
+    println!("\nadded 'mid' at runtime:");
+    println!("{}", generate(addr, Some("mid"), "the capital of ")?);
+
+    let (status, _) = http(addr, "DELETE", "/models/mid", "")?;
+    anyhow::ensure!(status == 200, "DELETE /models/mid failed ({status})");
+    let (status, _) = http(addr, "POST", "/generate", r#"{"prompt": "x", "model": "mid"}"#)?;
+    anyhow::ensure!(status == 404, "deleted model should 404, got {status}");
+    println!("removed 'mid' (drained; routing now 404s it)");
+
+    // --- per-model metrics stay isolated --------------------------------
+    let (status, resp) = http(addr, "GET", "/metrics", "")?;
+    anyhow::ensure!(status == 200, "GET /metrics failed ({status})");
+    let doc = Json::parse(&resp)?;
+    println!("\nfleet requests_done = {}", doc.get("requests_done").as_i64().unwrap_or(0));
+    for name in ["exact", "pruned"] {
+        let m = doc.get("models").get(name);
+        println!(
+            "  {name:<7} requests={} kernels dense={} packed={} queue_depth={} shed={}",
+            m.get("requests_done").as_i64().unwrap_or(0),
+            m.get("kernel_dense").as_i64().unwrap_or(0),
+            m.get("kernel_packed").as_i64().unwrap_or(0),
+            m.get("queue_depth").as_i64().unwrap_or(0),
+            m.get("shed_total").as_i64().unwrap_or(0)
+        );
+    }
+    registry.shutdown_all()?;
+    println!("\nfleet drained; bye");
+    Ok(())
+}

@@ -1,109 +1,222 @@
-//! Open-loop load test: Poisson arrivals against the threaded engine
-//! front-end (`EngineHandle`), the way a serving paper measures latency
-//! under load — queueing delay included, unlike the closed-loop
-//! serving_demo. The backend is constructed *on the engine thread* via
-//! `BackendRecipe` (PJRT handles are !Send; the native model moves
-//! freely).
+//! Open-loop load test over the multi-model registry: Poisson arrivals
+//! split across two AQUA operating points (`exact` k=1.0 and `pruned`
+//! k=0.25) behind bounded admission — the way a serving paper measures
+//! latency under load, queueing delay *and* shed rate included, unlike
+//! the closed-loop serving_demo. Each deployment's backend is
+//! constructed on its own engine thread via `BackendRecipe`.
+//!
+//! Writes the per-model throughput/shed-rate trajectory to
+//! `BENCH_serving.json` through `bench::report` (schema in BENCHES.md,
+//! validated by `aqua benchcheck`).
 //!
 //! ```bash
 //! cargo run --release --example openloop_load [-- <requests-per-second>...]
 //! ```
 
-use std::sync::mpsc;
+use std::collections::HashMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
-use aqua_serve::aqua::policy::AquaConfig;
-use aqua_serve::coordinator::engine::{EngineCmd, EngineHandle};
-use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
-use aqua_serve::runtime::{corpus_or_synthetic, default_spec};
+use aqua_serve::bench::report::{serving_path, validate_serving, BenchReport};
+use aqua_serve::coordinator::GenRequest;
+use aqua_serve::registry::{Admission, DeploymentSpec, ModelRegistry};
+use aqua_serve::runtime::corpus_or_synthetic;
 use aqua_serve::tokenizer::ByteTokenizer;
+use aqua_serve::util::json::Json;
+use aqua_serve::util::percentile;
 use aqua_serve::util::prng::Rng;
-use aqua_serve::util::{mean, percentile};
+
+/// Tokens each request generates (newline-stopped, so usually fewer).
+const GEN_LEN: usize = 24;
+/// Requests per arrival-rate point.
+const REQUESTS_PER_RATE: usize = 24;
+
+struct ModelLoad {
+    name: &'static str,
+    sent: u64,
+    done: u64,
+    shed: u64,
+    tokens: u64,
+    e2e_ms: Vec<f64>,
+    outstanding: Vec<u64>,
+    submit_at: HashMap<u64, Instant>,
+}
+
+impl ModelLoad {
+    fn new(name: &'static str) -> ModelLoad {
+        ModelLoad {
+            name,
+            sent: 0,
+            done: 0,
+            shed: 0,
+            tokens: 0,
+            e2e_ms: vec![],
+            outstanding: vec![],
+            submit_at: HashMap::new(),
+        }
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let rates: Vec<f64> = {
-        let args: Vec<f64> =
-            std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
+        let args: Vec<f64> = std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
         if args.is_empty() {
             vec![2.0, 6.0, 12.0]
         } else {
             args
         }
     };
-    let spec = default_spec("llama-analog", 0)?;
-    let backend_name = spec.name();
-    // clamp prompts to the backend's KV capacity (requests generate 24)
-    let max_prompt = spec.max_prompt(24);
-    let corpus = corpus_or_synthetic(1 << 15);
 
-    // Engine lives on its own thread; the recipe builds the backend there.
-    let recipe = spec.recipe();
-    let handle = EngineHandle::spawn(move || {
-        Engine::new(
-            recipe.build()?,
-            EngineConfig {
-                batch: 4,
-                aqua: AquaConfig { k_ratio: 0.75, ..Default::default() },
-                ..Default::default()
-            },
-        )
-    });
+    // Two operating points of the same model behind one registry: the
+    // exact baseline and an aggressive AQUA knob, queue-bounded at 8.
+    let registry = ModelRegistry::new(aqua_serve::ARTIFACTS_DIR);
+    registry
+        .deploy(DeploymentSpec::parse_kv("name=exact,backend=native,k=1.0,batch=4,queue=8")?)?;
+    registry
+        .deploy(DeploymentSpec::parse_kv("name=pruned,backend=native,k=0.25,batch=4,queue=8")?)?;
+    let names: [&'static str; 2] = ["exact", "pruned"];
+    let deps: Vec<_> = names.iter().map(|&n| registry.get(Some(n)).unwrap()).collect();
+    let backend = deps[0].backend_kind();
+
+    let corpus = corpus_or_synthetic(1 << 15);
     let tok = ByteTokenizer;
     let lines: Vec<&[u8]> = corpus.split(|&b| b == b'\n').filter(|l| l.len() > 10).collect();
+    let max_prompt = deps[0].max_prompt(GEN_LEN);
 
-    // Warm the backend (compiles executables on the pjrt path).
-    handle.cmd_tx.send(EngineCmd::Submit(GenRequest::new(
-        0,
-        tok.encode_bytes(&lines[0][..lines[0].len().min(max_prompt)]),
-        4,
-    )))?;
-    let _ = handle.result_rx.recv_timeout(Duration::from_secs(60));
+    // Warm both engines (compiles executables on the pjrt path).
+    for dep in &deps {
+        let id = dep.fresh_id();
+        let prompt = tok.encode_bytes(&lines[0][..lines[0].len().min(max_prompt)]);
+        dep.submit(GenRequest::new(id, prompt, 4))?;
+        let _ = dep.wait_result(id, Duration::from_secs(60));
+    }
 
-    println!("# open-loop Poisson load, 20 requests per rate, AQUA k=0.75, batch=4, {backend_name} backend\n");
-    println!("{:>8} {:>12} {:>12} {:>12} {:>10}",
-             "req/s", "e2e p50", "e2e p99", "ttft p50", "done");
-    let mut next_id = 1u64;
+    println!(
+        "# open-loop Poisson load, {REQUESTS_PER_RATE} requests per rate split over \
+         {} models, queue=8, batch=4, {backend} backend\n",
+        names.len()
+    );
+    println!(
+        "{:>8} {:>8} {:>6} {:>6} {:>6} {:>12} {:>12} {:>10}",
+        "req/s", "model", "sent", "done", "shed", "e2e p50", "e2e p99", "tok/s"
+    );
+
+    let mut rows: Vec<Json> = vec![];
     for &rate in &rates {
-        let n = 20usize;
         let mut rng = Rng::new(7);
-        let mut submit_times = std::collections::HashMap::new();
+        let mut loads: Vec<ModelLoad> = names.iter().map(|&n| ModelLoad::new(n)).collect();
         let t0 = Instant::now();
-        let mut e2e = vec![];
-        let mut ttft = vec![];
-        let mut done = 0usize;
-        let mut sent = 0usize;
+        let mut sent_total = 0usize;
         let mut next_arrival = Duration::ZERO;
-        while done < n {
-            // submit according to the Poisson schedule
-            while sent < n && t0.elapsed() >= next_arrival {
+        let mut last_progress = Instant::now();
+        loop {
+            let mut progressed = false;
+            // submit according to the Poisson schedule, routing uniformly
+            while sent_total < REQUESTS_PER_RATE && t0.elapsed() >= next_arrival {
+                let m = rng.below(deps.len());
                 let line = lines[rng.below(lines.len())];
                 let cut = (6 + rng.below(line.len() - 6)).min(max_prompt);
-                let mut r = GenRequest::new(next_id, tok.encode_bytes(&line[..cut]), 24);
+                let id = deps[m].fresh_id();
+                let mut r = GenRequest::new(id, tok.encode_bytes(&line[..cut]), GEN_LEN);
                 r.stop_token = Some(b'\n' as i32);
-                submit_times.insert(next_id, Instant::now());
-                handle.cmd_tx.send(EngineCmd::Submit(r))?;
-                next_id += 1;
-                sent += 1;
+                loads[m].sent += 1;
+                match deps[m].submit(r)? {
+                    Admission::Accepted => {
+                        loads[m].submit_at.insert(id, Instant::now());
+                        loads[m].outstanding.push(id);
+                    }
+                    Admission::Shed => loads[m].shed += 1,
+                }
+                sent_total += 1;
+                progressed = true;
                 // exponential inter-arrival
                 let u: f64 = rng.f64().max(1e-9);
                 next_arrival += Duration::from_secs_f64(-u.ln() / rate);
             }
-            match handle.result_rx.recv_timeout(Duration::from_millis(2)) {
-                Ok(res) => {
-                    let t_submit = submit_times[&res.id];
-                    e2e.push(t_submit.elapsed().as_secs_f64() * 1e3);
-                    ttft.push(res.ttft_us as f64 / 1e3);
-                    done += 1;
+            // drain completions
+            for (m, dep) in deps.iter().enumerate() {
+                let load = &mut loads[m];
+                let ids = std::mem::take(&mut load.outstanding);
+                for id in ids {
+                    match dep.take_result(id) {
+                        Some(res) => {
+                            load.e2e_ms.push(load.submit_at[&id].elapsed().as_secs_f64() * 1e3);
+                            load.tokens += res.tokens.len() as u64;
+                            load.done += 1;
+                            progressed = true;
+                        }
+                        None => load.outstanding.push(id),
+                    }
                 }
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(e) => anyhow::bail!("engine thread died: {e}"),
             }
+            if sent_total >= REQUESTS_PER_RATE && loads.iter().all(|l| l.outstanding.is_empty()) {
+                break;
+            }
+            if progressed {
+                last_progress = Instant::now();
+            } else if loads.iter().any(|l| !l.outstanding.is_empty())
+                && last_progress.elapsed() > Duration::from_secs(60)
+            {
+                // an engine thread that died (step error / panic) never
+                // resolves its outstanding ids — fail loudly, don't hang CI
+                anyhow::bail!("open-loop drain made no progress for 60s — engine thread died?");
+            }
+            std::thread::sleep(Duration::from_millis(1));
         }
-        println!("{:>8.1} {:>10.1}ms {:>10.1}ms {:>10.1}ms {:>10}",
-                 rate, percentile(&e2e, 50.0), percentile(&e2e, 99.0),
-                 percentile(&ttft, 50.0), done);
-        let _ = mean(&e2e);
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        for load in &loads {
+            println!(
+                "{:>8.1} {:>8} {:>6} {:>6} {:>6} {:>10.1}ms {:>10.1}ms {:>10.1}",
+                rate,
+                load.name,
+                load.sent,
+                load.done,
+                load.shed,
+                percentile(&load.e2e_ms, 50.0),
+                percentile(&load.e2e_ms, 99.0),
+                load.tokens as f64 / wall
+            );
+            rows.push(Json::obj(vec![
+                ("model", Json::Str(load.name.to_string())),
+                ("backend", Json::Str(backend.to_string())),
+                ("rate_rps", Json::Num(rate)),
+                ("sent", Json::Num(load.sent as f64)),
+                ("done", Json::Num(load.done as f64)),
+                ("shed", Json::Num(load.shed as f64)),
+                (
+                    "shed_rate",
+                    Json::Num(if load.sent > 0 {
+                        load.shed as f64 / load.sent as f64
+                    } else {
+                        0.0
+                    }),
+                ),
+                ("tok_per_s", Json::Num(load.tokens as f64 / wall)),
+                ("e2e_p50_ms", Json::Num(percentile(&load.e2e_ms, 50.0))),
+                ("e2e_p99_ms", Json::Num(percentile(&load.e2e_ms, 99.0))),
+            ]));
+        }
     }
-    let _ = handle.cmd_tx.send(EngineCmd::Shutdown);
+    registry.shutdown_all()?;
+
+    let section = Json::obj(vec![
+        ("rows", Json::Arr(rows)),
+        ("model_cfg", Json::Str("llama-analog".to_string())),
+        ("requests_per_rate", Json::Num(REQUESTS_PER_RATE as f64)),
+        (
+            "units",
+            Json::Str(
+                "open-loop Poisson; tok_per_s = generated tokens / rate-window wall; \
+                 shed_rate = shed / sent at admission (queue bound 8)"
+                    .to_string(),
+            ),
+        ),
+    ]);
+    let path = Path::new(serving_path());
+    let mut rep = BenchReport::load_or_new(path);
+    rep.set_section("openloop_serving", section);
+    validate_serving(rep.doc(), false)?;
+    rep.save(path)?;
+    println!("\nwrote openloop_serving section to {}", path.display());
     Ok(())
 }

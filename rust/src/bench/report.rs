@@ -33,6 +33,13 @@ pub fn default_path() -> &'static str {
     concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json")
 }
 
+/// Repo-root path of the serving report (`BENCH_serving.json`), written by
+/// `examples/openloop_load.rs` — same layout conventions as the decode
+/// report, one `openloop_serving` section (schema in BENCHES.md).
+pub fn serving_path() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json")
+}
+
 /// An on-disk report being updated section-by-section.
 pub struct BenchReport {
     doc: Json,
@@ -144,6 +151,47 @@ pub fn validate(doc: &Json, strict: bool) -> Result<()> {
     Ok(())
 }
 
+/// Validate a `BENCH_serving.json` document (the `openloop_serving`
+/// section `examples/openloop_load.rs` emits: per-model throughput and
+/// shed-rate under open-loop Poisson load; schema in BENCHES.md).
+/// `strict` refuses cost-model-projected snapshots, mirroring
+/// [`validate`].
+pub fn validate_serving(doc: &Json, strict: bool) -> Result<()> {
+    let ver = doc.get("schema_version").as_i64().unwrap_or(0);
+    if ver != SCHEMA_VERSION {
+        bail!("schema_version {ver} != {SCHEMA_VERSION}");
+    }
+    for r in rows_of(doc, "openloop_serving")? {
+        for f in ["model", "backend"] {
+            if r.get(f).as_str().is_none() {
+                bail!("openloop_serving row missing '{f}': {r}");
+            }
+        }
+        let num_fields = [
+            "rate_rps", "sent", "done", "shed", "shed_rate", "tok_per_s", "e2e_p50_ms",
+            "e2e_p99_ms",
+        ];
+        for f in num_fields {
+            if r.get(f).as_f64().is_none() {
+                bail!("openloop_serving row missing '{f}': {r}");
+            }
+        }
+        let (sent, done, shed) = (
+            r.get("sent").as_i64().unwrap_or(0),
+            r.get("done").as_i64().unwrap_or(0),
+            r.get("shed").as_i64().unwrap_or(0),
+        );
+        if done + shed != sent {
+            bail!("openloop_serving row inconsistent (done {done} + shed {shed} != sent {sent})");
+        }
+    }
+    if strict && doc.get("projected").as_bool() == Some(true) {
+        bail!("strict validation refused: numbers are cost-model projections, not measurements \
+               (regenerate with the serving bench)");
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,6 +276,70 @@ mod tests {
         }
         validate(&projected, false).unwrap();
         assert!(validate(&projected, true).is_err());
+    }
+
+    fn serving_row(model: &str, sent: f64, done: f64, shed: f64) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(model.into())),
+            ("backend", Json::Str("native".into())),
+            ("rate_rps", Json::Num(6.0)),
+            ("sent", Json::Num(sent)),
+            ("done", Json::Num(done)),
+            ("shed", Json::Num(shed)),
+            ("shed_rate", Json::Num(if sent > 0.0 { shed / sent } else { 0.0 })),
+            ("tok_per_s", Json::Num(120.0)),
+            ("e2e_p50_ms", Json::Num(8.0)),
+            ("e2e_p99_ms", Json::Num(30.0)),
+        ])
+    }
+
+    #[test]
+    fn validate_serving_checks_schema_and_accounting() {
+        let good = Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            (
+                "sections",
+                Json::obj(vec![(
+                    "openloop_serving",
+                    Json::obj(vec![(
+                        "rows",
+                        Json::Arr(vec![serving_row("exact", 12.0, 10.0, 2.0)]),
+                    )]),
+                )]),
+            ),
+        ]);
+        validate_serving(&good, false).unwrap();
+        validate_serving(&good, true).unwrap();
+
+        // shed accounting must balance
+        let bad = Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            (
+                "sections",
+                Json::obj(vec![(
+                    "openloop_serving",
+                    Json::obj(vec![(
+                        "rows",
+                        Json::Arr(vec![serving_row("exact", 12.0, 10.0, 1.0)]),
+                    )]),
+                )]),
+            ),
+        ]);
+        assert!(validate_serving(&bad, false).is_err());
+
+        // empty / missing section is schema-invalid
+        let empty =
+            Json::obj(vec![("schema_version", Json::Num(SCHEMA_VERSION as f64))]);
+        assert!(validate_serving(&empty, false).is_err());
+        assert!(validate_serving(&Json::obj(vec![]), false).is_err());
+
+        // projected snapshots pass the schema but refuse strict validation
+        let mut projected = good.clone();
+        if let Json::Obj(o) = &mut projected {
+            o.insert("projected".into(), Json::Bool(true));
+        }
+        validate_serving(&projected, false).unwrap();
+        assert!(validate_serving(&projected, true).is_err());
     }
 
     #[test]

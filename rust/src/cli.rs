@@ -9,7 +9,9 @@ use anyhow::{bail, Result};
 #[derive(Debug, Clone)]
 pub struct Args {
     pub subcommand: String,
-    flags: BTreeMap<String, String>,
+    /// Flag values in occurrence order — flags are repeatable
+    /// (`--model a --model b`); scalar accessors read the last value.
+    flags: BTreeMap<String, Vec<String>>,
     switches: Vec<String>,
 }
 
@@ -19,16 +21,16 @@ impl Args {
             bail!("missing subcommand");
         }
         let subcommand = argv[0].clone();
-        let mut flags = BTreeMap::new();
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut switches = vec![];
         let mut i = 1;
         while i < argv.len() {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
-                    flags.insert(k.to_string(), v.to_string());
+                    flags.entry(k.to_string()).or_default().push(v.to_string());
                 } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    flags.entry(name.to_string()).or_default().push(argv[i + 1].clone());
                     i += 1;
                 } else {
                     switches.push(name.to_string());
@@ -41,26 +43,36 @@ impl Args {
         Ok(Args { subcommand, flags, switches })
     }
 
+    fn last(&self, name: &str) -> Option<&String> {
+        self.flags.get(name).and_then(|v| v.last())
+    }
+
     pub fn str(&self, name: &str, default: &str) -> String {
-        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+        self.last(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Every value a repeatable flag was given, in order (empty when the
+    /// flag is absent).
+    pub fn strs(&self, name: &str) -> Vec<String> {
+        self.flags.get(name).cloned().unwrap_or_default()
     }
 
     pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
-        match self.flags.get(name) {
+        match self.last(name) {
             Some(v) => Ok(v.parse()?),
             None => Ok(default),
         }
     }
 
     pub fn u64(&self, name: &str, default: u64) -> Result<u64> {
-        match self.flags.get(name) {
+        match self.last(name) {
             Some(v) => Ok(v.parse()?),
             None => Ok(default),
         }
     }
 
     pub fn f64(&self, name: &str, default: f64) -> Result<f64> {
-        match self.flags.get(name) {
+        match self.last(name) {
             Some(v) => Ok(v.parse()?),
             None => Ok(default),
         }
@@ -68,7 +80,7 @@ impl Args {
 
     /// Comma-separated f64 list flag.
     pub fn f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
-        match self.flags.get(name) {
+        match self.last(name) {
             Some(v) => v.split(',').map(|s| Ok(s.trim().parse()?)).collect(),
             None => Ok(default.to_vec()),
         }
@@ -116,6 +128,17 @@ mod tests {
         assert_eq!(a.f64("k-ratio", 1.0).unwrap(), 1.0);
         assert_eq!(a.str("addr", "127.0.0.1:8080"), "127.0.0.1:8080");
         assert_eq!(a.u64("seed", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn repeated_flags_collect_in_order() {
+        let a = Args::parse(&argv("serve --model name=a,k=1.0 --model name=b,k=0.25")).unwrap();
+        assert_eq!(a.strs("model"), vec!["name=a,k=1.0".to_string(), "name=b,k=0.25".to_string()]);
+        // scalar accessors read the last occurrence
+        assert_eq!(a.str("model", "x"), "name=b,k=0.25");
+        assert!(a.strs("fleet").is_empty());
+        let b = Args::parse(&argv("serve --seed 1 --seed 9")).unwrap();
+        assert_eq!(b.u64("seed", 0).unwrap(), 9);
     }
 
     #[test]

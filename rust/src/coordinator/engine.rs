@@ -418,6 +418,10 @@ impl Engine {
 pub enum EngineCmd {
     Submit(GenRequest),
     Stats(mpsc::Sender<super::metrics::Snapshot>),
+    /// Graceful shutdown: the engine drains queued + in-flight lanes to
+    /// completion and flushes every result before its thread exits (the
+    /// registry's `DELETE /models/{name}` joins on this). Commands sent
+    /// after `Shutdown` are dropped.
     Shutdown,
 }
 
@@ -468,7 +472,19 @@ impl EngineHandle {
                         EngineCmd::Stats(tx) => {
                             let _ = tx.send(engine.metrics.snapshot());
                         }
-                        EngineCmd::Shutdown => return,
+                        EngineCmd::Shutdown => {
+                            // drain: finish queued + in-flight work, flush
+                            // results, then exit
+                            if let Err(e) = engine.run_until_idle() {
+                                eprintln!("engine drain failed: {e:#}");
+                            }
+                            for id in done_ids.drain(..) {
+                                if let Some(res) = engine.take_result(id) {
+                                    let _ = res_tx.send(res);
+                                }
+                            }
+                            return;
+                        }
                     }
                 }
                 if let Err(e) = engine.step() {

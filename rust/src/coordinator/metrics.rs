@@ -34,7 +34,7 @@ pub struct Metrics {
 }
 
 /// A point-in-time snapshot for reporting.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Snapshot {
     pub requests_done: u64,
     pub tokens_generated: u64,
@@ -143,6 +143,41 @@ impl Metrics {
 }
 
 impl Snapshot {
+    /// Fold another engine's snapshot into a fleet aggregate: counters and
+    /// time pools add, throughputs add (the engines run concurrently),
+    /// mean latencies combine weighted by their sample counts, and
+    /// percentiles take the worst (exact percentiles cannot be merged
+    /// from summaries — read the per-model sections for those).
+    pub fn merge(&mut self, o: &Snapshot) {
+        let (n0, n1) = (self.requests_done as f64, o.requests_done as f64);
+        if n0 + n1 > 0.0 {
+            self.mean_ttft_ms = (self.mean_ttft_ms * n0 + o.mean_ttft_ms * n1) / (n0 + n1);
+            self.mean_latency_ms = (self.mean_latency_ms * n0 + o.mean_latency_ms * n1) / (n0 + n1);
+        }
+        let (d0, d1) = (self.decode_calls as f64, o.decode_calls as f64);
+        if d0 + d1 > 0.0 {
+            self.score_us_per_decode =
+                (self.score_us_per_decode * d0 + o.score_us_per_decode * d1) / (d0 + d1);
+        }
+        self.p50_ttft_ms = self.p50_ttft_ms.max(o.p50_ttft_ms);
+        self.p99_ttft_ms = self.p99_ttft_ms.max(o.p99_ttft_ms);
+        self.requests_done += o.requests_done;
+        self.tokens_generated += o.tokens_generated;
+        self.prompt_tokens += o.prompt_tokens;
+        self.decode_calls += o.decode_calls;
+        self.prefill_calls += o.prefill_calls;
+        self.decode_time_s += o.decode_time_s;
+        self.prefill_time_s += o.prefill_time_s;
+        self.h2o_evictions += o.h2o_evictions;
+        self.kernels.merge(&o.kernels);
+        self.wall_tok_per_s += o.wall_tok_per_s;
+        self.decode_tok_per_s = if self.decode_time_s > 0.0 {
+            self.tokens_generated as f64 / self.decode_time_s
+        } else {
+            0.0
+        };
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests={} gen_tokens={} prompt_tokens={} decode_calls={} prefill_calls={}\n\
@@ -193,5 +228,51 @@ mod tests {
         assert!((s.decode_tok_per_s - 400.0).abs() < 1.0);
         assert!(s.mean_ttft_ms > 14.0 && s.mean_ttft_ms < 16.0);
         assert!(s.report().contains("packed=8"));
+    }
+
+    #[test]
+    fn snapshot_merge_aggregates_fleet() {
+        let mut a = Snapshot {
+            requests_done: 2,
+            tokens_generated: 100,
+            decode_calls: 10,
+            decode_time_s: 1.0,
+            mean_ttft_ms: 10.0,
+            p99_ttft_ms: 20.0,
+            h2o_evictions: 3,
+            wall_tok_per_s: 50.0,
+            score_us_per_decode: 4.0,
+            kernels: KernelCounters { dense: 5, sparse: 0, packed: 0, score_ns: 100 },
+            ..Default::default()
+        };
+        let b = Snapshot {
+            requests_done: 6,
+            tokens_generated: 300,
+            decode_calls: 30,
+            decode_time_s: 1.0,
+            mean_ttft_ms: 30.0,
+            p99_ttft_ms: 15.0,
+            h2o_evictions: 1,
+            wall_tok_per_s: 150.0,
+            score_us_per_decode: 8.0,
+            kernels: KernelCounters { dense: 0, sparse: 2, packed: 7, score_ns: 50 },
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.requests_done, 8);
+        assert_eq!(a.tokens_generated, 400);
+        assert_eq!(a.h2o_evictions, 4);
+        assert_eq!(a.kernels, KernelCounters { dense: 5, sparse: 2, packed: 7, score_ns: 150 });
+        assert!((a.mean_ttft_ms - 25.0).abs() < 1e-9, "weighted by requests: (10*2+30*6)/8");
+        assert!((a.p99_ttft_ms - 20.0).abs() < 1e-9, "worst-of");
+        assert!((a.wall_tok_per_s - 200.0).abs() < 1e-9, "concurrent engines add");
+        assert!((a.decode_tok_per_s - 200.0).abs() < 1e-9, "400 tokens over 2s of decode");
+        assert!((a.score_us_per_decode - 7.0).abs() < 1e-9, "weighted by decode calls");
+
+        // merging into an empty aggregate is identity on counters
+        let mut empty = Snapshot::default();
+        empty.merge(&b);
+        assert_eq!(empty.requests_done, 6);
+        assert!((empty.mean_ttft_ms - 30.0).abs() < 1e-9);
     }
 }

@@ -30,7 +30,9 @@
 //!   loss (§6.2), magnitude/PCA overlap (§7, Fig. 5).
 //! * [`coordinator`] — engine (backend-generic), scheduler, batcher,
 //!   KV cache, H2O.
-//! * [`server`] — minimal HTTP/1.1 front-end.
+//! * [`registry`] — multi-model fleet: named deployments (engine thread +
+//!   result pump + bounded admission) behind one mutable registry.
+//! * [`server`] — minimal HTTP/1.1 front-end, routing over the registry.
 //! * [`eval`] — perplexity + SynthBench harness (the paper's tables).
 //! * [`bench`] — criterion-lite measurement harness.
 
@@ -44,6 +46,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod eval;
 pub mod model;
+pub mod registry;
 pub mod runtime;
 pub mod server;
 pub mod tensor;

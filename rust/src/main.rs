@@ -1,7 +1,9 @@
 //! `aqua` — CLI for the AQUA serving stack.
 //!
 //! Subcommands (see README):
-//!   serve       start the HTTP server
+//!   serve       start the HTTP server (multi-model: repeated --model
+//!               name=...,k=... kv-specs or --fleet fleet.json; admin
+//!               endpoints mutate the fleet at runtime)
 //!   generate    one-off generation from a prompt
 //!   eval        run one SynthBench task / perplexity at given knobs
 //!   table1..3   regenerate the paper's Tables 1/4, 2/5, 3/6
@@ -24,18 +26,18 @@ use anyhow::{bail, Context, Result};
 
 use aqua_serve::aqua::policy::AquaConfig;
 use aqua_serve::bench::Bencher;
-use aqua_serve::coordinator::engine::EngineHandle;
 use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
 use aqua_serve::eval::experiments as exp;
 use aqua_serve::eval::ppl::{perplexity, PplConfig};
 use aqua_serve::eval::tasks::{run_task, TaskSet};
-use aqua_serve::model::config::ModelConfig;
+use aqua_serve::registry::{DeploymentSpec, ModelRegistry};
 use aqua_serve::runtime::{Artifacts, BackendSpec, ExecBackend};
 use aqua_serve::tokenizer::ByteTokenizer;
 use cli::Args;
 
 const USAGE: &str = "usage: aqua <serve|generate|eval|table1|table2|table3|table7|fig2|fig3|fig5|ablation|breakeven|benchcheck|selftest> [flags]
-common flags: --backend auto|native|sharded|pjrt --threads N --seed N --artifacts DIR --model NAME --k-ratio R --s-ratio R --h2o-ratio R --batch N --items N --fast";
+common flags: --backend auto|native|sharded|pjrt --threads N --seed N --artifacts DIR --model NAME --k-ratio R --s-ratio R --h2o-ratio R --batch N --items N --fast
+serve fleet: --fleet fleet.json | repeated --model name=N,backend=B,k=R,threads=T,batch=B,queue=Q [--default-model N] (plain --model NAME serves one deployment named 'default')";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -77,28 +79,47 @@ fn sweep_opts(args: &Args) -> Result<exp::SweepOptions> {
 fn backend_spec(args: &Args, arts_dir: &str, model: &str) -> Result<BackendSpec> {
     let choice = args.str("backend", "auto");
     let seed = args.u64("seed", 0)?;
-    match choice.as_str() {
-        "native" => BackendSpec::native(ModelConfig::tiny(model), seed),
-        "sharded" => {
-            let threads = args.usize("threads", 4)?;
-            BackendSpec::sharded(ModelConfig::tiny(model), seed, threads)
-        }
-        "pjrt" => pjrt_spec(arts_dir, model),
-        "auto" => aqua_serve::runtime::default_spec_in(arts_dir, model, seed),
-        other => bail!("unknown backend '{other}' (expected auto|native|sharded|pjrt)"),
+    let threads = args.usize("threads", 4)?;
+    BackendSpec::from_kind(&choice, model, seed, threads, arts_dir)
+}
+
+/// Build the serve fleet: `--fleet cfg.json`, repeated `--model
+/// name=...,k=...` deployment kv-specs, or — when neither is given — one
+/// deployment named "default" from the classic single-engine flags
+/// (byte-compatible with the pre-registry `aqua serve`).
+fn fleet_registry(args: &Args, arts_dir: &str) -> Result<ModelRegistry> {
+    let fleet = args.str("fleet", "");
+    if !fleet.is_empty() {
+        let text = std::fs::read_to_string(&fleet)
+            .with_context(|| format!("reading fleet config {fleet}"))?;
+        let doc = aqua_serve::util::json::Json::parse(&text)
+            .with_context(|| format!("parsing {fleet}"))?;
+        return ModelRegistry::from_fleet_json(&doc, arts_dir);
     }
-}
-
-#[cfg(feature = "pjrt")]
-fn pjrt_spec(arts_dir: &str, model: &str) -> Result<BackendSpec> {
-    let arts = Artifacts::load(arts_dir)
-        .context("--backend pjrt needs artifacts (run `make artifacts`)")?;
-    Ok(BackendSpec::pjrt(arts.model(model)?.clone()))
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn pjrt_spec(_arts_dir: &str, _model: &str) -> Result<BackendSpec> {
-    bail!("--backend pjrt requires building with `--features pjrt`")
+    let registry = ModelRegistry::new(arts_dir);
+    let kv_specs: Vec<String> =
+        args.strs("model").into_iter().filter(|m| m.contains('=')).collect();
+    if kv_specs.is_empty() {
+        registry.deploy(DeploymentSpec {
+            name: "default".to_string(),
+            backend: args.str("backend", "auto"),
+            model: args.str("model", "llama-analog"),
+            seed: args.u64("seed", 0)?,
+            threads: args.usize("threads", 4)?,
+            batch: args.usize("batch", 4)?,
+            max_inflight: args.usize("queue", aqua_serve::registry::DEFAULT_MAX_INFLIGHT)?,
+            aqua: aqua_from(args)?,
+        })?;
+    } else {
+        for s in &kv_specs {
+            registry.deploy(DeploymentSpec::parse_kv(s)?)?;
+        }
+        let default = args.str("default-model", "");
+        if !default.is_empty() {
+            registry.set_default(&default)?;
+        }
+    }
+    Ok(registry)
 }
 
 /// The npz-dump figure/ablation regenerators only exist on the PJRT path.
@@ -128,15 +149,14 @@ fn run(argv: &[String]) -> Result<()> {
     match args.subcommand.as_str() {
         "serve" => {
             let addr = args.str("addr", "127.0.0.1:8080");
-            let aqua = aqua_from(&args)?;
-            let batch = args.usize("batch", 4)?;
-            let spec = backend_spec(&args, &arts_dir, &model)?;
-            aqua_serve::log_info!("serving on the {} backend", spec.name());
-            let recipe = spec.recipe();
-            let handle = EngineHandle::spawn(move || {
-                Engine::new(recipe.build()?, EngineConfig { batch, aqua, ..Default::default() })
-            });
-            aqua_serve::server::serve(&addr, handle)
+            let registry = std::sync::Arc::new(fleet_registry(&args, &arts_dir)?);
+            aqua_serve::log_info!(
+                "serving {} model(s): {} (default: {})",
+                registry.len(),
+                registry.names().join(", "),
+                registry.default_name().unwrap_or_else(|| "-".to_string())
+            );
+            aqua_serve::server::serve(&addr, registry)
         }
         "generate" => {
             let prompt = args.str("prompt", "the capital of ");
@@ -242,6 +262,18 @@ fn run(argv: &[String]) -> Result<()> {
                 aqua_serve::bench::report::SCHEMA_VERSION,
                 args.switch("strict")
             );
+            // BENCH_serving.json (openloop_load example) is validated when
+            // present — it only exists after a serving bench run.
+            let sdefault = aqua_serve::bench::report::serving_path().to_string();
+            let spath = args.str("serving-path", &sdefault);
+            if std::path::Path::new(&spath).exists() {
+                let text = std::fs::read_to_string(&spath)?;
+                let doc = aqua_serve::util::json::Json::parse(&text)
+                    .with_context(|| format!("parsing {spath}"))?;
+                aqua_serve::bench::report::validate_serving(&doc, args.switch("strict"))
+                    .with_context(|| format!("validating {spath}"))?;
+                println!("{spath} ok (serving schema)");
+            }
             Ok(())
         }
         "breakeven" => {

@@ -1,0 +1,401 @@
+//! One live deployment: an engine thread, a result pump with TTL sweeping,
+//! and a bounded admission gate.
+//!
+//! The engine is `!Send`-safe by construction (the backend is built on the
+//! engine's own thread from a `Send` recipe, exactly like the pre-registry
+//! server did), so a deployment owns only channels, counters, and join
+//! handles — all of it shareable behind an `Arc` across HTTP workers.
+//!
+//! Two serving bugs of the single-engine server are fixed here:
+//!
+//! * **Result leak** — completed results whose client disconnected (or hit
+//!   its deadline) used to sit in the shared map forever. The pump now
+//!   timestamps every entry and sweeps orphans older than the TTL.
+//! * **Unbounded admission** — the engine channel accepted arbitrarily
+//!   many requests under open-loop overload. Submits now reserve one of
+//!   `max_inflight` slots or shed (HTTP 429), with queue-depth/shed
+//!   counters surfaced through `/metrics`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::spec::DeploymentSpec;
+use crate::coordinator::engine::{Engine, EngineCmd, EngineHandle};
+use crate::coordinator::metrics::Snapshot;
+use crate::coordinator::{GenRequest, GenResult};
+
+/// Default orphan TTL: results not picked up within this window are swept
+/// (the HTTP worker's deadline is shorter, so a live client never loses a
+/// result to the sweep).
+pub const RESULT_TTL: Duration = Duration::from_secs(180);
+
+/// How often the pump sweeps when no results are arriving.
+const SWEEP_TICK: Duration = Duration::from_millis(250);
+
+/// Completed results waiting for pickup, timestamped for the TTL sweep.
+#[derive(Default)]
+pub struct ResultStore {
+    inner: Mutex<HashMap<u64, (GenResult, Instant)>>,
+}
+
+impl ResultStore {
+    pub fn insert(&self, res: GenResult) {
+        self.inner.lock().unwrap().insert(res.id, (res, Instant::now()));
+    }
+
+    /// Remove and return a delivered result (the normal pickup path — the
+    /// entry never outlives its client).
+    pub fn take(&self, id: u64) -> Option<GenResult> {
+        self.inner.lock().unwrap().remove(&id).map(|(r, _)| r)
+    }
+
+    /// Evict entries older than `ttl`; returns how many were dropped.
+    pub fn sweep(&self, ttl: Duration) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let before = g.len();
+        let now = Instant::now();
+        g.retain(|_, (_, t)| now.duration_since(*t) <= ttl);
+        before - g.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Admission outcome for one submit attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Accepted,
+    /// The bounded queue is full — request shed (HTTP 429).
+    Shed,
+}
+
+/// Point-in-time admission counters for `/metrics`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdmissionStats {
+    /// Requests admitted but not yet completed by the engine.
+    pub queue_depth: u64,
+    /// Total admitted since launch.
+    pub submitted: u64,
+    /// Total shed at admission since launch.
+    pub shed: u64,
+    /// Orphaned results evicted by the TTL sweep since launch.
+    pub swept_results: u64,
+}
+
+/// A running engine serving one [`DeploymentSpec`].
+pub struct Deployment {
+    pub spec: DeploymentSpec,
+    /// Resolved backend kind ("native", "sharded", "pjrt") — `spec.backend`
+    /// may have been "auto".
+    backend_kind: &'static str,
+    /// KV capacity of the deployed model (admission-side prompt clamping).
+    max_seq: usize,
+    cmd_tx: mpsc::Sender<EngineCmd>,
+    results: Arc<ResultStore>,
+    next_id: AtomicU64,
+    in_flight: Arc<AtomicU64>,
+    /// Submit calls currently between their draining-check and their
+    /// channel send. `shutdown` waits for this to reach zero after
+    /// setting `draining`, so an accepted request's `Submit` is always
+    /// enqueued before the `Shutdown` command (mpsc delivers
+    /// happens-before-ordered sends in order — nothing admitted is ever
+    /// silently dropped by the drain).
+    submitting: AtomicU64,
+    submitted: AtomicU64,
+    shed: AtomicU64,
+    swept: Arc<AtomicU64>,
+    ttl_ms: Arc<AtomicU64>,
+    draining: AtomicBool,
+    engine_join: Mutex<Option<std::thread::JoinHandle<()>>>,
+    pump_join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Deployment {
+    /// Spin up the engine thread + result pump for `spec`. Backend weights
+    /// and artifacts resolve here (fail fast); the backend itself is
+    /// constructed on the engine thread from the `Send` recipe.
+    pub fn launch(spec: DeploymentSpec, arts_dir: &str) -> Result<Deployment> {
+        spec.validate()?;
+        let bspec = spec.backend_spec(arts_dir)?;
+        let backend_kind = bspec.name();
+        let max_seq = bspec.model_config().max_seq;
+        let recipe = bspec.recipe();
+        let ecfg = spec.engine_config();
+        let EngineHandle { cmd_tx, result_rx, join } =
+            EngineHandle::spawn(move || Engine::new(recipe.build()?, ecfg));
+
+        let results = Arc::new(ResultStore::default());
+        let in_flight = Arc::new(AtomicU64::new(0));
+        let swept = Arc::new(AtomicU64::new(0));
+        let ttl_ms = Arc::new(AtomicU64::new(RESULT_TTL.as_millis() as u64));
+
+        // Result pump: engine thread -> timestamped store. Sweeps on every
+        // delivery and on an idle tick, so orphans die even when traffic
+        // stops. Exits when the engine thread drops its sender.
+        let pump = {
+            let results = results.clone();
+            let in_flight = in_flight.clone();
+            let swept = swept.clone();
+            let ttl_ms = ttl_ms.clone();
+            std::thread::spawn(move || loop {
+                let ttl = Duration::from_millis(ttl_ms.load(Ordering::Relaxed));
+                match result_rx.recv_timeout(SWEEP_TICK) {
+                    Ok(res) => {
+                        in_flight.fetch_sub(1, Ordering::SeqCst);
+                        results.insert(res);
+                        swept.fetch_add(results.sweep(ttl) as u64, Ordering::Relaxed);
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        swept.fetch_add(results.sweep(ttl) as u64, Ordering::Relaxed);
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                }
+            })
+        };
+
+        Ok(Deployment {
+            spec,
+            backend_kind,
+            max_seq,
+            cmd_tx,
+            results,
+            next_id: AtomicU64::new(1),
+            in_flight,
+            submitting: AtomicU64::new(0),
+            submitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            swept,
+            ttl_ms,
+            draining: AtomicBool::new(false),
+            engine_join: Mutex::new(Some(join)),
+            pump_join: Mutex::new(Some(pump)),
+        })
+    }
+
+    pub fn backend_kind(&self) -> &'static str {
+        self.backend_kind
+    }
+
+    /// Longest prompt a request generating `gen_len` tokens can carry
+    /// without being rejected at engine admission.
+    pub fn max_prompt(&self, gen_len: usize) -> usize {
+        self.max_seq.saturating_sub(gen_len).max(1)
+    }
+
+    /// Allocate a request id unique within this deployment.
+    pub fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Admission-controlled submit. `req.id` should come from
+    /// [`Deployment::fresh_id`]. Returns `Shed` when `max_inflight`
+    /// requests are already in flight; errors when the deployment is
+    /// draining or its engine thread is gone.
+    pub fn submit(&self, req: GenRequest) -> Result<Admission> {
+        // Enter the submit window *before* the draining check: shutdown
+        // sets `draining` and then waits for this gauge to drop to zero,
+        // so a submit that saw draining=false completes its send before
+        // the Shutdown command is enqueued.
+        self.submitting.fetch_add(1, Ordering::SeqCst);
+        let out = self.submit_gated(req);
+        self.submitting.fetch_sub(1, Ordering::SeqCst);
+        out
+    }
+
+    fn submit_gated(&self, req: GenRequest) -> Result<Admission> {
+        if self.draining.load(Ordering::SeqCst) {
+            bail!("model '{}' is draining", self.spec.name);
+        }
+        // Reserve an in-flight slot or shed: CAS loop so concurrent HTTP
+        // workers cannot overshoot the bound.
+        let limit = self.spec.max_inflight as u64;
+        let mut cur = self.in_flight.load(Ordering::SeqCst);
+        loop {
+            if cur >= limit {
+                self.shed.fetch_add(1, Ordering::SeqCst);
+                return Ok(Admission::Shed);
+            }
+            match self.in_flight.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        if self.cmd_tx.send(EngineCmd::Submit(req)).is_err() {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            bail!("engine thread for model '{}' is gone", self.spec.name);
+        }
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+        Ok(Admission::Accepted)
+    }
+
+    /// Non-blocking result pickup.
+    pub fn take_result(&self, id: u64) -> Option<GenResult> {
+        self.results.take(id)
+    }
+
+    /// Blocking result pickup with a deadline (the HTTP worker path).
+    pub fn wait_result(&self, id: u64, deadline: Duration) -> Option<GenResult> {
+        let end = Instant::now() + deadline;
+        loop {
+            if let Some(r) = self.results.take(id) {
+                return Some(r);
+            }
+            if Instant::now() >= end {
+                return None;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Engine metrics snapshot (cross-thread round trip).
+    pub fn stats(&self) -> Result<Snapshot> {
+        let (tx, rx) = mpsc::channel();
+        self.cmd_tx
+            .send(EngineCmd::Stats(tx))
+            .map_err(|_| anyhow::anyhow!("engine thread for model '{}' is gone", self.spec.name))?;
+        rx.recv_timeout(Duration::from_secs(5))
+            .with_context(|| format!("stats timeout for model '{}'", self.spec.name))
+    }
+
+    pub fn admission_stats(&self) -> AdmissionStats {
+        AdmissionStats {
+            queue_depth: self.in_flight.load(Ordering::SeqCst),
+            submitted: self.submitted.load(Ordering::SeqCst),
+            shed: self.shed.load(Ordering::SeqCst),
+            swept_results: self.swept.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Override the orphan-result TTL (tests; ops tuning).
+    pub fn set_result_ttl(&self, ttl: Duration) {
+        self.ttl_ms.store(ttl.as_millis() as u64, Ordering::Relaxed);
+    }
+
+    /// Graceful shutdown: stop admitting, let the engine drain its
+    /// in-flight lanes (`EngineCmd::Shutdown` finishes queued + active
+    /// work and flushes every result before exiting), then join both
+    /// threads. Idempotent; results stay in the store for late pickups.
+    pub fn shutdown(&self) -> Result<()> {
+        self.draining.store(true, Ordering::SeqCst);
+        // Let in-progress submit calls finish their sends (see
+        // `submitting`): the engine then sees every accepted Submit
+        // before the Shutdown command and drains it.
+        while self.submitting.load(Ordering::SeqCst) > 0 {
+            std::thread::yield_now();
+        }
+        let _ = self.cmd_tx.send(EngineCmd::Shutdown);
+        if let Some(j) = self.engine_join.lock().unwrap().take() {
+            j.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))?;
+        }
+        if let Some(j) = self.pump_join.lock().unwrap().take() {
+            j.join().map_err(|_| anyhow::anyhow!("result pump panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::FinishReason;
+
+    fn result(id: u64) -> GenResult {
+        GenResult {
+            id,
+            tokens: vec![1, 2],
+            prompt_logprobs: vec![],
+            gen_logprobs: vec![],
+            finish: FinishReason::Length,
+            ttft_us: 0,
+            total_us: 0,
+        }
+    }
+
+    #[test]
+    fn store_take_removes_entry() {
+        let s = ResultStore::default();
+        s.insert(result(7));
+        assert_eq!(s.len(), 1);
+        assert!(s.take(7).is_some());
+        assert!(s.take(7).is_none(), "delivered results must be evicted");
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn store_sweep_evicts_only_expired() {
+        let s = ResultStore::default();
+        s.insert(result(1));
+        std::thread::sleep(Duration::from_millis(20));
+        s.insert(result(2));
+        // entry 1 is ~20ms old, entry 2 fresh: a 10ms TTL drops only 1
+        let dropped = s.sweep(Duration::from_millis(10));
+        assert_eq!(dropped, 1);
+        assert!(s.take(1).is_none());
+        assert!(s.take(2).is_some());
+        // a generous TTL drops nothing
+        s.insert(result(3));
+        assert_eq!(s.sweep(Duration::from_secs(60)), 0);
+    }
+
+    #[test]
+    fn deployment_runs_and_drains() {
+        let spec =
+            DeploymentSpec::parse_kv("name=t,backend=native,seed=3,batch=2,queue=4").unwrap();
+        let dep = Deployment::launch(spec, "no-such-dir").unwrap();
+        assert_eq!(dep.backend_kind(), "native");
+        assert!(dep.max_prompt(24) >= 1);
+
+        let id = dep.fresh_id();
+        let req = GenRequest::new(id, vec![104, 101, 108, 108, 111], 8);
+        assert_eq!(dep.submit(req).unwrap(), Admission::Accepted);
+        let res = dep.wait_result(id, Duration::from_secs(30)).expect("result");
+        assert_eq!(res.id, id);
+        assert_eq!(res.tokens.len(), 8);
+
+        let adm = dep.admission_stats();
+        assert_eq!(adm.submitted, 1);
+        assert_eq!(adm.shed, 0);
+        assert_eq!(adm.queue_depth, 0);
+
+        dep.shutdown().unwrap();
+        dep.shutdown().unwrap(); // idempotent
+        assert!(dep.submit(GenRequest::new(99, vec![1], 1)).is_err(), "drained rejects submits");
+    }
+
+    #[test]
+    fn orphaned_results_are_ttl_swept() {
+        let spec =
+            DeploymentSpec::parse_kv("name=orphan,backend=native,seed=1,batch=1,queue=2").unwrap();
+        let dep = Deployment::launch(spec, "no-such-dir").unwrap();
+        dep.set_result_ttl(Duration::from_millis(1));
+        let id = dep.fresh_id();
+        dep.submit(GenRequest::new(id, vec![104, 105], 4)).unwrap();
+        // never take the result: the pump's sweep must evict it
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while dep.admission_stats().swept_results == 0 {
+            assert!(Instant::now() < deadline, "orphan was never swept");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(dep.results.is_empty());
+        dep.shutdown().unwrap();
+    }
+}

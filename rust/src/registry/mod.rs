@@ -1,0 +1,228 @@
+//! Multi-model registry: a fleet of named AQUA deployments behind one
+//! server.
+//!
+//! AQUA's knob is only a *serving* lever if one process can host several
+//! operating points at once — an exact `k=1.0` deployment next to an
+//! aggressive `k=0.25` one, a sharded backend next to a single-threaded
+//! native one — and route traffic between them. The registry owns N named
+//! [`Deployment`]s (each an engine on its own thread, see
+//! [`deployment`]), resolves request routing (`POST /generate` carries a
+//! `"model"` field; the fleet default is used when omitted), and makes
+//! the fleet mutable at runtime (`POST /models`, `DELETE /models/{name}`
+//! — removal drains in-flight work before joining the engine thread).
+//!
+//! Fleet-config JSON (`aqua serve --fleet fleet.json`; the `models`
+//! entries are [`DeploymentSpec::from_json`] documents):
+//!
+//! ```json
+//! {
+//!   "default": "exact",
+//!   "models": [
+//!     {"name": "exact",  "backend": "native", "k_ratio": 1.0},
+//!     {"name": "pruned", "backend": "native", "k_ratio": 0.25,
+//!      "batch": 8, "max_inflight": 16, "seed": 0}
+//!   ]
+//! }
+//! ```
+
+pub mod deployment;
+pub mod spec;
+
+pub use deployment::{Admission, AdmissionStats, Deployment, ResultStore, RESULT_TTL};
+pub use spec::{DeploymentSpec, DEFAULT_MAX_INFLIGHT};
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Default)]
+struct Inner {
+    deployments: BTreeMap<String, Arc<Deployment>>,
+    default_name: Option<String>,
+}
+
+/// The fleet: named deployments plus the default-model pointer.
+pub struct ModelRegistry {
+    arts_dir: String,
+    inner: RwLock<Inner>,
+}
+
+impl ModelRegistry {
+    pub fn new(arts_dir: &str) -> ModelRegistry {
+        ModelRegistry { arts_dir: arts_dir.to_string(), inner: RwLock::new(Inner::default()) }
+    }
+
+    /// Launch and register a deployment. The first one becomes the fleet
+    /// default. Errors (without disturbing the fleet) if the name is taken
+    /// or the backend fails to resolve.
+    pub fn deploy(&self, spec: DeploymentSpec) -> Result<()> {
+        if self.inner.read().unwrap().deployments.contains_key(&spec.name) {
+            bail!("model '{}' already exists", spec.name);
+        }
+        let name = spec.name.clone();
+        let dep = Arc::new(Deployment::launch(spec, &self.arts_dir)?);
+        let mut g = self.inner.write().unwrap();
+        if g.deployments.contains_key(&name) {
+            // lost a race with a concurrent deploy of the same name
+            drop(g);
+            let _ = dep.shutdown();
+            bail!("model '{name}' already exists");
+        }
+        if g.default_name.is_none() {
+            g.default_name = Some(name.clone());
+        }
+        g.deployments.insert(name, dep);
+        Ok(())
+    }
+
+    /// Remove a deployment: unlist it first (new requests 404), then drain
+    /// its in-flight work and join the engine thread. Clients already
+    /// polling keep their handle on the deployment and still receive
+    /// results. If it was the default, the first remaining model (by
+    /// name) takes over.
+    pub fn remove(&self, name: &str) -> Result<()> {
+        let dep = {
+            let mut g = self.inner.write().unwrap();
+            let dep = g
+                .deployments
+                .remove(name)
+                .with_context(|| format!("no model named '{name}'"))?;
+            if g.default_name.as_deref() == Some(name) {
+                g.default_name = g.deployments.keys().next().cloned();
+            }
+            dep
+        };
+        dep.shutdown()
+    }
+
+    /// Resolve a request's deployment: by name, or the fleet default when
+    /// `None`.
+    pub fn get(&self, name: Option<&str>) -> Option<Arc<Deployment>> {
+        let g = self.inner.read().unwrap();
+        let key = match name {
+            Some(n) => n,
+            None => g.default_name.as_deref()?,
+        };
+        g.deployments.get(key).cloned()
+    }
+
+    pub fn default_name(&self) -> Option<String> {
+        self.inner.read().unwrap().default_name.clone()
+    }
+
+    /// Point the fleet default at an existing deployment.
+    pub fn set_default(&self, name: &str) -> Result<()> {
+        let mut g = self.inner.write().unwrap();
+        if !g.deployments.contains_key(name) {
+            bail!("no model named '{name}'");
+        }
+        g.default_name = Some(name.to_string());
+        Ok(())
+    }
+
+    /// Deployment names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.inner.read().unwrap().deployments.keys().cloned().collect()
+    }
+
+    /// A point-in-time snapshot of every deployment (sorted by name).
+    pub fn deployments(&self) -> Vec<Arc<Deployment>> {
+        self.inner.read().unwrap().deployments.values().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().deployments.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain and join every deployment (process shutdown).
+    pub fn shutdown_all(&self) -> Result<()> {
+        let deps: Vec<Arc<Deployment>> = {
+            let mut g = self.inner.write().unwrap();
+            g.default_name = None;
+            std::mem::take(&mut g.deployments).into_values().collect()
+        };
+        for d in deps {
+            d.shutdown()?;
+        }
+        Ok(())
+    }
+
+    /// Build a fleet from a fleet-config JSON document (format in the
+    /// module docs).
+    pub fn from_fleet_json(doc: &Json, arts_dir: &str) -> Result<ModelRegistry> {
+        let reg = ModelRegistry::new(arts_dir);
+        let models = doc.get("models").as_arr().context("fleet config needs a 'models' array")?;
+        if models.is_empty() {
+            bail!("fleet config: 'models' is empty");
+        }
+        for m in models {
+            reg.deploy(DeploymentSpec::from_json(m)?)?;
+        }
+        if let Some(d) = doc.get("default").as_str() {
+            reg.set_default(d).context("fleet config 'default'")?;
+        }
+        Ok(reg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native(name: &str, k: f64) -> DeploymentSpec {
+        DeploymentSpec::parse_kv(&format!("name={name},backend=native,k={k},batch=2,queue=4"))
+            .unwrap()
+    }
+
+    #[test]
+    fn deploy_get_remove_default_fallback() {
+        let reg = ModelRegistry::new("no-such-dir");
+        assert!(reg.is_empty());
+        assert!(reg.get(None).is_none());
+        reg.deploy(native("a", 1.0)).unwrap();
+        reg.deploy(native("b", 0.5)).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.default_name().as_deref(), Some("a"), "first deploy is default");
+        assert_eq!(reg.get(None).unwrap().spec.name, "a");
+        assert_eq!(reg.get(Some("b")).unwrap().spec.name, "b");
+        assert!(reg.get(Some("zzz")).is_none());
+
+        assert!(reg.deploy(native("a", 0.25)).is_err(), "duplicate name rejected");
+
+        reg.remove("a").unwrap();
+        assert_eq!(reg.default_name().as_deref(), Some("b"), "default falls to survivor");
+        assert!(reg.remove("a").is_err(), "double remove errors");
+        reg.shutdown_all().unwrap();
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn fleet_json_builds_and_sets_default() {
+        let doc = Json::parse(
+            r#"{"default": "b",
+                "models": [{"name": "a", "backend": "native", "k_ratio": 1.0, "batch": 2},
+                           {"name": "b", "backend": "native", "k_ratio": 0.5, "batch": 2}]}"#,
+        )
+        .unwrap();
+        let reg = ModelRegistry::from_fleet_json(&doc, "no-such-dir").unwrap();
+        assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(reg.default_name().as_deref(), Some("b"));
+        reg.shutdown_all().unwrap();
+
+        // bad configs
+        assert!(ModelRegistry::from_fleet_json(&Json::parse("{}").unwrap(), "x").is_err());
+        let empty = Json::parse(r#"{"models": []}"#).unwrap();
+        assert!(ModelRegistry::from_fleet_json(&empty, "x").is_err());
+        let bad_default =
+            Json::parse(r#"{"default": "z", "models": [{"name": "a", "backend": "native"}]}"#)
+                .unwrap();
+        assert!(ModelRegistry::from_fleet_json(&bad_default, "x").is_err());
+    }
+}

@@ -1,0 +1,260 @@
+//! Deployment specs: one named model/knob operating point of the fleet.
+//!
+//! A spec is declared either as a CLI kv-spec (`--model
+//! name=fast,backend=native,k=0.25,threads=2`) or as one entry of the
+//! fleet-config JSON (`aqua serve --fleet fleet.json`, `POST /models`),
+//! and resolves into the `(BackendSpec, EngineConfig)` pair a
+//! [`super::Deployment`] spins up. The JSON and kv forms round-trip
+//! through [`DeploymentSpec::to_json`] so `GET /models` reports exactly
+//! what was deployed.
+
+use anyhow::{bail, Context, Result};
+
+use crate::aqua::policy::AquaConfig;
+use crate::coordinator::EngineConfig;
+use crate::runtime::backend::BackendSpec;
+use crate::util::json::Json;
+
+/// Default admission bound: in-flight requests beyond this are shed (429).
+pub const DEFAULT_MAX_INFLIGHT: usize = 32;
+
+/// Everything needed to launch one named deployment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeploymentSpec {
+    /// Registry key and URL path segment (`/models/{name}`).
+    pub name: String,
+    /// Backend kind: `auto | native | sharded | pjrt`.
+    pub backend: String,
+    /// Model config name (native preset / artifact key).
+    pub model: String,
+    /// Weight + sampler seed (native backends; determinism knob).
+    pub seed: u64,
+    /// Worker threads (sharded backend only).
+    pub threads: usize,
+    /// Engine batch lanes.
+    pub batch: usize,
+    /// Admission bound: submits beyond this many in-flight requests shed.
+    pub max_inflight: usize,
+    /// AQUA operating point for every request this deployment serves.
+    pub aqua: AquaConfig,
+}
+
+impl Default for DeploymentSpec {
+    fn default() -> Self {
+        DeploymentSpec {
+            name: "default".to_string(),
+            backend: "auto".to_string(),
+            model: "llama-analog".to_string(),
+            seed: 0,
+            threads: 4,
+            batch: 4,
+            max_inflight: DEFAULT_MAX_INFLIGHT,
+            aqua: AquaConfig::default(),
+        }
+    }
+}
+
+impl DeploymentSpec {
+    /// Parse a CLI kv-spec: comma-separated `key=value` pairs. Keys:
+    /// `name` (required), `backend`, `model`, `seed`, `threads`, `batch`,
+    /// `queue` (max in-flight), `k`/`k_ratio`, `s`/`s_ratio`,
+    /// `h2o`/`h2o_ratio`, `proj` (0/1).
+    pub fn parse_kv(s: &str) -> Result<DeploymentSpec> {
+        let mut spec = DeploymentSpec { name: String::new(), ..Default::default() };
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) =
+                part.split_once('=').with_context(|| format!("expected key=value in '{part}'"))?;
+            match k {
+                "name" => spec.name = v.to_string(),
+                "backend" => spec.backend = v.to_string(),
+                "model" => spec.model = v.to_string(),
+                "seed" => spec.seed = v.parse().with_context(|| format!("bad seed '{v}'"))?,
+                "threads" => {
+                    spec.threads = v.parse().with_context(|| format!("bad threads '{v}'"))?
+                }
+                "batch" => spec.batch = v.parse().with_context(|| format!("bad batch '{v}'"))?,
+                "queue" => {
+                    spec.max_inflight = v.parse().with_context(|| format!("bad queue '{v}'"))?
+                }
+                "k" | "k_ratio" => {
+                    spec.aqua.k_ratio = v.parse().with_context(|| format!("bad k_ratio '{v}'"))?
+                }
+                "s" | "s_ratio" => {
+                    spec.aqua.s_ratio = v.parse().with_context(|| format!("bad s_ratio '{v}'"))?
+                }
+                "h2o" | "h2o_ratio" => {
+                    spec.aqua.h2o_ratio =
+                        v.parse().with_context(|| format!("bad h2o_ratio '{v}'"))?
+                }
+                "proj" => spec.aqua.use_projection = matches!(v, "1" | "true" | "yes"),
+                other => bail!("unknown deployment key '{other}' in '{s}'"),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse one fleet-config JSON entry (field names match `to_json`).
+    pub fn from_json(j: &Json) -> Result<DeploymentSpec> {
+        let mut spec =
+            DeploymentSpec { name: j.req_str("name")?.to_string(), ..Default::default() };
+        if let Some(v) = j.get("backend").as_str() {
+            spec.backend = v.to_string();
+        }
+        if let Some(v) = j.get("model").as_str() {
+            spec.model = v.to_string();
+        }
+        if let Some(v) = j.get("seed").as_i64() {
+            spec.seed = v.max(0) as u64;
+        }
+        if let Some(v) = j.get("threads").as_i64() {
+            spec.threads = v.max(0) as usize;
+        }
+        if let Some(v) = j.get("batch").as_i64() {
+            spec.batch = v.max(0) as usize;
+        }
+        if let Some(v) = j.get("max_inflight").as_i64() {
+            spec.max_inflight = v.max(0) as usize;
+        }
+        if let Some(v) = j.get("k_ratio").as_f64() {
+            spec.aqua.k_ratio = v;
+        }
+        if let Some(v) = j.get("s_ratio").as_f64() {
+            spec.aqua.s_ratio = v;
+        }
+        if let Some(v) = j.get("h2o_ratio").as_f64() {
+            spec.aqua.h2o_ratio = v;
+        }
+        if let Some(v) = j.get("use_projection").as_bool() {
+            spec.aqua.use_projection = v;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// The round-trippable JSON form (`GET /models`, fleet configs).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("backend", Json::Str(self.backend.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("max_inflight", Json::Num(self.max_inflight as f64)),
+            ("k_ratio", Json::Num(self.aqua.k_ratio)),
+            ("s_ratio", Json::Num(self.aqua.s_ratio)),
+            ("h2o_ratio", Json::Num(self.aqua.h2o_ratio)),
+            ("use_projection", Json::Bool(self.aqua.use_projection)),
+        ])
+    }
+
+    /// Invariant check. Called by the parsers (fail fast with parse
+    /// context) and again by `Deployment::launch`, so hand-built spec
+    /// literals (e.g. the CLI's classic single-model path) cannot bypass
+    /// it.
+    pub(crate) fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("deployment spec needs a non-empty 'name'");
+        }
+        if !self.name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')) {
+            bail!("deployment name '{}' must be [A-Za-z0-9._-] (it is a URL segment)", self.name);
+        }
+        if !matches!(self.backend.as_str(), "auto" | "native" | "sharded" | "pjrt") {
+            bail!("unknown backend '{}' (expected auto|native|sharded|pjrt)", self.backend);
+        }
+        if self.batch == 0 {
+            bail!("deployment '{}': batch must be >= 1", self.name);
+        }
+        if self.threads == 0 {
+            bail!("deployment '{}': threads must be >= 1", self.name);
+        }
+        if self.max_inflight == 0 {
+            bail!("deployment '{}': queue/max_inflight must be >= 1", self.name);
+        }
+        for (label, v) in [
+            ("k_ratio", self.aqua.k_ratio),
+            ("s_ratio", self.aqua.s_ratio),
+            ("h2o_ratio", self.aqua.h2o_ratio),
+        ] {
+            if !(0.0..=1.0).contains(&v) {
+                bail!("deployment '{}': {label} {v} outside [0, 1]", self.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve into a backend spec. Native/sharded weights are built here,
+    /// on the caller's thread (they are `Send`); the PJRT path loads its
+    /// artifacts here and fails fast if they are missing.
+    pub fn backend_spec(&self, arts_dir: &str) -> Result<BackendSpec> {
+        BackendSpec::from_kind(&self.backend, &self.model, self.seed, self.threads, arts_dir)
+            .with_context(|| format!("deployment '{}'", self.name))
+    }
+
+    /// The engine configuration this spec pins.
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig { batch: self.batch, aqua: self.aqua, seed: self.seed, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_roundtrip_through_json() {
+        let spec =
+            DeploymentSpec::parse_kv("name=fast,backend=sharded,k=0.25,threads=2,batch=8,queue=5")
+                .unwrap();
+        assert_eq!(spec.name, "fast");
+        assert_eq!(spec.backend, "sharded");
+        assert_eq!(spec.threads, 2);
+        assert_eq!(spec.batch, 8);
+        assert_eq!(spec.max_inflight, 5);
+        assert!((spec.aqua.k_ratio - 0.25).abs() < 1e-12);
+        let back = DeploymentSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn json_defaults_fill_in() {
+        let j = Json::parse(r#"{"name": "a", "k_ratio": 0.5}"#).unwrap();
+        let spec = DeploymentSpec::from_json(&j).unwrap();
+        assert_eq!(spec.name, "a");
+        assert_eq!(spec.backend, "auto");
+        assert_eq!(spec.batch, 4);
+        assert_eq!(spec.max_inflight, DEFAULT_MAX_INFLIGHT);
+        assert!((spec.aqua.k_ratio - 0.5).abs() < 1e-12);
+        assert!((spec.aqua.h2o_ratio - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(DeploymentSpec::parse_kv("backend=native").is_err(), "name required");
+        assert!(DeploymentSpec::parse_kv("name=a,backend=gpu").is_err(), "unknown backend");
+        assert!(DeploymentSpec::parse_kv("name=a,k=1.5").is_err(), "ratio out of range");
+        assert!(DeploymentSpec::parse_kv("name=a,batch=0").is_err(), "zero batch");
+        assert!(DeploymentSpec::parse_kv("name=a,queue=0").is_err(), "zero queue");
+        assert!(DeploymentSpec::parse_kv("name=a/b").is_err(), "name not URL-safe");
+        assert!(DeploymentSpec::parse_kv("name=a,wat=1").is_err(), "unknown key");
+        assert!(DeploymentSpec::parse_kv("name=a,k").is_err(), "bare key");
+        assert!(DeploymentSpec::from_json(&Json::parse(r#"{"backend":"native"}"#).unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn spec_builds_native_backend_and_engine_config() {
+        let spec = DeploymentSpec::parse_kv("name=t,backend=native,seed=9,k=0.5,batch=2").unwrap();
+        let bspec = spec.backend_spec("no-such-dir").unwrap();
+        assert_eq!(bspec.name(), "native");
+        let ecfg = spec.engine_config();
+        assert_eq!(ecfg.batch, 2);
+        assert_eq!(ecfg.seed, 9);
+        assert!((ecfg.aqua.k_ratio - 0.5).abs() < 1e-12);
+    }
+}

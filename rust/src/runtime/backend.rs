@@ -271,6 +271,17 @@ pub enum BackendRecipe {
 }
 
 impl BackendRecipe {
+    /// The backend kind this recipe constructs ("native", "sharded",
+    /// "pjrt") — mirrors `BackendSpec::name`.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            BackendRecipe::Native(_) => "native",
+            BackendRecipe::Sharded(..) => "sharded",
+            #[cfg(feature = "pjrt")]
+            BackendRecipe::Pjrt(_) => "pjrt",
+        }
+    }
+
     pub fn build(&self) -> Result<Box<dyn ExecBackend>> {
         match self {
             BackendRecipe::Native(model) => {
@@ -318,6 +329,38 @@ impl BackendSpec {
     #[cfg(feature = "pjrt")]
     pub fn pjrt(mart: ModelArtifacts) -> BackendSpec {
         BackendSpec::Pjrt { mart, rt: std::cell::RefCell::new(None) }
+    }
+
+    /// Parse a backend kind string (`auto | native | sharded | pjrt`) into
+    /// a spec — the single place the CLI's `--backend` flag and the
+    /// registry's deployment specs agree on backend names. `threads` is
+    /// consumed by the sharded backend, `arts_dir` by pjrt/auto.
+    pub fn from_kind(
+        kind: &str,
+        model: &str,
+        seed: u64,
+        threads: usize,
+        arts_dir: &str,
+    ) -> Result<BackendSpec> {
+        match kind {
+            "native" => BackendSpec::native(ModelConfig::tiny(model), seed),
+            "sharded" => BackendSpec::sharded(ModelConfig::tiny(model), seed, threads),
+            "auto" => default_spec_in(arts_dir, model, seed),
+            "pjrt" => {
+                #[cfg(feature = "pjrt")]
+                {
+                    use anyhow::Context;
+                    let arts = super::Artifacts::load(arts_dir)
+                        .context("backend 'pjrt' needs artifacts (run `make artifacts`)")?;
+                    Ok(BackendSpec::pjrt(arts.model(model)?.clone()))
+                }
+                #[cfg(not(feature = "pjrt"))]
+                {
+                    anyhow::bail!("backend 'pjrt' requires building with `--features pjrt`")
+                }
+            }
+            other => anyhow::bail!("unknown backend '{other}' (expected auto|native|sharded|pjrt)"),
+        }
     }
 
     pub fn name(&self) -> &'static str {
@@ -462,6 +505,22 @@ mod tests {
         let mut from_recipe = spec.recipe().build().unwrap();
         from_recipe.empty_cache(1).unwrap();
         assert_eq!(from_recipe.name(), "sharded");
+    }
+
+    #[test]
+    fn from_kind_parses_and_rejects() {
+        let spec = BackendSpec::from_kind("native", "m", 1, 4, "no-such-dir").unwrap();
+        assert_eq!(spec.name(), "native");
+        assert_eq!(spec.recipe().kind(), "native");
+        let spec = BackendSpec::from_kind("sharded", "m", 1, 2, "no-such-dir").unwrap();
+        assert_eq!(spec.name(), "sharded");
+        assert_eq!(spec.recipe().kind(), "sharded");
+        // auto falls back to native in hermetic environments
+        let spec = BackendSpec::from_kind("auto", "m", 1, 4, "no-such-dir").unwrap();
+        spec.build().unwrap();
+        assert!(BackendSpec::from_kind("gpu", "m", 0, 1, "x").is_err());
+        #[cfg(not(feature = "pjrt"))]
+        assert!(BackendSpec::from_kind("pjrt", "m", 0, 1, "x").is_err());
     }
 
     #[test]

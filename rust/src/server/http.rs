@@ -2,7 +2,7 @@
 //! close), request bodies via Content-Length. Enough for the JSON API and
 //! for `curl`.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 
 use anyhow::{bail, Result};
@@ -48,7 +48,10 @@ fn status_line(code: u16) -> &'static str {
         200 => "200 OK",
         400 => "400 Bad Request",
         404 => "404 Not Found",
+        409 => "409 Conflict",
+        429 => "429 Too Many Requests",
         500 => "500 Internal Server Error",
+        503 => "503 Service Unavailable",
         504 => "504 Gateway Timeout",
         _ => "500 Internal Server Error",
     }
@@ -98,6 +101,32 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> Result<()> {
         resp.body
     )?;
     Ok(())
+}
+
+/// Minimal client counterpart of this module's server subset: open a
+/// connection, send one request, return `(status, body)`. Keeps the
+/// examples and integration tests off hand-rolled copies (and curl).
+pub fn client_request(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> Result<(u16, String)> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(std::time::Duration::from_secs(150)))?;
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: aqua\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf)?;
+    let status: u16 = match buf.split_whitespace().nth(1).and_then(|c| c.parse().ok()) {
+        Some(c) => c,
+        None => bail!("malformed response status line: {buf:?}"),
+    };
+    let body = buf.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    Ok((status, body))
 }
 
 /// Read one request off the stream, dispatch, write the response.
@@ -153,5 +182,22 @@ mod tests {
     fn rejects_garbage() {
         let mut r = BufReader::new(Cursor::new(b"\r\n".as_slice()));
         assert!(parse_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn admission_status_lines() {
+        assert_eq!(status_line(429), "429 Too Many Requests");
+        assert_eq!(status_line(409), "409 Conflict");
+        assert_eq!(status_line(503), "503 Service Unavailable");
+        assert_eq!(status_line(999), "500 Internal Server Error");
+    }
+
+    #[test]
+    fn parses_delete_with_path_segment() {
+        let raw = "DELETE /models/fast HTTP/1.1\r\n\r\n";
+        let mut r = BufReader::new(Cursor::new(raw.as_bytes()));
+        let req = parse_request(&mut r).unwrap();
+        assert_eq!(req.method, "DELETE");
+        assert_eq!(req.path, "/models/fast");
     }
 }

@@ -1,142 +1,321 @@
-//! Minimal HTTP/1.1 front-end (hyper/tokio unavailable offline).
+//! Minimal HTTP/1.1 front-end (hyper/tokio unavailable offline): a router
+//! over the multi-model [`crate::registry::ModelRegistry`].
 //!
-//! `POST /generate {"prompt": "...", "max_new_tokens": N}` → generated text
-//! `GET  /stats` → engine metrics snapshot (latency/throughput headline)
-//! `GET  /metrics` → full snapshot incl. score-kernel variant counters
-//!                   (which AQUA kernel — dense/sparse/packed — actually
-//!                   ran) and attention-score-path timing
+//! `POST /generate {"prompt": "...", "max_new_tokens": N, "model": "m"}`
+//!     → generated text; `"model"` picks the deployment (fleet default
+//!     when omitted → 404 if unknown), `"stop_newline": false` disables
+//!     the newline stop token. Over-capacity deployments shed with 429.
+//! `GET  /stats` → fleet headline + per-model sections
+//! `GET  /metrics` → full snapshots incl. score-kernel variant counters
+//!     (which AQUA kernel — dense/sparse/packed — actually ran per model)
+//!     and admission queue-depth/shed counters
+//! `GET  /models` → deployment specs + live status
+//! `POST /models {spec}` → add a deployment at runtime (409 on name clash)
+//! `DELETE /models/{name}` → drain in-flight requests, join the engine
 //! `GET  /healthz` → ok
 //!
-//! The engine is !Send (PJRT handles), so it lives on its own thread behind
-//! an `EngineHandle`; the accept loop and per-connection workers only move
-//! plain data.
+//! Engines are !Send (PJRT handles), so each deployment's engine lives on
+//! its own thread behind the registry; the accept loop and per-connection
+//! workers only move plain data.
 
 pub mod http;
 
 use std::net::TcpListener;
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::engine::{EngineCmd, EngineHandle};
+use crate::coordinator::metrics::Snapshot;
 use crate::coordinator::GenRequest;
+use crate::registry::{Admission, AdmissionStats, DeploymentSpec, ModelRegistry};
 use crate::tokenizer::ByteTokenizer;
 use crate::util::json::Json;
 use http::{Request, Response};
 
-/// Serve until the process is killed. `handle` must already be running.
-pub fn serve(addr: &str, handle: EngineHandle) -> Result<()> {
+/// How long one `/generate` worker waits for its result before giving up
+/// (an abandoned result is then TTL-swept by the deployment's pump).
+const GENERATE_DEADLINE: Duration = Duration::from_secs(120);
+
+/// Serve until the process is killed. Deployments stay mutable at runtime
+/// through the `/models` admin endpoints.
+pub fn serve(addr: &str, registry: Arc<ModelRegistry>) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     crate::log_info!("listening on http://{addr}");
-    let cmd_tx = handle.cmd_tx.clone();
-    let results = Arc::new(Mutex::new(std::collections::HashMap::new()));
+    serve_on(listener, registry)
+}
 
-    // Result pump: engine thread -> shared map.
-    {
-        let results = results.clone();
-        std::thread::spawn(move || {
-            while let Ok(res) = handle.result_rx.recv() {
-                results.lock().unwrap().insert(res.id, res);
-            }
-        });
-    }
-
-    let next_id = Arc::new(Mutex::new(1u64));
+/// Accept loop over an already-bound listener (tests and examples bind
+/// port 0 themselves and run this on a background thread).
+pub fn serve_on(listener: TcpListener, registry: Arc<ModelRegistry>) -> Result<()> {
     for stream in listener.incoming() {
         let Ok(stream) = stream else { continue };
-        let cmd_tx = cmd_tx.clone();
-        let results = results.clone();
-        let next_id = next_id.clone();
+        let registry = registry.clone();
         std::thread::spawn(move || {
-            let _ = http::handle_connection(stream, |req| {
-                route(req, &cmd_tx, &results, &next_id)
-            });
+            let _ = http::handle_connection(stream, |req| route(req, &registry));
         });
     }
     Ok(())
 }
 
-fn route(
-    req: &Request,
-    cmd_tx: &mpsc::Sender<EngineCmd>,
-    results: &Arc<Mutex<std::collections::HashMap<u64, crate::coordinator::GenResult>>>,
-    next_id: &Arc<Mutex<u64>>,
-) -> Response {
+/// Dispatch one request against the fleet.
+pub fn route(req: &Request, registry: &ModelRegistry) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => Response::text(200, "ok"),
-        ("GET", "/stats") | ("GET", "/metrics") => {
-            let (tx, rx) = mpsc::channel();
-            if cmd_tx.send(EngineCmd::Stats(tx)).is_err() {
-                return Response::text(500, "engine gone");
-            }
-            match rx.recv_timeout(std::time::Duration::from_secs(5)) {
-                Ok(s) => {
-                    let mut fields = vec![
-                        ("requests_done", Json::Num(s.requests_done as f64)),
-                        ("tokens_generated", Json::Num(s.tokens_generated as f64)),
-                        ("decode_tok_per_s", Json::Num(s.decode_tok_per_s)),
-                        ("mean_ttft_ms", Json::Num(s.mean_ttft_ms)),
-                        ("p99_ttft_ms", Json::Num(s.p99_ttft_ms)),
-                        ("h2o_evictions", Json::Num(s.h2o_evictions as f64)),
-                    ];
-                    if req.path == "/metrics" {
-                        fields.extend([
-                            ("kernel_dense", Json::Num(s.kernels.dense as f64)),
-                            ("kernel_sparse", Json::Num(s.kernels.sparse as f64)),
-                            ("kernel_packed", Json::Num(s.kernels.packed as f64)),
-                            ("score_time_s", Json::Num(s.kernels.score_ns as f64 / 1e9)),
-                            ("score_us_per_decode", Json::Num(s.score_us_per_decode)),
-                            ("decode_calls", Json::Num(s.decode_calls as f64)),
-                            ("prefill_calls", Json::Num(s.prefill_calls as f64)),
-                            ("wall_tok_per_s", Json::Num(s.wall_tok_per_s)),
-                        ]);
-                    }
-                    Response::json(200, &Json::obj(fields))
-                }
-                Err(_) => Response::text(504, "stats timeout"),
-            }
-        }
-        ("POST", "/generate") => {
-            let body = match Json::parse(&req.body) {
-                Ok(b) => b,
-                Err(e) => return Response::text(400, &format!("bad json: {e}")),
-            };
-            let prompt = match body.get("prompt").as_str() {
-                Some(p) => p.to_string(),
-                None => return Response::text(400, "missing 'prompt'"),
-            };
-            let max_new = body.get("max_new_tokens").as_i64().unwrap_or(64) as usize;
-            let id = {
-                let mut g = next_id.lock().unwrap();
-                *g += 1;
-                *g
-            };
-            let tok = ByteTokenizer;
-            let mut r = GenRequest::new(id, tok.encode(&prompt), max_new);
-            r.stop_token = Some(b'\n' as i32);
-            if cmd_tx.send(EngineCmd::Submit(r)).is_err() {
-                return Response::text(500, "engine gone");
-            }
-            // Poll the shared result map (bounded wait).
-            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
-            loop {
-                if let Some(res) = results.lock().unwrap().remove(&id) {
-                    let text = tok.decode(&res.tokens);
-                    return Response::json(200, &Json::obj(vec![
-                        ("id", Json::Num(id as f64)),
-                        ("text", Json::Str(text)),
-                        ("tokens", Json::Num(res.tokens.len() as f64)),
-                        ("ttft_us", Json::Num(res.ttft_us as f64)),
-                        ("total_us", Json::Num(res.total_us as f64)),
-                    ]));
-                }
-                if std::time::Instant::now() > deadline {
-                    return Response::text(504, "generation timeout");
-                }
-                std::thread::sleep(std::time::Duration::from_millis(2));
-            }
-        }
+        ("GET", "/stats") => stats_route(registry, false),
+        ("GET", "/metrics") => stats_route(registry, true),
+        ("POST", "/generate") => generate(req, registry),
+        ("GET", "/models") => list_models(registry),
+        ("POST", "/models") => add_model(req, registry),
+        ("DELETE", path) => match path.strip_prefix("/models/") {
+            Some(name) => delete_model(name, registry),
+            None => Response::text(404, "not found"),
+        },
         _ => Response::text(404, "not found"),
+    }
+}
+
+fn generate(req: &Request, registry: &ModelRegistry) -> Response {
+    let body = match Json::parse(&req.body) {
+        Ok(b) => b,
+        Err(e) => return Response::text(400, &format!("bad json: {e}")),
+    };
+    let prompt = match body.get("prompt").as_str() {
+        Some(p) => p.to_string(),
+        None => return Response::text(400, "missing 'prompt'"),
+    };
+    let max_new = body.get("max_new_tokens").as_i64().unwrap_or(64) as usize;
+    let model = body.get("model").as_str();
+    let Some(dep) = registry.get(model) else {
+        return match model {
+            Some(m) => Response::text(404, &format!("unknown model '{m}'")),
+            None => Response::text(404, "no models deployed"),
+        };
+    };
+    let tok = ByteTokenizer;
+    let id = dep.fresh_id();
+    let mut r = GenRequest::new(id, tok.encode(&prompt), max_new);
+    if body.get("stop_newline").as_bool() != Some(false) {
+        r.stop_token = Some(b'\n' as i32);
+    }
+    match dep.submit(r) {
+        Ok(Admission::Accepted) => {}
+        Ok(Admission::Shed) => {
+            return Response::text(
+                429,
+                &format!(
+                    "model '{}' over capacity (in-flight limit {})",
+                    dep.spec.name, dep.spec.max_inflight
+                ),
+            );
+        }
+        Err(e) => return Response::text(503, &format!("{e:#}")),
+    }
+    match dep.wait_result(id, GENERATE_DEADLINE) {
+        Some(res) => {
+            let text = tok.decode(&res.tokens);
+            Response::json(
+                200,
+                &Json::obj(vec![
+                    ("id", Json::Num(id as f64)),
+                    ("model", Json::Str(dep.spec.name.clone())),
+                    ("text", Json::Str(text)),
+                    ("tokens", Json::Num(res.tokens.len() as f64)),
+                    ("ttft_us", Json::Num(res.ttft_us as f64)),
+                    ("total_us", Json::Num(res.total_us as f64)),
+                ]),
+            )
+        }
+        None => Response::text(504, "generation timeout"),
+    }
+}
+
+/// The engine-snapshot fields both `/stats` (headline) and `/metrics`
+/// (full) expose — the same keys the single-engine server served, so
+/// fleet aggregates stay drop-in readable.
+fn snapshot_fields(s: &Snapshot, full: bool) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![
+        ("requests_done", Json::Num(s.requests_done as f64)),
+        ("tokens_generated", Json::Num(s.tokens_generated as f64)),
+        ("decode_tok_per_s", Json::Num(s.decode_tok_per_s)),
+        ("mean_ttft_ms", Json::Num(s.mean_ttft_ms)),
+        ("p99_ttft_ms", Json::Num(s.p99_ttft_ms)),
+        ("h2o_evictions", Json::Num(s.h2o_evictions as f64)),
+    ];
+    if full {
+        fields.extend([
+            ("kernel_dense", Json::Num(s.kernels.dense as f64)),
+            ("kernel_sparse", Json::Num(s.kernels.sparse as f64)),
+            ("kernel_packed", Json::Num(s.kernels.packed as f64)),
+            ("score_time_s", Json::Num(s.kernels.score_ns as f64 / 1e9)),
+            ("score_us_per_decode", Json::Num(s.score_us_per_decode)),
+            ("decode_calls", Json::Num(s.decode_calls as f64)),
+            ("prefill_calls", Json::Num(s.prefill_calls as f64)),
+            ("wall_tok_per_s", Json::Num(s.wall_tok_per_s)),
+        ]);
+    }
+    fields
+}
+
+fn admission_fields(a: &AdmissionStats, full: bool) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![
+        ("queue_depth", Json::Num(a.queue_depth as f64)),
+        ("shed_total", Json::Num(a.shed as f64)),
+        ("submitted_total", Json::Num(a.submitted as f64)),
+    ];
+    if full {
+        fields.push(("results_swept", Json::Num(a.swept_results as f64)));
+    }
+    fields
+}
+
+fn stats_route(registry: &ModelRegistry, full: bool) -> Response {
+    let mut fleet = Snapshot::default();
+    let mut fleet_adm = AdmissionStats::default();
+    let mut models = std::collections::BTreeMap::new();
+    for dep in registry.deployments() {
+        let adm = dep.admission_stats();
+        // A dead or mid-drain engine degrades to an error section for
+        // that model instead of failing the whole fleet's observability.
+        let mut fields = match dep.stats() {
+            Ok(snap) => {
+                fleet.merge(&snap);
+                snapshot_fields(&snap, full)
+            }
+            Err(e) => vec![("error", Json::Str(format!("{e:#}")))],
+        };
+        fields.push(("backend", Json::Str(dep.backend_kind().to_string())));
+        fields.push(("k_ratio", Json::Num(dep.spec.aqua.k_ratio)));
+        fields.extend(admission_fields(&adm, full));
+        models.insert(dep.spec.name.clone(), Json::obj(fields));
+
+        fleet_adm.queue_depth += adm.queue_depth;
+        fleet_adm.submitted += adm.submitted;
+        fleet_adm.shed += adm.shed;
+        fleet_adm.swept_results += adm.swept_results;
+    }
+    let mut fields = snapshot_fields(&fleet, full);
+    fields.extend(admission_fields(&fleet_adm, full));
+    fields.push(("models", Json::Obj(models)));
+    match registry.default_name() {
+        Some(d) => fields.push(("default_model", Json::Str(d))),
+        None => fields.push(("default_model", Json::Null)),
+    }
+    Response::json(200, &Json::obj(fields))
+}
+
+fn list_models(registry: &ModelRegistry) -> Response {
+    let models: Vec<Json> = registry
+        .deployments()
+        .iter()
+        .map(|d| {
+            let mut j = d.spec.to_json();
+            if let Json::Obj(o) = &mut j {
+                o.insert("backend_kind".into(), Json::Str(d.backend_kind().to_string()));
+                o.insert(
+                    "queue_depth".into(),
+                    Json::Num(d.admission_stats().queue_depth as f64),
+                );
+                o.insert("draining".into(), Json::Bool(d.is_draining()));
+            }
+            j
+        })
+        .collect();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("default", registry.default_name().map(Json::Str).unwrap_or(Json::Null)),
+            ("models", Json::Arr(models)),
+        ]),
+    )
+}
+
+fn add_model(req: &Request, registry: &ModelRegistry) -> Response {
+    let body = match Json::parse(&req.body) {
+        Ok(b) => b,
+        Err(e) => return Response::text(400, &format!("bad json: {e}")),
+    };
+    let spec = match DeploymentSpec::from_json(&body) {
+        Ok(s) => s,
+        Err(e) => return Response::text(400, &format!("bad deployment spec: {e:#}")),
+    };
+    let name = spec.name.clone();
+    match registry.deploy(spec) {
+        Ok(()) => Response::json(
+            200,
+            &Json::obj(vec![("ok", Json::Bool(true)), ("name", Json::Str(name))]),
+        ),
+        // deploy refuses duplicates internally (race-safe): if the name is
+        // registered now, the failure was a conflict, not a bad spec
+        Err(_) if registry.get(Some(&name)).is_some() => {
+            Response::text(409, &format!("model '{name}' already exists"))
+        }
+        Err(e) => Response::text(400, &format!("{e:#}")),
+    }
+}
+
+fn delete_model(name: &str, registry: &ModelRegistry) -> Response {
+    if name.is_empty() || name.contains('/') {
+        return Response::text(400, "expected /models/{name}");
+    }
+    if registry.get(Some(name)).is_none() {
+        return Response::text(404, &format!("unknown model '{name}'"));
+    }
+    match registry.remove(name) {
+        Ok(()) => Response::json(
+            200,
+            &Json::obj(vec![("ok", Json::Bool(true)), ("removed", Json::Str(name.to_string()))]),
+        ),
+        Err(e) => Response::text(500, &format!("{e:#}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn request(method: &str, path: &str, body: &str) -> Request {
+        Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            headers: vec![],
+            body: body.to_string(),
+        }
+    }
+
+    #[test]
+    fn routes_without_models() {
+        let reg = ModelRegistry::new("no-such-dir");
+        assert_eq!(route(&request("GET", "/healthz", ""), &reg).status, 200);
+        assert_eq!(route(&request("GET", "/nope", ""), &reg).status, 404);
+        assert_eq!(route(&request("POST", "/generate", "{not json"), &reg).status, 400);
+        assert_eq!(route(&request("POST", "/generate", "{}"), &reg).status, 400);
+        let r = route(&request("POST", "/generate", r#"{"prompt": "hi"}"#), &reg);
+        assert_eq!(r.status, 404, "empty fleet has no default model");
+        assert_eq!(route(&request("DELETE", "/models/", ""), &reg).status, 400);
+        assert_eq!(route(&request("DELETE", "/models/x", ""), &reg).status, 404);
+        // empty fleet stats still render
+        let s = route(&request("GET", "/stats", ""), &reg);
+        assert_eq!(s.status, 200);
+        let doc = Json::parse(&s.body).unwrap();
+        assert_eq!(doc.get("requests_done").as_i64(), Some(0));
+        assert_eq!(doc.get("default_model"), &Json::Null);
+    }
+
+    #[test]
+    fn add_model_validates_and_conflicts() {
+        let reg = ModelRegistry::new("no-such-dir");
+        let spec = r#"{"name": "m1", "backend": "native", "batch": 2, "k_ratio": 0.5}"#;
+        assert_eq!(route(&request("POST", "/models", spec), &reg).status, 200);
+        assert_eq!(route(&request("POST", "/models", spec), &reg).status, 409);
+        assert_eq!(route(&request("POST", "/models", "{}"), &reg).status, 400);
+        let bad = r#"{"name": "m2", "backend": "gpu"}"#;
+        assert_eq!(route(&request("POST", "/models", bad), &reg).status, 400);
+        let listed = route(&request("GET", "/models", ""), &reg);
+        let doc = Json::parse(&listed.body).unwrap();
+        assert_eq!(doc.get("default").as_str(), Some("m1"));
+        assert_eq!(doc.get("models").as_arr().unwrap().len(), 1);
+        assert_eq!(route(&request("DELETE", "/models/m1", ""), &reg).status, 200);
+        reg.shutdown_all().unwrap();
     }
 }

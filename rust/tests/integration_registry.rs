@@ -1,0 +1,340 @@
+//! Integration tests for the multi-model registry and the HTTP router
+//! over it — hermetic: native backends only, real TCP on loopback
+//! ephemeral ports.
+//!
+//! Covers the fleet acceptance surface: routing by name with isolated
+//! per-model metrics, admission shed under overload, runtime fleet
+//! mutation (add/delete with drain), HTTP edge cases, and the size-1
+//! registry behaving exactly like the pre-registry single-engine path.
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use aqua_serve::model::config::ModelConfig;
+use aqua_serve::registry::{Admission, DeploymentSpec, ModelRegistry};
+use aqua_serve::runtime::BackendSpec;
+use aqua_serve::server;
+use aqua_serve::tokenizer::ByteTokenizer;
+use aqua_serve::util::json::Json;
+
+// ---------------------------------------------------------------- helpers
+
+fn registry_of(specs: &[&str]) -> Arc<ModelRegistry> {
+    let reg = ModelRegistry::new("no-such-artifacts-dir");
+    for s in specs {
+        reg.deploy(DeploymentSpec::parse_kv(s).unwrap()).unwrap();
+    }
+    Arc::new(reg)
+}
+
+fn start_server(registry: Arc<ModelRegistry>) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let _ = server::serve_on(listener, registry);
+    });
+    addr
+}
+
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    server::http::client_request(addr, method, path, body).expect("http request")
+}
+
+fn generate(addr: SocketAddr, model: Option<&str>, prompt: &str, max_new: usize) -> (u16, Json) {
+    let model_field = match model {
+        Some(m) => format!(", \"model\": \"{m}\""),
+        None => String::new(),
+    };
+    let body = format!("{{\"prompt\": \"{prompt}\", \"max_new_tokens\": {max_new}{model_field}}}");
+    let (status, resp) = http(addr, "POST", "/generate", &body);
+    let doc = if status == 200 { Json::parse(&resp).expect("json body") } else { Json::Null };
+    (status, doc)
+}
+
+/// Greedy reference text straight through an in-process engine with the
+/// same knobs a deployment spec pins (newline stop, like the server).
+fn direct_engine_text(
+    seed: u64,
+    k_ratio: f64,
+    batch: usize,
+    prompt: &str,
+    max_new: usize,
+) -> String {
+    let spec = BackendSpec::native(ModelConfig::tiny("llama-analog"), seed).unwrap();
+    let mut cfg = EngineConfig { batch, seed, ..Default::default() };
+    cfg.aqua.k_ratio = k_ratio;
+    let mut engine = Engine::with_spec(&spec, cfg).unwrap();
+    let tok = ByteTokenizer;
+    let mut req = GenRequest::new(1, tok.encode(prompt), max_new);
+    req.stop_token = Some(b'\n' as i32);
+    let res = engine.run_batch(vec![req]).unwrap().remove(0);
+    tok.decode(&res.tokens)
+}
+
+fn metrics(addr: SocketAddr) -> Json {
+    let (status, body) = http(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200, "metrics failed: {body}");
+    Json::parse(&body).unwrap()
+}
+
+// ------------------------------------------------------------------ tests
+
+#[test]
+fn two_models_route_by_name_with_isolated_metrics() {
+    let reg = registry_of(&[
+        "name=exact,backend=native,seed=0,k=1.0,batch=2,queue=8",
+        "name=pruned,backend=native,seed=0,k=0.25,batch=2,queue=8",
+    ]);
+    let addr = start_server(reg.clone());
+    let prompt = "the capital of ";
+
+    // routing by name reproduces each operating point's direct-engine text
+    let (status, doc) = generate(addr, Some("exact"), prompt, 16);
+    assert_eq!(status, 200);
+    assert_eq!(doc.get("model").as_str(), Some("exact"));
+    let exact_text = doc.get("text").as_str().unwrap().to_string();
+    assert_eq!(exact_text, direct_engine_text(0, 1.0, 2, prompt, 16));
+
+    let (status, doc) = generate(addr, Some("pruned"), prompt, 16);
+    assert_eq!(status, 200);
+    assert_eq!(doc.get("model").as_str(), Some("pruned"));
+    let pruned_text = doc.get("text").as_str().unwrap().to_string();
+    assert_eq!(pruned_text, direct_engine_text(0, 0.25, 2, prompt, 16));
+
+    // omitted model routes to the fleet default (first deployed)
+    let (status, doc) = generate(addr, None, prompt, 16);
+    assert_eq!(status, 200);
+    assert_eq!(doc.get("model").as_str(), Some("exact"));
+    assert_eq!(doc.get("text").as_str(), Some(exact_text.as_str()));
+
+    // concurrent traffic to both models
+    let mut joins = vec![];
+    for model in ["exact", "pruned"] {
+        joins.push(std::thread::spawn(move || {
+            for _ in 0..3 {
+                let (status, _) = generate(addr, Some(model), "the color of ", 12);
+                assert_eq!(status, 200);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // per-model metrics stay isolated: request counts and, crucially, the
+    // kernel counters — k=1.0 routes dense, k=0.25 routes packed.
+    let m = metrics(addr);
+    assert_eq!(m.get("requests_done").as_i64(), Some(9), "fleet aggregate");
+    let exact = m.get("models").get("exact");
+    let pruned = m.get("models").get("pruned");
+    assert_eq!(exact.get("requests_done").as_i64(), Some(5));
+    assert_eq!(pruned.get("requests_done").as_i64(), Some(4));
+    assert!(exact.get("kernel_dense").as_i64().unwrap() > 0);
+    assert_eq!(exact.get("kernel_packed").as_i64(), Some(0));
+    assert_eq!(exact.get("kernel_sparse").as_i64(), Some(0));
+    assert!(pruned.get("kernel_packed").as_i64().unwrap() > 0);
+    assert_eq!(pruned.get("kernel_dense").as_i64(), Some(0));
+    assert_eq!(exact.get("backend").as_str(), Some("native"));
+    assert_eq!(m.get("default_model").as_str(), Some("exact"));
+    // admission counters present and sane
+    assert_eq!(exact.get("queue_depth").as_i64(), Some(0));
+    assert_eq!(exact.get("shed_total").as_i64(), Some(0));
+    assert_eq!(exact.get("submitted_total").as_i64(), Some(5));
+
+    reg.shutdown_all().unwrap();
+}
+
+#[test]
+fn admission_control_sheds_and_recovers() {
+    let reg = registry_of(&["name=slow,backend=native,seed=0,k=1.0,batch=1,queue=1"]);
+    let dep = reg.get(Some("slow")).unwrap();
+    let tok = ByteTokenizer;
+
+    // deterministic shed at the API level: one long request occupies the
+    // single in-flight slot; the second submit must shed
+    let id = dep.fresh_id();
+    let long = GenRequest::new(id, tok.encode("a reasonably long prompt here"), 120);
+    assert_eq!(dep.submit(long).unwrap(), Admission::Accepted);
+    let id2 = dep.fresh_id();
+    let second = GenRequest::new(id2, tok.encode("hi"), 4);
+    assert_eq!(dep.submit(second).unwrap(), Admission::Shed);
+    let adm = dep.admission_stats();
+    assert_eq!(adm.shed, 1);
+    assert_eq!(adm.submitted, 1);
+    assert_eq!(adm.queue_depth, 1);
+
+    // the admitted request still completes in full
+    let res = dep.wait_result(id, Duration::from_secs(60)).expect("result");
+    assert_eq!(res.tokens.len(), 120);
+    assert_eq!(dep.admission_stats().queue_depth, 0, "slot released after completion");
+    assert!(dep.take_result(id2).is_none(), "shed request produced no result");
+
+    // over-capacity under concurrent HTTP load: some 429s, never a hang
+    let addr = start_server(reg.clone());
+    let mut joins = vec![];
+    for _ in 0..6 {
+        joins.push(std::thread::spawn(move || {
+            let body = r#"{"prompt": "the capital of ", "max_new_tokens": 120,
+                           "stop_newline": false, "model": "slow"}"#;
+            http(addr, "POST", "/generate", body).0
+        }));
+    }
+    let statuses: Vec<u16> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let ok = statuses.iter().filter(|&&s| s == 200).count();
+    let shed = statuses.iter().filter(|&&s| s == 429).count();
+    assert_eq!(ok + shed, 6, "only 200/429 expected, got {statuses:?}");
+    assert!(ok >= 1, "at least one request must be admitted: {statuses:?}");
+    assert!(shed >= 1, "queue=1 under 6 concurrent posts must shed: {statuses:?}");
+
+    let m = metrics(addr);
+    let slow = m.get("models").get("slow");
+    assert_eq!(slow.get("shed_total").as_i64(), Some(1 + shed as i64));
+    assert_eq!(slow.get("queue_depth").as_i64(), Some(0));
+    reg.shutdown_all().unwrap();
+}
+
+#[test]
+fn http_edge_cases_and_runtime_admin() {
+    let reg = registry_of(&["name=base,backend=native,seed=0,k=1.0,batch=2,queue=4"]);
+    let addr = start_server(reg.clone());
+
+    // malformed body / missing fields / unknown model
+    assert_eq!(http(addr, "POST", "/generate", "{oops").0, 400);
+    assert_eq!(http(addr, "POST", "/generate", "42").0, 400);
+    assert_eq!(http(addr, "POST", "/generate", r#"{"max_new_tokens": 4}"#).0, 400);
+    let (status, body) = http(addr, "POST", "/generate", r#"{"prompt": "x", "model": "ghost"}"#);
+    assert_eq!(status, 404);
+    assert!(body.contains("ghost"), "404 names the unknown model: {body}");
+    assert_eq!(http(addr, "GET", "/nope", "").0, 404);
+    assert_eq!(http(addr, "DELETE", "/models/ghost", "").0, 404);
+    assert_eq!(http(addr, "GET", "/healthz", "").1, "ok");
+
+    // GET /models lists the fleet
+    let (status, body) = http(addr, "GET", "/models", "");
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("default").as_str(), Some("base"));
+    let listed = doc.get("models").as_arr().unwrap();
+    assert_eq!(listed.len(), 1);
+    assert_eq!(listed[0].get("name").as_str(), Some("base"));
+    assert_eq!(listed[0].get("backend_kind").as_str(), Some("native"));
+    assert_eq!(listed[0].get("draining").as_bool(), Some(false));
+
+    // POST /models: bad specs rejected, good one deployed, dup conflicts
+    assert_eq!(http(addr, "POST", "/models", "{nope").0, 400);
+    assert_eq!(http(addr, "POST", "/models", r#"{"backend": "native"}"#).0, 400);
+    assert_eq!(http(addr, "POST", "/models", r#"{"name": "x", "backend": "gpu"}"#).0, 400);
+    let spec = r#"{"name": "added", "backend": "native", "seed": 0, "k_ratio": 0.5, "batch": 2}"#;
+    assert_eq!(http(addr, "POST", "/models", spec).0, 200);
+    assert_eq!(http(addr, "POST", "/models", spec).0, 409, "duplicate name conflicts");
+
+    // the runtime-added model serves traffic at its own operating point
+    let (status, doc) = generate(addr, Some("added"), "the capital of ", 12);
+    assert_eq!(status, 200);
+    let reference = direct_engine_text(0, 0.5, 2, "the capital of ", 12);
+    assert_eq!(doc.get("text").as_str().unwrap(), reference);
+
+    // DELETE removes it from routing
+    assert_eq!(http(addr, "DELETE", "/models/added", "").0, 200);
+    assert_eq!(http(addr, "POST", "/generate", r#"{"prompt": "x", "model": "added"}"#).0, 404);
+    let (_, body) = http(addr, "GET", "/models", "");
+    assert!(!body.contains("added"), "deleted model still listed: {body}");
+
+    reg.shutdown_all().unwrap();
+}
+
+#[test]
+fn size_one_registry_matches_single_engine_path() {
+    // one deployment, classic flags: this must behave exactly like the
+    // pre-registry single-engine serve path
+    let reg = registry_of(&["name=default,backend=native,seed=0,k=1.0,batch=4,queue=32"]);
+    let addr = start_server(reg.clone());
+    let prompt = "the capital of ";
+
+    let (status, doc) = generate(addr, None, prompt, 24);
+    assert_eq!(status, 200);
+    let text = doc.get("text").as_str().unwrap().to_string();
+    assert_eq!(text, direct_engine_text(0, 1.0, 4, prompt, 24), "registry of size 1 must \
+                reproduce the single-engine output");
+    for f in ["id", "tokens", "ttft_us", "total_us"] {
+        assert!(doc.get(f).as_f64().is_some(), "legacy response field '{f}' missing");
+    }
+    // determinism across repeated requests (greedy sampler)
+    let (_, doc2) = generate(addr, None, prompt, 24);
+    assert_eq!(doc2.get("text").as_str(), Some(text.as_str()));
+
+    // /stats keeps the legacy headline fields at the top level
+    let (status, body) = http(addr, "GET", "/stats", "");
+    assert_eq!(status, 200);
+    let stats = Json::parse(&body).unwrap();
+    for f in [
+        "requests_done",
+        "tokens_generated",
+        "decode_tok_per_s",
+        "mean_ttft_ms",
+        "p99_ttft_ms",
+        "h2o_evictions",
+    ] {
+        assert!(stats.get(f).as_f64().is_some(), "legacy stats field '{f}' missing");
+    }
+    assert_eq!(stats.get("requests_done").as_i64(), Some(2));
+    // /metrics adds the kernel observability fields, as before
+    let m = metrics(addr);
+    for f in ["kernel_dense", "kernel_sparse", "kernel_packed", "decode_calls", "prefill_calls"] {
+        assert!(m.get(f).as_f64().is_some(), "legacy metrics field '{f}' missing");
+    }
+    reg.shutdown_all().unwrap();
+}
+
+#[test]
+fn delete_drains_in_flight_requests() {
+    let reg = registry_of(&["name=victim,backend=native,seed=0,k=1.0,batch=2,queue=4"]);
+    let addr = start_server(reg.clone());
+
+    // a long-running request (no stop token, 100 tokens)...
+    let worker = std::thread::spawn(move || {
+        let body = r#"{"prompt": "the capital of ", "max_new_tokens": 100,
+                       "stop_newline": false, "model": "victim"}"#;
+        http(addr, "POST", "/generate", body)
+    });
+    // ...observed in flight through /metrics...
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let m = metrics(addr);
+        if m.get("models").get("victim").get("queue_depth").as_i64() == Some(1) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "request never became visible in flight");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // ...survives DELETE: removal drains the lane instead of killing it
+    assert_eq!(http(addr, "DELETE", "/models/victim", "").0, 200);
+    let (status, body) = worker.join().unwrap();
+    assert_eq!(status, 200, "in-flight request must drain to completion: {body}");
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("tokens").as_i64(), Some(100), "drained request kept all its tokens");
+
+    // the fleet no longer routes to it
+    assert_eq!(http(addr, "POST", "/generate", r#"{"prompt": "x", "model": "victim"}"#).0, 404);
+    let (_, body) = http(addr, "GET", "/models", "");
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("models").as_arr().unwrap().len(), 0);
+    assert_eq!(doc.get("default"), &Json::Null);
+    reg.shutdown_all().unwrap();
+}
+
+#[test]
+fn fleet_config_example_file_loads() {
+    // the committed examples/fleet.json must stay a valid fleet config
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/fleet.json");
+    let text = std::fs::read_to_string(path).expect("examples/fleet.json readable");
+    let doc = Json::parse(&text).expect("examples/fleet.json parses");
+    let reg = ModelRegistry::from_fleet_json(&doc, "no-such-artifacts-dir").unwrap();
+    assert_eq!(reg.names(), vec!["exact".to_string(), "pruned".to_string()]);
+    assert_eq!(reg.default_name().as_deref(), Some("exact"));
+    let dep = reg.get(None).unwrap();
+    assert_eq!(dep.backend_kind(), "native");
+    reg.shutdown_all().unwrap();
+}
