@@ -1,43 +1,58 @@
-//! The controllable knob: sweep k_ratio on a fixed prompt and show the
-//! quality/cost trade-off (paper Table 7's qualitative story + the §5 cost
-//! model side by side). Backend-generic — runs hermetically on the native
-//! backend without artifacts.
+//! The controllable knob: sweep k_ratio (and the AQUA-Memory slice) on a
+//! fixed prompt and show the quality/cost/memory trade-off (paper Table
+//! 7's qualitative story + the §5 cost model + measured resident KV side
+//! by side). Backend-generic — runs hermetically on the native backend
+//! without artifacts.
 
 use aqua_serve::aqua::policy::{AquaConfig, CostModel};
 use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
-use aqua_serve::runtime::{default_backend, ExecBackend};
+use aqua_serve::runtime::default_spec;
 use aqua_serve::tokenizer::ByteTokenizer;
 
 fn main() -> anyhow::Result<()> {
-    let backend = default_backend("llama-analog", 0)?;
-    let d = backend.model_config().d_head;
+    let spec = default_spec("llama-analog", 0)?;
+    let d = spec.model_config().d_head;
     let cost = CostModel { d_head: d };
     let tok = ByteTokenizer;
-    let mut engine = Engine::new(backend, EngineConfig { batch: 1, ..Default::default() })?;
 
     let prompt = "the capital of ";
     println!("# AQUA knob sweep — prompt {prompt:?} (greedy, {} backend)\n",
-             engine.backend().name());
-    println!("{:>8} {:>5} {:>14} {:>16}  generation",
-             "k_ratio", "k", "score FLOPs@512", "break-even i+1");
-    for r in [1.0, 0.9, 0.75, 0.5, 0.4, 0.3, 0.2, 0.1] {
-        let aqua = if r >= 1.0 {
+             spec.name());
+    println!("{:>8} {:>8} {:>5} {:>14} {:>16} {:>12}  generation",
+             "k_ratio", "kv_keep", "k", "score FLOPs@512", "break-even i+1", "kv peak");
+    // (k_ratio, s_ratio) points: the compute sweep at full memory, then
+    // AQUA-Memory points showing the resident-KV axis shrink
+    let points = [(1.0, 0.0), (0.9, 0.0), (0.75, 0.0), (0.5, 0.0), (0.4, 0.0), (0.3, 0.0),
+                  (0.2, 0.0), (0.1, 0.0), (1.0, 0.25), (1.0, 0.5)];
+    for (r, s_ratio) in points {
+        let aqua = if r >= 1.0 && s_ratio == 0.0 {
             AquaConfig::baseline()
         } else {
-            AquaConfig { k_ratio: r, ..Default::default() }
+            AquaConfig { k_ratio: r, s_ratio, ..Default::default() }
         };
-        engine.with_aqua(aqua);
+        // fresh engine per point (model weights shared through the spec):
+        // the kv-peak column then reports this point's pool, and s_ratio
+        // points get their truncated-key page layout from construction
+        let mut engine =
+            Engine::with_spec(&spec, EngineConfig { batch: 1, aqua, ..Default::default() })?;
         let mut req = GenRequest::new(1, tok.encode(prompt), 40);
         req.stop_token = Some(b'\n' as i32);
         let res = engine.run_batch(vec![req])?.remove(0);
         let k = aqua.k_dims(d);
-        let flops = if r >= 1.0 { cost.standard_flops(512) } else { cost.aqua_flops(512, k) };
+        let flops = if r >= 1.0 && s_ratio == 0.0 {
+            cost.standard_flops(512)
+        } else {
+            cost.aqua_flops(512, k)
+        };
         let be = cost
             .paper_breakeven(k)
             .map(|b| b.to_string())
             .unwrap_or_else(|| "never".into());
-        println!("{:>8.2} {:>5} {:>14} {:>16}  {:?}",
-                 r, k, flops, be, tok.decode(&res.tokens));
+        // measured resident KV bytes of the paged pool at this operating
+        // point (peak over the run) — the memory axis of the sweep
+        let kv = engine.metrics.snapshot().kv_resident_peak_bytes;
+        println!("{:>8.2} {:>8.2} {:>5} {:>14} {:>16} {:>11.1}K  {:?}",
+                 r, 1.0 - s_ratio, k, flops, be, kv as f64 / 1024.0, tok.decode(&res.tokens));
     }
     Ok(())
 }

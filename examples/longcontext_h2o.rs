@@ -13,9 +13,9 @@ fn main() -> anyhow::Result<()> {
     let spec = default_spec("llama-analog", 0)?;
     let corpus = corpus_or_synthetic(1 << 14);
     let tok = ByteTokenizer;
-    let (d, n_kv, max_seq) = {
+    let (d, n_kv, n_layers, max_seq) = {
         let c = spec.model_config();
-        (c.d_head, c.n_kv_heads, c.max_seq)
+        (c.d_head, c.n_kv_heads, c.n_layers, c.max_seq)
     };
     let gen_len = 32usize;
 
@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
         let res = engine.run_batch(vec![req])?.remove(0);
         let s = engine.metrics.snapshot();
         let total = prompt.len() + res.tokens.len();
-        let per_slot = aqua.kv_bytes_per_slot(d, n_kv);
+        let per_slot = aqua.kv_bytes_per_slot(d, n_kv, n_layers);
         let full = total * per_slot;
         let live = full - (s.h2o_evictions as usize * per_slot);
         println!("{:>10.2} {:>8.2} {:>10} {:>12} {:>11.1}%  {:?}",
@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
                  100.0 * (full - live) as f64 / full as f64,
                  tok.decode(&res.tokens));
     }
-    println!("\n(evicted slots are reclaimable pages; bytes computed via AquaConfig::kv_bytes_per_slot)");
+    println!("\n(evicted slots return to the paged KV pool once their page drains; \
+              per-slot bytes via AquaConfig::kv_bytes_per_slot == the pool's actual layout)");
     Ok(())
 }

@@ -125,7 +125,7 @@ fn main() -> anyhow::Result<()> {
                         loads[m].submit_at.insert(id, Instant::now());
                         loads[m].outstanding.push(id);
                     }
-                    Admission::Shed => loads[m].shed += 1,
+                    Admission::Shed(_) => loads[m].shed += 1,
                 }
                 sent_total += 1;
                 progressed = true;

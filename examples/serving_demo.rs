@@ -52,9 +52,9 @@ fn main() -> anyhow::Result<()> {
 
     println!("# serving_demo — {n} batched requests per operating point (batch=4, {} backend)\n",
              spec.name());
-    println!("{:<34} {:>10} {:>12} {:>12} {:>12} {:>10} {:>22}",
+    println!("{:<34} {:>10} {:>12} {:>12} {:>12} {:>10} {:>12} {:>22}",
              "operating point", "tok/s", "ttft p50", "ttft p99", "lat mean", "evictions",
-             "kernels (d/s/p)");
+             "kv peak", "kernels (d/s/p)");
     for (label, aqua) in [
         ("baseline (standard attention)", AquaConfig::baseline()),
         ("AQUA k=0.75", AquaConfig { k_ratio: 0.75, ..Default::default() }),
@@ -76,11 +76,14 @@ fn main() -> anyhow::Result<()> {
         let s = engine.metrics.snapshot();
         let total_tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
         // which score kernel actually ran at this operating point
-        // (dense/sparse/packed head-calls, see runtime::KernelCounters)
+        // (dense/sparse/packed head-calls, see runtime::KernelCounters),
+        // and the peak resident KV of the paged pool — actual leased
+        // pages, not the cost model (AQUA-Memory points shrink it)
         let kern = format!("{}/{}/{}", s.kernels.dense, s.kernels.sparse, s.kernels.packed);
-        println!("{:<34} {:>10.1} {:>10.1}ms {:>10.1}ms {:>10.1}ms {:>10} {:>22}",
+        let kv_peak = format!("{:.1}KiB", s.kv_resident_peak_bytes as f64 / 1024.0);
+        println!("{:<34} {:>10.1} {:>10.1}ms {:>10.1}ms {:>10.1}ms {:>10} {:>12} {:>22}",
                  label, total_tokens as f64 / wall, s.p50_ttft_ms, s.p99_ttft_ms,
-                 s.mean_latency_ms, s.h2o_evictions, kern);
+                 s.mean_latency_ms, s.h2o_evictions, kv_peak, kern);
     }
     println!("\n(swap in the PJRT model via --features pjrt + make artifacts; see DESIGN.md)");
     Ok(())

@@ -56,7 +56,10 @@ impl Row {
 }
 
 /// Steady-state decode: `ctx` committed slots, every step rewrites the
-/// same position (the cache stays warm, the attendable set fixed).
+/// same position (the cache stays warm, the attendable set fixed). The
+/// context is *really written* first — with the paged KV pool, unleased
+/// pages cost nothing to score, so a mask-only context would understate
+/// the kernel work the bench is meant to measure.
 fn measure_decode(
     be: &mut dyn ExecBackend,
     bench: &Bencher,
@@ -67,16 +70,19 @@ fn measure_decode(
     let cfg = be.model_config().clone();
     let ctx = cfg.max_seq / 2;
     be.empty_cache(b).expect("empty_cache");
-    let tokens = vec![5i32; b];
-    let pos = vec![ctx as i32; b];
-    let mut slot_mask = vec![0.0f32; b * cfg.max_seq];
-    for lane in 0..b {
-        for s in 0..ctx {
-            slot_mask[lane * cfg.max_seq + s] = 1.0;
-        }
-    }
     let aqua = AquaConfig { k_ratio, ..Default::default() };
     let knobs = AquaKnobs::from_config(&aqua, cfg.d_head);
+    let mut slot_mask = vec![0.0f32; b * cfg.max_seq];
+    for i in 0..ctx {
+        let toks = vec![(32 + (i % 64)) as i32; b];
+        let ppos = vec![i as i32; b];
+        be.decode(b, &toks, &ppos, &slot_mask, &knobs).expect("context decode");
+        for lane in 0..b {
+            slot_mask[lane * cfg.max_seq + i] = 1.0;
+        }
+    }
+    let tokens = vec![5i32; b];
+    let pos = vec![ctx as i32; b];
     bench.run(name, || {
         let out = be.decode(b, &tokens, &pos, &slot_mask, &knobs).expect("decode");
         black_box(out.logits.len());

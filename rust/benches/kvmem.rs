@@ -1,0 +1,136 @@
+//! KV-memory trajectory: resident bytes-per-token and lanes-per-budget vs
+//! the AQUA-Memory knob (`kv_keep = 1 - s_ratio`) through the paged KV
+//! pool — the memory half of the paper's claim, measured on the pool the
+//! backend actually allocates instead of projected from the cost model.
+//!
+//! For each `kv_keep` operating point the bench serves the same hermetic
+//! workload through a full engine (admission → prefill/decode → H2O →
+//! retire) and records:
+//!
+//! * `bytes_per_token` — resident KV bytes per token slot of the pool's
+//!   page layout (truncated keys + full values, all layers);
+//! * `resident_ratio` — measured peak resident pool bytes over the dense
+//!   `[L, B, n_kv, 2d, max_seq]` preallocation the pre-pool backends used
+//!   (paging and truncation both push this down);
+//! * `max_lanes` — worst-case concurrent lanes a fixed `budget_mb` KV
+//!   budget admits (`budget_pages / pages_per_lane`) — "serve more lanes
+//!   per byte".
+//!
+//! Writes the `kvmem` section of `BENCH_kvmem.json` (schema in BENCHES.md,
+//! validated by `aqua benchcheck`; `--strict` asserts the kv_keep=0.5
+//! acceptance bound). Pass `--fast` for a smoke run (CI).
+
+use std::path::Path;
+
+use aqua_serve::aqua::policy::AquaConfig;
+use aqua_serve::bench::report::{kvmem_path, BenchReport};
+use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use aqua_serve::kvpool::{budget_pages, PoolLayout, DEFAULT_PAGE_SLOTS};
+use aqua_serve::model::config::ModelConfig;
+use aqua_serve::runtime::{corpus_or_synthetic, BackendSpec};
+use aqua_serve::tokenizer::ByteTokenizer;
+use aqua_serve::util::json::Json;
+use aqua_serve::util::prng::Rng;
+
+const GEN_LEN: usize = 32;
+const BATCH: usize = 4;
+const BUDGET_MB: f64 = 1.0;
+
+fn workload(corpus: &[u8], n: usize, max_prompt: usize, rng: &mut Rng) -> Vec<GenRequest> {
+    let tok = ByteTokenizer;
+    let lines: Vec<&[u8]> = corpus.split(|&b| b == b'\n').filter(|l| l.len() > 8).collect();
+    (0..n)
+        .map(|i| {
+            let line = lines[rng.below(lines.len())];
+            let cut = (4 + rng.below(line.len() - 4)).min(max_prompt);
+            let mut r = GenRequest::new(i as u64 + 1, tok.encode_bytes(&line[..cut]), GEN_LEN);
+            r.stop_token = Some(b'\n' as i32);
+            r
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let n_requests = if fast { 8 } else { 24 };
+    let cfg = ModelConfig::tiny("llama-analog");
+    let (d, nkv, nl, s_cap) = (cfg.d_head, cfg.n_kv_heads, cfg.n_layers, cfg.max_seq);
+    let spec = BackendSpec::native(cfg.clone(), 0)?;
+    let corpus = corpus_or_synthetic(1 << 15);
+    let max_prompt = spec.max_prompt(GEN_LEN);
+    // what every lane preallocated before the pool: full-width K + V
+    let dense_alloc = BATCH * nl * nkv * s_cap * 2 * d * 4;
+    let dense_bytes_per_token = nl * nkv * 2 * d * 4;
+
+    println!(
+        "# kvmem — resident KV vs kv_keep ({n_requests} requests, batch={BATCH}, S={s_cap}, \
+         dense preallocation {dense_alloc} B)\n"
+    );
+    println!(
+        "{:>8} {:>9} {:>11} {:>14} {:>15} {:>10}",
+        "kv_keep", "mem_dims", "B/token", "peak resident", "resident ratio", "max lanes"
+    );
+
+    let mut rows: Vec<Json> = vec![];
+    for keep in [1.0f64, 0.75, 0.5, 0.25] {
+        let aqua = AquaConfig { s_ratio: 1.0 - keep, ..Default::default() };
+        let mem_dims = aqua.mem_dims(d);
+        let layout = PoolLayout {
+            page_slots: DEFAULT_PAGE_SLOTS,
+            key_dims: mem_dims,
+            head_dim: d,
+            layers: nl,
+            kv_heads: nkv,
+        };
+        let bytes_per_token = layout.bytes_per_slot();
+        let pages_per_lane = layout.pages_for_slots(s_cap);
+        let max_lanes = budget_pages(BUDGET_MB, &layout).unwrap_or(0) / pages_per_lane.max(1);
+
+        let mut engine =
+            Engine::with_spec(&spec, EngineConfig { batch: BATCH, aqua, ..Default::default() })?;
+        let mut rng = Rng::new(11);
+        engine.run_batch(workload(&corpus, n_requests, max_prompt, &mut rng))?;
+        let snap = engine.metrics.snapshot();
+        let peak = snap.kv_resident_peak_bytes;
+        let ratio = peak as f64 / dense_alloc as f64;
+
+        println!(
+            "{:>8.2} {:>9} {:>11} {:>13}B {:>15.3} {:>10}",
+            keep, mem_dims, bytes_per_token, peak, ratio, max_lanes
+        );
+        rows.push(Json::obj(vec![
+            ("kv_keep", Json::Num(keep)),
+            ("mem_dims", Json::Num(mem_dims as f64)),
+            ("page_slots", Json::Num(layout.page_slots as f64)),
+            ("bytes_per_token", Json::Num(bytes_per_token as f64)),
+            ("dense_bytes_per_token", Json::Num(dense_bytes_per_token as f64)),
+            ("peak_resident_bytes", Json::Num(peak as f64)),
+            ("resident_ratio", Json::Num(ratio)),
+            ("max_lanes", Json::Num(max_lanes as f64)),
+            ("budget_mb", Json::Num(BUDGET_MB)),
+        ]));
+    }
+
+    let section = Json::obj(vec![
+        ("rows", Json::Arr(rows)),
+        ("model", Json::Str(cfg.name.clone())),
+        ("requests", Json::Num(n_requests as f64)),
+        ("batch", Json::Num(BATCH as f64)),
+        (
+            "units",
+            Json::Str(
+                "bytes_per_token = resident pool bytes per slot; resident_ratio = peak leased \
+                 pages vs dense [L,B,n_kv,2d,S] preallocation; max_lanes = worst-case lanes a \
+                 budget_mb KV budget admits"
+                    .into(),
+            ),
+        ),
+        ("fast", Json::Bool(fast)),
+    ]);
+    let path = Path::new(kvmem_path());
+    let mut rep = BenchReport::load_or_new(path);
+    rep.set_section("kvmem", section);
+    rep.save(path)?;
+    println!("\nwrote kvmem section to {}", path.display());
+    Ok(())
+}

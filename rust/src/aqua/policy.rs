@@ -56,10 +56,14 @@ impl AquaConfig {
         (0..d).map(|i| if i < keep { 1.0 } else { 0.0 }).collect()
     }
 
-    /// Per-token-slot KV bytes (f32 K̂ slice + full V), the AQUA-Memory
-    /// saving the paper's Table 3 trades against accuracy.
-    pub fn kv_bytes_per_slot(&self, d: usize, n_kv: usize) -> usize {
-        n_kv * (self.mem_dims(d) + d) * 4
+    /// Per-token-slot *resident* KV bytes (f32 K̂ slice + full V, across
+    /// all layers) — the AQUA-Memory saving the paper's Table 3 trades
+    /// against accuracy. Since the paged KV pool this is no longer a
+    /// cost-model projection: it equals `PoolLayout::bytes_per_slot` for
+    /// the pool the backend actually allocates
+    /// (`kvpool` property-tests the two never drift).
+    pub fn kv_bytes_per_slot(&self, d: usize, n_kv: usize, n_layers: usize) -> usize {
+        n_layers * n_kv * (self.mem_dims(d) + d) * 4
     }
 }
 
@@ -161,9 +165,19 @@ mod tests {
     }
 
     #[test]
-    fn kv_bytes_scale_with_slice() {
-        let base = AquaConfig::default().kv_bytes_per_slot(32, 2);
-        let sliced = AquaConfig { s_ratio: 0.25, ..Default::default() }.kv_bytes_per_slot(32, 2);
+    fn kv_bytes_scale_with_slice_and_match_pool_layout() {
+        let base = AquaConfig::default().kv_bytes_per_slot(32, 2, 4);
+        let cfg = AquaConfig { s_ratio: 0.25, ..Default::default() };
+        let sliced = cfg.kv_bytes_per_slot(32, 2, 4);
         assert!(sliced < base);
+        // the cost model and the pool's actual allocation are one formula
+        let layout = crate::kvpool::PoolLayout {
+            page_slots: 16,
+            key_dims: cfg.mem_dims(32),
+            head_dim: 32,
+            layers: 4,
+            kv_heads: 2,
+        };
+        assert_eq!(sliced, layout.bytes_per_slot());
     }
 }

@@ -40,6 +40,13 @@ pub fn serving_path() -> &'static str {
     concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json")
 }
 
+/// Repo-root path of the KV-memory report (`BENCH_kvmem.json`), written by
+/// the `kvmem` bench — bytes-per-token and max-concurrent-lanes vs
+/// `kv_keep` through the paged KV pool (schema in BENCHES.md).
+pub fn kvmem_path() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kvmem.json")
+}
+
 /// An on-disk report being updated section-by-section.
 pub struct BenchReport {
     doc: Json,
@@ -192,6 +199,65 @@ pub fn validate_serving(doc: &Json, strict: bool) -> Result<()> {
     Ok(())
 }
 
+/// Validate a `BENCH_kvmem.json` document (the `kvmem` section the kvmem
+/// bench emits: resident bytes-per-token and lanes-per-budget vs the
+/// AQUA-Memory knob; schema in BENCHES.md). `strict` refuses projected
+/// snapshots and asserts the memory-claim invariants: the `kv_keep = 0.5`
+/// row's measured resident-to-dense ratio is <= 0.6, and a fixed budget
+/// fits at least as many lanes at `kv_keep = 0.5` as at 1.0.
+pub fn validate_kvmem(doc: &Json, strict: bool) -> Result<()> {
+    let ver = doc.get("schema_version").as_i64().unwrap_or(0);
+    if ver != SCHEMA_VERSION {
+        bail!("schema_version {ver} != {SCHEMA_VERSION}");
+    }
+    let rows = rows_of(doc, "kvmem")?;
+    for r in rows {
+        for f in ["kv_keep", "bytes_per_token", "dense_bytes_per_token", "peak_resident_bytes",
+                  "resident_ratio", "budget_mb"] {
+            if r.get(f).as_f64().is_none() {
+                bail!("kvmem row missing '{f}': {r}");
+            }
+        }
+        for f in ["mem_dims", "page_slots", "max_lanes"] {
+            if r.get(f).as_i64().is_none() {
+                bail!("kvmem row missing '{f}': {r}");
+            }
+        }
+        let (bpt, dense) = (
+            r.get("bytes_per_token").as_f64().unwrap_or(0.0),
+            r.get("dense_bytes_per_token").as_f64().unwrap_or(0.0),
+        );
+        if bpt > dense {
+            bail!("kvmem row: resident bytes_per_token {bpt} exceeds dense {dense}: {r}");
+        }
+    }
+    if !strict {
+        return Ok(());
+    }
+    if doc.get("projected").as_bool() == Some(true) {
+        bail!("strict validation refused: numbers are cost-model projections, not measurements \
+               (regenerate with the kvmem bench)");
+    }
+    let find = |keep: f64| -> Option<&Json> {
+        rows.iter().find(|r| (r.get("kv_keep").as_f64().unwrap_or(-1.0) - keep).abs() < 1e-9)
+    };
+    let half = find(0.5).context("missing kv_keep=0.5 row")?;
+    let full = find(1.0).context("missing kv_keep=1.0 row")?;
+    let ratio = half.get("resident_ratio").as_f64().unwrap_or(1.0);
+    if ratio > 0.6 {
+        bail!("kv_keep=0.5 resident ratio {ratio:.3} exceeds the 0.6 acceptance bound");
+    }
+    let (l_half, l_full) = (
+        half.get("max_lanes").as_i64().unwrap_or(0),
+        full.get("max_lanes").as_i64().unwrap_or(0),
+    );
+    if l_half < l_full {
+        bail!("kv_keep=0.5 fits {l_half} lanes < kv_keep=1.0's {l_full} — truncation must not \
+               shrink capacity");
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -340,6 +406,63 @@ mod tests {
         }
         validate_serving(&projected, false).unwrap();
         assert!(validate_serving(&projected, true).is_err());
+    }
+
+    fn kvmem_row(keep: f64, bpt: f64, ratio: f64, lanes: f64) -> Json {
+        Json::obj(vec![
+            ("kv_keep", Json::Num(keep)),
+            ("mem_dims", Json::Num((keep * 8.0).round())),
+            ("page_slots", Json::Num(16.0)),
+            ("bytes_per_token", Json::Num(bpt)),
+            ("dense_bytes_per_token", Json::Num(256.0)),
+            ("peak_resident_bytes", Json::Num(ratio * 163840.0)),
+            ("resident_ratio", Json::Num(ratio)),
+            ("max_lanes", Json::Num(lanes)),
+            ("budget_mb", Json::Num(1.0)),
+        ])
+    }
+
+    fn kvmem_doc(rows: Vec<Json>) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            (
+                "sections",
+                Json::obj(vec![("kvmem", Json::obj(vec![("rows", Json::Arr(rows))]))]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn validate_kvmem_schema_and_invariants() {
+        let good =
+            kvmem_doc(vec![kvmem_row(1.0, 256.0, 0.40, 25.0), kvmem_row(0.5, 192.0, 0.30, 34.0)]);
+        validate_kvmem(&good, false).unwrap();
+        validate_kvmem(&good, true).unwrap();
+
+        // resident exceeding dense is schema-invalid
+        let inflated = kvmem_doc(vec![kvmem_row(1.0, 300.0, 0.4, 25.0)]);
+        assert!(validate_kvmem(&inflated, false).is_err());
+
+        // the 0.5 row must beat the 0.6 acceptance bound under --strict
+        let weak =
+            kvmem_doc(vec![kvmem_row(1.0, 256.0, 0.40, 25.0), kvmem_row(0.5, 192.0, 0.75, 34.0)]);
+        validate_kvmem(&weak, false).unwrap();
+        assert!(validate_kvmem(&weak, true).is_err());
+
+        // fewer lanes at 0.5 than 1.0 is a strict failure too
+        let shrunk =
+            kvmem_doc(vec![kvmem_row(1.0, 256.0, 0.40, 25.0), kvmem_row(0.5, 192.0, 0.30, 20.0)]);
+        assert!(validate_kvmem(&shrunk, true).is_err());
+
+        // projected snapshots pass the schema but refuse strict validation
+        let mut projected = good.clone();
+        if let Json::Obj(o) = &mut projected {
+            o.insert("projected".into(), Json::Bool(true));
+        }
+        validate_kvmem(&projected, false).unwrap();
+        assert!(validate_kvmem(&projected, true).is_err());
+
+        assert!(validate_kvmem(&Json::obj(vec![]), false).is_err());
     }
 
     #[test]

@@ -23,6 +23,13 @@ impl AdmissionQueue {
         self.q.push_back(r);
     }
 
+    /// Return a popped request to the head of the queue (memory-aware
+    /// admission defers the FIFO head until enough KV pages free up —
+    /// order among waiting requests is preserved).
+    pub fn push_front(&mut self, r: GenRequest) {
+        self.q.push_front(r);
+    }
+
     pub fn pop(&mut self) -> Option<GenRequest> {
         self.q.pop_front()
     }

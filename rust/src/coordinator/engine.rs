@@ -22,6 +22,7 @@ use super::kvcache::LaneKv;
 use super::metrics::Metrics;
 use super::request::{ActiveReq, FinishReason, GenRequest, GenResult};
 use crate::aqua::policy::AquaConfig;
+use crate::kvpool::{budget_pages, KvPoolConfig, PoolLayout, DEFAULT_PAGE_SLOTS};
 use crate::model::sampling::Sampler;
 use crate::runtime::backend::{AquaKnobs, BackendSpec, ExecBackend};
 use crate::tensor::softmax::log_softmax_at;
@@ -34,6 +35,12 @@ pub struct EngineConfig {
     pub h2o_recent_window: usize,
     pub sampler: Sampler,
     pub seed: u64,
+    /// Token slots per KV page (see `crate::kvpool`).
+    pub kv_page_slots: usize,
+    /// KV pool budget in MiB; 0.0 = unlimited (worst-case pool, never
+    /// stalls). The registry's admission gate uses the same number so a
+    /// lease failure can only mean the gate was bypassed.
+    pub kv_budget_mb: f64,
 }
 
 impl Default for EngineConfig {
@@ -44,6 +51,24 @@ impl Default for EngineConfig {
             h2o_recent_window: 16,
             sampler: Sampler::Greedy,
             seed: 0,
+            kv_page_slots: DEFAULT_PAGE_SLOTS,
+            kv_budget_mb: 0.0,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// The KV pool geometry this config pins for a model — the **single
+    /// source** both the engine's pool cap and the registry's admission
+    /// gate derive from, so the two can never disagree on page
+    /// arithmetic.
+    pub fn pool_layout(&self, c: &crate::model::config::ModelConfig) -> PoolLayout {
+        PoolLayout {
+            page_slots: self.kv_page_slots.clamp(1, c.max_seq),
+            key_dims: self.aqua.mem_dims(c.d_head),
+            head_dim: c.d_head,
+            layers: c.n_layers,
+            kv_heads: c.n_kv_heads,
         }
     }
 }
@@ -59,6 +84,15 @@ pub struct Engine {
     rng: Rng,
     pub metrics: Metrics,
     h2o: H2oPolicy,
+    /// Resolved KV pool geometry (mirrors the backend's pool).
+    kv_layout: PoolLayout,
+    /// Page budget from `kv_budget_mb` (None = unlimited). Enforced at
+    /// *admission*: a request only occupies a lane once its worst-case
+    /// page growth fits next to the other occupants', so the pool cap can
+    /// never stall mid-decode — for any backend, sharded included.
+    kv_budget_pages: Option<usize>,
+    /// Worst-case pages reserved per occupied lane.
+    kv_reserved: Vec<usize>,
 }
 
 impl Engine {
@@ -66,6 +100,13 @@ impl Engine {
         if cfg.batch == 0 {
             bail!("batch must be >= 1");
         }
+        let kv_layout = cfg.pool_layout(backend.model_config());
+        let kv_budget_pages = budget_pages(cfg.kv_budget_mb, &kv_layout);
+        backend.configure_kv_pool(KvPoolConfig {
+            key_dims: Some(kv_layout.key_dims),
+            page_slots: Some(kv_layout.page_slots),
+            max_pages: kv_budget_pages,
+        })?;
         backend.empty_cache(cfg.batch)?;
         let cap = backend.model_config().max_seq;
         let h2o = H2oPolicy::new(cfg.aqua.h2o_ratio, cfg.h2o_recent_window);
@@ -79,8 +120,27 @@ impl Engine {
             rng: Rng::new(cfg.seed ^ 0xE17),
             metrics: Metrics::default(),
             h2o,
+            kv_layout,
+            kv_budget_pages,
+            kv_reserved: vec![0; cfg.batch],
             cfg,
         })
+    }
+
+    /// Worst-case KV pages a request can grow to (whole prompt + every
+    /// generated token resident, before any H2O reclaim).
+    fn request_pages(&self, req: &GenRequest, max_seq: usize) -> usize {
+        self.kv_layout.worst_case_pages(req.prompt.len() + req.max_new_tokens, max_seq)
+    }
+
+    /// Engine-side view of currently resident KV bytes: Σ per-lane
+    /// page-granular [`LaneKv::live_bytes`]. Mirrors the backend pool's
+    /// gauges without a backend call (the equivalence is property-tested
+    /// in `tests/kvpool_props.rs`) — embedders can poll this between
+    /// steps.
+    pub fn kv_resident_bytes(&self) -> usize {
+        let (ps, bps) = (self.kv_layout.page_slots, self.kv_layout.bytes_per_slot());
+        self.kv.iter().map(|l| l.live_bytes(ps, bps)).sum()
     }
 
     /// Build the engine from a backend spec (`spec.build()` + `new`).
@@ -98,10 +158,48 @@ impl Engine {
         self.backend.model_config()
     }
 
-    /// Swap the AQUA knobs (takes effect on the next call; no recompile).
+    /// Swap the AQUA knobs (takes effect on the next call; no recompile —
+    /// with one exception: the AQUA-Memory knob `s_ratio` is a cache
+    /// *layout* property, so changing `mem_dims` rebuilds the KV pool and
+    /// drops cached context. Sweeps call this between batches, where every
+    /// lane is idle, so nothing is lost in practice).
     pub fn with_aqua(&mut self, aqua: AquaConfig) {
+        let d = self.backend.model_config().d_head;
+        let old_kd = self.cfg.aqua.mem_dims(d);
         self.cfg.aqua = aqua;
         self.h2o = H2oPolicy::new(aqua.h2o_ratio, self.cfg.h2o_recent_window);
+        if aqua.mem_dims(d) != old_kd {
+            if !self.lanes.is_idle() || !self.queue.is_empty() {
+                // Rebuilding would drop in-flight lanes' cached context and
+                // zero their budget reservations mid-decode. Keep the old
+                // pool: the new knobs still apply as call inputs, and a
+                // wider dim_keep against the narrower resident width fails
+                // loudly at the next write instead of silently corrupting.
+                crate::log_warn!(
+                    "with_aqua: memory-knob change with work in flight — kv pool rebuild skipped \
+                     (drain the engine first)"
+                );
+                return;
+            }
+            self.kv_layout = self.cfg.pool_layout(self.backend.model_config());
+            self.kv_budget_pages = budget_pages(self.cfg.kv_budget_mb, &self.kv_layout);
+            let pool_cfg = KvPoolConfig {
+                key_dims: Some(self.kv_layout.key_dims),
+                page_slots: Some(self.kv_layout.page_slots),
+                max_pages: self.kv_budget_pages,
+            };
+            let rebuilt = match self.backend.configure_kv_pool(pool_cfg) {
+                Ok(()) => self.backend.empty_cache(self.cfg.batch),
+                Err(e) => Err(e),
+            };
+            if let Err(e) = rebuilt {
+                crate::log_warn!("kv pool rebuild after with_aqua failed: {e:#}");
+            }
+            for kv in &mut self.kv {
+                kv.reset();
+            }
+            self.kv_reserved.iter_mut().for_each(|r| *r = 0);
+        }
     }
 
     pub fn submit(&mut self, req: GenRequest) {
@@ -157,7 +255,21 @@ impl Engine {
         let max_seq = self.backend.model_config().max_seq;
         while let Some(lane) = self.lanes.free_lane() {
             let Some(req) = self.queue.pop() else { break };
-            if req.prompt.is_empty() || req.prompt.len() + req.max_new_tokens > max_seq {
+            // Requests that can never run: longer than the KV capacity, or
+            // worst-case page growth beyond the whole page budget — each
+            // rejected with its own reason so clients know which knob to
+            // turn.
+            let need = self.request_pages(&req, max_seq);
+            let impossible = if req.prompt.is_empty()
+                || req.prompt.len() + req.max_new_tokens > max_seq
+            {
+                Some(FinishReason::PromptTooLong)
+            } else if self.kv_budget_pages.is_some_and(|budget| need > budget) {
+                Some(FinishReason::OverKvBudget)
+            } else {
+                None
+            };
+            if let Some(finish) = impossible {
                 let id = req.id;
                 self.results.insert(
                     id,
@@ -166,12 +278,25 @@ impl Engine {
                         tokens: vec![],
                         prompt_logprobs: vec![],
                         gen_logprobs: vec![],
-                        finish: FinishReason::PromptTooLong,
+                        finish,
                         ttft_us: 0,
                         total_us: 0,
                     },
                 );
                 continue;
+            }
+            // Memory-aware admission: the FIFO head waits until its
+            // worst-case pages fit next to the current occupants' — so a
+            // budget-capped pool can never stall mid-decode, for any
+            // backend (the sharded workers' per-worker caps are a
+            // backstop, this is the global bound).
+            if let Some(budget) = self.kv_budget_pages {
+                let reserved: usize = self.kv_reserved.iter().sum();
+                if reserved + need > budget {
+                    self.queue.push_front(req);
+                    break;
+                }
+                self.kv_reserved[lane] = need;
             }
             self.kv[lane].reset();
             self.lanes.occupy(lane, req.id);
@@ -224,6 +349,7 @@ impl Engine {
         let real_tokens: u64 = fed_now.iter().map(|&n| n as u64).sum();
         self.metrics.record_prefill(t0.elapsed(), real_tokens);
         self.metrics.record_kernels(&out.kernels, false);
+        self.metrics.record_kv(&out.kv, self.live_slots_total());
 
         let mut finish_list: Vec<usize> = vec![];
         for lane in 0..b {
@@ -319,6 +445,7 @@ impl Engine {
         let out = self.backend.decode(b, &tokens, &pos, &slot_mask, &knobs)?;
         self.metrics.record_decode(t0.elapsed(), live.iter().filter(|&&l| l).count() as u64);
         self.metrics.record_kernels(&out.kernels, true);
+        self.metrics.record_kv(&out.kv, self.live_slots_total());
 
         let mut finish_list: Vec<usize> = vec![];
         for lane in 0..b {
@@ -358,6 +485,12 @@ impl Engine {
     }
 
     // --------------------------------------------------------------- helpers
+
+    /// Currently attendable slots across all lanes (the numerator of the
+    /// page-utilization gauge).
+    fn live_slots_total(&self) -> u64 {
+        self.kv.iter().map(|l| l.live_slots() as u64).sum()
+    }
 
     fn flat_mask(&self) -> Vec<f32> {
         let s = self.backend.model_config().max_seq;
@@ -407,6 +540,9 @@ impl Engine {
         );
         self.lanes.release(lane);
         self.kv[lane].reset();
+        self.kv_reserved[lane] = 0;
+        // paged backends return the lane's KV pages to the pool here
+        self.backend.retire_lane(lane);
     }
 }
 

@@ -8,11 +8,13 @@
 //! * the valid-slot mask,
 //! * the H2O accumulated attention mass per slot.
 //!
-//! Eviction (h2o.rs) clears mask bits; the cache values stay in place but
-//! become unreachable — equivalent to freeing the slot in a paged
-//! allocator (the memory saving is reported analytically; slot *reuse*
-//! would need a write-index decoupled from the RoPE position, noted as an
-//! extension in DESIGN.md).
+//! Eviction (h2o.rs) clears mask bits; since the paged KV pool
+//! (`crate::kvpool`) the backend *actually frees* a page once every slot
+//! on it is dead and the write cursor has moved past it.
+//! [`LaneKv::resident_pages`] mirrors that rule engine-side, so
+//! [`LaneKv::live_bytes`] reports the bytes the pool really holds for the
+//! lane — not a cost-model projection (the two accountings are
+//! property-tested against each other in `tests/kvpool_props.rs`).
 
 /// State for one batch lane.
 #[derive(Debug, Clone)]
@@ -74,10 +76,31 @@ impl LaneKv {
         self.slot_mask[slot] = 0.0;
     }
 
-    /// KV bytes currently reachable (what a paged allocator would hold),
-    /// given per-slot cost.
-    pub fn live_bytes(&self, bytes_per_slot: usize) -> usize {
-        self.live_slots() * bytes_per_slot
+    /// Pages the backend's pool holds for this lane, given its page size:
+    /// every `page_slots` window that was written into (page index below
+    /// the cursor) and is either still growing (contains the cursor) or
+    /// retains at least one live slot. Mirrors `kvpool::LanePageTable`'s
+    /// lease/reclaim rules exactly.
+    pub fn resident_pages(&self, page_slots: usize) -> usize {
+        let ps = page_slots.max(1);
+        let mut pages = 0;
+        let mut p = 0;
+        while p * ps < self.len {
+            let lo = p * ps;
+            let hi = ((p + 1) * ps).min(self.capacity);
+            if hi > self.len || self.slot_mask[lo..hi].iter().any(|&m| m > 0.5) {
+                pages += 1;
+            }
+            p += 1;
+        }
+        pages
+    }
+
+    /// KV bytes the paged pool holds for this lane — page-granular
+    /// resident bytes, not a cost-model projection. `bytes_per_slot` is
+    /// `AquaConfig::kv_bytes_per_slot` (== `PoolLayout::bytes_per_slot`).
+    pub fn live_bytes(&self, page_slots: usize, bytes_per_slot: usize) -> usize {
+        self.resident_pages(page_slots) * page_slots.max(1) * bytes_per_slot
     }
 }
 
@@ -118,6 +141,32 @@ mod tests {
         l.evict(1);
         assert_eq!(l.live_slots(), 3);
         assert_eq!(l.slot_mask, vec![1.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn resident_pages_follow_cursor_and_holes() {
+        let mut l = LaneKv::new(32);
+        assert_eq!(l.resident_pages(8), 0, "nothing written, nothing resident");
+        l.commit_write(10); // pages 0 (full) and 1 (cursor)
+        assert_eq!(l.resident_pages(8), 2);
+        assert_eq!(l.live_bytes(8, 100), 2 * 8 * 100);
+        // kill all of page 0: fully written + fully dead → reclaimed
+        for s in 0..8 {
+            l.evict(s);
+        }
+        assert_eq!(l.resident_pages(8), 1);
+        // the cursor page stays resident even when fully dead
+        l.evict(8);
+        l.evict(9);
+        assert_eq!(l.resident_pages(8), 1);
+        // filling to capacity: page 0 stays reclaimed, pages 1-3 are live
+        l.commit_write(22);
+        assert_eq!(l.resident_pages(8), 3);
+        // all dead at a closed cursor → everything reclaimed
+        for s in 8..32 {
+            l.evict(s);
+        }
+        assert_eq!(l.resident_pages(8), 0);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::kvpool::KvPoolGauges;
 use crate::runtime::KernelCounters;
 
 #[derive(Debug, Default)]
@@ -25,6 +26,13 @@ struct Inner {
     /// also includes prefill), so per-decode timing stays honest on
     /// prefill-heavy workloads.
     decode_score_ns: u64,
+    /// Latest KV-pool gauges reported by the backend (see
+    /// `crate::kvpool::KvPoolGauges`) plus the peak resident bytes seen.
+    kv: KvPoolGauges,
+    kv_resident_peak: u64,
+    /// Live (attendable) slots at the last gauge sample — the
+    /// page-utilization numerator.
+    kv_live_slots: u64,
     wall_start: Option<std::time::Instant>,
 }
 
@@ -57,6 +65,24 @@ pub struct Snapshot {
     /// calls only (0 when the backend reports no timing, e.g. PJRT, or
     /// before the first decode).
     pub score_us_per_decode: f64,
+    /// KV bytes held by leased pages at the last backend call (0 for
+    /// backends without a paged pool, e.g. PJRT).
+    pub kv_resident_bytes: u64,
+    /// Peak of `kv_resident_bytes` over the engine's lifetime — the
+    /// memory-footprint headline (what a dense preallocation would have to
+    /// cover). In a fleet aggregate this is the *sum of per-engine peaks*:
+    /// the capacity that covers every pool even if all hit peak at once —
+    /// an upper bound, since staggered peaks may never coincide.
+    pub kv_resident_peak_bytes: u64,
+    /// Pages currently leased.
+    pub kv_pages_in_use: u64,
+    /// Live (attendable) slots per leased page slot, in [0, 1]: how much
+    /// of the resident bytes is actually reachable context vs page-
+    /// granularity slack and not-yet-reclaimed H2O holes.
+    pub kv_page_utilization: f64,
+    /// Lease attempts refused by the page budget (should stay 0 — the
+    /// admission gate sheds before the pool stalls).
+    pub kv_alloc_stalls: u64,
 }
 
 impl Metrics {
@@ -104,6 +130,16 @@ impl Metrics {
         }
     }
 
+    /// Record one backend call's KV-pool gauges (point-in-time, so the
+    /// latest sample wins) along with the engine's live-slot count at the
+    /// same instant.
+    pub fn record_kv(&self, g: &KvPoolGauges, live_slots: u64) {
+        let mut i = self.inner.lock().unwrap();
+        i.kv = *g;
+        i.kv_resident_peak = i.kv_resident_peak.max(g.resident_bytes);
+        i.kv_live_slots = live_slots;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         use crate::util::{mean, percentile};
         let i = self.inner.lock().unwrap();
@@ -138,6 +174,18 @@ impl Metrics {
             } else {
                 0.0
             },
+            kv_resident_bytes: i.kv.resident_bytes,
+            kv_resident_peak_bytes: i.kv_resident_peak,
+            kv_pages_in_use: i.kv.pages_in_use,
+            kv_page_utilization: {
+                let leased_slots = i.kv.pages_in_use * i.kv.page_slots;
+                if leased_slots > 0 {
+                    (i.kv_live_slots as f64 / leased_slots as f64).min(1.0)
+                } else {
+                    0.0
+                }
+            },
+            kv_alloc_stalls: i.kv.alloc_stalls,
         }
     }
 }
@@ -159,6 +207,17 @@ impl Snapshot {
             self.score_us_per_decode =
                 (self.score_us_per_decode * d0 + o.score_us_per_decode * d1) / (d0 + d1);
         }
+        // utilization combines weighted by leased pages; resident
+        // bytes/pages/stalls add (the engines hold memory concurrently)
+        let (p0, p1) = (self.kv_pages_in_use as f64, o.kv_pages_in_use as f64);
+        if p0 + p1 > 0.0 {
+            self.kv_page_utilization =
+                (self.kv_page_utilization * p0 + o.kv_page_utilization * p1) / (p0 + p1);
+        }
+        self.kv_resident_bytes += o.kv_resident_bytes;
+        self.kv_resident_peak_bytes += o.kv_resident_peak_bytes;
+        self.kv_pages_in_use += o.kv_pages_in_use;
+        self.kv_alloc_stalls += o.kv_alloc_stalls;
         self.p50_ttft_ms = self.p50_ttft_ms.max(o.p50_ttft_ms);
         self.p99_ttft_ms = self.p99_ttft_ms.max(o.p99_ttft_ms);
         self.requests_done += o.requests_done;
@@ -183,7 +242,8 @@ impl Snapshot {
             "requests={} gen_tokens={} prompt_tokens={} decode_calls={} prefill_calls={}\n\
              decode {:.2}s ({:.1} tok/s) prefill {:.2}s | wall {:.1} tok/s\n\
              ttft mean {:.2}ms p50 {:.2}ms p99 {:.2}ms | latency mean {:.2}ms | h2o_evictions={}\n\
-             kernels dense={} sparse={} packed={} | score path {:.2}µs/decode",
+             kernels dense={} sparse={} packed={} | score path {:.2}µs/decode\n\
+             kv resident {:.1}KiB (peak {:.1}KiB) pages={} util {:.0}% stalls={}",
             self.requests_done, self.tokens_generated, self.prompt_tokens,
             self.decode_calls, self.prefill_calls, self.decode_time_s,
             self.decode_tok_per_s, self.prefill_time_s, self.wall_tok_per_s,
@@ -191,6 +251,11 @@ impl Snapshot {
             self.mean_latency_ms, self.h2o_evictions,
             self.kernels.dense, self.kernels.sparse, self.kernels.packed,
             self.score_us_per_decode,
+            self.kv_resident_bytes as f64 / 1024.0,
+            self.kv_resident_peak_bytes as f64 / 1024.0,
+            self.kv_pages_in_use,
+            100.0 * self.kv_page_utilization,
+            self.kv_alloc_stalls,
         )
     }
 }
@@ -228,6 +293,48 @@ mod tests {
         assert!((s.decode_tok_per_s - 400.0).abs() < 1.0);
         assert!(s.mean_ttft_ms > 14.0 && s.mean_ttft_ms < 16.0);
         assert!(s.report().contains("packed=8"));
+    }
+
+    #[test]
+    fn kv_gauges_track_latest_and_peak() {
+        let m = Metrics::default();
+        let g1 = KvPoolGauges {
+            resident_bytes: 4096,
+            pages_in_use: 2,
+            page_slots: 16,
+            ..Default::default()
+        };
+        m.record_kv(&g1, 24);
+        let g2 = KvPoolGauges {
+            resident_bytes: 2048,
+            pages_in_use: 1,
+            page_slots: 16,
+            ..Default::default()
+        };
+        m.record_kv(&g2, 10);
+        let s = m.snapshot();
+        assert_eq!(s.kv_resident_bytes, 2048, "latest sample wins");
+        assert_eq!(s.kv_resident_peak_bytes, 4096, "peak survives");
+        assert_eq!(s.kv_pages_in_use, 1);
+        // 10 live slots over 1 page of 16 slots
+        assert!((s.kv_page_utilization - 10.0 / 16.0).abs() < 1e-9);
+        assert!(s.report().contains("kv resident"));
+
+        // fleet merge: bytes add, utilization weights by pages
+        let mut a = s.clone();
+        let other = Snapshot {
+            kv_resident_bytes: 1024,
+            kv_resident_peak_bytes: 1024,
+            kv_pages_in_use: 3,
+            kv_page_utilization: 1.0,
+            ..Default::default()
+        };
+        a.merge(&other);
+        assert_eq!(a.kv_resident_bytes, 3072);
+        assert_eq!(a.kv_resident_peak_bytes, 5120);
+        assert_eq!(a.kv_pages_in_use, 4);
+        let want = (10.0 / 16.0 + 3.0) / 4.0;
+        assert!((a.kv_page_utilization - want).abs() < 1e-9);
     }
 
     #[test]

@@ -37,6 +37,10 @@ pub enum FinishReason {
     Stop,
     /// Prompt longer than the KV capacity.
     PromptTooLong,
+    /// Worst-case KV page growth exceeds the engine's `kv_budget_mb` —
+    /// the request can never be admitted at this budget (raising the
+    /// budget, not shortening the prompt, is the fix).
+    OverKvBudget,
 }
 
 /// Completed request.

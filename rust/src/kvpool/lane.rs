@@ -1,0 +1,168 @@
+//! Per-lane page table: which pool page backs each `page_slots`-sized
+//! window of the lane's token positions.
+//!
+//! Leasing is on demand at the write path (`ensure`); freeing happens in
+//! two places — [`LanePageTable::reclaim`] returns pages the engine's H2O
+//! policy has fully evicted (no live slot in the mask, page fully behind
+//! the write cursor), and [`LanePageTable::release_all`] drops everything
+//! on lane retirement. Positions are monotonic within a lane's lifetime
+//! (the engine resets lanes between requests), so a reclaimed page is
+//! never written again by the same occupant.
+
+use anyhow::Result;
+
+use super::pool::PagePool;
+
+#[derive(Debug, Clone)]
+pub struct LanePageTable {
+    pages: Vec<Option<u32>>,
+    /// Tokens written so far (max written position + 1).
+    written: usize,
+}
+
+impl LanePageTable {
+    pub fn new(num_pages: usize) -> LanePageTable {
+        LanePageTable { pages: vec![None; num_pages], written: 0 }
+    }
+
+    /// The pool page backing page index `idx`, if leased.
+    pub fn page(&self, idx: usize) -> Option<u32> {
+        self.pages.get(idx).copied().flatten()
+    }
+
+    pub fn written(&self) -> usize {
+        self.written
+    }
+
+    pub fn leased_pages(&self) -> usize {
+        self.pages.iter().flatten().count()
+    }
+
+    /// Lease-on-demand: the page backing index `idx`, leasing a fresh one
+    /// from the pool on first touch.
+    pub fn ensure(&mut self, pool: &mut PagePool, idx: usize) -> Result<u32> {
+        match self.pages[idx] {
+            Some(id) => Ok(id),
+            None => {
+                let id = pool.lease()?;
+                self.pages[idx] = Some(id);
+                Ok(id)
+            }
+        }
+    }
+
+    /// Advance the write cursor over `pos`.
+    pub fn note_write(&mut self, pos: usize) {
+        self.written = self.written.max(pos + 1);
+    }
+
+    /// Free every leased page that is fully behind the write cursor and
+    /// has no live slot left in `slot_mask` (H2O evicted them all).
+    /// Returns the number of pages reclaimed.
+    pub fn reclaim(&mut self, pool: &mut PagePool, slot_mask: &[f32]) -> usize {
+        let ps = pool.layout().page_slots;
+        let mut freed = 0;
+        for (p, slot) in self.pages.iter_mut().enumerate() {
+            let Some(id) = *slot else { continue };
+            let lo = p * ps;
+            let hi = ((p + 1) * ps).min(slot_mask.len());
+            if hi > self.written {
+                // page still growing (contains or is beyond the cursor)
+                continue;
+            }
+            if slot_mask[lo..hi].iter().all(|&m| m <= 0.5) {
+                // the pool's leased bitmap guarantees this id is valid
+                pool.free(id).expect("reclaim freed a page the pool disowned");
+                *slot = None;
+                freed += 1;
+            }
+        }
+        freed
+    }
+
+    /// Lane retirement: free everything and rewind the cursor.
+    pub fn release_all(&mut self, pool: &mut PagePool) -> usize {
+        let mut freed = 0;
+        for slot in &mut self.pages {
+            if let Some(id) = slot.take() {
+                pool.free(id).expect("release freed a page the pool disowned");
+                freed += 1;
+            }
+        }
+        self.written = 0;
+        freed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pool::PoolLayout;
+    use super::*;
+
+    fn pool() -> PagePool {
+        let layout =
+            PoolLayout { page_slots: 4, key_dims: 2, head_dim: 4, layers: 1, kv_heads: 1 };
+        PagePool::new(layout, 8)
+    }
+
+    #[test]
+    fn ensure_leases_once_per_page() {
+        let mut pool = pool();
+        let mut t = LanePageTable::new(4);
+        let a = t.ensure(&mut pool, 0).unwrap();
+        let b = t.ensure(&mut pool, 0).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(pool.pages_in_use(), 1);
+        t.ensure(&mut pool, 2).unwrap();
+        assert_eq!(t.leased_pages(), 2);
+        assert_eq!(pool.pages_in_use(), 2);
+        assert!(t.page(1).is_none());
+    }
+
+    #[test]
+    fn reclaim_frees_only_dead_full_pages() {
+        let mut pool = pool();
+        let mut t = LanePageTable::new(4);
+        // write 10 positions: pages 0, 1 full; page 2 partial (cursor)
+        for pos in 0..10 {
+            t.ensure(&mut pool, pos / 4).unwrap();
+            t.note_write(pos);
+        }
+        assert_eq!(pool.pages_in_use(), 3);
+        let mut mask = vec![1.0f32; 16];
+        // kill all of page 0, half of page 1, all of page 2's written slots
+        for s in 0..4 {
+            mask[s] = 0.0;
+        }
+        mask[4] = 0.0;
+        mask[8] = 0.0;
+        mask[9] = 0.0;
+        let freed = t.reclaim(&mut pool, &mask);
+        assert_eq!(freed, 1, "only the fully dead, fully written page 0 frees");
+        assert!(t.page(0).is_none());
+        assert!(t.page(1).is_some(), "page 1 has a live slot");
+        assert!(t.page(2).is_some(), "cursor page never reclaimed");
+        assert_eq!(pool.pages_in_use(), 2);
+        // idempotent
+        assert_eq!(t.reclaim(&mut pool, &mask), 0);
+    }
+
+    #[test]
+    fn release_all_returns_everything() {
+        let mut pool = pool();
+        let mut t = LanePageTable::new(4);
+        for pos in 0..12 {
+            t.ensure(&mut pool, pos / 4).unwrap();
+            t.note_write(pos);
+        }
+        assert_eq!(t.written(), 12);
+        let freed = t.release_all(&mut pool);
+        assert_eq!(freed, 3);
+        assert_eq!(t.written(), 0);
+        assert_eq!(t.leased_pages(), 0);
+        assert_eq!(pool.pages_in_use(), 0);
+        // the lane can start over and recycle the same backing pages
+        t.ensure(&mut pool, 0).unwrap();
+        assert_eq!(pool.pages_hwm(), 3, "reuse must not grow the pool");
+    }
+}

@@ -1,0 +1,179 @@
+//! Paged KV-memory pool: lease-on-demand pages with AQUA-truncated
+//! resident keys.
+//!
+//! Before this subsystem every lane preallocated a dense
+//! `[L, n_kv, d, max_seq]` key cache and `[L, n_kv, max_seq, d]` value
+//! cache regardless of how long the sequence actually ran, and
+//! `AquaConfig::mem_dims` (the paper's AQUA-Memory knob, `kv_keep =
+//! 1 - S_ratio`) was only cost-model arithmetic — the backends allocated
+//! full-width keys no matter what. The pool makes both memory levers real:
+//!
+//! * **Paging** — a lane's KV storage is a list of fixed-size *pages*
+//!   ([`PagePool`], [`LanePageTable`]) leased on demand as the sequence
+//!   grows (prefill chunks, decode steps) and returned to the free list
+//!   when H2O eviction kills every slot on a page or the lane retires.
+//!   Resident bytes track actual context, not `max_seq`.
+//! * **Truncated resident keys** — each page stores keys in the same
+//!   dim-major packed layout the PR 2 score kernels consume, but only the
+//!   leading [`PoolLayout::key_dims`] projected dimensions (`mem_dims(d)`)
+//!   are resident; values stay full width. With `kv_keep = 1.0` the layout
+//!   is byte-for-byte the dense dim-major cache cut into pages, and the
+//!   score path is bit-identical to the pre-pool packed kernels.
+//!
+//! One page holds `page_slots` consecutive token positions of one lane
+//! across *all* layers and KV heads:
+//!
+//! ```text
+//! page = [ K: (L, n_kv, key_dims, page_slots) dim-major
+//!        | V: (L, n_kv, page_slots, d)        row-major ]
+//! ```
+//!
+//! so the packed kernel streams `key_dims`-contiguous runs of
+//! `page_slots` floats per (layer, head) exactly as it streamed
+//! `max_seq`-strided runs before — compute and memory traffic both scale
+//! with the AQUA knobs.
+//!
+//! The pool is the *backend-side* half of the memory story. The
+//! *admission-side* half lives in `registry::Deployment`: a deployment's
+//! `kv_budget_mb` caps [`PagePool::max_pages`], and submits reserve their
+//! worst-case page growth up front (shedding with a distinct
+//! memory-pressure 429 when the pool cannot cover it), so a leased page is
+//! always available when the backend asks — lease failure is a bug
+//! surfaced as a deterministic error, never an over-allocation.
+
+pub mod lane;
+pub mod pool;
+
+pub use lane::LanePageTable;
+pub use pool::{PagePool, PoolLayout};
+
+/// Default page size in token slots. Matches the native prefill chunk so
+/// one prefill call touches at most two pages per lane.
+pub const DEFAULT_PAGE_SLOTS: usize = 16;
+
+/// Point-in-time pool gauges, reported by backends in every `StepOut` so
+/// they flow through engine metrics to `/stats` and `/metrics` without a
+/// cross-thread query path (the sharded backend just sums its workers').
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct KvPoolGauges {
+    /// Bytes held by currently leased pages (`pages_in_use · page_bytes`)
+    /// — the "resident KV" headline the AQUA-Memory claim is about.
+    pub resident_bytes: u64,
+    /// Bytes of backing storage ever grown (`pages_hwm · page_bytes`);
+    /// freed pages stay allocated on the free list for reuse.
+    pub backing_bytes: u64,
+    /// Pages currently leased.
+    pub pages_in_use: u64,
+    /// High-water mark of distinct pages ever leased.
+    pub pages_hwm: u64,
+    /// Token slots per page (0 when no pool is configured).
+    pub page_slots: u64,
+    /// Bytes per page (0 when no pool is configured).
+    pub page_bytes: u64,
+    /// Cumulative successful leases.
+    pub leases: u64,
+    /// Cumulative frees.
+    pub frees: u64,
+    /// Cumulative lease attempts refused because `max_pages` was reached
+    /// (admission should keep this at 0; nonzero means the budget gate and
+    /// the pool disagree).
+    pub alloc_stalls: u64,
+}
+
+impl KvPoolGauges {
+    /// Fold another backend shard's gauges in (the sharded backend's
+    /// workers each own an independent sub-pool).
+    pub fn merge(&mut self, o: &KvPoolGauges) {
+        self.resident_bytes += o.resident_bytes;
+        self.backing_bytes += o.backing_bytes;
+        self.pages_in_use += o.pages_in_use;
+        self.pages_hwm += o.pages_hwm;
+        self.page_slots = self.page_slots.max(o.page_slots);
+        self.page_bytes = self.page_bytes.max(o.page_bytes);
+        self.leases += o.leases;
+        self.frees += o.frees;
+        self.alloc_stalls += o.alloc_stalls;
+    }
+}
+
+/// How a backend should shape its KV pool. Applied at the next
+/// `empty_cache` (the pool is a per-batch allocation, like the dense
+/// caches it replaces).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvPoolConfig {
+    /// Resident projected key dims per slot (`AquaConfig::mem_dims`);
+    /// `None` = full head width (no truncation).
+    pub key_dims: Option<usize>,
+    /// Token slots per page; `None` = [`DEFAULT_PAGE_SLOTS`].
+    pub page_slots: Option<usize>,
+    /// Hard cap on leased pages (the deployment's `kv_budget_mb` in page
+    /// units); `None` = worst case (`batch · ceil(max_seq / page_slots)`),
+    /// which can never stall.
+    pub max_pages: Option<usize>,
+}
+
+/// Pages a `kv_budget_mb` megabyte budget buys under `layout`; `None` when
+/// the budget is unlimited (<= 0). Shared by the engine (pool cap) and the
+/// registry's admission gate so the two can never disagree.
+pub fn budget_pages(kv_budget_mb: f64, layout: &PoolLayout) -> Option<usize> {
+    if kv_budget_mb <= 0.0 {
+        return None;
+    }
+    let bytes = kv_budget_mb * (1 << 20) as f64;
+    Some((bytes / layout.page_bytes() as f64).floor() as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> PoolLayout {
+        PoolLayout { page_slots: 16, key_dims: 4, head_dim: 8, layers: 2, kv_heads: 2 }
+    }
+
+    #[test]
+    fn budget_pages_floor_and_unlimited() {
+        let l = layout();
+        // page = 2*2*16*(4+8)*4 = 3072 bytes
+        assert_eq!(l.page_bytes(), 3072);
+        assert_eq!(budget_pages(0.0, &l), None);
+        assert_eq!(budget_pages(-1.0, &l), None);
+        assert_eq!(budget_pages(1.0, &l), Some((1 << 20) / 3072)); // 341
+        // a budget smaller than one page buys zero pages (sheds everything
+        // deterministically rather than over-allocating)
+        assert_eq!(budget_pages(0.001, &l), Some(0));
+    }
+
+    #[test]
+    fn gauges_merge_sums_and_keeps_shape() {
+        let mut a = KvPoolGauges {
+            resident_bytes: 100,
+            backing_bytes: 200,
+            pages_in_use: 1,
+            pages_hwm: 2,
+            page_slots: 16,
+            page_bytes: 100,
+            leases: 3,
+            frees: 1,
+            alloc_stalls: 0,
+        };
+        let b = KvPoolGauges {
+            resident_bytes: 50,
+            backing_bytes: 100,
+            pages_in_use: 1,
+            pages_hwm: 1,
+            page_slots: 16,
+            page_bytes: 100,
+            leases: 1,
+            frees: 0,
+            alloc_stalls: 2,
+        };
+        a.merge(&b);
+        assert_eq!(a.resident_bytes, 150);
+        assert_eq!(a.pages_in_use, 2);
+        assert_eq!(a.pages_hwm, 3);
+        assert_eq!(a.page_slots, 16);
+        assert_eq!(a.leases, 4);
+        assert_eq!(a.alloc_stalls, 2);
+    }
+}

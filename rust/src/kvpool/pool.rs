@@ -1,0 +1,251 @@
+//! The block allocator: fixed-size KV pages with a free list.
+//!
+//! Backing storage grows lazily — the data vector extends by one page at a
+//! time up to `max_pages`, so a pool sized for the worst case costs only
+//! what the high-water mark of concurrent context actually touched.
+//! Freed pages go on a free list and are recycled (zeroed at lease) before
+//! the backing vector grows again.
+
+use anyhow::{bail, Result};
+
+use super::KvPoolGauges;
+
+/// Geometry of one page (see the module docs for the memory layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolLayout {
+    /// Token slots per page.
+    pub page_slots: usize,
+    /// Resident projected key dims per slot (`mem_dims(d)`, <= head_dim).
+    pub key_dims: usize,
+    /// Full head width `d` (values are stored at this width).
+    pub head_dim: usize,
+    pub layers: usize,
+    pub kv_heads: usize,
+}
+
+impl PoolLayout {
+    /// f32 elements per page: K region + V region.
+    pub fn page_elems(&self) -> usize {
+        self.layers * self.kv_heads * self.page_slots * (self.key_dims + self.head_dim)
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.page_elems() * std::mem::size_of::<f32>()
+    }
+
+    /// Resident KV bytes per token slot (`page_bytes / page_slots`): the
+    /// quantity `AquaConfig::kv_bytes_per_slot` models.
+    pub fn bytes_per_slot(&self) -> usize {
+        self.layers * self.kv_heads * (self.key_dims + self.head_dim) * 4
+    }
+
+    /// Offset of the (layer, kv-head) dim-major key block inside a page;
+    /// dim `i`, local slot `s` live at `key_off + i * page_slots + s`.
+    pub fn key_off(&self, l: usize, g: usize) -> usize {
+        (l * self.kv_heads + g) * self.key_dims * self.page_slots
+    }
+
+    /// Offset of the (layer, kv-head, local slot) value row (head_dim
+    /// contiguous floats).
+    pub fn val_off(&self, l: usize, g: usize, local: usize) -> usize {
+        let v_base = self.layers * self.kv_heads * self.key_dims * self.page_slots;
+        v_base + ((l * self.kv_heads + g) * self.page_slots + local) * self.head_dim
+    }
+
+    /// Pages needed to hold `slots` token positions (ceiling).
+    pub fn pages_for_slots(&self, slots: usize) -> usize {
+        slots.div_ceil(self.page_slots)
+    }
+
+    /// Worst-case pages a request with `want_slots = prompt + max_new`
+    /// can grow to on a `max_seq`-capacity lane — the **single** formula
+    /// the engine's memory-aware admission and the registry's reservation
+    /// gate both use (they must never disagree).
+    pub fn worst_case_pages(&self, want_slots: usize, max_seq: usize) -> usize {
+        self.pages_for_slots(want_slots.min(max_seq))
+    }
+}
+
+/// Page allocator with a free list. Page ids are dense indices into the
+/// backing vector; a leased bitmap catches double-frees and stale ids.
+pub struct PagePool {
+    layout: PoolLayout,
+    max_pages: usize,
+    data: Vec<f32>,
+    free: Vec<u32>,
+    leased: Vec<bool>,
+    leases: u64,
+    frees: u64,
+    stalls: u64,
+}
+
+impl PagePool {
+    pub fn new(layout: PoolLayout, max_pages: usize) -> PagePool {
+        PagePool {
+            layout,
+            max_pages,
+            data: vec![],
+            free: vec![],
+            leased: vec![],
+            leases: 0,
+            frees: 0,
+            stalls: 0,
+        }
+    }
+
+    pub fn layout(&self) -> &PoolLayout {
+        &self.layout
+    }
+
+    pub fn max_pages(&self) -> usize {
+        self.max_pages
+    }
+
+    /// Lease one zeroed page: recycle from the free list, else grow the
+    /// backing vector. Errors (after counting an alloc stall) when
+    /// `max_pages` are already leased — the admission layer's reservation
+    /// gate exists so this never fires in a correctly configured
+    /// deployment.
+    pub fn lease(&mut self) -> Result<u32> {
+        let elems = self.layout.page_elems();
+        if let Some(id) = self.free.pop() {
+            let base = id as usize * elems;
+            self.data[base..base + elems].fill(0.0);
+            self.leased[id as usize] = true;
+            self.leases += 1;
+            return Ok(id);
+        }
+        let hwm = self.leased.len();
+        if hwm >= self.max_pages {
+            self.stalls += 1;
+            bail!(
+                "kv pool exhausted: {} pages leased of max {} (budget too small for this load)",
+                self.pages_in_use(),
+                self.max_pages
+            );
+        }
+        self.data.resize((hwm + 1) * elems, 0.0);
+        self.leased.push(true);
+        self.leases += 1;
+        Ok(hwm as u32)
+    }
+
+    /// Return a page to the free list. Double-frees and unknown ids error.
+    pub fn free(&mut self, id: u32) -> Result<()> {
+        match self.leased.get_mut(id as usize) {
+            Some(l @ true) => {
+                *l = false;
+                self.free.push(id);
+                self.frees += 1;
+                Ok(())
+            }
+            Some(false) => bail!("kv pool: double free of page {id}"),
+            None => bail!("kv pool: free of unknown page {id}"),
+        }
+    }
+
+    pub fn page(&self, id: u32) -> &[f32] {
+        let elems = self.layout.page_elems();
+        let base = id as usize * elems;
+        &self.data[base..base + elems]
+    }
+
+    pub fn page_mut(&mut self, id: u32) -> &mut [f32] {
+        let elems = self.layout.page_elems();
+        let base = id as usize * elems;
+        &mut self.data[base..base + elems]
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.leased.len() - self.free.len()
+    }
+
+    /// Distinct pages ever leased (the backing vector's size in pages).
+    pub fn pages_hwm(&self) -> usize {
+        self.leased.len()
+    }
+
+    /// Bytes held by currently leased pages.
+    pub fn resident_bytes(&self) -> usize {
+        self.pages_in_use() * self.layout.page_bytes()
+    }
+
+    pub fn gauges(&self) -> KvPoolGauges {
+        KvPoolGauges {
+            resident_bytes: self.resident_bytes() as u64,
+            backing_bytes: (self.pages_hwm() * self.layout.page_bytes()) as u64,
+            pages_in_use: self.pages_in_use() as u64,
+            pages_hwm: self.pages_hwm() as u64,
+            page_slots: self.layout.page_slots as u64,
+            page_bytes: self.layout.page_bytes() as u64,
+            leases: self.leases,
+            frees: self.frees,
+            alloc_stalls: self.stalls,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> PoolLayout {
+        PoolLayout { page_slots: 4, key_dims: 2, head_dim: 4, layers: 1, kv_heads: 1 }
+    }
+
+    #[test]
+    fn layout_offsets_tile_the_page() {
+        let l = PoolLayout { page_slots: 8, key_dims: 3, head_dim: 4, layers: 2, kv_heads: 2 };
+        // K region: 2*2*3*8 = 96 elems, V region: 2*2*8*4 = 128 elems
+        assert_eq!(l.page_elems(), 96 + 128);
+        assert_eq!(l.page_bytes(), (96 + 128) * 4);
+        assert_eq!(l.bytes_per_slot() * l.page_slots, l.page_bytes());
+        assert_eq!(l.key_off(0, 0), 0);
+        assert_eq!(l.key_off(1, 1), 3 * 3 * 8);
+        assert_eq!(l.val_off(0, 0, 0), 96);
+        // last value row ends exactly at the page boundary
+        assert_eq!(l.val_off(1, 1, 7) + l.head_dim, l.page_elems());
+        assert_eq!(l.pages_for_slots(0), 0);
+        assert_eq!(l.pages_for_slots(8), 1);
+        assert_eq!(l.pages_for_slots(9), 2);
+    }
+
+    #[test]
+    fn lease_free_recycles_without_growth() {
+        let mut p = PagePool::new(layout(), 4);
+        let a = p.lease().unwrap();
+        let b = p.lease().unwrap();
+        assert_eq!(p.pages_in_use(), 2);
+        assert_eq!(p.pages_hwm(), 2);
+        p.page_mut(a)[0] = 7.0;
+        p.free(a).unwrap();
+        assert_eq!(p.pages_in_use(), 1);
+        let c = p.lease().unwrap();
+        assert_eq!(c, a, "free list recycles before growing");
+        assert_eq!(p.pages_hwm(), 2, "recycling must not grow backing");
+        assert_eq!(p.page(c)[0], 0.0, "recycled pages are zeroed");
+        assert_ne!(b, c);
+        assert_eq!(p.resident_bytes(), 2 * p.layout().page_bytes());
+    }
+
+    #[test]
+    fn exhaustion_errors_and_counts_stalls() {
+        let mut p = PagePool::new(layout(), 2);
+        p.lease().unwrap();
+        p.lease().unwrap();
+        assert!(p.lease().is_err());
+        assert!(p.lease().is_err());
+        assert_eq!(p.gauges().alloc_stalls, 2);
+        assert_eq!(p.pages_in_use(), 2);
+    }
+
+    #[test]
+    fn double_free_and_bad_id_error() {
+        let mut p = PagePool::new(layout(), 2);
+        let a = p.lease().unwrap();
+        p.free(a).unwrap();
+        assert!(p.free(a).is_err(), "double free must error");
+        assert!(p.free(99).is_err(), "unknown id must error");
+        assert_eq!(p.gauges().frees, 1);
+    }
+}

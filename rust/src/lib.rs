@@ -28,6 +28,9 @@
 //! * [`aqua`] — the paper's algorithm in native rust: policy knobs +
 //!   cost model (§5), sparse/dense score kernels, information-retention
 //!   loss (§6.2), magnitude/PCA overlap (§7, Fig. 5).
+//! * [`kvpool`] — paged KV-memory pool: block/page allocator with free
+//!   lists, lane page tables, AQUA-truncated resident keys (the memory
+//!   half of the paper's claim made real — see its module docs).
 //! * [`coordinator`] — engine (backend-generic), scheduler, batcher,
 //!   KV cache, H2O.
 //! * [`registry`] — multi-model fleet: named deployments (engine thread +
@@ -45,6 +48,7 @@ pub mod aqua;
 pub mod bench;
 pub mod coordinator;
 pub mod eval;
+pub mod kvpool;
 pub mod model;
 pub mod registry;
 pub mod runtime;

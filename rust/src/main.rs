@@ -37,7 +37,7 @@ use cli::Args;
 
 const USAGE: &str = "usage: aqua <serve|generate|eval|table1|table2|table3|table7|fig2|fig3|fig5|ablation|breakeven|benchcheck|selftest> [flags]
 common flags: --backend auto|native|sharded|pjrt --threads N --seed N --artifacts DIR --model NAME --k-ratio R --s-ratio R --h2o-ratio R --batch N --items N --fast
-serve fleet: --fleet fleet.json | repeated --model name=N,backend=B,k=R,threads=T,batch=B,queue=Q [--default-model N] (plain --model NAME serves one deployment named 'default')";
+serve fleet: --fleet fleet.json | repeated --model name=N,backend=B,k=R,threads=T,batch=B,queue=Q,kv_mb=M [--default-model N] (plain --model NAME [--kv-budget-mb M] serves one deployment named 'default'; kv_mb caps resident KV pages — over-budget requests shed with a memory-pressure 429)";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -108,6 +108,7 @@ fn fleet_registry(args: &Args, arts_dir: &str) -> Result<ModelRegistry> {
             threads: args.usize("threads", 4)?,
             batch: args.usize("batch", 4)?,
             max_inflight: args.usize("queue", aqua_serve::registry::DEFAULT_MAX_INFLIGHT)?,
+            kv_budget_mb: args.f64("kv-budget-mb", 0.0)?,
             aqua: aqua_from(args)?,
         })?;
     } else {
@@ -273,6 +274,17 @@ fn run(argv: &[String]) -> Result<()> {
                 aqua_serve::bench::report::validate_serving(&doc, args.switch("strict"))
                     .with_context(|| format!("validating {spath}"))?;
                 println!("{spath} ok (serving schema)");
+            }
+            // BENCH_kvmem.json (kvmem bench): same convention.
+            let kdefault = aqua_serve::bench::report::kvmem_path().to_string();
+            let kpath = args.str("kvmem-path", &kdefault);
+            if std::path::Path::new(&kpath).exists() {
+                let text = std::fs::read_to_string(&kpath)?;
+                let doc = aqua_serve::util::json::Json::parse(&text)
+                    .with_context(|| format!("parsing {kpath}"))?;
+                aqua_serve::bench::report::validate_kvmem(&doc, args.switch("strict"))
+                    .with_context(|| format!("validating {kpath}"))?;
+                println!("{kpath} ok (kvmem schema)");
             }
             Ok(())
         }

@@ -15,6 +15,16 @@
 //!   many requests under open-loop overload. Submits now reserve one of
 //!   `max_inflight` slots or shed (HTTP 429), with queue-depth/shed
 //!   counters surfaced through `/metrics`.
+//!
+//! With the paged KV pool, admission is also **memory-aware**: a
+//! deployment with `kv_budget_mb > 0` sizes its engine's page pool from
+//! the budget, and every submit reserves its worst-case page growth
+//! (`ceil((prompt + max_new) / page_slots)`) up front. When the pool
+//! cannot cover it the request sheds with [`ShedReason::KvMemory`] — a
+//! *distinct* 429 from the `max_inflight` capacity shed — instead of the
+//! backend ever stalling mid-decode or over-allocating. Reservations are
+//! conservative (H2O eviction returns pages early), so a reservation that
+//! fits can never fail at the pool.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -27,6 +37,7 @@ use super::spec::DeploymentSpec;
 use crate::coordinator::engine::{Engine, EngineCmd, EngineHandle};
 use crate::coordinator::metrics::Snapshot;
 use crate::coordinator::{GenRequest, GenResult};
+use crate::kvpool::budget_pages;
 
 /// Default orphan TTL: results not picked up within this window are swept
 /// (the HTTP worker's deadline is shorter, so a live client never loses a
@@ -71,12 +82,28 @@ impl ResultStore {
     }
 }
 
+/// Why a submit was shed (distinct HTTP statuses/bodies and `/metrics`
+/// counters, so clients can tell retryable from never-admittable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// `max_inflight` requests already in flight (retryable; HTTP 429).
+    Capacity,
+    /// Transient memory pressure: in-flight reservations leave too few KV
+    /// pages *right now* — pages free as occupants finish (retryable;
+    /// HTTP 429).
+    KvMemory,
+    /// Permanent at this budget: the request's worst-case KV growth alone
+    /// exceeds the whole `kv_budget_mb` page budget — a retry can never
+    /// succeed (HTTP 413).
+    OverBudget,
+}
+
 /// Admission outcome for one submit attempt.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Admission {
     Accepted,
-    /// The bounded queue is full — request shed (HTTP 429).
-    Shed,
+    /// Request shed (HTTP 429); the reason picks the 429 body and counter.
+    Shed(ShedReason),
 }
 
 /// Point-in-time admission counters for `/metrics`.
@@ -86,8 +113,16 @@ pub struct AdmissionStats {
     pub queue_depth: u64,
     /// Total admitted since launch.
     pub submitted: u64,
-    /// Total shed at admission since launch.
+    /// Total shed at admission since launch (capacity + memory).
     pub shed: u64,
+    /// Sheds due to the `max_inflight` bound.
+    pub shed_capacity: u64,
+    /// Sheds due to KV memory pressure (`kv_budget_mb`).
+    pub shed_memory: u64,
+    /// KV pages currently reserved by in-flight requests (worst case).
+    pub kv_reserved_pages: u64,
+    /// Page budget (`0` = unlimited).
+    pub kv_pages_total: u64,
     /// Orphaned results evicted by the TTL sweep since launch.
     pub swept_results: u64,
 }
@@ -104,6 +139,16 @@ pub struct Deployment {
     results: Arc<ResultStore>,
     next_id: AtomicU64,
     in_flight: Arc<AtomicU64>,
+    /// Page budget from `kv_budget_mb` (None = unlimited). Mirrors the
+    /// engine's pool cap exactly (same `budget_pages` arithmetic).
+    kv_pages_total: Option<u64>,
+    /// Pool geometry (worst-case reservation sizing — the same
+    /// `EngineConfig::pool_layout` the engine's pool derives from).
+    kv_layout: crate::kvpool::PoolLayout,
+    /// Worst-case pages reserved by in-flight requests.
+    kv_reserved: Arc<AtomicU64>,
+    /// Per-request reservation sizes, released by the pump on completion.
+    kv_reservations: Arc<Mutex<HashMap<u64, u64>>>,
     /// Submit calls currently between their draining-check and their
     /// channel send. `shutdown` waits for this to reach zero after
     /// setting `draining`, so an accepted request's `Submit` is always
@@ -112,7 +157,8 @@ pub struct Deployment {
     /// silently dropped by the drain).
     submitting: AtomicU64,
     submitted: AtomicU64,
-    shed: AtomicU64,
+    shed_capacity: AtomicU64,
+    shed_memory: AtomicU64,
     swept: Arc<AtomicU64>,
     ttl_ms: Arc<AtomicU64>,
     draining: AtomicBool,
@@ -128,9 +174,26 @@ impl Deployment {
         spec.validate()?;
         let bspec = spec.backend_spec(arts_dir)?;
         let backend_kind = bspec.name();
-        let max_seq = bspec.model_config().max_seq;
-        let recipe = bspec.recipe();
+        let mc = bspec.model_config();
+        let max_seq = mc.max_seq;
         let ecfg = spec.engine_config();
+        // Derive the page geometry through the *same* EngineConfig helper
+        // the engine's pool cap uses, so the admission gate and the pool
+        // can never disagree on page arithmetic.
+        let kv_layout = ecfg.pool_layout(mc);
+        let kv_pages_total = budget_pages(ecfg.kv_budget_mb, &kv_layout).map(|p| p as u64);
+        if kv_pages_total == Some(0) {
+            // would shed 100% of traffic while /metrics shows the same
+            // kv_pages_total = 0 an *unlimited* deployment reports —
+            // surface the misconfiguration at launch instead
+            bail!(
+                "deployment '{}': kv_budget_mb {} buys zero {}-byte KV pages",
+                spec.name,
+                spec.kv_budget_mb,
+                kv_layout.page_bytes()
+            );
+        }
+        let recipe = bspec.recipe();
         let EngineHandle { cmd_tx, result_rx, join } =
             EngineHandle::spawn(move || Engine::new(recipe.build()?, ecfg));
 
@@ -138,8 +201,11 @@ impl Deployment {
         let in_flight = Arc::new(AtomicU64::new(0));
         let swept = Arc::new(AtomicU64::new(0));
         let ttl_ms = Arc::new(AtomicU64::new(RESULT_TTL.as_millis() as u64));
+        let kv_reserved = Arc::new(AtomicU64::new(0));
+        let kv_reservations = Arc::new(Mutex::new(HashMap::new()));
 
-        // Result pump: engine thread -> timestamped store. Sweeps on every
+        // Result pump: engine thread -> timestamped store. Releases the
+        // request's worst-case KV page reservation, sweeps on every
         // delivery and on an idle tick, so orphans die even when traffic
         // stops. Exits when the engine thread drops its sender.
         let pump = {
@@ -147,10 +213,15 @@ impl Deployment {
             let in_flight = in_flight.clone();
             let swept = swept.clone();
             let ttl_ms = ttl_ms.clone();
+            let kv_reserved = kv_reserved.clone();
+            let kv_reservations: Arc<Mutex<HashMap<u64, u64>>> = kv_reservations.clone();
             std::thread::spawn(move || loop {
                 let ttl = Duration::from_millis(ttl_ms.load(Ordering::Relaxed));
                 match result_rx.recv_timeout(SWEEP_TICK) {
                     Ok(res) => {
+                        if let Some(pages) = kv_reservations.lock().unwrap().remove(&res.id) {
+                            kv_reserved.fetch_sub(pages, Ordering::SeqCst);
+                        }
                         in_flight.fetch_sub(1, Ordering::SeqCst);
                         results.insert(res);
                         swept.fetch_add(results.sweep(ttl) as u64, Ordering::Relaxed);
@@ -171,9 +242,14 @@ impl Deployment {
             results,
             next_id: AtomicU64::new(1),
             in_flight,
+            kv_pages_total,
+            kv_layout,
+            kv_reserved,
+            kv_reservations,
             submitting: AtomicU64::new(0),
             submitted: AtomicU64::new(0),
-            shed: AtomicU64::new(0),
+            shed_capacity: AtomicU64::new(0),
+            shed_memory: AtomicU64::new(0),
             swept,
             ttl_ms,
             draining: AtomicBool::new(false),
@@ -212,6 +288,14 @@ impl Deployment {
         out
     }
 
+    /// Worst-case KV pages this request can grow to — the shared
+    /// `PoolLayout::worst_case_pages` formula `Engine::request_pages` also
+    /// uses, so gate and engine cannot drift.
+    fn worst_case_pages(&self, req: &GenRequest) -> u64 {
+        let want = req.prompt.len() + req.max_new_tokens;
+        self.kv_layout.worst_case_pages(want, self.max_seq) as u64
+    }
+
     fn submit_gated(&self, req: GenRequest) -> Result<Admission> {
         if self.draining.load(Ordering::SeqCst) {
             bail!("model '{}' is draining", self.spec.name);
@@ -222,8 +306,8 @@ impl Deployment {
         let mut cur = self.in_flight.load(Ordering::SeqCst);
         loop {
             if cur >= limit {
-                self.shed.fetch_add(1, Ordering::SeqCst);
-                return Ok(Admission::Shed);
+                self.shed_capacity.fetch_add(1, Ordering::SeqCst);
+                return Ok(Admission::Shed(ShedReason::Capacity));
             }
             match self.in_flight.compare_exchange(
                 cur,
@@ -235,8 +319,43 @@ impl Deployment {
                 Err(seen) => cur = seen,
             }
         }
+        // Reserve the worst-case page growth against the KV budget (same
+        // CAS discipline); rolled back with the in-flight slot on failure.
+        let need = self.worst_case_pages(&req);
+        if let Some(total) = self.kv_pages_total {
+            if need > total {
+                // permanently over budget: no amount of retrying helps
+                self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                self.shed_memory.fetch_add(1, Ordering::SeqCst);
+                return Ok(Admission::Shed(ShedReason::OverBudget));
+            }
+            let mut cur = self.kv_reserved.load(Ordering::SeqCst);
+            loop {
+                if cur + need > total {
+                    self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                    self.shed_memory.fetch_add(1, Ordering::SeqCst);
+                    return Ok(Admission::Shed(ShedReason::KvMemory));
+                }
+                match self.kv_reserved.compare_exchange(
+                    cur,
+                    cur + need,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+            self.kv_reservations.lock().unwrap().insert(req.id, need);
+        }
+        let id = req.id;
         if self.cmd_tx.send(EngineCmd::Submit(req)).is_err() {
             self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            if self.kv_pages_total.is_some() {
+                if let Some(pages) = self.kv_reservations.lock().unwrap().remove(&id) {
+                    self.kv_reserved.fetch_sub(pages, Ordering::SeqCst);
+                }
+            }
             bail!("engine thread for model '{}' is gone", self.spec.name);
         }
         self.submitted.fetch_add(1, Ordering::SeqCst);
@@ -273,10 +392,16 @@ impl Deployment {
     }
 
     pub fn admission_stats(&self) -> AdmissionStats {
+        let shed_capacity = self.shed_capacity.load(Ordering::SeqCst);
+        let shed_memory = self.shed_memory.load(Ordering::SeqCst);
         AdmissionStats {
             queue_depth: self.in_flight.load(Ordering::SeqCst),
             submitted: self.submitted.load(Ordering::SeqCst),
-            shed: self.shed.load(Ordering::SeqCst),
+            shed: shed_capacity + shed_memory,
+            shed_capacity,
+            shed_memory,
+            kv_reserved_pages: self.kv_reserved.load(Ordering::SeqCst),
+            kv_pages_total: self.kv_pages_total.unwrap_or(0),
             swept_results: self.swept.load(Ordering::Relaxed),
         }
     }
@@ -379,6 +504,60 @@ mod tests {
         dep.shutdown().unwrap();
         dep.shutdown().unwrap(); // idempotent
         assert!(dep.submit(GenRequest::new(99, vec![1], 1)).is_err(), "drained rejects submits");
+    }
+
+    #[test]
+    fn memory_pressure_sheds_with_distinct_reasons() {
+        // tiny model: page = 16 slots · 2 layers · 2 kv-heads · (8+8) dims
+        // · 4 B = 4096 B; a 0.01 MiB budget buys exactly 2 pages
+        let spec =
+            DeploymentSpec::parse_kv("name=mem,backend=native,seed=1,batch=2,queue=8,kv_mb=0.01")
+                .unwrap();
+        let dep = Deployment::launch(spec, "no-such-dir").unwrap();
+        assert_eq!(dep.admission_stats().kv_pages_total, 2);
+
+        // worst case 64 slots = 4 pages > the entire 2-page budget →
+        // permanent shed (no retry can succeed)
+        let big = GenRequest::new(dep.fresh_id(), vec![65; 34], 30);
+        assert_eq!(dep.submit(big).unwrap(), Admission::Shed(ShedReason::OverBudget));
+
+        // a 2-page occupant exhausts the budget; a 1-page request then
+        // sheds *transiently* while the occupant runs
+        let id = dep.fresh_id();
+        assert_eq!(
+            dep.submit(GenRequest::new(id, vec![65; 10], 20)).unwrap(),
+            Admission::Accepted
+        );
+        let second = GenRequest::new(dep.fresh_id(), vec![65; 5], 8);
+        assert_eq!(dep.submit(second).unwrap(), Admission::Shed(ShedReason::KvMemory));
+        let res = dep.wait_result(id, Duration::from_secs(30)).expect("result");
+        assert_eq!(res.tokens.len(), 20);
+
+        let adm = dep.admission_stats();
+        assert_eq!(adm.shed_memory, 2, "both memory sheds count");
+        assert_eq!(adm.shed_capacity, 0);
+        assert_eq!(adm.shed, 2);
+        assert_eq!(adm.kv_reserved_pages, 0, "completion released the reservation");
+
+        // once the occupant finished, the transient condition cleared
+        let id3 = dep.fresh_id();
+        assert_eq!(
+            dep.submit(GenRequest::new(id3, vec![65; 5], 8)).unwrap(),
+            Admission::Accepted
+        );
+        assert!(dep.wait_result(id3, Duration::from_secs(30)).is_some());
+        dep.shutdown().unwrap();
+    }
+
+    #[test]
+    fn zero_page_budgets_are_rejected_at_launch() {
+        // 0.001 MiB < one 4096 B page: would shed 100% of traffic while
+        // /metrics looks identical to an unlimited deployment — launch
+        // must refuse it
+        let spec = DeploymentSpec::parse_kv("name=z,backend=native,kv_mb=0.001").unwrap();
+        let err = Deployment::launch(spec, "no-such-dir");
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("zero"));
     }
 
     #[test]

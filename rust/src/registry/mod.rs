@@ -28,7 +28,7 @@
 pub mod deployment;
 pub mod spec;
 
-pub use deployment::{Admission, AdmissionStats, Deployment, ResultStore, RESULT_TTL};
+pub use deployment::{Admission, AdmissionStats, Deployment, ResultStore, ShedReason, RESULT_TTL};
 pub use spec::{DeploymentSpec, DEFAULT_MAX_INFLIGHT};
 
 use std::collections::BTreeMap;

@@ -35,6 +35,10 @@ pub struct DeploymentSpec {
     pub batch: usize,
     /// Admission bound: submits beyond this many in-flight requests shed.
     pub max_inflight: usize,
+    /// KV pool budget in MiB; 0.0 = unlimited. Submits whose worst-case
+    /// page growth the pool cannot cover shed with a distinct
+    /// memory-pressure 429 (see `registry::Deployment`).
+    pub kv_budget_mb: f64,
     /// AQUA operating point for every request this deployment serves.
     pub aqua: AquaConfig,
 }
@@ -49,6 +53,7 @@ impl Default for DeploymentSpec {
             threads: 4,
             batch: 4,
             max_inflight: DEFAULT_MAX_INFLIGHT,
+            kv_budget_mb: 0.0,
             aqua: AquaConfig::default(),
         }
     }
@@ -79,6 +84,10 @@ impl DeploymentSpec {
                 "batch" => spec.batch = v.parse().with_context(|| format!("bad batch '{v}'"))?,
                 "queue" => {
                     spec.max_inflight = v.parse().with_context(|| format!("bad queue '{v}'"))?
+                }
+                "kv_mb" | "kv_budget_mb" => {
+                    spec.kv_budget_mb =
+                        v.parse().with_context(|| format!("bad kv budget '{v}'"))?
                 }
                 "k" | "k_ratio" => {
                     spec.aqua.k_ratio = v.parse().with_context(|| format!("bad k_ratio '{v}'"))?
@@ -120,6 +129,9 @@ impl DeploymentSpec {
         if let Some(v) = j.get("max_inflight").as_i64() {
             spec.max_inflight = v.max(0) as usize;
         }
+        if let Some(v) = j.get("kv_budget_mb").as_f64() {
+            spec.kv_budget_mb = v;
+        }
         if let Some(v) = j.get("k_ratio").as_f64() {
             spec.aqua.k_ratio = v;
         }
@@ -146,6 +158,7 @@ impl DeploymentSpec {
             ("threads", Json::Num(self.threads as f64)),
             ("batch", Json::Num(self.batch as f64)),
             ("max_inflight", Json::Num(self.max_inflight as f64)),
+            ("kv_budget_mb", Json::Num(self.kv_budget_mb)),
             ("k_ratio", Json::Num(self.aqua.k_ratio)),
             ("s_ratio", Json::Num(self.aqua.s_ratio)),
             ("h2o_ratio", Json::Num(self.aqua.h2o_ratio)),
@@ -176,6 +189,9 @@ impl DeploymentSpec {
         if self.max_inflight == 0 {
             bail!("deployment '{}': queue/max_inflight must be >= 1", self.name);
         }
+        if !self.kv_budget_mb.is_finite() || self.kv_budget_mb < 0.0 {
+            bail!("deployment '{}': kv_budget_mb {} must be >= 0", self.name, self.kv_budget_mb);
+        }
         for (label, v) in [
             ("k_ratio", self.aqua.k_ratio),
             ("s_ratio", self.aqua.s_ratio),
@@ -198,7 +214,13 @@ impl DeploymentSpec {
 
     /// The engine configuration this spec pins.
     pub fn engine_config(&self) -> EngineConfig {
-        EngineConfig { batch: self.batch, aqua: self.aqua, seed: self.seed, ..Default::default() }
+        EngineConfig {
+            batch: self.batch,
+            aqua: self.aqua,
+            seed: self.seed,
+            kv_budget_mb: self.kv_budget_mb,
+            ..Default::default()
+        }
     }
 }
 
@@ -208,14 +230,16 @@ mod tests {
 
     #[test]
     fn kv_roundtrip_through_json() {
-        let spec =
-            DeploymentSpec::parse_kv("name=fast,backend=sharded,k=0.25,threads=2,batch=8,queue=5")
-                .unwrap();
+        let spec = DeploymentSpec::parse_kv(
+            "name=fast,backend=sharded,k=0.25,threads=2,batch=8,queue=5,kv_mb=2.5",
+        )
+        .unwrap();
         assert_eq!(spec.name, "fast");
         assert_eq!(spec.backend, "sharded");
         assert_eq!(spec.threads, 2);
         assert_eq!(spec.batch, 8);
         assert_eq!(spec.max_inflight, 5);
+        assert!((spec.kv_budget_mb - 2.5).abs() < 1e-12);
         assert!((spec.aqua.k_ratio - 0.25).abs() < 1e-12);
         let back = DeploymentSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(back, spec);
@@ -242,6 +266,7 @@ mod tests {
         assert!(DeploymentSpec::parse_kv("name=a,queue=0").is_err(), "zero queue");
         assert!(DeploymentSpec::parse_kv("name=a/b").is_err(), "name not URL-safe");
         assert!(DeploymentSpec::parse_kv("name=a,wat=1").is_err(), "unknown key");
+        assert!(DeploymentSpec::parse_kv("name=a,kv_mb=-1").is_err(), "negative kv budget");
         assert!(DeploymentSpec::parse_kv("name=a,k").is_err(), "bare key");
         assert!(DeploymentSpec::from_json(&Json::parse(r#"{"backend":"native"}"#).unwrap())
             .is_err());

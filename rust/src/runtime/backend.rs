@@ -21,6 +21,7 @@ use anyhow::Result;
 
 use super::native::{synthetic_corpus, NativeBackend, NativeModel};
 use crate::aqua::policy::AquaConfig;
+use crate::kvpool::{KvPoolConfig, KvPoolGauges};
 use crate::model::config::ModelConfig;
 
 #[cfg(feature = "pjrt")]
@@ -98,6 +99,11 @@ pub struct StepOut {
     pub attn_acc: Vec<f32>,
     /// Score-kernel accounting for this call.
     pub kernels: KernelCounters,
+    /// KV-pool gauges at the end of this call (zeros for backends with
+    /// opaque/dense caches, e.g. PJRT). Reported per step so threaded
+    /// backends need no cross-thread query path — the sharded backend sums
+    /// its workers' gauges during the gather.
+    pub kv: KvPoolGauges,
 }
 
 /// One served model's execution surface. Object-safe: the engine holds a
@@ -115,6 +121,19 @@ pub trait ExecBackend {
     /// Allocate (or reset) zeroed KV caches for `b` lanes. Must be called
     /// before the first prefill/decode and whenever the batch size changes.
     fn empty_cache(&mut self, b: usize) -> Result<()>;
+
+    /// Shape the backend's paged KV pool (resident key dims, page size,
+    /// page budget). Takes effect at the next `empty_cache`. Backends with
+    /// dense/opaque caches (PJRT) ignore it — the engine still reports
+    /// their cost-model bytes, it just cannot page them.
+    fn configure_kv_pool(&mut self, _cfg: KvPoolConfig) -> Result<()> {
+        Ok(())
+    }
+
+    /// The engine finished (or is recycling) `lane`: backends with paged
+    /// caches free the lane's pages back to the pool. Dense backends
+    /// ignore it (the slots are simply overwritten by the next occupant).
+    fn retire_lane(&mut self, _lane: usize) {}
 
     /// One prefill chunk: `tokens` is [B, C] row-major, `pos0` the per-lane
     /// write position of the chunk's first token, `slot_mask` [B, S] the
@@ -223,6 +242,7 @@ impl ExecBackend for PjrtBackend {
             logits: out.logits,
             attn_acc: out.attn_acc,
             kernels: KernelCounters::default(),
+            kv: KvPoolGauges::default(),
         })
     }
 
@@ -252,6 +272,7 @@ impl ExecBackend for PjrtBackend {
             logits: out.logits,
             attn_acc: out.attn_acc,
             kernels: KernelCounters::default(),
+            kv: KvPoolGauges::default(),
         })
     }
 }

@@ -28,6 +28,7 @@ pub use backend::{
     corpus_or_synthetic, default_backend, default_spec, default_spec_in, AquaKnobs, BackendRecipe,
     BackendSpec, ExecBackend, KernelCounters, StepOut,
 };
+pub use crate::kvpool::{KvPoolConfig, KvPoolGauges};
 pub use native::{synthetic_corpus, NativeBackend, NativeModel, ScoreMode};
 pub use sharded::ShardedBackend;
 

@@ -28,18 +28,32 @@
 //!
 //! Decode hot path (this is the layout/kernel co-design the break-even
 //! bench measures):
-//! * the key cache is **dim-major** (`[L, B, n_kv, d, S]`): each projected
-//!   dimension's values are contiguous across slots, so the packed kernel
-//!   [`aqua_scores_packed_cols`] streams exactly `k` contiguous runs —
-//!   compute and memory traffic both scale with k;
-//! * when H2O has evicted enough of the context, scoring switches to
-//!   [`aqua_scores_packed_cols_at`], touching only the attendable slots;
+//! * the key cache is **dim-major** and **paged** (`crate::kvpool`): a
+//!   lane's positions are covered by `page_slots`-sized pages leased on
+//!   demand, each storing keys as `[L, n_kv, key_dims, page_slots]` (one
+//!   projected dimension contiguous across the page's slots) and values at
+//!   full width. The packed kernel [`aqua_scores_packed_cols`] streams
+//!   exactly `k` contiguous runs per page — compute and memory traffic
+//!   both scale with k, and *resident bytes* scale with the AQUA-Memory
+//!   knob (`key_dims = mem_dims(d)`) and the actual context length instead
+//!   of a dense `max_seq` preallocation;
+//! * pages whose slots H2O has fully evicted return to the pool (so do a
+//!   retired lane's); slots in never-leased pages score exactly 0.0, the
+//!   value the old dense zeroed cache produced for never-written slots;
+//! * when H2O has evicted enough of the context, scoring switches to a
+//!   paged slot-subset kernel (the `aqua_scores_packed_cols_at` analog),
+//!   touching only the attendable slots;
 //! * the masked-dense formulation stays available as [`ScoreMode::MaskedDense`],
-//!   the parity oracle the property tests compare against (the packed
-//!   kernels are *bit-identical* to it — see `aqua::native` tests);
+//!   the parity oracle the property tests compare against — it scores a
+//!   dense row-major *shadow* cache with its own write path, so pool bugs
+//!   cannot cancel out of the parity tests (the pooled packed kernels are
+//!   *bit-identical* to it at `kv_keep = 1.0` — see `aqua::native` and
+//!   `tests/kvpool_props.rs`);
 //! * all step scratch (activations, selections, scores, the attendable
 //!   list) lives in a persistent [`Scratch`] owned by the backend, so the
-//!   steady-state decode path allocates nothing but its two output vectors.
+//!   steady-state decode path allocates nothing but its two output vectors
+//!   (page leases amortize to one allocation per `page_slots` tokens, and
+//!   recycled pages allocate nothing).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -47,8 +61,9 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::backend::{AquaKnobs, ExecBackend, KernelCounters, StepOut};
-use crate::aqua::native::{
-    aqua_scores_masked, aqua_scores_packed_cols, aqua_scores_packed_cols_at, project,
+use crate::aqua::native::{aqua_scores_masked, aqua_scores_packed_cols, project};
+use crate::kvpool::{
+    KvPoolConfig, KvPoolGauges, LanePageTable, PagePool, PoolLayout, DEFAULT_PAGE_SLOTS,
 };
 use crate::model::config::ModelConfig;
 use crate::tensor::topk::{topk_indices_into, topk_mask_into};
@@ -201,6 +216,89 @@ fn silu_inplace(xs: &mut [f32]) {
 }
 
 // ---------------------------------------------------------------------------
+// Paged score path
+// ---------------------------------------------------------------------------
+
+/// Resolve a [`KvPoolConfig`] against a model shape.
+fn pool_layout(c: &ModelConfig, cfg: &KvPoolConfig) -> PoolLayout {
+    let d = c.d_head;
+    PoolLayout {
+        page_slots: cfg.page_slots.unwrap_or(DEFAULT_PAGE_SLOTS).clamp(1, c.max_seq),
+        key_dims: cfg.key_dims.unwrap_or(d).clamp(1, d),
+        head_dim: d,
+        layers: c.n_layers,
+        kv_heads: c.n_kv_heads,
+    }
+}
+
+/// Packed contiguous scores over a paged lane: one
+/// [`aqua_scores_packed_cols`] call per leased page (per-slot accumulation
+/// order identical to the monolithic dim-major kernel, so results are
+/// bit-identical). Slots in never-leased pages score exactly 0.0 — the
+/// value the old dense zeroed cache produced for never-written slots.
+fn scores_packed_paged(
+    qk: &[f32],
+    idx: &[usize],
+    pool: &PagePool,
+    table: &LanePageTable,
+    l: usize,
+    g: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let layout = pool.layout();
+    let (ps, kd) = (layout.page_slots, layout.key_dims);
+    let ko = layout.key_off(l, g);
+    let mut base = 0;
+    let mut p = 0;
+    while base < n {
+        let n_local = (n - base).min(ps);
+        match table.page(p) {
+            Some(id) => {
+                let kcols = &pool.page(id)[ko..ko + kd * ps];
+                let out_page = &mut out[base..base + n_local];
+                aqua_scores_packed_cols(qk, idx, kcols, ps, n_local, out_page);
+            }
+            None => out[base..base + n_local].fill(0.0),
+        }
+        base += n_local;
+        p += 1;
+    }
+}
+
+/// Slot-subset scores over a paged lane (the shape H2O holes want): the
+/// paged analog of `aqua_scores_packed_cols_at`, same ascending-dim
+/// accumulation order per slot, O(|slots|·k) regardless of the cursor.
+fn scores_at_paged(
+    qk: &[f32],
+    idx: &[usize],
+    pool: &PagePool,
+    table: &LanePageTable,
+    l: usize,
+    g: usize,
+    slots: &[usize],
+    out: &mut [f32],
+) {
+    let layout = pool.layout();
+    let ps = layout.page_slots;
+    let ko = layout.key_off(l, g);
+    for &s in slots {
+        match table.page(s / ps) {
+            Some(id) => {
+                let kcols = &pool.page(id)[ko..];
+                let local = s % ps;
+                let mut acc = 0.0f32;
+                for (j, &i) in idx.iter().enumerate() {
+                    acc += qk[j] * kcols[i * ps + local];
+                }
+                out[s] = acc;
+            }
+            None => out[s] = 0.0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Backend
 // ---------------------------------------------------------------------------
 
@@ -276,21 +374,25 @@ impl Scratch {
     }
 }
 
-/// The hermetic reference [`ExecBackend`]: owns real per-batch KV tensors.
-/// Keys are stored projected+sliced in **dim-major** layout
-/// `[L, B, n_kv, d, S]` (see module docs); values raw in `[L, B, n_kv, S, d]`.
+/// The hermetic reference [`ExecBackend`]: owns real per-batch KV tensors
+/// in a paged pool (`crate::kvpool`). Keys are stored projected, truncated
+/// to the pool's resident dims, in per-page **dim-major** layout; values
+/// full width (see module docs).
 pub struct NativeBackend {
     model: Arc<NativeModel>,
     batch: usize,
     prefill_chunk: usize,
     score_mode: ScoreMode,
-    k_cache: Vec<f32>,
+    /// Pool shape requested via `configure_kv_pool`; applied by
+    /// `empty_cache`.
+    pool_cfg: KvPoolConfig,
+    pool: PagePool,
+    tables: Vec<LanePageTable>,
     /// Row-major `[L, B, n_kv, S, d]` *shadow* key cache, populated only in
-    /// [`ScoreMode::MaskedDense`]: the oracle scores against its own layout
-    /// and write path, so a bug in the dim-major cache or packed kernels
-    /// cannot cancel out of the parity tests.
+    /// [`ScoreMode::MaskedDense`]: the oracle scores against its own dense
+    /// layout and write path, so a bug in the paged dim-major cache or the
+    /// packed kernels cannot cancel out of the parity tests.
     k_cache_rows: Vec<f32>,
-    v_cache: Vec<f32>,
     scratch: Scratch,
 }
 
@@ -302,20 +404,32 @@ impl NativeBackend {
     pub fn from_model(model: Arc<NativeModel>) -> NativeBackend {
         let chunk = NATIVE_PREFILL_CHUNK.clamp(1, model.cfg.max_seq);
         let scratch = Scratch::new(&model.cfg);
+        let layout = pool_layout(&model.cfg, &KvPoolConfig::default());
         NativeBackend {
             model,
             batch: 0,
             prefill_chunk: chunk,
             score_mode: ScoreMode::Auto,
-            k_cache: vec![],
+            pool_cfg: KvPoolConfig::default(),
+            pool: PagePool::new(layout, 0),
+            tables: vec![],
             k_cache_rows: vec![],
-            v_cache: vec![],
             scratch,
         }
     }
 
     pub fn model(&self) -> &NativeModel {
         &self.model
+    }
+
+    /// Current pool gauges (what this backend reports in every `StepOut`).
+    pub fn kv_gauges(&self) -> KvPoolGauges {
+        self.pool.gauges()
+    }
+
+    fn shadow_elems(&self, b: usize) -> usize {
+        let c = &self.model.cfg;
+        c.n_layers * b * c.n_kv_heads * c.max_seq * c.d_head
     }
 
     /// Select the score-kernel routing policy (default [`ScoreMode::Auto`]).
@@ -328,20 +442,35 @@ impl NativeBackend {
 
     /// (Re)build the oracle's row-major shadow key cache. Tokens written
     /// *before* switching into oracle mode are transposed over from the
-    /// dim-major cache (they mirror it); tokens written afterwards go
-    /// through the independent row-major write path — set the mode before
-    /// the first write for a fully independent oracle.
+    /// paged dim-major cache (they mirror it; truncated dims stay zero,
+    /// exactly what the `dim_keep` mask wrote); tokens written afterwards
+    /// go through the independent row-major write path — set the mode
+    /// before the first write for a fully independent oracle.
     fn sync_oracle_cache(&mut self) {
         let c = &self.model.cfg;
-        let (d, s_cap) = (c.d_head, c.max_seq);
-        let n = self.k_cache.len();
-        self.k_cache_rows.clear();
-        self.k_cache_rows.resize(n, 0.0);
-        for gb in 0..n / (d * s_cap) {
-            let base = gb * d * s_cap;
-            for s in 0..s_cap {
-                for i in 0..d {
-                    self.k_cache_rows[base + s * d + i] = self.k_cache[base + i * s_cap + s];
+        let (d, s_cap, nkv, nl, b) = (c.d_head, c.max_seq, c.n_kv_heads, c.n_layers, self.batch);
+        let n = self.shadow_elems(b);
+        let rows = &mut self.k_cache_rows;
+        rows.clear();
+        rows.resize(n, 0.0);
+        let layout = *self.pool.layout();
+        let (ps, kd) = (layout.page_slots, layout.key_dims);
+        for (lane, table) in self.tables.iter().enumerate() {
+            for p in 0..s_cap.div_ceil(ps) {
+                let Some(id) = table.page(p) else { continue };
+                let page = self.pool.page(id);
+                let filled = table.written().saturating_sub(p * ps).min(ps);
+                for l in 0..nl {
+                    for g in 0..nkv {
+                        let ko = layout.key_off(l, g);
+                        for local in 0..filled {
+                            let s = p * ps + local;
+                            let rb = (((l * b + lane) * nkv + g) * s_cap + s) * d;
+                            for i in 0..kd {
+                                rows[rb + i] = page[ko + i * ps + local];
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -382,15 +511,21 @@ impl NativeBackend {
         let scale = (d as f32).powf(-0.5);
         let eps = c.norm_eps as f32;
         let score_mode = self.score_mode;
-        if score_mode == ScoreMode::MaskedDense && self.k_cache_rows.len() != self.k_cache.len() {
+        if score_mode == ScoreMode::MaskedDense && self.k_cache_rows.len() != self.shadow_elems(b)
+        {
             // mode was switched after empty_cache — bring the shadow up
             self.sync_oracle_cache();
         }
+        let layout = *self.pool.layout();
+        let (ps, kd) = (layout.page_slots, layout.key_dims);
+        if kd < d && knobs.dim_keep[kd..].iter().any(|&m| m != 0.0) {
+            bail!(
+                "native step: dim_keep keeps dims beyond the pool's {kd} resident key dims \
+                 (the memory knob is a cache-layout property — reconfigure the kv pool)"
+            );
+        }
 
-        // Cache bases. Keys are dim-major ([L, B, n_kv, d, S]: one
-        // projected dimension contiguous across slots), values row-major
-        // ([L, B, n_kv, S, d]). Both strides are per-(layer, lane, group).
-        let kcol_base = |l: usize, lane: usize, g: usize| (((l * b + lane) * nkv + g) * d) * s_cap;
+        // Row-major [L, B, n_kv, S, d] base for the oracle's dense shadow.
         let vrow_base = |l: usize, lane: usize, g: usize| (((l * b + lane) * nkv + g) * s_cap) * d;
 
         let mut logits_out = vec![0.0f32; b * t * vocab];
@@ -398,14 +533,19 @@ impl NativeBackend {
         let mut kernels = KernelCounters::default();
 
         // Split disjoint field borrows once: the persistent scratch, the
-        // caches, and the (cloned-Arc) model are independent.
-        let k_cache = &mut self.k_cache;
+        // pool + page tables, the oracle shadow, and the (cloned-Arc)
+        // model are independent.
+        let pool = &mut self.pool;
+        let tables = &mut self.tables;
         let k_rows = &mut self.k_cache_rows;
-        let v_cache = &mut self.v_cache;
         let sc = &mut self.scratch;
 
         for lane in 0..b {
             let lane_mask = &slot_mask[lane * s_cap..(lane + 1) * s_cap];
+            // Return pages H2O has fully drained (every slot in the mask
+            // dead, page fully behind the write cursor) to the pool before
+            // this call touches the lane.
+            tables[lane].reclaim(pool, lane_mask);
             // Attendable slots: committed (engine's slot_mask) + positions
             // written earlier in this call. Committed indices are always
             // below the write cursor, so the list stays sorted.
@@ -429,6 +569,17 @@ impl NativeBackend {
                 if writable && sc.att.binary_search(&pos).is_err() {
                     sc.att.push(pos);
                 }
+                // Lease the page backing this position on first touch (one
+                // page covers every layer and KV head of `page_slots`
+                // consecutive positions, so this is the only lease point).
+                let page_id = if writable {
+                    let id = tables[lane].ensure(pool, pos / ps)?;
+                    tables[lane].note_write(pos);
+                    Some(id)
+                } else {
+                    None
+                };
+                let local = pos % ps;
                 let tok = tok_raw.min(vocab as i32 - 1) as usize;
                 let pe = pos.min(s_cap - 1);
                 for (j, xv) in sc.x.iter_mut().enumerate() {
@@ -442,7 +593,7 @@ impl NativeBackend {
                     matvec(&sc.h, &lw.wk, nkv * d, &mut sc.ks);
                     matvec(&sc.h, &lw.wv, nkv * d, &mut sc.vs);
 
-                    if writable {
+                    if let Some(pid) = page_id {
                         for g in 0..nkv {
                             let k_raw = &sc.ks[g * d..(g + 1) * d];
                             if knobs.use_projection {
@@ -453,19 +604,23 @@ impl NativeBackend {
                             for (kv, &keep) in sc.khat.iter_mut().zip(&knobs.dim_keep) {
                                 *kv *= keep;
                             }
-                            // dim-major key write: one strided store per dim,
-                            // paid once per token (not per decode step)
-                            let kb = kcol_base(l, lane, g);
-                            for (i, &kv) in sc.khat.iter().enumerate() {
-                                k_cache[kb + i * s_cap + pos] = kv;
-                            }
                             if score_mode == ScoreMode::MaskedDense {
                                 // oracle shadow: independent row-major write
+                                // at full width (truncated dims are zeros —
+                                // dim_keep already zeroed them)
                                 let rb = vrow_base(l, lane, g) + pos * d;
                                 k_rows[rb..rb + d].copy_from_slice(&sc.khat);
                             }
-                            let vb = vrow_base(l, lane, g) + pos * d;
-                            v_cache[vb..vb + d].copy_from_slice(&sc.vs[g * d..(g + 1) * d]);
+                            // dim-major key write into the leased page: one
+                            // strided store per *resident* dim, paid once
+                            // per token (not per decode step)
+                            let page = pool.page_mut(pid);
+                            let ko = layout.key_off(l, g);
+                            for (i, &kv) in sc.khat.iter().take(kd).enumerate() {
+                                page[ko + i * ps + local] = kv;
+                            }
+                            let vo = layout.val_off(l, g, local);
+                            page[vo..vo + d].copy_from_slice(&sc.vs[g * d..(g + 1) * d]);
                         }
                     }
 
@@ -487,12 +642,11 @@ impl NativeBackend {
                             // AQUA Algorithm 1: top-k |q̂| dims, then route to
                             // the cheapest equivalent kernel (all variants are
                             // bit-identical — see aqua::native tests).
-                            let kb = kcol_base(l, lane, g);
-                            let kcols = &k_cache[kb..kb + d * s_cap];
                             if score_mode == ScoreMode::MaskedDense {
                                 // Oracle: the pre-overhaul formulation —
                                 // top-k mask, full-width masked-dense dot
-                                // over the independent row-major shadow.
+                                // over the independent dense row-major
+                                // shadow (no pool involvement at all).
                                 topk_mask_into(&sc.qhat, k_dims, &mut sc.idx, &mut sc.mask);
                                 let rb = vrow_base(l, lane, g);
                                 aqua_scores_masked(
@@ -505,16 +659,33 @@ impl NativeBackend {
                                 );
                                 kernels.dense += 1;
                             } else if k_dims == d && score_mode == ScoreMode::Auto {
-                                // Full width: the selection is the identity.
-                                aqua_scores_packed_cols(
-                                    &sc.qhat, &sc.all_dims, kcols, s_cap, n, &mut sc.scores,
+                                // Full width: the selection is the identity
+                                // over the resident dims (truncated dims are
+                                // zero in q̂ and skipped by the kernel).
+                                let table = &tables[lane];
+                                scores_packed_paged(
+                                    &sc.qhat[..kd],
+                                    &sc.all_dims[..kd],
+                                    pool,
+                                    table,
+                                    l,
+                                    g,
+                                    n,
+                                    &mut sc.scores,
                                 );
                                 kernels.dense += 1;
                             } else {
                                 topk_indices_into(&sc.qhat, k_dims, &mut sc.idx);
+                                if kd < d {
+                                    // non-resident dims carry q̂ = 0 (guard
+                                    // above); dropping them preserves the
+                                    // accumulation order of the kept dims
+                                    sc.idx.retain(|&i| i < kd);
+                                }
                                 for (j, &i) in sc.idx.iter().enumerate() {
                                     sc.qsel[j] = sc.qhat[i];
                                 }
+                                let table = &tables[lane];
                                 let use_sparse = match score_mode {
                                     ScoreMode::Sparse => true,
                                     ScoreMode::Packed => false,
@@ -523,13 +694,14 @@ impl NativeBackend {
                                     _ => 2 * sc.att.len() < n,
                                 };
                                 if use_sparse {
-                                    aqua_scores_packed_cols_at(
-                                        &sc.qsel, &sc.idx, kcols, s_cap, &sc.att, &mut sc.scores,
+                                    scores_at_paged(
+                                        &sc.qsel, &sc.idx, pool, table, l, g, &sc.att,
+                                        &mut sc.scores,
                                     );
                                     kernels.sparse += 1;
                                 } else {
-                                    aqua_scores_packed_cols(
-                                        &sc.qsel, &sc.idx, kcols, s_cap, n, &mut sc.scores,
+                                    scores_packed_paged(
+                                        &sc.qsel, &sc.idx, pool, table, l, g, n, &mut sc.scores,
                                     );
                                     kernels.packed += 1;
                                 }
@@ -550,12 +722,17 @@ impl NativeBackend {
                                 continue;
                             }
                             let acc_base = (l * b + lane) * s_cap;
-                            let vb = vrow_base(l, lane, g);
                             let out_h = &mut sc.attn_out[qh * d..(qh + 1) * d];
+                            let table = &tables[lane];
                             for &s in &sc.att {
                                 let p = sc.scores[s] / denom;
                                 attn_acc[acc_base + s] += p;
-                                let vrow = &v_cache[vb + s * d..vb + (s + 1) * d];
+                                // never-leased pages hold no values (the
+                                // dense cache's zeros): probability mass is
+                                // still accounted, the mix contributes 0
+                                let Some(pid) = table.page(s / ps) else { continue };
+                                let vo = layout.val_off(l, g, s % ps);
+                                let vrow = &pool.page(pid)[vo..vo + d];
                                 for (o, &vv) in out_h.iter_mut().zip(vrow) {
                                     *o += p * vv;
                                 }
@@ -583,7 +760,7 @@ impl NativeBackend {
                 matvec(&sc.xf, &model.unembed, vocab, row);
             }
         }
-        Ok(StepOut { logits: logits_out, attn_acc, kernels })
+        Ok(StepOut { logits: logits_out, attn_acc, kernels, kv: pool.gauges() })
     }
 }
 
@@ -605,17 +782,31 @@ impl ExecBackend for NativeBackend {
             bail!("native empty_cache: batch must be >= 1");
         }
         let c = &self.model.cfg;
-        let n = c.n_layers * b * c.n_kv_heads * c.max_seq * c.d_head;
+        let layout = pool_layout(c, &self.pool_cfg);
+        let pages_per_lane = layout.pages_for_slots(c.max_seq);
+        // Uncapped default: the worst case every lane can ever need, so a
+        // lease can only fail when a deployment pins a smaller budget (and
+        // then its admission gate sheds before the backend ever stalls).
+        let max_pages = self.pool_cfg.max_pages.unwrap_or(b * pages_per_lane);
         self.batch = b;
-        self.k_cache.clear();
-        self.k_cache.resize(n, 0.0);
+        self.pool = PagePool::new(layout, max_pages);
+        self.tables = (0..b).map(|_| LanePageTable::new(pages_per_lane)).collect();
         self.k_cache_rows.clear();
         if self.score_mode == ScoreMode::MaskedDense {
-            self.k_cache_rows.resize(n, 0.0);
+            self.k_cache_rows.resize(self.shadow_elems(b), 0.0);
         }
-        self.v_cache.clear();
-        self.v_cache.resize(n, 0.0);
         Ok(())
+    }
+
+    fn configure_kv_pool(&mut self, cfg: KvPoolConfig) -> Result<()> {
+        self.pool_cfg = cfg;
+        Ok(())
+    }
+
+    fn retire_lane(&mut self, lane: usize) {
+        if let Some(table) = self.tables.get_mut(lane) {
+            table.release_all(&mut self.pool);
+        }
     }
 
     fn prefill(
@@ -890,6 +1081,109 @@ mod tests {
         let mask1 = vec![0.0f32; cfg.max_seq];
         let solo = b1.decode(1, &[65], &[0], &mask1, &exact_knobs(d)).unwrap();
         assert_eq!(&out.logits[..cfg.vocab], &solo.logits[..]);
+    }
+
+    #[test]
+    fn pool_pages_lease_on_demand_and_free_on_retire() {
+        let cfg = tiny();
+        let d = cfg.d_head;
+        let mut be = NativeBackend::new(tiny(), 2).unwrap();
+        be.empty_cache(2).unwrap();
+        assert_eq!(be.kv_gauges().pages_in_use, 0, "no pages before the first write");
+        let mut mask = vec![0.0f32; 2 * cfg.max_seq];
+        let mut last = KvPoolGauges::default();
+        for i in 0..20usize {
+            let out =
+                be.decode(2, &[65, 66], &[i as i32, i as i32], &mask, &exact_knobs(d)).unwrap();
+            mask[i] = 1.0;
+            mask[cfg.max_seq + i] = 1.0;
+            last = out.kv;
+        }
+        // 20 positions at 16 slots/page = 2 pages per lane, 2 lanes — far
+        // below the dense preallocation (ceil(160/16) = 10 pages per lane)
+        assert_eq!(last.pages_in_use, 4);
+        assert_eq!(last.resident_bytes, last.pages_in_use * last.page_bytes);
+        assert!(last.alloc_stalls == 0 && last.leases == 4);
+        be.retire_lane(0);
+        assert_eq!(be.kv_gauges().pages_in_use, 2, "retire frees lane 0's pages");
+        be.retire_lane(1);
+        let g = be.kv_gauges();
+        assert_eq!(g.pages_in_use, 0);
+        assert_eq!(g.pages_hwm, 4, "freed backing stays on the free list for reuse");
+    }
+
+    #[test]
+    fn truncated_pool_matches_oracle_and_shrinks_pages() {
+        // kv_keep = 0.5 (s_ratio = 0.5): resident key dims halve, page
+        // bytes shrink by the (kd + d) / 2d ratio, and the packed score
+        // path over the truncated pool still matches the full-width
+        // masked-dense oracle exactly (the truncated dims were zeroed by
+        // dim_keep before they ever reached either cache).
+        use crate::aqua::policy::AquaConfig;
+        let cfg = tiny();
+        let d = cfg.d_head;
+        let aqua = AquaConfig { s_ratio: 0.5, ..Default::default() };
+        let knobs = AquaKnobs::from_config(&aqua, d);
+        let kd = aqua.mem_dims(d);
+        let run = |mode: ScoreMode, truncate: bool| -> (Vec<f32>, u64) {
+            let mut be = NativeBackend::new(tiny(), 31).unwrap();
+            if truncate {
+                be.configure_kv_pool(KvPoolConfig { key_dims: Some(kd), ..Default::default() })
+                    .unwrap();
+            }
+            be.set_score_mode(mode);
+            be.empty_cache(1).unwrap();
+            let mut mask = vec![0.0f32; cfg.max_seq];
+            let (mut last, mut bytes) = (vec![], 0u64);
+            for (i, &t) in b"memory".iter().enumerate() {
+                let out = be.decode(1, &[t as i32], &[i as i32], &mask, &knobs).unwrap();
+                mask[i] = 1.0;
+                last = out.logits;
+                bytes = out.kv.page_bytes;
+            }
+            (last, bytes)
+        };
+        let (oracle, full_bytes) = run(ScoreMode::MaskedDense, false);
+        let (trunc, trunc_bytes) = run(ScoreMode::Auto, true);
+        assert_eq!(oracle, trunc, "truncated pool output diverged from the oracle");
+        assert!(trunc_bytes < full_bytes);
+        assert_eq!(trunc_bytes as usize * 2 * d, full_bytes as usize * (kd + d));
+    }
+
+    #[test]
+    fn pool_rejects_dim_keep_beyond_resident_dims() {
+        let cfg = tiny();
+        let d = cfg.d_head;
+        let mut be = NativeBackend::new(tiny(), 1).unwrap();
+        be.configure_kv_pool(KvPoolConfig { key_dims: Some(d / 2), ..Default::default() })
+            .unwrap();
+        be.empty_cache(1).unwrap();
+        let mask = vec![0.0f32; cfg.max_seq];
+        // full-width dim_keep against a half-width pool must error, not
+        // silently drop key data
+        let err = be.decode(1, &[65], &[0], &mask, &exact_knobs(d));
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("resident key dims"));
+    }
+
+    #[test]
+    fn exhausted_pool_fails_deterministically() {
+        let cfg = tiny();
+        let d = cfg.d_head;
+        let mut be = NativeBackend::new(tiny(), 1).unwrap();
+        // one page of 16 slots: position 16 needs a second page → error
+        be.configure_kv_pool(KvPoolConfig { max_pages: Some(1), ..Default::default() })
+            .unwrap();
+        be.empty_cache(1).unwrap();
+        let mut mask = vec![0.0f32; cfg.max_seq];
+        for i in 0..16usize {
+            be.decode(1, &[65], &[i as i32], &mask, &exact_knobs(d)).unwrap();
+            mask[i] = 1.0;
+        }
+        let err = be.decode(1, &[65], &[16], &mask, &exact_knobs(d));
+        assert!(err.is_err(), "lease beyond the page budget must fail");
+        assert!(format!("{:#}", err.unwrap_err()).contains("kv pool exhausted"));
+        assert_eq!(be.kv_gauges().alloc_stalls, 1);
     }
 
     #[test]

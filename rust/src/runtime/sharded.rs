@@ -28,6 +28,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::backend::{AquaKnobs, ExecBackend, KernelCounters, StepOut};
 use super::native::{NativeBackend, NativeModel, ScoreMode};
+use crate::kvpool::{KvPoolConfig, KvPoolGauges};
 use crate::model::config::ModelConfig;
 
 /// One step's inputs, copied once and shared (`Arc`) by every worker —
@@ -47,6 +48,11 @@ struct StepInputs {
 enum Cmd {
     EmptyCache(usize),
     SetScoreMode(ScoreMode),
+    /// Forwarded pool shape (applied at the worker's next EmptyCache).
+    ConfigureKvPool(KvPoolConfig),
+    /// Free one worker-local lane's pages (fire-and-forget, like
+    /// SetScoreMode — the ordered channel serializes it against steps).
+    RetireLane(usize),
     Run { inputs: Arc<StepInputs>, lanes: Range<usize> },
     Shutdown,
 }
@@ -67,6 +73,14 @@ fn spawn_worker(model: Arc<NativeModel>) -> Worker {
                 Cmd::EmptyCache(b) => be.empty_cache(b).map(|_| StepOut::default()),
                 Cmd::SetScoreMode(mode) => {
                     be.set_score_mode(mode);
+                    continue;
+                }
+                Cmd::ConfigureKvPool(cfg) => {
+                    let _ = be.configure_kv_pool(cfg);
+                    continue;
+                }
+                Cmd::RetireLane(lane) => {
+                    be.retire_lane(lane);
                     continue;
                 }
                 Cmd::Run { inputs, lanes } => {
@@ -188,6 +202,7 @@ impl ShardedBackend {
         let mut logits = vec![0.0f32; b * t * vocab];
         let mut attn_acc = vec![0.0f32; n_layers * b * s_cap];
         let mut kernels = KernelCounters::default();
+        let mut kv = KvPoolGauges::default();
         // Drain every dispatched shard even after a failure — an early
         // return would leave the remaining StepOuts queued and pair them
         // with the *next* call's gather (silent step desync).
@@ -222,11 +237,14 @@ impl ShardedBackend {
                 attn_acc[dst..dst + bw * s_cap].copy_from_slice(src);
             }
             kernels.merge(&out.kernels);
+            // each worker owns an independent sub-pool over its lanes;
+            // the batch's resident bytes are the sum
+            kv.merge(&out.kv);
         }
         if let Some(e) = first_err {
             return Err(e);
         }
-        Ok(StepOut { logits, attn_acc, kernels })
+        Ok(StepOut { logits, attn_acc, kernels, kv })
     }
 }
 
@@ -276,6 +294,31 @@ impl ExecBackend for ShardedBackend {
         match first_err {
             Some(e) => Err(e),
             None => Ok(()),
+        }
+    }
+
+    fn configure_kv_pool(&mut self, cfg: KvPoolConfig) -> Result<()> {
+        // Every worker gets the same shape; a pinned `max_pages` budget
+        // acts per worker as a backstop only — the *global* bound is
+        // enforced by the engine's memory-aware admission (and, in the
+        // registry, by the deployment's reservation gate), which defers
+        // requests whose worst-case growth doesn't fit. A proportional
+        // per-worker split would be unsafe: lane→worker assignment is
+        // static, so a globally-fitting reservation could still overflow
+        // one worker's share mid-decode.
+        for w in &self.workers {
+            w.tx.send(Cmd::ConfigureKvPool(cfg)).map_err(|_| anyhow!("sharded worker died"))?;
+        }
+        Ok(())
+    }
+
+    fn retire_lane(&mut self, lane: usize) {
+        // Map the engine lane onto its shard's worker-local index.
+        for (w, shard) in self.workers.iter().zip(&self.shards) {
+            if shard.contains(&lane) {
+                let _ = w.tx.send(Cmd::RetireLane(lane - shard.start));
+                return;
+            }
         }
     }
 

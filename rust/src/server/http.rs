@@ -49,6 +49,7 @@ fn status_line(code: u16) -> &'static str {
         400 => "400 Bad Request",
         404 => "404 Not Found",
         409 => "409 Conflict",
+        413 => "413 Payload Too Large",
         429 => "429 Too Many Requests",
         500 => "500 Internal Server Error",
         503 => "503 Service Unavailable",

@@ -4,7 +4,10 @@
 //! `POST /generate {"prompt": "...", "max_new_tokens": N, "model": "m"}`
 //!     → generated text; `"model"` picks the deployment (fleet default
 //!     when omitted → 404 if unknown), `"stop_newline": false` disables
-//!     the newline stop token. Over-capacity deployments shed with 429.
+//!     the newline stop token. Over-capacity deployments shed with 429 —
+//!     the body (and the `shed_capacity_total`/`shed_memory_total`
+//!     counters) distinguish the in-flight bound from KV memory pressure
+//!     (`kv_budget_mb` cannot cover the request's worst-case page growth).
 //! `GET  /stats` → fleet headline + per-model sections
 //! `GET  /metrics` → full snapshots incl. score-kernel variant counters
 //!     (which AQUA kernel — dense/sparse/packed — actually ran per model)
@@ -28,7 +31,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::metrics::Snapshot;
 use crate::coordinator::GenRequest;
-use crate::registry::{Admission, AdmissionStats, DeploymentSpec, ModelRegistry};
+use crate::registry::{Admission, AdmissionStats, DeploymentSpec, ModelRegistry, ShedReason};
 use crate::tokenizer::ByteTokenizer;
 use crate::util::json::Json;
 use http::{Request, Response};
@@ -100,12 +103,32 @@ fn generate(req: &Request, registry: &ModelRegistry) -> Response {
     }
     match dep.submit(r) {
         Ok(Admission::Accepted) => {}
-        Ok(Admission::Shed) => {
+        Ok(Admission::Shed(ShedReason::Capacity)) => {
             return Response::text(
                 429,
                 &format!(
                     "model '{}' over capacity (in-flight limit {})",
                     dep.spec.name, dep.spec.max_inflight
+                ),
+            );
+        }
+        Ok(Admission::Shed(ShedReason::KvMemory)) => {
+            return Response::text(
+                429,
+                &format!(
+                    "model '{}' under memory pressure (in-flight requests hold the kv budget's \
+                     {} MB of pages — retry once they finish)",
+                    dep.spec.name, dep.spec.kv_budget_mb
+                ),
+            );
+        }
+        Ok(Admission::Shed(ShedReason::OverBudget)) => {
+            return Response::text(
+                413,
+                &format!(
+                    "request's worst-case KV growth exceeds model '{}'s entire kv budget \
+                     ({} MB) — retrying cannot succeed; shorten the request or raise the budget",
+                    dep.spec.name, dep.spec.kv_budget_mb
                 ),
             );
         }
@@ -141,6 +164,7 @@ fn snapshot_fields(s: &Snapshot, full: bool) -> Vec<(&'static str, Json)> {
         ("mean_ttft_ms", Json::Num(s.mean_ttft_ms)),
         ("p99_ttft_ms", Json::Num(s.p99_ttft_ms)),
         ("h2o_evictions", Json::Num(s.h2o_evictions as f64)),
+        ("kv_resident_bytes", Json::Num(s.kv_resident_bytes as f64)),
     ];
     if full {
         fields.extend([
@@ -152,6 +176,10 @@ fn snapshot_fields(s: &Snapshot, full: bool) -> Vec<(&'static str, Json)> {
             ("decode_calls", Json::Num(s.decode_calls as f64)),
             ("prefill_calls", Json::Num(s.prefill_calls as f64)),
             ("wall_tok_per_s", Json::Num(s.wall_tok_per_s)),
+            ("kv_resident_peak_bytes", Json::Num(s.kv_resident_peak_bytes as f64)),
+            ("kv_pages_in_use", Json::Num(s.kv_pages_in_use as f64)),
+            ("kv_page_utilization", Json::Num(s.kv_page_utilization)),
+            ("kv_alloc_stalls", Json::Num(s.kv_alloc_stalls as f64)),
         ]);
     }
     fields
@@ -164,7 +192,13 @@ fn admission_fields(a: &AdmissionStats, full: bool) -> Vec<(&'static str, Json)>
         ("submitted_total", Json::Num(a.submitted as f64)),
     ];
     if full {
-        fields.push(("results_swept", Json::Num(a.swept_results as f64)));
+        fields.extend([
+            ("shed_capacity_total", Json::Num(a.shed_capacity as f64)),
+            ("shed_memory_total", Json::Num(a.shed_memory as f64)),
+            ("kv_reserved_pages", Json::Num(a.kv_reserved_pages as f64)),
+            ("kv_pages_total", Json::Num(a.kv_pages_total as f64)),
+            ("results_swept", Json::Num(a.swept_results as f64)),
+        ]);
     }
     fields
 }
@@ -172,6 +206,9 @@ fn admission_fields(a: &AdmissionStats, full: bool) -> Vec<(&'static str, Json)>
 fn stats_route(registry: &ModelRegistry, full: bool) -> Response {
     let mut fleet = Snapshot::default();
     let mut fleet_adm = AdmissionStats::default();
+    // `kv_pages_total = 0` is the "unlimited" sentinel: the fleet total is
+    // a real cap only when *every* deployment is budgeted.
+    let mut kv_unbounded = false;
     let mut models = std::collections::BTreeMap::new();
     for dep in registry.deployments() {
         let adm = dep.admission_stats();
@@ -192,7 +229,15 @@ fn stats_route(registry: &ModelRegistry, full: bool) -> Response {
         fleet_adm.queue_depth += adm.queue_depth;
         fleet_adm.submitted += adm.submitted;
         fleet_adm.shed += adm.shed;
+        fleet_adm.shed_capacity += adm.shed_capacity;
+        fleet_adm.shed_memory += adm.shed_memory;
+        fleet_adm.kv_reserved_pages += adm.kv_reserved_pages;
+        fleet_adm.kv_pages_total += adm.kv_pages_total;
+        kv_unbounded |= adm.kv_pages_total == 0;
         fleet_adm.swept_results += adm.swept_results;
+    }
+    if kv_unbounded {
+        fleet_adm.kv_pages_total = 0;
     }
     let mut fields = snapshot_fields(&fleet, full);
     fields.extend(admission_fields(&fleet_adm, full));

@@ -13,7 +13,7 @@ use std::time::{Duration, Instant};
 
 use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
 use aqua_serve::model::config::ModelConfig;
-use aqua_serve::registry::{Admission, DeploymentSpec, ModelRegistry};
+use aqua_serve::registry::{Admission, DeploymentSpec, ModelRegistry, ShedReason};
 use aqua_serve::runtime::BackendSpec;
 use aqua_serve::server;
 use aqua_serve::tokenizer::ByteTokenizer;
@@ -159,7 +159,7 @@ fn admission_control_sheds_and_recovers() {
     assert_eq!(dep.submit(long).unwrap(), Admission::Accepted);
     let id2 = dep.fresh_id();
     let second = GenRequest::new(id2, tok.encode("hi"), 4);
-    assert_eq!(dep.submit(second).unwrap(), Admission::Shed);
+    assert_eq!(dep.submit(second).unwrap(), Admission::Shed(ShedReason::Capacity));
     let adm = dep.admission_stats();
     assert_eq!(adm.shed, 1);
     assert_eq!(adm.submitted, 1);

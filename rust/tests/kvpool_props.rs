@@ -1,0 +1,450 @@
+//! Paged KV-pool properties and parity (hermetic):
+//!
+//! * the page allocator never leaks or double-frees across random
+//!   lease/free interleavings, and recycles fully after a lane drop;
+//! * the engine-side page accounting (`LaneKv::resident_pages`) and the
+//!   backend pool's gauges agree step for step under H2O eviction;
+//! * `kv_keep = 1.0` through the pool is bit-identical to the PR 2 packed
+//!   path (pinned by the masked-dense oracle and by page-size invariance);
+//! * `kv_keep < 1.0` (truncated resident keys) stays within oracle
+//!   tolerance, shrinks measured resident bytes to the acceptance bound,
+//!   and the sharded backend remains bitwise identical to native;
+//! * memory-pressure admission sheds deterministically with the distinct
+//!   429 instead of panicking or over-allocating.
+//!
+//! CI runs this file under `--release` too (like the decode parity suite).
+
+use std::sync::Arc;
+
+use aqua_serve::aqua::policy::AquaConfig;
+use aqua_serve::coordinator::h2o::H2oPolicy;
+use aqua_serve::coordinator::kvcache::LaneKv;
+use aqua_serve::coordinator::{Engine, EngineConfig, FinishReason, GenRequest};
+use aqua_serve::kvpool::{budget_pages, KvPoolConfig, PagePool, PoolLayout, DEFAULT_PAGE_SLOTS};
+use aqua_serve::model::config::ModelConfig;
+use aqua_serve::registry::ModelRegistry;
+use aqua_serve::runtime::{
+    AquaKnobs, BackendSpec, ExecBackend, NativeBackend, NativeModel, ScoreMode, ShardedBackend,
+};
+use aqua_serve::server::http::Request;
+use aqua_serve::server::route;
+use aqua_serve::util::json::Json;
+use aqua_serve::util::prng::Rng;
+use aqua_serve::util::testkit::check;
+
+fn tiny() -> ModelConfig {
+    ModelConfig::tiny("kvpool-test")
+}
+
+// ---------------------------------------------------------------------------
+// Allocator properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_allocator_never_leaks_or_double_frees() {
+    check(
+        "kvpool-lease-free-interleavings",
+        120,
+        |g| {
+            let max_pages = 1 + g.rng.below(24);
+            let ops: Vec<u64> = (0..g.rng.below(200)).map(|_| g.rng.next_u64()).collect();
+            (max_pages, ops)
+        },
+        |(max_pages, ops)| {
+            let layout =
+                PoolLayout { page_slots: 4, key_dims: 2, head_dim: 4, layers: 1, kv_heads: 1 };
+            let mut pool = PagePool::new(layout, *max_pages);
+            let mut model: Vec<u32> = vec![]; // leased ids, oracle
+            for &op in ops {
+                if op % 3 != 0 {
+                    // lease: must succeed iff below capacity
+                    match pool.lease() {
+                        Ok(id) => {
+                            if model.contains(&id) {
+                                return Err(format!("page {id} leased twice"));
+                            }
+                            model.push(id);
+                        }
+                        Err(_) if model.len() == *max_pages => {}
+                        Err(e) => return Err(format!("lease failed below capacity: {e}")),
+                    }
+                } else if !model.is_empty() {
+                    // free a random leased page; a second free must error
+                    let id = model.swap_remove((op / 3) as usize % model.len());
+                    pool.free(id).map_err(|e| format!("valid free failed: {e}"))?;
+                    if pool.free(id).is_ok() {
+                        return Err(format!("double free of {id} accepted"));
+                    }
+                }
+                let g = pool.gauges();
+                if g.pages_in_use as usize != model.len() {
+                    return Err(format!("in_use {} != model {}", g.pages_in_use, model.len()));
+                }
+                if g.pages_hwm as usize > *max_pages {
+                    return Err(format!("hwm {} exceeds max {max_pages}", g.pages_hwm));
+                }
+                if g.resident_bytes != g.pages_in_use * g.page_bytes {
+                    return Err("resident_bytes != pages_in_use * page_bytes".into());
+                }
+            }
+            // full drain → full reuse without growth
+            let hwm = pool.gauges().pages_hwm;
+            for id in model.drain(..) {
+                pool.free(id).map_err(|e| format!("drain free failed: {e}"))?;
+            }
+            if pool.pages_in_use() != 0 {
+                return Err("drained pool still has leased pages".into());
+            }
+            for _ in 0..hwm {
+                pool.lease().map_err(|e| format!("re-lease after drain failed: {e}"))?;
+            }
+            if pool.gauges().pages_hwm != hwm {
+                return Err("re-leasing after a full drain grew the pool".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Engine-side vs pool-side page accounting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_lanekv_page_accounting_matches_pool_gauges() {
+    let cfg = tiny();
+    let d = cfg.d_head;
+    let model = Arc::new(NativeModel::new(cfg.clone(), 0x9A6E).unwrap());
+    check(
+        "lanekv-vs-pool-pages",
+        12,
+        |g| {
+            let b = 1 + g.rng.below(3);
+            let steps = 8 + g.rng.below(40);
+            let ratio = 0.2 + g.rng.f64() * 0.8;
+            (b, steps.min(cfg.max_seq - 1), ratio, g.rng.next_u64())
+        },
+        |(b, steps, ratio, seed)| {
+            let (b, steps) = (*b, *steps);
+            let h2o = H2oPolicy::new(*ratio, 3);
+            let mut be = NativeBackend::from_model(model.clone());
+            be.empty_cache(b).unwrap();
+            let knobs = AquaKnobs { k_dims: d / 2, dim_keep: vec![1.0; d], use_projection: true };
+            let mut rng = Rng::new(*seed);
+            let mut lanes: Vec<LaneKv> = (0..b).map(|_| LaneKv::new(cfg.max_seq)).collect();
+            for step in 0..steps {
+                let tokens: Vec<i32> = (0..b).map(|_| 32 + rng.below(90) as i32).collect();
+                let pos: Vec<i32> = lanes.iter().map(|l| l.len as i32).collect();
+                let mut mask = vec![0.0f32; b * cfg.max_seq];
+                for (lane, kv) in lanes.iter().enumerate() {
+                    mask[lane * cfg.max_seq..(lane + 1) * cfg.max_seq]
+                        .copy_from_slice(&kv.slot_mask);
+                }
+                let out = be.decode(b, &tokens, &pos, &mask, &knobs).unwrap();
+                for lane in lanes.iter_mut() {
+                    lane.commit_write(1);
+                }
+                // the engine-side page formula must equal the pool's gauges
+                // (backend reclaimed with this call's mask, then leased the
+                // write positions)
+                let expect: usize =
+                    lanes.iter().map(|l| l.resident_pages(DEFAULT_PAGE_SLOTS)).sum();
+                if out.kv.pages_in_use as usize != expect {
+                    return Err(format!(
+                        "step {step}: pool has {} pages, LaneKv accounting says {expect}",
+                        out.kv.pages_in_use
+                    ));
+                }
+                if out.kv.resident_bytes != out.kv.pages_in_use * out.kv.page_bytes {
+                    return Err("gauge identity violated".into());
+                }
+                // LaneKv::live_bytes (the engine-side byte view behind
+                // Engine::kv_resident_bytes) must equal the pool's bytes
+                let bps = (out.kv.page_bytes / out.kv.page_slots) as usize;
+                let bytes: usize =
+                    lanes.iter().map(|l| l.live_bytes(DEFAULT_PAGE_SLOTS, bps)).sum();
+                if bytes as u64 != out.kv.resident_bytes {
+                    return Err(format!(
+                        "live_bytes {bytes} != pool resident {}",
+                        out.kv.resident_bytes
+                    ));
+                }
+                // evictions take effect on the next call's mask
+                for lane in lanes.iter_mut() {
+                    h2o.apply(lane);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Parity: kv_keep = 1.0 pooled path vs oracle, across page sizes
+// ---------------------------------------------------------------------------
+
+/// Drive identical decode traffic (H2O evictions fed from the first
+/// backend's attention mass) and return per-step logits per backend.
+fn drive(
+    backends: &mut [&mut dyn ExecBackend],
+    b: usize,
+    knobs: &AquaKnobs,
+    steps: usize,
+    h2o: &H2oPolicy,
+    seed: u64,
+) -> Vec<Vec<Vec<f32>>> {
+    let cfg = backends[0].model_config().clone();
+    let (s_cap, n_layers) = (cfg.max_seq, cfg.n_layers);
+    let mut rng = Rng::new(seed);
+    for be in backends.iter_mut() {
+        be.empty_cache(b).unwrap();
+    }
+    let mut lanes: Vec<LaneKv> = (0..b).map(|_| LaneKv::new(s_cap)).collect();
+    let mut outs: Vec<Vec<Vec<f32>>> = vec![vec![]; backends.len()];
+    for _ in 0..steps {
+        let tokens: Vec<i32> = (0..b).map(|_| 32 + rng.below(90) as i32).collect();
+        let pos: Vec<i32> = lanes.iter().map(|l| l.len as i32).collect();
+        let mut mask = vec![0.0f32; b * s_cap];
+        for (lane, kv) in lanes.iter().enumerate() {
+            mask[lane * s_cap..(lane + 1) * s_cap].copy_from_slice(&kv.slot_mask);
+        }
+        let mut step_outs = vec![];
+        for be in backends.iter_mut() {
+            step_outs.push(be.decode(b, &tokens, &pos, &mask, knobs).unwrap());
+        }
+        for lane in 0..b {
+            lanes[lane].commit_write(1);
+            let mut mass = vec![0.0f32; s_cap];
+            for l in 0..n_layers {
+                let base = (l * b + lane) * s_cap;
+                for s in 0..s_cap {
+                    mass[s] += step_outs[0].attn_acc[base + s];
+                }
+            }
+            lanes[lane].accumulate(&mass);
+            h2o.apply(&mut lanes[lane]);
+        }
+        for (i, o) in step_outs.into_iter().enumerate() {
+            outs[i].push(o.logits);
+        }
+    }
+    outs
+}
+
+#[test]
+fn full_width_pool_is_bit_identical_across_page_sizes_and_to_oracle() {
+    // kv_keep = 1.0: the paged packed path must equal the PR 2 dense
+    // packed path bit for bit. The masked-dense oracle (dense shadow
+    // cache, pre-pool write path) pins the old semantics; page-size
+    // invariance (4 vs 16 vs one-page-per-lane 160) pins that paging
+    // itself never changes a single bit.
+    let cfg = tiny();
+    let d = cfg.d_head;
+    let model = Arc::new(NativeModel::new(cfg.clone(), 0xB17).unwrap());
+    let h2o = H2oPolicy::new(0.4, 3);
+    let knobs = AquaKnobs { k_dims: d / 2, dim_keep: vec![1.0; d], use_projection: true };
+
+    let mut oracle = NativeBackend::from_model(model.clone());
+    oracle.set_score_mode(ScoreMode::MaskedDense);
+    let mut paged4 = NativeBackend::from_model(model.clone());
+    paged4.configure_kv_pool(KvPoolConfig { page_slots: Some(4), ..Default::default() }).unwrap();
+    let mut paged16 = NativeBackend::from_model(model.clone());
+    let mut one_page = NativeBackend::from_model(model.clone());
+    one_page
+        .configure_kv_pool(KvPoolConfig { page_slots: Some(cfg.max_seq), ..Default::default() })
+        .unwrap();
+
+    let mut bes: Vec<&mut dyn ExecBackend> =
+        vec![&mut oracle, &mut paged4, &mut paged16, &mut one_page];
+    let outs = drive(&mut bes, 3, &knobs, 40, &h2o, 0xCAFE);
+    for (name, i) in [("page_slots=4", 1usize), ("page_slots=16", 2), ("one-page", 3)] {
+        assert_eq!(outs[0], outs[i], "{name} diverged from the masked-dense oracle");
+    }
+}
+
+#[test]
+fn truncated_keys_match_oracle_and_sharded_stays_bitwise() {
+    // kv_keep = 0.5: the oracle writes the same dim_keep-zeroed keys at
+    // full width, so outputs must still agree exactly; the sharded
+    // backend (workers with their own sub-pools) must equal native bit
+    // for bit at every thread count.
+    let cfg = tiny();
+    let d = cfg.d_head;
+    let aqua = AquaConfig { s_ratio: 0.5, ..Default::default() };
+    let knobs = AquaKnobs::from_config(&aqua, d);
+    let kd = aqua.mem_dims(d);
+    let pool_cfg = KvPoolConfig { key_dims: Some(kd), ..Default::default() };
+    let model = Arc::new(NativeModel::new(cfg.clone(), 0x51AB).unwrap());
+    let h2o = H2oPolicy::new(0.5, 4);
+
+    let mut oracle = NativeBackend::from_model(model.clone());
+    oracle.set_score_mode(ScoreMode::MaskedDense);
+    let mut native = NativeBackend::from_model(model.clone());
+    native.configure_kv_pool(pool_cfg).unwrap();
+    let mut sharded2 = ShardedBackend::from_model(model.clone(), 2);
+    sharded2.configure_kv_pool(pool_cfg).unwrap();
+    let mut sharded4 = ShardedBackend::from_model(model.clone(), 4);
+    sharded4.configure_kv_pool(pool_cfg).unwrap();
+
+    let mut bes: Vec<&mut dyn ExecBackend> =
+        vec![&mut oracle, &mut native, &mut sharded2, &mut sharded4];
+    let outs = drive(&mut bes, 6, &knobs, 30, &h2o, 0xD1CE);
+    assert_eq!(outs[0], outs[1], "truncated native pool diverged from the oracle");
+    assert_eq!(outs[1], outs[2], "sharded(2) diverged from native through the pool");
+    assert_eq!(outs[1], outs[3], "sharded(4) diverged from native through the pool");
+}
+
+// ---------------------------------------------------------------------------
+// The memory claim, measured end to end
+// ---------------------------------------------------------------------------
+
+/// Fixed-length workload (no stop token) so page usage is identical
+/// across operating points.
+fn fixed_workload(n: usize, prompt_len: usize, gen: usize) -> Vec<GenRequest> {
+    (0..n).map(|i| GenRequest::new(i as u64 + 1, vec![40 + i as i32; prompt_len], gen)).collect()
+}
+
+#[test]
+fn resident_bytes_beat_the_dense_baseline_at_equal_load() {
+    let cfg = tiny();
+    let (d, nkv, nl, s_cap) = (cfg.d_head, cfg.n_kv_heads, cfg.n_layers, cfg.max_seq);
+    let batch = 4;
+    // what every lane preallocated before the pool (full-width K + V)
+    let dense_alloc = (batch * nl * nkv * s_cap * 2 * d * 4) as u64;
+    let run = |s_ratio: f64| -> u64 {
+        let spec = BackendSpec::native(cfg.clone(), 9).unwrap();
+        let aqua = AquaConfig { s_ratio, ..Default::default() };
+        let mut engine =
+            Engine::with_spec(&spec, EngineConfig { batch, aqua, ..Default::default() }).unwrap();
+        engine.run_batch(fixed_workload(8, 20, 24)).unwrap();
+        engine.metrics.snapshot().kv_resident_peak_bytes
+    };
+    let full = run(0.0);
+    let half = run(0.5);
+    // acceptance: kv_keep = 0.5 resident ≤ ~60% of the dense baseline
+    assert!(
+        (half as f64) <= 0.6 * dense_alloc as f64,
+        "kv_keep=0.5 peak {half} B vs dense {dense_alloc} B exceeds the 0.6 bound"
+    );
+    // identical page usage (fixed lengths) → bytes scale exactly by the
+    // truncated layout: (d/2 + d) / 2d = 0.75
+    assert_eq!(4 * half, 3 * full, "expected exact 0.75x from key truncation");
+    // paging alone already beats dense preallocation at this load
+    assert!(full < dense_alloc);
+}
+
+#[test]
+fn memory_sheds_have_distinct_http_status_and_counters() {
+    let reg = ModelRegistry::new("no-such-dir");
+    // tiny model: 4096 B/page at full width; 0.02 MiB → 5 pages
+    let spec_json = r#"{"name": "m", "backend": "native", "batch": 2, "kv_budget_mb": 0.02}"#;
+    let post = |path: &str, body: &str| Request {
+        method: "POST".to_string(),
+        path: path.to_string(),
+        headers: vec![],
+        body: body.to_string(),
+    };
+    let get = |path: &str| Request {
+        method: "GET".to_string(),
+        path: path.to_string(),
+        headers: vec![],
+        body: String::new(),
+    };
+    assert_eq!(route(&post("/models", spec_json), &reg).status, 200);
+
+    // worst case 6+120 slots = 8 pages > the whole 5-page budget: a
+    // permanent 413 telling the client retrying cannot succeed — not the
+    // retryable capacity/pressure 429s
+    let big = r#"{"prompt": "hello!", "max_new_tokens": 120, "stop_newline": false}"#;
+    let resp = route(&post("/generate", big), &reg);
+    assert_eq!(resp.status, 413);
+    assert!(resp.body.contains("cannot succeed"), "413 body: {}", resp.body);
+    assert!(!resp.body.contains("in-flight"), "wrong shed reason: {}", resp.body);
+
+    // a request that fits completes, and /metrics splits the counters
+    let small = r#"{"prompt": "hi", "max_new_tokens": 8, "stop_newline": false}"#;
+    assert_eq!(route(&post("/generate", small), &reg).status, 200);
+    let metrics = route(&get("/metrics"), &reg);
+    let doc = Json::parse(&metrics.body).unwrap();
+    let m = doc.get("models").get("m");
+    assert_eq!(m.get("shed_memory_total").as_i64(), Some(1));
+    assert_eq!(m.get("shed_capacity_total").as_i64(), Some(0));
+    assert_eq!(m.get("shed_total").as_i64(), Some(1));
+    assert_eq!(m.get("kv_pages_total").as_i64(), Some(5));
+    assert_eq!(m.get("kv_reserved_pages").as_i64(), Some(0), "reservation released");
+    assert!(m.get("kv_resident_bytes").as_f64().is_some());
+    reg.shutdown_all().unwrap();
+}
+
+#[test]
+fn engine_budget_defers_instead_of_stalling_for_all_backends() {
+    // Memory-aware admission is the *global* budget bound: with 6 pages
+    // (full width: 4096 B each) and requests needing 3 pages apiece, only
+    // two lanes hold requests at a time — the rest defer at admission and
+    // everything completes with zero pool stalls. Holds for the sharded
+    // backend too (per-worker caps are just a backstop, so threads must
+    // not multiply the budget).
+    let cfg = tiny();
+    let budget_mb = 6.0 * 4096.0 / (1u64 << 20) as f64;
+    let specs = [
+        BackendSpec::native(cfg.clone(), 3).unwrap(),
+        BackendSpec::sharded(cfg.clone(), 3, 2).unwrap(),
+    ];
+    for spec in specs {
+        let mut engine = Engine::with_spec(
+            &spec,
+            EngineConfig { batch: 4, kv_budget_mb: budget_mb, ..Default::default() },
+        )
+        .unwrap();
+        let results = engine.run_batch(fixed_workload(6, 20, 24)).unwrap();
+        assert_eq!(results.len(), 6);
+        assert!(results.iter().all(|r| r.tokens.len() == 24), "deferred requests must finish");
+        assert_eq!(engine.kv_resident_bytes(), 0, "all lanes retired, nothing resident");
+        let snap = engine.metrics.snapshot();
+        assert_eq!(snap.kv_alloc_stalls, 0, "{}: budget must never stall the pool", spec.name());
+        assert!(
+            snap.kv_resident_peak_bytes <= 6 * 4096,
+            "{}: resident {} B exceeds the 6-page budget",
+            spec.name(),
+            snap.kv_resident_peak_bytes
+        );
+        // a request whose worst case exceeds the whole budget resolves
+        // deterministically — with the budget-specific reason, not a
+        // misattributed prompt-length reject — instead of hanging the
+        // queue (100 + 40 slots fits max_seq, only the budget is short)
+        let too_big = GenRequest::new(99, vec![65; 100], 40);
+        let res = engine.run_batch(vec![too_big]).unwrap().remove(0);
+        assert_eq!(res.finish, FinishReason::OverKvBudget);
+        assert!(res.tokens.is_empty());
+    }
+}
+
+#[test]
+fn budget_pages_and_engine_pool_agree() {
+    // the admission gate and the engine's pool cap must be the same
+    // number — a request that passes the gate can never stall the pool
+    let cfg = tiny();
+    let aqua = AquaConfig { s_ratio: 0.5, ..Default::default() };
+    let layout = PoolLayout {
+        page_slots: DEFAULT_PAGE_SLOTS,
+        key_dims: aqua.mem_dims(cfg.d_head),
+        head_dim: cfg.d_head,
+        layers: cfg.n_layers,
+        kv_heads: cfg.n_kv_heads,
+    };
+    let pages = budget_pages(0.05, &layout).unwrap();
+    let spec = BackendSpec::native(cfg.clone(), 1).unwrap();
+    let mut engine = Engine::with_spec(
+        &spec,
+        EngineConfig { batch: 1, aqua, kv_budget_mb: 0.05, ..Default::default() },
+    )
+    .unwrap();
+    // a workload sized exactly to the budget runs without a single stall
+    let slots = pages * DEFAULT_PAGE_SLOTS;
+    let gen = 8;
+    let prompt = slots.saturating_sub(gen).min(cfg.max_seq - gen);
+    engine.run_batch(vec![GenRequest::new(1, vec![65; prompt], gen)]).unwrap();
+    let snap = engine.metrics.snapshot();
+    assert_eq!(snap.kv_alloc_stalls, 0, "budget-sized load must never stall the pool");
+    assert!(snap.kv_resident_peak_bytes > 0);
+}
