@@ -1,0 +1,175 @@
+//! Prefix-sharing trajectory: TTFT, prefill token-work, and resident KV
+//! bytes vs the shared-prefix fraction of the workload × the AQUA-Memory
+//! knob (`kv_keep = 1 - s_ratio`) — the "one prefill, many lanes" half of
+//! the memory story, measured on the pages the pool actually holds.
+//!
+//! For each operating point the bench serves the same workload twice
+//! through a full engine — prefix cache on and off — after priming the
+//! cache with one donor request: a batch of lanes whose prompts share a
+//! `shared_frac` token prefix then attach the donor's page chain instead
+//! of re-running prefill. Recorded per row:
+//!
+//! * `hit_tokens` / `prefill_tokens` — prompt tokens served from the
+//!   cache vs computed (they reconcile to `total_prompt_tokens`, so
+//!   skipped prefill work is exactly proportional to the hit rate);
+//! * `peak_resident_bytes` and `resident_ratio_vs_unshared` — measured
+//!   peak leased-page bytes, and the ratio against the sharing-disabled
+//!   run of the *same* workload (shared pages counted once vs per lane);
+//! * `mean_ttft_ms` — attach is O(pages), so warm lanes reach their first
+//!   token without paying the shared prefix's prefill latency.
+//!
+//! Sharing compounds with `kv_keep`: shared pages store truncated
+//! resident keys, so the kv_keep=0.5 rows shrink byte-for-byte on top of
+//! the page-dedup saving. Writes the `prefixshare` section of
+//! `BENCH_prefix.json` (schema in BENCHES.md; `aqua benchcheck --strict`
+//! asserts the ≤0.65× @ 50%-shared acceptance bound). `--fast` is
+//! accepted for CI symmetry (the workload is already smoke-sized).
+
+use std::path::Path;
+
+use aqua_serve::aqua::policy::AquaConfig;
+use aqua_serve::bench::report::{prefix_path, BenchReport};
+use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use aqua_serve::kvpool::DEFAULT_PAGE_SLOTS;
+use aqua_serve::model::config::ModelConfig;
+use aqua_serve::runtime::BackendSpec;
+use aqua_serve::util::json::Json;
+use aqua_serve::util::prng::Rng;
+
+const PROMPT_LEN: usize = 96;
+const GEN_LEN: usize = 8;
+const BATCH: usize = 8;
+
+/// `len` deterministic byte-range tokens: `shared` prefix + seeded tail.
+fn prompt(shared: &[i32], tail_seed: u64, len: usize) -> Vec<i32> {
+    let mut p = shared.to_vec();
+    p.truncate(len);
+    let mut rng = Rng::new(tail_seed);
+    while p.len() < len {
+        p.push(32 + rng.below(90) as i32);
+    }
+    p
+}
+
+struct RunOut {
+    peak_bytes: u64,
+    hit_tokens: u64,
+    prefill_tokens: u64,
+    total_prompt_tokens: u64,
+    mean_ttft_ms: f64,
+}
+
+/// One operating point: prime the cache with a donor request, then serve
+/// `BATCH` lanes whose prompts share `shared` as a prefix.
+fn run(keep: f64, shared: &[i32], cache_on: bool) -> anyhow::Result<RunOut> {
+    let cfg = ModelConfig::tiny("llama-analog");
+    let spec = BackendSpec::native(cfg, 0)?;
+    let aqua = AquaConfig { s_ratio: 1.0 - keep, ..Default::default() };
+    let ecfg = EngineConfig { batch: BATCH, aqua, prefix_cache: cache_on, ..Default::default() };
+    let mut engine = Engine::with_spec(&spec, ecfg)?;
+
+    // donor: registers the shared prefix's pages (cached after retire)
+    engine.run_batch(vec![GenRequest::new(1, prompt(shared, 999, PROMPT_LEN), GEN_LEN)])?;
+    // main wave: every lane shares the prefix, tails diverge
+    let reqs: Vec<GenRequest> = (0..BATCH)
+        .map(|i| GenRequest::new(i as u64 + 2, prompt(shared, 1 + i as u64, PROMPT_LEN), GEN_LEN))
+        .collect();
+    let results = engine.run_batch(reqs)?;
+    let mean_ttft_ms =
+        results.iter().map(|r| r.ttft_us as f64 / 1e3).sum::<f64>() / results.len() as f64;
+
+    let snap = engine.metrics.snapshot();
+    Ok(RunOut {
+        peak_bytes: snap.kv_resident_peak_bytes,
+        hit_tokens: snap.prefix_hit_tokens,
+        prefill_tokens: snap.prompt_tokens,
+        total_prompt_tokens: ((BATCH + 1) * PROMPT_LEN) as u64,
+        mean_ttft_ms,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let cfg = ModelConfig::tiny("llama-analog");
+    let mut shared_full = vec![];
+    let mut rng = Rng::new(0xA11CE);
+    while shared_full.len() < PROMPT_LEN {
+        shared_full.push(32 + rng.below(90) as i32);
+    }
+
+    println!(
+        "# prefixshare — {BATCH} lanes + 1 donor, prompt {PROMPT_LEN} tok, gen {GEN_LEN} \
+         (resident ratio = shared pool vs the same workload unshared)\n"
+    );
+    println!(
+        "{:>8} {:>12} {:>7} {:>9} {:>14} {:>15} {:>10}",
+        "kv_keep", "shared_frac", "cache", "hit rate", "peak resident", "ratio vs cold", "ttft"
+    );
+
+    let mut rows: Vec<Json> = vec![];
+    for keep in [1.0f64, 0.5] {
+        let mem_dims = AquaConfig { s_ratio: 1.0 - keep, ..Default::default() }.mem_dims(cfg.d_head);
+        for frac in [0.0f64, 0.5, 0.9] {
+            let shared = &shared_full[..(PROMPT_LEN as f64 * frac) as usize];
+            let cold = run(keep, shared, false)?;
+            let warm = run(keep, shared, true)?;
+            for (on, out) in [(false, &cold), (true, &warm)] {
+                let ratio = out.peak_bytes as f64 / cold.peak_bytes as f64;
+                let hit_rate = out.hit_tokens as f64 / out.total_prompt_tokens as f64;
+                println!(
+                    "{:>8.2} {:>12.2} {:>7} {:>8.0}% {:>13}B {:>15.3} {:>8.2}ms",
+                    keep,
+                    frac,
+                    if on { "on" } else { "off" },
+                    100.0 * hit_rate,
+                    out.peak_bytes,
+                    ratio,
+                    out.mean_ttft_ms
+                );
+                rows.push(Json::obj(vec![
+                    ("kv_keep", Json::Num(keep)),
+                    ("shared_frac", Json::Num(frac)),
+                    ("prefix_cache", Json::Bool(on)),
+                    ("mem_dims", Json::Num(mem_dims as f64)),
+                    ("page_slots", Json::Num(DEFAULT_PAGE_SLOTS as f64)),
+                    ("requests", Json::Num((BATCH + 1) as f64)),
+                    ("batch", Json::Num(BATCH as f64)),
+                    ("hit_tokens", Json::Num(out.hit_tokens as f64)),
+                    ("prefill_tokens", Json::Num(out.prefill_tokens as f64)),
+                    ("total_prompt_tokens", Json::Num(out.total_prompt_tokens as f64)),
+                    ("hit_rate", Json::Num(hit_rate)),
+                    ("peak_resident_bytes", Json::Num(out.peak_bytes as f64)),
+                    (
+                        "resident_per_lane_bytes",
+                        Json::Num(out.peak_bytes as f64 / BATCH as f64),
+                    ),
+                    ("resident_ratio_vs_unshared", Json::Num(ratio)),
+                    ("mean_ttft_ms", Json::Num(out.mean_ttft_ms)),
+                ]));
+            }
+        }
+    }
+
+    let section = Json::obj(vec![
+        ("rows", Json::Arr(rows)),
+        ("model", Json::Str("llama-analog".into())),
+        ("prompt_len", Json::Num(PROMPT_LEN as f64)),
+        ("gen_len", Json::Num(GEN_LEN as f64)),
+        (
+            "units",
+            Json::Str(
+                "hit_tokens + prefill_tokens == total_prompt_tokens (skipped prefill work is the \
+                 hit rate); resident_ratio_vs_unshared = peak leased bytes vs the same workload \
+                 with sharing disabled; rows come in on/off pairs per (kv_keep, shared_frac)"
+                    .into(),
+            ),
+        ),
+        ("fast", Json::Bool(fast)),
+    ]);
+    let path = Path::new(prefix_path());
+    let mut rep = BenchReport::load_or_new(path);
+    rep.set_section("prefixshare", section);
+    rep.save(path)?;
+    println!("\nwrote prefixshare section to {}", path.display());
+    Ok(())
+}

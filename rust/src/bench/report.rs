@@ -47,6 +47,14 @@ pub fn kvmem_path() -> &'static str {
     concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kvmem.json")
 }
 
+/// Repo-root path of the prefix-sharing report (`BENCH_prefix.json`),
+/// written by the `prefixshare` bench — TTFT, prefill token-work, and
+/// resident bytes vs shared-prefix fraction × `kv_keep` (schema in
+/// BENCHES.md).
+pub fn prefix_path() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_prefix.json")
+}
+
 /// An on-disk report being updated section-by-section.
 pub struct BenchReport {
     doc: Json,
@@ -258,6 +266,92 @@ pub fn validate_kvmem(doc: &Json, strict: bool) -> Result<()> {
     Ok(())
 }
 
+/// Validate a `BENCH_prefix.json` document (the `prefixshare` section the
+/// prefixshare bench emits: resident bytes, TTFT, and prefill token-work
+/// vs shared-prefix fraction × `kv_keep`; schema in BENCHES.md). The
+/// schema pass enforces the counter reconciliation the serving metrics
+/// promise — prefill work + cache hits == total prompt volume, so skipped
+/// prefill is exactly proportional to the hit rate. `strict` refuses
+/// projected snapshots and asserts the sharing acceptance bounds: at a
+/// 50%-shared workload resident bytes are <= 0.65x the unshared pool, and
+/// the saving compounds with `kv_keep = 0.5` byte-for-byte.
+pub fn validate_prefix(doc: &Json, strict: bool) -> Result<()> {
+    let ver = doc.get("schema_version").as_i64().unwrap_or(0);
+    if ver != SCHEMA_VERSION {
+        bail!("schema_version {ver} != {SCHEMA_VERSION}");
+    }
+    let rows = rows_of(doc, "prefixshare")?;
+    for r in rows {
+        for f in [
+            "kv_keep", "shared_frac", "hit_rate", "peak_resident_bytes",
+            "resident_per_lane_bytes", "resident_ratio_vs_unshared", "mean_ttft_ms",
+        ] {
+            if r.get(f).as_f64().is_none() {
+                bail!("prefixshare row missing '{f}': {r}");
+            }
+        }
+        for f in ["hit_tokens", "prefill_tokens", "total_prompt_tokens", "requests", "page_slots"] {
+            if r.get(f).as_i64().is_none() {
+                bail!("prefixshare row missing '{f}': {r}");
+            }
+        }
+        if r.get("prefix_cache").as_bool().is_none() {
+            bail!("prefixshare row missing 'prefix_cache': {r}");
+        }
+        let (hit, fed, total) = (
+            r.get("hit_tokens").as_i64().unwrap_or(0),
+            r.get("prefill_tokens").as_i64().unwrap_or(0),
+            r.get("total_prompt_tokens").as_i64().unwrap_or(0),
+        );
+        if hit + fed != total {
+            bail!(
+                "prefixshare row inconsistent (hits {hit} + prefill {fed} != prompt volume \
+                 {total}): skipped prefill must reconcile with the hit counters"
+            );
+        }
+        if r.get("prefix_cache").as_bool() == Some(false) && hit != 0 {
+            bail!("prefixshare row: sharing-disabled run reports cache hits: {r}");
+        }
+    }
+    if !strict {
+        return Ok(());
+    }
+    if doc.get("projected").as_bool() == Some(true) {
+        bail!("strict validation refused: numbers are cost-model projections, not measurements \
+               (regenerate with the prefixshare bench)");
+    }
+    let find = |keep: f64, frac: f64, on: bool| -> Option<&Json> {
+        rows.iter().find(|r| {
+            (r.get("kv_keep").as_f64().unwrap_or(-1.0) - keep).abs() < 1e-9
+                && (r.get("shared_frac").as_f64().unwrap_or(-1.0) - frac).abs() < 1e-9
+                && r.get("prefix_cache").as_bool() == Some(on)
+        })
+    };
+    for keep in [1.0, 0.5] {
+        let row = find(keep, 0.5, true)
+            .with_context(|| format!("missing shared_frac=0.5 kv_keep={keep} row"))?;
+        let ratio = row.get("resident_ratio_vs_unshared").as_f64().unwrap_or(1.0);
+        if ratio > 0.65 {
+            bail!(
+                "50%-shared workload at kv_keep={keep}: resident ratio {ratio:.3} exceeds the \
+                 0.65 acceptance bound"
+            );
+        }
+    }
+    // byte-for-byte compounding: the shared pool at kv_keep=0.5 is itself
+    // smaller than the shared pool at 1.0 (truncated resident keys)
+    let full = find(1.0, 0.5, true).context("missing kv_keep=1.0 shared row")?;
+    let half = find(0.5, 0.5, true).context("missing kv_keep=0.5 shared row")?;
+    let (bf, bh) = (
+        full.get("peak_resident_bytes").as_f64().unwrap_or(0.0),
+        half.get("peak_resident_bytes").as_f64().unwrap_or(f64::MAX),
+    );
+    if bh >= bf {
+        bail!("sharing does not compound with kv_keep: {bh} B at 0.5 vs {bf} B at 1.0");
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -463,6 +557,83 @@ mod tests {
         assert!(validate_kvmem(&projected, true).is_err());
 
         assert!(validate_kvmem(&Json::obj(vec![]), false).is_err());
+    }
+
+    fn prefix_row(keep: f64, frac: f64, on: bool, hit: f64, peak: f64, ratio: f64) -> Json {
+        let total = 864.0;
+        Json::obj(vec![
+            ("kv_keep", Json::Num(keep)),
+            ("shared_frac", Json::Num(frac)),
+            ("prefix_cache", Json::Bool(on)),
+            ("requests", Json::Num(9.0)),
+            ("page_slots", Json::Num(16.0)),
+            ("hit_tokens", Json::Num(hit)),
+            ("prefill_tokens", Json::Num(total - hit)),
+            ("total_prompt_tokens", Json::Num(total)),
+            ("hit_rate", Json::Num(hit / total)),
+            ("peak_resident_bytes", Json::Num(peak)),
+            ("resident_per_lane_bytes", Json::Num(peak / 8.0)),
+            ("resident_ratio_vs_unshared", Json::Num(ratio)),
+            ("mean_ttft_ms", Json::Num(if on { 1.0 } else { 2.0 })),
+        ])
+    }
+
+    fn prefix_doc(rows: Vec<Json>) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            (
+                "sections",
+                Json::obj(vec![("prefixshare", Json::obj(vec![("rows", Json::Arr(rows))]))]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn validate_prefix_schema_and_invariants() {
+        let good = prefix_doc(vec![
+            prefix_row(1.0, 0.5, true, 384.0, 143360.0, 0.625),
+            prefix_row(1.0, 0.5, false, 0.0, 229376.0, 1.0),
+            prefix_row(0.5, 0.5, true, 384.0, 107520.0, 0.625),
+            prefix_row(0.5, 0.5, false, 0.0, 172032.0, 1.0),
+        ]);
+        validate_prefix(&good, false).unwrap();
+        validate_prefix(&good, true).unwrap();
+
+        // hit/prefill accounting must reconcile with the prompt volume
+        let mut bad_row = prefix_row(1.0, 0.5, true, 384.0, 1.0, 0.5);
+        if let Json::Obj(r) = &mut bad_row {
+            r.insert("prefill_tokens".into(), Json::Num(999.0));
+        }
+        assert!(validate_prefix(&prefix_doc(vec![bad_row]), false).is_err());
+
+        // a sharing-disabled run reporting hits is schema-invalid
+        let lying = prefix_doc(vec![prefix_row(1.0, 0.5, false, 384.0, 1.0, 1.0)]);
+        assert!(validate_prefix(&lying, false).is_err());
+
+        // the 0.65 acceptance bound is a strict failure only
+        let weak = prefix_doc(vec![
+            prefix_row(1.0, 0.5, true, 384.0, 200000.0, 0.9),
+            prefix_row(0.5, 0.5, true, 384.0, 107520.0, 0.625),
+        ]);
+        validate_prefix(&weak, false).unwrap();
+        assert!(validate_prefix(&weak, true).is_err());
+
+        // compounding: kv_keep=0.5 shared bytes must undercut kv_keep=1.0
+        let flat = prefix_doc(vec![
+            prefix_row(1.0, 0.5, true, 384.0, 143360.0, 0.625),
+            prefix_row(0.5, 0.5, true, 384.0, 143360.0, 0.625),
+        ]);
+        assert!(validate_prefix(&flat, true).is_err());
+
+        // projected snapshots pass the schema but refuse strict validation
+        let mut projected = good.clone();
+        if let Json::Obj(o) = &mut projected {
+            o.insert("projected".into(), Json::Bool(true));
+        }
+        validate_prefix(&projected, false).unwrap();
+        assert!(validate_prefix(&projected, true).is_err());
+
+        assert!(validate_prefix(&Json::obj(vec![]), false).is_err());
     }
 
     #[test]

@@ -41,6 +41,16 @@ pub struct EngineConfig {
     /// stalls). The registry's admission gate uses the same number so a
     /// lease failure can only mean the gate was bypassed.
     pub kv_budget_mb: f64,
+    /// Page-granular prefix sharing: admission consults the backend's
+    /// prefix index and attaches matched page chains instead of spending
+    /// prefill compute. Invisible to the math (greedy outputs are
+    /// bit-identical to the sharing-disabled path), with one carve-out:
+    /// the engine only attaches when H2O eviction is off, because skipped
+    /// prefill queries contribute no eviction mass and would perturb
+    /// H2O's choices. Off by default.
+    pub prefix_cache: bool,
+    /// Max chains the backend's prefix index registers (0 = unlimited).
+    pub prefix_cache_pages: usize,
 }
 
 impl Default for EngineConfig {
@@ -53,6 +63,8 @@ impl Default for EngineConfig {
             seed: 0,
             kv_page_slots: DEFAULT_PAGE_SLOTS,
             kv_budget_mb: 0.0,
+            prefix_cache: false,
+            prefix_cache_pages: 0,
         }
     }
 }
@@ -69,6 +81,18 @@ impl EngineConfig {
             head_dim: c.d_head,
             layers: c.n_layers,
             kv_heads: c.n_kv_heads,
+        }
+    }
+
+    /// The pool shape this config pins on its backend (one constructor so
+    /// `Engine::new` and the `with_aqua` rebuild can never diverge).
+    fn kv_pool_config(&self, layout: &PoolLayout, max_pages: Option<usize>) -> KvPoolConfig {
+        KvPoolConfig {
+            key_dims: Some(layout.key_dims),
+            page_slots: Some(layout.page_slots),
+            max_pages,
+            prefix_cache: self.prefix_cache,
+            prefix_cache_pages: self.prefix_cache_pages,
         }
     }
 }
@@ -102,11 +126,7 @@ impl Engine {
         }
         let kv_layout = cfg.pool_layout(backend.model_config());
         let kv_budget_pages = budget_pages(cfg.kv_budget_mb, &kv_layout);
-        backend.configure_kv_pool(KvPoolConfig {
-            key_dims: Some(kv_layout.key_dims),
-            page_slots: Some(kv_layout.page_slots),
-            max_pages: kv_budget_pages,
-        })?;
+        backend.configure_kv_pool(cfg.kv_pool_config(&kv_layout, kv_budget_pages))?;
         backend.empty_cache(cfg.batch)?;
         let cap = backend.model_config().max_seq;
         let h2o = H2oPolicy::new(cfg.aqua.h2o_ratio, cfg.h2o_recent_window);
@@ -137,10 +157,36 @@ impl Engine {
     /// page-granular [`LaneKv::live_bytes`]. Mirrors the backend pool's
     /// gauges without a backend call (the equivalence is property-tested
     /// in `tests/kvpool_props.rs`) — embedders can poll this between
-    /// steps.
+    /// steps. With the prefix cache on this is an *upper bound*: pages
+    /// shared between lanes are counted once per holder here, once total
+    /// in the pool (read [`Engine::kv_gauges`] for the deduplicated view).
     pub fn kv_resident_bytes(&self) -> usize {
         let (ps, bps) = (self.kv_layout.page_slots, self.kv_layout.bytes_per_slot());
         self.kv.iter().map(|l| l.live_bytes(ps, bps)).sum()
+    }
+
+    /// The backend pool's point-in-time gauges (shared pages deduplicated;
+    /// the sharded backend sums its workers'). Leak audits poll this after
+    /// a drain: `pages_in_use` must return to zero.
+    pub fn kv_gauges(&mut self) -> crate::kvpool::KvPoolGauges {
+        self.backend.kv_gauges()
+    }
+
+    /// Whether this request is eligible for prefix sharing: the feature is
+    /// on, H2O eviction is off (skipped prefill queries contribute no
+    /// eviction mass, so attaching under H2O would perturb its choices and
+    /// break bit-identity with the cold path), the request wants sampled
+    /// output rather than full prompt logprobs (`score_only` always serves
+    /// cold), and the prompt spans more than one page. Note the one
+    /// observable side effect on eligible requests: `prompt_logprobs`
+    /// covers only *computed* prompt positions, so attached tokens carry
+    /// no teacher-forced entries (generated tokens and their logprobs are
+    /// bit-identical either way).
+    fn prefix_share_ok(&self, req: &GenRequest) -> bool {
+        self.cfg.prefix_cache
+            && !self.h2o.enabled()
+            && !req.score_only
+            && req.prompt.len() > self.kv_layout.page_slots
     }
 
     /// Build the engine from a backend spec (`spec.build()` + `new`).
@@ -183,11 +229,7 @@ impl Engine {
             }
             self.kv_layout = self.cfg.pool_layout(self.backend.model_config());
             self.kv_budget_pages = budget_pages(self.cfg.kv_budget_mb, &self.kv_layout);
-            let pool_cfg = KvPoolConfig {
-                key_dims: Some(self.kv_layout.key_dims),
-                page_slots: Some(self.kv_layout.page_slots),
-                max_pages: self.kv_budget_pages,
-            };
+            let pool_cfg = self.cfg.kv_pool_config(&self.kv_layout, self.kv_budget_pages);
             let rebuilt = match self.backend.configure_kv_pool(pool_cfg) {
                 Ok(()) => self.backend.empty_cache(self.cfg.batch),
                 Err(e) => Err(e),
@@ -285,27 +327,62 @@ impl Engine {
                 );
                 continue;
             }
+            // Prefix sharing: resolve the longest registered page chain of
+            // this prompt before spending prefill compute (or budget). The
+            // attach raises page refcounts; if admission defers after all,
+            // retire_lane() rolls it back.
+            let attach = if self.prefix_share_ok(&req) {
+                let knobs =
+                    AquaKnobs::from_config(&self.cfg.aqua, self.backend.model_config().d_head);
+                match self.backend.attach_prefix(lane, &req.prompt, &knobs) {
+                    Ok(a) => a,
+                    Err(e) => {
+                        crate::log_warn!("attach_prefix failed (serving cold): {e:#}");
+                        Default::default()
+                    }
+                }
+            } else {
+                Default::default()
+            };
             // Memory-aware admission: the FIFO head waits until its
             // worst-case pages fit next to the current occupants' — so a
             // budget-capped pool can never stall mid-decode, for any
             // backend (the sharded workers' per-worker caps are a
-            // backstop, this is the global bound).
+            // backstop, this is the global bound). Pages the prefix index
+            // provably shares with a *live* holder are already covered by
+            // that holder's reservation and are not charged again — a
+            // budget-capped pool stops deferring requests that fit;
+            // resurrected cached pages are new residency and stay charged.
             if let Some(budget) = self.kv_budget_pages {
                 let reserved: usize = self.kv_reserved.iter().sum();
-                if reserved + need > budget {
+                let attached_pages = attach.tokens / self.kv_layout.page_slots;
+                let live_shared = attached_pages - attach.resurrected_pages;
+                let charge = need - live_shared;
+                if reserved + charge > budget {
+                    if attach.tokens > 0 {
+                        self.backend.retire_lane(lane);
+                    }
                     self.queue.push_front(req);
                     break;
                 }
+                // the lane's standing reservation is its full worst case:
+                // shared pages must stay covered even after their donor
+                // retires (the refs this lane holds keep them resident)
                 self.kv_reserved[lane] = need;
             }
             self.kv[lane].reset();
             self.lanes.occupy(lane, req.id);
+            if attach.tokens > 0 {
+                // adopted positions are already written and attendable
+                self.kv[lane].commit_write(attach.tokens);
+                self.metrics.record_prefix_hits(attach.tokens as u64);
+            }
             self.active[lane] = Some(ActiveReq {
-                prompt_fed: 0,
+                prompt_fed: attach.tokens,
                 generated: vec![],
                 prompt_logprobs: vec![],
                 gen_logprobs: vec![],
-                next_pos: 0,
+                next_pos: attach.tokens,
                 pending_token: -1,
                 started_at: Instant::now(),
                 first_token_at: None,

@@ -33,6 +33,10 @@ struct Inner {
     /// Live (attendable) slots at the last gauge sample — the
     /// page-utilization numerator.
     kv_live_slots: u64,
+    /// Prompt tokens served from the prefix cache (pages attached instead
+    /// of prefilled). `prompt_tokens` counts only *computed* tokens, so
+    /// `prefix_hit_tokens + prompt_tokens` is the total prompt volume.
+    prefix_hit_tokens: u64,
     wall_start: Option<std::time::Instant>,
 }
 
@@ -83,6 +87,17 @@ pub struct Snapshot {
     /// Lease attempts refused by the page budget (should stay 0 — the
     /// admission gate sheds before the pool stalls).
     pub kv_alloc_stalls: u64,
+    /// Pool headroom: pages still leasable before the cap (for unbudgeted
+    /// deployments, before the never-stalling worst-case bound).
+    pub kv_pages_free: u64,
+    /// Pages currently mapped by more than one lane (prefix sharing).
+    pub kv_shared_pages: u64,
+    /// Cumulative copy-on-write page copies.
+    pub kv_cow_copies: u64,
+    /// Prompt tokens served by attaching shared prefix pages instead of
+    /// running prefill (`prompt_tokens` counts only computed tokens —
+    /// the two reconcile to the total submitted prompt volume).
+    pub prefix_hit_tokens: u64,
 }
 
 impl Metrics {
@@ -140,6 +155,11 @@ impl Metrics {
         i.kv_live_slots = live_slots;
     }
 
+    /// Record prompt tokens served from the prefix cache (no prefill run).
+    pub fn record_prefix_hits(&self, tokens: u64) {
+        self.inner.lock().unwrap().prefix_hit_tokens += tokens;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         use crate::util::{mean, percentile};
         let i = self.inner.lock().unwrap();
@@ -186,6 +206,10 @@ impl Metrics {
                 }
             },
             kv_alloc_stalls: i.kv.alloc_stalls,
+            kv_pages_free: i.kv.pages_free,
+            kv_shared_pages: i.kv.shared_pages,
+            kv_cow_copies: i.kv.cow_copies,
+            prefix_hit_tokens: i.prefix_hit_tokens,
         }
     }
 }
@@ -218,6 +242,13 @@ impl Snapshot {
         self.kv_resident_peak_bytes += o.kv_resident_peak_bytes;
         self.kv_pages_in_use += o.kv_pages_in_use;
         self.kv_alloc_stalls += o.kv_alloc_stalls;
+        // headroom is per-pool capacity and adds like the pages it counts;
+        // the *budget* sentinel (kv_pages_total = 0 = unlimited) lives in
+        // the admission stats, not here
+        self.kv_pages_free += o.kv_pages_free;
+        self.kv_shared_pages += o.kv_shared_pages;
+        self.kv_cow_copies += o.kv_cow_copies;
+        self.prefix_hit_tokens += o.prefix_hit_tokens;
         self.p50_ttft_ms = self.p50_ttft_ms.max(o.p50_ttft_ms);
         self.p99_ttft_ms = self.p99_ttft_ms.max(o.p99_ttft_ms);
         self.requests_done += o.requests_done;
@@ -237,13 +268,25 @@ impl Snapshot {
         };
     }
 
+    /// Fraction of the total submitted prompt volume served from the
+    /// prefix cache (`hits / (hits + computed prompt tokens)`).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hit_tokens + self.prompt_tokens;
+        if total > 0 {
+            self.prefix_hit_tokens as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests={} gen_tokens={} prompt_tokens={} decode_calls={} prefill_calls={}\n\
              decode {:.2}s ({:.1} tok/s) prefill {:.2}s | wall {:.1} tok/s\n\
              ttft mean {:.2}ms p50 {:.2}ms p99 {:.2}ms | latency mean {:.2}ms | h2o_evictions={}\n\
              kernels dense={} sparse={} packed={} | score path {:.2}µs/decode\n\
-             kv resident {:.1}KiB (peak {:.1}KiB) pages={} util {:.0}% stalls={}",
+             kv resident {:.1}KiB (peak {:.1}KiB) pages={} util {:.0}% stalls={} free={}\n\
+             prefix hits={} tok ({:.0}% of prompt volume) shared_pages={} cow={}",
             self.requests_done, self.tokens_generated, self.prompt_tokens,
             self.decode_calls, self.prefill_calls, self.decode_time_s,
             self.decode_tok_per_s, self.prefill_time_s, self.wall_tok_per_s,
@@ -256,6 +299,11 @@ impl Snapshot {
             self.kv_pages_in_use,
             100.0 * self.kv_page_utilization,
             self.kv_alloc_stalls,
+            self.kv_pages_free,
+            self.prefix_hit_tokens,
+            100.0 * self.prefix_hit_rate(),
+            self.kv_shared_pages,
+            self.kv_cow_copies,
         )
     }
 }
@@ -335,6 +383,32 @@ mod tests {
         assert_eq!(a.kv_pages_in_use, 4);
         let want = (10.0 / 16.0 + 3.0) / 4.0;
         assert!((a.kv_page_utilization - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefix_hits_reconcile_with_prompt_tokens() {
+        let m = Metrics::default();
+        // 48 computed prompt tokens + 64 served from the prefix cache
+        m.record_prefill(Duration::from_millis(1), 48);
+        m.record_prefix_hits(48);
+        m.record_prefix_hits(16);
+        let g = KvPoolGauges { pages_free: 5, shared_pages: 2, cow_copies: 1, ..Default::default() };
+        m.record_kv(&g, 0);
+        let s = m.snapshot();
+        assert_eq!(s.prefix_hit_tokens, 64);
+        assert!((s.prefix_hit_rate() - 64.0 / 112.0).abs() < 1e-12);
+        assert_eq!(s.kv_pages_free, 5);
+        assert_eq!(s.kv_shared_pages, 2);
+        assert_eq!(s.kv_cow_copies, 1);
+        assert!(s.report().contains("prefix hits=64"));
+        // fleet merge sums hit volume and pool gauges
+        let mut a = s.clone();
+        a.merge(&s);
+        assert_eq!(a.prefix_hit_tokens, 128);
+        assert_eq!(a.kv_pages_free, 10);
+        assert_eq!(a.kv_shared_pages, 4);
+        assert_eq!(a.kv_cow_copies, 2);
+        assert!((a.prefix_hit_rate() - 128.0 / 224.0).abs() < 1e-12);
     }
 
     #[test]

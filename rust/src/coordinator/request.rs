@@ -49,7 +49,11 @@ pub struct GenResult {
     pub id: u64,
     pub tokens: Vec<i32>,
     /// Log-prob of each *prompt* token given its prefix (teacher-forced),
-    /// starting from prompt position 1. Filled for score_only requests.
+    /// starting from prompt position 1. Filled for score_only requests
+    /// (which always run the full prompt). On an engine with the prefix
+    /// cache enabled, sampling requests whose prefix was served from
+    /// shared pages carry entries only for the *computed* tail — skipped
+    /// positions produced no logits.
     pub prompt_logprobs: Vec<f32>,
     /// Log-prob of each generated token.
     pub gen_logprobs: Vec<f32>,

@@ -1,13 +1,19 @@
 //! Per-lane page table: which pool page backs each `page_slots`-sized
 //! window of the lane's token positions.
 //!
-//! Leasing is on demand at the write path (`ensure`); freeing happens in
-//! two places — [`LanePageTable::reclaim`] returns pages the engine's H2O
-//! policy has fully evicted (no live slot in the mask, page fully behind
-//! the write cursor), and [`LanePageTable::release_all`] drops everything
-//! on lane retirement. Positions are monotonic within a lane's lifetime
-//! (the engine resets lanes between requests), so a reclaimed page is
-//! never written again by the same occupant.
+//! Leasing is on demand at the write path ([`LanePageTable::ensure_mut`],
+//! which also performs **copy-on-write** when the backing page is shared
+//! with another lane); freeing happens in two places —
+//! [`LanePageTable::reclaim`] returns pages the engine's H2O policy has
+//! fully evicted (no live slot in the mask, page fully behind the write
+//! cursor), and [`LanePageTable::release_all`] drops everything on lane
+//! retirement. With refcounted pages both paths *drop this lane's
+//! reference*; the pool frees the page only when the last holder lets go.
+//! Prefix sharing maps already-resident pages into a fresh lane via
+//! [`LanePageTable::adopt`] + [`LanePageTable::set_written`] (the caller
+//! retains/resurrects the pool refs). Positions are monotonic within a
+//! lane's lifetime (the engine resets lanes between requests), so a
+//! reclaimed page is never written again by the same occupant.
 
 use anyhow::Result;
 
@@ -38,6 +44,11 @@ impl LanePageTable {
         self.pages.iter().flatten().count()
     }
 
+    /// Capacity of the table in pages (`ceil(max_seq / page_slots)`).
+    pub fn num_pages(&self) -> usize {
+        self.pages.len()
+    }
+
     /// Lease-on-demand: the page backing index `idx`, leasing a fresh one
     /// from the pool on first touch.
     pub fn ensure(&mut self, pool: &mut PagePool, idx: usize) -> Result<u32> {
@@ -51,14 +62,42 @@ impl LanePageTable {
         }
     }
 
+    /// `ensure` for the *write* path: a page shared with another holder is
+    /// copied first (lease fresh, memcpy resident dims, drop one ref), so
+    /// writes never leak into someone else's context.
+    pub fn ensure_mut(&mut self, pool: &mut PagePool, idx: usize) -> Result<u32> {
+        let id = self.ensure(pool, idx)?;
+        if pool.ref_count(id) < 2 {
+            return Ok(id);
+        }
+        let fresh = pool.cow(id)?;
+        self.pages[idx] = Some(fresh);
+        Ok(fresh)
+    }
+
+    /// Map an already-resident pool page (a shared prefix chunk) into this
+    /// lane at page index `idx`. The caller holds the pool reference
+    /// (retain/resurrect); this only records the mapping.
+    pub fn adopt(&mut self, idx: usize, id: u32) {
+        debug_assert!(self.pages[idx].is_none(), "adopt over a mapped page");
+        self.pages[idx] = Some(id);
+    }
+
+    /// Place the write cursor after an adopted prefix (the attached
+    /// positions were written by the donor).
+    pub fn set_written(&mut self, n: usize) {
+        self.written = n;
+    }
+
     /// Advance the write cursor over `pos`.
     pub fn note_write(&mut self, pos: usize) {
         self.written = self.written.max(pos + 1);
     }
 
-    /// Free every leased page that is fully behind the write cursor and
-    /// has no live slot left in `slot_mask` (H2O evicted them all).
-    /// Returns the number of pages reclaimed.
+    /// Drop this lane's reference to every mapped page that is fully
+    /// behind the write cursor and has no live slot left in `slot_mask`
+    /// (H2O evicted them all) — the pool frees a page once its last
+    /// holder lets go. Returns the number of pages unmapped.
     pub fn reclaim(&mut self, pool: &mut PagePool, slot_mask: &[f32]) -> usize {
         let ps = pool.layout().page_slots;
         let mut freed = 0;
@@ -80,7 +119,8 @@ impl LanePageTable {
         freed
     }
 
-    /// Lane retirement: free everything and rewind the cursor.
+    /// Lane retirement: drop every mapped page's reference and rewind the
+    /// cursor.
     pub fn release_all(&mut self, pool: &mut PagePool) -> usize {
         let mut freed = 0;
         for slot in &mut self.pages {
@@ -145,6 +185,33 @@ mod tests {
         assert_eq!(pool.pages_in_use(), 2);
         // idempotent
         assert_eq!(t.reclaim(&mut pool, &mask), 0);
+    }
+
+    #[test]
+    fn ensure_mut_cows_shared_pages_only() {
+        let mut pool = pool();
+        let mut donor = LanePageTable::new(4);
+        let page = donor.ensure(&mut pool, 0).unwrap();
+        pool.page_mut(page)[2] = 3.5;
+        donor.note_write(3);
+
+        // a second lane adopts the page (sharing); its first write copies
+        let mut sharer = LanePageTable::new(4);
+        pool.retain(page).unwrap();
+        sharer.adopt(0, page);
+        sharer.set_written(4);
+        assert_eq!(sharer.ensure(&mut pool, 0).unwrap(), page, "reads stay in place");
+        let copy = sharer.ensure_mut(&mut pool, 0).unwrap();
+        assert_ne!(copy, page, "write to a shared page must cow");
+        assert_eq!(pool.page(copy)[2], 3.5, "cow carries the content");
+        assert_eq!(pool.ref_count(page), 1);
+        assert_eq!(pool.gauges().cow_copies, 1);
+
+        // unshared pages write in place
+        assert_eq!(sharer.ensure_mut(&mut pool, 0).unwrap(), copy);
+        assert_eq!(pool.gauges().cow_copies, 1);
+        assert_eq!(donor.release_all(&mut pool) + sharer.release_all(&mut pool), 2);
+        assert_eq!(pool.pages_in_use(), 0);
     }
 
     #[test]

@@ -41,11 +41,27 @@
 //! always available when the backend asks — lease failure is a bug
 //! surfaced as a deterministic error, never an over-allocation.
 
+//! **Prefix sharing & copy-on-write (PR 5).** Pages are refcounted and
+//! content-addressed: a full prompt chunk written under fixed knobs gets a
+//! token-chain [`prefix::PrefixIndex`] key, and a later request whose
+//! prompt shares that chain *adopts* the resident pages instead of
+//! re-running prefill — one prefill serves every lane with the prefix.
+//! Shared pages are read in place (scores don't care who owns a page);
+//! a write to one goes through copy-on-write
+//! ([`LanePageTable::ensure_mut`]); H2O reclaim and lane retirement drop
+//! references, freeing only at refcount zero. Freed pages that still
+//! carry a key stay "cached" on the free list — reusable by any lease,
+//! but resurrectable with their content until recycled — so the AQUA
+//! twist compounds: shared pages store the same *truncated* `mem_dims(d)`
+//! keys, and sharing multiplies the `kv_keep` savings byte-for-byte.
+
 pub mod lane;
 pub mod pool;
+pub mod prefix;
 
 pub use lane::LanePageTable;
 pub use pool::{PagePool, PoolLayout};
+pub use prefix::{PrefixIndex, Register};
 
 /// Default page size in token slots. Matches the native prefill chunk so
 /// one prefill call touches at most two pages per lane.
@@ -66,6 +82,13 @@ pub struct KvPoolGauges {
     pub pages_in_use: u64,
     /// High-water mark of distinct pages ever leased.
     pub pages_hwm: u64,
+    /// Pool headroom: pages still leasable before the cap
+    /// (`max_pages - pages_in_use`). For an unbudgeted deployment the cap
+    /// is the worst case the batch can ever touch (which never stalls),
+    /// so the headroom is to that bound, not to a memory budget.
+    pub pages_free: u64,
+    /// Pages currently mapped by more than one lane (prefix sharing).
+    pub shared_pages: u64,
     /// Token slots per page (0 when no pool is configured).
     pub page_slots: u64,
     /// Bytes per page (0 when no pool is configured).
@@ -78,6 +101,8 @@ pub struct KvPoolGauges {
     /// (admission should keep this at 0; nonzero means the budget gate and
     /// the pool disagree).
     pub alloc_stalls: u64,
+    /// Cumulative copy-on-write page copies (a write hit a shared page).
+    pub cow_copies: u64,
 }
 
 impl KvPoolGauges {
@@ -88,11 +113,14 @@ impl KvPoolGauges {
         self.backing_bytes += o.backing_bytes;
         self.pages_in_use += o.pages_in_use;
         self.pages_hwm += o.pages_hwm;
+        self.pages_free += o.pages_free;
+        self.shared_pages += o.shared_pages;
         self.page_slots = self.page_slots.max(o.page_slots);
         self.page_bytes = self.page_bytes.max(o.page_bytes);
         self.leases += o.leases;
         self.frees += o.frees;
         self.alloc_stalls += o.alloc_stalls;
+        self.cow_copies += o.cow_copies;
     }
 }
 
@@ -110,6 +138,11 @@ pub struct KvPoolConfig {
     /// units); `None` = worst case (`batch · ceil(max_seq / page_slots)`),
     /// which can never stall.
     pub max_pages: Option<usize>,
+    /// Enable page-granular prefix sharing: register full prompt chunks in
+    /// a [`PrefixIndex`] and let `attach_prefix` map them into new lanes.
+    pub prefix_cache: bool,
+    /// Max chains the prefix index registers (0 = unlimited).
+    pub prefix_cache_pages: usize,
 }
 
 /// Pages a `kv_budget_mb` megabyte budget buys under `layout`; `None` when
@@ -151,29 +184,38 @@ mod tests {
             backing_bytes: 200,
             pages_in_use: 1,
             pages_hwm: 2,
+            pages_free: 7,
+            shared_pages: 1,
             page_slots: 16,
             page_bytes: 100,
             leases: 3,
             frees: 1,
             alloc_stalls: 0,
+            cow_copies: 1,
         };
         let b = KvPoolGauges {
             resident_bytes: 50,
             backing_bytes: 100,
             pages_in_use: 1,
             pages_hwm: 1,
+            pages_free: 3,
+            shared_pages: 0,
             page_slots: 16,
             page_bytes: 100,
             leases: 1,
             frees: 0,
             alloc_stalls: 2,
+            cow_copies: 0,
         };
         a.merge(&b);
         assert_eq!(a.resident_bytes, 150);
         assert_eq!(a.pages_in_use, 2);
         assert_eq!(a.pages_hwm, 3);
+        assert_eq!(a.pages_free, 10, "shard headroom adds");
+        assert_eq!(a.shared_pages, 1);
         assert_eq!(a.page_slots, 16);
         assert_eq!(a.leases, 4);
         assert_eq!(a.alloc_stalls, 2);
+        assert_eq!(a.cow_copies, 1);
     }
 }

@@ -1,10 +1,23 @@
-//! The block allocator: fixed-size KV pages with a free list.
+//! The block allocator: fixed-size KV pages with a free list, refcounts,
+//! and content identity.
 //!
 //! Backing storage grows lazily — the data vector extends by one page at a
 //! time up to `max_pages`, so a pool sized for the worst case costs only
 //! what the high-water mark of concurrent context actually touched.
 //! Freed pages go on a free list and are recycled (zeroed at lease) before
 //! the backing vector grows again.
+//!
+//! Since the prefix-sharing refactor a page is **refcounted**: several
+//! lanes may map the same page ([`PagePool::retain`]), `free` decrements
+//! and only returns the page to the free list at refcount zero, and a
+//! write to a shared page goes through [`PagePool::cow`] (lease a fresh
+//! page, memcpy the resident dims, drop one ref). A page can also carry a
+//! **content key** ([`PagePool::set_page_key`]) — the token-chain identity
+//! the [`super::PrefixIndex`] resolves shared prefixes by. Keyed pages
+//! whose last ref drops are returned to the free list *with their content
+//! and key intact* ("cached"): they count as free (reusable — a later
+//! lease zeroes and unkeys them), but an attach that arrives first can
+//! [`PagePool::resurrect`] them without re-running prefill.
 
 use anyhow::{bail, Result};
 
@@ -72,11 +85,21 @@ pub struct PagePool {
     layout: PoolLayout,
     max_pages: usize,
     data: Vec<f32>,
-    free: Vec<u32>,
+    /// Free pages with no content identity — the O(1) hot-path pop.
+    free_plain: Vec<u32>,
+    /// Free pages still carrying a key ("cached"): resurrectable until a
+    /// plain lease runs out of growth and recycles them.
+    free_cached: Vec<u32>,
     leased: Vec<bool>,
+    /// Per-page refcount (0 while free/cached).
+    refs: Vec<u32>,
+    /// Per-page content identity (token-chain hash; 0 = none). Survives
+    /// the last free so the page stays resurrectable until recycled.
+    keys: Vec<u64>,
     leases: u64,
     frees: u64,
     stalls: u64,
+    cow_copies: u64,
 }
 
 impl PagePool {
@@ -85,11 +108,15 @@ impl PagePool {
             layout,
             max_pages,
             data: vec![],
-            free: vec![],
+            free_plain: vec![],
+            free_cached: vec![],
             leased: vec![],
+            refs: vec![],
+            keys: vec![],
             leases: 0,
             frees: 0,
             stalls: 0,
+            cow_copies: 0,
         }
     }
 
@@ -101,47 +128,169 @@ impl PagePool {
         self.max_pages
     }
 
-    /// Lease one zeroed page: recycle from the free list, else grow the
-    /// backing vector. Errors (after counting an alloc stall) when
-    /// `max_pages` are already leased — the admission layer's reservation
-    /// gate exists so this never fires in a correctly configured
-    /// deployment.
-    pub fn lease(&mut self) -> Result<u32> {
+    /// Turn a popped free page into a fresh zeroed single-ref lease.
+    fn reset_page(&mut self, id: u32) {
         let elems = self.layout.page_elems();
-        if let Some(id) = self.free.pop() {
-            let base = id as usize * elems;
-            self.data[base..base + elems].fill(0.0);
-            self.leased[id as usize] = true;
-            self.leases += 1;
+        let base = id as usize * elems;
+        self.data[base..base + elems].fill(0.0);
+        self.leased[id as usize] = true;
+        self.refs[id as usize] = 1;
+        self.keys[id as usize] = 0;
+        self.leases += 1;
+    }
+
+    /// Lease one zeroed page. Preference order: the newest *plain* free
+    /// page (O(1) pop — the hot write path never scans), then backing
+    /// growth, then — only when growth is exhausted — recycling a cached
+    /// (keyed) page, so resurrectable prefix content survives as long as
+    /// the budget allows (the budget caps *leased* pages; freed backing
+    /// stays allocated for reuse either way, exactly as before). Errors
+    /// (after counting an alloc stall) when `max_pages` are already
+    /// leased — the admission layer's reservation gate exists so this
+    /// never fires in a correctly configured deployment.
+    pub fn lease(&mut self) -> Result<u32> {
+        if let Some(id) = self.free_plain.pop() {
+            self.reset_page(id);
             return Ok(id);
         }
         let hwm = self.leased.len();
-        if hwm >= self.max_pages {
-            self.stalls += 1;
-            bail!(
-                "kv pool exhausted: {} pages leased of max {} (budget too small for this load)",
-                self.pages_in_use(),
-                self.max_pages
-            );
+        if hwm < self.max_pages {
+            let elems = self.layout.page_elems();
+            self.data.resize((hwm + 1) * elems, 0.0);
+            self.leased.push(true);
+            self.refs.push(1);
+            self.keys.push(0);
+            self.leases += 1;
+            return Ok(hwm as u32);
         }
-        self.data.resize((hwm + 1) * elems, 0.0);
-        self.leased.push(true);
-        self.leases += 1;
-        Ok(hwm as u32)
+        if let Some(id) = self.free_cached.pop() {
+            self.reset_page(id);
+            return Ok(id);
+        }
+        self.stalls += 1;
+        bail!(
+            "kv pool exhausted: {} pages leased of max {} (budget too small for this load)",
+            self.pages_in_use(),
+            self.max_pages
+        );
     }
 
-    /// Return a page to the free list. Double-frees and unknown ids error.
+    /// Add one reference to a leased page (a second lane mapping it).
+    pub fn retain(&mut self, id: u32) -> Result<()> {
+        match self.leased.get(id as usize).copied() {
+            Some(true) => {
+                self.refs[id as usize] += 1;
+                Ok(())
+            }
+            Some(false) => bail!("kv pool: retain of free page {id}"),
+            None => bail!("kv pool: retain of unknown page {id}"),
+        }
+    }
+
+    /// Drop one reference; the page returns to the free list when the last
+    /// ref drops (keyed pages keep content + key — "cached" — until a
+    /// plain lease recycles them). Double-frees and unknown ids error.
     pub fn free(&mut self, id: u32) -> Result<()> {
-        match self.leased.get_mut(id as usize) {
-            Some(l @ true) => {
-                *l = false;
-                self.free.push(id);
-                self.frees += 1;
+        match self.leased.get(id as usize).copied() {
+            Some(true) => {
+                self.refs[id as usize] -= 1;
+                if self.refs[id as usize] == 0 {
+                    self.leased[id as usize] = false;
+                    if self.keys[id as usize] == 0 {
+                        self.free_plain.push(id);
+                    } else {
+                        self.free_cached.push(id);
+                    }
+                    self.frees += 1;
+                }
                 Ok(())
             }
             Some(false) => bail!("kv pool: double free of page {id}"),
             None => bail!("kv pool: free of unknown page {id}"),
         }
+    }
+
+    /// Revive a cached page (free, key intact, content intact) as a fresh
+    /// single-ref lease *without* zeroing — the prefix-attach fast path.
+    /// Errors if the page is leased, was recycled, or carries another key.
+    pub fn resurrect(&mut self, id: u32, key: u64) -> Result<()> {
+        match self.leased.get(id as usize).copied() {
+            Some(false) if key != 0 && self.keys[id as usize] == key => {
+                let at = self
+                    .free_cached
+                    .iter()
+                    .position(|&f| f == id)
+                    .ok_or_else(|| anyhow::anyhow!("kv pool: cached page {id} not on free list"))?;
+                self.free_cached.swap_remove(at);
+                self.leased[id as usize] = true;
+                self.refs[id as usize] = 1;
+                self.leases += 1;
+                Ok(())
+            }
+            Some(false) => bail!("kv pool: page {id} no longer caches key {key:#x}"),
+            Some(true) => bail!("kv pool: resurrect of leased page {id}"),
+            None => bail!("kv pool: resurrect of unknown page {id}"),
+        }
+    }
+
+    /// Copy-on-write: lease a fresh page, memcpy the shared page's resident
+    /// content into it, and drop one ref from the original. The copy is
+    /// unkeyed (its content is about to diverge). Errors if the page is
+    /// not actually shared (refs < 2) or the pool is exhausted.
+    pub fn cow(&mut self, id: u32) -> Result<u32> {
+        if self.leased.get(id as usize) != Some(&true) || self.refs[id as usize] < 2 {
+            bail!("kv pool: cow of unshared page {id}");
+        }
+        let fresh = self.lease()?;
+        let elems = self.layout.page_elems();
+        let src = id as usize * elems;
+        self.data.copy_within(src..src + elems, fresh as usize * elems);
+        self.refs[id as usize] -= 1;
+        self.cow_copies += 1;
+        Ok(fresh)
+    }
+
+    /// Stamp a leased page's content identity (the prefix chain hash).
+    pub fn set_page_key(&mut self, id: u32, key: u64) -> Result<()> {
+        if self.leased.get(id as usize) != Some(&true) {
+            bail!("kv pool: set_page_key on unleased page {id}");
+        }
+        self.keys[id as usize] = key;
+        Ok(())
+    }
+
+    /// Drop a page's content identity (its index node was displaced or
+    /// refused). A cached page becomes a plain free page again, so the
+    /// hot-path lease recycles it before growing backing. No-op for
+    /// unknown/unkeyed ids.
+    pub fn clear_page_key(&mut self, id: u32) {
+        let Some(k) = self.keys.get_mut(id as usize) else { return };
+        if *k == 0 {
+            return;
+        }
+        *k = 0;
+        if self.leased[id as usize] {
+            return; // still mapped; it frees as plain later
+        }
+        if let Some(at) = self.free_cached.iter().position(|&f| f == id) {
+            self.free_cached.swap_remove(at);
+            self.free_plain.push(id);
+        }
+    }
+
+    /// A page's content key (0 = none / recycled). Valid for leased pages
+    /// and cached (freed-but-keyed) pages alike.
+    pub fn page_key(&self, id: u32) -> u64 {
+        self.keys.get(id as usize).copied().unwrap_or(0)
+    }
+
+    /// Current reference count (0 while free/cached).
+    pub fn ref_count(&self, id: u32) -> u32 {
+        self.refs.get(id as usize).copied().unwrap_or(0)
+    }
+
+    pub fn is_leased(&self, id: u32) -> bool {
+        self.leased.get(id as usize) == Some(&true)
     }
 
     pub fn page(&self, id: u32) -> &[f32] {
@@ -157,12 +306,17 @@ impl PagePool {
     }
 
     pub fn pages_in_use(&self) -> usize {
-        self.leased.len() - self.free.len()
+        self.leased.len() - self.free_plain.len() - self.free_cached.len()
     }
 
     /// Distinct pages ever leased (the backing vector's size in pages).
     pub fn pages_hwm(&self) -> usize {
         self.leased.len()
+    }
+
+    /// Pages currently mapped by more than one holder.
+    pub fn shared_pages(&self) -> usize {
+        self.refs.iter().filter(|&&r| r >= 2).count()
     }
 
     /// Bytes held by currently leased pages.
@@ -176,11 +330,14 @@ impl PagePool {
             backing_bytes: (self.pages_hwm() * self.layout.page_bytes()) as u64,
             pages_in_use: self.pages_in_use() as u64,
             pages_hwm: self.pages_hwm() as u64,
+            pages_free: self.max_pages.saturating_sub(self.pages_in_use()) as u64,
+            shared_pages: self.shared_pages() as u64,
             page_slots: self.layout.page_slots as u64,
             page_bytes: self.layout.page_bytes() as u64,
             leases: self.leases,
             frees: self.frees,
             alloc_stalls: self.stalls,
+            cow_copies: self.cow_copies,
         }
     }
 }
@@ -226,6 +383,7 @@ mod tests {
         assert_eq!(p.page(c)[0], 0.0, "recycled pages are zeroed");
         assert_ne!(b, c);
         assert_eq!(p.resident_bytes(), 2 * p.layout().page_bytes());
+        assert_eq!(p.gauges().pages_free, 2, "headroom = max_pages - in_use");
     }
 
     #[test]
@@ -237,6 +395,7 @@ mod tests {
         assert!(p.lease().is_err());
         assert_eq!(p.gauges().alloc_stalls, 2);
         assert_eq!(p.pages_in_use(), 2);
+        assert_eq!(p.gauges().pages_free, 0);
     }
 
     #[test]
@@ -247,5 +406,94 @@ mod tests {
         assert!(p.free(a).is_err(), "double free must error");
         assert!(p.free(99).is_err(), "unknown id must error");
         assert_eq!(p.gauges().frees, 1);
+    }
+
+    #[test]
+    fn shared_pages_free_once_per_holder() {
+        let mut p = PagePool::new(layout(), 4);
+        let a = p.lease().unwrap();
+        p.retain(a).unwrap();
+        p.retain(a).unwrap();
+        assert_eq!(p.ref_count(a), 3);
+        assert_eq!(p.shared_pages(), 1);
+        assert_eq!(p.gauges().shared_pages, 1);
+        p.free(a).unwrap();
+        p.free(a).unwrap();
+        assert!(p.is_leased(a), "page lives while any holder remains");
+        assert_eq!(p.shared_pages(), 0, "one holder left is not shared");
+        p.free(a).unwrap();
+        assert!(!p.is_leased(a));
+        assert!(p.free(a).is_err(), "refcounts must not underflow");
+        assert!(p.retain(a).is_err(), "cannot retain a free page");
+    }
+
+    #[test]
+    fn cow_copies_content_and_drops_one_ref() {
+        let mut p = PagePool::new(layout(), 4);
+        let a = p.lease().unwrap();
+        p.page_mut(a)[3] = 9.5;
+        assert!(p.cow(a).is_err(), "unshared pages never cow");
+        p.retain(a).unwrap();
+        let b = p.cow(a).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.page(b)[3], 9.5, "cow must copy the resident content");
+        assert_eq!(p.ref_count(a), 1);
+        assert_eq!(p.ref_count(b), 1);
+        assert_eq!(p.gauges().cow_copies, 1);
+        // the copy diverges independently
+        p.page_mut(b)[3] = 1.0;
+        assert_eq!(p.page(a)[3], 9.5);
+    }
+
+    #[test]
+    fn cached_pages_resurrect_with_content_and_stay_reusable() {
+        let mut p = PagePool::new(layout(), 2);
+        let a = p.lease().unwrap();
+        p.page_mut(a)[1] = 4.25;
+        p.set_page_key(a, 0xFEED).unwrap();
+        p.free(a).unwrap();
+        assert_eq!(p.pages_in_use(), 0, "cached pages count as free");
+        assert_eq!(p.page_key(a), 0xFEED, "key survives the last free");
+
+        // wrong key refuses; right key revives without zeroing
+        assert!(p.resurrect(a, 0xBAD).is_err());
+        p.resurrect(a, 0xFEED).unwrap();
+        assert!(p.is_leased(a));
+        assert_eq!(p.page(a)[1], 4.25, "resurrected content is intact");
+        assert!(p.resurrect(a, 0xFEED).is_err(), "cannot resurrect a leased page");
+        p.free(a).unwrap();
+
+        // plain leases prefer unkeyed pages, then recycle cached ones
+        let b = p.lease().unwrap();
+        assert_ne!(b, a, "unkeyed growth preferred over destroying the cache");
+        let c = p.lease().unwrap();
+        assert_eq!(c, a, "cache recycled once nothing else is free");
+        assert_eq!(p.page(c)[1], 0.0, "recycling zeroes");
+        assert_eq!(p.page_key(c), 0, "recycling unkeys");
+        assert!(p.resurrect(a, 0xFEED).is_err());
+    }
+
+    #[test]
+    fn clear_page_key_returns_cached_pages_to_the_plain_pool() {
+        let mut p = PagePool::new(layout(), 4);
+        let a = p.lease().unwrap();
+        p.set_page_key(a, 0xA).unwrap();
+        p.free(a).unwrap();
+        // a displaced/refused registration unkeys: the page becomes plain
+        // free again, so the hot-path lease recycles it before growing
+        p.clear_page_key(a);
+        assert_eq!(p.page_key(a), 0);
+        assert!(p.resurrect(a, 0xA).is_err());
+        let b = p.lease().unwrap();
+        assert_eq!(b, a, "unkeyed page recycles before backing growth");
+        assert_eq!(p.pages_hwm(), 1);
+        // clearing a leased page's key just unkeys it in place
+        p.set_page_key(b, 0xB).unwrap();
+        p.clear_page_key(b);
+        assert_eq!(p.page_key(b), 0);
+        assert!(p.is_leased(b));
+        // unknown / unkeyed ids are no-ops
+        p.clear_page_key(99);
+        p.clear_page_key(b);
     }
 }

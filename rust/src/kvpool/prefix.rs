@@ -1,0 +1,199 @@
+//! Prefix index: content-addressed lookup of shared KV page chains.
+//!
+//! A page's identity is a **token-hash chain**: the running FNV-1a hash of
+//! every prompt token from position 0 through the end of that page, seeded
+//! with a fingerprint of the cache-write knobs (`dim_keep`, projection on/
+//! off) — two pages carry the same key iff the same token prefix was
+//! written under the same knobs into the same backend's pool, which is
+//! exactly when their KV content is bit-identical. The index is a radix
+//! structure in disguise: node `H_c` (the chain after `c` full
+//! `page_slots`-sized chunks) implies all its ancestors, so resolving the
+//! longest reusable chain for a new prompt is a walk that stops at the
+//! first miss.
+//!
+//! The index holds **no references**: a node is a weak pointer validated
+//! against [`PagePool::page_key`] at lookup time (a recycled page's key is
+//! cleared, so stale nodes prune themselves lazily), which keeps the
+//! churn invariant — when the last lane retires, every page's refcount
+//! reaches zero and `kv_pages_in_use` returns to zero; cached chains live
+//! on the free list, resurrectable until recycled. Hash collisions cannot
+//! corrupt the math: each node stores its chunk's token ids and a lookup
+//! whose tokens differ is a miss, never a false share.
+
+use std::collections::HashMap;
+
+use super::pool::PagePool;
+
+/// FNV-1a 64-bit offset basis — the chain seed before the knob
+/// fingerprint is folded in.
+pub const PREFIX_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold one byte into an FNV-1a chain.
+pub fn fold_byte(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(FNV_PRIME)
+}
+
+/// Fold one token id into the chain.
+pub fn fold_token(h: u64, tok: i32) -> u64 {
+    tok.to_le_bytes().iter().fold(h, |h, &b| fold_byte(h, b))
+}
+
+/// Fold one `page_slots`-sized chunk of token ids into the chain.
+pub fn fold_chunk(h: u64, chunk: &[i32]) -> u64 {
+    chunk.iter().fold(h, |h, &t| fold_token(h, t))
+}
+
+struct Node {
+    page: u32,
+    /// The chunk's token ids — compared verbatim at lookup so a 64-bit
+    /// hash collision degrades to a cache miss, never a false share.
+    tokens: Vec<i32>,
+}
+
+/// Outcome of [`PrefixIndex::insert`]. The caller stamps the page key
+/// only on acceptance, and unkeys a displaced page so it cannot linger as
+/// an unreachable "cached" page that plain leases skip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Register {
+    /// Registered under a fresh chain hash.
+    Fresh,
+    /// Registered, displacing the named page's node (unkey that page).
+    Displaced(u32),
+    /// The capacity cap refused the entry.
+    Refused,
+}
+
+/// Chain-hash → page map over registered full prompt chunks.
+pub struct PrefixIndex {
+    nodes: HashMap<u64, Node>,
+    /// Max registered nodes (0 = unlimited); registration beyond the cap
+    /// is refused (existing chains stay valid).
+    capacity: usize,
+}
+
+impl PrefixIndex {
+    pub fn new(capacity: usize) -> PrefixIndex {
+        PrefixIndex { nodes: HashMap::new(), capacity }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Register `page` as holding the chunk whose chain hash is `hash`.
+    /// A node with the same hash is replaced (its page was recycled or the
+    /// chunk was re-written by another lane) and the displaced page id is
+    /// reported so the caller can drop its stale key.
+    pub fn insert(&mut self, hash: u64, page: u32, tokens: Vec<i32>) -> Register {
+        use std::collections::hash_map::Entry;
+        let len = self.nodes.len();
+        match self.nodes.entry(hash) {
+            Entry::Occupied(mut o) => {
+                let old = o.insert(Node { page, tokens });
+                Register::Displaced(old.page)
+            }
+            Entry::Vacant(v) => {
+                if self.capacity != 0 && len >= self.capacity {
+                    return Register::Refused;
+                }
+                v.insert(Node { page, tokens });
+                Register::Fresh
+            }
+        }
+    }
+
+    /// Resolve the page holding chain `hash`, validating both liveness
+    /// (the page still carries this key in `pool` — leased *or* cached)
+    /// and content (the chunk tokens match). Stale nodes are pruned.
+    pub fn lookup(&mut self, pool: &PagePool, hash: u64, chunk: &[i32]) -> Option<u32> {
+        let (page, content_ok) = {
+            let node = self.nodes.get(&hash)?;
+            (node.page, node.tokens == chunk)
+        };
+        if pool.page_key(page) != hash {
+            // the page was recycled (or re-keyed): the node is dead
+            self.nodes.remove(&hash);
+            return None;
+        }
+        if !content_ok {
+            // 64-bit collision: refuse the share, keep the honest entry
+            return None;
+        }
+        Some(page)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pool::PoolLayout;
+    use super::*;
+
+    fn pool() -> PagePool {
+        let layout =
+            PoolLayout { page_slots: 4, key_dims: 2, head_dim: 4, layers: 1, kv_heads: 1 };
+        PagePool::new(layout, 8)
+    }
+
+    #[test]
+    fn chain_is_order_and_value_sensitive() {
+        let h0 = fold_chunk(PREFIX_SEED, &[1, 2, 3, 4]);
+        assert_eq!(h0, fold_chunk(PREFIX_SEED, &[1, 2, 3, 4]));
+        assert_ne!(h0, fold_chunk(PREFIX_SEED, &[1, 2, 4, 3]));
+        assert_ne!(h0, fold_chunk(PREFIX_SEED, &[1, 2, 3, 5]));
+        // chains compose: H(a ++ b) = fold(H(a), b)
+        let ha = fold_chunk(PREFIX_SEED, &[9, 8]);
+        assert_eq!(fold_chunk(ha, &[7, 6]), fold_chunk(PREFIX_SEED, &[9, 8, 7, 6]));
+    }
+
+    #[test]
+    fn lookup_validates_liveness_and_content() {
+        // max_pages 1: growth is exhausted, so the cached page is the one
+        // a plain lease recycles
+        let layout =
+            PoolLayout { page_slots: 4, key_dims: 2, head_dim: 4, layers: 1, kv_heads: 1 };
+        let mut p = PagePool::new(layout, 1);
+        let mut idx = PrefixIndex::new(0);
+        let chunk = [10, 11, 12, 13];
+        let h = fold_chunk(PREFIX_SEED, &chunk);
+        let page = p.lease().unwrap();
+        p.set_page_key(page, h).unwrap();
+        assert_eq!(idx.insert(h, page, chunk.to_vec()), Register::Fresh);
+
+        assert_eq!(idx.lookup(&p, h, &chunk), Some(page));
+        // same hash, different tokens (simulated collision): miss, entry kept
+        assert_eq!(idx.lookup(&p, h, &[10, 11, 12, 99]), None);
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx.lookup(&p, h, &chunk), Some(page));
+
+        // cached (freed, key intact) pages still resolve
+        p.free(page).unwrap();
+        assert_eq!(idx.lookup(&p, h, &chunk), Some(page));
+
+        // a recycling lease clears the key: the node self-prunes
+        let recycled = p.lease().unwrap();
+        assert_eq!(recycled, page, "test setup: the cached page was recycled");
+        assert_eq!(idx.lookup(&p, h, &chunk), None);
+        assert!(idx.is_empty(), "stale node pruned on lookup");
+    }
+
+    #[test]
+    fn capacity_refuses_new_chains_and_reports_displacement() {
+        let mut p = pool();
+        let mut idx = PrefixIndex::new(1);
+        let a = p.lease().unwrap();
+        let b = p.lease().unwrap();
+        let (ha, hb) = (fold_token(PREFIX_SEED, 1), fold_token(PREFIX_SEED, 2));
+        p.set_page_key(a, ha).unwrap();
+        assert_eq!(idx.insert(ha, a, vec![1]), Register::Fresh);
+        assert_eq!(idx.insert(hb, b, vec![2]), Register::Refused, "capacity cap");
+        // replacing an existing hash is not growth, and names the loser
+        assert_eq!(idx.insert(ha, b, vec![1]), Register::Displaced(a));
+        assert_eq!(idx.len(), 1);
+    }
+}

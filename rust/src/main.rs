@@ -37,7 +37,7 @@ use cli::Args;
 
 const USAGE: &str = "usage: aqua <serve|generate|eval|table1|table2|table3|table7|fig2|fig3|fig5|ablation|breakeven|benchcheck|selftest> [flags]
 common flags: --backend auto|native|sharded|pjrt --threads N --seed N --artifacts DIR --model NAME --k-ratio R --s-ratio R --h2o-ratio R --batch N --items N --fast
-serve fleet: --fleet fleet.json | repeated --model name=N,backend=B,k=R,threads=T,batch=B,queue=Q,kv_mb=M [--default-model N] (plain --model NAME [--kv-budget-mb M] serves one deployment named 'default'; kv_mb caps resident KV pages — over-budget requests shed with a memory-pressure 429)";
+serve fleet: --fleet fleet.json | repeated --model name=N,backend=B,k=R,threads=T,batch=B,queue=Q,kv_mb=M,prefix=0|1,prefix_pages=P [--default-model N] (plain --model NAME [--kv-budget-mb M] [--prefix-cache] [--prefix-pages P] serves one deployment named 'default'; kv_mb caps resident KV pages — over-budget requests shed with a memory-pressure 429; prefix enables page-granular prefix sharing: one prefill's KV pages serve every lane with the prefix)";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -109,6 +109,8 @@ fn fleet_registry(args: &Args, arts_dir: &str) -> Result<ModelRegistry> {
             batch: args.usize("batch", 4)?,
             max_inflight: args.usize("queue", aqua_serve::registry::DEFAULT_MAX_INFLIGHT)?,
             kv_budget_mb: args.f64("kv-budget-mb", 0.0)?,
+            prefix_cache: args.switch("prefix-cache"),
+            prefix_cache_pages: args.usize("prefix-pages", 0)?,
             aqua: aqua_from(args)?,
         })?;
     } else {
@@ -285,6 +287,17 @@ fn run(argv: &[String]) -> Result<()> {
                 aqua_serve::bench::report::validate_kvmem(&doc, args.switch("strict"))
                     .with_context(|| format!("validating {kpath}"))?;
                 println!("{kpath} ok (kvmem schema)");
+            }
+            // BENCH_prefix.json (prefixshare bench): same convention.
+            let pdefault = aqua_serve::bench::report::prefix_path().to_string();
+            let ppath = args.str("prefix-path", &pdefault);
+            if std::path::Path::new(&ppath).exists() {
+                let text = std::fs::read_to_string(&ppath)?;
+                let doc = aqua_serve::util::json::Json::parse(&text)
+                    .with_context(|| format!("parsing {ppath}"))?;
+                aqua_serve::bench::report::validate_prefix(&doc, args.switch("strict"))
+                    .with_context(|| format!("validating {ppath}"))?;
+                println!("{ppath} ok (prefixshare schema)");
             }
             Ok(())
         }

@@ -39,6 +39,15 @@ pub struct DeploymentSpec {
     /// page growth the pool cannot cover shed with a distinct
     /// memory-pressure 429 (see `registry::Deployment`).
     pub kv_budget_mb: f64,
+    /// Page-granular prefix sharing: one prefill's KV pages serve every
+    /// lane whose prompt shares the prefix (kv key `prefix`, JSON
+    /// `prefix_cache`). Greedy outputs stay bit-identical to the
+    /// sharing-disabled path; the engine declines to share when H2O
+    /// eviction is active. Off by default.
+    pub prefix_cache: bool,
+    /// Prefix-index capacity in registered page chains (kv key
+    /// `prefix_pages`, JSON `prefix_cache_pages`; 0 = unlimited).
+    pub prefix_cache_pages: usize,
     /// AQUA operating point for every request this deployment serves.
     pub aqua: AquaConfig,
 }
@@ -54,6 +63,8 @@ impl Default for DeploymentSpec {
             batch: 4,
             max_inflight: DEFAULT_MAX_INFLIGHT,
             kv_budget_mb: 0.0,
+            prefix_cache: false,
+            prefix_cache_pages: 0,
             aqua: AquaConfig::default(),
         }
     }
@@ -62,8 +73,9 @@ impl Default for DeploymentSpec {
 impl DeploymentSpec {
     /// Parse a CLI kv-spec: comma-separated `key=value` pairs. Keys:
     /// `name` (required), `backend`, `model`, `seed`, `threads`, `batch`,
-    /// `queue` (max in-flight), `k`/`k_ratio`, `s`/`s_ratio`,
-    /// `h2o`/`h2o_ratio`, `proj` (0/1).
+    /// `queue` (max in-flight), `kv_mb`, `prefix` (0/1 prefix sharing),
+    /// `prefix_pages`, `k`/`k_ratio`, `s`/`s_ratio`, `h2o`/`h2o_ratio`,
+    /// `proj` (0/1).
     pub fn parse_kv(s: &str) -> Result<DeploymentSpec> {
         let mut spec = DeploymentSpec { name: String::new(), ..Default::default() };
         for part in s.split(',') {
@@ -88,6 +100,17 @@ impl DeploymentSpec {
                 "kv_mb" | "kv_budget_mb" => {
                     spec.kv_budget_mb =
                         v.parse().with_context(|| format!("bad kv budget '{v}'"))?
+                }
+                "prefix" | "prefix_cache" => {
+                    spec.prefix_cache = match v {
+                        "1" | "true" | "yes" | "on" => true,
+                        "0" | "false" | "no" | "off" => false,
+                        other => bail!("bad prefix toggle '{other}' (expected 0/1)"),
+                    }
+                }
+                "prefix_pages" | "prefix_cache_pages" => {
+                    spec.prefix_cache_pages =
+                        v.parse().with_context(|| format!("bad prefix_pages '{v}'"))?
                 }
                 "k" | "k_ratio" => {
                     spec.aqua.k_ratio = v.parse().with_context(|| format!("bad k_ratio '{v}'"))?
@@ -132,6 +155,12 @@ impl DeploymentSpec {
         if let Some(v) = j.get("kv_budget_mb").as_f64() {
             spec.kv_budget_mb = v;
         }
+        if let Some(v) = j.get("prefix_cache").as_bool() {
+            spec.prefix_cache = v;
+        }
+        if let Some(v) = j.get("prefix_cache_pages").as_i64() {
+            spec.prefix_cache_pages = v.max(0) as usize;
+        }
         if let Some(v) = j.get("k_ratio").as_f64() {
             spec.aqua.k_ratio = v;
         }
@@ -159,6 +188,8 @@ impl DeploymentSpec {
             ("batch", Json::Num(self.batch as f64)),
             ("max_inflight", Json::Num(self.max_inflight as f64)),
             ("kv_budget_mb", Json::Num(self.kv_budget_mb)),
+            ("prefix_cache", Json::Bool(self.prefix_cache)),
+            ("prefix_cache_pages", Json::Num(self.prefix_cache_pages as f64)),
             ("k_ratio", Json::Num(self.aqua.k_ratio)),
             ("s_ratio", Json::Num(self.aqua.s_ratio)),
             ("h2o_ratio", Json::Num(self.aqua.h2o_ratio)),
@@ -219,6 +250,8 @@ impl DeploymentSpec {
             aqua: self.aqua,
             seed: self.seed,
             kv_budget_mb: self.kv_budget_mb,
+            prefix_cache: self.prefix_cache,
+            prefix_cache_pages: self.prefix_cache_pages,
             ..Default::default()
         }
     }
@@ -231,7 +264,8 @@ mod tests {
     #[test]
     fn kv_roundtrip_through_json() {
         let spec = DeploymentSpec::parse_kv(
-            "name=fast,backend=sharded,k=0.25,threads=2,batch=8,queue=5,kv_mb=2.5",
+            "name=fast,backend=sharded,k=0.25,threads=2,batch=8,queue=5,kv_mb=2.5,prefix=1,\
+             prefix_pages=64",
         )
         .unwrap();
         assert_eq!(spec.name, "fast");
@@ -240,9 +274,34 @@ mod tests {
         assert_eq!(spec.batch, 8);
         assert_eq!(spec.max_inflight, 5);
         assert!((spec.kv_budget_mb - 2.5).abs() < 1e-12);
+        assert!(spec.prefix_cache);
+        assert_eq!(spec.prefix_cache_pages, 64);
         assert!((spec.aqua.k_ratio - 0.25).abs() < 1e-12);
         let back = DeploymentSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn prefix_cache_knob_defaults_and_parses() {
+        // default off on every surface
+        assert!(!DeploymentSpec::default().prefix_cache);
+        let spec = DeploymentSpec::parse_kv("name=a").unwrap();
+        assert!(!spec.prefix_cache);
+        assert_eq!(spec.prefix_cache_pages, 0);
+        // kv surface
+        let on = DeploymentSpec::parse_kv("name=a,prefix=on").unwrap();
+        assert!(on.prefix_cache);
+        assert!(!DeploymentSpec::parse_kv("name=a,prefix=0").unwrap().prefix_cache);
+        assert!(DeploymentSpec::parse_kv("name=a,prefix=maybe").is_err());
+        // JSON surface, and the knob reaches the engine config
+        let j = Json::parse(r#"{"name": "a", "prefix_cache": true, "prefix_cache_pages": 9}"#)
+            .unwrap();
+        let spec = DeploymentSpec::from_json(&j).unwrap();
+        assert!(spec.prefix_cache);
+        assert_eq!(spec.prefix_cache_pages, 9);
+        let ecfg = spec.engine_config();
+        assert!(ecfg.prefix_cache);
+        assert_eq!(ecfg.prefix_cache_pages, 9);
     }
 
     #[test]

@@ -88,6 +88,20 @@ impl KernelCounters {
     }
 }
 
+/// Result of a prefix-cache attach attempt (`ExecBackend::attach_prefix`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixAttach {
+    /// Prompt tokens covered by adopted shared pages (always a multiple of
+    /// the pool's `page_slots`; 0 = no reusable chain).
+    pub tokens: usize,
+    /// Of the adopted pages, how many were *resurrected* from the cached
+    /// (refcount-zero) state rather than shared with a live holder — new
+    /// resident memory the admission accounting must charge to this
+    /// request (live-shared pages are already covered by their holders'
+    /// reservations).
+    pub resurrected_pages: usize,
+}
+
 /// Outputs of one backend step (prefill chunk or decode step).
 #[derive(Debug, Default)]
 pub struct StepOut {
@@ -131,9 +145,35 @@ pub trait ExecBackend {
     }
 
     /// The engine finished (or is recycling) `lane`: backends with paged
-    /// caches free the lane's pages back to the pool. Dense backends
-    /// ignore it (the slots are simply overwritten by the next occupant).
+    /// caches drop the lane's page references (pages free at refcount
+    /// zero). Dense backends ignore it (the slots are simply overwritten
+    /// by the next occupant). Also undoes a prior `attach_prefix` on a
+    /// lane the engine decided not to admit after all.
     fn retire_lane(&mut self, _lane: usize) {}
+
+    /// Try to adopt a shared KV page chain for `lane`'s prompt before any
+    /// prefill work is spent: the longest registered prefix of `tokens`
+    /// (in full `page_slots` chunks, capped so at least one prompt token
+    /// still runs through `prefill` to produce logits) is mapped into the
+    /// lane and its pages' refcounts raised. Returns how much was
+    /// attached; the lane's positions `0..tokens` are then already written
+    /// and attendable. Backends without a prefix cache attach nothing.
+    fn attach_prefix(
+        &mut self,
+        _lane: usize,
+        _tokens: &[i32],
+        _knobs: &AquaKnobs,
+    ) -> Result<PrefixAttach> {
+        Ok(PrefixAttach::default())
+    }
+
+    /// Point-in-time KV pool gauges (the same numbers `StepOut::kv`
+    /// reports, queryable between steps — the engine's memory-aware
+    /// admission and the leak audits use this). Dense backends report
+    /// zeros.
+    fn kv_gauges(&mut self) -> KvPoolGauges {
+        KvPoolGauges::default()
+    }
 
     /// One prefill chunk: `tokens` is [B, C] row-major, `pos0` the per-lane
     /// write position of the chunk's first token, `slot_mask` [B, S] the

@@ -26,7 +26,7 @@ pub mod exec;
 pub use artifacts::{Artifacts, ModelArtifacts};
 pub use backend::{
     corpus_or_synthetic, default_backend, default_spec, default_spec_in, AquaKnobs, BackendRecipe,
-    BackendSpec, ExecBackend, KernelCounters, StepOut,
+    BackendSpec, ExecBackend, KernelCounters, PrefixAttach, StepOut,
 };
 pub use crate::kvpool::{KvPoolConfig, KvPoolGauges};
 pub use native::{synthetic_corpus, NativeBackend, NativeModel, ScoreMode};

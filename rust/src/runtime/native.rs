@@ -53,17 +53,28 @@
 //!   list) lives in a persistent [`Scratch`] owned by the backend, so the
 //!   steady-state decode path allocates nothing but its two output vectors
 //!   (page leases amortize to one allocation per `page_slots` tokens, and
-//!   recycled pages allocate nothing).
+//!   recycled pages allocate nothing);
+//! * with `KvPoolConfig::prefix_cache` on, every full `page_slots`-sized
+//!   chunk of contiguous prompt tokens is registered in a
+//!   [`PrefixIndex`] under its token-chain hash as it is written, and
+//!   `attach_prefix` maps a new lane onto the longest registered chain of
+//!   its prompt (refcounted; reads score shared pages in place, writes
+//!   copy-on-write) — one prefill's pages serve every lane that shares
+//!   the prefix, and skipped prefill work scales with the hit rate. The
+//!   chain hash is seeded with a fingerprint of the cache-shaping knobs,
+//!   so knob changes can never alias content.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use super::backend::{AquaKnobs, ExecBackend, KernelCounters, StepOut};
+use super::backend::{AquaKnobs, ExecBackend, KernelCounters, PrefixAttach, StepOut};
 use crate::aqua::native::{aqua_scores_masked, aqua_scores_packed_cols, project};
+use crate::kvpool::prefix::{fold_byte, fold_chunk, fold_token, Register, PREFIX_SEED};
 use crate::kvpool::{
-    KvPoolConfig, KvPoolGauges, LanePageTable, PagePool, PoolLayout, DEFAULT_PAGE_SLOTS,
+    KvPoolConfig, KvPoolGauges, LanePageTable, PagePool, PoolLayout, PrefixIndex,
+    DEFAULT_PAGE_SLOTS,
 };
 use crate::model::config::ModelConfig;
 use crate::tensor::topk::{topk_indices_into, topk_mask_into};
@@ -218,6 +229,37 @@ fn silu_inplace(xs: &mut [f32]) {
 // ---------------------------------------------------------------------------
 // Paged score path
 // ---------------------------------------------------------------------------
+
+/// Fingerprint of the knobs that shape *cache content* (the AQUA-Memory
+/// keep mask and the projection toggle — `k_dims` only shapes the read
+/// path). Seeds every prefix chain, so pages written under different
+/// knobs can never be mistaken for each other.
+fn knob_fingerprint(knobs: &AquaKnobs) -> u64 {
+    let mut h = fold_byte(PREFIX_SEED, knobs.use_projection as u8);
+    for &keep in &knobs.dim_keep {
+        for b in keep.to_bits().to_le_bytes() {
+            h = fold_byte(h, b);
+        }
+    }
+    h
+}
+
+/// Per-lane prompt-chunk hashing state: tracks the token-chain hash of
+/// the contiguous prompt prefix written so far, so each full page of
+/// prompt tokens can be registered in the prefix index the moment its
+/// last slot is written. Killed by the first decode write (generated
+/// tokens end the shareable prompt) or any non-contiguous write.
+#[derive(Debug, Clone, Default)]
+struct PrefixCursor {
+    /// Chain hash over tokens `0..next` (valid once seeded).
+    hash: u64,
+    /// Next expected contiguous write position.
+    next: usize,
+    /// Tokens of the current (partial) chunk, pending registration.
+    pending: Vec<i32>,
+    seeded: bool,
+    dead: bool,
+}
 
 /// Resolve a [`KvPoolConfig`] against a model shape.
 fn pool_layout(c: &ModelConfig, cfg: &KvPoolConfig) -> PoolLayout {
@@ -388,6 +430,11 @@ pub struct NativeBackend {
     pool_cfg: KvPoolConfig,
     pool: PagePool,
     tables: Vec<LanePageTable>,
+    /// Prefix-sharing index over registered full prompt chunks (empty and
+    /// inert unless `pool_cfg.prefix_cache`).
+    index: PrefixIndex,
+    /// Per-lane prompt-chain hashing state (see [`PrefixCursor`]).
+    cursors: Vec<PrefixCursor>,
     /// Row-major `[L, B, n_kv, S, d]` *shadow* key cache, populated only in
     /// [`ScoreMode::MaskedDense`]: the oracle scores against its own dense
     /// layout and write path, so a bug in the paged dim-major cache or the
@@ -413,6 +460,8 @@ impl NativeBackend {
             pool_cfg: KvPoolConfig::default(),
             pool: PagePool::new(layout, 0),
             tables: vec![],
+            index: PrefixIndex::new(0),
+            cursors: vec![],
             k_cache_rows: vec![],
             scratch,
         }
@@ -490,6 +539,7 @@ impl NativeBackend {
         tokens: &[i32],
         pos0: &[i32],
         t: usize,
+        is_prefill: bool,
         slot_mask: &[f32],
         knobs: &AquaKnobs,
     ) -> Result<StepOut> {
@@ -528,6 +578,11 @@ impl NativeBackend {
         // Row-major [L, B, n_kv, S, d] base for the oracle's dense shadow.
         let vrow_base = |l: usize, lane: usize, g: usize| (((l * b + lane) * nkv + g) * s_cap) * d;
 
+        // Prompt-chunk registration is live only on the shareable path
+        // (the masked-dense oracle keeps an independent write path).
+        let prefix_on = self.pool_cfg.prefix_cache && score_mode != ScoreMode::MaskedDense;
+        let fp = if prefix_on { knob_fingerprint(knobs) } else { 0 };
+
         let mut logits_out = vec![0.0f32; b * t * vocab];
         let mut attn_acc = vec![0.0f32; c.n_layers * b * s_cap];
         let mut kernels = KernelCounters::default();
@@ -537,6 +592,8 @@ impl NativeBackend {
         // model are independent.
         let pool = &mut self.pool;
         let tables = &mut self.tables;
+        let index = &mut self.index;
+        let cursors = &mut self.cursors;
         let k_rows = &mut self.k_cache_rows;
         let sc = &mut self.scratch;
 
@@ -572,8 +629,10 @@ impl NativeBackend {
                 // Lease the page backing this position on first touch (one
                 // page covers every layer and KV head of `page_slots`
                 // consecutive positions, so this is the only lease point).
+                // `ensure_mut` copies first when the page is shared with
+                // another lane — writes never leak into a shared prefix.
                 let page_id = if writable {
-                    let id = tables[lane].ensure(pool, pos / ps)?;
+                    let id = tables[lane].ensure_mut(pool, pos / ps)?;
                     tables[lane].note_write(pos);
                     Some(id)
                 } else {
@@ -755,6 +814,61 @@ impl NativeBackend {
                     }
                 }
 
+                // Prompt-chunk registration: every layer of this token is
+                // now written, so a page whose last slot this was becomes
+                // shareable under its token-chain key. Decode tokens end
+                // the prompt (generated content is never registered), and
+                // so does any *causal impurity*: a token written while the
+                // attendable set was not the full prefix (an H2O hole)
+                // carries KV that is no longer a pure function of the
+                // token chain — sharing it would break warm == cold.
+                if prefix_on {
+                    let pure = sc.att.len() == pos + 1;
+                    let cur = &mut cursors[lane];
+                    if !is_prefill || page_id.is_none() || !pure {
+                        cur.dead = true;
+                    } else {
+                        if !cur.seeded && pos == 0 {
+                            *cur = PrefixCursor { hash: fp, seeded: true, ..Default::default() };
+                        }
+                        if cur.seeded && !cur.dead {
+                            if pos == cur.next {
+                                cur.hash = fold_token(cur.hash, tok_raw);
+                                cur.pending.push(tok_raw);
+                                cur.next += 1;
+                                if cur.next % ps == 0 {
+                                    let chunk = std::mem::take(&mut cur.pending);
+                                    let pid = tables[lane].page((cur.next - 1) / ps);
+                                    if let Some(pid) = pid {
+                                        // only pages this lane owns outright
+                                        // and that carry no identity yet;
+                                        // key the page only when the index
+                                        // accepts it, and unkey a displaced
+                                        // loser so it cannot strand as an
+                                        // unreachable cached page
+                                        if pool.ref_count(pid) == 1 && pool.page_key(pid) == 0 {
+                                            match index.insert(cur.hash, pid, chunk) {
+                                                Register::Refused => {}
+                                                Register::Fresh => {
+                                                    pool.set_page_key(pid, cur.hash)?;
+                                                }
+                                                Register::Displaced(old) => {
+                                                    pool.set_page_key(pid, cur.hash)?;
+                                                    if old != pid {
+                                                        pool.clear_page_key(old);
+                                                    }
+                                                }
+                                            }
+                                        }
+                                    }
+                                }
+                            } else {
+                                cur.dead = true;
+                            }
+                        }
+                    }
+                }
+
                 rmsnorm(&sc.x, &model.final_norm, eps, &mut sc.xf);
                 let row = &mut logits_out[(lane * t + ci) * vocab..(lane * t + ci + 1) * vocab];
                 matvec(&sc.xf, &model.unembed, vocab, row);
@@ -791,6 +905,8 @@ impl ExecBackend for NativeBackend {
         self.batch = b;
         self.pool = PagePool::new(layout, max_pages);
         self.tables = (0..b).map(|_| LanePageTable::new(pages_per_lane)).collect();
+        self.index = PrefixIndex::new(self.pool_cfg.prefix_cache_pages);
+        self.cursors = vec![PrefixCursor::default(); b];
         self.k_cache_rows.clear();
         if self.score_mode == ScoreMode::MaskedDense {
             self.k_cache_rows.resize(self.shadow_elems(b), 0.0);
@@ -807,6 +923,74 @@ impl ExecBackend for NativeBackend {
         if let Some(table) = self.tables.get_mut(lane) {
             table.release_all(&mut self.pool);
         }
+        if let Some(cur) = self.cursors.get_mut(lane) {
+            *cur = PrefixCursor::default();
+        }
+    }
+
+    fn attach_prefix(
+        &mut self,
+        lane: usize,
+        tokens: &[i32],
+        knobs: &AquaKnobs,
+    ) -> Result<PrefixAttach> {
+        let none = PrefixAttach::default();
+        if !self.pool_cfg.prefix_cache || self.score_mode == ScoreMode::MaskedDense {
+            // the oracle scores an independent dense shadow with its own
+            // write path — it must never skip writes, so it never attaches
+            return Ok(none);
+        }
+        let Some(table) = self.tables.get(lane) else {
+            bail!("attach_prefix: lane {lane} out of range (batch {})", self.batch);
+        };
+        if table.written() != 0 || table.leased_pages() != 0 {
+            return Ok(none); // only a fresh lane can adopt a chain
+        }
+        let ps = self.pool.layout().page_slots;
+        if tokens.len() <= ps {
+            return Ok(none);
+        }
+        // Cap the walk so at least one prompt token still runs through
+        // prefill — its logits seed the first sampled token.
+        let max_chunks = ((tokens.len() - 1) / ps).min(table.num_pages());
+        let mut h = knob_fingerprint(knobs);
+        let mut attached = 0usize;
+        let mut resurrected = 0usize;
+        for c in 0..max_chunks {
+            let chunk = &tokens[c * ps..(c + 1) * ps];
+            if chunk.iter().any(|&t| t < 0) {
+                break; // padding sentinels are not content
+            }
+            let h2 = fold_chunk(h, chunk);
+            let Some(page) = self.index.lookup(&self.pool, h2, chunk) else { break };
+            if self.pool.is_leased(page) {
+                self.pool.retain(page)?;
+            } else if self.pool.resurrect(page, h2).is_ok() {
+                resurrected += 1;
+            } else {
+                break; // lost a race with a recycling lease
+            }
+            self.tables[lane].adopt(c, page);
+            attached += ps;
+            h = h2;
+        }
+        if attached > 0 {
+            self.tables[lane].set_written(attached);
+            // seed the cursor past the adopted prefix so the unmatched
+            // tail keeps extending the registered chain
+            self.cursors[lane] = PrefixCursor {
+                hash: h,
+                next: attached,
+                pending: vec![],
+                seeded: true,
+                dead: false,
+            };
+        }
+        Ok(PrefixAttach { tokens: attached, resurrected_pages: resurrected })
+    }
+
+    fn kv_gauges(&mut self) -> KvPoolGauges {
+        self.pool.gauges()
     }
 
     fn prefill(
@@ -818,7 +1002,7 @@ impl ExecBackend for NativeBackend {
         knobs: &AquaKnobs,
     ) -> Result<StepOut> {
         let chunk = self.prefill_chunk;
-        self.step(b, tokens, pos0, chunk, slot_mask, knobs)
+        self.step(b, tokens, pos0, chunk, true, slot_mask, knobs)
     }
 
     fn decode(
@@ -829,7 +1013,7 @@ impl ExecBackend for NativeBackend {
         slot_mask: &[f32],
         knobs: &AquaKnobs,
     ) -> Result<StepOut> {
-        self.step(b, tokens, pos, 1, slot_mask, knobs)
+        self.step(b, tokens, pos, 1, false, slot_mask, knobs)
     }
 }
 

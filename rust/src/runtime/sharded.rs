@@ -26,7 +26,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::backend::{AquaKnobs, ExecBackend, KernelCounters, StepOut};
+use super::backend::{AquaKnobs, ExecBackend, KernelCounters, PrefixAttach, StepOut};
 use super::native::{NativeBackend, NativeModel, ScoreMode};
 use crate::kvpool::{KvPoolConfig, KvPoolGauges};
 use crate::model::config::ModelConfig;
@@ -53,6 +53,19 @@ enum Cmd {
     /// Free one worker-local lane's pages (fire-and-forget, like
     /// SetScoreMode — the ordered channel serializes it against steps).
     RetireLane(usize),
+    /// Prefix-cache attach for one worker-local lane; replies on its own
+    /// channel so the Run gather never sees a stray message. Sharing is
+    /// per worker sub-pool: lanes on the same shard share pages, a prefix
+    /// resident only on another shard falls back to a fresh prefill
+    /// (copy) — cross-shard attach would mean cross-thread page traffic.
+    AttachPrefix {
+        lane: usize,
+        tokens: Vec<i32>,
+        knobs: AquaKnobs,
+        reply: mpsc::Sender<Result<PrefixAttach>>,
+    },
+    /// Point-in-time pool gauges (own reply channel, same reasoning).
+    Gauges(mpsc::Sender<KvPoolGauges>),
     Run { inputs: Arc<StepInputs>, lanes: Range<usize> },
     Shutdown,
 }
@@ -81,6 +94,14 @@ fn spawn_worker(model: Arc<NativeModel>) -> Worker {
                 }
                 Cmd::RetireLane(lane) => {
                     be.retire_lane(lane);
+                    continue;
+                }
+                Cmd::AttachPrefix { lane, tokens, knobs, reply } => {
+                    let _ = reply.send(be.attach_prefix(lane, &tokens, &knobs));
+                    continue;
+                }
+                Cmd::Gauges(reply) => {
+                    let _ = reply.send(be.kv_gauges());
                     continue;
                 }
                 Cmd::Run { inputs, lanes } => {
@@ -320,6 +341,50 @@ impl ExecBackend for ShardedBackend {
                 return;
             }
         }
+    }
+
+    fn attach_prefix(
+        &mut self,
+        lane: usize,
+        tokens: &[i32],
+        knobs: &AquaKnobs,
+    ) -> Result<PrefixAttach> {
+        for (w, shard) in self.workers.iter().zip(&self.shards) {
+            if shard.contains(&lane) {
+                let (reply, rx) = mpsc::channel();
+                let cmd = Cmd::AttachPrefix {
+                    lane: lane - shard.start,
+                    tokens: tokens.to_vec(),
+                    knobs: knobs.clone(),
+                    reply,
+                };
+                w.tx.send(cmd).map_err(|_| anyhow!("sharded worker died"))?;
+                return rx.recv().map_err(|_| anyhow!("sharded worker died"))?;
+            }
+        }
+        Ok(PrefixAttach::default())
+    }
+
+    fn kv_gauges(&mut self) -> KvPoolGauges {
+        // one ask per live shard, gathered after all sends (workers run
+        // concurrently); a dead worker just drops out of the sum
+        let mut pending = vec![];
+        for (w, shard) in self.workers.iter().zip(&self.shards) {
+            if shard.is_empty() {
+                continue;
+            }
+            let (reply, rx) = mpsc::channel();
+            if w.tx.send(Cmd::Gauges(reply)).is_ok() {
+                pending.push(rx);
+            }
+        }
+        let mut total = KvPoolGauges::default();
+        for rx in pending {
+            if let Ok(g) = rx.recv() {
+                total.merge(&g);
+            }
+        }
+        total
     }
 
     fn prefill(

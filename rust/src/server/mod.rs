@@ -8,10 +8,13 @@
 //!     the body (and the `shed_capacity_total`/`shed_memory_total`
 //!     counters) distinguish the in-flight bound from KV memory pressure
 //!     (`kv_budget_mb` cannot cover the request's worst-case page growth).
-//! `GET  /stats` → fleet headline + per-model sections
+//! `GET  /stats` → fleet headline + per-model sections (incl. the
+//!     prefix-cache hit rate: prompt tokens served by attaching shared KV
+//!     pages instead of running prefill)
 //! `GET  /metrics` → full snapshots incl. score-kernel variant counters
-//!     (which AQUA kernel — dense/sparse/packed — actually ran per model)
-//!     and admission queue-depth/shed counters
+//!     (which AQUA kernel — dense/sparse/packed — actually ran per model),
+//!     admission queue-depth/shed counters, and the KV-pool gauges
+//!     (headroom `kv_pages_free`, `kv_shared_pages`, `kv_cow_copies`)
 //! `GET  /models` → deployment specs + live status
 //! `POST /models {spec}` → add a deployment at runtime (409 on name clash)
 //! `DELETE /models/{name}` → drain in-flight requests, join the engine
@@ -165,6 +168,8 @@ fn snapshot_fields(s: &Snapshot, full: bool) -> Vec<(&'static str, Json)> {
         ("p99_ttft_ms", Json::Num(s.p99_ttft_ms)),
         ("h2o_evictions", Json::Num(s.h2o_evictions as f64)),
         ("kv_resident_bytes", Json::Num(s.kv_resident_bytes as f64)),
+        ("prefix_hit_tokens", Json::Num(s.prefix_hit_tokens as f64)),
+        ("prefix_hit_rate", Json::Num(s.prefix_hit_rate())),
     ];
     if full {
         fields.extend([
@@ -178,6 +183,9 @@ fn snapshot_fields(s: &Snapshot, full: bool) -> Vec<(&'static str, Json)> {
             ("wall_tok_per_s", Json::Num(s.wall_tok_per_s)),
             ("kv_resident_peak_bytes", Json::Num(s.kv_resident_peak_bytes as f64)),
             ("kv_pages_in_use", Json::Num(s.kv_pages_in_use as f64)),
+            ("kv_pages_free", Json::Num(s.kv_pages_free as f64)),
+            ("kv_shared_pages", Json::Num(s.kv_shared_pages as f64)),
+            ("kv_cow_copies", Json::Num(s.kv_cow_copies as f64)),
             ("kv_page_utilization", Json::Num(s.kv_page_utilization)),
             ("kv_alloc_stalls", Json::Num(s.kv_alloc_stalls as f64)),
         ]);

@@ -338,3 +338,66 @@ fn fleet_config_example_file_loads() {
     assert_eq!(dep.backend_kind(), "native");
     reg.shutdown_all().unwrap();
 }
+
+#[test]
+fn prefix_cache_knob_round_trips_all_three_surfaces() {
+    // 1) CLI kv-spec surface
+    let kv_spec =
+        DeploymentSpec::parse_kv("name=shared,backend=native,batch=2,prefix=1,prefix_pages=32")
+            .unwrap();
+    assert!(kv_spec.prefix_cache);
+    assert_eq!(kv_spec.prefix_cache_pages, 32);
+
+    // 2) fleet-JSON surface (and the committed example demos the knob)
+    let fleet = Json::parse(
+        r#"{"models": [{"name": "cold", "backend": "native", "batch": 2,
+                        "prefix_cache": false}]}"#,
+    )
+    .unwrap();
+    let reg = ModelRegistry::from_fleet_json(&fleet, "no-such-artifacts-dir").unwrap();
+    reg.deploy(kv_spec.clone()).unwrap();
+    let example = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/fleet.json"
+    ))
+    .unwrap();
+    let example = Json::parse(&example).unwrap();
+    let exact = example.get("models").idx(0);
+    assert_eq!(exact.get("prefix_cache").as_bool(), Some(true), "fleet.json demos the knob");
+    assert!(DeploymentSpec::from_json(exact).unwrap().prefix_cache);
+
+    // 3) GET /models echo round-trips byte-for-byte through from_json
+    let reg = Arc::new(reg);
+    let addr = start_server(reg.clone());
+    let (status, body) = http(addr, "GET", "/models", "");
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).unwrap();
+    let models = doc.get("models").as_arr().unwrap();
+    let echoed = models
+        .iter()
+        .find(|m| m.get("name").as_str() == Some("shared"))
+        .expect("deployed model echoed");
+    assert_eq!(echoed.get("prefix_cache").as_bool(), Some(true));
+    assert_eq!(echoed.get("prefix_cache_pages").as_i64(), Some(32));
+    let back = DeploymentSpec::from_json(echoed).unwrap();
+    assert_eq!(back, kv_spec, "GET /models echo must round-trip the spec");
+    let cold = models.iter().find(|m| m.get("name").as_str() == Some("cold")).unwrap();
+    assert_eq!(cold.get("prefix_cache").as_bool(), Some(false));
+
+    // the serving metrics expose the prefix/pool observability everywhere
+    let m = metrics(addr);
+    for field in ["prefix_hit_tokens", "prefix_hit_rate"] {
+        assert!(m.get(field).as_f64().is_some(), "fleet aggregate missing {field}");
+        assert!(
+            m.get("models").get("shared").get(field).as_f64().is_some(),
+            "per-model section missing {field}"
+        );
+    }
+    for field in ["kv_pages_free", "kv_shared_pages", "kv_cow_copies"] {
+        assert!(
+            m.get("models").get("shared").get(field).as_f64().is_some(),
+            "per-model section missing {field}"
+        );
+    }
+    reg.shutdown_all().unwrap();
+}

@@ -448,3 +448,492 @@ fn budget_pages_and_engine_pool_agree() {
     assert_eq!(snap.kv_alloc_stalls, 0, "budget-sized load must never stall the pool");
     assert!(snap.kv_resident_peak_bytes > 0);
 }
+
+// ---------------------------------------------------------------------------
+// Prefix sharing & copy-on-write (PR 5)
+// ---------------------------------------------------------------------------
+
+/// Attach whatever the prefix cache resolves for each lane, then feed the
+/// rest of every prompt through chunked prefill calls. Returns the tokens
+/// attached per lane (0 = served cold). Lanes with empty prompts are left
+/// untouched, so a donor can be fed alone in a multi-lane batch —
+/// `base_mask` must carry the true slot mask of any lane already holding
+/// context (the backend's reclaim trusts the mask, like the engine's
+/// `flat_mask` contract).
+fn feed_prompts(
+    be: &mut dyn ExecBackend,
+    prompts: &[Vec<i32>],
+    base_mask: &[f32],
+    knobs: &AquaKnobs,
+) -> Vec<usize> {
+    let b = prompts.len();
+    let s_cap = be.model_config().max_seq;
+    let chunk = be.prefill_chunk();
+    let mut mask = base_mask.to_vec();
+    assert_eq!(mask.len(), b * s_cap, "base mask shape");
+    let mut fed: Vec<usize> = (0..b)
+        .map(|lane| be.attach_prefix(lane, &prompts[lane], knobs).unwrap().tokens)
+        .collect();
+    let attached = fed.clone();
+    for lane in 0..b {
+        for s in 0..fed[lane] {
+            mask[lane * s_cap + s] = 1.0;
+        }
+    }
+    loop {
+        let mut tokens = vec![-1i32; b * chunk];
+        let mut pos0 = vec![0i32; b];
+        let mut n_now = vec![0usize; b];
+        let mut any = false;
+        for lane in 0..b {
+            pos0[lane] = fed[lane] as i32;
+            let rem = prompts[lane].len() - fed[lane];
+            if rem > 0 {
+                let n = rem.min(chunk);
+                tokens[lane * chunk..lane * chunk + n]
+                    .copy_from_slice(&prompts[lane][fed[lane]..fed[lane] + n]);
+                n_now[lane] = n;
+                any = true;
+            }
+        }
+        if !any {
+            break;
+        }
+        be.prefill(b, &tokens, &pos0, &mask, knobs).unwrap();
+        for lane in 0..b {
+            for s in fed[lane]..fed[lane] + n_now[lane] {
+                mask[lane * s_cap + s] = 1.0;
+            }
+            fed[lane] += n_now[lane];
+        }
+    }
+    attached
+}
+
+#[test]
+fn shared_prefix_is_bit_identical_under_h2o_and_across_backends() {
+    // One donor prefill, many lanes: warm backends adopt the registered
+    // page chain while the cold backend recomputes everything — and every
+    // decode step must stay *bit-identical* across cold native, warm
+    // native, and warm sharded at 2 and 4 threads, under an H2O eviction
+    // interleaving driven by the cold backend's attention mass (identical
+    // masks for all, so sharing is the only variable).
+    let cfg = tiny();
+    let d = cfg.d_head;
+    let model = Arc::new(NativeModel::new(cfg.clone(), 0x5AFE).unwrap());
+    let knobs = AquaKnobs { k_dims: d / 2, dim_keep: vec![1.0; d], use_projection: true };
+    let pool_on = KvPoolConfig { prefix_cache: true, ..Default::default() };
+    let b = 4;
+    let mut rng = Rng::new(0xBEE);
+    let shared: Vec<i32> =
+        (0..2 * DEFAULT_PAGE_SLOTS).map(|_| 32 + rng.below(90) as i32).collect();
+    let prompts: Vec<Vec<i32>> = (0..b)
+        .map(|lane| {
+            let mut p = shared.clone();
+            for _ in 0..8 {
+                p.push(40 + lane as i32 + rng.below(50) as i32);
+            }
+            p
+        })
+        .collect();
+
+    let mut cold = NativeBackend::from_model(model.clone());
+    let mut warm = NativeBackend::from_model(model.clone());
+    warm.configure_kv_pool(pool_on).unwrap();
+    let mut warm2 = ShardedBackend::from_model(model.clone(), 2);
+    warm2.configure_kv_pool(pool_on).unwrap();
+    let mut warm4 = ShardedBackend::from_model(model.clone(), 4);
+    warm4.configure_kv_pool(pool_on).unwrap();
+    let mut bes: Vec<&mut dyn ExecBackend> = vec![&mut cold, &mut warm, &mut warm2, &mut warm4];
+
+    for be in bes.iter_mut() {
+        be.empty_cache(b).unwrap();
+        // donor pass on every lane (so each sharded worker caches the
+        // chain), then retire: warm pools now hold the prefix cached
+        let donor: Vec<Vec<i32>> = (0..b).map(|_| shared.clone()).collect();
+        feed_prompts(&mut **be, &donor, &vec![0.0; b * cfg.max_seq], &knobs);
+        for lane in 0..b {
+            be.retire_lane(lane);
+        }
+        assert_eq!(be.kv_gauges().pages_in_use, 0, "donor retire must drain");
+    }
+
+    // main wave: warm backends attach the full shared prefix, cold none
+    let attached: Vec<Vec<usize>> = bes
+        .iter_mut()
+        .map(|be| feed_prompts(&mut **be, &prompts, &vec![0.0; b * cfg.max_seq], &knobs))
+        .collect();
+    assert!(attached[0].iter().all(|&a| a == 0), "prefix-cache-off backend must serve cold");
+    for (i, name) in [(1usize, "native"), (2, "sharded2"), (3, "sharded4")] {
+        assert!(
+            attached[i].iter().all(|&a| a == shared.len()),
+            "{name} should attach the whole shared prefix, got {:?}",
+            attached[i]
+        );
+    }
+    let g = bes[1].kv_gauges();
+    assert!(g.shared_pages >= 1, "warm native should hold shared pages, gauges {g:?}");
+    assert!(
+        g.pages_in_use < attached[0].len() as u64 * (shared.len() / DEFAULT_PAGE_SLOTS + 1) as u64,
+        "sharing should dedup resident prompt pages"
+    );
+
+    // decode under H2O: masks evolve from the cold backend's mass, applied
+    // to every backend identically
+    let h2o = H2oPolicy::new(0.5, 3);
+    let (s_cap, n_layers) = (cfg.max_seq, cfg.n_layers);
+    let mut lanes: Vec<LaneKv> = (0..b)
+        .map(|lane| {
+            let mut l = LaneKv::new(s_cap);
+            l.commit_write(prompts[lane].len());
+            l
+        })
+        .collect();
+    let mut rng = Rng::new(0xD0D0);
+    for step in 0..20 {
+        let tokens: Vec<i32> = (0..b).map(|_| 32 + rng.below(90) as i32).collect();
+        let pos: Vec<i32> = lanes.iter().map(|l| l.len as i32).collect();
+        let mut mask = vec![0.0f32; b * s_cap];
+        for (lane, kv) in lanes.iter().enumerate() {
+            mask[lane * s_cap..(lane + 1) * s_cap].copy_from_slice(&kv.slot_mask);
+        }
+        let mut outs = vec![];
+        for be in bes.iter_mut() {
+            outs.push(be.decode(b, &tokens, &pos, &mask, &knobs).unwrap());
+        }
+        for (i, name) in [(1usize, "native"), (2, "sharded2"), (3, "sharded4")] {
+            assert_eq!(
+                outs[0].logits, outs[i].logits,
+                "warm {name} diverged from cold at step {step}"
+            );
+        }
+        for lane in 0..b {
+            lanes[lane].commit_write(1);
+            let mut mass = vec![0.0f32; s_cap];
+            for l in 0..n_layers {
+                let base = (l * b + lane) * s_cap;
+                for s in 0..s_cap {
+                    mass[s] += outs[0].attn_acc[base + s];
+                }
+            }
+            lanes[lane].accumulate(&mass);
+            h2o.apply(&mut lanes[lane]);
+        }
+    }
+
+    // full retirement returns every page (refcounts drained exactly once)
+    for be in bes.iter_mut() {
+        for lane in 0..b {
+            be.retire_lane(lane);
+        }
+        let g = be.kv_gauges();
+        assert_eq!(g.pages_in_use, 0, "{}: retire must drain the pool", be.name());
+        assert_eq!(g.shared_pages, 0);
+    }
+}
+
+#[test]
+fn cow_write_preserves_the_donor_lane() {
+    // A write landing inside a shared page must copy first: the sharer
+    // diverges on its own copy while the donor's context — and therefore
+    // its logits — stay bit-identical to a run that never shared.
+    let cfg = tiny();
+    let d = cfg.d_head;
+    let model = Arc::new(NativeModel::new(cfg.clone(), 0xC0DE).unwrap());
+    let knobs = AquaKnobs { k_dims: d, dim_keep: vec![1.0; d], use_projection: true };
+    let pool_on = KvPoolConfig { prefix_cache: true, ..Default::default() };
+    let s_cap = cfg.max_seq;
+    let mut rng = Rng::new(7);
+    let prompt: Vec<i32> =
+        (0..DEFAULT_PAGE_SLOTS + 4).map(|_| 32 + rng.below(90) as i32).collect();
+
+    let run_donor_decode = |be: &mut NativeBackend| -> Vec<f32> {
+        let mut mask = vec![0.0f32; 2 * s_cap];
+        for s in 0..prompt.len() {
+            mask[s] = 1.0;
+        }
+        let out = be.decode(2, &[70, -1], &[prompt.len() as i32, 0], &mask, &knobs).unwrap();
+        out.logits[..cfg.vocab].to_vec()
+    };
+
+    // control: donor alone, never shared
+    let zeros = vec![0.0f32; 2 * s_cap];
+    let mut control = NativeBackend::from_model(model.clone());
+    control.configure_kv_pool(pool_on).unwrap();
+    control.empty_cache(2).unwrap();
+    feed_prompts(&mut control, &[prompt.clone(), vec![]], &zeros, &knobs);
+    let want = run_donor_decode(&mut control);
+
+    // shared: lane 1 adopts lane 0's live page, then writes into it
+    let mut be = NativeBackend::from_model(model);
+    be.configure_kv_pool(pool_on).unwrap();
+    be.empty_cache(2).unwrap();
+    feed_prompts(&mut be, &[prompt.clone(), vec![]], &zeros, &knobs);
+    // lane 0 stays live: its slots must be masked attendable while lane 1
+    // is fed, or the backend's mask-driven reclaim would free its pages
+    let mut donor_mask = vec![0.0f32; 2 * s_cap];
+    for s in 0..prompt.len() {
+        donor_mask[s] = 1.0;
+    }
+    let attached = feed_prompts(&mut be, &[vec![], prompt.clone()], &donor_mask, &knobs);
+    assert_eq!(attached[1], DEFAULT_PAGE_SLOTS, "lane 1 should adopt the donor's full page");
+    assert_eq!(ExecBackend::kv_gauges(&mut be).shared_pages, 1);
+
+    // lane 1 overwrites a position *inside* the shared page — the engine
+    // never does this (tails start at page boundaries), but the backend
+    // contract must survive it: copy-on-write, donor untouched. Both
+    // lanes' true masks ride along (an all-dead mask row would be an
+    // eviction order for the donor's pages).
+    let mut mask = vec![0.0f32; 2 * s_cap];
+    for s in 0..prompt.len() {
+        mask[s] = 1.0;
+        mask[s + s_cap] = 1.0;
+    }
+    be.decode(2, &[-1, 71], &[0, 5], &mask, &knobs).unwrap();
+    let g = ExecBackend::kv_gauges(&mut be);
+    assert_eq!(g.cow_copies, 1, "the shared-page write must copy");
+    assert_eq!(g.shared_pages, 0, "after cow the page is no longer shared");
+
+    let got = run_donor_decode(&mut be);
+    assert_eq!(want, got, "sharer's write leaked into the donor's context");
+}
+
+#[test]
+fn knob_changes_never_alias_prefix_chains() {
+    // the chain hash is seeded with the cache-shaping knobs: content
+    // written under one dim_keep/projection setting must never be
+    // attached under another
+    let cfg = tiny();
+    let d = cfg.d_head;
+    let model = Arc::new(NativeModel::new(cfg, 0xF00D).unwrap());
+    let proj = AquaKnobs { k_dims: d, dim_keep: vec![1.0; d], use_projection: true };
+    let ident = AquaKnobs { k_dims: d, dim_keep: vec![1.0; d], use_projection: false };
+    let prompt: Vec<i32> = (0..DEFAULT_PAGE_SLOTS + 2).map(|i| 40 + (i as i32 % 50)).collect();
+
+    let mut be = NativeBackend::from_model(model);
+    be.configure_kv_pool(KvPoolConfig { prefix_cache: true, ..Default::default() }).unwrap();
+    be.empty_cache(1).unwrap();
+    let zeros = vec![0.0f32; be.model_config().max_seq];
+    feed_prompts(&mut be, &[prompt.clone()], &zeros, &proj);
+    be.retire_lane(0);
+    assert_eq!(be.attach_prefix(0, &prompt, &ident).unwrap().tokens, 0, "knob mismatch");
+    assert_eq!(be.attach_prefix(0, &prompt, &proj).unwrap().tokens, DEFAULT_PAGE_SLOTS);
+    be.retire_lane(0);
+}
+
+#[test]
+fn prefix_churn_never_underflows_and_drains_to_zero() {
+    // admit → share → diverge → evict → retire across >= 120 requests on
+    // random lanes: refcounts never underflow (the pool errors loudly and
+    // the step would fail), gauges stay coherent, and a full drain leaves
+    // zero pages in use with every page reusable.
+    let cfg = tiny();
+    let d = cfg.d_head;
+    let model = Arc::new(NativeModel::new(cfg.clone(), 0x17).unwrap());
+    let knobs = AquaKnobs { k_dims: d / 2, dim_keep: vec![1.0; d], use_projection: true };
+    let mut be = NativeBackend::from_model(model);
+    be.configure_kv_pool(KvPoolConfig { prefix_cache: true, ..Default::default() }).unwrap();
+    let b = 4;
+    be.empty_cache(b).unwrap();
+    let s_cap = cfg.max_seq;
+    let mut rng = Rng::new(0xCAB);
+    let families: Vec<Vec<i32>> = (0..3)
+        .map(|f: usize| {
+            (0..2 * DEFAULT_PAGE_SLOTS).map(|i| 33 + ((f * 37 + i * 11) % 80) as i32).collect()
+        })
+        .collect();
+    let mut lanes: Vec<Option<LaneKv>> = (0..b).map(|_| None).collect();
+    let mut served = 0usize;
+    let mut rounds = 0usize;
+    while served < 120 {
+        rounds += 1;
+        assert!(rounds < 4000, "churn made no progress");
+        for lane in 0..b {
+            if lanes[lane].is_some() && rng.below(3) == 0 {
+                be.retire_lane(lane);
+                lanes[lane] = None;
+            }
+            if lanes[lane].is_none() {
+                let mut prompt = families[rng.below(families.len())].clone();
+                for _ in 0..1 + rng.below(8) {
+                    prompt.push(32 + rng.below(90) as i32);
+                }
+                let mut prompts: Vec<Vec<i32>> = (0..b).map(|_| vec![]).collect();
+                prompts[lane] = prompt.clone();
+                // live occupants keep their true masks during the feed
+                let mut base = vec![0.0f32; b * s_cap];
+                for (l, kv) in lanes.iter().enumerate() {
+                    if let Some(kv) = kv {
+                        base[l * s_cap..(l + 1) * s_cap].copy_from_slice(&kv.slot_mask);
+                    }
+                }
+                feed_prompts(&mut be, &prompts, &base, &knobs);
+                let mut kv = LaneKv::new(s_cap);
+                kv.commit_write(prompt.len());
+                lanes[lane] = Some(kv);
+                served += 1;
+            }
+        }
+        // a couple of divergent decode steps with random evictions
+        for _ in 0..2 {
+            let mut tokens = vec![-1i32; b];
+            let mut pos = vec![0i32; b];
+            let mut mask = vec![0.0f32; b * s_cap];
+            for lane in 0..b {
+                if let Some(kv) = &lanes[lane] {
+                    if kv.len < s_cap {
+                        tokens[lane] = 32 + rng.below(90) as i32;
+                        pos[lane] = kv.len as i32;
+                    }
+                    mask[lane * s_cap..(lane + 1) * s_cap].copy_from_slice(&kv.slot_mask);
+                }
+            }
+            let out = be.decode(b, &tokens, &pos, &mask, &knobs).unwrap();
+            assert_eq!(
+                out.kv.resident_bytes,
+                out.kv.pages_in_use * out.kv.page_bytes,
+                "gauge identity violated under churn"
+            );
+            for lane in 0..b {
+                if tokens[lane] >= 0 {
+                    let kv = lanes[lane].as_mut().unwrap();
+                    kv.commit_write(1);
+                    // random eviction (the mask is the engine's authority;
+                    // the backend reclaims drained pages, shared or not)
+                    if kv.len > 2 && rng.below(2) == 0 {
+                        let slot = rng.below(kv.len - 1);
+                        kv.evict(slot);
+                    }
+                }
+            }
+        }
+    }
+    for lane in 0..b {
+        be.retire_lane(lane);
+    }
+    let g = be.kv_gauges();
+    assert_eq!(g.pages_in_use, 0, "churn must drain to zero pages in use");
+    assert_eq!(g.shared_pages, 0);
+    assert_eq!(g.leases, g.frees, "every lease must have been returned exactly once");
+    assert_eq!(g.alloc_stalls, 0);
+}
+
+#[test]
+fn engine_prefix_cache_is_invisible_and_reconciles() {
+    // Acceptance: with the prefix cache enabled, greedy outputs are
+    // bit-identical to the sharing-disabled path on native; sharded stays
+    // equal to native; the hit counters reconcile with the prefill work
+    // they displaced; resident pages shrink.
+    let cfg = tiny();
+    let shared: Vec<i32> = (0..40).map(|i| 40 + (i % 60) as i32).collect();
+    let mk_reqs = || -> Vec<GenRequest> {
+        (0..8)
+            .map(|i: usize| {
+                let mut p = shared.clone();
+                p.extend((0..6).map(|j| 35 + ((i * 7 + j) % 70) as i32));
+                GenRequest::new(i as u64 + 1, p, 12)
+            })
+            .collect()
+    };
+    let run = |spec: &BackendSpec, on: bool| {
+        let ecfg = EngineConfig { batch: 2, prefix_cache: on, ..Default::default() };
+        let mut engine = Engine::with_spec(spec, ecfg).unwrap();
+        // donor first (alone), so with the cache on *every* later wave
+        // attaches and the peak-resident comparison isn't dominated by a
+        // cold first batch
+        engine.run_batch(vec![GenRequest::new(99, shared.clone(), 4)]).unwrap();
+        let results = engine.run_batch(mk_reqs()).unwrap();
+        let snap = engine.metrics.snapshot();
+        assert_eq!(engine.kv_gauges().pages_in_use, 0, "drained engine holds no pages");
+        (results.into_iter().map(|r| r.tokens).collect::<Vec<_>>(), snap)
+    };
+    let native = BackendSpec::native(cfg.clone(), 9).unwrap();
+    let (cold_tokens, cold_snap) = run(&native, false);
+    let (warm_tokens, warm_snap) = run(&native, true);
+    assert_eq!(cold_tokens, warm_tokens, "sharing must be invisible to greedy outputs");
+    assert!(warm_snap.prefix_hit_tokens > 0, "the shared prefix must actually hit");
+    assert_eq!(cold_snap.prefix_hit_tokens, 0);
+    // skipped prefill work reconciles exactly: computed + hits == total
+    assert_eq!(warm_snap.prompt_tokens + warm_snap.prefix_hit_tokens, cold_snap.prompt_tokens);
+    assert!(
+        warm_snap.kv_resident_peak_bytes < cold_snap.kv_resident_peak_bytes,
+        "sharing should shrink peak resident bytes ({} vs {})",
+        warm_snap.kv_resident_peak_bytes,
+        cold_snap.kv_resident_peak_bytes
+    );
+    // sharded engine with the cache on produces the same bytes
+    let sharded = BackendSpec::sharded(cfg, 9, 2).unwrap();
+    let (sh_tokens, sh_snap) = run(&sharded, true);
+    assert_eq!(sh_tokens, warm_tokens, "sharded + prefix cache diverged from native");
+    assert!(sh_snap.prefix_hit_tokens > 0, "per-worker caches should still hit");
+}
+
+#[test]
+fn share_aware_admission_overlaps_lanes_within_budget() {
+    // Satellite: the memory-aware deferral credits pages the prefix index
+    // provably shares with a live holder, so two 5-page requests overlap
+    // inside an 8-page budget (the old worst-case sum, 10, would have
+    // serialized them). Resurrected cached pages stay fully charged.
+    let cfg = tiny();
+    let budget_mb = 8.0 * 4096.0 / (1u64 << 20) as f64;
+    let shared: Vec<i32> = (0..64).map(|i| 40 + (i % 60) as i32).collect();
+    let reqs: Vec<GenRequest> =
+        (0..2).map(|i| GenRequest::new(i + 1, shared.clone(), 16)).collect();
+    let spec = BackendSpec::native(cfg, 3).unwrap();
+    let ecfg = EngineConfig {
+        batch: 2,
+        kv_budget_mb: budget_mb,
+        prefix_cache: true,
+        ..Default::default()
+    };
+    let mut engine = Engine::with_spec(&spec, ecfg).unwrap();
+    let results = engine.run_batch(reqs).unwrap();
+    assert!(results.iter().all(|r| r.tokens.len() == 16), "both requests must finish");
+    let snap = engine.metrics.snapshot();
+    assert_eq!(snap.kv_alloc_stalls, 0, "the credited deferral must never stall the pool");
+    assert!(snap.prefix_hit_tokens >= 32, "the second lane should attach shared pages");
+    assert!(
+        snap.kv_resident_peak_bytes >= 6 * 4096,
+        "the lanes should overlap (peak {} B says they serialized)",
+        snap.kv_resident_peak_bytes
+    );
+    assert!(snap.kv_resident_peak_bytes <= 8 * 4096, "budget exceeded");
+    assert_eq!(engine.kv_gauges().pages_in_use, 0);
+}
+
+#[test]
+fn engine_prefix_churn_drains_and_reuses_every_page() {
+    // >= 110 requests with mixed shared-prefix depths through a prefix-on
+    // engine: after the drain, zero pages in use, lease/free parity, and
+    // a follow-up full-capacity wave proves every page is reusable.
+    let cfg = tiny();
+    let spec = BackendSpec::native(cfg, 21).unwrap();
+    let ecfg = EngineConfig { batch: 4, prefix_cache: true, ..Default::default() };
+    let mut engine = Engine::with_spec(&spec, ecfg).unwrap();
+    let shared: Vec<i32> = (0..48).map(|i| 40 + (i % 60) as i32).collect();
+    let reqs: Vec<GenRequest> = (0..110)
+        .map(|i: usize| {
+            let mut p = shared[..16 + 16 * (i % 3)].to_vec();
+            p.extend((0..4).map(|j| 33 + ((i * 13 + j) % 77) as i32));
+            GenRequest::new(i as u64 + 1, p, 6)
+        })
+        .collect();
+    let results = engine.run_batch(reqs).unwrap();
+    assert_eq!(results.len(), 110);
+    let snap = engine.metrics.snapshot();
+    assert!(snap.prefix_hit_tokens > 0, "the families' prefixes should hit");
+    let g = engine.kv_gauges();
+    assert_eq!(g.pages_in_use, 0, "after churn every page must be back in the pool");
+    assert_eq!(g.shared_pages, 0);
+    assert_eq!(g.leases, g.frees, "refcount audit: every lease freed exactly once");
+    assert_eq!(g.alloc_stalls, 0);
+
+    // every page is reusable: a full-capacity wave recycles the cached
+    // chains without a single stall
+    let big: Vec<GenRequest> =
+        (0..4).map(|i| GenRequest::new(500 + i, vec![65 + i as i32; 120], 8)).collect();
+    engine.run_batch(big).unwrap();
+    let g2 = engine.kv_gauges();
+    assert_eq!(g2.pages_in_use, 0);
+    assert_eq!(g2.alloc_stalls, 0, "recycled cache pages must lease cleanly");
+}
