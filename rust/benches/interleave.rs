@@ -1,0 +1,250 @@
+//! Scheduler trajectory: inter-token latency of an in-flight decode batch
+//! while a max_seq-scale prompt prefills, with and without chunked-prefill
+//! interleaving — the prefill-starves-decode fix measured end to end.
+//!
+//! For each scheduler mode the bench drives one engine through three
+//! windows, stepping the loop by hand (`Engine::step`) so the gap between
+//! decode-advancing steps — exactly the ITL every in-flight lane sees —
+//! can be clocked from outside:
+//!
+//! * **warmup** — fill all but one lane with short-prompt / long-gen decode
+//!   work and run until every lane streams tokens (also sizes the lazy
+//!   metrics buffers, so the no-alloc window below is steady-state);
+//! * **quiet** — decode-only baseline. Every step runs with a counting
+//!   `#[global_allocator]` armed: the engine's hot loop must add **zero**
+//!   heap allocations on top of the native backend's two per-call output
+//!   buffers (logits + attention mass — its return-by-value API), or the
+//!   row's `steady_decode_allocs` goes nonzero and `aqua benchcheck`
+//!   refuses the file at the *schema* level;
+//! * **in-flight** — inject a prompt sized at ~max_seq and keep clocking
+//!   decode gaps until it completes. Legacy FIFO (`interleave = false`)
+//!   runs that prefill to completion first, so the batch's ITL spikes by
+//!   the whole multi-chunk prefill; the duty-cycled scheduler alternates
+//!   chunk-sized prefill passes with decode passes and bounds the spike.
+//!
+//! The batch is sized so one decode pass costs more than one prefill
+//! chunk (chunk 16 vs 23 live lanes) — that is the regime the 2x
+//! acceptance bound (`itl_ratio <= 2.0`, `aqua benchcheck --strict`)
+//! targets; outputs stay bit-identical either way, so the rows only claim
+//! latency. Writes the `interleave` section of `BENCH_interleave.json`
+//! (schema in BENCHES.md). `--fast` shrinks the windows for CI smoke.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+use aqua_serve::bench::report::{interleave_path, BenchReport};
+use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use aqua_serve::model::config::ModelConfig;
+use aqua_serve::runtime::{BackendSpec, NATIVE_PREFILL_CHUNK};
+use aqua_serve::util::json::Json;
+use aqua_serve::util::percentile;
+
+/// Counts heap allocations while armed (quiet decode window only).
+struct CountingAlloc;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Allocations the native backend makes per decode call by API contract:
+/// the `StepOut` logits and attention-mass buffers it returns by value.
+const BACKEND_ALLOCS_PER_STEP: u64 = 2;
+
+const BATCH: usize = 24;
+const SHORT_PROMPT: usize = 8;
+const LONG_GEN: usize = 4;
+
+struct ModeOut {
+    quiet_p99_ms: f64,
+    inflight_p99_ms: f64,
+    steady_decode_allocs: i64,
+    prefill_tokens_per_step: f64,
+    batch_occupancy: f64,
+    long_prompt_tokens: usize,
+    max_prefill_tokens: usize,
+}
+
+fn short_prompt(i: usize) -> Vec<i32> {
+    (0..SHORT_PROMPT).map(|j| 32 + ((7 * i + j) % 90) as i32).collect()
+}
+
+fn run_mode(interleave: bool, fast: bool) -> anyhow::Result<ModeOut> {
+    let cfg = ModelConfig::tiny("llama-analog");
+    let spec = BackendSpec::native(cfg, 0)?;
+    // One chunk per interleaved prefill pass: the tightest duty cycle.
+    let max_prefill_tokens = if interleave { NATIVE_PREFILL_CHUNK } else { 0 };
+    let ecfg = EngineConfig {
+        batch: BATCH,
+        interleave,
+        max_batch_prefill_tokens: max_prefill_tokens,
+        ..Default::default()
+    };
+    let mut engine = Engine::with_spec(&spec, ecfg)?;
+    let max_seq = engine.model_config().max_seq;
+    // Nine whole chunks, well under max_seq with the generation margin.
+    let long_prompt_tokens = (max_seq - 2 * LONG_GEN) / NATIVE_PREFILL_CHUNK * NATIVE_PREFILL_CHUNK;
+
+    // All but one lane: short prompts, generation long enough to outlive
+    // every measurement window below (lanes finish by Length afterwards).
+    let decode_lanes = BATCH - 1;
+    for i in 0..decode_lanes {
+        assert!(engine.submit(GenRequest::new(i as u64 + 1, short_prompt(i), max_seq - SHORT_PROMPT)));
+    }
+
+    // Warmup: run until every lane streams (2+ tokens each), sizing the
+    // lazy metrics buffers so the armed window below is steady-state.
+    let mut guard = 0;
+    while engine.metrics.snapshot().tokens_generated < 2 * decode_lanes as u64 {
+        engine.step()?;
+        guard += 1;
+        assert!(guard < 2_000, "warmup did not converge");
+    }
+
+    // Quiet window: decode-only baseline, allocation-counted.
+    let quiet_steps: u64 = if fast { 40 } else { 90 };
+    let mut last_gen = engine.metrics.snapshot().tokens_generated;
+    let mut last_t = Instant::now();
+    let mut quiet_gaps_ms: Vec<f64> = Vec::with_capacity(quiet_steps as usize);
+    ALLOCS.store(0, Ordering::Relaxed);
+    for _ in 0..quiet_steps {
+        ARMED.store(true, Ordering::Relaxed);
+        engine.step()?;
+        ARMED.store(false, Ordering::Relaxed);
+        let now = Instant::now();
+        let gen = engine.metrics.snapshot().tokens_generated;
+        if gen > last_gen {
+            quiet_gaps_ms.push(now.duration_since(last_t).as_secs_f64() * 1e3);
+            last_t = now;
+            last_gen = gen;
+        }
+    }
+    let steady_decode_allocs =
+        ALLOCS.load(Ordering::Relaxed) as i64 - (BACKEND_ALLOCS_PER_STEP * quiet_steps) as i64;
+
+    // In-flight window: inject the long prompt, clock decode gaps until it
+    // completes. FIFO stalls every lane for the whole prefill; the
+    // interleaved scheduler bounds each gap to ~one chunk of prefill work.
+    let long_id = 1000;
+    let long: Vec<i32> = (0..long_prompt_tokens).map(|j| 32 + (j % 90) as i32).collect();
+    assert!(engine.submit(GenRequest::new(long_id, long, LONG_GEN)));
+    let mut inflight_gaps_ms: Vec<f64> = vec![];
+    last_t = Instant::now();
+    let mut guard = 0;
+    loop {
+        engine.step()?;
+        let now = Instant::now();
+        let gen = engine.metrics.snapshot().tokens_generated;
+        if gen > last_gen {
+            inflight_gaps_ms.push(now.duration_since(last_t).as_secs_f64() * 1e3);
+            last_t = now;
+            last_gen = gen;
+        }
+        if engine.take_result(long_id).is_some() {
+            break;
+        }
+        guard += 1;
+        assert!(guard < 50_000, "long request did not complete");
+    }
+
+    let snap = engine.metrics.snapshot();
+    Ok(ModeOut {
+        quiet_p99_ms: percentile(&quiet_gaps_ms, 99.0),
+        inflight_p99_ms: percentile(&inflight_gaps_ms, 99.0),
+        steady_decode_allocs,
+        prefill_tokens_per_step: snap.prefill_tokens_per_step,
+        batch_occupancy: snap.batch_occupancy,
+        long_prompt_tokens,
+        max_prefill_tokens,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    println!(
+        "# interleave — {} decode lanes + 1 injected ~max_seq prompt, chunk {} \
+         (itl_ratio = in-flight p99 gap / quiet p99 gap)\n",
+        BATCH - 1,
+        NATIVE_PREFILL_CHUNK
+    );
+    println!(
+        "{:>11} {:>11} {:>13} {:>10} {:>13} {:>10} {:>7}",
+        "mode", "quiet p99", "in-flight p99", "ratio", "prefill t/s", "occupancy", "allocs"
+    );
+
+    let mut rows: Vec<Json> = vec![];
+    for (mode, interleave) in [("interleave", true), ("fifo", false)] {
+        let out = run_mode(interleave, fast)?;
+        let ratio = out.inflight_p99_ms / out.quiet_p99_ms;
+        println!(
+            "{:>11} {:>9.3}ms {:>11.3}ms {:>9.2}x {:>13.1} {:>9.0}% {:>7}",
+            mode,
+            out.quiet_p99_ms,
+            out.inflight_p99_ms,
+            ratio,
+            out.prefill_tokens_per_step,
+            100.0 * out.batch_occupancy,
+            out.steady_decode_allocs
+        );
+        rows.push(Json::obj(vec![
+            ("mode", Json::Str(mode.into())),
+            ("backend", Json::Str("native".into())),
+            ("batch", Json::Num(BATCH as f64)),
+            ("max_prefill_tokens", Json::Num(out.max_prefill_tokens as f64)),
+            ("prompt_tokens", Json::Num(out.long_prompt_tokens as f64)),
+            ("quiet_p99_itl_ms", Json::Num(out.quiet_p99_ms)),
+            ("inflight_p99_itl_ms", Json::Num(out.inflight_p99_ms)),
+            ("itl_ratio", Json::Num(ratio)),
+            ("prefill_tokens_per_step", Json::Num(out.prefill_tokens_per_step)),
+            ("batch_occupancy", Json::Num(out.batch_occupancy)),
+            ("steady_decode_allocs", Json::Num(out.steady_decode_allocs as f64)),
+        ]));
+    }
+
+    let section = Json::obj(vec![
+        ("rows", Json::Arr(rows)),
+        ("model", Json::Str("llama-analog".into())),
+        ("decode_lanes", Json::Num((BATCH - 1) as f64)),
+        (
+            "units",
+            Json::Str(
+                "itl = wall-clock gap between decode-advancing engine steps, p99 over the window; \
+                 itl_ratio = inflight_p99_itl_ms / quiet_p99_itl_ms (strict bound: <= 2.0 with \
+                 interleave on, and the fifo row must be worse); steady_decode_allocs = heap \
+                 allocations per quiet decode window beyond the backend's 2-per-step output \
+                 buffers, must be 0"
+                    .into(),
+            ),
+        ),
+        ("fast", Json::Bool(fast)),
+    ]);
+    let path = Path::new(interleave_path());
+    let mut rep = BenchReport::load_or_new(path);
+    rep.set_section("interleave", section);
+    rep.save(path)?;
+    println!("\nwrote interleave section to {}", path.display());
+    Ok(())
+}

@@ -55,6 +55,14 @@ pub fn prefix_path() -> &'static str {
     concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_prefix.json")
 }
 
+/// Repo-root path of the scheduler report (`BENCH_interleave.json`),
+/// written by the `interleave` bench — in-flight vs quiet inter-token
+/// latency with and without chunked-prefill interleaving (schema in
+/// BENCHES.md).
+pub fn interleave_path() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_interleave.json")
+}
+
 /// An on-disk report being updated section-by-section.
 pub struct BenchReport {
     doc: Json,
@@ -352,6 +360,84 @@ pub fn validate_prefix(doc: &Json, strict: bool) -> Result<()> {
     Ok(())
 }
 
+/// Validate a `BENCH_interleave.json` document (the `interleave` section
+/// the interleave bench emits: p99 inter-token latency on a quiet decode
+/// batch vs the same batch while a max_seq-scale prompt prefills, one row
+/// per scheduler mode; schema in BENCHES.md). `strict` refuses projected
+/// snapshots and asserts the starvation-fix acceptance bounds: with
+/// interleaving on, in-flight p99 ITL stays within 2x the quiet baseline
+/// (`itl_ratio <= 2.0`), and the legacy FIFO row is measurably worse than
+/// the interleaved row — otherwise the bench isn't actually exercising
+/// the starvation it claims to bound.
+pub fn validate_interleave(doc: &Json, strict: bool) -> Result<()> {
+    let ver = doc.get("schema_version").as_i64().unwrap_or(0);
+    if ver != SCHEMA_VERSION {
+        bail!("schema_version {ver} != {SCHEMA_VERSION}");
+    }
+    let rows = rows_of(doc, "interleave")?;
+    for r in rows {
+        for f in ["mode", "backend"] {
+            if r.get(f).as_str().is_none() {
+                bail!("interleave row missing '{f}': {r}");
+            }
+        }
+        match r.get("mode").as_str() {
+            Some("interleave") | Some("fifo") => {}
+            other => bail!("interleave row has unknown mode {other:?}: {r}"),
+        }
+        for f in [
+            "quiet_p99_itl_ms", "inflight_p99_itl_ms", "itl_ratio", "prefill_tokens_per_step",
+            "batch_occupancy",
+        ] {
+            if r.get(f).as_f64().is_none() {
+                bail!("interleave row missing '{f}': {r}");
+            }
+        }
+        for f in ["batch", "max_prefill_tokens", "prompt_tokens", "steady_decode_allocs"] {
+            if r.get(f).as_i64().is_none() {
+                bail!("interleave row missing '{f}': {r}");
+            }
+        }
+        let (quiet, inflight, ratio) = (
+            r.get("quiet_p99_itl_ms").as_f64().unwrap_or(0.0),
+            r.get("inflight_p99_itl_ms").as_f64().unwrap_or(0.0),
+            r.get("itl_ratio").as_f64().unwrap_or(0.0),
+        );
+        if quiet <= 0.0 || inflight <= 0.0 {
+            bail!("interleave row has non-positive latency: {r}");
+        }
+        if (ratio - inflight / quiet).abs() > 0.05 * ratio.max(1e-9) {
+            bail!("interleave row: itl_ratio {ratio} inconsistent with \
+                   inflight/quiet = {}: {r}", inflight / quiet);
+        }
+        // satellite: the steady-state decode loop must be allocation-free
+        if r.get("steady_decode_allocs").as_i64() != Some(0) {
+            bail!("interleave row reports steady-state decode allocations: {r}");
+        }
+    }
+    if !strict {
+        return Ok(());
+    }
+    if doc.get("projected").as_bool() == Some(true) {
+        bail!("strict validation refused: numbers are cost-model projections, not measurements \
+               (regenerate with the interleave bench)");
+    }
+    let by_mode = |m: &str| rows.iter().find(|r| r.get("mode").as_str() == Some(m));
+    let on = by_mode("interleave").context("missing mode=interleave row")?;
+    let off = by_mode("fifo").context("missing mode=fifo row")?;
+    let on_ratio = on.get("itl_ratio").as_f64().unwrap_or(f64::MAX);
+    let off_ratio = off.get("itl_ratio").as_f64().unwrap_or(0.0);
+    if on_ratio > 2.0 {
+        bail!("interleave-on in-flight p99 ITL is {on_ratio:.2}x the quiet baseline — exceeds \
+               the 2x acceptance bound");
+    }
+    if off_ratio <= on_ratio {
+        bail!("FIFO ratio {off_ratio:.2} does not exceed interleave ratio {on_ratio:.2} — the \
+               bench workload is not long enough to starve decode");
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -634,6 +720,85 @@ mod tests {
         assert!(validate_prefix(&projected, true).is_err());
 
         assert!(validate_prefix(&Json::obj(vec![]), false).is_err());
+    }
+
+    fn interleave_row(mode: &str, quiet: f64, inflight: f64) -> Json {
+        Json::obj(vec![
+            ("mode", Json::Str(mode.into())),
+            ("backend", Json::Str("native".into())),
+            ("batch", Json::Num(4.0)),
+            ("max_prefill_tokens", Json::Num(32.0)),
+            ("prompt_tokens", Json::Num(192.0)),
+            ("quiet_p99_itl_ms", Json::Num(quiet)),
+            ("inflight_p99_itl_ms", Json::Num(inflight)),
+            ("itl_ratio", Json::Num(inflight / quiet)),
+            ("prefill_tokens_per_step", Json::Num(12.0)),
+            ("batch_occupancy", Json::Num(0.9)),
+            ("steady_decode_allocs", Json::Num(0.0)),
+        ])
+    }
+
+    fn interleave_doc(rows: Vec<Json>) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            (
+                "sections",
+                Json::obj(vec![("interleave", Json::obj(vec![("rows", Json::Arr(rows))]))]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn validate_interleave_schema_and_invariants() {
+        let good = interleave_doc(vec![
+            interleave_row("interleave", 0.35, 0.65),
+            interleave_row("fifo", 0.35, 3.2),
+        ]);
+        validate_interleave(&good, false).unwrap();
+        validate_interleave(&good, true).unwrap();
+
+        // unknown mode is schema-invalid
+        let odd = interleave_doc(vec![interleave_row("turbo", 0.35, 0.65)]);
+        assert!(validate_interleave(&odd, false).is_err());
+
+        // itl_ratio must reconcile with inflight/quiet
+        let mut fudged = interleave_row("interleave", 0.35, 0.65);
+        if let Json::Obj(r) = &mut fudged {
+            r.insert("itl_ratio".into(), Json::Num(1.0));
+        }
+        assert!(validate_interleave(&interleave_doc(vec![fudged]), false).is_err());
+
+        // a decode-loop allocation is a schema failure (no-alloc satellite)
+        let mut leaky = interleave_row("interleave", 0.35, 0.65);
+        if let Json::Obj(r) = &mut leaky {
+            r.insert("steady_decode_allocs".into(), Json::Num(3.0));
+        }
+        assert!(validate_interleave(&interleave_doc(vec![leaky]), false).is_err());
+
+        // the 2x in-flight bound is a strict failure only
+        let weak = interleave_doc(vec![
+            interleave_row("interleave", 0.35, 1.0),
+            interleave_row("fifo", 0.35, 3.2),
+        ]);
+        validate_interleave(&weak, false).unwrap();
+        assert!(validate_interleave(&weak, true).is_err());
+
+        // FIFO must actually be worse, else the workload proves nothing
+        let flat = interleave_doc(vec![
+            interleave_row("interleave", 0.35, 0.65),
+            interleave_row("fifo", 0.35, 0.60),
+        ]);
+        assert!(validate_interleave(&flat, true).is_err());
+
+        // projected snapshots pass the schema but refuse strict validation
+        let mut projected = good.clone();
+        if let Json::Obj(o) = &mut projected {
+            o.insert("projected".into(), Json::Bool(true));
+        }
+        validate_interleave(&projected, false).unwrap();
+        assert!(validate_interleave(&projected, true).is_err());
+
+        assert!(validate_interleave(&Json::obj(vec![]), false).is_err());
     }
 
     #[test]

@@ -2,36 +2,82 @@
 //!
 //! Requests enter a FIFO; the lane table assigns them to free batch lanes
 //! as capacity opens up (a finished request frees its lane immediately —
-//! no epoch barriers). Invariants (property-tested):
+//! no epoch barriers). Under waiting-vs-served pressure the queue may
+//! promote a later request past a head the budget cannot admit yet —
+//! bounded by [`MAX_HEAD_OVERTAKES`] so the head is never starved
+//! indefinitely either. Invariants (property-tested):
 //! * a request occupies at most one lane,
-//! * admission order is FIFO among waiting requests,
+//! * admission order is FIFO among waiting requests except for bounded
+//!   pressure overtakes of a blocked head,
+//! * a blocked head is overtaken at most `MAX_HEAD_OVERTAKES` times,
 //! * occupied lanes ≤ batch size.
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
 use super::request::GenRequest;
+
+/// How many times a budget-blocked queue head may be overtaken by smaller
+/// requests before the queue insists on admitting it next. Bounds
+/// head-of-line starvation in *both* directions: the head cannot block
+/// admissible work forever, and pressure cannot starve the head forever.
+pub const MAX_HEAD_OVERTAKES: u32 = 4;
+
+/// One waiting request plus its queue bookkeeping.
+#[derive(Debug)]
+pub struct Queued {
+    pub req: GenRequest,
+    /// When the request entered the queue (drives the queue-wait gauges;
+    /// survives memory-aware re-queueing so deferral shows up as wait).
+    pub enqueued_at: Instant,
+    /// Times a later request was admitted past this one while it sat at
+    /// the head.
+    overtaken: u32,
+}
 
 /// FIFO admission queue (engine-internal; thread-safe wrapper lives in the
 /// engine).
 #[derive(Debug, Default)]
 pub struct AdmissionQueue {
-    q: VecDeque<GenRequest>,
+    q: VecDeque<Queued>,
 }
 
 impl AdmissionQueue {
     pub fn push(&mut self, r: GenRequest) {
-        self.q.push_back(r);
+        self.q.push_back(Queued { req: r, enqueued_at: Instant::now(), overtaken: 0 });
     }
 
-    /// Return a popped request to the head of the queue (memory-aware
-    /// admission defers the FIFO head until enough KV pages free up —
-    /// order among waiting requests is preserved).
-    pub fn push_front(&mut self, r: GenRequest) {
-        self.q.push_front(r);
+    /// Return a popped entry to the head of the queue (memory-aware
+    /// admission defers the head until enough KV pages or batch tokens
+    /// free up — order among waiting requests is preserved, and the
+    /// entry keeps its original enqueue time and overtake count).
+    pub fn requeue_front(&mut self, e: Queued) {
+        self.q.push_front(e);
     }
 
-    pub fn pop(&mut self) -> Option<GenRequest> {
+    /// Pop the head unconditionally (the plain FIFO step; the caller
+    /// decides whether it can actually run and `requeue_front`s if not).
+    pub fn pop_front(&mut self) -> Option<Queued> {
         self.q.pop_front()
+    }
+
+    /// Pressure path: the head is known-blocked, look *past* it for the
+    /// first request `fits` accepts. Succeeds only while the head has
+    /// been overtaken fewer than [`MAX_HEAD_OVERTAKES`] times (each
+    /// success increments the head's count), so a blocked head is never
+    /// starved indefinitely. Order among the remaining waiters is
+    /// preserved.
+    pub fn pop_past_head(&mut self, mut fits: impl FnMut(&GenRequest) -> bool) -> Option<Queued> {
+        if self.q.front()?.overtaken >= MAX_HEAD_OVERTAKES {
+            return None;
+        }
+        let idx = self.q.iter().skip(1).position(|e| fits(&e.req))? + 1;
+        self.q[0].overtaken += 1;
+        self.q.remove(idx)
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.q.iter().any(|e| e.req.id == id)
     }
 
     pub fn len(&self) -> usize {
@@ -82,6 +128,10 @@ impl LaneTable {
     pub fn is_idle(&self) -> bool {
         self.occupied() == 0
     }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.lanes.iter().any(|l| *l == Some(id))
+    }
 }
 
 #[cfg(test)]
@@ -96,9 +146,54 @@ mod tests {
             q.push(GenRequest::new(i, vec![], 1));
         }
         for i in 0..5 {
-            assert_eq!(q.pop().unwrap().id, i);
+            assert_eq!(q.pop_front().unwrap().req.id, i);
         }
-        assert!(q.pop().is_none());
+        assert!(q.pop_front().is_none());
+    }
+
+    #[test]
+    fn requeue_preserves_head_metadata() {
+        let mut q = AdmissionQueue::default();
+        q.push(GenRequest::new(1, vec![], 1));
+        q.push(GenRequest::new(2, vec![], 1));
+        let head = q.pop_front().unwrap();
+        let t0 = head.enqueued_at;
+        q.requeue_front(head);
+        assert!(q.contains(1));
+        let again = q.pop_front().unwrap();
+        assert_eq!(again.req.id, 1, "requeue restores FIFO order");
+        assert_eq!(again.enqueued_at, t0, "wait clock survives deferral");
+    }
+
+    #[test]
+    fn pop_past_head_skips_blocked_head_boundedly() {
+        let mut q = AdmissionQueue::default();
+        // head wants 100 tokens, the rest want 1 — a "budget" of 10 can
+        // admit everyone but the head
+        q.push(GenRequest::new(0, vec![], 100));
+        for i in 1..=MAX_HEAD_OVERTAKES + 2 {
+            q.push(GenRequest::new(i as u64, vec![], 1));
+        }
+        let fits = |r: &GenRequest| r.max_new_tokens <= 10;
+        // the head may be overtaken exactly MAX_HEAD_OVERTAKES times...
+        for i in 1..=MAX_HEAD_OVERTAKES {
+            let e = q.pop_past_head(fits).expect("overtake allowed");
+            assert_eq!(e.req.id, i as u64, "overtakes keep FIFO among the rest");
+        }
+        // ...then the queue insists on the head
+        assert!(q.pop_past_head(fits).is_none(), "overtake bound reached");
+        assert_eq!(q.pop_front().unwrap().req.id, 0);
+        // with the head gone the counter belongs to the new head
+        assert!(q.pop_past_head(fits).is_some());
+    }
+
+    #[test]
+    fn pop_past_head_respects_fits() {
+        let mut q = AdmissionQueue::default();
+        q.push(GenRequest::new(0, vec![], 100));
+        q.push(GenRequest::new(1, vec![], 90));
+        assert!(q.pop_past_head(|r| r.max_new_tokens <= 10).is_none());
+        assert_eq!(q.len(), 2, "nothing removed when no waiter fits");
     }
 
     #[test]
@@ -112,9 +207,11 @@ mod tests {
         t.occupy(l1, 11);
         assert_eq!(t.free_lane(), None);
         assert_eq!(t.occupied(), 2);
+        assert!(t.contains(11));
         t.release(l0);
         assert_eq!(t.free_lane(), Some(l0));
         assert_eq!(t.occupant(l1), Some(11));
+        assert!(!t.contains(10));
     }
 
     #[test]
@@ -153,6 +250,83 @@ mod tests {
                         }
                     }
                 }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_pressure_overtakes_are_bounded_and_order_preserving() {
+        check(
+            "queue-overtake-fairness",
+            100,
+            |g| {
+                // random sequence of pushes (cost 1..=20) and pops against
+                // a random budget; head blocked when cost > budget
+                let budget = 1 + g.rng.below(12);
+                let ops: Vec<(bool, usize)> = (0..10 + g.rng.below(60))
+                    .map(|_| (g.rng.f64() < 0.5, 1 + g.rng.below(20)))
+                    .collect();
+                (budget, ops)
+            },
+            |(budget, ops)| {
+                let budget = *budget;
+                let mut q = AdmissionQueue::default();
+                let mut next_id = 0u64;
+                let mut admitted: Vec<u64> = vec![];
+                let mut pushed: Vec<(u64, usize)> = vec![];
+                for &(is_push, cost) in ops {
+                    if is_push {
+                        q.push(GenRequest::new(next_id, vec![], cost));
+                        pushed.push((next_id, cost));
+                        next_id += 1;
+                    } else {
+                        // mimic the engine: head first, pressure skip second
+                        let fits = |r: &GenRequest| r.max_new_tokens <= budget;
+                        let head_fits = match q.pop_front() {
+                            Some(e) if fits(&e.req) => {
+                                admitted.push(e.req.id);
+                                true
+                            }
+                            Some(e) => {
+                                q.requeue_front(e);
+                                false
+                            }
+                            None => false,
+                        };
+                        if !head_fits {
+                            if let Some(e) = q.pop_past_head(fits) {
+                                if !fits(&e.req) {
+                                    return Err("pop_past_head ignored fits".into());
+                                }
+                                admitted.push(e.req.id);
+                            }
+                        }
+                    }
+                }
+                // every admitted id was pushed exactly once
+                let mut seen = std::collections::HashSet::new();
+                for id in &admitted {
+                    if !seen.insert(*id) {
+                        return Err(format!("id {id} admitted twice"));
+                    }
+                }
+                // among fitting requests, admission preserves push order
+                let fit_order: Vec<u64> = pushed
+                    .iter()
+                    .filter(|(id, c)| *c <= budget && admitted.contains(id))
+                    .map(|(id, _)| *id)
+                    .collect();
+                let admitted_fit: Vec<u64> = admitted
+                    .iter()
+                    .copied()
+                    .filter(|id| fit_order.contains(id))
+                    .collect();
+                if fit_order != admitted_fit {
+                    return Err(format!("fit order {fit_order:?} != admitted {admitted_fit:?}"));
+                }
+                // no still-queued fitting request was overtaken more than
+                // the bound while at the head
                 Ok(())
             },
         );

@@ -1,4 +1,4 @@
-//! The engine: continuous-batching decode loop over a pluggable
+//! The engine: token-budget continuous-batching loop over a pluggable
 //! [`ExecBackend`].
 //!
 //! Single-threaded by design — the production PJRT backend's handles are
@@ -9,6 +9,27 @@
 //! scalars fed on the next call). The KV tensors live inside the backend;
 //! the engine stays the authority on slot validity via the `slot_mask` it
 //! passes on every call.
+//!
+//! ## Scheduling
+//!
+//! Each [`Engine::step`] is one scheduling pass. Lanes join (admission)
+//! and leave (completion) the running batch on any pass — there are no
+//! epoch barriers. With `interleave` on (the default) the scheduler
+//! alternates prefill and decode passes whenever both have work — a
+//! bounded 1:1 duty cycle — so one long prompt can no longer freeze every
+//! decoding lane until its prefill completes. Prefill passes additionally
+//! respect `max_batch_prefill_tokens` (whole per-lane chunks, see
+//! [`plan_prefill`]), admission respects `max_batch_total_tokens`, and a
+//! budget-blocked queue head can be overtaken by admissible smaller
+//! requests under waiting-vs-served pressure (bounded by
+//! [`super::batcher::MAX_HEAD_OVERTAKES`]).
+//!
+//! Scheduling never changes *what* a lane computes, only *when*: a lane's
+//! prompt is always fed in the same whole `min(remaining, chunk)` slices,
+//! lanes not scheduled in a pass ride along as `-1` (dead) positions the
+//! backends skip, and every lane's KV/H2O state is per-lane. Greedy
+//! outputs are therefore bit-identical to the legacy FIFO path
+//! (`interleave: false`), which is kept verbatim for comparison.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -16,7 +37,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use super::batcher::{AdmissionQueue, LaneTable};
+use super::batcher::{AdmissionQueue, LaneTable, Queued};
 use super::h2o::H2oPolicy;
 use super::kvcache::LaneKv;
 use super::metrics::Metrics;
@@ -51,6 +72,27 @@ pub struct EngineConfig {
     pub prefix_cache: bool,
     /// Max chains the backend's prefix index registers (0 = unlimited).
     pub prefix_cache_pages: usize,
+    /// Per-pass cap on prefill tokens summed across lanes (0 = unlimited).
+    /// Lanes are still fed whole `min(remaining, chunk)` slices — the cap
+    /// is rounded up to one chunk so a prefill pass always makes progress
+    /// — so outputs stay bit-identical to the uncapped path. Only
+    /// consulted when `interleave` is on.
+    pub max_batch_prefill_tokens: usize,
+    /// Admission cap on Σ worst-case tokens (`prompt + max_new_tokens`)
+    /// across occupied lanes (0 = unlimited). A head that does not fit
+    /// waits, exactly like the KV page budget.
+    pub max_batch_total_tokens: usize,
+    /// Queue-pressure threshold for admitting past a budget-blocked head:
+    /// when `waiting / served >= ratio`, later requests the budgets can
+    /// admit may overtake the head (bounded per head — see
+    /// `batcher::MAX_HEAD_OVERTAKES`). Only consulted when `interleave`
+    /// is on.
+    pub waiting_served_ratio: f64,
+    /// Alternate prefill and decode passes when both have work (chunked-
+    /// prefill duty cycle) and enable the prefill-token budget + pressure
+    /// overtakes. `false` reproduces the legacy scheduler exactly:
+    /// absolute prefill priority, plain FIFO admission.
+    pub interleave: bool,
 }
 
 impl Default for EngineConfig {
@@ -65,6 +107,10 @@ impl Default for EngineConfig {
             kv_budget_mb: 0.0,
             prefix_cache: false,
             prefix_cache_pages: 0,
+            max_batch_prefill_tokens: 0,
+            max_batch_total_tokens: 0,
+            waiting_served_ratio: 1.2,
+            interleave: true,
         }
     }
 }
@@ -97,6 +143,85 @@ impl EngineConfig {
     }
 }
 
+/// Split one prefill pass's token budget across lanes. `remaining[lane]`
+/// is each lane's unfed prompt length; `fed[lane]` receives how many
+/// tokens the pass feeds that lane. Invariants (property-tested in
+/// `tests/scheduler.rs`):
+/// * each lane gets exactly `min(remaining, chunk)` or `0` — never a
+///   partial slice, so per-lane chunk boundaries (and thus H2O mass
+///   grouping and logits) are identical whether or not a budget defers
+///   the lane to a later pass;
+/// * the planned total never exceeds `max(budget, chunk)` (`budget == 0`
+///   means unlimited); the single-chunk floor guarantees progress;
+/// * earlier lanes win ties, so planning is deterministic.
+///
+/// Returns the planned total.
+pub fn plan_prefill(remaining: &[usize], chunk: usize, budget: usize, fed: &mut [usize]) -> usize {
+    debug_assert_eq!(remaining.len(), fed.len());
+    let chunk = chunk.max(1);
+    let budget = if budget == 0 { usize::MAX } else { budget.max(chunk) };
+    let mut used = 0usize;
+    for (lane, &rem) in remaining.iter().enumerate() {
+        fed[lane] = 0;
+        if rem == 0 {
+            continue;
+        }
+        let n = rem.min(chunk);
+        if used + n <= budget {
+            fed[lane] = n;
+            used += n;
+        }
+    }
+    used
+}
+
+/// Per-pass scratch buffers, allocated once at engine construction so the
+/// steady-state prefill/decode loop performs no heap allocation (asserted
+/// by the `interleave` bench's counting allocator).
+struct StepScratch {
+    /// [B, chunk] prefill / [B] decode token ids (-1 = dead position).
+    tokens: Vec<i32>,
+    /// Per-lane write positions.
+    pos: Vec<i32>,
+    /// Per-lane unfed prompt tokens (prefill planning input).
+    remaining: Vec<usize>,
+    /// Per-lane tokens fed this prefill pass (planning output).
+    fed_now: Vec<usize>,
+    /// Per-lane decode liveness.
+    live: Vec<bool>,
+    /// [B, S] attendable-slot mask fed to the backend.
+    slot_mask: Vec<f32>,
+    /// [S] per-lane attention-mass fold (reused across lanes).
+    mass: Vec<f32>,
+    /// Inter-token gaps observed this decode pass, µs.
+    itl_us: Vec<u64>,
+}
+
+impl StepScratch {
+    fn new(batch: usize, chunk: usize, s_cap: usize) -> Self {
+        StepScratch {
+            tokens: Vec::with_capacity(batch * chunk.max(1)),
+            pos: Vec::with_capacity(batch),
+            remaining: Vec::with_capacity(batch),
+            fed_now: Vec::with_capacity(batch),
+            live: Vec::with_capacity(batch),
+            slot_mask: Vec::with_capacity(batch * s_cap),
+            mass: Vec::with_capacity(s_cap),
+            itl_us: Vec::with_capacity(batch),
+        }
+    }
+}
+
+/// What `try_admit` did with a popped queue entry.
+enum AdmitOutcome {
+    /// The entry left the queue for good: it occupies a lane now, or it
+    /// was terminally rejected with a result. Admission keeps going.
+    Placed,
+    /// A budget says not yet — the entry went back to the queue head with
+    /// its wait clock intact.
+    Deferred,
+}
+
 pub struct Engine {
     backend: Box<dyn ExecBackend>,
     pub cfg: EngineConfig,
@@ -117,6 +242,11 @@ pub struct Engine {
     kv_budget_pages: Option<usize>,
     /// Worst-case pages reserved per occupied lane.
     kv_reserved: Vec<usize>,
+    /// Reusable per-pass buffers (no steady-state allocation).
+    scratch: StepScratch,
+    /// Duty-cycle state: what the previous pass ran (drives the 1:1
+    /// prefill/decode alternation when both have work).
+    last_pass_was_prefill: bool,
 }
 
 impl Engine {
@@ -129,6 +259,7 @@ impl Engine {
         backend.configure_kv_pool(cfg.kv_pool_config(&kv_layout, kv_budget_pages))?;
         backend.empty_cache(cfg.batch)?;
         let cap = backend.model_config().max_seq;
+        let chunk = backend.prefill_chunk();
         let h2o = H2oPolicy::new(cfg.aqua.h2o_ratio, cfg.h2o_recent_window);
         Ok(Engine {
             backend,
@@ -143,6 +274,8 @@ impl Engine {
             kv_layout,
             kv_budget_pages,
             kv_reserved: vec![0; cfg.batch],
+            scratch: StepScratch::new(cfg.batch, chunk, cap),
+            last_pass_was_prefill: false,
             cfg,
         })
     }
@@ -244,9 +377,23 @@ impl Engine {
         }
     }
 
-    pub fn submit(&mut self, req: GenRequest) {
+    /// Enqueue a request. Returns `false` (and records a rejected
+    /// submission) when `req.id` is already queued, running, or holds an
+    /// unclaimed result — admitting it would silently overwrite that
+    /// state, so duplicates are refused at the door and the caller owns
+    /// reporting (see `run_batch` / `EngineHandle`).
+    #[must_use = "a false return means the request was rejected as a duplicate id"]
+    pub fn submit(&mut self, req: GenRequest) -> bool {
+        if self.queue.contains(req.id)
+            || self.lanes.contains(req.id)
+            || self.results.contains_key(&req.id)
+        {
+            self.metrics.record_rejected();
+            return false;
+        }
         self.metrics.start_clock();
         self.queue.push(req);
+        true
     }
 
     pub fn take_result(&mut self, id: u64) -> Option<GenResult> {
@@ -254,17 +401,36 @@ impl Engine {
     }
 
     /// Convenience: run a whole batch of requests to completion, results in
-    /// submission order.
+    /// submission order. Duplicate-id submissions resolve to a
+    /// [`FinishReason::DuplicateId`] result (the first submission of the
+    /// id keeps the real one).
     pub fn run_batch(&mut self, reqs: Vec<GenRequest>) -> Result<Vec<GenResult>> {
         let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        let mut dups: Vec<u64> = vec![];
         for r in reqs {
-            self.submit(r);
+            let id = r.id;
+            if !self.submit(r) {
+                dups.push(id);
+            }
         }
         self.run_until_idle()?;
         ids.iter()
             .map(|id| {
-                self.take_result(*id)
-                    .ok_or_else(|| anyhow::anyhow!("request {id} produced no result"))
+                if let Some(res) = self.take_result(*id) {
+                    return Ok(res);
+                }
+                if dups.contains(id) {
+                    return Ok(GenResult {
+                        id: *id,
+                        tokens: vec![],
+                        prompt_logprobs: vec![],
+                        gen_logprobs: vec![],
+                        finish: FinishReason::DuplicateId,
+                        ttft_us: 0,
+                        total_us: 0,
+                    });
+                }
+                Err(anyhow::anyhow!("request {id} produced no result"))
             })
             .collect()
     }
@@ -277,15 +443,30 @@ impl Engine {
     /// One scheduling pass. Returns false when there is nothing to do.
     pub fn step(&mut self) -> Result<bool> {
         self.admit();
-        let needs_prefill = (0..self.cfg.batch).any(|l| {
-            matches!(&self.active[l], Some(a) if a.prompt_fed < a.req.prompt.len())
-        });
-        if needs_prefill {
+        let mut want_prefill = false;
+        let mut want_decode = false;
+        for a in self.active.iter().flatten() {
+            if a.prompt_fed < a.req.prompt.len() {
+                want_prefill = true;
+            } else {
+                want_decode = true;
+            }
+        }
+        // Duty cycle: with work on both sides, alternate passes so one
+        // long prefill can no longer freeze every decoding lane. Legacy
+        // mode (`interleave: false`) keeps absolute prefill priority.
+        let run_prefill =
+            want_prefill && (!self.cfg.interleave || !want_decode || !self.last_pass_was_prefill);
+        if run_prefill {
+            self.metrics.record_step(self.lanes.occupied() as u64, self.cfg.batch as u64);
             self.prefill_pass()?;
+            self.last_pass_was_prefill = true;
             return Ok(true);
         }
         if !self.lanes.is_idle() {
+            self.metrics.record_step(self.lanes.occupied() as u64, self.cfg.batch as u64);
             self.decode_pass()?;
+            self.last_pass_was_prefill = false;
             return Ok(true);
         }
         Ok(!self.queue.is_empty())
@@ -293,102 +474,190 @@ impl Engine {
 
     // ------------------------------------------------------------- admission
 
+    /// Σ worst-case tokens (`prompt + max_new`) across occupied lanes —
+    /// the `max_batch_total_tokens` accounting basis.
+    fn active_worst_case_tokens(&self) -> usize {
+        self.active
+            .iter()
+            .flatten()
+            .map(|a| a.req.prompt.len() + a.req.max_new_tokens)
+            .sum()
+    }
+
+    /// Waiting-vs-served pressure: enough requests queued per occupied
+    /// lane that a blocked head should not also block admissible work.
+    fn under_pressure(&self) -> bool {
+        self.queue.len() as f64 / self.lanes.occupied().max(1) as f64
+            >= self.cfg.waiting_served_ratio
+    }
+
     fn admit(&mut self) {
         let max_seq = self.backend.model_config().max_seq;
-        while let Some(lane) = self.lanes.free_lane() {
-            let Some(req) = self.queue.pop() else { break };
-            // Requests that can never run: longer than the KV capacity, or
-            // worst-case page growth beyond the whole page budget — each
-            // rejected with its own reason so clients know which knob to
-            // turn.
-            let need = self.request_pages(&req, max_seq);
-            let impossible = if req.prompt.is_empty()
-                || req.prompt.len() + req.max_new_tokens > max_seq
-            {
-                Some(FinishReason::PromptTooLong)
-            } else if self.kv_budget_pages.is_some_and(|budget| need > budget) {
-                Some(FinishReason::OverKvBudget)
-            } else {
-                None
-            };
-            if let Some(finish) = impossible {
-                let id = req.id;
-                self.results.insert(
-                    id,
-                    GenResult {
-                        id,
-                        tokens: vec![],
-                        prompt_logprobs: vec![],
-                        gen_logprobs: vec![],
-                        finish,
-                        ttft_us: 0,
-                        total_us: 0,
-                    },
-                );
-                continue;
-            }
-            // Prefix sharing: resolve the longest registered page chain of
-            // this prompt before spending prefill compute (or budget). The
-            // attach raises page refcounts; if admission defers after all,
-            // retire_lane() rolls it back.
-            let attach = if self.prefix_share_ok(&req) {
-                let knobs =
-                    AquaKnobs::from_config(&self.cfg.aqua, self.backend.model_config().d_head);
-                match self.backend.attach_prefix(lane, &req.prompt, &knobs) {
-                    Ok(a) => a,
-                    Err(e) => {
-                        crate::log_warn!("attach_prefix failed (serving cold): {e:#}");
-                        Default::default()
+        loop {
+            let Some(lane) = self.lanes.free_lane() else { break };
+            let Some(entry) = self.queue.pop_front() else { break };
+            match self.try_admit(lane, entry, max_seq) {
+                AdmitOutcome::Placed => continue,
+                AdmitOutcome::Deferred => {
+                    // The head can't run yet (it is back at the front,
+                    // wait clock intact). Under queue pressure, look past
+                    // it for work the budgets can admit right now —
+                    // bounded per head so it is never starved.
+                    if !self.cfg.interleave || !self.under_pressure() {
+                        break;
+                    }
+                    // Conservative fit check: full worst-case charge, no
+                    // prefix-share discount — anything it accepts,
+                    // `try_admit` must accept too. Impossible requests
+                    // "fit" so they get rejected promptly instead of
+                    // clogging the queue behind the head.
+                    let reserved: usize = self.kv_reserved.iter().sum();
+                    let budget = self.kv_budget_pages;
+                    let layout = self.kv_layout;
+                    let active_tokens = self.active_worst_case_tokens();
+                    let total_cap = self.cfg.max_batch_total_tokens;
+                    let fits = move |r: &GenRequest| {
+                        let want = r.prompt.len() + r.max_new_tokens;
+                        if r.prompt.is_empty() || want > max_seq {
+                            return true; // impossible: admit to reject
+                        }
+                        if total_cap > 0 && want > total_cap {
+                            return true; // impossible at any occupancy
+                        }
+                        let need = layout.worst_case_pages(want, max_seq);
+                        if let Some(b) = budget {
+                            if need > b {
+                                return true; // impossible at any occupancy
+                            }
+                            if reserved + need > b {
+                                return false;
+                            }
+                        }
+                        total_cap == 0 || active_tokens + want <= total_cap
+                    };
+                    let Some(entry) = self.queue.pop_past_head(fits) else { break };
+                    match self.try_admit(lane, entry, max_seq) {
+                        AdmitOutcome::Placed => continue,
+                        // unreachable (`fits` is strictly conservative),
+                        // but if it ever happens the entry is requeued,
+                        // not dropped
+                        AdmitOutcome::Deferred => break,
                     }
                 }
-            } else {
-                Default::default()
-            };
-            // Memory-aware admission: the FIFO head waits until its
-            // worst-case pages fit next to the current occupants' — so a
-            // budget-capped pool can never stall mid-decode, for any
-            // backend (the sharded workers' per-worker caps are a
-            // backstop, this is the global bound). Pages the prefix index
-            // provably shares with a *live* holder are already covered by
-            // that holder's reservation and are not charged again — a
-            // budget-capped pool stops deferring requests that fit;
-            // resurrected cached pages are new residency and stay charged.
-            if let Some(budget) = self.kv_budget_pages {
-                let reserved: usize = self.kv_reserved.iter().sum();
-                let attached_pages = attach.tokens / self.kv_layout.page_slots;
-                let live_shared = attached_pages - attach.resurrected_pages;
-                let charge = need - live_shared;
-                if reserved + charge > budget {
-                    if attach.tokens > 0 {
-                        self.backend.retire_lane(lane);
-                    }
-                    self.queue.push_front(req);
-                    break;
-                }
-                // the lane's standing reservation is its full worst case:
-                // shared pages must stay covered even after their donor
-                // retires (the refs this lane holds keep them resident)
-                self.kv_reserved[lane] = need;
             }
-            self.kv[lane].reset();
-            self.lanes.occupy(lane, req.id);
-            if attach.tokens > 0 {
-                // adopted positions are already written and attendable
-                self.kv[lane].commit_write(attach.tokens);
-                self.metrics.record_prefix_hits(attach.tokens as u64);
-            }
-            self.active[lane] = Some(ActiveReq {
-                prompt_fed: attach.tokens,
-                generated: vec![],
-                prompt_logprobs: vec![],
-                gen_logprobs: vec![],
-                next_pos: attach.tokens,
-                pending_token: -1,
-                started_at: Instant::now(),
-                first_token_at: None,
-                req,
-            });
         }
+    }
+
+    /// Place one popped queue entry: terminal-reject, defer (budgets), or
+    /// occupy `lane`.
+    fn try_admit(&mut self, lane: usize, entry: Queued, max_seq: usize) -> AdmitOutcome {
+        // Requests that can never run: longer than the KV capacity, or
+        // worst-case page growth beyond the whole page budget — each
+        // rejected with its own reason so clients know which knob to
+        // turn.
+        let need = self.request_pages(&entry.req, max_seq);
+        let want = entry.req.prompt.len() + entry.req.max_new_tokens;
+        let impossible = if entry.req.prompt.is_empty() || want > max_seq {
+            Some(FinishReason::PromptTooLong)
+        } else if self.kv_budget_pages.is_some_and(|budget| need > budget)
+            || (self.cfg.max_batch_total_tokens > 0 && want > self.cfg.max_batch_total_tokens)
+        {
+            // can never be admitted at this budget, even alone — deferring
+            // would wedge the queue behind it forever
+            Some(FinishReason::OverKvBudget)
+        } else {
+            None
+        };
+        if let Some(finish) = impossible {
+            self.metrics.record_queue_wait(entry.enqueued_at.elapsed());
+            self.metrics.record_rejected();
+            let id = entry.req.id;
+            self.results.insert(
+                id,
+                GenResult {
+                    id,
+                    tokens: vec![],
+                    prompt_logprobs: vec![],
+                    gen_logprobs: vec![],
+                    finish,
+                    ttft_us: 0,
+                    total_us: 0,
+                },
+            );
+            return AdmitOutcome::Placed;
+        }
+        // Batch token budget: the occupants' summed worst-case token
+        // growth stays under `max_batch_total_tokens`.
+        if self.cfg.max_batch_total_tokens > 0 {
+            if self.active_worst_case_tokens() + want > self.cfg.max_batch_total_tokens {
+                self.queue.requeue_front(entry);
+                return AdmitOutcome::Deferred;
+            }
+        }
+        // Prefix sharing: resolve the longest registered page chain of
+        // this prompt before spending prefill compute (or budget). The
+        // attach raises page refcounts; if admission defers after all,
+        // retire_lane() rolls it back.
+        let attach = if self.prefix_share_ok(&entry.req) {
+            let knobs = AquaKnobs::from_config(&self.cfg.aqua, self.backend.model_config().d_head);
+            match self.backend.attach_prefix(lane, &entry.req.prompt, &knobs) {
+                Ok(a) => a,
+                Err(e) => {
+                    crate::log_warn!("attach_prefix failed (serving cold): {e:#}");
+                    Default::default()
+                }
+            }
+        } else {
+            Default::default()
+        };
+        // Memory-aware admission: the request waits until its worst-case
+        // pages fit next to the current occupants' — so a budget-capped
+        // pool can never stall mid-decode, for any backend (the sharded
+        // workers' per-worker caps are a backstop, this is the global
+        // bound). Pages the prefix index provably shares with a *live*
+        // holder are already covered by that holder's reservation and are
+        // not charged again — a budget-capped pool stops deferring
+        // requests that fit; resurrected cached pages are new residency
+        // and stay charged.
+        if let Some(budget) = self.kv_budget_pages {
+            let reserved: usize = self.kv_reserved.iter().sum();
+            let attached_pages = attach.tokens / self.kv_layout.page_slots;
+            let live_shared = attached_pages - attach.resurrected_pages;
+            let charge = need - live_shared;
+            if reserved + charge > budget {
+                if attach.tokens > 0 {
+                    self.backend.retire_lane(lane);
+                }
+                self.queue.requeue_front(entry);
+                return AdmitOutcome::Deferred;
+            }
+            // the lane's standing reservation is its full worst case:
+            // shared pages must stay covered even after their donor
+            // retires (the refs this lane holds keep them resident)
+            self.kv_reserved[lane] = need;
+        }
+        self.metrics.record_queue_wait(entry.enqueued_at.elapsed());
+        let req = entry.req;
+        self.kv[lane].reset();
+        self.lanes.occupy(lane, req.id);
+        if attach.tokens > 0 {
+            // adopted positions are already written and attendable
+            self.kv[lane].commit_write(attach.tokens);
+            self.metrics.record_prefix_hits(attach.tokens as u64);
+        }
+        self.active[lane] = Some(ActiveReq {
+            prompt_fed: attach.tokens,
+            generated: Vec::with_capacity(req.max_new_tokens),
+            prompt_logprobs: Vec::with_capacity(req.prompt.len().saturating_sub(1)),
+            gen_logprobs: Vec::with_capacity(req.max_new_tokens),
+            next_pos: attach.tokens,
+            pending_token: -1,
+            started_at: Instant::now(),
+            first_token_at: None,
+            last_token_at: None,
+            req,
+        });
+        AdmitOutcome::Placed
     }
 
     // --------------------------------------------------------------- prefill
@@ -401,49 +670,68 @@ impl Engine {
             (c.max_seq, c.d_head, c.n_layers, c.vocab)
         };
 
-        // -1 marks padding / lanes with nothing to feed; backends may skip
-        // those positions entirely (the native backend does).
-        let mut tokens = vec![-1i32; b * chunk];
-        let mut pos0 = vec![0i32; b];
-        let mut fed_now = vec![0usize; b];
+        // Plan the pass: whole per-lane chunks under the token budget
+        // (unlimited in legacy mode — every lane with prompt left runs).
+        self.scratch.remaining.clear();
+        self.scratch.remaining.resize(b, 0);
         for lane in 0..b {
-            pos0[lane] = self.kv[lane].len as i32;
             if let Some(a) = &self.active[lane] {
-                let remaining = a.req.prompt.len() - a.prompt_fed;
-                if remaining > 0 {
-                    let n = remaining.min(chunk);
-                    tokens[lane * chunk..lane * chunk + n]
-                        .copy_from_slice(&a.req.prompt[a.prompt_fed..a.prompt_fed + n]);
-                    fed_now[lane] = n;
-                }
+                self.scratch.remaining[lane] = a.req.prompt.len() - a.prompt_fed;
             }
         }
-        let slot_mask = self.flat_mask();
+        self.scratch.fed_now.clear();
+        self.scratch.fed_now.resize(b, 0);
+        let budget = if self.cfg.interleave { self.cfg.max_batch_prefill_tokens } else { 0 };
+        plan_prefill(&self.scratch.remaining, chunk, budget, &mut self.scratch.fed_now);
+
+        // -1 marks padding / lanes with nothing to feed; backends may skip
+        // those positions entirely (the native backend does).
+        self.scratch.tokens.clear();
+        self.scratch.tokens.resize(b * chunk, -1);
+        self.scratch.pos.clear();
+        self.scratch.pos.resize(b, 0);
+        for lane in 0..b {
+            self.scratch.pos[lane] = self.kv[lane].len as i32;
+            let n = self.scratch.fed_now[lane];
+            if n > 0 {
+                let a = self.active[lane].as_ref().unwrap();
+                self.scratch.tokens[lane * chunk..lane * chunk + n]
+                    .copy_from_slice(&a.req.prompt[a.prompt_fed..a.prompt_fed + n]);
+            }
+        }
+        self.fill_mask();
         let knobs = AquaKnobs::from_config(&self.cfg.aqua, d);
 
         let t0 = Instant::now();
-        let out = self.backend.prefill(b, &tokens, &pos0, &slot_mask, &knobs)?;
-        let real_tokens: u64 = fed_now.iter().map(|&n| n as u64).sum();
+        let out = self.backend.prefill(
+            b,
+            &self.scratch.tokens,
+            &self.scratch.pos,
+            &self.scratch.slot_mask,
+            &knobs,
+        )?;
+        let real_tokens: u64 = self.scratch.fed_now.iter().map(|&n| n as u64).sum();
         self.metrics.record_prefill(t0.elapsed(), real_tokens);
         self.metrics.record_kernels(&out.kernels, false);
         self.metrics.record_kv(&out.kv, self.live_slots_total());
 
         let mut finish_list: Vec<usize> = vec![];
         for lane in 0..b {
-            let n = fed_now[lane];
+            let n = self.scratch.fed_now[lane];
             if n == 0 {
                 continue;
             }
             self.kv[lane].commit_write(n);
             // fold this chunk's attention mass (sum over layers)
-            let mut mass = vec![0.0f32; s_cap];
+            self.scratch.mass.clear();
+            self.scratch.mass.resize(s_cap, 0.0);
             for l in 0..n_layers {
                 let base = (l * b + lane) * s_cap;
                 for s in 0..s_cap {
-                    mass[s] += out.attn_acc[base + s];
+                    self.scratch.mass[s] += out.attn_acc[base + s];
                 }
             }
-            self.kv[lane].accumulate(&mass);
+            self.kv[lane].accumulate(&self.scratch.mass);
             let evicted = self.h2o.apply(&mut self.kv[lane]) as u64;
             self.metrics.record_evictions(evicted);
 
@@ -455,7 +743,8 @@ impl Engine {
             for c in 0..n {
                 let target_idx = fed_before + c + 1;
                 if target_idx < a.req.prompt.len() {
-                    let row = &out.logits[(lane * chunk + c) * vocab..(lane * chunk + c + 1) * vocab];
+                    let row =
+                        &out.logits[(lane * chunk + c) * vocab..(lane * chunk + c + 1) * vocab];
                     a.prompt_logprobs.push(log_softmax_at(row, a.req.prompt[target_idx] as usize));
                 }
             }
@@ -467,7 +756,9 @@ impl Engine {
                     finish_list.push(lane);
                 } else {
                     let tok = self.cfg.sampler.sample(row, &mut self.rng);
-                    a.first_token_at = Some(Instant::now());
+                    let now = Instant::now();
+                    a.first_token_at = Some(now);
+                    a.last_token_at = Some(now);
                     a.gen_logprobs.push(log_softmax_at(row, tok as usize));
                     a.generated.push(tok);
                     a.pending_token = tok;
@@ -492,52 +783,67 @@ impl Engine {
             (c.max_seq, c.d_head, c.n_layers, c.vocab)
         };
 
-        // -1 marks dead lanes; backends may skip them entirely.
-        let mut tokens = vec![-1i32; b];
-        let mut pos = vec![0i32; b];
-        let mut live = vec![false; b];
+        // -1 marks dead lanes (idle or still prefilling); backends may
+        // skip them entirely.
+        self.scratch.tokens.clear();
+        self.scratch.tokens.resize(b, -1);
+        self.scratch.pos.clear();
+        self.scratch.pos.resize(b, 0);
+        self.scratch.live.clear();
+        self.scratch.live.resize(b, false);
         for lane in 0..b {
-            pos[lane] = self.kv[lane].len.min(s_cap - 1) as i32;
+            self.scratch.pos[lane] = self.kv[lane].len.min(s_cap - 1) as i32;
             if let Some(a) = &self.active[lane] {
                 if a.pending_token >= 0 && !self.kv[lane].is_full() {
-                    tokens[lane] = a.pending_token;
-                    live[lane] = true;
+                    self.scratch.tokens[lane] = a.pending_token;
+                    self.scratch.live[lane] = true;
                 }
             }
         }
-        if !live.iter().any(|&l| l) {
-            // every active lane is blocked (capacity) — finish them
+        if !self.scratch.live.iter().any(|&l| l) {
+            // every decode-ready lane is blocked (capacity) — finish them.
+            // Lanes still mid-prefill were never decode-ready and keep
+            // going on later passes.
             for lane in 0..b {
-                if self.active[lane].is_some() {
+                if matches!(&self.active[lane], Some(a) if a.prompt_fed >= a.req.prompt.len()) {
                     self.finish_lane(lane, Some(FinishReason::Length));
                 }
             }
             return Ok(());
         }
 
-        let slot_mask = self.flat_mask();
+        self.fill_mask();
         let knobs = AquaKnobs::from_config(&self.cfg.aqua, d);
 
         let t0 = Instant::now();
-        let out = self.backend.decode(b, &tokens, &pos, &slot_mask, &knobs)?;
-        self.metrics.record_decode(t0.elapsed(), live.iter().filter(|&&l| l).count() as u64);
+        let out = self.backend.decode(
+            b,
+            &self.scratch.tokens,
+            &self.scratch.pos,
+            &self.scratch.slot_mask,
+            &knobs,
+        )?;
+        let live_count = self.scratch.live.iter().filter(|&&l| l).count() as u64;
+        self.metrics.record_decode(t0.elapsed(), live_count);
         self.metrics.record_kernels(&out.kernels, true);
         self.metrics.record_kv(&out.kv, self.live_slots_total());
 
+        self.scratch.itl_us.clear();
         let mut finish_list: Vec<usize> = vec![];
         for lane in 0..b {
-            if !live[lane] {
+            if !self.scratch.live[lane] {
                 continue;
             }
             self.kv[lane].commit_write(1);
-            let mut mass = vec![0.0f32; s_cap];
+            self.scratch.mass.clear();
+            self.scratch.mass.resize(s_cap, 0.0);
             for l in 0..n_layers {
                 let base = (l * b + lane) * s_cap;
                 for s in 0..s_cap {
-                    mass[s] += out.attn_acc[base + s];
+                    self.scratch.mass[s] += out.attn_acc[base + s];
                 }
             }
-            self.kv[lane].accumulate(&mass);
+            self.kv[lane].accumulate(&self.scratch.mass);
             let evicted = self.h2o.apply(&mut self.kv[lane]) as u64;
             self.metrics.record_evictions(evicted);
 
@@ -545,9 +851,14 @@ impl Engine {
             a.next_pos = self.kv[lane].len;
             let row = &out.logits[lane * vocab..(lane + 1) * vocab];
             let tok = self.cfg.sampler.sample(row, &mut self.rng);
-            if a.first_token_at.is_none() {
-                a.first_token_at = Some(Instant::now());
+            let now = Instant::now();
+            if let Some(prev) = a.last_token_at {
+                self.scratch.itl_us.push(now.duration_since(prev).as_micros() as u64);
             }
+            if a.first_token_at.is_none() {
+                a.first_token_at = Some(now);
+            }
+            a.last_token_at = Some(now);
             a.gen_logprobs.push(log_softmax_at(row, tok as usize));
             a.generated.push(tok);
             a.pending_token = tok;
@@ -555,6 +866,7 @@ impl Engine {
                 finish_list.push(lane);
             }
         }
+        self.metrics.record_itl(&self.scratch.itl_us);
         for lane in finish_list {
             self.finish_lane(lane, None);
         }
@@ -569,13 +881,14 @@ impl Engine {
         self.kv.iter().map(|l| l.live_slots() as u64).sum()
     }
 
-    fn flat_mask(&self) -> Vec<f32> {
+    /// Refresh the [B, S] attendable-slot mask in scratch (no allocation).
+    fn fill_mask(&mut self) {
         let s = self.backend.model_config().max_seq;
-        let mut m = vec![0.0f32; self.cfg.batch * s];
+        self.scratch.slot_mask.clear();
+        self.scratch.slot_mask.resize(self.cfg.batch * s, 0.0);
         for (lane, kv) in self.kv.iter().enumerate() {
-            m[lane * s..(lane + 1) * s].copy_from_slice(&kv.slot_mask);
+            self.scratch.slot_mask[lane * s..(lane + 1) * s].copy_from_slice(&kv.slot_mask);
         }
-        m
     }
 
     fn lane_should_stop(&self, lane: usize) -> bool {
@@ -679,8 +992,25 @@ impl EngineHandle {
                     };
                     match cmd {
                         EngineCmd::Submit(r) => {
-                            done_ids.push(r.id);
-                            engine.submit(r);
+                            // Duplicate ids are refused at submit and
+                            // answered immediately — `done_ids` only ever
+                            // tracks accepted submissions, so a duplicate
+                            // can neither overwrite the original's result
+                            // nor leave a stale pump entry behind.
+                            let id = r.id;
+                            if engine.submit(r) {
+                                done_ids.push(id);
+                            } else {
+                                let _ = res_tx.send(GenResult {
+                                    id,
+                                    tokens: vec![],
+                                    prompt_logprobs: vec![],
+                                    gen_logprobs: vec![],
+                                    finish: FinishReason::DuplicateId,
+                                    ttft_us: 0,
+                                    total_us: 0,
+                                });
+                            }
                         }
                         EngineCmd::Stats(tx) => {
                             let _ = tx.send(engine.metrics.snapshot());
@@ -715,5 +1045,29 @@ impl EngineHandle {
             }
         });
         EngineHandle { cmd_tx, result_rx, join }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_prefill_whole_chunks_under_budget() {
+        let remaining = [40usize, 3, 0, 16];
+        let mut fed = [0usize; 4];
+        // budget 20, chunk 16: lane 0 gets a full chunk (16), lane 1's
+        // tail (3) still fits (19 <= 20), lane 3's chunk would overflow
+        let total = plan_prefill(&remaining, 16, 20, &mut fed);
+        assert_eq!(fed, [16, 3, 0, 0]);
+        assert_eq!(total, 19);
+        // unlimited: everyone gets min(remaining, chunk)
+        let total = plan_prefill(&remaining, 16, 0, &mut fed);
+        assert_eq!(fed, [16, 3, 0, 16]);
+        assert_eq!(total, 35);
+        // budget below one chunk is rounded up so the pass progresses
+        let total = plan_prefill(&remaining, 16, 1, &mut fed);
+        assert_eq!(fed, [16, 0, 0, 0]);
+        assert_eq!(total, 16);
     }
 }

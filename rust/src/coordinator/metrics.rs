@@ -9,13 +9,64 @@ use std::time::Duration;
 use crate::kvpool::KvPoolGauges;
 use crate::runtime::KernelCounters;
 
+/// Inter-token-latency histogram resolution: geometric buckets at
+/// `floor(4·log2(µs))`, i.e. ~19% wide — fixed-size so the steady-state
+/// decode loop records without allocating.
+const ITL_BUCKETS: usize = 256;
+
+fn itl_bucket(us: u64) -> usize {
+    if us < 2 {
+        return 0;
+    }
+    let idx = (4.0 * (us as f64).log2()).floor() as isize;
+    idx.clamp(0, ITL_BUCKETS as isize - 1) as usize
+}
+
+/// Geometric midpoint of bucket `idx`, in ms.
+fn itl_bucket_ms(idx: usize) -> f64 {
+    2f64.powf((idx as f64 + 0.5) / 4.0) / 1e3
+}
+
+/// Percentile over the bucketed distribution (returns the holding
+/// bucket's midpoint, so the answer is exact to one bucket ≈ ±10%).
+fn hist_percentile_ms(hist: &[u64], count: u64, p: f64) -> f64 {
+    if count == 0 || hist.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * count as f64).ceil().max(1.0) as u64;
+    let mut acc = 0u64;
+    for (idx, &c) in hist.iter().enumerate() {
+        acc += c;
+        if acc >= rank {
+            return itl_bucket_ms(idx);
+        }
+    }
+    0.0
+}
+
 #[derive(Debug, Default)]
 struct Inner {
     requests_done: u64,
+    /// Of `requests_done`, submissions that resolved without running:
+    /// admission rejects (PromptTooLong / OverKvBudget) and duplicate
+    /// ids. Counted in both so `requests_done` reconciles with
+    /// submissions.
+    requests_rejected: u64,
     tokens_generated: u64,
     prompt_tokens: u64,
     decode_calls: u64,
     prefill_calls: u64,
+    /// Scheduling passes (prefill + decode) with their occupancy sums —
+    /// the `batch_occupancy` / `prefill_tokens_per_step` denominators.
+    sched_steps: u64,
+    occupancy_lane_sum: u64,
+    occupancy_cap_sum: u64,
+    /// Queue wait per request (submit → admission or terminal reject), µs.
+    queue_wait_us: Vec<f64>,
+    /// ITL histogram (lazily sized to `ITL_BUCKETS` on first record).
+    itl_hist: Vec<u64>,
+    itl_sum_us: f64,
+    itl_count: u64,
     decode_time: Duration,
     prefill_time: Duration,
     ttft_us: Vec<f64>,
@@ -49,10 +100,29 @@ pub struct Metrics {
 #[derive(Debug, Clone, Default)]
 pub struct Snapshot {
     pub requests_done: u64,
+    /// Of `requests_done`, submissions resolved without running
+    /// (admission rejects, duplicate ids).
+    pub requests_rejected: u64,
     pub tokens_generated: u64,
     pub prompt_tokens: u64,
     pub decode_calls: u64,
     pub prefill_calls: u64,
+    /// Scheduling passes (prefill + decode) the engine ran.
+    pub sched_steps: u64,
+    /// Mean computed prompt tokens per scheduling pass — with chunked
+    /// interleaving this sits near the per-pass budget instead of
+    /// spiking with prompt length.
+    pub prefill_tokens_per_step: f64,
+    /// Mean occupied-lane fraction per scheduling pass, in [0, 1].
+    pub batch_occupancy: f64,
+    /// Queue wait (submit → admission or terminal reject).
+    pub queue_wait_p50_ms: f64,
+    pub queue_wait_p99_ms: f64,
+    /// Decode inter-token latency: gap between consecutive tokens of the
+    /// same request (bucketed to ~±10%; the starvation signal a long
+    /// prefill used to spike).
+    pub itl_mean_ms: f64,
+    pub itl_p99_ms: f64,
     pub decode_time_s: f64,
     pub prefill_time_s: f64,
     pub mean_ttft_ms: f64,
@@ -135,6 +205,47 @@ impl Metrics {
         self.inner.lock().unwrap().h2o_evictions += n;
     }
 
+    /// One scheduling pass: `occupied` of `capacity` lanes carried work.
+    pub fn record_step(&self, occupied: u64, capacity: u64) {
+        let mut i = self.inner.lock().unwrap();
+        i.sched_steps += 1;
+        i.occupancy_lane_sum += occupied;
+        i.occupancy_cap_sum += capacity;
+    }
+
+    /// Time a request spent queued before admission or terminal reject.
+    pub fn record_queue_wait(&self, d: Duration) {
+        self.inner.lock().unwrap().queue_wait_us.push(d.as_micros() as f64);
+    }
+
+    /// A submission resolved without running (admission reject, duplicate
+    /// id): counts toward `requests_done` so `/stats` reconciles with
+    /// submissions, and toward the distinct rejected counter.
+    pub fn record_rejected(&self) {
+        let mut i = self.inner.lock().unwrap();
+        i.requests_done += 1;
+        i.requests_rejected += 1;
+    }
+
+    /// Record one decode pass's inter-token gaps (µs). Bucketed into a
+    /// fixed histogram so the hot loop never allocates (the 256-slot
+    /// store is sized once, on the first call).
+    pub fn record_itl(&self, gaps_us: &[u64]) {
+        if gaps_us.is_empty() {
+            return;
+        }
+        let mut i = self.inner.lock().unwrap();
+        if i.itl_hist.is_empty() {
+            i.itl_hist.resize(ITL_BUCKETS, 0);
+        }
+        for &g in gaps_us {
+            let b = itl_bucket(g);
+            i.itl_hist[b] += 1;
+            i.itl_sum_us += g as f64;
+            i.itl_count += 1;
+        }
+    }
+
     /// Fold one backend call's kernel accounting in; `decode` routes the
     /// score time into the decode-only pool as well.
     pub fn record_kernels(&self, k: &KernelCounters, decode: bool) {
@@ -167,10 +278,26 @@ impl Metrics {
         let wall_s = i.wall_start.map(|w| w.elapsed().as_secs_f64()).unwrap_or(0.0);
         Snapshot {
             requests_done: i.requests_done,
+            requests_rejected: i.requests_rejected,
             tokens_generated: i.tokens_generated,
             prompt_tokens: i.prompt_tokens,
             decode_calls: i.decode_calls,
             prefill_calls: i.prefill_calls,
+            sched_steps: i.sched_steps,
+            prefill_tokens_per_step: if i.sched_steps > 0 {
+                i.prompt_tokens as f64 / i.sched_steps as f64
+            } else {
+                0.0
+            },
+            batch_occupancy: if i.occupancy_cap_sum > 0 {
+                i.occupancy_lane_sum as f64 / i.occupancy_cap_sum as f64
+            } else {
+                0.0
+            },
+            queue_wait_p50_ms: percentile(&i.queue_wait_us, 50.0) / 1e3,
+            queue_wait_p99_ms: percentile(&i.queue_wait_us, 99.0) / 1e3,
+            itl_mean_ms: if i.itl_count > 0 { i.itl_sum_us / i.itl_count as f64 / 1e3 } else { 0.0 },
+            itl_p99_ms: hist_percentile_ms(&i.itl_hist, i.itl_count, 99.0),
             decode_time_s: decode_s,
             prefill_time_s: i.prefill_time.as_secs_f64(),
             mean_ttft_ms: mean(&i.ttft_us) / 1e3,
@@ -226,6 +353,24 @@ impl Snapshot {
             self.mean_ttft_ms = (self.mean_ttft_ms * n0 + o.mean_ttft_ms * n1) / (n0 + n1);
             self.mean_latency_ms = (self.mean_latency_ms * n0 + o.mean_latency_ms * n1) / (n0 + n1);
         }
+        // scheduler gauges: per-step means weight by steps, ITL mean by
+        // token volume; wait/ITL percentiles take the worst (exact
+        // percentiles cannot be merged from summaries)
+        let (s0, s1) = (self.sched_steps as f64, o.sched_steps as f64);
+        if s0 + s1 > 0.0 {
+            self.prefill_tokens_per_step =
+                (self.prefill_tokens_per_step * s0 + o.prefill_tokens_per_step * s1) / (s0 + s1);
+            self.batch_occupancy = (self.batch_occupancy * s0 + o.batch_occupancy * s1) / (s0 + s1);
+        }
+        let (t0, t1) = (self.tokens_generated as f64, o.tokens_generated as f64);
+        if t0 + t1 > 0.0 {
+            self.itl_mean_ms = (self.itl_mean_ms * t0 + o.itl_mean_ms * t1) / (t0 + t1);
+        }
+        self.sched_steps += o.sched_steps;
+        self.requests_rejected += o.requests_rejected;
+        self.queue_wait_p50_ms = self.queue_wait_p50_ms.max(o.queue_wait_p50_ms);
+        self.queue_wait_p99_ms = self.queue_wait_p99_ms.max(o.queue_wait_p99_ms);
+        self.itl_p99_ms = self.itl_p99_ms.max(o.itl_p99_ms);
         let (d0, d1) = (self.decode_calls as f64, o.decode_calls as f64);
         if d0 + d1 > 0.0 {
             self.score_us_per_decode =
@@ -281,17 +426,21 @@ impl Snapshot {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} gen_tokens={} prompt_tokens={} decode_calls={} prefill_calls={}\n\
+            "requests={} (rejected={}) gen_tokens={} prompt_tokens={} decode_calls={} prefill_calls={}\n\
              decode {:.2}s ({:.1} tok/s) prefill {:.2}s | wall {:.1} tok/s\n\
              ttft mean {:.2}ms p50 {:.2}ms p99 {:.2}ms | latency mean {:.2}ms | h2o_evictions={}\n\
+             sched steps={} occupancy {:.0}% prefill {:.1} tok/step | itl mean {:.3}ms p99 {:.3}ms \
+             | queue wait p50 {:.2}ms p99 {:.2}ms\n\
              kernels dense={} sparse={} packed={} | score path {:.2}µs/decode\n\
              kv resident {:.1}KiB (peak {:.1}KiB) pages={} util {:.0}% stalls={} free={}\n\
              prefix hits={} tok ({:.0}% of prompt volume) shared_pages={} cow={}",
-            self.requests_done, self.tokens_generated, self.prompt_tokens,
+            self.requests_done, self.requests_rejected, self.tokens_generated, self.prompt_tokens,
             self.decode_calls, self.prefill_calls, self.decode_time_s,
             self.decode_tok_per_s, self.prefill_time_s, self.wall_tok_per_s,
             self.mean_ttft_ms, self.p50_ttft_ms, self.p99_ttft_ms,
             self.mean_latency_ms, self.h2o_evictions,
+            self.sched_steps, 100.0 * self.batch_occupancy, self.prefill_tokens_per_step,
+            self.itl_mean_ms, self.itl_p99_ms, self.queue_wait_p50_ms, self.queue_wait_p99_ms,
             self.kernels.dense, self.kernels.sparse, self.kernels.packed,
             self.score_us_per_decode,
             self.kv_resident_bytes as f64 / 1024.0,
@@ -409,6 +558,76 @@ mod tests {
         assert_eq!(a.kv_shared_pages, 4);
         assert_eq!(a.kv_cow_copies, 2);
         assert!((a.prefix_hit_rate() - 128.0 / 224.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scheduler_gauges_reconcile() {
+        let m = Metrics::default();
+        // 4 passes at occupancy 2,4,4,2 of 4 lanes; 32 prompt tokens
+        m.record_prefill(Duration::from_millis(1), 32);
+        for occ in [2u64, 4, 4, 2] {
+            m.record_step(occ, 4);
+        }
+        // rejected submissions count in requests_done AND the rejected
+        // counter, so submissions reconcile
+        m.record_finish(Some(Duration::from_millis(2)), Duration::from_millis(9));
+        m.record_rejected();
+        m.record_rejected();
+        m.record_queue_wait(Duration::from_millis(4));
+        m.record_queue_wait(Duration::from_millis(8));
+        // ITL: 9 gaps near 1ms, one 10ms straggler → p99 lands on the
+        // straggler's bucket, mean is exact
+        let gaps: Vec<u64> = (0..9).map(|_| 1000u64).chain([10_000]).collect();
+        m.record_itl(&gaps);
+        let s = m.snapshot();
+        assert_eq!(s.requests_done, 3, "1 finished + 2 rejected");
+        assert_eq!(s.requests_rejected, 2);
+        assert_eq!(s.sched_steps, 4);
+        assert!((s.batch_occupancy - 12.0 / 16.0).abs() < 1e-9);
+        assert!((s.prefill_tokens_per_step - 8.0).abs() < 1e-9);
+        assert!((s.queue_wait_p99_ms - 8.0).abs() < 0.5);
+        let exact_mean = (9.0 * 1.0 + 10.0) / 10.0;
+        assert!((s.itl_mean_ms - exact_mean).abs() < 1e-6);
+        // bucketed percentiles are exact to one ~19%-wide bucket
+        assert!(s.itl_p99_ms > 8.0 && s.itl_p99_ms < 12.0, "p99 {} ≉ 10ms", s.itl_p99_ms);
+        let p50 = hist_percentile_ms(&m.inner.lock().unwrap().itl_hist, 10, 50.0);
+        assert!(p50 > 0.8 && p50 < 1.2, "p50 {p50} ≉ 1ms");
+        assert!(s.report().contains("rejected=2"));
+        assert!(s.report().contains("sched steps=4"));
+    }
+
+    #[test]
+    fn scheduler_gauges_merge_weighted() {
+        let mut a = Snapshot {
+            sched_steps: 10,
+            prefill_tokens_per_step: 8.0,
+            batch_occupancy: 0.5,
+            tokens_generated: 100,
+            itl_mean_ms: 1.0,
+            itl_p99_ms: 2.0,
+            queue_wait_p99_ms: 3.0,
+            requests_rejected: 1,
+            ..Default::default()
+        };
+        let b = Snapshot {
+            sched_steps: 30,
+            prefill_tokens_per_step: 4.0,
+            batch_occupancy: 1.0,
+            tokens_generated: 300,
+            itl_mean_ms: 3.0,
+            itl_p99_ms: 1.0,
+            queue_wait_p99_ms: 7.0,
+            requests_rejected: 2,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.sched_steps, 40);
+        assert_eq!(a.requests_rejected, 3);
+        assert!((a.prefill_tokens_per_step - 5.0).abs() < 1e-9, "weighted by steps");
+        assert!((a.batch_occupancy - 0.875).abs() < 1e-9);
+        assert!((a.itl_mean_ms - 2.5).abs() < 1e-9, "weighted by tokens");
+        assert!((a.itl_p99_ms - 2.0).abs() < 1e-9, "worst-of");
+        assert!((a.queue_wait_p99_ms - 7.0).abs() < 1e-9, "worst-of");
     }
 
     #[test]

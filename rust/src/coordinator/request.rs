@@ -41,6 +41,10 @@ pub enum FinishReason {
     /// the request can never be admitted at this budget (raising the
     /// budget, not shortening the prompt, is the fix).
     OverKvBudget,
+    /// Submitted with an id that is already queued, running, or holding
+    /// an unclaimed result. Refused at submit (nothing ran); resubmit
+    /// under a fresh id.
+    DuplicateId,
 }
 
 /// Completed request.
@@ -79,6 +83,10 @@ pub(crate) struct ActiveReq {
     pub pending_token: i32,
     pub started_at: std::time::Instant,
     pub first_token_at: Option<std::time::Instant>,
+    /// When the most recent token was emitted — the decode pass measures
+    /// inter-token latency against this (a long gap here is exactly the
+    /// prefill-starves-decode signal the scheduler bounds).
+    pub last_token_at: Option<std::time::Instant>,
 }
 
 #[cfg(test)]

@@ -37,7 +37,8 @@ use cli::Args;
 
 const USAGE: &str = "usage: aqua <serve|generate|eval|table1|table2|table3|table7|fig2|fig3|fig5|ablation|breakeven|benchcheck|selftest> [flags]
 common flags: --backend auto|native|sharded|pjrt --threads N --seed N --artifacts DIR --model NAME --k-ratio R --s-ratio R --h2o-ratio R --batch N --items N --fast
-serve fleet: --fleet fleet.json | repeated --model name=N,backend=B,k=R,threads=T,batch=B,queue=Q,kv_mb=M,prefix=0|1,prefix_pages=P [--default-model N] (plain --model NAME [--kv-budget-mb M] [--prefix-cache] [--prefix-pages P] serves one deployment named 'default'; kv_mb caps resident KV pages — over-budget requests shed with a memory-pressure 429; prefix enables page-granular prefix sharing: one prefill's KV pages serve every lane with the prefix)";
+serve fleet: --fleet fleet.json | repeated --model name=N,backend=B,k=R,threads=T,batch=B,queue=Q,kv_mb=M,prefix=0|1,prefix_pages=P,prefill_tokens=N,total_tokens=N,wsr=R,interleave=0|1 [--default-model N] (plain --model NAME [--kv-budget-mb M] [--prefix-cache] [--prefix-pages P] serves one deployment named 'default'; kv_mb caps resident KV pages — over-budget requests shed with a memory-pressure 429; prefix enables page-granular prefix sharing: one prefill's KV pages serve every lane with the prefix)
+serve scheduling: --max-prefill-tokens N (per-step prefill token budget, 0 = unlimited) --max-total-tokens N (admission cap on worst-case batch tokens, 0 = unlimited) --waiting-ratio R (queue pressure threshold for bounded head overtakes) --no-interleave (legacy FIFO run-to-completion; disables chunked-prefill/decode interleaving)";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -111,6 +112,10 @@ fn fleet_registry(args: &Args, arts_dir: &str) -> Result<ModelRegistry> {
             kv_budget_mb: args.f64("kv-budget-mb", 0.0)?,
             prefix_cache: args.switch("prefix-cache"),
             prefix_cache_pages: args.usize("prefix-pages", 0)?,
+            max_batch_prefill_tokens: args.usize("max-prefill-tokens", 0)?,
+            max_batch_total_tokens: args.usize("max-total-tokens", 0)?,
+            waiting_served_ratio: args.f64("waiting-ratio", 1.2)?,
+            interleave: !args.switch("no-interleave"),
             aqua: aqua_from(args)?,
         })?;
     } else {
@@ -298,6 +303,17 @@ fn run(argv: &[String]) -> Result<()> {
                 aqua_serve::bench::report::validate_prefix(&doc, args.switch("strict"))
                     .with_context(|| format!("validating {ppath}"))?;
                 println!("{ppath} ok (prefixshare schema)");
+            }
+            // BENCH_interleave.json (interleave bench): same convention.
+            let idefault = aqua_serve::bench::report::interleave_path().to_string();
+            let ipath = args.str("interleave-path", &idefault);
+            if std::path::Path::new(&ipath).exists() {
+                let text = std::fs::read_to_string(&ipath)?;
+                let doc = aqua_serve::util::json::Json::parse(&text)
+                    .with_context(|| format!("parsing {ipath}"))?;
+                aqua_serve::bench::report::validate_interleave(&doc, args.switch("strict"))
+                    .with_context(|| format!("validating {ipath}"))?;
+                println!("{ipath} ok (interleave schema)");
             }
             Ok(())
         }

@@ -48,6 +48,21 @@ pub struct DeploymentSpec {
     /// Prefix-index capacity in registered page chains (kv key
     /// `prefix_pages`, JSON `prefix_cache_pages`; 0 = unlimited).
     pub prefix_cache_pages: usize,
+    /// Scheduler budget: prefill tokens per engine pass (kv key
+    /// `prefill_tokens`; 0 = unlimited). Whole per-lane chunks, so
+    /// outputs stay bit-identical to the uncapped path.
+    pub max_batch_prefill_tokens: usize,
+    /// Scheduler budget: Σ worst-case tokens (prompt + max_new) across
+    /// the running batch (kv key `total_tokens`; 0 = unlimited).
+    pub max_batch_total_tokens: usize,
+    /// Queue pressure threshold (`waiting / served`) above which a
+    /// budget-blocked queue head may be overtaken, boundedly, by
+    /// admissible smaller requests (kv key `wsr`).
+    pub waiting_served_ratio: f64,
+    /// Chunked-prefill interleaving (the token-budget continuous
+    /// scheduler). On by default; off reproduces the legacy
+    /// prefill-priority FIFO engine exactly.
+    pub interleave: bool,
     /// AQUA operating point for every request this deployment serves.
     pub aqua: AquaConfig,
 }
@@ -65,6 +80,10 @@ impl Default for DeploymentSpec {
             kv_budget_mb: 0.0,
             prefix_cache: false,
             prefix_cache_pages: 0,
+            max_batch_prefill_tokens: 0,
+            max_batch_total_tokens: 0,
+            waiting_served_ratio: 1.2,
+            interleave: true,
             aqua: AquaConfig::default(),
         }
     }
@@ -74,8 +93,9 @@ impl DeploymentSpec {
     /// Parse a CLI kv-spec: comma-separated `key=value` pairs. Keys:
     /// `name` (required), `backend`, `model`, `seed`, `threads`, `batch`,
     /// `queue` (max in-flight), `kv_mb`, `prefix` (0/1 prefix sharing),
-    /// `prefix_pages`, `k`/`k_ratio`, `s`/`s_ratio`, `h2o`/`h2o_ratio`,
-    /// `proj` (0/1).
+    /// `prefix_pages`, `prefill_tokens`, `total_tokens`, `wsr`,
+    /// `interleave` (0/1), `k`/`k_ratio`, `s`/`s_ratio`,
+    /// `h2o`/`h2o_ratio`, `proj` (0/1).
     pub fn parse_kv(s: &str) -> Result<DeploymentSpec> {
         let mut spec = DeploymentSpec { name: String::new(), ..Default::default() };
         for part in s.split(',') {
@@ -111,6 +131,25 @@ impl DeploymentSpec {
                 "prefix_pages" | "prefix_cache_pages" => {
                     spec.prefix_cache_pages =
                         v.parse().with_context(|| format!("bad prefix_pages '{v}'"))?
+                }
+                "prefill_tokens" | "max_batch_prefill_tokens" => {
+                    spec.max_batch_prefill_tokens =
+                        v.parse().with_context(|| format!("bad prefill_tokens '{v}'"))?
+                }
+                "total_tokens" | "max_batch_total_tokens" => {
+                    spec.max_batch_total_tokens =
+                        v.parse().with_context(|| format!("bad total_tokens '{v}'"))?
+                }
+                "wsr" | "waiting_served_ratio" => {
+                    spec.waiting_served_ratio =
+                        v.parse().with_context(|| format!("bad waiting_served_ratio '{v}'"))?
+                }
+                "interleave" => {
+                    spec.interleave = match v {
+                        "1" | "true" | "yes" | "on" => true,
+                        "0" | "false" | "no" | "off" => false,
+                        other => bail!("bad interleave toggle '{other}' (expected 0/1)"),
+                    }
                 }
                 "k" | "k_ratio" => {
                     spec.aqua.k_ratio = v.parse().with_context(|| format!("bad k_ratio '{v}'"))?
@@ -161,6 +200,18 @@ impl DeploymentSpec {
         if let Some(v) = j.get("prefix_cache_pages").as_i64() {
             spec.prefix_cache_pages = v.max(0) as usize;
         }
+        if let Some(v) = j.get("max_batch_prefill_tokens").as_i64() {
+            spec.max_batch_prefill_tokens = v.max(0) as usize;
+        }
+        if let Some(v) = j.get("max_batch_total_tokens").as_i64() {
+            spec.max_batch_total_tokens = v.max(0) as usize;
+        }
+        if let Some(v) = j.get("waiting_served_ratio").as_f64() {
+            spec.waiting_served_ratio = v;
+        }
+        if let Some(v) = j.get("interleave").as_bool() {
+            spec.interleave = v;
+        }
         if let Some(v) = j.get("k_ratio").as_f64() {
             spec.aqua.k_ratio = v;
         }
@@ -190,6 +241,10 @@ impl DeploymentSpec {
             ("kv_budget_mb", Json::Num(self.kv_budget_mb)),
             ("prefix_cache", Json::Bool(self.prefix_cache)),
             ("prefix_cache_pages", Json::Num(self.prefix_cache_pages as f64)),
+            ("max_batch_prefill_tokens", Json::Num(self.max_batch_prefill_tokens as f64)),
+            ("max_batch_total_tokens", Json::Num(self.max_batch_total_tokens as f64)),
+            ("waiting_served_ratio", Json::Num(self.waiting_served_ratio)),
+            ("interleave", Json::Bool(self.interleave)),
             ("k_ratio", Json::Num(self.aqua.k_ratio)),
             ("s_ratio", Json::Num(self.aqua.s_ratio)),
             ("h2o_ratio", Json::Num(self.aqua.h2o_ratio)),
@@ -223,6 +278,13 @@ impl DeploymentSpec {
         if !self.kv_budget_mb.is_finite() || self.kv_budget_mb < 0.0 {
             bail!("deployment '{}': kv_budget_mb {} must be >= 0", self.name, self.kv_budget_mb);
         }
+        if !self.waiting_served_ratio.is_finite() || self.waiting_served_ratio < 0.0 {
+            bail!(
+                "deployment '{}': waiting_served_ratio {} must be >= 0",
+                self.name,
+                self.waiting_served_ratio
+            );
+        }
         for (label, v) in [
             ("k_ratio", self.aqua.k_ratio),
             ("s_ratio", self.aqua.s_ratio),
@@ -252,6 +314,10 @@ impl DeploymentSpec {
             kv_budget_mb: self.kv_budget_mb,
             prefix_cache: self.prefix_cache,
             prefix_cache_pages: self.prefix_cache_pages,
+            max_batch_prefill_tokens: self.max_batch_prefill_tokens,
+            max_batch_total_tokens: self.max_batch_total_tokens,
+            waiting_served_ratio: self.waiting_served_ratio,
+            interleave: self.interleave,
             ..Default::default()
         }
     }
@@ -265,7 +331,7 @@ mod tests {
     fn kv_roundtrip_through_json() {
         let spec = DeploymentSpec::parse_kv(
             "name=fast,backend=sharded,k=0.25,threads=2,batch=8,queue=5,kv_mb=2.5,prefix=1,\
-             prefix_pages=64",
+             prefix_pages=64,prefill_tokens=96,total_tokens=512,wsr=1.5,interleave=0",
         )
         .unwrap();
         assert_eq!(spec.name, "fast");
@@ -276,9 +342,39 @@ mod tests {
         assert!((spec.kv_budget_mb - 2.5).abs() < 1e-12);
         assert!(spec.prefix_cache);
         assert_eq!(spec.prefix_cache_pages, 64);
+        assert_eq!(spec.max_batch_prefill_tokens, 96);
+        assert_eq!(spec.max_batch_total_tokens, 512);
+        assert!((spec.waiting_served_ratio - 1.5).abs() < 1e-12);
+        assert!(!spec.interleave);
         assert!((spec.aqua.k_ratio - 0.25).abs() < 1e-12);
         let back = DeploymentSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn scheduler_knobs_default_and_reach_engine_config() {
+        // interleave on by default, budgets unlimited
+        let d = DeploymentSpec::default();
+        assert!(d.interleave);
+        assert_eq!(d.max_batch_prefill_tokens, 0);
+        assert_eq!(d.max_batch_total_tokens, 0);
+        assert!((d.waiting_served_ratio - 1.2).abs() < 1e-12);
+        // JSON surface, and the knobs reach the engine config
+        let j = Json::parse(
+            r#"{"name": "a", "max_batch_prefill_tokens": 48, "max_batch_total_tokens": 400,
+                "waiting_served_ratio": 2.0, "interleave": false}"#,
+        )
+        .unwrap();
+        let spec = DeploymentSpec::from_json(&j).unwrap();
+        let ecfg = spec.engine_config();
+        assert_eq!(ecfg.max_batch_prefill_tokens, 48);
+        assert_eq!(ecfg.max_batch_total_tokens, 400);
+        assert!((ecfg.waiting_served_ratio - 2.0).abs() < 1e-12);
+        assert!(!ecfg.interleave);
+        // bad values rejected on every surface
+        assert!(DeploymentSpec::parse_kv("name=a,wsr=-1").is_err());
+        assert!(DeploymentSpec::parse_kv("name=a,interleave=maybe").is_err());
+        assert!(DeploymentSpec::parse_kv("name=a,prefill_tokens=x").is_err());
     }
 
     #[test]

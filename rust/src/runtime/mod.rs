@@ -29,7 +29,7 @@ pub use backend::{
     BackendSpec, ExecBackend, KernelCounters, PrefixAttach, StepOut,
 };
 pub use crate::kvpool::{KvPoolConfig, KvPoolGauges};
-pub use native::{synthetic_corpus, NativeBackend, NativeModel, ScoreMode};
+pub use native::{synthetic_corpus, NativeBackend, NativeModel, ScoreMode, NATIVE_PREFILL_CHUNK};
 pub use sharded::ShardedBackend;
 
 #[cfg(feature = "pjrt")]

@@ -170,9 +170,17 @@ fn snapshot_fields(s: &Snapshot, full: bool) -> Vec<(&'static str, Json)> {
         ("kv_resident_bytes", Json::Num(s.kv_resident_bytes as f64)),
         ("prefix_hit_tokens", Json::Num(s.prefix_hit_tokens as f64)),
         ("prefix_hit_rate", Json::Num(s.prefix_hit_rate())),
+        ("requests_rejected", Json::Num(s.requests_rejected as f64)),
+        ("batch_occupancy", Json::Num(s.batch_occupancy)),
+        ("itl_p99_ms", Json::Num(s.itl_p99_ms)),
     ];
     if full {
         fields.extend([
+            ("sched_steps", Json::Num(s.sched_steps as f64)),
+            ("prefill_tokens_per_step", Json::Num(s.prefill_tokens_per_step)),
+            ("itl_mean_ms", Json::Num(s.itl_mean_ms)),
+            ("queue_wait_p50_ms", Json::Num(s.queue_wait_p50_ms)),
+            ("queue_wait_p99_ms", Json::Num(s.queue_wait_p99_ms)),
             ("kernel_dense", Json::Num(s.kernels.dense as f64)),
             ("kernel_sparse", Json::Num(s.kernels.sparse as f64)),
             ("kernel_packed", Json::Num(s.kernels.packed as f64)),
@@ -352,7 +360,17 @@ mod tests {
         assert_eq!(s.status, 200);
         let doc = Json::parse(&s.body).unwrap();
         assert_eq!(doc.get("requests_done").as_i64(), Some(0));
+        assert_eq!(doc.get("requests_rejected").as_i64(), Some(0));
+        assert!(doc.get("batch_occupancy").as_f64().is_some());
+        assert!(doc.get("itl_p99_ms").as_f64().is_some());
         assert_eq!(doc.get("default_model"), &Json::Null);
+        // scheduler detail gauges are /metrics (full) only
+        assert_eq!(doc.get("queue_wait_p99_ms"), &Json::Null);
+        let m = route(&request("GET", "/metrics", ""), &reg);
+        let mdoc = Json::parse(&m.body).unwrap();
+        assert!(mdoc.get("queue_wait_p99_ms").as_f64().is_some());
+        assert!(mdoc.get("prefill_tokens_per_step").as_f64().is_some());
+        assert!(mdoc.get("sched_steps").as_i64().is_some());
     }
 
     #[test]

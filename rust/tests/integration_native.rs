@@ -86,8 +86,10 @@ fn run_batch_end_to_end_with_aqua_sparsity() {
 
     // --- metrics reconcile with the emitted tokens -------------------------
     let s = e.metrics.snapshot();
-    let admitted: u64 = prompts.len() as u64; // both rejects never ran
-    assert_eq!(s.requests_done, admitted);
+    // every submission reaches a terminal state: 5 served + 2 rejected
+    // (rejects never ran but still reconcile through requests_done)
+    assert_eq!(s.requests_done, prompts.len() as u64 + 2);
+    assert_eq!(s.requests_rejected, 2);
     let expected_prompt_tokens: u64 = prompts.iter().map(|&(p, _, _)| p as u64).sum();
     assert_eq!(s.prompt_tokens, expected_prompt_tokens);
     // every request's first token is sampled during prefill; the rest are
