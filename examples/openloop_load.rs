@@ -10,15 +10,25 @@
 //! validated by `aqua benchcheck`).
 //!
 //! ```bash
-//! cargo run --release --example openloop_load [-- <requests-per-second>...]
+//! cargo run --release --example openloop_load [-- [--abandon P] [--fault PLAN] <req/s>...]
 //! ```
+//!
+//! `--abandon P` makes each accepted request a client hang-up candidate
+//! with probability `P`: after a short sampled patience it is cancelled
+//! mid-flight, exercising the lane-retire/KV-release path under load and
+//! emitting `cancelled` / `abandon_rate` columns. `--fault PLAN` wraps
+//! both deployments in the deterministic `fault:` backend (e.g.
+//! `--fault err_every=40`), so injected step errors show up as `failed`
+//! rows while the engines keep serving. `done` counts every resolved
+//! admission (served + cancelled + failed), so the `done + shed == sent`
+//! accounting the schema validator enforces still balances.
 
 use std::collections::HashMap;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
 use aqua_serve::bench::report::{serving_path, validate_serving, BenchReport};
-use aqua_serve::coordinator::GenRequest;
+use aqua_serve::coordinator::{FinishReason, GenRequest};
 use aqua_serve::registry::{Admission, DeploymentSpec, ModelRegistry};
 use aqua_serve::runtime::corpus_or_synthetic;
 use aqua_serve::tokenizer::ByteTokenizer;
@@ -36,10 +46,14 @@ struct ModelLoad {
     sent: u64,
     done: u64,
     shed: u64,
+    cancelled: u64,
+    failed: u64,
     tokens: u64,
     e2e_ms: Vec<f64>,
     outstanding: Vec<u64>,
     submit_at: HashMap<u64, Instant>,
+    /// Abandonment schedule: id → when the simulated client hangs up.
+    abandon_at: HashMap<u64, Instant>,
 }
 
 impl ModelLoad {
@@ -49,31 +63,65 @@ impl ModelLoad {
             sent: 0,
             done: 0,
             shed: 0,
+            cancelled: 0,
+            failed: 0,
             tokens: 0,
             e2e_ms: vec![],
             outstanding: vec![],
             submit_at: HashMap::new(),
+            abandon_at: HashMap::new(),
         }
     }
 }
 
 fn main() -> anyhow::Result<()> {
-    let rates: Vec<f64> = {
-        let args: Vec<f64> = std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
-        if args.is_empty() {
-            vec![2.0, 6.0, 12.0]
-        } else {
-            args
+    let mut abandon_p = 0.0f64;
+    let mut fault_plan: Option<String> = None;
+    let mut rates: Vec<f64> = vec![];
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--abandon" => {
+                abandon_p = args
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("--abandon needs a probability"))?;
+            }
+            "--fault" => {
+                // kv-specs split on commas, so fault params embed with `;`
+                fault_plan = Some(
+                    args.next()
+                        .ok_or_else(|| anyhow::anyhow!("--fault needs a plan, e.g. err_every=40"))?
+                        .replace(',', ";"),
+                );
+            }
+            other => {
+                if let Ok(r) = other.parse() {
+                    rates.push(r);
+                }
+            }
         }
-    };
+    }
+    if rates.is_empty() {
+        rates = vec![2.0, 6.0, 12.0];
+    }
 
     // Two operating points of the same model behind one registry: the
     // exact baseline and an aggressive AQUA knob, queue-bounded at 8.
+    // Under --fault both run behind the chaos wrapper with one restart
+    // in budget, so an escalated failure heals instead of killing the run.
+    let backend_kind = match &fault_plan {
+        Some(plan) => format!("fault:native;{plan}"),
+        None => "native".to_string(),
+    };
+    let lifecycle = if fault_plan.is_some() { ",restart=1,restart_backoff_ms=5" } else { "" };
     let registry = ModelRegistry::new(aqua_serve::ARTIFACTS_DIR);
-    registry
-        .deploy(DeploymentSpec::parse_kv("name=exact,backend=native,k=1.0,batch=4,queue=8")?)?;
-    registry
-        .deploy(DeploymentSpec::parse_kv("name=pruned,backend=native,k=0.25,batch=4,queue=8")?)?;
+    registry.deploy(DeploymentSpec::parse_kv(&format!(
+        "name=exact,backend={backend_kind},k=1.0,batch=4,queue=8{lifecycle}"
+    ))?)?;
+    registry.deploy(DeploymentSpec::parse_kv(&format!(
+        "name=pruned,backend={backend_kind},k=0.25,batch=4,queue=8{lifecycle}"
+    ))?)?;
     let names: [&'static str; 2] = ["exact", "pruned"];
     let deps: Vec<_> = names.iter().map(|&n| registry.get(Some(n)).unwrap()).collect();
     let backend = deps[0].backend_kind();
@@ -93,12 +141,12 @@ fn main() -> anyhow::Result<()> {
 
     println!(
         "# open-loop Poisson load, {REQUESTS_PER_RATE} requests per rate split over \
-         {} models, queue=8, batch=4, {backend} backend\n",
+         {} models, queue=8, batch=4, {backend} backend, abandon_p={abandon_p}\n",
         names.len()
     );
     println!(
-        "{:>8} {:>8} {:>6} {:>6} {:>6} {:>12} {:>12} {:>10}",
-        "req/s", "model", "sent", "done", "shed", "e2e p50", "e2e p99", "tok/s"
+        "{:>8} {:>8} {:>6} {:>6} {:>6} {:>6} {:>6} {:>12} {:>12} {:>10}",
+        "req/s", "model", "sent", "done", "shed", "cancel", "failed", "e2e p50", "e2e p99", "tok/s"
     );
 
     let mut rows: Vec<Json> = vec![];
@@ -124,6 +172,12 @@ fn main() -> anyhow::Result<()> {
                     Admission::Accepted => {
                         loads[m].submit_at.insert(id, Instant::now());
                         loads[m].outstanding.push(id);
+                        // an impatient client: hangs up after a short
+                        // sampled patience, cancelling mid-flight
+                        if abandon_p > 0.0 && rng.f64() < abandon_p {
+                            let patience = Duration::from_millis(1 + rng.below(24) as u64);
+                            loads[m].abandon_at.insert(id, Instant::now() + patience);
+                        }
                     }
                     Admission::Shed(_) => loads[m].shed += 1,
                 }
@@ -133,15 +187,42 @@ fn main() -> anyhow::Result<()> {
                 let u: f64 = rng.f64().max(1e-9);
                 next_arrival += Duration::from_secs_f64(-u.ln() / rate);
             }
-            // drain completions
+            // fire due abandonments (cancel is idempotent: a request that
+            // already finished keeps its real result)
+            for (m, dep) in deps.iter().enumerate() {
+                let due: Vec<u64> = loads[m]
+                    .abandon_at
+                    .iter()
+                    .filter(|(_, at)| Instant::now() >= **at)
+                    .map(|(id, _)| *id)
+                    .collect();
+                for id in due {
+                    loads[m].abandon_at.remove(&id);
+                    dep.cancel(id);
+                }
+            }
+            // drain completions — every resolved admission counts as done
+            // (`done + shed == sent` stays the validator's identity), with
+            // cancelled/failed outcomes tallied separately and only truly
+            // served requests contributing latency samples
             for (m, dep) in deps.iter().enumerate() {
                 let load = &mut loads[m];
                 let ids = std::mem::take(&mut load.outstanding);
                 for id in ids {
                     match dep.take_result(id) {
                         Some(res) => {
-                            load.e2e_ms.push(load.submit_at[&id].elapsed().as_secs_f64() * 1e3);
-                            load.tokens += res.tokens.len() as u64;
+                            match res.finish {
+                                FinishReason::Cancelled => load.cancelled += 1,
+                                FinishReason::BackendError
+                                | FinishReason::EngineFailed
+                                | FinishReason::DeadlineExpired => load.failed += 1,
+                                _ => {
+                                    load.e2e_ms.push(
+                                        load.submit_at[&id].elapsed().as_secs_f64() * 1e3,
+                                    );
+                                    load.tokens += res.tokens.len() as u64;
+                                }
+                            }
                             load.done += 1;
                             progressed = true;
                         }
@@ -157,21 +238,24 @@ fn main() -> anyhow::Result<()> {
             } else if loads.iter().any(|l| !l.outstanding.is_empty())
                 && last_progress.elapsed() > Duration::from_secs(60)
             {
-                // an engine thread that died (step error / panic) never
-                // resolves its outstanding ids — fail loudly, don't hang CI
-                anyhow::bail!("open-loop drain made no progress for 60s — engine thread died?");
+                // the supervisor flushes terminal results even across
+                // engine panics, so a long stall means something is truly
+                // wedged — fail loudly, don't hang CI
+                anyhow::bail!("open-loop drain made no progress for 60s — engine wedged?");
             }
             std::thread::sleep(Duration::from_millis(1));
         }
         let wall = t0.elapsed().as_secs_f64().max(1e-9);
         for load in &loads {
             println!(
-                "{:>8.1} {:>8} {:>6} {:>6} {:>6} {:>10.1}ms {:>10.1}ms {:>10.1}",
+                "{:>8.1} {:>8} {:>6} {:>6} {:>6} {:>6} {:>6} {:>10.1}ms {:>10.1}ms {:>10.1}",
                 rate,
                 load.name,
                 load.sent,
                 load.done,
                 load.shed,
+                load.cancelled,
+                load.failed,
                 percentile(&load.e2e_ms, 50.0),
                 percentile(&load.e2e_ms, 99.0),
                 load.tokens as f64 / wall
@@ -191,6 +275,16 @@ fn main() -> anyhow::Result<()> {
                         0.0
                     }),
                 ),
+                ("cancelled", Json::Num(load.cancelled as f64)),
+                (
+                    "abandon_rate",
+                    Json::Num(if load.sent > 0 {
+                        load.cancelled as f64 / load.sent as f64
+                    } else {
+                        0.0
+                    }),
+                ),
+                ("failed", Json::Num(load.failed as f64)),
                 ("tok_per_s", Json::Num(load.tokens as f64 / wall)),
                 ("e2e_p50_ms", Json::Num(percentile(&load.e2e_ms, 50.0))),
                 ("e2e_p99_ms", Json::Num(percentile(&load.e2e_ms, 99.0))),
@@ -203,11 +297,15 @@ fn main() -> anyhow::Result<()> {
         ("rows", Json::Arr(rows)),
         ("model_cfg", Json::Str("llama-analog".to_string())),
         ("requests_per_rate", Json::Num(REQUESTS_PER_RATE as f64)),
+        ("abandon_p", Json::Num(abandon_p)),
+        ("fault", Json::Str(fault_plan.unwrap_or_default())),
         (
             "units",
             Json::Str(
                 "open-loop Poisson; tok_per_s = generated tokens / rate-window wall; \
-                 shed_rate = shed / sent at admission (queue bound 8)"
+                 shed_rate = shed / sent at admission (queue bound 8); done counts every \
+                 resolved admission incl. cancelled (client abandonment) and failed \
+                 (injected backend faults); abandon_rate = cancelled / sent"
                     .to_string(),
             ),
         ),

@@ -80,6 +80,26 @@ impl AdmissionQueue {
         self.q.iter().any(|e| e.req.id == id)
     }
 
+    /// Remove and return every waiting entry `pred` accepts, preserving
+    /// FIFO order (and overtake counts) among the rest. Drives queued-
+    /// request cancellation and deadline-expiry sweeps — both terminal,
+    /// so the removed entries leave the queue for good.
+    pub fn drain_matching(&mut self, mut pred: impl FnMut(&Queued) -> bool) -> Vec<Queued> {
+        let mut out = vec![];
+        let mut i = 0;
+        while i < self.q.len() {
+            if pred(&self.q[i]) {
+                // remove() preserves the order of the remaining entries
+                if let Some(e) = self.q.remove(i) {
+                    out.push(e);
+                }
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
     pub fn len(&self) -> usize {
         self.q.len()
     }
@@ -194,6 +214,21 @@ mod tests {
         q.push(GenRequest::new(1, vec![], 90));
         assert!(q.pop_past_head(|r| r.max_new_tokens <= 10).is_none());
         assert_eq!(q.len(), 2, "nothing removed when no waiter fits");
+    }
+
+    #[test]
+    fn drain_matching_removes_and_preserves_order() {
+        let mut q = AdmissionQueue::default();
+        for i in 0..6 {
+            q.push(GenRequest::new(i, vec![], 1));
+        }
+        let out = q.drain_matching(|e| e.req.id % 2 == 1);
+        assert_eq!(out.iter().map(|e| e.req.id).collect::<Vec<_>>(), vec![1, 3, 5]);
+        assert_eq!(q.len(), 3);
+        for want in [0, 2, 4] {
+            assert_eq!(q.pop_front().unwrap().req.id, want, "survivors keep FIFO order");
+        }
+        assert!(q.drain_matching(|_| true).is_empty(), "empty queue drains nothing");
     }
 
     #[test]

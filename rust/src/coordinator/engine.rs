@@ -32,8 +32,9 @@
 //! (`interleave: false`), which is kept verbatim for comparison.
 
 use std::collections::HashMap;
-use std::sync::mpsc;
-use std::time::Instant;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -45,7 +46,7 @@ use super::request::{ActiveReq, FinishReason, GenRequest, GenResult};
 use crate::aqua::policy::AquaConfig;
 use crate::kvpool::{budget_pages, KvPoolConfig, PoolLayout, DEFAULT_PAGE_SLOTS};
 use crate::model::sampling::Sampler;
-use crate::runtime::backend::{AquaKnobs, BackendSpec, ExecBackend};
+use crate::runtime::backend::{AquaKnobs, BackendSpec, ExecBackend, LaneError};
 use crate::tensor::softmax::log_softmax_at;
 use crate::util::prng::Rng;
 
@@ -93,6 +94,12 @@ pub struct EngineConfig {
     /// overtakes. `false` reproduces the legacy scheduler exactly:
     /// absolute prefill priority, plain FIFO admission.
     pub interleave: bool,
+    /// Fault containment escalation: a backend pass error retires the
+    /// affected lane(s) terminally and the loop keeps going, but after
+    /// this many *back-to-back* failing passes (no success in between)
+    /// `step` returns the error — the supervisor turns that into a Failed
+    /// deployment instead of silently spinning. Clamped to ≥ 1.
+    pub max_consecutive_step_failures: usize,
 }
 
 impl Default for EngineConfig {
@@ -111,6 +118,7 @@ impl Default for EngineConfig {
             max_batch_total_tokens: 0,
             waiting_served_ratio: 1.2,
             interleave: true,
+            max_consecutive_step_failures: 3,
         }
     }
 }
@@ -231,7 +239,11 @@ pub struct Engine {
     kv: Vec<LaneKv>,
     results: HashMap<u64, GenResult>,
     rng: Rng,
-    pub metrics: Metrics,
+    /// Shared so the supervisor can hand every engine incarnation the
+    /// *same* accumulator — counters survive restarts and the outcome
+    /// reconciliation (`done == served + rejected + cancelled + expired +
+    /// failed`) holds across engine rebuilds.
+    pub metrics: Arc<Metrics>,
     h2o: H2oPolicy,
     /// Resolved KV pool geometry (mirrors the backend's pool).
     kv_layout: PoolLayout,
@@ -247,6 +259,9 @@ pub struct Engine {
     /// Duty-cycle state: what the previous pass ran (drives the 1:1
     /// prefill/decode alternation when both have work).
     last_pass_was_prefill: bool,
+    /// Back-to-back failing passes (reset by any successful pass) — the
+    /// `max_consecutive_step_failures` escalation counter.
+    consecutive_failures: usize,
 }
 
 impl Engine {
@@ -269,13 +284,14 @@ impl Engine {
             kv: (0..cfg.batch).map(|_| LaneKv::new(cap)).collect(),
             results: HashMap::new(),
             rng: Rng::new(cfg.seed ^ 0xE17),
-            metrics: Metrics::default(),
+            metrics: Arc::new(Metrics::default()),
             h2o,
             kv_layout,
             kv_budget_pages,
             kv_reserved: vec![0; cfg.batch],
             scratch: StepScratch::new(cfg.batch, chunk, cap),
             last_pass_was_prefill: false,
+            consecutive_failures: 0,
             cfg,
         })
     }
@@ -441,7 +457,14 @@ impl Engine {
     }
 
     /// One scheduling pass. Returns false when there is nothing to do.
+    ///
+    /// An `Err` here means the engine is *failing*, not one request: pass
+    /// errors are contained per-lane (see [`Engine::contain`]) and only
+    /// escalate after `max_consecutive_step_failures` back-to-back
+    /// failures. The supervisor treats the error as fatal for this engine
+    /// incarnation.
     pub fn step(&mut self) -> Result<bool> {
+        self.sweep_deadlines();
         self.admit();
         let mut want_prefill = false;
         let mut want_decode = false;
@@ -459,17 +482,142 @@ impl Engine {
             want_prefill && (!self.cfg.interleave || !want_decode || !self.last_pass_was_prefill);
         if run_prefill {
             self.metrics.record_step(self.lanes.occupied() as u64, self.cfg.batch as u64);
-            self.prefill_pass()?;
+            let pass = self.prefill_pass();
             self.last_pass_was_prefill = true;
+            self.contain(pass, true)?;
             return Ok(true);
         }
         if !self.lanes.is_idle() {
             self.metrics.record_step(self.lanes.occupied() as u64, self.cfg.batch as u64);
-            self.decode_pass()?;
+            let pass = self.decode_pass();
             self.last_pass_was_prefill = false;
+            self.contain(pass, false)?;
             return Ok(true);
         }
         Ok(!self.queue.is_empty())
+    }
+
+    /// Fault containment. A failed pass had no side effects on the
+    /// engine's per-lane state (commits happen only after a successful
+    /// backend call, and the [`LaneError`] contract forbids backend-side
+    /// mutation on attributed failures), so recovery is: retire the
+    /// blamed lane — or, unattributed, every lane scheduled in the
+    /// failing pass — with terminal [`FinishReason::BackendError`]
+    /// results, release their KV pages, and keep the loop running. The
+    /// re-run pass recomputes the surviving lanes identically (greedy
+    /// sampling consumes no RNG), so their outputs stay bit-identical to
+    /// a fault-free run.
+    fn contain(&mut self, pass: Result<()>, was_prefill: bool) -> Result<()> {
+        let err = match pass {
+            Ok(()) => {
+                self.consecutive_failures = 0;
+                return Ok(());
+            }
+            Err(e) => e,
+        };
+        self.consecutive_failures += 1;
+        if self.consecutive_failures >= self.cfg.max_consecutive_step_failures.max(1) {
+            return Err(err.context(format!(
+                "engine failing: {} consecutive step failures",
+                self.consecutive_failures
+            )));
+        }
+        let blamed = err.downcast_ref::<LaneError>().map(|l| l.0);
+        crate::log_warn!("backend step failed (contained): {err:#}");
+        let mut failed_lanes: Vec<usize> = vec![];
+        for lane in 0..self.cfg.batch {
+            if self.active[lane].is_none() {
+                continue;
+            }
+            let hit = match blamed {
+                Some(b) => lane == b,
+                // no attribution: every lane scheduled in the failing
+                // pass is suspect (the scratch plan still describes it)
+                None => {
+                    if was_prefill {
+                        self.scratch.fed_now.get(lane).is_some_and(|&n| n > 0)
+                    } else {
+                        self.scratch.live.get(lane).copied().unwrap_or(false)
+                    }
+                }
+            };
+            if hit {
+                failed_lanes.push(lane);
+            }
+        }
+        for lane in failed_lanes {
+            self.finish_lane(lane, Some(FinishReason::BackendError));
+        }
+        Ok(())
+    }
+
+    /// Enforce per-request deadlines: queued requests whose `deadline_ms`
+    /// elapsed resolve terminally without running; active lanes past
+    /// theirs finish with their partial tokens and release lane + KV
+    /// pages immediately. Runs at the top of every scheduling pass.
+    fn sweep_deadlines(&mut self) {
+        let expired = self.queue.drain_matching(|e| {
+            e.req.deadline_ms > 0
+                && e.enqueued_at.elapsed().as_millis() as u64 >= e.req.deadline_ms
+        });
+        for e in expired {
+            self.metrics.record_queue_wait(e.enqueued_at.elapsed());
+            self.finish_unrun(e.req.id, FinishReason::DeadlineExpired);
+        }
+        for lane in 0..self.cfg.batch {
+            let hit = matches!(&self.active[lane], Some(a) if a.req.deadline_ms > 0
+                && a.enqueued_at.elapsed().as_millis() as u64 >= a.req.deadline_ms);
+            if hit {
+                self.finish_lane(lane, Some(FinishReason::DeadlineExpired));
+            }
+        }
+    }
+
+    /// Cancel a request wherever it is. A queued entry resolves
+    /// terminally without running; an active lane finishes with its
+    /// partial tokens and releases its lane + KV pages immediately (the
+    /// capacity point of cancellation under a `kv_budget_mb` cap).
+    /// Returns `false` when the id is unknown — including already
+    /// finished, where the existing result stands.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        for lane in 0..self.cfg.batch {
+            if self.lanes.occupant(lane) == Some(id) {
+                self.finish_lane(lane, Some(FinishReason::Cancelled));
+                return true;
+            }
+        }
+        let removed = self.queue.drain_matching(|e| e.req.id == id);
+        if removed.is_empty() {
+            return false;
+        }
+        for e in removed {
+            self.metrics.record_queue_wait(e.enqueued_at.elapsed());
+            self.finish_unrun(e.req.id, FinishReason::Cancelled);
+        }
+        true
+    }
+
+    /// Terminal result for a request that never occupied a lane
+    /// (queue-side cancel/expiry; admission rejects go through the same
+    /// shape in `try_admit`), with the matching outcome counter.
+    fn finish_unrun(&mut self, id: u64, finish: FinishReason) {
+        match finish {
+            FinishReason::Cancelled => self.metrics.record_cancelled(false),
+            FinishReason::DeadlineExpired => self.metrics.record_expired(false),
+            _ => self.metrics.record_rejected(),
+        }
+        self.results.insert(
+            id,
+            GenResult {
+                id,
+                tokens: vec![],
+                prompt_logprobs: vec![],
+                gen_logprobs: vec![],
+                finish,
+                ttft_us: 0,
+                total_us: 0,
+            },
+        );
     }
 
     // ------------------------------------------------------------- admission
@@ -551,6 +699,15 @@ impl Engine {
     /// Place one popped queue entry: terminal-reject, defer (budgets), or
     /// occupy `lane`.
     fn try_admit(&mut self, lane: usize, entry: Queued, max_seq: usize) -> AdmitOutcome {
+        // Deadline gate at admission: an entry that expired while queued
+        // resolves terminally instead of occupying a lane.
+        if entry.req.deadline_ms > 0
+            && entry.enqueued_at.elapsed().as_millis() as u64 >= entry.req.deadline_ms
+        {
+            self.metrics.record_queue_wait(entry.enqueued_at.elapsed());
+            self.finish_unrun(entry.req.id, FinishReason::DeadlineExpired);
+            return AdmitOutcome::Placed;
+        }
         // Requests that can never run: longer than the KV capacity, or
         // worst-case page growth beyond the whole page budget — each
         // rejected with its own reason so clients know which knob to
@@ -570,20 +727,7 @@ impl Engine {
         };
         if let Some(finish) = impossible {
             self.metrics.record_queue_wait(entry.enqueued_at.elapsed());
-            self.metrics.record_rejected();
-            let id = entry.req.id;
-            self.results.insert(
-                id,
-                GenResult {
-                    id,
-                    tokens: vec![],
-                    prompt_logprobs: vec![],
-                    gen_logprobs: vec![],
-                    finish,
-                    ttft_us: 0,
-                    total_us: 0,
-                },
-            );
+            self.finish_unrun(entry.req.id, finish);
             return AdmitOutcome::Placed;
         }
         // Batch token budget: the occupants' summed worst-case token
@@ -652,6 +796,7 @@ impl Engine {
             gen_logprobs: Vec::with_capacity(req.max_new_tokens),
             next_pos: attach.tokens,
             pending_token: -1,
+            enqueued_at: entry.enqueued_at,
             started_at: Instant::now(),
             first_token_at: None,
             last_token_at: None,
@@ -916,6 +1061,12 @@ impl Engine {
         let total = a.started_at.elapsed();
         let ttft = a.first_token_at.map(|t| t.duration_since(a.started_at));
         self.metrics.record_finish(ttft, total);
+        match finish {
+            FinishReason::Cancelled => self.metrics.record_cancelled(true),
+            FinishReason::DeadlineExpired => self.metrics.record_expired(true),
+            FinishReason::BackendError => self.metrics.record_failed(true, 1),
+            _ => {}
+        }
         self.results.insert(
             a.req.id,
             GenResult {
@@ -943,12 +1094,92 @@ impl Engine {
 
 pub enum EngineCmd {
     Submit(GenRequest),
+    /// Cancel a queued or in-flight request: the lane is retired and its
+    /// KV pages freed immediately; the waiter receives a terminal
+    /// `Cancelled` result carrying whatever tokens were already
+    /// generated. Unknown (or already finished) ids are ignored.
+    Cancel(u64),
     Stats(mpsc::Sender<super::metrics::Snapshot>),
     /// Graceful shutdown: the engine drains queued + in-flight lanes to
     /// completion and flushes every result before its thread exits (the
     /// registry's `DELETE /models/{name}` joins on this). Commands sent
     /// after `Shutdown` are dropped.
     Shutdown,
+}
+
+/// Engine lifecycle health as the deployment's admission gate sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// Backend/engine under construction (initial spawn or rebuild).
+    Starting,
+    /// Serving.
+    Healthy,
+    /// The engine crashed and a restart is pending (backoff) — new work
+    /// is shed until the rebuild reports healthy.
+    Unhealthy,
+    /// Dead for good (restart budget exhausted, or init failed with no
+    /// restarts left). Residual commands are answered terminally with
+    /// `EngineFailed`; the deployment sheds everything new.
+    Failed,
+}
+
+/// Health + restart counters shared between the supervised engine thread
+/// and its deployment — lock-free, because the admission gate reads the
+/// health on every submit.
+#[derive(Debug, Default)]
+pub struct EngineStatus {
+    /// 0 = Starting, 1 = Healthy, 2 = Unhealthy, 3 = Failed.
+    health: AtomicU8,
+    restarts: AtomicU64,
+}
+
+impl EngineStatus {
+    pub fn health(&self) -> Health {
+        match self.health.load(Ordering::Acquire) {
+            0 => Health::Starting,
+            1 => Health::Healthy,
+            2 => Health::Unhealthy,
+            _ => Health::Failed,
+        }
+    }
+
+    /// Engine rebuilds performed so far (the `/metrics` counter).
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    fn set(&self, h: Health) {
+        let v = match h {
+            Health::Starting => 0,
+            Health::Healthy => 1,
+            Health::Unhealthy => 2,
+            Health::Failed => 3,
+        };
+        self.health.store(v, Ordering::Release);
+    }
+}
+
+/// Supervisor restart policy: how many times a crashed/failed engine is
+/// rebuilt, with capped exponential backoff between attempts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RestartPolicy {
+    /// Rebuilds allowed after abnormal exits (0 = fail fast: first crash
+    /// flips the deployment to Failed).
+    pub max_restarts: u32,
+    /// Backoff before the first rebuild; doubles per consecutive crash.
+    pub backoff: Duration,
+    /// Backoff growth cap.
+    pub backoff_max: Duration,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        RestartPolicy {
+            max_restarts: 0,
+            backoff: Duration::from_millis(50),
+            backoff_max: Duration::from_secs(5),
+        }
+    }
 }
 
 pub struct EngineHandle {
@@ -958,99 +1189,368 @@ pub struct EngineHandle {
 }
 
 impl EngineHandle {
-    /// Spawn an engine-owning thread. `make_engine` runs *on that thread*
-    /// (constructs the backend there — see `BackendRecipe`).
+    /// Spawn an engine-owning thread with no restart budget (first crash
+    /// → Failed). `make_engine` runs *on that thread* (constructs the
+    /// backend there — see `BackendRecipe`).
     pub fn spawn<F>(make_engine: F) -> EngineHandle
     where
-        F: FnOnce() -> Result<Engine> + Send + 'static,
+        F: Fn() -> Result<Engine> + Send + 'static,
+    {
+        Self::spawn_supervised(
+            make_engine,
+            RestartPolicy::default(),
+            Arc::new(EngineStatus::default()),
+        )
+    }
+
+    /// Spawn a *supervised* engine thread: the engine loop runs under
+    /// `catch_unwind`; on a panic or a fatal step error the supervisor
+    /// flushes a terminal result to every waiter (a real one where the
+    /// dead incarnation produced it, `EngineFailed` otherwise — nobody
+    /// hangs to an HTTP deadline), publishes health through `status`,
+    /// and rebuilds the engine up to `policy.max_restarts` times with
+    /// capped exponential backoff. Metrics are shared across
+    /// incarnations, so counters survive restarts and outcome
+    /// reconciliation holds for the deployment's whole lifetime.
+    pub fn spawn_supervised<F>(
+        make_engine: F,
+        policy: RestartPolicy,
+        status: Arc<EngineStatus>,
+    ) -> EngineHandle
+    where
+        F: Fn() -> Result<Engine> + Send + 'static,
     {
         let (cmd_tx, cmd_rx) = mpsc::channel::<EngineCmd>();
         let (res_tx, result_rx) = mpsc::channel::<GenResult>();
-        let join = std::thread::spawn(move || {
-            let mut engine = match make_engine() {
-                Ok(e) => e,
-                Err(e) => {
-                    eprintln!("engine init failed: {e:#}");
-                    return;
+        let join =
+            std::thread::spawn(move || supervise(make_engine, policy, status, cmd_rx, res_tx));
+        EngineHandle { cmd_tx, result_rx, join }
+    }
+}
+
+/// Terminal answer for a request the (dead) engine can no longer serve.
+fn engine_failed_result(id: u64) -> GenResult {
+    GenResult {
+        id,
+        tokens: vec![],
+        prompt_logprobs: vec![],
+        gen_logprobs: vec![],
+        finish: FinishReason::EngineFailed,
+        ttft_us: 0,
+        total_us: 0,
+    }
+}
+
+/// Deliver every finished result among `pending` (keeps undelivered ids).
+fn flush_results(engine: &mut Engine, pending: &mut Vec<u64>, res_tx: &mpsc::Sender<GenResult>) {
+    pending.retain(|id| {
+        if let Some(res) = engine.take_result(*id) {
+            let _ = res_tx.send(res);
+            false
+        } else {
+            true
+        }
+    });
+}
+
+/// How one engine incarnation ended.
+enum Exit {
+    /// Shutdown command or all clients gone — the thread is done.
+    Clean,
+}
+
+/// The supervisor body: build → serve under `catch_unwind` → on abnormal
+/// exit flush terminal answers, then restart (budget + backoff) or park
+/// in [`failed_loop`]. The command/result channels never change across
+/// incarnations, so the deployment side is oblivious to restarts.
+fn supervise<F>(
+    make_engine: F,
+    policy: RestartPolicy,
+    status: Arc<EngineStatus>,
+    cmd_rx: mpsc::Receiver<EngineCmd>,
+    res_tx: mpsc::Sender<GenResult>,
+) where
+    F: Fn() -> Result<Engine>,
+{
+    // One accumulator for every incarnation: counters survive restarts.
+    let metrics = Arc::new(Metrics::default());
+    // Accepted ids whose results have not been delivered yet. Lives
+    // outside the incarnation so a crash can still answer every waiter.
+    let mut pending: Vec<u64> = vec![];
+    let mut backoff = policy.backoff.max(Duration::from_millis(1));
+    let mut restarts_left = policy.max_restarts;
+    loop {
+        status.set(Health::Starting);
+        let engine = match make_engine() {
+            Ok(mut e) => {
+                e.metrics = metrics.clone();
+                Some(e)
+            }
+            Err(e) => {
+                eprintln!("engine init failed: {e:#}");
+                None
+            }
+        };
+        if let Some(mut engine) = engine {
+            status.set(Health::Healthy);
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                incarnation_loop(&mut engine, &mut pending, &cmd_rx, &res_tx)
+            }));
+            match outcome {
+                Ok(Ok(Exit::Clean)) => return,
+                Ok(Err(e)) => eprintln!("engine failed: {e:#}"),
+                Err(_) => eprintln!("engine panicked (caught by supervisor)"),
+            }
+            // Abnormal exit: answer every undelivered waiter now — a real
+            // result where the dead incarnation finished one, terminal
+            // `EngineFailed` otherwise.
+            for id in pending.drain(..) {
+                match engine.take_result(id) {
+                    Some(res) => {
+                        let _ = res_tx.send(res);
+                    }
+                    None => {
+                        metrics.record_failed(false, 0);
+                        let _ = res_tx.send(engine_failed_result(id));
+                    }
+                }
+            }
+            // release the dead incarnation (backend, KV pool) before any
+            // rebuild allocates a fresh one
+            drop(engine);
+        }
+        if restarts_left == 0 {
+            status.set(Health::Failed);
+            failed_loop(&cmd_rx, &res_tx, &metrics);
+            return;
+        }
+        restarts_left -= 1;
+        status.set(Health::Unhealthy);
+        std::thread::sleep(backoff);
+        backoff = (backoff * 2).min(policy.backoff_max);
+        status.restarts.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// One engine incarnation's serve loop. Returns `Ok(Exit::Clean)` on
+/// shutdown/disconnect; an `Err` is a fatal engine failure the supervisor
+/// handles (a panic unwinds through instead).
+fn incarnation_loop(
+    engine: &mut Engine,
+    pending: &mut Vec<u64>,
+    cmd_rx: &mpsc::Receiver<EngineCmd>,
+    res_tx: &mpsc::Sender<GenResult>,
+) -> Result<Exit> {
+    loop {
+        // drain commands (non-blocking while busy, blocking when idle)
+        loop {
+            let cmd = if engine.lanes.is_idle() && engine.queue.is_empty() {
+                match cmd_rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => return Ok(Exit::Clean),
+                }
+            } else {
+                match cmd_rx.try_recv() {
+                    Ok(c) => c,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => return Ok(Exit::Clean),
                 }
             };
-            let mut done_ids: Vec<u64> = vec![];
-            loop {
-                // drain commands (non-blocking while busy, blocking when idle)
-                loop {
-                    let cmd = if engine.lanes.is_idle() && engine.queue.is_empty() {
-                        match cmd_rx.recv() {
-                            Ok(c) => c,
-                            Err(_) => return,
-                        }
+            match cmd {
+                EngineCmd::Submit(r) => {
+                    // Duplicate ids are refused at submit and answered
+                    // immediately — `pending` only ever tracks accepted
+                    // submissions, so a duplicate can neither overwrite
+                    // the original's result nor leave a stale pump entry
+                    // behind.
+                    let id = r.id;
+                    if engine.submit(r) {
+                        pending.push(id);
                     } else {
-                        match cmd_rx.try_recv() {
-                            Ok(c) => c,
-                            Err(mpsc::TryRecvError::Empty) => break,
-                            Err(mpsc::TryRecvError::Disconnected) => return,
-                        }
-                    };
-                    match cmd {
-                        EngineCmd::Submit(r) => {
-                            // Duplicate ids are refused at submit and
-                            // answered immediately — `done_ids` only ever
-                            // tracks accepted submissions, so a duplicate
-                            // can neither overwrite the original's result
-                            // nor leave a stale pump entry behind.
-                            let id = r.id;
-                            if engine.submit(r) {
-                                done_ids.push(id);
-                            } else {
-                                let _ = res_tx.send(GenResult {
-                                    id,
-                                    tokens: vec![],
-                                    prompt_logprobs: vec![],
-                                    gen_logprobs: vec![],
-                                    finish: FinishReason::DuplicateId,
-                                    ttft_us: 0,
-                                    total_us: 0,
-                                });
-                            }
-                        }
-                        EngineCmd::Stats(tx) => {
-                            let _ = tx.send(engine.metrics.snapshot());
-                        }
-                        EngineCmd::Shutdown => {
-                            // drain: finish queued + in-flight work, flush
-                            // results, then exit
-                            if let Err(e) = engine.run_until_idle() {
-                                eprintln!("engine drain failed: {e:#}");
-                            }
-                            for id in done_ids.drain(..) {
-                                if let Some(res) = engine.take_result(id) {
-                                    let _ = res_tx.send(res);
-                                }
-                            }
-                            return;
-                        }
+                        let _ = res_tx.send(GenResult {
+                            id,
+                            tokens: vec![],
+                            prompt_logprobs: vec![],
+                            gen_logprobs: vec![],
+                            finish: FinishReason::DuplicateId,
+                            ttft_us: 0,
+                            total_us: 0,
+                        });
                     }
                 }
-                if let Err(e) = engine.step() {
-                    eprintln!("engine step failed: {e:#}");
-                    return;
+                EngineCmd::Cancel(id) => {
+                    // the cancel may finish a lane (or resolve a queued
+                    // entry) — deliver immediately, before a possible
+                    // blocking wait for the next command
+                    engine.cancel(id);
+                    flush_results(engine, pending, res_tx);
                 }
-                done_ids.retain(|id| {
-                    if let Some(res) = engine.take_result(*id) {
-                        let _ = res_tx.send(res);
-                        false
-                    } else {
-                        true
+                EngineCmd::Stats(tx) => {
+                    let _ = tx.send(engine.metrics.snapshot());
+                }
+                EngineCmd::Shutdown => {
+                    // drain: finish queued + in-flight work, flush
+                    // results, then exit. If the drain itself fails the
+                    // remaining waiters still get terminal answers.
+                    if let Err(e) = engine.run_until_idle() {
+                        eprintln!("engine drain failed: {e:#}");
                     }
-                });
+                    for id in pending.drain(..) {
+                        match engine.take_result(id) {
+                            Some(res) => {
+                                let _ = res_tx.send(res);
+                            }
+                            None => {
+                                engine.metrics.record_failed(false, 0);
+                                let _ = res_tx.send(engine_failed_result(id));
+                            }
+                        }
+                    }
+                    return Ok(Exit::Clean);
+                }
             }
-        });
-        EngineHandle { cmd_tx, result_rx, join }
+        }
+        engine.step()?;
+        flush_results(engine, pending, res_tx);
+    }
+}
+
+/// Terminal service for a permanently failed engine: answer residual
+/// commands (`EngineFailed` results, stats from the shared accumulator)
+/// so no waiter ever hangs, until shutdown or disconnect.
+fn failed_loop(
+    cmd_rx: &mpsc::Receiver<EngineCmd>,
+    res_tx: &mpsc::Sender<GenResult>,
+    metrics: &Metrics,
+) {
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            EngineCmd::Submit(r) => {
+                metrics.record_failed(false, 0);
+                let _ = res_tx.send(engine_failed_result(r.id));
+            }
+            EngineCmd::Cancel(_) => {}
+            EngineCmd::Stats(tx) => {
+                let _ = tx.send(metrics.snapshot());
+            }
+            EngineCmd::Shutdown => return,
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::runtime::{FaultBackend, FaultPlan};
+
+    fn prompt(seed: i32) -> Vec<i32> {
+        (0..6).map(|i| (seed + i * 3) % 50).collect()
+    }
+
+    fn native_engine(batch: usize) -> Engine {
+        let spec = BackendSpec::native(ModelConfig::tiny("engine-fault"), 9).unwrap();
+        Engine::with_spec(&spec, EngineConfig { batch, ..EngineConfig::default() }).unwrap()
+    }
+
+    fn faulty_engine(batch: usize, plan: &str) -> Engine {
+        let spec = BackendSpec::native(ModelConfig::tiny("engine-fault"), 9).unwrap();
+        let be = FaultBackend::new(spec.build().unwrap(), FaultPlan::parse(plan).unwrap());
+        Engine::new(Box::new(be), EngineConfig { batch, ..EngineConfig::default() }).unwrap()
+    }
+
+    #[test]
+    fn contained_failure_kills_only_blamed_lane() {
+        let reqs = vec![GenRequest::new(1, prompt(2), 4), GenRequest::new(2, prompt(11), 4)];
+        let mut clean = native_engine(2);
+        let clean_res = clean.run_batch(reqs.clone()).unwrap();
+
+        // the first pass (prefill of both lanes) errs once, blamed on
+        // lane 1; the engine keeps running
+        let mut faulty = faulty_engine(2, "err_every=1,err_count=1,err_lane=1");
+        let res = faulty.run_batch(reqs).unwrap();
+        assert_eq!(res[1].finish, FinishReason::BackendError);
+        assert!(res[1].tokens.is_empty());
+        // the surviving lane is bit-identical to the fault-free run
+        assert_eq!(res[0].finish, clean_res[0].finish);
+        assert_eq!(res[0].tokens, clean_res[0].tokens);
+        // both lanes released their KV pages (failure path included)
+        assert_eq!(faulty.kv_gauges().pages_in_use, 0);
+        let snap = faulty.metrics.snapshot();
+        assert_eq!(snap.requests_done, 2);
+        assert_eq!(snap.requests_failed, 1);
+        assert_eq!(snap.lane_failures, 1);
+        assert_eq!(snap.requests_served, 1);
+    }
+
+    #[test]
+    fn consecutive_failures_escalate_to_engine_error() {
+        // every pass fails; each failure retires one request, and the
+        // third back-to-back failure (default cap) escalates instead of
+        // silently draining the queue one casualty at a time
+        let mut e = faulty_engine(1, "err_every=1");
+        for id in 1..=3u64 {
+            assert!(e.submit(GenRequest::new(id, prompt(id as i32), 4)));
+        }
+        let err = e.run_until_idle().expect_err("must escalate at the failure cap");
+        assert!(
+            format!("{err:#}").contains("consecutive step failures"),
+            "unexpected escalation error: {err:#}"
+        );
+    }
+
+    #[test]
+    fn cancel_frees_lane_and_queue_entries() {
+        let mut e = native_engine(1);
+        assert!(e.submit(GenRequest::new(1, prompt(1), 8)));
+        assert!(e.submit(GenRequest::new(2, prompt(5), 8)));
+        // a couple of passes: id 1 occupies the lane, id 2 waits queued
+        e.step().unwrap();
+        e.step().unwrap();
+        assert!(e.cancel(1), "active lane cancel");
+        assert!(e.cancel(2), "queued cancel");
+        assert!(!e.cancel(99), "unknown id");
+        assert_eq!(e.take_result(1).unwrap().finish, FinishReason::Cancelled);
+        let r2 = e.take_result(2).unwrap();
+        assert_eq!(r2.finish, FinishReason::Cancelled);
+        assert!(r2.tokens.is_empty(), "queued cancel never ran");
+        // cancellation is a capacity event: pages freed immediately
+        assert_eq!(e.kv_gauges().pages_in_use, 0);
+        assert!(!e.step().unwrap(), "engine drained");
+        let snap = e.metrics.snapshot();
+        assert_eq!(snap.requests_done, 2);
+        assert_eq!(snap.requests_cancelled, 2);
+    }
+
+    #[test]
+    fn deadlines_expire_queued_and_active_requests() {
+        // queue-side: expires before ever occupying a lane
+        let mut e = native_engine(1);
+        let mut req = GenRequest::new(1, prompt(4), 4);
+        req.deadline_ms = 1;
+        assert!(e.submit(req));
+        std::thread::sleep(Duration::from_millis(5));
+        e.step().unwrap();
+        let r = e.take_result(1).unwrap();
+        assert_eq!(r.finish, FinishReason::DeadlineExpired);
+        assert!(r.tokens.is_empty());
+
+        // lane-side: expires mid-decode with partial tokens, pages freed
+        let mut req = GenRequest::new(2, prompt(7), 64);
+        req.deadline_ms = 50;
+        assert!(e.submit(req));
+        e.step().unwrap(); // admit + prefill
+        e.step().unwrap(); // first decode
+        std::thread::sleep(Duration::from_millis(60));
+        e.step().unwrap(); // sweep retires the lane
+        let r = e.take_result(2).unwrap();
+        assert_eq!(r.finish, FinishReason::DeadlineExpired);
+        assert!(r.tokens.len() < 64, "must not have run to completion");
+        assert_eq!(e.kv_gauges().pages_in_use, 0);
+        let snap = e.metrics.snapshot();
+        assert_eq!(snap.requests_expired, 2);
+        assert_eq!(snap.requests_done, 2);
+    }
 
     #[test]
     fn plan_prefill_whole_chunks_under_budget() {

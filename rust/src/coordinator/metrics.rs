@@ -3,7 +3,7 @@
 //! and how long the attention score path took) fed from the backend's
 //! [`KernelCounters`].
 
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
 use crate::kvpool::KvPoolGauges;
@@ -52,6 +52,19 @@ struct Inner {
     /// ids. Counted in both so `requests_done` reconciles with
     /// submissions.
     requests_rejected: u64,
+    /// Of `requests_done`, requests cancelled by the client (explicit or
+    /// via detected disconnect), in the queue or mid-flight.
+    requests_cancelled: u64,
+    /// Of `requests_done`, requests whose `deadline_ms` elapsed before
+    /// completion.
+    requests_expired: u64,
+    /// Of `requests_done`, requests terminated by a contained backend
+    /// step failure (`FinishReason::BackendError`) or an engine death
+    /// (`EngineFailed`).
+    requests_failed: u64,
+    /// Lanes retired by contained backend step failures (one per blamed
+    /// lane; an unattributed pass failure counts every scheduled lane).
+    lane_failures: u64,
     tokens_generated: u64,
     prompt_tokens: u64,
     decode_calls: u64,
@@ -103,6 +116,20 @@ pub struct Snapshot {
     /// Of `requests_done`, submissions resolved without running
     /// (admission rejects, duplicate ids).
     pub requests_rejected: u64,
+    /// Of `requests_done`, cancelled by the client (explicit cancel or
+    /// detected disconnect).
+    pub requests_cancelled: u64,
+    /// Of `requests_done`, expired past their `deadline_ms`.
+    pub requests_expired: u64,
+    /// Of `requests_done`, terminated by backend/engine failure.
+    pub requests_failed: u64,
+    /// Requests that ran to a normal completion:
+    /// `done - rejected - cancelled - expired - failed` (derived, so the
+    /// reconciliation `done == served + rejected + cancelled + expired +
+    /// failed` holds by construction and survives fleet merges).
+    pub requests_served: u64,
+    /// Lanes retired by contained backend step failures.
+    pub lane_failures: u64,
     pub tokens_generated: u64,
     pub prompt_tokens: u64,
     pub decode_calls: u64,
@@ -171,29 +198,37 @@ pub struct Snapshot {
 }
 
 impl Metrics {
+    /// The metrics lock, poison-tolerant: a panic on a recording thread
+    /// (e.g. a backend panic the supervisor catches) must not cascade
+    /// into every later `/stats` call — counters are plain accumulators,
+    /// valid regardless of where the holder died.
+    fn locked(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     pub fn start_clock(&self) {
-        let mut i = self.inner.lock().unwrap();
+        let mut i = self.locked();
         if i.wall_start.is_none() {
             i.wall_start = Some(std::time::Instant::now());
         }
     }
 
     pub fn record_decode(&self, d: Duration, lanes: u64) {
-        let mut i = self.inner.lock().unwrap();
+        let mut i = self.locked();
         i.decode_calls += 1;
         i.decode_time += d;
         i.tokens_generated += lanes;
     }
 
     pub fn record_prefill(&self, d: Duration, tokens: u64) {
-        let mut i = self.inner.lock().unwrap();
+        let mut i = self.locked();
         i.prefill_calls += 1;
         i.prefill_time += d;
         i.prompt_tokens += tokens;
     }
 
     pub fn record_finish(&self, ttft: Option<Duration>, total: Duration) {
-        let mut i = self.inner.lock().unwrap();
+        let mut i = self.locked();
         i.requests_done += 1;
         if let Some(t) = ttft {
             i.ttft_us.push(t.as_micros() as f64);
@@ -202,12 +237,12 @@ impl Metrics {
     }
 
     pub fn record_evictions(&self, n: u64) {
-        self.inner.lock().unwrap().h2o_evictions += n;
+        self.locked().h2o_evictions += n;
     }
 
     /// One scheduling pass: `occupied` of `capacity` lanes carried work.
     pub fn record_step(&self, occupied: u64, capacity: u64) {
-        let mut i = self.inner.lock().unwrap();
+        let mut i = self.locked();
         i.sched_steps += 1;
         i.occupancy_lane_sum += occupied;
         i.occupancy_cap_sum += capacity;
@@ -215,16 +250,50 @@ impl Metrics {
 
     /// Time a request spent queued before admission or terminal reject.
     pub fn record_queue_wait(&self, d: Duration) {
-        self.inner.lock().unwrap().queue_wait_us.push(d.as_micros() as f64);
+        self.locked().queue_wait_us.push(d.as_micros() as f64);
     }
 
     /// A submission resolved without running (admission reject, duplicate
     /// id): counts toward `requests_done` so `/stats` reconciles with
     /// submissions, and toward the distinct rejected counter.
     pub fn record_rejected(&self) {
-        let mut i = self.inner.lock().unwrap();
+        let mut i = self.locked();
         i.requests_done += 1;
         i.requests_rejected += 1;
+    }
+
+    /// A request was cancelled by the client. `ran: false` means it never
+    /// left the queue (counts toward `requests_done` here — nothing else
+    /// will); `ran: true` means the lane finished through `record_finish`
+    /// and only the sub-counter is owed.
+    pub fn record_cancelled(&self, ran: bool) {
+        let mut i = self.locked();
+        if !ran {
+            i.requests_done += 1;
+        }
+        i.requests_cancelled += 1;
+    }
+
+    /// A request's `deadline_ms` elapsed (same `ran` contract as
+    /// [`Metrics::record_cancelled`]).
+    pub fn record_expired(&self, ran: bool) {
+        let mut i = self.locked();
+        if !ran {
+            i.requests_done += 1;
+        }
+        i.requests_expired += 1;
+    }
+
+    /// A request was terminated by a backend/engine failure. `lanes` is
+    /// how many lane retirements this failure caused (0 for unrun
+    /// flush-on-engine-death terminals).
+    pub fn record_failed(&self, ran: bool, lanes: u64) {
+        let mut i = self.locked();
+        if !ran {
+            i.requests_done += 1;
+        }
+        i.requests_failed += 1;
+        i.lane_failures += lanes;
     }
 
     /// Record one decode pass's inter-token gaps (µs). Bucketed into a
@@ -234,7 +303,7 @@ impl Metrics {
         if gaps_us.is_empty() {
             return;
         }
-        let mut i = self.inner.lock().unwrap();
+        let mut i = self.locked();
         if i.itl_hist.is_empty() {
             i.itl_hist.resize(ITL_BUCKETS, 0);
         }
@@ -249,7 +318,7 @@ impl Metrics {
     /// Fold one backend call's kernel accounting in; `decode` routes the
     /// score time into the decode-only pool as well.
     pub fn record_kernels(&self, k: &KernelCounters, decode: bool) {
-        let mut i = self.inner.lock().unwrap();
+        let mut i = self.locked();
         i.kernels.merge(k);
         if decode {
             i.decode_score_ns += k.score_ns;
@@ -260,7 +329,7 @@ impl Metrics {
     /// latest sample wins) along with the engine's live-slot count at the
     /// same instant.
     pub fn record_kv(&self, g: &KvPoolGauges, live_slots: u64) {
-        let mut i = self.inner.lock().unwrap();
+        let mut i = self.locked();
         i.kv = *g;
         i.kv_resident_peak = i.kv_resident_peak.max(g.resident_bytes);
         i.kv_live_slots = live_slots;
@@ -268,17 +337,27 @@ impl Metrics {
 
     /// Record prompt tokens served from the prefix cache (no prefill run).
     pub fn record_prefix_hits(&self, tokens: u64) {
-        self.inner.lock().unwrap().prefix_hit_tokens += tokens;
+        self.locked().prefix_hit_tokens += tokens;
     }
 
     pub fn snapshot(&self) -> Snapshot {
         use crate::util::{mean, percentile};
-        let i = self.inner.lock().unwrap();
+        let i = self.locked();
         let decode_s = i.decode_time.as_secs_f64();
         let wall_s = i.wall_start.map(|w| w.elapsed().as_secs_f64()).unwrap_or(0.0);
         Snapshot {
             requests_done: i.requests_done,
             requests_rejected: i.requests_rejected,
+            requests_cancelled: i.requests_cancelled,
+            requests_expired: i.requests_expired,
+            requests_failed: i.requests_failed,
+            requests_served: i
+                .requests_done
+                .saturating_sub(i.requests_rejected)
+                .saturating_sub(i.requests_cancelled)
+                .saturating_sub(i.requests_expired)
+                .saturating_sub(i.requests_failed),
+            lane_failures: i.lane_failures,
             tokens_generated: i.tokens_generated,
             prompt_tokens: i.prompt_tokens,
             decode_calls: i.decode_calls,
@@ -368,6 +447,11 @@ impl Snapshot {
         }
         self.sched_steps += o.sched_steps;
         self.requests_rejected += o.requests_rejected;
+        self.requests_cancelled += o.requests_cancelled;
+        self.requests_expired += o.requests_expired;
+        self.requests_failed += o.requests_failed;
+        self.requests_served += o.requests_served;
+        self.lane_failures += o.lane_failures;
         self.queue_wait_p50_ms = self.queue_wait_p50_ms.max(o.queue_wait_p50_ms);
         self.queue_wait_p99_ms = self.queue_wait_p99_ms.max(o.queue_wait_p99_ms);
         self.itl_p99_ms = self.itl_p99_ms.max(o.itl_p99_ms);
@@ -426,7 +510,8 @@ impl Snapshot {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} (rejected={}) gen_tokens={} prompt_tokens={} decode_calls={} prefill_calls={}\n\
+            "requests={} (served={} rejected={} cancelled={} expired={} failed={} lane_failures={})\n\
+             gen_tokens={} prompt_tokens={} decode_calls={} prefill_calls={}\n\
              decode {:.2}s ({:.1} tok/s) prefill {:.2}s | wall {:.1} tok/s\n\
              ttft mean {:.2}ms p50 {:.2}ms p99 {:.2}ms | latency mean {:.2}ms | h2o_evictions={}\n\
              sched steps={} occupancy {:.0}% prefill {:.1} tok/step | itl mean {:.3}ms p99 {:.3}ms \
@@ -434,7 +519,9 @@ impl Snapshot {
              kernels dense={} sparse={} packed={} | score path {:.2}µs/decode\n\
              kv resident {:.1}KiB (peak {:.1}KiB) pages={} util {:.0}% stalls={} free={}\n\
              prefix hits={} tok ({:.0}% of prompt volume) shared_pages={} cow={}",
-            self.requests_done, self.requests_rejected, self.tokens_generated, self.prompt_tokens,
+            self.requests_done, self.requests_served, self.requests_rejected,
+            self.requests_cancelled, self.requests_expired, self.requests_failed,
+            self.lane_failures, self.tokens_generated, self.prompt_tokens,
             self.decode_calls, self.prefill_calls, self.decode_time_s,
             self.decode_tok_per_s, self.prefill_time_s, self.wall_tok_per_s,
             self.mean_ttft_ms, self.p50_ttft_ms, self.p99_ttft_ms,
@@ -594,6 +681,72 @@ mod tests {
         assert!(p50 > 0.8 && p50 < 1.2, "p50 {p50} ≉ 1ms");
         assert!(s.report().contains("rejected=2"));
         assert!(s.report().contains("sched steps=4"));
+    }
+
+    #[test]
+    fn outcome_counters_reconcile() {
+        let m = Metrics::default();
+        // 2 served; 1 rejected; cancelled in-queue + after running;
+        // 1 expired in-queue; 1 failed after running (one lane retired)
+        m.record_finish(None, Duration::from_millis(1));
+        m.record_finish(None, Duration::from_millis(1));
+        m.record_rejected();
+        m.record_cancelled(false);
+        m.record_finish(None, Duration::from_millis(1));
+        m.record_cancelled(true);
+        m.record_expired(false);
+        m.record_finish(None, Duration::from_millis(1));
+        m.record_failed(true, 1);
+        let s = m.snapshot();
+        assert_eq!(s.requests_done, 7);
+        assert_eq!(s.requests_rejected, 1);
+        assert_eq!(s.requests_cancelled, 2);
+        assert_eq!(s.requests_expired, 1);
+        assert_eq!(s.requests_failed, 1);
+        assert_eq!(s.lane_failures, 1);
+        assert_eq!(s.requests_served, 2);
+        assert_eq!(
+            s.requests_done,
+            s.requests_served
+                + s.requests_rejected
+                + s.requests_cancelled
+                + s.requests_expired
+                + s.requests_failed,
+            "outcome counters must reconcile"
+        );
+        assert!(s.report().contains("cancelled=2"));
+        // fleet merge preserves the reconciliation (served is a counter
+        // in the aggregate, not re-derived)
+        let mut a = s.clone();
+        a.merge(&s);
+        assert_eq!(a.requests_done, 14);
+        assert_eq!(a.requests_served, 4);
+        assert_eq!(a.lane_failures, 2);
+        assert_eq!(
+            a.requests_done,
+            a.requests_served
+                + a.requests_rejected
+                + a.requests_cancelled
+                + a.requests_expired
+                + a.requests_failed
+        );
+    }
+
+    #[test]
+    fn locks_survive_poison() {
+        // a panic while holding the metrics lock (e.g. a backend panic the
+        // supervisor catches) must not cascade into later recording or
+        // snapshot calls
+        let m = std::sync::Arc::new(Metrics::default());
+        let m2 = m.clone();
+        let joined = std::thread::spawn(move || {
+            let _g = m2.inner.lock().unwrap();
+            panic!("poison the metrics lock");
+        })
+        .join();
+        assert!(joined.is_err(), "the poisoning thread must have panicked");
+        m.record_rejected();
+        assert_eq!(m.snapshot().requests_rejected, 1, "poisoned lock still records");
     }
 
     #[test]

@@ -22,5 +22,8 @@ pub mod kvcache;
 pub mod metrics;
 pub mod request;
 
-pub use engine::{Engine, EngineConfig};
+pub use engine::{
+    Engine, EngineCmd, EngineConfig, EngineHandle, EngineStatus, Health, RestartPolicy,
+};
+pub use metrics::{Metrics, Snapshot};
 pub use request::{FinishReason, GenRequest, GenResult};

@@ -16,6 +16,11 @@ pub struct GenRequest {
     /// (teacher forcing) instead of sampling — used by the eval harness for
     /// MC scoring and perplexity.
     pub score_only: bool,
+    /// Wall-clock deadline in milliseconds, measured from enqueue (0 = no
+    /// deadline). Enforced at queue admission and per-step: an expired
+    /// request finishes terminally with [`FinishReason::DeadlineExpired`]
+    /// and releases its lane + KV pages immediately.
+    pub deadline_ms: u64,
 }
 
 impl GenRequest {
@@ -27,6 +32,7 @@ impl GenRequest {
             stop_token: None,
             aqua: None,
             score_only: false,
+            deadline_ms: 0,
         }
     }
 }
@@ -45,6 +51,24 @@ pub enum FinishReason {
     /// an unclaimed result. Refused at submit (nothing ran); resubmit
     /// under a fresh id.
     DuplicateId,
+    /// The backend's step failed for this lane (or for a whole pass no
+    /// lane could be blamed for). The lane's partial tokens are returned;
+    /// its KV pages were released. Other lanes are unaffected — their
+    /// greedy outputs stay bit-identical to a fault-free run.
+    BackendError,
+    /// Cancelled by the client (explicit cancel or detected disconnect).
+    /// Partial tokens are returned; the lane and its KV pages were
+    /// released immediately.
+    Cancelled,
+    /// The request's `deadline_ms` elapsed before completion — in the
+    /// queue or mid-decode. Partial tokens (if any) are returned.
+    DeadlineExpired,
+    /// The engine died (panicked or exceeded its consecutive-failure cap)
+    /// while this request was in flight. Emitted by the supervisor so
+    /// waiters get a terminal answer instead of hanging to the HTTP
+    /// deadline; nothing about the request's own input was wrong —
+    /// resubmit once the deployment reports healthy again.
+    EngineFailed,
 }
 
 /// Completed request.
@@ -81,6 +105,9 @@ pub(crate) struct ActiveReq {
     pub next_pos: usize,
     /// Token to feed on the next decode step.
     pub pending_token: i32,
+    /// When the request entered the queue — `deadline_ms` is measured
+    /// from here (queue wait counts against the deadline).
+    pub enqueued_at: std::time::Instant,
     pub started_at: std::time::Instant,
     pub first_token_at: Option<std::time::Instant>,
     /// When the most recent token was emitted — the decode pass measures

@@ -28,13 +28,13 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use super::spec::DeploymentSpec;
-use crate::coordinator::engine::{Engine, EngineCmd, EngineHandle};
+use crate::coordinator::engine::{Engine, EngineCmd, EngineHandle, EngineStatus, Health};
 use crate::coordinator::metrics::Snapshot;
 use crate::coordinator::{GenRequest, GenResult};
 use crate::kvpool::budget_pages;
@@ -54,19 +54,26 @@ pub struct ResultStore {
 }
 
 impl ResultStore {
+    /// Poison-tolerant lock: results must survive a panicking HTTP worker
+    /// — the map is plain data, valid regardless of where the holder died
+    /// (see the same pattern on `Metrics`).
+    fn locked(&self) -> MutexGuard<'_, HashMap<u64, (GenResult, Instant)>> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     pub fn insert(&self, res: GenResult) {
-        self.inner.lock().unwrap().insert(res.id, (res, Instant::now()));
+        self.locked().insert(res.id, (res, Instant::now()));
     }
 
     /// Remove and return a delivered result (the normal pickup path — the
     /// entry never outlives its client).
     pub fn take(&self, id: u64) -> Option<GenResult> {
-        self.inner.lock().unwrap().remove(&id).map(|(r, _)| r)
+        self.locked().remove(&id).map(|(r, _)| r)
     }
 
     /// Evict entries older than `ttl`; returns how many were dropped.
     pub fn sweep(&self, ttl: Duration) -> usize {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         let before = g.len();
         let now = Instant::now();
         g.retain(|_, (_, t)| now.duration_since(*t) <= ttl);
@@ -74,7 +81,7 @@ impl ResultStore {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.locked().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -96,6 +103,9 @@ pub enum ShedReason {
     /// exceeds the whole `kv_budget_mb` page budget — a retry can never
     /// succeed (HTTP 413).
     OverBudget,
+    /// The engine is not healthy (crashed and restarting, or failed for
+    /// good). Retryable iff a restart budget remains (HTTP 503).
+    Unhealthy,
 }
 
 /// Admission outcome for one submit attempt.
@@ -119,6 +129,10 @@ pub struct AdmissionStats {
     pub shed_capacity: u64,
     /// Sheds due to KV memory pressure (`kv_budget_mb`).
     pub shed_memory: u64,
+    /// Sheds because the engine was unhealthy/failed at submit time.
+    pub shed_unhealthy: u64,
+    /// Engine rebuilds the supervisor performed since launch.
+    pub engine_restarts: u64,
     /// KV pages currently reserved by in-flight requests (worst case).
     pub kv_reserved_pages: u64,
     /// Page budget (`0` = unlimited).
@@ -136,6 +150,9 @@ pub struct Deployment {
     /// KV capacity of the deployed model (admission-side prompt clamping).
     max_seq: usize,
     cmd_tx: mpsc::Sender<EngineCmd>,
+    /// Live engine health + restart counters, published by the supervisor
+    /// (`GET /models`, `/healthz`, and the admission gate read this).
+    status: Arc<EngineStatus>,
     results: Arc<ResultStore>,
     next_id: AtomicU64,
     in_flight: Arc<AtomicU64>,
@@ -159,6 +176,7 @@ pub struct Deployment {
     submitted: AtomicU64,
     shed_capacity: AtomicU64,
     shed_memory: AtomicU64,
+    shed_unhealthy: AtomicU64,
     swept: Arc<AtomicU64>,
     ttl_ms: Arc<AtomicU64>,
     draining: AtomicBool,
@@ -194,8 +212,15 @@ impl Deployment {
             );
         }
         let recipe = bspec.recipe();
-        let EngineHandle { cmd_tx, result_rx, join } =
-            EngineHandle::spawn(move || Engine::new(recipe.build()?, ecfg));
+        let status = Arc::new(EngineStatus::default());
+        // Supervised spawn: the closure is `Fn` because a restart rebuilds
+        // the backend from the same Send recipe — every incarnation is
+        // config-identical to the first.
+        let EngineHandle { cmd_tx, result_rx, join } = EngineHandle::spawn_supervised(
+            move || Engine::new(recipe.build()?, ecfg.clone()),
+            spec.restart_policy(),
+            status.clone(),
+        );
 
         let results = Arc::new(ResultStore::default());
         let in_flight = Arc::new(AtomicU64::new(0));
@@ -219,7 +244,11 @@ impl Deployment {
                 let ttl = Duration::from_millis(ttl_ms.load(Ordering::Relaxed));
                 match result_rx.recv_timeout(SWEEP_TICK) {
                     Ok(res) => {
-                        if let Some(pages) = kv_reservations.lock().unwrap().remove(&res.id) {
+                        if let Some(pages) = kv_reservations
+                            .lock()
+                            .unwrap_or_else(PoisonError::into_inner)
+                            .remove(&res.id)
+                        {
                             kv_reserved.fetch_sub(pages, Ordering::SeqCst);
                         }
                         in_flight.fetch_sub(1, Ordering::SeqCst);
@@ -239,6 +268,7 @@ impl Deployment {
             backend_kind,
             max_seq,
             cmd_tx,
+            status,
             results,
             next_id: AtomicU64::new(1),
             in_flight,
@@ -250,6 +280,7 @@ impl Deployment {
             submitted: AtomicU64::new(0),
             shed_capacity: AtomicU64::new(0),
             shed_memory: AtomicU64::new(0),
+            shed_unhealthy: AtomicU64::new(0),
             swept,
             ttl_ms,
             draining: AtomicBool::new(false),
@@ -296,9 +327,23 @@ impl Deployment {
         self.kv_layout.worst_case_pages(want, self.max_seq) as u64
     }
 
-    fn submit_gated(&self, req: GenRequest) -> Result<Admission> {
+    fn submit_gated(&self, mut req: GenRequest) -> Result<Admission> {
         if self.draining.load(Ordering::SeqCst) {
             bail!("model '{}' is draining", self.spec.name);
+        }
+        // Shed while the engine is down: during a restart window (or
+        // after the restart budget is spent) new work gets an immediate
+        // 503 instead of queueing into a dead incarnation. `Starting`
+        // admits — the initial build is healthy-in-progress and the
+        // commands queue in order.
+        if matches!(self.status.health(), Health::Unhealthy | Health::Failed) {
+            self.shed_unhealthy.fetch_add(1, Ordering::SeqCst);
+            return Ok(Admission::Shed(ShedReason::Unhealthy));
+        }
+        // The spec's default deadline applies unless the request carries
+        // its own.
+        if req.deadline_ms == 0 {
+            req.deadline_ms = self.spec.deadline_ms;
         }
         // Reserve an in-flight slot or shed: CAS loop so concurrent HTTP
         // workers cannot overshoot the bound.
@@ -346,13 +391,21 @@ impl Deployment {
                     Err(seen) => cur = seen,
                 }
             }
-            self.kv_reservations.lock().unwrap().insert(req.id, need);
+            self.kv_reservations
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .insert(req.id, need);
         }
         let id = req.id;
         if self.cmd_tx.send(EngineCmd::Submit(req)).is_err() {
             self.in_flight.fetch_sub(1, Ordering::SeqCst);
             if self.kv_pages_total.is_some() {
-                if let Some(pages) = self.kv_reservations.lock().unwrap().remove(&id) {
+                if let Some(pages) = self
+                    .kv_reservations
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .remove(&id)
+                {
                     self.kv_reserved.fetch_sub(pages, Ordering::SeqCst);
                 }
             }
@@ -365,6 +418,20 @@ impl Deployment {
     /// Non-blocking result pickup.
     pub fn take_result(&self, id: u64) -> Option<GenResult> {
         self.results.take(id)
+    }
+
+    /// Cancel an in-flight request: the engine retires its lane and frees
+    /// its KV pages immediately; the waiter receives a terminal
+    /// `Cancelled` result (with partial tokens) through the normal pump.
+    /// Unknown/finished ids are a no-op, so the HTTP worker can fire this
+    /// on any disconnect without racing completion.
+    pub fn cancel(&self, id: u64) {
+        let _ = self.cmd_tx.send(EngineCmd::Cancel(id));
+    }
+
+    /// Live engine health (supervisor-published).
+    pub fn health(&self) -> Health {
+        self.status.health()
     }
 
     /// Blocking result pickup with a deadline (the HTTP worker path).
@@ -394,12 +461,15 @@ impl Deployment {
     pub fn admission_stats(&self) -> AdmissionStats {
         let shed_capacity = self.shed_capacity.load(Ordering::SeqCst);
         let shed_memory = self.shed_memory.load(Ordering::SeqCst);
+        let shed_unhealthy = self.shed_unhealthy.load(Ordering::SeqCst);
         AdmissionStats {
             queue_depth: self.in_flight.load(Ordering::SeqCst),
             submitted: self.submitted.load(Ordering::SeqCst),
-            shed: shed_capacity + shed_memory,
+            shed: shed_capacity + shed_memory + shed_unhealthy,
             shed_capacity,
             shed_memory,
+            shed_unhealthy,
+            engine_restarts: self.status.restarts(),
             kv_reserved_pages: self.kv_reserved.load(Ordering::SeqCst),
             kv_pages_total: self.kv_pages_total.unwrap_or(0),
             swept_results: self.swept.load(Ordering::Relaxed),

@@ -63,6 +63,20 @@ pub struct DeploymentSpec {
     /// scheduler). On by default; off reproduces the legacy
     /// prefill-priority FIFO engine exactly.
     pub interleave: bool,
+    /// Supervisor restart budget: rebuilds allowed after engine crashes
+    /// (kv key `restart`; 0 = fail fast, first crash flips the
+    /// deployment to Failed).
+    pub restart: u32,
+    /// Initial supervisor backoff before a rebuild, milliseconds; doubles
+    /// per consecutive crash, capped at 5 s (kv key `restart_backoff_ms`).
+    pub restart_backoff_ms: u64,
+    /// Default per-request deadline in milliseconds, measured from
+    /// enqueue (kv key `deadline_ms`; 0 = none). Requests may carry their
+    /// own `deadline_ms`, which wins over this default.
+    pub deadline_ms: u64,
+    /// Consecutive failing engine passes tolerated before the engine is
+    /// declared failed (kv key `max_step_failures`; clamped ≥ 1).
+    pub max_step_failures: usize,
     /// AQUA operating point for every request this deployment serves.
     pub aqua: AquaConfig,
 }
@@ -84,6 +98,10 @@ impl Default for DeploymentSpec {
             max_batch_total_tokens: 0,
             waiting_served_ratio: 1.2,
             interleave: true,
+            restart: 0,
+            restart_backoff_ms: 50,
+            deadline_ms: 0,
+            max_step_failures: 3,
             aqua: AquaConfig::default(),
         }
     }
@@ -94,8 +112,12 @@ impl DeploymentSpec {
     /// `name` (required), `backend`, `model`, `seed`, `threads`, `batch`,
     /// `queue` (max in-flight), `kv_mb`, `prefix` (0/1 prefix sharing),
     /// `prefix_pages`, `prefill_tokens`, `total_tokens`, `wsr`,
-    /// `interleave` (0/1), `k`/`k_ratio`, `s`/`s_ratio`,
+    /// `interleave` (0/1), `restart`, `restart_backoff_ms`,
+    /// `deadline_ms`, `max_step_failures`, `k`/`k_ratio`, `s`/`s_ratio`,
     /// `h2o`/`h2o_ratio`, `proj` (0/1).
+    ///
+    /// Note the comma is the pair separator, so fault-backend parameters
+    /// inside a kv-spec use `;`: `backend=fault:native;err_every=50`.
     pub fn parse_kv(s: &str) -> Result<DeploymentSpec> {
         let mut spec = DeploymentSpec { name: String::new(), ..Default::default() };
         for part in s.split(',') {
@@ -150,6 +172,21 @@ impl DeploymentSpec {
                         "0" | "false" | "no" | "off" => false,
                         other => bail!("bad interleave toggle '{other}' (expected 0/1)"),
                     }
+                }
+                "restart" | "restarts" => {
+                    spec.restart = v.parse().with_context(|| format!("bad restart '{v}'"))?
+                }
+                "restart_backoff_ms" => {
+                    spec.restart_backoff_ms =
+                        v.parse().with_context(|| format!("bad restart_backoff_ms '{v}'"))?
+                }
+                "deadline_ms" => {
+                    spec.deadline_ms =
+                        v.parse().with_context(|| format!("bad deadline_ms '{v}'"))?
+                }
+                "max_step_failures" => {
+                    spec.max_step_failures =
+                        v.parse().with_context(|| format!("bad max_step_failures '{v}'"))?
                 }
                 "k" | "k_ratio" => {
                     spec.aqua.k_ratio = v.parse().with_context(|| format!("bad k_ratio '{v}'"))?
@@ -212,6 +249,18 @@ impl DeploymentSpec {
         if let Some(v) = j.get("interleave").as_bool() {
             spec.interleave = v;
         }
+        if let Some(v) = j.get("restart").as_i64() {
+            spec.restart = v.max(0) as u32;
+        }
+        if let Some(v) = j.get("restart_backoff_ms").as_i64() {
+            spec.restart_backoff_ms = v.max(0) as u64;
+        }
+        if let Some(v) = j.get("deadline_ms").as_i64() {
+            spec.deadline_ms = v.max(0) as u64;
+        }
+        if let Some(v) = j.get("max_step_failures").as_i64() {
+            spec.max_step_failures = v.max(0) as usize;
+        }
         if let Some(v) = j.get("k_ratio").as_f64() {
             spec.aqua.k_ratio = v;
         }
@@ -245,6 +294,10 @@ impl DeploymentSpec {
             ("max_batch_total_tokens", Json::Num(self.max_batch_total_tokens as f64)),
             ("waiting_served_ratio", Json::Num(self.waiting_served_ratio)),
             ("interleave", Json::Bool(self.interleave)),
+            ("restart", Json::Num(self.restart as f64)),
+            ("restart_backoff_ms", Json::Num(self.restart_backoff_ms as f64)),
+            ("deadline_ms", Json::Num(self.deadline_ms as f64)),
+            ("max_step_failures", Json::Num(self.max_step_failures as f64)),
             ("k_ratio", Json::Num(self.aqua.k_ratio)),
             ("s_ratio", Json::Num(self.aqua.s_ratio)),
             ("h2o_ratio", Json::Num(self.aqua.h2o_ratio)),
@@ -263,8 +316,19 @@ impl DeploymentSpec {
         if !self.name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')) {
             bail!("deployment name '{}' must be [A-Za-z0-9._-] (it is a URL segment)", self.name);
         }
-        if !matches!(self.backend.as_str(), "auto" | "native" | "sharded" | "pjrt") {
-            bail!("unknown backend '{}' (expected auto|native|sharded|pjrt)", self.backend);
+        // a `fault:` wrapper is validated down to its inner kind here;
+        // the fault parameters themselves are checked by FaultPlan::parse
+        // when the backend spec is built
+        let base = match self.backend.strip_prefix("fault:") {
+            Some(rest) => rest.split([',', ';']).next().unwrap_or(rest),
+            None => self.backend.as_str(),
+        };
+        if !matches!(base, "auto" | "native" | "sharded" | "pjrt") {
+            bail!(
+                "unknown backend '{}' (expected auto|native|sharded|pjrt, \
+                 optionally wrapped as fault:<inner>)",
+                self.backend
+            );
         }
         if self.batch == 0 {
             bail!("deployment '{}': batch must be >= 1", self.name);
@@ -318,6 +382,16 @@ impl DeploymentSpec {
             max_batch_total_tokens: self.max_batch_total_tokens,
             waiting_served_ratio: self.waiting_served_ratio,
             interleave: self.interleave,
+            max_consecutive_step_failures: self.max_step_failures.max(1),
+            ..Default::default()
+        }
+    }
+
+    /// The supervisor restart policy this spec pins.
+    pub fn restart_policy(&self) -> crate::coordinator::RestartPolicy {
+        crate::coordinator::RestartPolicy {
+            max_restarts: self.restart,
+            backoff: std::time::Duration::from_millis(self.restart_backoff_ms.max(1)),
             ..Default::default()
         }
     }
@@ -398,6 +472,39 @@ mod tests {
         let ecfg = spec.engine_config();
         assert!(ecfg.prefix_cache);
         assert_eq!(ecfg.prefix_cache_pages, 9);
+    }
+
+    #[test]
+    fn fault_and_lifecycle_knobs_parse_and_roundtrip() {
+        // fault-wrapped backend accepted on the kv surface, with `;`
+        // separating the fault params from the inner kind
+        let spec = DeploymentSpec::parse_kv(
+            "name=chaos,backend=fault:native;err_every=50,restart=2,restart_backoff_ms=10,\
+             deadline_ms=750,max_step_failures=5",
+        )
+        .unwrap();
+        assert_eq!(spec.backend, "fault:native;err_every=50");
+        assert_eq!(spec.restart, 2);
+        assert_eq!(spec.restart_backoff_ms, 10);
+        assert_eq!(spec.deadline_ms, 750);
+        assert_eq!(spec.max_step_failures, 5);
+        let back = DeploymentSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // the knobs reach the engine config + restart policy
+        assert_eq!(spec.engine_config().max_consecutive_step_failures, 5);
+        let pol = spec.restart_policy();
+        assert_eq!(pol.max_restarts, 2);
+        assert_eq!(pol.backoff, std::time::Duration::from_millis(10));
+        // the wrapped spec actually builds
+        assert_eq!(spec.backend_spec("no-such-dir").unwrap().name(), "fault");
+        // but a fault wrapper around an unknown inner kind is rejected
+        assert!(DeploymentSpec::parse_kv("name=a,backend=fault:gpu").is_err());
+        assert!(DeploymentSpec::parse_kv("name=a,backend=fault:fault:native").is_err());
+        // defaults: no restarts, no deadline, 3-strikes escalation
+        let d = DeploymentSpec::default();
+        assert_eq!(d.restart, 0);
+        assert_eq!(d.deadline_ms, 0);
+        assert_eq!(d.max_step_failures, 3);
     }
 
     #[test]

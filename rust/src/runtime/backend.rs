@@ -19,6 +19,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use super::fault::{FaultBackend, FaultPlan};
 use super::native::{synthetic_corpus, NativeBackend, NativeModel};
 use crate::aqua::policy::AquaConfig;
 use crate::kvpool::{KvPoolConfig, KvPoolGauges};
@@ -55,6 +56,26 @@ impl AquaKnobs {
         AquaKnobs { k_dims: d_head, dim_keep: vec![1.0; d_head], use_projection: false }
     }
 }
+
+/// A backend step failure the backend can blame on one specific lane.
+/// Carried in the `anyhow` error chain (`err.downcast_ref::<LaneError>()`
+/// traverses contexts) so the engine can contain the failure to that lane
+/// instead of killing the whole pass.
+///
+/// **Contract:** a backend returning a `LaneError` must not have mutated
+/// *any* lane's KV or cache state in the failing call — the engine retires
+/// only the blamed lane and re-runs the pass, and the surviving lanes'
+/// greedy outputs must stay bit-identical to a failure-free run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneError(pub usize);
+
+impl std::fmt::Display for LaneError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "backend step failed for lane {}", self.0)
+    }
+}
+
+impl std::error::Error for LaneError {}
 
 /// Which score kernels a backend step actually ran, plus the time spent on
 /// the attention score path — the observability the serving demo and the
@@ -323,10 +344,14 @@ impl ExecBackend for PjrtBackend {
 
 /// A `Send`-able recipe that constructs its backend *on the calling
 /// thread* — required for `EngineHandle::spawn`, because PJRT handles are
-/// not `Send` (the native model, plain f32 buffers, is).
+/// not `Send` (the native model, plain f32 buffers, is). `Clone` so the
+/// supervisor can rebuild the backend across engine restarts.
+#[derive(Clone)]
 pub enum BackendRecipe {
     Native(Arc<NativeModel>),
     Sharded(Arc<NativeModel>, usize),
+    /// Fault-injecting wrapper over an inner recipe (chaos testing).
+    Fault(Box<BackendRecipe>, FaultPlan),
     #[cfg(feature = "pjrt")]
     Pjrt(ModelArtifacts),
 }
@@ -338,6 +363,7 @@ impl BackendRecipe {
         match self {
             BackendRecipe::Native(_) => "native",
             BackendRecipe::Sharded(..) => "sharded",
+            BackendRecipe::Fault(..) => "fault",
             #[cfg(feature = "pjrt")]
             BackendRecipe::Pjrt(_) => "pjrt",
         }
@@ -350,6 +376,9 @@ impl BackendRecipe {
             }
             BackendRecipe::Sharded(model, threads) => {
                 Ok(Box::new(super::sharded::ShardedBackend::from_model(model.clone(), *threads)))
+            }
+            BackendRecipe::Fault(inner, plan) => {
+                Ok(Box::new(FaultBackend::new(inner.build()?, plan.clone())))
             }
             #[cfg(feature = "pjrt")]
             BackendRecipe::Pjrt(mart) => {
@@ -368,6 +397,10 @@ pub enum BackendSpec {
     Native(Arc<NativeModel>),
     /// Lane-sharded multi-threaded native backend (`threads` workers).
     Sharded(Arc<NativeModel>, usize),
+    /// Deterministic fault-injection wrapper over an inner spec — spelled
+    /// `fault:<inner>,k=v,...` (or with `;` separators) on the CLI and in
+    /// deployment specs; see [`FaultPlan`] for the knobs.
+    Fault(Box<BackendSpec>, FaultPlan),
     #[cfg(feature = "pjrt")]
     Pjrt {
         mart: ModelArtifacts,
@@ -392,10 +425,11 @@ impl BackendSpec {
         BackendSpec::Pjrt { mart, rt: std::cell::RefCell::new(None) }
     }
 
-    /// Parse a backend kind string (`auto | native | sharded | pjrt`) into
-    /// a spec — the single place the CLI's `--backend` flag and the
-    /// registry's deployment specs agree on backend names. `threads` is
-    /// consumed by the sharded backend, `arts_dir` by pjrt/auto.
+    /// Parse a backend kind string (`auto | native | sharded | pjrt`, or
+    /// `fault:<inner>[,k=v...]`) into a spec — the single place the CLI's
+    /// `--backend` flag and the registry's deployment specs agree on
+    /// backend names. `threads` is consumed by the sharded backend,
+    /// `arts_dir` by pjrt/auto.
     pub fn from_kind(
         kind: &str,
         model: &str,
@@ -403,6 +437,20 @@ impl BackendSpec {
         threads: usize,
         arts_dir: &str,
     ) -> Result<BackendSpec> {
+        if let Some(rest) = kind.strip_prefix("fault:") {
+            // `fault:native,err_every=50` — inner kind up to the first
+            // separator, the rest is the FaultPlan. `;` separators are
+            // accepted too (deployment kv-specs split on commas).
+            let (inner_kind, params) = match rest.find([',', ';']) {
+                Some(i) => (&rest[..i], &rest[i + 1..]),
+                None => (rest, ""),
+            };
+            if inner_kind.starts_with("fault") {
+                anyhow::bail!("fault backend cannot wrap another fault backend");
+            }
+            let inner = BackendSpec::from_kind(inner_kind, model, seed, threads, arts_dir)?;
+            return Ok(BackendSpec::Fault(Box::new(inner), FaultPlan::parse(params)?));
+        }
         match kind {
             "native" => BackendSpec::native(ModelConfig::tiny(model), seed),
             "sharded" => BackendSpec::sharded(ModelConfig::tiny(model), seed, threads),
@@ -420,7 +468,9 @@ impl BackendSpec {
                     anyhow::bail!("backend 'pjrt' requires building with `--features pjrt`")
                 }
             }
-            other => anyhow::bail!("unknown backend '{other}' (expected auto|native|sharded|pjrt)"),
+            other => anyhow::bail!(
+                "unknown backend '{other}' (expected auto|native|sharded|pjrt|fault:<inner>)"
+            ),
         }
     }
 
@@ -428,6 +478,7 @@ impl BackendSpec {
         match self {
             BackendSpec::Native(_) => "native",
             BackendSpec::Sharded(..) => "sharded",
+            BackendSpec::Fault(..) => "fault",
             #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt { .. } => "pjrt",
         }
@@ -437,6 +488,7 @@ impl BackendSpec {
         match self {
             BackendSpec::Native(m) => &m.cfg,
             BackendSpec::Sharded(m, _) => &m.cfg,
+            BackendSpec::Fault(inner, _) => inner.model_config(),
             #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt { mart, .. } => &mart.config,
         }
@@ -459,6 +511,9 @@ impl BackendSpec {
             BackendSpec::Sharded(model, threads) => {
                 Ok(Box::new(super::sharded::ShardedBackend::from_model(model.clone(), *threads)))
             }
+            BackendSpec::Fault(inner, plan) => {
+                Ok(Box::new(FaultBackend::new(inner.build()?, plan.clone())))
+            }
             #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt { mart, rt } => {
                 let mut slot = rt.borrow_mut();
@@ -476,6 +531,9 @@ impl BackendSpec {
         match self {
             BackendSpec::Native(m) => BackendRecipe::Native(m.clone()),
             BackendSpec::Sharded(m, threads) => BackendRecipe::Sharded(m.clone(), *threads),
+            BackendSpec::Fault(inner, plan) => {
+                BackendRecipe::Fault(Box::new(inner.recipe()), plan.clone())
+            }
             #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt { mart, .. } => BackendRecipe::Pjrt(mart.clone()),
         }

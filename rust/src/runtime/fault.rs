@@ -1,0 +1,344 @@
+//! Deterministic fault injection behind the [`ExecBackend`] trait.
+//!
+//! [`FaultBackend`] wraps any inner backend and injects *scripted* step
+//! errors, panics, and latency spikes by step count and lane, so every
+//! failure path in the engine/deployment/server stack is exercisable in
+//! hermetic CI. Configured through [`BackendSpec::from_kind`] as
+//! `fault:<inner>,k=v,...` (e.g. `--backend fault:native,err_every=50`);
+//! `;` also separates params, for contexts where the surrounding syntax
+//! already splits on commas (deployment kv-specs).
+//!
+//! Injection happens **before** the inner call, so a failed step has no
+//! side effects on any lane's KV state — the [`LaneError`] contract the
+//! engine's containment relies on (retire the blamed lane, re-run the
+//! pass, surviving lanes stay bit-identical).
+//!
+//! [`BackendSpec::from_kind`]: super::backend::BackendSpec::from_kind
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::backend::{AquaKnobs, ExecBackend, LaneError, PrefixAttach, StepOut};
+use crate::kvpool::{KvPoolConfig, KvPoolGauges};
+use crate::model::config::ModelConfig;
+use crate::util::prng::Rng;
+
+/// The injection script. All knobs are optional; the default plan injects
+/// nothing (a transparent wrapper). Steps count prefill + decode calls,
+/// starting at 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Inject an error on every Nth step (0 = off).
+    pub err_every: u64,
+    /// Per-step error probability from the seeded RNG (0.0 = off).
+    pub err_p: f64,
+    /// Stop injecting errors after this many (0 = unlimited).
+    pub err_count: u64,
+    /// Lane to blame for injected errors; defaults to the first live lane
+    /// of the failing call.
+    pub err_lane: Option<usize>,
+    /// Injected errors carry no lane attribution (simulates a backend
+    /// that cannot say which lane failed — the engine must fail every
+    /// lane scheduled in the pass).
+    pub unattributed: bool,
+    /// Panic on exactly this step (0 = off) — exercises the supervisor's
+    /// `catch_unwind` path.
+    pub panic_at: u64,
+    /// Sleep `delay_ms` before every Nth step (0 = off).
+    pub delay_every: u64,
+    /// Latency-spike duration, milliseconds.
+    pub delay_ms: u64,
+    /// Seed for the probabilistic knobs.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            err_every: 0,
+            err_p: 0.0,
+            err_count: 0,
+            err_lane: None,
+            unattributed: false,
+            panic_at: 0,
+            delay_every: 0,
+            delay_ms: 0,
+            seed: 0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse `k=v` params separated by `,` or `;` (either works in any
+    /// position; empty input is the do-nothing plan).
+    pub fn parse(params: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for kv in params.split([',', ';']).filter(|s| !s.trim().is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .with_context(|| format!("fault param '{kv}' is not key=value"))?;
+            let (k, v) = (k.trim(), v.trim());
+            let bad = || format!("fault param '{k}' has invalid value '{v}'");
+            match k {
+                "err_every" => plan.err_every = v.parse().with_context(bad)?,
+                "err_p" => plan.err_p = v.parse().with_context(bad)?,
+                "err_count" => plan.err_count = v.parse().with_context(bad)?,
+                "err_lane" => plan.err_lane = Some(v.parse().with_context(bad)?),
+                "unattributed" => plan.unattributed = v.parse().with_context(bad)?,
+                "panic_at" => plan.panic_at = v.parse().with_context(bad)?,
+                "delay_every" => plan.delay_every = v.parse().with_context(bad)?,
+                "delay_ms" => plan.delay_ms = v.parse().with_context(bad)?,
+                "seed" => plan.seed = v.parse().with_context(bad)?,
+                other => bail!(
+                    "unknown fault param '{other}' (expected err_every|err_p|err_count|err_lane|\
+                     unattributed|panic_at|delay_every|delay_ms|seed)"
+                ),
+            }
+        }
+        if !(0.0..=1.0).contains(&plan.err_p) {
+            bail!("fault err_p must be in [0, 1], got {}", plan.err_p);
+        }
+        Ok(plan)
+    }
+}
+
+/// Fault-injecting [`ExecBackend`] wrapper. Everything but the scripted
+/// injection delegates to the inner backend verbatim, so a do-nothing plan
+/// is bit-identical to serving the inner backend directly.
+pub struct FaultBackend {
+    inner: Box<dyn ExecBackend>,
+    plan: FaultPlan,
+    rng: Rng,
+    /// Prefill + decode calls so far (the injection clock).
+    steps: u64,
+    /// Errors injected so far (the `err_count` budget).
+    injected: u64,
+}
+
+impl FaultBackend {
+    pub fn new(inner: Box<dyn ExecBackend>, plan: FaultPlan) -> FaultBackend {
+        let rng = Rng::new(plan.seed ^ 0xFA_17);
+        FaultBackend { inner, plan, rng, steps: 0, injected: 0 }
+    }
+
+    /// Steps the injection clock and fires whatever the plan scripts for
+    /// this step. Called before the inner prefill/decode, so an injected
+    /// failure leaves every lane's state untouched.
+    fn inject(&mut self, tokens: &[i32]) -> Result<()> {
+        self.steps += 1;
+        if self.plan.panic_at != 0 && self.steps == self.plan.panic_at {
+            panic!("fault backend: scripted panic at step {}", self.steps);
+        }
+        if self.plan.delay_every != 0 && self.steps % self.plan.delay_every == 0 {
+            std::thread::sleep(Duration::from_millis(self.plan.delay_ms));
+        }
+        let scripted = self.plan.err_every != 0 && self.steps % self.plan.err_every == 0;
+        let random = self.plan.err_p > 0.0 && self.rng.f64() < self.plan.err_p;
+        let budget_left = self.plan.err_count == 0 || self.injected < self.plan.err_count;
+        if (scripted || random) && budget_left {
+            self.injected += 1;
+            if self.plan.unattributed {
+                bail!("fault backend: injected unattributed error at step {}", self.steps);
+            }
+            // blame the scripted lane, else the first live lane of the call
+            let lane = self
+                .plan
+                .err_lane
+                .or_else(|| tokens.iter().position(|&t| t >= 0))
+                .unwrap_or(0);
+            return Err(anyhow::Error::new(LaneError(lane))
+                .context(format!("fault backend: injected error at step {}", self.steps)));
+        }
+        Ok(())
+    }
+}
+
+impl ExecBackend for FaultBackend {
+    fn name(&self) -> &'static str {
+        "fault"
+    }
+
+    fn model_config(&self) -> &ModelConfig {
+        self.inner.model_config()
+    }
+
+    fn prefill_chunk(&self) -> usize {
+        self.inner.prefill_chunk()
+    }
+
+    fn empty_cache(&mut self, b: usize) -> Result<()> {
+        self.inner.empty_cache(b)
+    }
+
+    fn configure_kv_pool(&mut self, cfg: KvPoolConfig) -> Result<()> {
+        self.inner.configure_kv_pool(cfg)
+    }
+
+    fn retire_lane(&mut self, lane: usize) {
+        self.inner.retire_lane(lane)
+    }
+
+    fn attach_prefix(
+        &mut self,
+        lane: usize,
+        tokens: &[i32],
+        knobs: &AquaKnobs,
+    ) -> Result<PrefixAttach> {
+        self.inner.attach_prefix(lane, tokens, knobs)
+    }
+
+    fn kv_gauges(&mut self) -> KvPoolGauges {
+        self.inner.kv_gauges()
+    }
+
+    fn prefill(
+        &mut self,
+        b: usize,
+        tokens: &[i32],
+        pos0: &[i32],
+        slot_mask: &[f32],
+        knobs: &AquaKnobs,
+    ) -> Result<StepOut> {
+        // a prefill call's live lanes are those with any non-dead token
+        let chunk = self.inner.prefill_chunk().max(1);
+        let lane_live: Vec<i32> = (0..b)
+            .map(|lane| {
+                let row = &tokens[lane * chunk..(lane + 1) * chunk];
+                if row.iter().any(|&t| t >= 0) {
+                    0
+                } else {
+                    -1
+                }
+            })
+            .collect();
+        self.inject(&lane_live)?;
+        self.inner.prefill(b, tokens, pos0, slot_mask, knobs)
+    }
+
+    fn decode(
+        &mut self,
+        b: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        slot_mask: &[f32],
+        knobs: &AquaKnobs,
+    ) -> Result<StepOut> {
+        self.inject(tokens)?;
+        self.inner.decode(b, tokens, pos, slot_mask, knobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::runtime::backend::BackendSpec;
+
+    fn fault_backend(plan: &str) -> FaultBackend {
+        let spec = BackendSpec::native(ModelConfig::tiny("fault-test"), 1).unwrap();
+        FaultBackend::new(spec.build().unwrap(), FaultPlan::parse(plan).unwrap())
+    }
+
+    #[test]
+    fn plan_parses_both_separators() {
+        let a = FaultPlan::parse("err_every=50,err_lane=2,seed=7").unwrap();
+        let b = FaultPlan::parse("err_every=50;err_lane=2;seed=7").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.err_every, 50);
+        assert_eq!(a.err_lane, Some(2));
+        assert_eq!(a.seed, 7);
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("err_every").is_err());
+        assert!(FaultPlan::parse("err_p=1.5").is_err());
+    }
+
+    #[test]
+    fn spec_parses_fault_kind() {
+        let spec = BackendSpec::from_kind("fault:native,err_every=3", "m", 1, 1, "x").unwrap();
+        assert_eq!(spec.name(), "fault");
+        assert_eq!(spec.recipe().kind(), "fault");
+        let mut be = spec.build().unwrap();
+        assert_eq!(be.name(), "fault");
+        be.empty_cache(1).unwrap();
+        // `;` separators work too, and bare `fault:native` is a no-op plan
+        BackendSpec::from_kind("fault:native;err_every=3;err_lane=0", "m", 1, 1, "x").unwrap();
+        BackendSpec::from_kind("fault:native", "m", 1, 1, "x").unwrap();
+        assert!(BackendSpec::from_kind("fault:fault:native", "m", 1, 1, "x").is_err());
+        assert!(BackendSpec::from_kind("fault:gpu", "m", 1, 1, "x").is_err());
+    }
+
+    #[test]
+    fn scripted_errors_fire_on_schedule_and_attribute_lane() {
+        let mut be = fault_backend("err_every=3,err_count=1");
+        be.empty_cache(2).unwrap();
+        let knobs = AquaKnobs::exact(be.model_config().d_head);
+        let s = be.model_config().max_seq;
+        let mask = vec![0.0f32; 2 * s];
+        // decode steps 1, 2 succeed; step 3 errs, blamed on the first live
+        // lane (lane 1 here — lane 0 is dead)
+        for step in 1..=4u64 {
+            let r = be.decode(2, &[-1, 5], &[0, 0], &mask, &knobs);
+            if step == 3 {
+                let e = r.expect_err("step 3 must fail");
+                assert_eq!(e.downcast_ref::<LaneError>(), Some(&LaneError(1)));
+            } else {
+                r.unwrap_or_else(|e| panic!("step {step} should pass: {e:#}"));
+            }
+        }
+        // err_count=1 exhausted: step 6 passes
+        for _ in 5..=6 {
+            be.decode(2, &[-1, 5], &[0, 0], &mask, &knobs).unwrap();
+        }
+    }
+
+    #[test]
+    fn unattributed_errors_carry_no_lane() {
+        let mut be = fault_backend("err_every=1,unattributed=true");
+        be.empty_cache(1).unwrap();
+        let knobs = AquaKnobs::exact(be.model_config().d_head);
+        let mask = vec![0.0f32; be.model_config().max_seq];
+        let e = be.decode(1, &[5], &[0], &mask, &knobs).expect_err("must fail");
+        assert!(e.downcast_ref::<LaneError>().is_none());
+    }
+
+    #[test]
+    fn injection_failure_has_no_side_effects() {
+        // two identical backends; one injects an error mid-stream. After
+        // the error, both must produce bit-identical outputs — the failed
+        // call touched nothing.
+        let mut clean = fault_backend("");
+        let mut faulty = fault_backend("err_every=2,err_count=1,err_lane=0");
+        let knobs = AquaKnobs::exact(clean.model_config().d_head);
+        let s = clean.model_config().max_seq;
+        let chunk = clean.prefill_chunk();
+        clean.empty_cache(1).unwrap();
+        faulty.empty_cache(1).unwrap();
+        let mut prompt = vec![-1i32; chunk];
+        prompt[0] = 7;
+        prompt[1] = 13;
+        let mut mask = vec![0.0f32; s];
+        let a = clean.prefill(1, &prompt, &[0], &mask, &knobs).unwrap();
+        let b = faulty.prefill(1, &prompt, &[0], &mask, &knobs).unwrap();
+        assert_eq!(a.logits, b.logits);
+        mask[0] = 1.0;
+        mask[1] = 1.0;
+        // step 2: faulty errs, clean proceeds — then both decode and the
+        // logits must still match exactly
+        assert!(faulty.decode(1, &[3], &[2], &mask, &knobs).is_err());
+        let a = clean.decode(1, &[3], &[2], &mask, &knobs).unwrap();
+        let b = faulty.decode(1, &[3], &[2], &mask, &knobs).unwrap();
+        assert_eq!(a.logits, b.logits, "failed call must leave no side effects");
+    }
+
+    #[test]
+    #[should_panic(expected = "scripted panic at step 1")]
+    fn scripted_panic_fires() {
+        let mut be = fault_backend("panic_at=1");
+        be.empty_cache(1).unwrap();
+        let knobs = AquaKnobs::exact(be.model_config().d_head);
+        let mask = vec![0.0f32; be.model_config().max_seq];
+        let _ = be.decode(1, &[5], &[0], &mask, &knobs);
+    }
+}

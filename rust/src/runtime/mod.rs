@@ -10,6 +10,9 @@
 //! * [`sharded`] — multi-threaded lane-sharded backend over the native
 //!   model: the batch's lanes and their KV shards split across persistent
 //!   worker threads, bit-identical to [`native`].
+//! * [`fault`] — deterministic fault-injection wrapper over any inner
+//!   backend (scripted step errors / panics / latency spikes), the chaos
+//!   hook behind `--backend fault:<inner>,...`.
 //! * [`artifacts`] — manifest.json parsing, model/corpus/task locations
 //!   (feature-independent: the eval harness reads tasks from here).
 //! * [`exec`] (`--features pjrt`) — PJRT client, HLO-text → compiled
@@ -17,6 +20,7 @@
 
 pub mod artifacts;
 pub mod backend;
+pub mod fault;
 pub mod native;
 pub mod sharded;
 
@@ -26,9 +30,10 @@ pub mod exec;
 pub use artifacts::{Artifacts, ModelArtifacts};
 pub use backend::{
     corpus_or_synthetic, default_backend, default_spec, default_spec_in, AquaKnobs, BackendRecipe,
-    BackendSpec, ExecBackend, KernelCounters, PrefixAttach, StepOut,
+    BackendSpec, ExecBackend, KernelCounters, LaneError, PrefixAttach, StepOut,
 };
 pub use crate::kvpool::{KvPoolConfig, KvPoolGauges};
+pub use fault::{FaultBackend, FaultPlan};
 pub use native::{synthetic_corpus, NativeBackend, NativeModel, ScoreMode, NATIVE_PREFILL_CHUNK};
 pub use sharded::ShardedBackend;
 

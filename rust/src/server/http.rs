@@ -2,12 +2,36 @@
 //! close), request bodies via Content-Length. Enough for the JSON API and
 //! for `curl`.
 
+// Server code must never silently discard a Result — count it or log it.
+#![deny(clippy::let_underscore_must_use)]
+
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 
 use anyhow::{bail, Result};
 
 use crate::util::json::Json;
+
+/// Largest request body the server will read. A client-supplied
+/// Content-Length used to size the read buffer unchecked — a single
+/// `Content-Length: 999999999999` allocated that many bytes before one
+/// payload byte arrived. Anything above this cap is answered 413 without
+/// allocating.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Typed parse failure for an over-cap Content-Length, so
+/// [`handle_connection`] can answer 413 instead of dropping the
+/// connection silently.
+#[derive(Debug)]
+pub struct BodyTooLarge(pub usize);
+
+impl std::fmt::Display for BodyTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request body of {} bytes exceeds the {} byte cap", self.0, MAX_BODY_BYTES)
+    }
+}
+
+impl std::error::Error for BodyTooLarge {}
 
 #[derive(Debug)]
 pub struct Request {
@@ -84,6 +108,9 @@ pub fn parse_request<R: BufRead>(reader: &mut R) -> Result<Request> {
         .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
         .and_then(|(_, v)| v.parse().ok())
         .unwrap_or(0);
+    if len > MAX_BODY_BYTES {
+        return Err(anyhow::Error::new(BodyTooLarge(len)));
+    }
     let mut body = vec![0u8; len];
     if len > 0 {
         reader.read_exact(&mut body)?;
@@ -130,18 +157,52 @@ pub fn client_request(
     Ok((status, body))
 }
 
-/// Read one request off the stream, dispatch, write the response.
+/// Read one request off the stream, dispatch, write the response. The
+/// handler also receives the connection so long-running routes can probe
+/// for client disconnect (see the `/generate` cancellation path).
 pub fn handle_connection<F>(stream: TcpStream, handler: F) -> Result<()>
 where
-    F: FnOnce(&Request) -> Response,
+    F: FnOnce(&Request, &TcpStream) -> Response,
 {
     stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
-    let req = parse_request(&mut reader)?;
-    let resp = handler(&req);
+    let req = match parse_request(&mut reader) {
+        Ok(r) => r,
+        Err(e) if e.downcast_ref::<BodyTooLarge>().is_some() => {
+            // over-cap Content-Length: tell the client instead of
+            // silently dropping the connection
+            let mut stream = stream;
+            write_response(&mut stream, &Response::text(413, &format!("{e:#}")))?;
+            return Ok(());
+        }
+        Err(e) => return Err(e),
+    };
+    let resp = handler(&req, &stream);
     let mut stream = stream;
     write_response(&mut stream, &resp)?;
     Ok(())
+}
+
+/// Has the peer hung up? Non-destructive probe: a zero-byte `peek` in
+/// non-blocking mode means orderly shutdown; `WouldBlock` means the
+/// client is alive and quiet; hard errors (reset) also count as gone.
+/// Pipelined extra bytes count as alive — only the response write will
+/// sort those out.
+pub fn client_gone(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut probe = [0u8; 1];
+    let gone = match stream.peek(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    if stream.set_nonblocking(false).is_err() {
+        return true;
+    }
+    gone
 }
 
 #[cfg(test)]
@@ -183,6 +244,24 @@ mod tests {
     fn rejects_garbage() {
         let mut r = BufReader::new(Cursor::new(b"\r\n".as_slice()));
         assert!(parse_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_content_length_without_allocating() {
+        // a body cap violation must be typed (handle_connection answers
+        // 413 from it) and must fire before any payload is read
+        let raw = format!(
+            "POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        let mut r = BufReader::new(Cursor::new(raw.into_bytes()));
+        let err = parse_request(&mut r).unwrap_err();
+        let too_large = err.downcast_ref::<BodyTooLarge>().expect("typed BodyTooLarge");
+        assert_eq!(too_large.0, MAX_BODY_BYTES + 1);
+        // a body exactly at the cap parses (read stops at the bytes given)
+        let raw = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}", 2, "ok");
+        let mut r = BufReader::new(Cursor::new(raw.into_bytes()));
+        assert_eq!(parse_request(&mut r).unwrap().body, "ok");
     }
 
     #[test]

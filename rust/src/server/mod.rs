@@ -24,16 +24,20 @@
 //! its own thread behind the registry; the accept loop and per-connection
 //! workers only move plain data.
 
+// Server code must never silently discard a Result — count it or log it.
+#![deny(clippy::let_underscore_must_use)]
+
 pub mod http;
 
-use std::net::TcpListener;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::metrics::Snapshot;
-use crate::coordinator::GenRequest;
+use crate::coordinator::{FinishReason, GenRequest, Health};
 use crate::registry::{Admission, AdmissionStats, DeploymentSpec, ModelRegistry, ShedReason};
 use crate::tokenizer::ByteTokenizer;
 use crate::util::json::Json;
@@ -42,6 +46,16 @@ use http::{Request, Response};
 /// How long one `/generate` worker waits for its result before giving up
 /// (an abandoned result is then TTL-swept by the deployment's pump).
 const GENERATE_DEADLINE: Duration = Duration::from_secs(120);
+
+/// How often a waiting `/generate` worker probes its connection for
+/// client disconnect (each probe is one non-blocking `peek` syscall).
+const DISCONNECT_PROBE: Duration = Duration::from_millis(50);
+
+/// Accept-loop failures since process start (`/metrics`
+/// `accept_errors_total`). Process-wide: transient accept errors (fd
+/// exhaustion, aborted handshakes) are a host condition, not a
+/// per-deployment one.
+static ACCEPT_ERRORS: AtomicU64 = AtomicU64::new(0);
 
 /// Serve until the process is killed. Deployments stay mutable at runtime
 /// through the `/models` admin endpoints.
@@ -52,25 +66,55 @@ pub fn serve(addr: &str, registry: Arc<ModelRegistry>) -> Result<()> {
 }
 
 /// Accept loop over an already-bound listener (tests and examples bind
-/// port 0 themselves and run this on a background thread).
+/// port 0 themselves and run this on a background thread). Accept
+/// failures (fd exhaustion, aborted handshakes) are counted and retried
+/// with bounded backoff instead of spinning hot or killing the server.
 pub fn serve_on(listener: TcpListener, registry: Arc<ModelRegistry>) -> Result<()> {
+    const BACKOFF_START: Duration = Duration::from_millis(10);
+    const BACKOFF_MAX: Duration = Duration::from_secs(1);
+    let mut backoff = BACKOFF_START;
     for stream in listener.incoming() {
-        let Ok(stream) = stream else { continue };
+        let stream = match stream {
+            Ok(s) => {
+                backoff = BACKOFF_START;
+                s
+            }
+            Err(e) => {
+                ACCEPT_ERRORS.fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!("accept failed (backing off {:?}): {e}", backoff);
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(BACKOFF_MAX);
+                continue;
+            }
+        };
         let registry = registry.clone();
         std::thread::spawn(move || {
-            let _ = http::handle_connection(stream, |req| route(req, &registry));
+            if let Err(e) = http::handle_connection(stream, |req, conn| {
+                route_conn(req, Some(conn), &registry)
+            }) {
+                // half-open sockets and malformed requests land here; the
+                // client is gone or hopeless, but leave a trace
+                crate::log_debug!("connection error: {e:#}");
+            }
         });
     }
     Ok(())
 }
 
-/// Dispatch one request against the fleet.
+/// Dispatch one request against the fleet (no connection — test entry
+/// point; `/generate` cannot probe for disconnect).
 pub fn route(req: &Request, registry: &ModelRegistry) -> Response {
+    route_conn(req, None, registry)
+}
+
+/// Dispatch one request against the fleet. `conn` (when present) lets
+/// `/generate` detect client disconnect mid-wait and cancel the request.
+pub fn route_conn(req: &Request, conn: Option<&TcpStream>, registry: &ModelRegistry) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => Response::text(200, "ok"),
+        ("GET", "/healthz") => healthz(registry),
         ("GET", "/stats") => stats_route(registry, false),
         ("GET", "/metrics") => stats_route(registry, true),
-        ("POST", "/generate") => generate(req, registry),
+        ("POST", "/generate") => generate(req, conn, registry),
         ("GET", "/models") => list_models(registry),
         ("POST", "/models") => add_model(req, registry),
         ("DELETE", path) => match path.strip_prefix("/models/") {
@@ -81,7 +125,34 @@ pub fn route(req: &Request, registry: &ModelRegistry) -> Response {
     }
 }
 
-fn generate(req: &Request, registry: &ModelRegistry) -> Response {
+fn health_str(h: Health) -> &'static str {
+    match h {
+        Health::Starting => "starting",
+        Health::Healthy => "healthy",
+        Health::Unhealthy => "unhealthy",
+        Health::Failed => "failed",
+    }
+}
+
+/// Liveness + fleet health: 200 while every deployment's engine is
+/// healthy (or still starting), 503 naming the sick ones otherwise — so
+/// a load balancer stops routing to a host whose engines are crashed or
+/// restarting.
+fn healthz(registry: &ModelRegistry) -> Response {
+    let sick: Vec<String> = registry
+        .deployments()
+        .iter()
+        .filter(|d| matches!(d.health(), Health::Unhealthy | Health::Failed))
+        .map(|d| format!("{}={}", d.spec.name, health_str(d.health())))
+        .collect();
+    if sick.is_empty() {
+        Response::text(200, "ok")
+    } else {
+        Response::text(503, &format!("unhealthy: {}", sick.join(",")))
+    }
+}
+
+fn generate(req: &Request, conn: Option<&TcpStream>, registry: &ModelRegistry) -> Response {
     let body = match Json::parse(&req.body) {
         Ok(b) => b,
         Err(e) => return Response::text(400, &format!("bad json: {e}")),
@@ -104,6 +175,8 @@ fn generate(req: &Request, registry: &ModelRegistry) -> Response {
     if body.get("stop_newline").as_bool() != Some(false) {
         r.stop_token = Some(b'\n' as i32);
     }
+    // per-request deadline (ms from enqueue, 0 = the spec's default)
+    r.deadline_ms = body.get("deadline_ms").as_i64().unwrap_or(0).max(0) as u64;
     match dep.submit(r) {
         Ok(Admission::Accepted) => {}
         Ok(Admission::Shed(ShedReason::Capacity)) => {
@@ -135,10 +208,57 @@ fn generate(req: &Request, registry: &ModelRegistry) -> Response {
                 ),
             );
         }
+        Ok(Admission::Shed(ShedReason::Unhealthy)) => {
+            return Response::text(
+                503,
+                &format!(
+                    "model '{}' engine is {} — retry once /healthz recovers",
+                    dep.spec.name,
+                    health_str(dep.health())
+                ),
+            );
+        }
         Err(e) => return Response::text(503, &format!("{e:#}")),
     }
-    match dep.wait_result(id, GENERATE_DEADLINE) {
-        Some(res) => {
+    // Wait for the result, probing the connection so an abandoned request
+    // is cancelled (lane retired, KV pages freed) instead of decoding for
+    // a client that already hung up.
+    let end = Instant::now() + GENERATE_DEADLINE;
+    let mut next_probe = Instant::now() + DISCONNECT_PROBE;
+    let res = loop {
+        if let Some(r) = dep.take_result(id) {
+            break r;
+        }
+        if Instant::now() >= end {
+            return Response::text(504, "generation timeout");
+        }
+        if let Some(stream) = conn {
+            if Instant::now() >= next_probe {
+                next_probe = Instant::now() + DISCONNECT_PROBE;
+                if http::client_gone(stream) {
+                    dep.cancel(id);
+                    // nobody reads this response; the terminal Cancelled
+                    // result flows through the pump and is TTL-swept
+                    return Response::text(503, "client disconnected; request cancelled");
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    match res.finish {
+        FinishReason::DeadlineExpired => Response::text(
+            504,
+            &format!("request deadline expired after {} generated tokens", res.tokens.len()),
+        ),
+        FinishReason::BackendError => Response::text(
+            503,
+            &format!("backend failed after {} tokens — retryable", res.tokens.len()),
+        ),
+        FinishReason::EngineFailed => Response::text(
+            503,
+            &format!("model '{}' engine failed mid-request — retry once healthy", dep.spec.name),
+        ),
+        _ => {
             let text = tok.decode(&res.tokens);
             Response::json(
                 200,
@@ -147,12 +267,12 @@ fn generate(req: &Request, registry: &ModelRegistry) -> Response {
                     ("model", Json::Str(dep.spec.name.clone())),
                     ("text", Json::Str(text)),
                     ("tokens", Json::Num(res.tokens.len() as f64)),
+                    ("finish", Json::Str(format!("{:?}", res.finish))),
                     ("ttft_us", Json::Num(res.ttft_us as f64)),
                     ("total_us", Json::Num(res.total_us as f64)),
                 ]),
             )
         }
-        None => Response::text(504, "generation timeout"),
     }
 }
 
@@ -171,11 +291,16 @@ fn snapshot_fields(s: &Snapshot, full: bool) -> Vec<(&'static str, Json)> {
         ("prefix_hit_tokens", Json::Num(s.prefix_hit_tokens as f64)),
         ("prefix_hit_rate", Json::Num(s.prefix_hit_rate())),
         ("requests_rejected", Json::Num(s.requests_rejected as f64)),
+        ("requests_served", Json::Num(s.requests_served as f64)),
+        ("requests_cancelled", Json::Num(s.requests_cancelled as f64)),
+        ("requests_expired", Json::Num(s.requests_expired as f64)),
+        ("requests_failed", Json::Num(s.requests_failed as f64)),
         ("batch_occupancy", Json::Num(s.batch_occupancy)),
         ("itl_p99_ms", Json::Num(s.itl_p99_ms)),
     ];
     if full {
         fields.extend([
+            ("lane_failures", Json::Num(s.lane_failures as f64)),
             ("sched_steps", Json::Num(s.sched_steps as f64)),
             ("prefill_tokens_per_step", Json::Num(s.prefill_tokens_per_step)),
             ("itl_mean_ms", Json::Num(s.itl_mean_ms)),
@@ -211,6 +336,8 @@ fn admission_fields(a: &AdmissionStats, full: bool) -> Vec<(&'static str, Json)>
         fields.extend([
             ("shed_capacity_total", Json::Num(a.shed_capacity as f64)),
             ("shed_memory_total", Json::Num(a.shed_memory as f64)),
+            ("shed_unhealthy_total", Json::Num(a.shed_unhealthy as f64)),
+            ("engine_restarts", Json::Num(a.engine_restarts as f64)),
             ("kv_reserved_pages", Json::Num(a.kv_reserved_pages as f64)),
             ("kv_pages_total", Json::Num(a.kv_pages_total as f64)),
             ("results_swept", Json::Num(a.swept_results as f64)),
@@ -239,6 +366,7 @@ fn stats_route(registry: &ModelRegistry, full: bool) -> Response {
         };
         fields.push(("backend", Json::Str(dep.backend_kind().to_string())));
         fields.push(("k_ratio", Json::Num(dep.spec.aqua.k_ratio)));
+        fields.push(("health", Json::Str(health_str(dep.health()).to_string())));
         fields.extend(admission_fields(&adm, full));
         models.insert(dep.spec.name.clone(), Json::obj(fields));
 
@@ -247,6 +375,8 @@ fn stats_route(registry: &ModelRegistry, full: bool) -> Response {
         fleet_adm.shed += adm.shed;
         fleet_adm.shed_capacity += adm.shed_capacity;
         fleet_adm.shed_memory += adm.shed_memory;
+        fleet_adm.shed_unhealthy += adm.shed_unhealthy;
+        fleet_adm.engine_restarts += adm.engine_restarts;
         fleet_adm.kv_reserved_pages += adm.kv_reserved_pages;
         fleet_adm.kv_pages_total += adm.kv_pages_total;
         kv_unbounded |= adm.kv_pages_total == 0;
@@ -257,6 +387,10 @@ fn stats_route(registry: &ModelRegistry, full: bool) -> Response {
     }
     let mut fields = snapshot_fields(&fleet, full);
     fields.extend(admission_fields(&fleet_adm, full));
+    if full {
+        let accepts = ACCEPT_ERRORS.load(Ordering::Relaxed) as f64;
+        fields.push(("accept_errors_total", Json::Num(accepts)));
+    }
     fields.push(("models", Json::Obj(models)));
     match registry.default_name() {
         Some(d) => fields.push(("default_model", Json::Str(d))),
@@ -273,11 +407,11 @@ fn list_models(registry: &ModelRegistry) -> Response {
             let mut j = d.spec.to_json();
             if let Json::Obj(o) = &mut j {
                 o.insert("backend_kind".into(), Json::Str(d.backend_kind().to_string()));
-                o.insert(
-                    "queue_depth".into(),
-                    Json::Num(d.admission_stats().queue_depth as f64),
-                );
+                let adm = d.admission_stats();
+                o.insert("queue_depth".into(), Json::Num(adm.queue_depth as f64));
                 o.insert("draining".into(), Json::Bool(d.is_draining()));
+                o.insert("health".into(), Json::Str(health_str(d.health()).to_string()));
+                o.insert("engine_restarts".into(), Json::Num(adm.engine_restarts as f64));
             }
             j
         })

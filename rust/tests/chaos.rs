@@ -1,0 +1,369 @@
+//! Chaos suite: fault containment, supervised engine lifecycle, and
+//! end-to-end cancellation/deadlines — hermetic, driven entirely by the
+//! deterministic `fault:` backend wrapper (scripted errors, panics, and
+//! latency spikes; see `runtime::fault`).
+//!
+//! Acceptance surface (ROADMAP PR 7): injected step errors never kill the
+//! engine and leave surviving lanes bit-identical; failed/cancelled/
+//! expired lanes release their KV capacity; a panicked engine flushes
+//! terminal results to every waiter in < 1s, restarts under its budget,
+//! and sheds with 503 while unhealthy; `/metrics` outcome counters
+//! reconcile across the whole story.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use aqua_serve::coordinator::{Engine, EngineConfig, FinishReason, GenRequest, Health, Snapshot};
+use aqua_serve::registry::{Admission, DeploymentSpec, ModelRegistry, ShedReason};
+use aqua_serve::runtime::BackendSpec;
+use aqua_serve::server;
+use aqua_serve::tokenizer::ByteTokenizer;
+use aqua_serve::util::json::Json;
+
+// ---------------------------------------------------------------- helpers
+
+fn registry_of(specs: &[&str]) -> Arc<ModelRegistry> {
+    let reg = ModelRegistry::new("no-such-artifacts-dir");
+    for s in specs {
+        reg.deploy(DeploymentSpec::parse_kv(s).unwrap()).unwrap();
+    }
+    Arc::new(reg)
+}
+
+fn start_server(registry: Arc<ModelRegistry>) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let _ = server::serve_on(listener, registry);
+    });
+    addr
+}
+
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    server::http::client_request(addr, method, path, body).expect("http request")
+}
+
+fn prompt_tokens(text: &str) -> Vec<i32> {
+    ByteTokenizer.encode(text)
+}
+
+/// The outcome identity every snapshot must satisfy: each submission that
+/// reached the engine resolved to exactly one terminal bucket.
+fn assert_reconciled(s: &Snapshot) {
+    assert_eq!(
+        s.requests_done,
+        s.requests_served
+            + s.requests_rejected
+            + s.requests_cancelled
+            + s.requests_expired
+            + s.requests_failed,
+        "outcome counters must reconcile: {s:?}"
+    );
+}
+
+fn wait_for<F: FnMut() -> bool>(what: &str, deadline: Duration, mut cond: F) {
+    let end = Instant::now() + deadline;
+    while !cond() {
+        assert!(Instant::now() < end, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+// ------------------------------------------------------------------ tests
+
+/// A scripted backend error retires only the blamed lane; every surviving
+/// request's greedy output is bit-identical to a fault-free run — on the
+/// single-threaded native backend and the lane-sharded one.
+#[test]
+fn injected_faults_leave_surviving_lanes_bit_identical() {
+    for kind in ["native", "sharded"] {
+        let reqs: Vec<GenRequest> = (0..4)
+            .map(|i| GenRequest::new(i + 1, prompt_tokens(&format!("the color {i} of ")), 4))
+            .collect();
+
+        let clean_spec = BackendSpec::from_kind(kind, "chaos", 3, 2, "x").unwrap();
+        let cfg = EngineConfig { batch: 2, ..EngineConfig::default() };
+        let mut clean = Engine::with_spec(&clean_spec, cfg.clone()).unwrap();
+        let clean_res = clean.run_batch(reqs.clone()).unwrap();
+
+        // first pass errs once, blamed on lane 1 (request id 2)
+        let faulty_spec = BackendSpec::from_kind(
+            &format!("fault:{kind},err_every=1,err_count=1,err_lane=1"),
+            "chaos",
+            3,
+            2,
+            "x",
+        )
+        .unwrap();
+        let mut faulty = Engine::with_spec(&faulty_spec, cfg).unwrap();
+        let res = faulty.run_batch(reqs).unwrap();
+
+        assert_eq!(res[1].finish, FinishReason::BackendError, "{kind}: blamed lane fails");
+        assert!(res[1].tokens.is_empty(), "{kind}: failed before generating");
+        for i in [0usize, 2, 3] {
+            assert_eq!(res[i].finish, clean_res[i].finish, "{kind}: req {i} finish");
+            assert_eq!(
+                res[i].tokens, clean_res[i].tokens,
+                "{kind}: surviving req {i} must be bit-identical to the fault-free run"
+            );
+        }
+        // every lane (including the failed one) released its KV pages
+        assert_eq!(faulty.kv_gauges().pages_in_use, 0, "{kind}: pages leak");
+        let snap = faulty.metrics.snapshot();
+        assert_eq!(snap.requests_failed, 1);
+        assert_eq!(snap.lane_failures, 1);
+        assert_eq!(snap.requests_served, 3);
+        assert_reconciled(&snap);
+    }
+}
+
+/// An engine panic mid-decode: the waiter gets a terminal `EngineFailed`
+/// in under a second (no hang), the supervisor restarts the engine within
+/// its budget, and the reborn engine serves bit-identical results — with
+/// the shared metrics accumulator reconciling across the incarnations.
+#[test]
+fn supervisor_restart_preserves_service_and_reconciles_metrics() {
+    let reg = registry_of(&[
+        "name=chaotic,backend=fault:native;panic_at=12,seed=0,k=1.0,batch=1,queue=4,\
+         restart=1,restart_backoff_ms=1",
+    ]);
+    let dep = reg.get(Some("chaotic")).unwrap();
+
+    // a short request completes well before the scripted panic step
+    let short = |id: u64| GenRequest::new(id, prompt_tokens("hi"), 3);
+    let id1 = dep.fresh_id();
+    assert_eq!(dep.submit(short(id1)).unwrap(), Admission::Accepted);
+    let res1 = dep.wait_result(id1, Duration::from_secs(30)).expect("short request result");
+    assert_eq!(res1.finish, FinishReason::Length);
+    assert_eq!(res1.tokens.len(), 3);
+
+    // a long request crosses backend step 12 → scripted panic. The waiter
+    // must get a terminal answer fast, not hang to the HTTP deadline.
+    let id2 = dep.fresh_id();
+    assert_eq!(
+        dep.submit(GenRequest::new(id2, prompt_tokens("hi"), 100)).unwrap(),
+        Admission::Accepted
+    );
+    let t0 = Instant::now();
+    let res2 = dep.wait_result(id2, Duration::from_secs(10)).expect("terminal result for waiter");
+    assert_eq!(res2.finish, FinishReason::EngineFailed);
+    assert!(
+        t0.elapsed() < Duration::from_secs(1),
+        "waiter must be flushed promptly, took {:?}",
+        t0.elapsed()
+    );
+
+    // the supervisor restarts (budget 1) and publishes health
+    wait_for("engine restart to Healthy", Duration::from_secs(10), || {
+        dep.health() == Health::Healthy
+    });
+    assert_eq!(dep.admission_stats().engine_restarts, 1);
+
+    // the reborn engine serves, bit-identical to the first incarnation
+    // (same deterministic weights, fresh fault-step clock)
+    let id3 = dep.fresh_id();
+    assert_eq!(dep.submit(short(id3)).unwrap(), Admission::Accepted);
+    let res3 = dep.wait_result(id3, Duration::from_secs(30)).expect("post-restart result");
+    assert_eq!(res3.finish, FinishReason::Length);
+    assert_eq!(res3.tokens, res1.tokens, "restart must not perturb the model");
+
+    // one shared accumulator across incarnations: 2 served + 1 failed
+    let snap = dep.stats().unwrap();
+    assert_eq!(snap.requests_done, 3);
+    assert_eq!(snap.requests_served, 2);
+    assert_eq!(snap.requests_failed, 1);
+    assert_reconciled(&snap);
+    reg.shutdown_all().unwrap();
+}
+
+/// A deployment whose restart budget is exhausted goes `Failed` for good:
+/// `/healthz` flips to 503 naming it, `/generate` sheds with 503 instead
+/// of hanging, `GET /models` exposes the state — and the *other*
+/// deployment in the fleet keeps serving 200s, untouched.
+#[test]
+fn failed_engine_sheds_503_and_fleet_stays_up() {
+    let reg = registry_of(&[
+        "name=doomed,backend=fault:native;panic_at=1,seed=0,k=1.0,batch=1,queue=4,restart=0",
+        "name=steady,backend=native,seed=0,k=1.0,batch=2,queue=8",
+    ]);
+    let addr = start_server(reg.clone());
+    assert_eq!(http(addr, "GET", "/healthz", "").1, "ok", "healthy fleet before the fault");
+
+    // first backend call panics; restart budget 0 → Failed for good
+    let (status, body) = http(
+        addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "x", "max_new_tokens": 4, "model": "doomed"}"#,
+    );
+    assert_eq!(status, 503, "waiter gets a terminal shed, got: {body}");
+    let dep = reg.get(Some("doomed")).unwrap();
+    wait_for("doomed engine to report Failed", Duration::from_secs(10), || {
+        dep.health() == Health::Failed
+    });
+
+    // new work is shed at admission (503, not a hang), and counted
+    let (status, body) = http(
+        addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "x", "max_new_tokens": 4, "model": "doomed"}"#,
+    );
+    assert_eq!(status, 503, "unhealthy deployment must shed: {body}");
+    assert!(body.contains("failed"), "shed body names the state: {body}");
+    // the API-level shed carries the typed reason too
+    let id = dep.fresh_id();
+    assert_eq!(
+        dep.submit(GenRequest::new(id, prompt_tokens("x"), 2)).unwrap(),
+        Admission::Shed(ShedReason::Unhealthy)
+    );
+    assert!(dep.admission_stats().shed_unhealthy >= 2);
+
+    // liveness names the sick deployment; the healthy one still serves
+    let (status, body) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 503);
+    assert!(body.contains("doomed=failed"), "healthz names the sick engine: {body}");
+    let (status, _) = http(
+        addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "the capital of ", "max_new_tokens": 8, "model": "steady"}"#,
+    );
+    assert_eq!(status, 200, "fault containment: the healthy deployment is unaffected");
+
+    // fleet surfaces: /models health field, /metrics unhealthy-shed counter
+    let (_, body) = http(addr, "GET", "/models", "");
+    let doc = Json::parse(&body).unwrap();
+    let health_of = |name: &str| {
+        doc.get("models")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|m| m.get("name").as_str() == Some(name))
+            .unwrap()
+            .get("health")
+            .as_str()
+            .unwrap()
+            .to_string()
+    };
+    assert_eq!(health_of("doomed"), "failed");
+    assert_eq!(health_of("steady"), "healthy");
+    let (_, body) = http(addr, "GET", "/metrics", "");
+    let m = Json::parse(&body).unwrap();
+    assert!(m.get("models").get("doomed").get("shed_unhealthy_total").as_i64().unwrap() >= 1);
+    reg.shutdown_all().unwrap();
+}
+
+/// Deadlines fire end-to-end over HTTP: both the spec's default and the
+/// per-request `deadline_ms` JSON field map to 504 with partial progress
+/// reported, and the expiry shows up in `/metrics`. The latency-spike
+/// fault knob pins decode slow enough that the deadline always lands
+/// mid-request.
+#[test]
+fn deadlines_expire_mid_decode_over_http() {
+    let reg = registry_of(&[
+        // every backend step sleeps 5ms → ~140 tokens can never finish
+        // inside a 60ms budget
+        "name=slow_default,backend=fault:native;delay_every=1;delay_ms=5,seed=0,k=1.0,\
+         batch=1,queue=4,deadline_ms=60",
+        "name=slow_nodefault,backend=fault:native;delay_every=1;delay_ms=5,seed=0,k=1.0,\
+         batch=1,queue=4",
+    ]);
+    let addr = start_server(reg.clone());
+
+    // spec-default deadline
+    let (status, body) = http(
+        addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "x", "max_new_tokens": 140, "stop_newline": false,
+            "model": "slow_default"}"#,
+    );
+    assert_eq!(status, 504, "expired request maps to 504: {body}");
+    assert!(body.contains("deadline expired"), "504 explains itself: {body}");
+
+    // per-request JSON field on a deployment with no default
+    let (status, body) = http(
+        addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "x", "max_new_tokens": 140, "stop_newline": false,
+            "model": "slow_nodefault", "deadline_ms": 60}"#,
+    );
+    assert_eq!(status, 504, "per-request deadline maps to 504: {body}");
+
+    let (_, body) = http(addr, "GET", "/metrics", "");
+    let m = Json::parse(&body).unwrap();
+    for name in ["slow_default", "slow_nodefault"] {
+        let snap = m.get("models").get(name);
+        assert_eq!(snap.get("requests_expired").as_i64(), Some(1), "{name}");
+        assert_eq!(snap.get("requests_done").as_i64(), Some(1), "{name}");
+    }
+    assert_eq!(m.get("requests_expired").as_i64(), Some(2), "fleet aggregate");
+    reg.shutdown_all().unwrap();
+}
+
+/// Cancellation is a capacity event: an explicit cancel frees the lane
+/// (the queued request behind it completes) and zeroes the KV
+/// reservation; a client that hangs up mid-generation is detected and
+/// cancelled server-side instead of decoding into the void.
+#[test]
+fn cancel_frees_capacity_and_disconnect_cancels() {
+    let reg = registry_of(&[
+        "name=slowpoke,backend=fault:native;delay_every=1;delay_ms=5,seed=0,k=1.0,\
+         batch=1,queue=2",
+    ]);
+    let dep = reg.get(Some("slowpoke")).unwrap();
+
+    // long request occupies the single lane; a short one waits behind it
+    let id1 = dep.fresh_id();
+    assert_eq!(
+        dep.submit(GenRequest::new(id1, prompt_tokens("the capital of "), 100)).unwrap(),
+        Admission::Accepted
+    );
+    let id2 = dep.fresh_id();
+    assert_eq!(
+        dep.submit(GenRequest::new(id2, prompt_tokens("hi"), 2)).unwrap(),
+        Admission::Accepted
+    );
+    std::thread::sleep(Duration::from_millis(30));
+    dep.cancel(id1);
+    let t0 = Instant::now();
+    let r1 = dep.wait_result(id1, Duration::from_secs(10)).expect("cancelled result");
+    assert_eq!(r1.finish, FinishReason::Cancelled);
+    assert!(t0.elapsed() < Duration::from_secs(1), "cancel must resolve promptly");
+    assert!(r1.tokens.len() < 100, "cancelled mid-flight");
+    // ...and the freed lane serves the queued request to completion
+    let r2 = dep.wait_result(id2, Duration::from_secs(30)).expect("queued request result");
+    assert_eq!(r2.finish, FinishReason::Length);
+    assert_eq!(r2.tokens.len(), 2);
+    let adm = dep.admission_stats();
+    assert_eq!(adm.queue_depth, 0);
+    assert_eq!(adm.kv_reserved_pages, 0, "cancelled lane must release its KV reservation");
+
+    // disconnect path: send a long /generate, hang up immediately — the
+    // worker's probe detects it and cancels the lane
+    let addr = start_server(reg.clone());
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let body = r#"{"prompt": "the capital of ", "max_new_tokens": 100,
+                       "stop_newline": false, "model": "slowpoke"}"#;
+        write!(
+            s,
+            "POST /generate HTTP/1.1\r\nHost: aqua\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        s.flush().unwrap();
+        // dropping the stream closes the socket: the client is gone
+    }
+    wait_for("disconnect-triggered cancel", Duration::from_secs(15), || {
+        dep.stats().map(|s| s.requests_cancelled >= 2).unwrap_or(false)
+    });
+    let snap = dep.stats().unwrap();
+    assert_eq!(snap.requests_cancelled, 2);
+    assert_reconciled(&snap);
+    reg.shutdown_all().unwrap();
+}
