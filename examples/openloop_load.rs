@@ -21,7 +21,9 @@
 //! `--fault err_every=40`), so injected step errors show up as `failed`
 //! rows while the engines keep serving. `done` counts every resolved
 //! admission (served + cancelled + failed), so the `done + shed == sent`
-//! accounting the schema validator enforces still balances.
+//! accounting the schema validator enforces still balances. `--trace MODE`
+//! turns on each deployment's flight recorder; combined with `--fault` the
+//! run asserts that the injected lane failures left postmortem snapshots.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -50,6 +52,7 @@ struct ModelLoad {
     failed: u64,
     tokens: u64,
     e2e_ms: Vec<f64>,
+    ttft_ms: Vec<f64>,
     outstanding: Vec<u64>,
     submit_at: HashMap<u64, Instant>,
     /// Abandonment schedule: id → when the simulated client hangs up.
@@ -67,6 +70,7 @@ impl ModelLoad {
             failed: 0,
             tokens: 0,
             e2e_ms: vec![],
+            ttft_ms: vec![],
             outstanding: vec![],
             submit_at: HashMap::new(),
             abandon_at: HashMap::new(),
@@ -77,6 +81,7 @@ impl ModelLoad {
 fn main() -> anyhow::Result<()> {
     let mut abandon_p = 0.0f64;
     let mut fault_plan: Option<String> = None;
+    let mut trace_mode = "off".to_string();
     let mut rates: Vec<f64> = vec![];
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
@@ -86,6 +91,11 @@ fn main() -> anyhow::Result<()> {
                     .next()
                     .and_then(|v| v.parse().ok())
                     .ok_or_else(|| anyhow::anyhow!("--abandon needs a probability"))?;
+            }
+            "--trace" => {
+                trace_mode = args
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--trace needs off|errors|sampled:N|full"))?;
             }
             "--fault" => {
                 // kv-specs split on commas, so fault params embed with `;`
@@ -117,10 +127,10 @@ fn main() -> anyhow::Result<()> {
     let lifecycle = if fault_plan.is_some() { ",restart=1,restart_backoff_ms=5" } else { "" };
     let registry = ModelRegistry::new(aqua_serve::ARTIFACTS_DIR);
     registry.deploy(DeploymentSpec::parse_kv(&format!(
-        "name=exact,backend={backend_kind},k=1.0,batch=4,queue=8{lifecycle}"
+        "name=exact,backend={backend_kind},k=1.0,batch=4,queue=8{lifecycle},trace={trace_mode}"
     ))?)?;
     registry.deploy(DeploymentSpec::parse_kv(&format!(
-        "name=pruned,backend={backend_kind},k=0.25,batch=4,queue=8{lifecycle}"
+        "name=pruned,backend={backend_kind},k=0.25,batch=4,queue=8{lifecycle},trace={trace_mode}"
     ))?)?;
     let names: [&'static str; 2] = ["exact", "pruned"];
     let deps: Vec<_> = names.iter().map(|&n| registry.get(Some(n)).unwrap()).collect();
@@ -145,8 +155,9 @@ fn main() -> anyhow::Result<()> {
         names.len()
     );
     println!(
-        "{:>8} {:>8} {:>6} {:>6} {:>6} {:>6} {:>6} {:>12} {:>12} {:>10}",
-        "req/s", "model", "sent", "done", "shed", "cancel", "failed", "e2e p50", "e2e p99", "tok/s"
+        "{:>8} {:>8} {:>6} {:>6} {:>6} {:>6} {:>6} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "req/s", "model", "sent", "done", "shed", "cancel", "failed", "e2e p50", "e2e p99",
+        "ttft p50", "ttft p99", "tok/s"
     );
 
     let mut rows: Vec<Json> = vec![];
@@ -220,6 +231,9 @@ fn main() -> anyhow::Result<()> {
                                     load.e2e_ms.push(
                                         load.submit_at[&id].elapsed().as_secs_f64() * 1e3,
                                     );
+                                    // enqueue-relative TTFT from the engine's
+                                    // own span clock, not the client's
+                                    load.ttft_ms.push(res.timings.ttft_us as f64 / 1e3);
                                     load.tokens += res.tokens.len() as u64;
                                 }
                             }
@@ -248,7 +262,8 @@ fn main() -> anyhow::Result<()> {
         let wall = t0.elapsed().as_secs_f64().max(1e-9);
         for load in &loads {
             println!(
-                "{:>8.1} {:>8} {:>6} {:>6} {:>6} {:>6} {:>6} {:>10.1}ms {:>10.1}ms {:>10.1}",
+                "{:>8.1} {:>8} {:>6} {:>6} {:>6} {:>6} {:>6} {:>10.1}ms {:>10.1}ms {:>10.1}ms \
+                 {:>10.1}ms {:>10.1}",
                 rate,
                 load.name,
                 load.sent,
@@ -258,6 +273,8 @@ fn main() -> anyhow::Result<()> {
                 load.failed,
                 percentile(&load.e2e_ms, 50.0),
                 percentile(&load.e2e_ms, 99.0),
+                percentile(&load.ttft_ms, 50.0),
+                percentile(&load.ttft_ms, 99.0),
                 load.tokens as f64 / wall
             );
             rows.push(Json::obj(vec![
@@ -288,8 +305,21 @@ fn main() -> anyhow::Result<()> {
                 ("tok_per_s", Json::Num(load.tokens as f64 / wall)),
                 ("e2e_p50_ms", Json::Num(percentile(&load.e2e_ms, 50.0))),
                 ("e2e_p99_ms", Json::Num(percentile(&load.e2e_ms, 99.0))),
+                ("ttft_p50_ms", Json::Num(percentile(&load.ttft_ms, 50.0))),
+                ("ttft_p99_ms", Json::Num(percentile(&load.ttft_ms, 99.0))),
             ]));
         }
+    }
+    // Under chaos with the flight recorder on, the injected lane failures
+    // must have produced postmortem snapshots — the exact artifact an
+    // operator would pull from /trace/postmortem after a real incident.
+    if fault_plan.is_some() && trace_mode != "off" {
+        let postmortems: usize = deps.iter().map(|d| d.trace().postmortems().len()).sum();
+        anyhow::ensure!(
+            postmortems > 0,
+            "fault injection ran with trace={trace_mode} but no postmortem was captured"
+        );
+        println!("\n# captured {postmortems} postmortem snapshot(s) under fault injection");
     }
     registry.shutdown_all()?;
 

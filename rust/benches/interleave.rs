@@ -15,7 +15,9 @@
 //!   heap allocations on top of the native backend's two per-call output
 //!   buffers (logits + attention mass — its return-by-value API), or the
 //!   row's `steady_decode_allocs` goes nonzero and `aqua benchcheck`
-//!   refuses the file at the *schema* level;
+//!   refuses the file at the *schema* level — and the engine runs with
+//!   `trace=full`, so the bound also proves the flight recorder never
+//!   allocates at steady state;
 //! * **in-flight** — inject a prompt sized at ~max_seq and keep clocking
 //!   decode gaps until it completes. Legacy FIFO (`interleave = false`)
 //!   runs that prefill to completion first, so the batch's ITL spikes by
@@ -38,6 +40,7 @@ use aqua_serve::bench::report::{interleave_path, BenchReport};
 use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
 use aqua_serve::model::config::ModelConfig;
 use aqua_serve::runtime::{BackendSpec, NATIVE_PREFILL_CHUNK};
+use aqua_serve::trace::TraceMode;
 use aqua_serve::util::json::Json;
 use aqua_serve::util::percentile;
 
@@ -101,6 +104,10 @@ fn run_mode(interleave: bool, fast: bool) -> anyhow::Result<ModeOut> {
         batch: BATCH,
         interleave,
         max_batch_prefill_tokens: max_prefill_tokens,
+        // Flight recorder at its most verbose: the no-alloc window below
+        // proves tracing rides the hot loop for free (preallocated ring,
+        // in-place slot overwrites — see `trace::TraceRecorder`).
+        trace: TraceMode::Full,
         ..Default::default()
     };
     let mut engine = Engine::with_spec(&spec, ecfg)?;

@@ -192,7 +192,7 @@ pub fn validate_serving(doc: &Json, strict: bool) -> Result<()> {
         }
         let num_fields = [
             "rate_rps", "sent", "done", "shed", "shed_rate", "tok_per_s", "e2e_p50_ms",
-            "e2e_p99_ms",
+            "e2e_p99_ms", "ttft_p50_ms", "ttft_p99_ms",
         ];
         for f in num_fields {
             if r.get(f).as_f64().is_none() {
@@ -536,6 +536,8 @@ mod tests {
             ("tok_per_s", Json::Num(120.0)),
             ("e2e_p50_ms", Json::Num(8.0)),
             ("e2e_p99_ms", Json::Num(30.0)),
+            ("ttft_p50_ms", Json::Num(2.0)),
+            ("ttft_p99_ms", Json::Num(9.0)),
         ])
     }
 

@@ -42,12 +42,13 @@ use super::batcher::{AdmissionQueue, LaneTable, Queued};
 use super::h2o::H2oPolicy;
 use super::kvcache::LaneKv;
 use super::metrics::Metrics;
-use super::request::{ActiveReq, FinishReason, GenRequest, GenResult};
+use super::request::{ActiveReq, FinishReason, GenRequest, GenResult, ReqTimings};
 use crate::aqua::policy::AquaConfig;
 use crate::kvpool::{budget_pages, KvPoolConfig, PoolLayout, DEFAULT_PAGE_SLOTS};
 use crate::model::sampling::Sampler;
 use crate::runtime::backend::{AquaKnobs, BackendSpec, ExecBackend, LaneError};
 use crate::tensor::softmax::log_softmax_at;
+use crate::trace::{TraceMode, TracePhase, TraceRecorder};
 use crate::util::prng::Rng;
 
 #[derive(Debug, Clone)]
@@ -100,6 +101,10 @@ pub struct EngineConfig {
     /// `step` returns the error — the supervisor turns that into a Failed
     /// deployment instead of silently spinning. Clamped to ≥ 1.
     pub max_consecutive_step_failures: usize,
+    /// Flight-recorder mode (see [`crate::trace`]): `Off` (default, one
+    /// relaxed atomic load per would-be event), `Errors` (failure-path
+    /// phases only), `Sampled(n)` (1-in-N request timelines), `Full`.
+    pub trace: TraceMode,
 }
 
 impl Default for EngineConfig {
@@ -119,6 +124,7 @@ impl Default for EngineConfig {
             waiting_served_ratio: 1.2,
             interleave: true,
             max_consecutive_step_failures: 3,
+            trace: TraceMode::Off,
         }
     }
 }
@@ -244,6 +250,10 @@ pub struct Engine {
     /// reconciliation (`done == served + rejected + cancelled + expired +
     /// failed`) holds across engine rebuilds.
     pub metrics: Arc<Metrics>,
+    /// Flight recorder — shared across supervised incarnations exactly
+    /// like `metrics`, so a postmortem taken after a panic still holds
+    /// the events leading up to it.
+    pub trace: Arc<TraceRecorder>,
     h2o: H2oPolicy,
     /// Resolved KV pool geometry (mirrors the backend's pool).
     kv_layout: PoolLayout,
@@ -285,6 +295,7 @@ impl Engine {
             results: HashMap::new(),
             rng: Rng::new(cfg.seed ^ 0xE17),
             metrics: Arc::new(Metrics::default()),
+            trace: Arc::new(TraceRecorder::new(cfg.trace)),
             h2o,
             kv_layout,
             kv_budget_pages,
@@ -408,6 +419,7 @@ impl Engine {
             return false;
         }
         self.metrics.start_clock();
+        self.trace.record(TracePhase::Enqueue, req.id, -1, req.prompt.len() as u64);
         self.queue.push(req);
         true
     }
@@ -444,6 +456,7 @@ impl Engine {
                         finish: FinishReason::DuplicateId,
                         ttft_us: 0,
                         total_us: 0,
+                        timings: ReqTimings::default(),
                     });
                 }
                 Err(anyhow::anyhow!("request {id} produced no result"))
@@ -517,6 +530,7 @@ impl Engine {
         };
         self.consecutive_failures += 1;
         if self.consecutive_failures >= self.cfg.max_consecutive_step_failures.max(1) {
+            self.trace.record(TracePhase::Escalate, 0, -1, self.consecutive_failures as u64);
             return Err(err.context(format!(
                 "engine failing: {} consecutive step failures",
                 self.consecutive_failures
@@ -545,8 +559,25 @@ impl Engine {
                 failed_lanes.push(lane);
             }
         }
-        for lane in failed_lanes {
+        for &lane in &failed_lanes {
+            let rid = self.active[lane].as_ref().map(|a| a.req.id).unwrap_or(0);
+            self.trace.record(
+                TracePhase::LaneFailure,
+                rid,
+                lane as i32,
+                self.consecutive_failures as u64,
+            );
             self.finish_lane(lane, Some(FinishReason::BackendError));
+        }
+        if !failed_lanes.is_empty() {
+            // Freeze the faulted lane's trailing timeline while it is
+            // still in the ring — the after-the-fact artifact `GET
+            // /trace/postmortem` serves.
+            let blamed = if failed_lanes.len() == 1 { failed_lanes[0] as i32 } else { -1 };
+            self.trace.snapshot_postmortem(&format!("lane failure (contained): {err:#}"), blamed);
+            crate::log_error!(
+                "lane failure contained (blamed lane {blamed}, postmortem captured): {err:#}"
+            );
         }
         Ok(())
     }
@@ -606,6 +637,7 @@ impl Engine {
             FinishReason::DeadlineExpired => self.metrics.record_expired(false),
             _ => self.metrics.record_rejected(),
         }
+        self.trace.record(TracePhase::Retire, id, -1, finish.code());
         self.results.insert(
             id,
             GenResult {
@@ -616,6 +648,7 @@ impl Engine {
                 finish,
                 ttft_us: 0,
                 total_us: 0,
+                timings: ReqTimings::default(),
             },
         );
     }
@@ -684,6 +717,12 @@ impl Engine {
                         total_cap == 0 || active_tokens + want <= total_cap
                     };
                     let Some(entry) = self.queue.pop_past_head(fits) else { break };
+                    self.trace.record(
+                        TracePhase::Overtake,
+                        entry.req.id,
+                        -1,
+                        self.queue.len() as u64,
+                    );
                     match self.try_admit(lane, entry, max_seq) {
                         AdmitOutcome::Placed => continue,
                         // unreachable (`fits` is strictly conservative),
@@ -734,6 +773,7 @@ impl Engine {
         // growth stays under `max_batch_total_tokens`.
         if self.cfg.max_batch_total_tokens > 0 {
             if self.active_worst_case_tokens() + want > self.cfg.max_batch_total_tokens {
+                self.trace.record(TracePhase::Defer, entry.req.id, -1, 0);
                 self.queue.requeue_front(entry);
                 return AdmitOutcome::Deferred;
             }
@@ -772,6 +812,7 @@ impl Engine {
                 if attach.tokens > 0 {
                     self.backend.retire_lane(lane);
                 }
+                self.trace.record(TracePhase::Defer, entry.req.id, -1, 1);
                 self.queue.requeue_front(entry);
                 return AdmitOutcome::Deferred;
             }
@@ -788,13 +829,21 @@ impl Engine {
             // adopted positions are already written and attendable
             self.kv[lane].commit_write(attach.tokens);
             self.metrics.record_prefix_hits(attach.tokens as u64);
+            self.trace.record(TracePhase::PrefixAttach, req.id, lane as i32, attach.tokens as u64);
         }
+        self.trace.record(
+            TracePhase::Admit,
+            req.id,
+            lane as i32,
+            (req.prompt.len() - attach.tokens) as u64,
+        );
         self.active[lane] = Some(ActiveReq {
             prompt_fed: attach.tokens,
             generated: Vec::with_capacity(req.max_new_tokens),
             prompt_logprobs: Vec::with_capacity(req.prompt.len().saturating_sub(1)),
             gen_logprobs: Vec::with_capacity(req.max_new_tokens),
             next_pos: attach.tokens,
+            prefix_hit_tokens: attach.tokens,
             pending_token: -1,
             enqueued_at: entry.enqueued_at,
             started_at: Instant::now(),
@@ -859,6 +908,19 @@ impl Engine {
         self.metrics.record_prefill(t0.elapsed(), real_tokens);
         self.metrics.record_kernels(&out.kernels, false);
         self.metrics.record_kv(&out.kv, self.live_slots_total());
+        self.trace.record(
+            TracePhase::Score,
+            0,
+            out.kernels.dominant_mode() as i32,
+            out.kernels.score_ns,
+        );
+        for lane in 0..b {
+            let n = self.scratch.fed_now[lane];
+            if n > 0 {
+                let rid = self.active[lane].as_ref().map(|a| a.req.id).unwrap_or(0);
+                self.trace.record(TracePhase::PrefillChunk, rid, lane as i32, n as u64);
+            }
+        }
 
         let mut finish_list: Vec<usize> = vec![];
         for lane in 0..b {
@@ -972,6 +1034,13 @@ impl Engine {
         self.metrics.record_decode(t0.elapsed(), live_count);
         self.metrics.record_kernels(&out.kernels, true);
         self.metrics.record_kv(&out.kv, self.live_slots_total());
+        self.trace.record(TracePhase::DecodeBatch, 0, -1, live_count);
+        self.trace.record(
+            TracePhase::Score,
+            0,
+            out.kernels.dominant_mode() as i32,
+            out.kernels.score_ns,
+        );
 
         self.scratch.itl_us.clear();
         let mut finish_list: Vec<usize> = vec![];
@@ -1058,7 +1127,8 @@ impl Engine {
                 FinishReason::Length
             }
         });
-        let total = a.started_at.elapsed();
+        let done_at = Instant::now();
+        let total = done_at.duration_since(a.started_at);
         let ttft = a.first_token_at.map(|t| t.duration_since(a.started_at));
         self.metrics.record_finish(ttft, total);
         match finish {
@@ -1067,6 +1137,28 @@ impl Engine {
             FinishReason::BackendError => self.metrics.record_failed(true, 1),
             _ => {}
         }
+        // Client-visible span breakdown, all measured from *enqueue* so
+        // queue_wait + prefill + decode == total by construction. A lane
+        // that never emitted a token charges its whole admitted span to
+        // prefill (nothing was ever decoded).
+        let queue_wait = a.started_at.duration_since(a.enqueued_at);
+        let (prefill_d, decode_d, client_ttft) = match a.first_token_at {
+            Some(ft) => (
+                ft.duration_since(a.started_at),
+                done_at.duration_since(ft),
+                ft.duration_since(a.enqueued_at),
+            ),
+            None => (total, std::time::Duration::ZERO, std::time::Duration::ZERO),
+        };
+        let timings = ReqTimings {
+            queue_wait_us: queue_wait.as_micros() as u64,
+            prefill_us: prefill_d.as_micros() as u64,
+            decode_us: decode_d.as_micros() as u64,
+            ttft_us: client_ttft.as_micros() as u64,
+            total_us: done_at.duration_since(a.enqueued_at).as_micros() as u64,
+            prefix_hit_tokens: a.prefix_hit_tokens as u64,
+        };
+        self.trace.record(TracePhase::Retire, a.req.id, lane as i32, finish.code());
         self.results.insert(
             a.req.id,
             GenResult {
@@ -1077,6 +1169,7 @@ impl Engine {
                 finish,
                 ttft_us: ttft.map(|t| t.as_micros() as u64).unwrap_or(0),
                 total_us: total.as_micros() as u64,
+                timings,
             },
         );
         self.lanes.release(lane);
@@ -1200,6 +1293,7 @@ impl EngineHandle {
             make_engine,
             RestartPolicy::default(),
             Arc::new(EngineStatus::default()),
+            Arc::new(TraceRecorder::default()),
         )
     }
 
@@ -1209,21 +1303,24 @@ impl EngineHandle {
     /// dead incarnation produced it, `EngineFailed` otherwise — nobody
     /// hangs to an HTTP deadline), publishes health through `status`,
     /// and rebuilds the engine up to `policy.max_restarts` times with
-    /// capped exponential backoff. Metrics are shared across
-    /// incarnations, so counters survive restarts and outcome
-    /// reconciliation holds for the deployment's whole lifetime.
+    /// capped exponential backoff. Metrics *and the trace recorder* are
+    /// shared across incarnations, so counters survive restarts, outcome
+    /// reconciliation holds for the deployment's whole lifetime, and
+    /// postmortems from a dead incarnation stay readable.
     pub fn spawn_supervised<F>(
         make_engine: F,
         policy: RestartPolicy,
         status: Arc<EngineStatus>,
+        trace: Arc<TraceRecorder>,
     ) -> EngineHandle
     where
         F: Fn() -> Result<Engine> + Send + 'static,
     {
         let (cmd_tx, cmd_rx) = mpsc::channel::<EngineCmd>();
         let (res_tx, result_rx) = mpsc::channel::<GenResult>();
-        let join =
-            std::thread::spawn(move || supervise(make_engine, policy, status, cmd_rx, res_tx));
+        let join = std::thread::spawn(move || {
+            supervise(make_engine, policy, status, trace, cmd_rx, res_tx)
+        });
         EngineHandle { cmd_tx, result_rx, join }
     }
 }
@@ -1238,6 +1335,7 @@ fn engine_failed_result(id: u64) -> GenResult {
         finish: FinishReason::EngineFailed,
         ttft_us: 0,
         total_us: 0,
+        timings: ReqTimings::default(),
     }
 }
 
@@ -1267,6 +1365,7 @@ fn supervise<F>(
     make_engine: F,
     policy: RestartPolicy,
     status: Arc<EngineStatus>,
+    trace: Arc<TraceRecorder>,
     cmd_rx: mpsc::Receiver<EngineCmd>,
     res_tx: mpsc::Sender<GenResult>,
 ) where
@@ -1284,10 +1383,11 @@ fn supervise<F>(
         let engine = match make_engine() {
             Ok(mut e) => {
                 e.metrics = metrics.clone();
+                e.trace = trace.clone();
                 Some(e)
             }
             Err(e) => {
-                eprintln!("engine init failed: {e:#}");
+                crate::log_error!("engine init failed: {e:#}");
                 None
             }
         };
@@ -1298,8 +1398,14 @@ fn supervise<F>(
             }));
             match outcome {
                 Ok(Ok(Exit::Clean)) => return,
-                Ok(Err(e)) => eprintln!("engine failed: {e:#}"),
-                Err(_) => eprintln!("engine panicked (caught by supervisor)"),
+                Ok(Err(e)) => {
+                    crate::log_error!("engine failed (postmortem captured): {e:#}");
+                    trace.snapshot_postmortem(&format!("engine failed: {e:#}"), -1);
+                }
+                Err(_) => {
+                    crate::log_error!("engine panicked (caught by supervisor, postmortem captured)");
+                    trace.snapshot_postmortem("engine panicked (caught by supervisor)", -1);
+                }
             }
             // Abnormal exit: answer every undelivered waiter now — a real
             // result where the dead incarnation finished one, terminal
@@ -1329,6 +1435,7 @@ fn supervise<F>(
         std::thread::sleep(backoff);
         backoff = (backoff * 2).min(policy.backoff_max);
         status.restarts.fetch_add(1, Ordering::Relaxed);
+        trace.record(TracePhase::EngineRestart, 0, -1, status.restarts());
     }
 }
 
@@ -1375,6 +1482,7 @@ fn incarnation_loop(
                             finish: FinishReason::DuplicateId,
                             ttft_us: 0,
                             total_us: 0,
+                            timings: ReqTimings::default(),
                         });
                     }
                 }

@@ -9,9 +9,9 @@ use std::time::Duration;
 use crate::kvpool::KvPoolGauges;
 use crate::runtime::KernelCounters;
 
-/// Inter-token-latency histogram resolution: geometric buckets at
-/// `floor(4·log2(µs))`, i.e. ~19% wide — fixed-size so the steady-state
-/// decode loop records without allocating.
+/// Latency histogram resolution (shared by the ITL and TTFT stores):
+/// geometric buckets at `floor(4·log2(µs))`, i.e. ~19% wide — fixed-size
+/// so the steady-state decode loop records without allocating.
 const ITL_BUCKETS: usize = 256;
 
 fn itl_bucket(us: u64) -> usize {
@@ -82,7 +82,12 @@ struct Inner {
     itl_count: u64,
     decode_time: Duration,
     prefill_time: Duration,
-    ttft_us: Vec<f64>,
+    /// TTFT histogram (lazily sized to `ITL_BUCKETS`, same geometric
+    /// buckets as ITL) with an exact-sum side channel for the mean —
+    /// bounded storage no matter how many requests an engine serves.
+    ttft_hist: Vec<u64>,
+    ttft_sum_us: f64,
+    ttft_count: u64,
     req_latency_us: Vec<f64>,
     h2o_evictions: u64,
     kernels: KernelCounters,
@@ -231,7 +236,14 @@ impl Metrics {
         let mut i = self.locked();
         i.requests_done += 1;
         if let Some(t) = ttft {
-            i.ttft_us.push(t.as_micros() as f64);
+            if i.ttft_hist.is_empty() {
+                i.ttft_hist.resize(ITL_BUCKETS, 0);
+            }
+            let us = t.as_micros() as u64;
+            let b = itl_bucket(us);
+            i.ttft_hist[b] += 1;
+            i.ttft_sum_us += us as f64;
+            i.ttft_count += 1;
         }
         i.req_latency_us.push(total.as_micros() as f64);
     }
@@ -379,9 +391,13 @@ impl Metrics {
             itl_p99_ms: hist_percentile_ms(&i.itl_hist, i.itl_count, 99.0),
             decode_time_s: decode_s,
             prefill_time_s: i.prefill_time.as_secs_f64(),
-            mean_ttft_ms: mean(&i.ttft_us) / 1e3,
-            p50_ttft_ms: percentile(&i.ttft_us, 50.0) / 1e3,
-            p99_ttft_ms: percentile(&i.ttft_us, 99.0) / 1e3,
+            mean_ttft_ms: if i.ttft_count > 0 {
+                i.ttft_sum_us / i.ttft_count as f64 / 1e3
+            } else {
+                0.0
+            },
+            p50_ttft_ms: hist_percentile_ms(&i.ttft_hist, i.ttft_count, 50.0),
+            p99_ttft_ms: hist_percentile_ms(&i.ttft_hist, i.ttft_count, 99.0),
             mean_latency_ms: mean(&i.req_latency_us) / 1e3,
             decode_tok_per_s: if decode_s > 0.0 {
                 i.tokens_generated as f64 / decode_s
@@ -730,6 +746,29 @@ mod tests {
                 + a.requests_expired
                 + a.requests_failed
         );
+    }
+
+    #[test]
+    fn ttft_histogram_is_bounded_and_percentiled() {
+        let m = Metrics::default();
+        // 9 fast first tokens near 5ms, one 50ms straggler
+        for _ in 0..9 {
+            m.record_finish(Some(Duration::from_millis(5)), Duration::from_millis(20));
+        }
+        m.record_finish(Some(Duration::from_millis(50)), Duration::from_millis(80));
+        let s = m.snapshot();
+        // the mean stays exact (sum side channel), percentiles are exact
+        // to one ~19%-wide bucket
+        let exact_mean = (9.0 * 5.0 + 50.0) / 10.0;
+        assert!((s.mean_ttft_ms - exact_mean).abs() < 1e-6, "mean {}", s.mean_ttft_ms);
+        assert!(s.p50_ttft_ms > 4.0 && s.p50_ttft_ms < 6.0, "p50 {} ≉ 5ms", s.p50_ttft_ms);
+        assert!(s.p99_ttft_ms > 40.0 && s.p99_ttft_ms < 60.0, "p99 {} ≉ 50ms", s.p99_ttft_ms);
+        // score-only finishes (no first token) contribute no TTFT sample
+        let m2 = Metrics::default();
+        m2.record_finish(None, Duration::from_millis(5));
+        let s2 = m2.snapshot();
+        assert_eq!(s2.mean_ttft_ms, 0.0);
+        assert_eq!(s2.p99_ttft_ms, 0.0);
     }
 
     #[test]

@@ -71,6 +71,46 @@ pub enum FinishReason {
     EngineFailed,
 }
 
+impl FinishReason {
+    /// Stable small integer for the trace `Retire` event's payload word.
+    pub fn code(&self) -> u64 {
+        match self {
+            FinishReason::Length => 0,
+            FinishReason::Stop => 1,
+            FinishReason::PromptTooLong => 2,
+            FinishReason::OverKvBudget => 3,
+            FinishReason::DuplicateId => 4,
+            FinishReason::BackendError => 5,
+            FinishReason::Cancelled => 6,
+            FinishReason::DeadlineExpired => 7,
+            FinishReason::EngineFailed => 8,
+        }
+    }
+}
+
+/// Per-request wall-clock breakdown, computed from the request's own
+/// lifecycle instants when it retires (opt-in over HTTP via
+/// `"timings": true` on `POST /generate`). All spans are measured from
+/// *enqueue* — client-visible time — so by construction
+/// `queue_wait + prefill + decode == total` (±µs rounding) and
+/// `ttft <= total`. Note [`GenResult::ttft_us`] keeps its historical
+/// admission-relative meaning; `ttft_us` here is enqueue-relative.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReqTimings {
+    /// Enqueue → lane admission.
+    pub queue_wait_us: u64,
+    /// Admission → first emitted token (or retire, if none was emitted).
+    pub prefill_us: u64,
+    /// First emitted token → retire (0 if none was emitted).
+    pub decode_us: u64,
+    /// Enqueue → first emitted token (0 if none was emitted).
+    pub ttft_us: u64,
+    /// Enqueue → retire.
+    pub total_us: u64,
+    /// Prompt tokens served from the prefix cache instead of prefill.
+    pub prefix_hit_tokens: u64,
+}
+
 /// Completed request.
 #[derive(Debug, Clone)]
 pub struct GenResult {
@@ -86,9 +126,13 @@ pub struct GenResult {
     /// Log-prob of each generated token.
     pub gen_logprobs: Vec<f32>,
     pub finish: FinishReason,
-    /// Wall-clock metrics.
+    /// Wall-clock metrics (admission-relative TTFT; see [`ReqTimings`]
+    /// for the enqueue-relative breakdown).
     pub ttft_us: u64,
     pub total_us: u64,
+    /// Client-visible span breakdown (all-zero for requests that never
+    /// reached the engine, e.g. duplicate-id refusals).
+    pub timings: ReqTimings,
 }
 
 /// Per-lane request state inside the engine.
@@ -103,6 +147,8 @@ pub(crate) struct ActiveReq {
     pub gen_logprobs: Vec<f32>,
     /// Logical position of the next token to write (monotone, drives RoPE).
     pub next_pos: usize,
+    /// Prompt tokens adopted from the prefix cache at admission.
+    pub prefix_hit_tokens: usize,
     /// Token to feed on the next decode step.
     pub pending_token: i32,
     /// When the request entered the queue — `deadline_ms` is measured

@@ -36,6 +36,8 @@
 //! * [`registry`] — multi-model fleet: named deployments (engine thread +
 //!   result pump + bounded admission) behind one mutable registry.
 //! * [`server`] — minimal HTTP/1.1 front-end, routing over the registry.
+//! * [`trace`] — per-engine flight recorder: compact event ring, request
+//!   span timelines, postmortem dumps on lane/engine failure.
 //! * [`eval`] — perplexity + SynthBench harness (the paper's tables).
 //! * [`bench`] — criterion-lite measurement harness.
 
@@ -55,6 +57,7 @@ pub mod runtime;
 pub mod server;
 pub mod tensor;
 pub mod tokenizer;
+pub mod trace;
 pub mod util;
 
 pub use anyhow::{anyhow, bail, Context, Result};

@@ -40,6 +40,7 @@ common flags: --backend auto|native|sharded|pjrt --threads N --seed N --artifact
 serve fleet: --fleet fleet.json | repeated --model name=N,backend=B,k=R,threads=T,batch=B,queue=Q,kv_mb=M,prefix=0|1,prefix_pages=P,prefill_tokens=N,total_tokens=N,wsr=R,interleave=0|1 [--default-model N] (plain --model NAME [--kv-budget-mb M] [--prefix-cache] [--prefix-pages P] serves one deployment named 'default'; kv_mb caps resident KV pages — over-budget requests shed with a memory-pressure 429; prefix enables page-granular prefix sharing: one prefill's KV pages serve every lane with the prefix)
 serve scheduling: --max-prefill-tokens N (per-step prefill token budget, 0 = unlimited) --max-total-tokens N (admission cap on worst-case batch tokens, 0 = unlimited) --waiting-ratio R (queue pressure threshold for bounded head overtakes) --no-interleave (legacy FIFO run-to-completion; disables chunked-prefill/decode interleaving)
 serve lifecycle: --restart N (engine rebuilds after a crash; 0 = fail fast) --restart-backoff-ms MS --deadline-ms MS (default per-request deadline from enqueue, 0 = none; requests may override via the JSON 'deadline_ms' field) --max-step-failures N (consecutive failing passes before the engine is declared failed); kv-spec keys restart=,restart_backoff_ms=,deadline_ms=,max_step_failures= set the same per deployment
+serve tracing: --trace off|errors|sampled:N|full (flight recorder; kv-spec key trace= sets it per deployment). GET /trace?model=&n= dumps recent events (format=jsonl → Perfetto-loadable), GET /trace/postmortem serves failure snapshots, and 'timings': true on /generate returns the request's span breakdown; AQUA_LOG=level,module=level tunes stderr logging
 chaos: --backend fault:<inner>,err_every=N,err_p=R,err_count=N,err_lane=L,unattributed=1,panic_at=N,delay_every=N,delay_ms=MS,seed=N (deterministic fault injection over any backend; inside a --model kv-spec use ';' between fault params: backend=fault:native;err_every=50)";
 
 fn main() {
@@ -122,6 +123,7 @@ fn fleet_registry(args: &Args, arts_dir: &str) -> Result<ModelRegistry> {
             restart_backoff_ms: args.u64("restart-backoff-ms", 50)?,
             deadline_ms: args.u64("deadline-ms", 0)?,
             max_step_failures: args.usize("max-step-failures", 3)?,
+            trace: args.str("trace", "off"),
             aqua: aqua_from(args)?,
         })?;
     } else {

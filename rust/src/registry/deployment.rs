@@ -38,6 +38,7 @@ use crate::coordinator::engine::{Engine, EngineCmd, EngineHandle, EngineStatus, 
 use crate::coordinator::metrics::Snapshot;
 use crate::coordinator::{GenRequest, GenResult};
 use crate::kvpool::budget_pages;
+use crate::trace::TraceRecorder;
 
 /// Default orphan TTL: results not picked up within this window are swept
 /// (the HTTP worker's deadline is shorter, so a live client never loses a
@@ -153,6 +154,9 @@ pub struct Deployment {
     /// Live engine health + restart counters, published by the supervisor
     /// (`GET /models`, `/healthz`, and the admission gate read this).
     status: Arc<EngineStatus>,
+    /// Flight recorder, shared across engine incarnations like `Metrics`
+    /// (`GET /trace`, `GET /trace/postmortem`).
+    trace: Arc<TraceRecorder>,
     results: Arc<ResultStore>,
     next_id: AtomicU64,
     in_flight: Arc<AtomicU64>,
@@ -213,6 +217,7 @@ impl Deployment {
         }
         let recipe = bspec.recipe();
         let status = Arc::new(EngineStatus::default());
+        let trace = Arc::new(TraceRecorder::new(spec.trace_mode()));
         // Supervised spawn: the closure is `Fn` because a restart rebuilds
         // the backend from the same Send recipe — every incarnation is
         // config-identical to the first.
@@ -220,6 +225,7 @@ impl Deployment {
             move || Engine::new(recipe.build()?, ecfg.clone()),
             spec.restart_policy(),
             status.clone(),
+            trace.clone(),
         );
 
         let results = Arc::new(ResultStore::default());
@@ -269,6 +275,7 @@ impl Deployment {
             max_seq,
             cmd_tx,
             status,
+            trace,
             results,
             next_id: AtomicU64::new(1),
             in_flight,
@@ -434,6 +441,12 @@ impl Deployment {
         self.status.health()
     }
 
+    /// The deployment's flight recorder (shared across engine
+    /// incarnations — `GET /trace` and `GET /trace/postmortem` read it).
+    pub fn trace(&self) -> &Arc<TraceRecorder> {
+        &self.trace
+    }
+
     /// Blocking result pickup with a deadline (the HTTP worker path).
     pub fn wait_result(&self, id: u64, deadline: Duration) -> Option<GenResult> {
         let end = Instant::now() + deadline;
@@ -522,6 +535,7 @@ mod tests {
             finish: FinishReason::Length,
             ttft_us: 0,
             total_us: 0,
+            timings: crate::coordinator::request::ReqTimings::default(),
         }
     }
 

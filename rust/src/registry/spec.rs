@@ -77,6 +77,11 @@ pub struct DeploymentSpec {
     /// Consecutive failing engine passes tolerated before the engine is
     /// declared failed (kv key `max_step_failures`; clamped ≥ 1).
     pub max_step_failures: usize,
+    /// Flight-recorder mode: `off | errors | sampled:N | full` (kv/JSON
+    /// key `trace`). Validated via `TraceMode::parse`; the recorder is an
+    /// `Arc` shared across engine incarnations (like metrics), surfaced
+    /// at `GET /trace` / `GET /trace/postmortem`.
+    pub trace: String,
     /// AQUA operating point for every request this deployment serves.
     pub aqua: AquaConfig,
 }
@@ -102,6 +107,7 @@ impl Default for DeploymentSpec {
             restart_backoff_ms: 50,
             deadline_ms: 0,
             max_step_failures: 3,
+            trace: "off".to_string(),
             aqua: AquaConfig::default(),
         }
     }
@@ -113,7 +119,8 @@ impl DeploymentSpec {
     /// `queue` (max in-flight), `kv_mb`, `prefix` (0/1 prefix sharing),
     /// `prefix_pages`, `prefill_tokens`, `total_tokens`, `wsr`,
     /// `interleave` (0/1), `restart`, `restart_backoff_ms`,
-    /// `deadline_ms`, `max_step_failures`, `k`/`k_ratio`, `s`/`s_ratio`,
+    /// `deadline_ms`, `max_step_failures`, `trace`
+    /// (off|errors|sampled:N|full), `k`/`k_ratio`, `s`/`s_ratio`,
     /// `h2o`/`h2o_ratio`, `proj` (0/1).
     ///
     /// Note the comma is the pair separator, so fault-backend parameters
@@ -188,6 +195,7 @@ impl DeploymentSpec {
                     spec.max_step_failures =
                         v.parse().with_context(|| format!("bad max_step_failures '{v}'"))?
                 }
+                "trace" => spec.trace = v.to_string(),
                 "k" | "k_ratio" => {
                     spec.aqua.k_ratio = v.parse().with_context(|| format!("bad k_ratio '{v}'"))?
                 }
@@ -261,6 +269,9 @@ impl DeploymentSpec {
         if let Some(v) = j.get("max_step_failures").as_i64() {
             spec.max_step_failures = v.max(0) as usize;
         }
+        if let Some(v) = j.get("trace").as_str() {
+            spec.trace = v.to_string();
+        }
         if let Some(v) = j.get("k_ratio").as_f64() {
             spec.aqua.k_ratio = v;
         }
@@ -298,6 +309,7 @@ impl DeploymentSpec {
             ("restart_backoff_ms", Json::Num(self.restart_backoff_ms as f64)),
             ("deadline_ms", Json::Num(self.deadline_ms as f64)),
             ("max_step_failures", Json::Num(self.max_step_failures as f64)),
+            ("trace", Json::Str(self.trace.clone())),
             ("k_ratio", Json::Num(self.aqua.k_ratio)),
             ("s_ratio", Json::Num(self.aqua.s_ratio)),
             ("h2o_ratio", Json::Num(self.aqua.h2o_ratio)),
@@ -358,7 +370,14 @@ impl DeploymentSpec {
                 bail!("deployment '{}': {label} {v} outside [0, 1]", self.name);
             }
         }
+        crate::trace::TraceMode::parse(&self.trace)
+            .with_context(|| format!("deployment '{}'", self.name))?;
         Ok(())
+    }
+
+    /// The parsed flight-recorder mode (validate() guarantees this parses).
+    pub fn trace_mode(&self) -> crate::trace::TraceMode {
+        crate::trace::TraceMode::parse(&self.trace).unwrap_or_default()
     }
 
     /// Resolve into a backend spec. Native/sharded weights are built here,
@@ -383,6 +402,7 @@ impl DeploymentSpec {
             waiting_served_ratio: self.waiting_served_ratio,
             interleave: self.interleave,
             max_consecutive_step_failures: self.max_step_failures.max(1),
+            trace: self.trace_mode(),
             ..Default::default()
         }
     }
@@ -505,6 +525,26 @@ mod tests {
         assert_eq!(d.restart, 0);
         assert_eq!(d.deadline_ms, 0);
         assert_eq!(d.max_step_failures, 3);
+    }
+
+    #[test]
+    fn trace_knob_parses_on_every_surface() {
+        use crate::trace::TraceMode;
+        assert_eq!(DeploymentSpec::default().trace, "off");
+        let spec = DeploymentSpec::parse_kv("name=a,trace=sampled:8").unwrap();
+        assert_eq!(spec.trace, "sampled:8");
+        assert_eq!(spec.trace_mode(), TraceMode::Sampled(8));
+        let back = DeploymentSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // the knob reaches the engine config; bad modes rejected on both
+        // surfaces
+        assert_eq!(spec.engine_config().trace, TraceMode::Sampled(8));
+        assert!(DeploymentSpec::parse_kv("name=a,trace=loud").is_err());
+        assert!(DeploymentSpec::parse_kv("name=a,trace=sampled:0").is_err());
+        let j = Json::parse(r#"{"name": "a", "trace": "errors"}"#).unwrap();
+        assert_eq!(DeploymentSpec::from_json(&j).unwrap().trace_mode(), TraceMode::Errors);
+        let bad = Json::parse(r#"{"name": "a", "trace": "shouty"}"#).unwrap();
+        assert!(DeploymentSpec::from_json(&bad).is_err());
     }
 
     #[test]

@@ -107,6 +107,19 @@ impl KernelCounters {
     pub fn calls(&self) -> u64 {
         self.dense + self.sparse + self.packed
     }
+
+    /// Which score path dominated this step, as a small stable code for
+    /// the trace `Score` event: 0 dense, 1 sparse, 2 packed, 3 mixed (or
+    /// none — e.g. PJRT's opaque fused executables).
+    pub fn dominant_mode(&self) -> u64 {
+        let nonzero = [self.dense, self.sparse, self.packed];
+        match nonzero.iter().filter(|&&c| c > 0).count() {
+            1 if self.dense > 0 => 0,
+            1 if self.sparse > 0 => 1,
+            1 => 2,
+            _ => 3,
+        }
+    }
 }
 
 /// Result of a prefix-cache attach attempt (`ExecBackend::attach_prefix`).

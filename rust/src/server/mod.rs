@@ -14,7 +14,14 @@
 //! `GET  /metrics` → full snapshots incl. score-kernel variant counters
 //!     (which AQUA kernel — dense/sparse/packed — actually ran per model),
 //!     admission queue-depth/shed counters, and the KV-pool gauges
-//!     (headroom `kv_pages_free`, `kv_shared_pages`, `kv_cow_copies`)
+//!     (headroom `kv_pages_free`, `kv_shared_pages`, `kv_cow_copies`);
+//!     `?format=prometheus` renders the same numbers as a Prometheus
+//!     exposition (`# HELP`/`# TYPE` per series, label values escaped)
+//! `GET  /trace?model=&n=` → the deployment's last N flight-recorder
+//!     events (`?format=jsonl` streams a Chrome-trace/Perfetto-loadable
+//!     JSONL dump — recipe in BENCHES.md)
+//! `GET  /trace/postmortem` → failure snapshots (blamed lane + trailing
+//!     events) captured on lane failure / engine death; `?model=` filters
 //! `GET  /models` → deployment specs + live status
 //! `POST /models {spec}` → add a deployment at runtime (409 on name clash)
 //! `DELETE /models/{name}` → drain in-flight requests, join the engine
@@ -40,6 +47,7 @@ use crate::coordinator::metrics::Snapshot;
 use crate::coordinator::{FinishReason, GenRequest, Health};
 use crate::registry::{Admission, AdmissionStats, DeploymentSpec, ModelRegistry, ShedReason};
 use crate::tokenizer::ByteTokenizer;
+use crate::trace::events_jsonl;
 use crate::util::json::Json;
 use http::{Request, Response};
 
@@ -110,10 +118,14 @@ pub fn route(req: &Request, registry: &ModelRegistry) -> Response {
 /// Dispatch one request against the fleet. `conn` (when present) lets
 /// `/generate` detect client disconnect mid-wait and cancel the request.
 pub fn route_conn(req: &Request, conn: Option<&TcpStream>, registry: &ModelRegistry) -> Response {
-    match (req.method.as_str(), req.path.as_str()) {
+    // the path may carry a query string (`/trace?model=m&n=64`)
+    let (path, query) = req.path.split_once('?').unwrap_or((req.path.as_str(), ""));
+    match (req.method.as_str(), path) {
         ("GET", "/healthz") => healthz(registry),
-        ("GET", "/stats") => stats_route(registry, false),
-        ("GET", "/metrics") => stats_route(registry, true),
+        ("GET", "/stats") => stats_route(registry, false, query),
+        ("GET", "/metrics") => stats_route(registry, true, query),
+        ("GET", "/trace") => trace_route(query, registry),
+        ("GET", "/trace/postmortem") => trace_postmortem(query, registry),
         ("POST", "/generate") => generate(req, conn, registry),
         ("GET", "/models") => list_models(registry),
         ("POST", "/models") => add_model(req, registry),
@@ -123,6 +135,15 @@ pub fn route_conn(req: &Request, conn: Option<&TcpStream>, registry: &ModelRegis
         },
         _ => Response::text(404, "not found"),
     }
+}
+
+/// First value of `key` in a raw query string (no percent-decoding — the
+/// trace/metrics parameters are plain identifiers).
+fn query_param(query: &str, key: &str) -> Option<String> {
+    query.split('&').find_map(|pair| {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        (k == key).then(|| v.to_string())
+    })
 }
 
 fn health_str(h: Health) -> &'static str {
@@ -177,6 +198,8 @@ fn generate(req: &Request, conn: Option<&TcpStream>, registry: &ModelRegistry) -
     }
     // per-request deadline (ms from enqueue, 0 = the spec's default)
     r.deadline_ms = body.get("deadline_ms").as_i64().unwrap_or(0).max(0) as u64;
+    // opt-in span breakdown in the response (`"timings": true`)
+    let want_timings = body.get("timings").as_bool() == Some(true);
     match dep.submit(r) {
         Ok(Admission::Accepted) => {}
         Ok(Admission::Shed(ShedReason::Capacity)) => {
@@ -260,20 +283,92 @@ fn generate(req: &Request, conn: Option<&TcpStream>, registry: &ModelRegistry) -
         ),
         _ => {
             let text = tok.decode(&res.tokens);
-            Response::json(
-                200,
-                &Json::obj(vec![
-                    ("id", Json::Num(id as f64)),
-                    ("model", Json::Str(dep.spec.name.clone())),
-                    ("text", Json::Str(text)),
-                    ("tokens", Json::Num(res.tokens.len() as f64)),
-                    ("finish", Json::Str(format!("{:?}", res.finish))),
-                    ("ttft_us", Json::Num(res.ttft_us as f64)),
-                    ("total_us", Json::Num(res.total_us as f64)),
-                ]),
-            )
+            let mut fields = vec![
+                ("id", Json::Num(id as f64)),
+                ("model", Json::Str(dep.spec.name.clone())),
+                ("text", Json::Str(text)),
+                ("tokens", Json::Num(res.tokens.len() as f64)),
+                ("finish", Json::Str(format!("{:?}", res.finish))),
+                ("ttft_us", Json::Num(res.ttft_us as f64)),
+                ("total_us", Json::Num(res.total_us as f64)),
+            ];
+            if want_timings {
+                // enqueue-relative spans: queue_wait + prefill + decode
+                // reconciles with total (±µs rounding), ttft ≤ total
+                let t = &res.timings;
+                fields.push((
+                    "timings",
+                    Json::obj(vec![
+                        ("queue_wait_ms", Json::Num(t.queue_wait_us as f64 / 1e3)),
+                        ("prefill_ms", Json::Num(t.prefill_us as f64 / 1e3)),
+                        ("decode_ms", Json::Num(t.decode_us as f64 / 1e3)),
+                        ("ttft_ms", Json::Num(t.ttft_us as f64 / 1e3)),
+                        ("total_ms", Json::Num(t.total_us as f64 / 1e3)),
+                        ("prefix_hit_tokens", Json::Num(t.prefix_hit_tokens as f64)),
+                    ]),
+                ));
+            }
+            Response::json(200, &Json::obj(fields))
         }
     }
+}
+
+/// `GET /trace?model=&n=&format=` — the deployment's most recent flight-
+/// recorder events, oldest-first. `format=jsonl` emits one Chrome-trace
+/// instant event per line (load in Perfetto / chrome://tracing).
+fn trace_route(query: &str, registry: &ModelRegistry) -> Response {
+    let model = query_param(query, "model");
+    let Some(dep) = registry.get(model.as_deref()) else {
+        return match model {
+            Some(m) => Response::text(404, &format!("unknown model '{m}'")),
+            None => Response::text(404, "no models deployed"),
+        };
+    };
+    let n = query_param(query, "n").and_then(|v| v.parse::<usize>().ok()).unwrap_or(256);
+    let events = dep.trace().recent(n);
+    if query_param(query, "format").as_deref() == Some("jsonl") {
+        return Response::text(200, &events_jsonl(&events));
+    }
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("model", Json::Str(dep.spec.name.clone())),
+            ("mode", Json::Str(dep.trace().mode().as_string())),
+            ("total_recorded", Json::Num(dep.trace().total_recorded() as f64)),
+            ("events", Json::Arr(events.iter().map(|e| e.to_json()).collect())),
+        ]),
+    )
+}
+
+/// `GET /trace/postmortem[?model=]` — failure snapshots (blamed lane +
+/// the trailing events leading up to the failure) per deployment.
+fn trace_postmortem(query: &str, registry: &ModelRegistry) -> Response {
+    let model = query_param(query, "model");
+    if let Some(m) = model.as_deref() {
+        if registry.get(Some(m)).is_none() {
+            return Response::text(404, &format!("unknown model '{m}'"));
+        }
+    }
+    let mut total = 0usize;
+    let mut models = std::collections::BTreeMap::new();
+    for dep in registry.deployments() {
+        if model.as_deref().is_some_and(|m| m != dep.spec.name) {
+            continue;
+        }
+        let pms = dep.trace().postmortems();
+        total += pms.len();
+        models.insert(
+            dep.spec.name.clone(),
+            Json::Arr(pms.iter().map(|p| p.to_json()).collect()),
+        );
+    }
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("postmortems_total", Json::Num(total as f64)),
+            ("models", Json::Obj(models)),
+        ]),
+    )
 }
 
 /// The engine-snapshot fields both `/stats` (headline) and `/metrics`
@@ -286,6 +381,8 @@ fn snapshot_fields(s: &Snapshot, full: bool) -> Vec<(&'static str, Json)> {
         ("decode_tok_per_s", Json::Num(s.decode_tok_per_s)),
         ("mean_ttft_ms", Json::Num(s.mean_ttft_ms)),
         ("p99_ttft_ms", Json::Num(s.p99_ttft_ms)),
+        ("ttft_p50_ms", Json::Num(s.p50_ttft_ms)),
+        ("ttft_p99_ms", Json::Num(s.p99_ttft_ms)),
         ("h2o_evictions", Json::Num(s.h2o_evictions as f64)),
         ("kv_resident_bytes", Json::Num(s.kv_resident_bytes as f64)),
         ("prefix_hit_tokens", Json::Num(s.prefix_hit_tokens as f64)),
@@ -346,7 +443,7 @@ fn admission_fields(a: &AdmissionStats, full: bool) -> Vec<(&'static str, Json)>
     fields
 }
 
-fn stats_route(registry: &ModelRegistry, full: bool) -> Response {
+fn stats_route(registry: &ModelRegistry, full: bool, query: &str) -> Response {
     let mut fleet = Snapshot::default();
     let mut fleet_adm = AdmissionStats::default();
     // `kv_pages_total = 0` is the "unlimited" sentinel: the fleet total is
@@ -396,7 +493,92 @@ fn stats_route(registry: &ModelRegistry, full: bool) -> Response {
         Some(d) => fields.push(("default_model", Json::Str(d))),
         None => fields.push(("default_model", Json::Null)),
     }
-    Response::json(200, &Json::obj(fields))
+    let doc = Json::obj(fields);
+    if query_param(query, "format").as_deref() == Some("prometheus") {
+        return Response::text(200, &prometheus_render(&doc));
+    }
+    Response::json(200, &doc)
+}
+
+/// Escape a Prometheus label value: backslash, double-quote and newline
+/// must be backslash-escaped inside the quoted label string.
+fn prometheus_escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Monotone counters get `# TYPE … counter`; everything else is a gauge
+/// (rates, percentiles, occupancy, pool headroom all move both ways).
+fn prometheus_kind(name: &str) -> &'static str {
+    if name.ends_with("_total")
+        || name.starts_with("requests_")
+        || matches!(
+            name,
+            "tokens_generated"
+                | "h2o_evictions"
+                | "prefix_hit_tokens"
+                | "lane_failures"
+                | "sched_steps"
+                | "decode_calls"
+                | "prefill_calls"
+                | "engine_restarts"
+                | "results_swept"
+                | "kv_cow_copies"
+                | "kernel_dense"
+                | "kernel_sparse"
+                | "kernel_packed"
+        )
+    {
+        "counter"
+    } else {
+        "gauge"
+    }
+}
+
+/// Render a `/stats`-shaped JSON document as a Prometheus text exposition:
+/// fleet-level numeric fields become unlabeled series, per-model numeric
+/// fields become the same series labeled `{model="…"}`, every series gets
+/// exactly one `# HELP` + `# TYPE` header. Non-numeric fields (health,
+/// backend, default_model) are skipped — Prometheus samples are numbers.
+fn prometheus_render(doc: &Json) -> String {
+    // series name → (unlabeled fleet value?, per-model values)
+    let mut series: std::collections::BTreeMap<String, (Option<f64>, Vec<(String, f64)>)> =
+        std::collections::BTreeMap::new();
+    if let Json::Obj(top) = doc {
+        for (k, v) in top {
+            match v {
+                Json::Num(n) => series.entry(k.clone()).or_default().0 = Some(*n),
+                Json::Obj(models) if k == "models" => {
+                    for (model, fields) in models {
+                        if let Json::Obj(f) = fields {
+                            for (fk, fv) in f {
+                                if let Json::Num(n) = fv {
+                                    series
+                                        .entry(fk.clone())
+                                        .or_default()
+                                        .1
+                                        .push((model.clone(), *n));
+                                }
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    let mut out = String::new();
+    for (name, (fleet, per_model)) in &series {
+        let metric = format!("aqua_{name}");
+        out.push_str(&format!("# HELP {metric} aqua-serve `{name}` (fleet and per-model).\n"));
+        out.push_str(&format!("# TYPE {metric} {}\n", prometheus_kind(name)));
+        if let Some(v) = fleet {
+            out.push_str(&format!("{metric} {v}\n"));
+        }
+        for (model, v) in per_model {
+            out.push_str(&format!("{metric}{{model=\"{}\"}} {v}\n", prometheus_escape(model)));
+        }
+    }
+    out
 }
 
 fn list_models(registry: &ModelRegistry) -> Response {
@@ -505,6 +687,110 @@ mod tests {
         assert!(mdoc.get("queue_wait_p99_ms").as_f64().is_some());
         assert!(mdoc.get("prefill_tokens_per_step").as_f64().is_some());
         assert!(mdoc.get("sched_steps").as_i64().is_some());
+    }
+
+    #[test]
+    fn query_strings_route_and_trace_endpoints_respond() {
+        let reg = ModelRegistry::new("no-such-dir");
+        // query strings must not break path matching
+        assert_eq!(route(&request("GET", "/stats?x=1", ""), &reg).status, 200);
+        // empty fleet: /trace has no default model, postmortem list is empty
+        assert_eq!(route(&request("GET", "/trace", ""), &reg).status, 404);
+        let pm = route(&request("GET", "/trace/postmortem", ""), &reg);
+        assert_eq!(pm.status, 200);
+        let pmdoc = Json::parse(&pm.body).unwrap();
+        assert_eq!(pmdoc.get("postmortems_total").as_i64(), Some(0));
+        assert_eq!(route(&request("GET", "/trace/postmortem?model=nope", ""), &reg).status, 404);
+
+        let spec = r#"{"name": "t1", "backend": "native", "batch": 2, "k_ratio": 0.5, "trace": "full"}"#;
+        assert_eq!(route(&request("POST", "/models", spec), &reg).status, 200);
+        assert_eq!(route(&request("GET", "/trace?model=nope", ""), &reg).status, 404);
+        let t = route(&request("GET", "/trace?model=t1&n=8", ""), &reg);
+        assert_eq!(t.status, 200);
+        let tdoc = Json::parse(&t.body).unwrap();
+        assert_eq!(tdoc.get("model").as_str(), Some("t1"));
+        assert_eq!(tdoc.get("mode").as_str(), Some("full"));
+        assert!(tdoc.get("events").as_arr().is_some());
+        // jsonl variant is plain text, one event per line (possibly empty)
+        assert_eq!(route(&request("GET", "/trace?model=t1&format=jsonl", ""), &reg).status, 200);
+        reg.shutdown_all().unwrap();
+    }
+
+    #[test]
+    fn generate_timings_are_opt_in() {
+        let reg = ModelRegistry::new("no-such-dir");
+        let spec = r#"{"name": "g1", "backend": "native", "batch": 2, "k_ratio": 0.5}"#;
+        assert_eq!(route(&request("POST", "/models", spec), &reg).status, 200);
+
+        let r = route(&request("POST", "/generate", r#"{"prompt": "hi", "max_new_tokens": 4}"#), &reg);
+        assert_eq!(r.status, 200);
+        let doc = Json::parse(&r.body).unwrap();
+        assert_eq!(doc.get("timings"), &Json::Null, "timings must be opt-in");
+
+        let r = route(
+            &request(
+                "POST",
+                "/generate",
+                r#"{"prompt": "hi", "max_new_tokens": 4, "timings": true}"#,
+            ),
+            &reg,
+        );
+        assert_eq!(r.status, 200);
+        let doc = Json::parse(&r.body).unwrap();
+        let t = doc.get("timings");
+        let total = t.get("total_ms").as_f64().unwrap();
+        let parts = t.get("queue_wait_ms").as_f64().unwrap()
+            + t.get("prefill_ms").as_f64().unwrap()
+            + t.get("decode_ms").as_f64().unwrap();
+        assert!((parts - total).abs() <= 0.01 + total * 0.01, "spans must reconcile: {parts} vs {total}");
+        assert!(t.get("ttft_ms").as_f64().unwrap() <= total + 1e-9);
+        reg.shutdown_all().unwrap();
+    }
+
+    #[test]
+    fn prometheus_exposition_round_trips() {
+        assert_eq!(prometheus_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        let reg = ModelRegistry::new("no-such-dir");
+        let spec = r#"{"name": "p1", "backend": "native", "batch": 2, "k_ratio": 0.5}"#;
+        assert_eq!(route(&request("POST", "/models", spec), &reg).status, 200);
+        let r = route(&request("GET", "/metrics?format=prometheus", ""), &reg);
+        assert_eq!(r.status, 200);
+
+        // round-trip parse of the exposition: every sample's metric must
+        // have exactly one HELP + TYPE header emitted before it, every
+        // value must parse as f64, labels must stay inside quotes.
+        let mut helped = std::collections::BTreeSet::new();
+        let mut typed = std::collections::BTreeSet::new();
+        let mut sampled = std::collections::BTreeSet::new();
+        for line in r.body.lines().filter(|l| !l.is_empty()) {
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let name = rest.split(' ').next().unwrap().to_string();
+                assert!(helped.insert(name), "duplicate HELP: {line}");
+            } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split(' ');
+                let name = it.next().unwrap().to_string();
+                let kind = it.next().unwrap();
+                assert!(kind == "counter" || kind == "gauge", "bad type: {line}");
+                assert!(typed.insert(name), "duplicate TYPE: {line}");
+            } else {
+                let (series, value) = line.rsplit_once(' ').unwrap();
+                value.parse::<f64>().unwrap_or_else(|_| panic!("bad value in: {line}"));
+                let name = series.split('{').next().unwrap().to_string();
+                assert!(helped.contains(&name), "sample before HELP: {line}");
+                assert!(typed.contains(&name), "sample before TYPE: {line}");
+                if let Some(labels) = series.strip_suffix('}').and_then(|s| s.split_once('{')) {
+                    assert!(labels.1.starts_with("model=\""), "bad label set: {line}");
+                }
+                sampled.insert((series.to_string(), name));
+            }
+        }
+        // fleet-level and per-model samples of the same series both exist
+        assert!(sampled.contains(&("aqua_requests_done".into(), "aqua_requests_done".into())));
+        assert!(sampled
+            .contains(&("aqua_requests_done{model=\"p1\"}".into(), "aqua_requests_done".into())));
+        assert!(helped.contains("aqua_ttft_p99_ms"));
+        assert_eq!(helped, typed, "HELP and TYPE must pair up");
+        reg.shutdown_all().unwrap();
     }
 
     #[test]

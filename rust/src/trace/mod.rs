@@ -1,0 +1,517 @@
+//! Flight recorder: a fixed-capacity per-engine ring buffer of compact
+//! trace events, recording the request timeline from admission to last
+//! token plus the failure path (lane failures, restarts, escalation).
+//!
+//! Design constraints (see ROADMAP "Flight recorder (PR 8)"):
+//!
+//! * **Branch-cheap when off.** [`TraceRecorder::record`] loads one
+//!   relaxed atomic and returns; the event struct is `Copy` and is never
+//!   formatted on the hot path.
+//! * **Zero steady-state allocations.** The ring is preallocated at
+//!   construction ([`RING_CAP`] slots) and recording overwrites slots in
+//!   place — the `interleave` bench's counting global allocator holds at
+//!   `steady_decode_allocs == 0` with `trace=full`.
+//! * **Survives engine incarnations.** Like `Metrics`, the recorder is an
+//!   `Arc` owned by the deployment and re-attached to every supervised
+//!   engine rebuild, so a postmortem taken after a panic still holds the
+//!   events leading up to it.
+//!
+//! Modes (`trace=` knob on `EngineConfig`/`DeploymentSpec`/CLI/fleet
+//! JSON): `off`, `errors` (only failure-path phases), `sampled:N`
+//! (failure-path phases plus full timelines for 1-in-N request ids), and
+//! `full`. Exposed via `GET /trace?model=&n=[&format=jsonl]` (the JSONL
+//! dump is Chrome-trace compatible — load it in chrome://tracing or
+//! Perfetto, recipe in BENCHES.md) and `GET /trace/postmortem`.
+
+use std::sync::atomic::{AtomicU32, AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Ring capacity in events (~32 B each, so ~128 KiB per engine).
+pub const RING_CAP: usize = 4096;
+
+/// How many trailing ring events a postmortem snapshot scans.
+pub const POSTMORTEM_TAIL: usize = 256;
+
+/// How many postmortem dumps are retained (oldest evicted first).
+pub const POSTMORTEM_KEEP: usize = 8;
+
+// ---------------------------------------------------------------- mode
+
+const MODE_OFF: u8 = 0;
+const MODE_ERRORS: u8 = 1;
+const MODE_SAMPLED: u8 = 2;
+const MODE_FULL: u8 = 3;
+
+/// Recording mode. `Sampled(n)` records the failure-path phases always
+/// and the full timeline for request ids divisible by `n` (engine-level
+/// events, which carry no request id, are always recorded).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub enum TraceMode {
+    #[default]
+    Off,
+    Errors,
+    Sampled(u32),
+    Full,
+}
+
+impl TraceMode {
+    /// Parse the knob's string form: `off`, `errors`, `sampled:N`, `full`.
+    pub fn parse(s: &str) -> Result<TraceMode> {
+        match s {
+            "" | "off" => Ok(TraceMode::Off),
+            "errors" => Ok(TraceMode::Errors),
+            "full" => Ok(TraceMode::Full),
+            other => {
+                if let Some(n) = other.strip_prefix("sampled:") {
+                    let n: u32 = n
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("trace sampled:N needs an integer, got {n:?}"))?;
+                    if n == 0 {
+                        bail!("trace sampled:N needs N >= 1");
+                    }
+                    return Ok(TraceMode::Sampled(n));
+                }
+                bail!("unknown trace mode '{other}' (off|errors|sampled:N|full)")
+            }
+        }
+    }
+
+    /// The string form `parse` accepts (spec round-trips through this).
+    pub fn as_string(&self) -> String {
+        match self {
+            TraceMode::Off => "off".to_string(),
+            TraceMode::Errors => "errors".to_string(),
+            TraceMode::Sampled(n) => format!("sampled:{n}"),
+            TraceMode::Full => "full".to_string(),
+        }
+    }
+
+    fn code(&self) -> (u8, u32) {
+        match self {
+            TraceMode::Off => (MODE_OFF, 0),
+            TraceMode::Errors => (MODE_ERRORS, 0),
+            TraceMode::Sampled(n) => (MODE_SAMPLED, *n),
+            TraceMode::Full => (MODE_FULL, 0),
+        }
+    }
+}
+
+// --------------------------------------------------------------- events
+
+/// What happened. The failure-path phases (`is_error`) are recorded in
+/// every mode except `off`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TracePhase {
+    /// Request entered the admission queue (`arg` = prompt tokens).
+    Enqueue,
+    /// Request took a lane (`arg` = prompt tokens left to prefill).
+    Admit,
+    /// Queue head deferred — no lane/budget/KV room (`arg` = reason code:
+    /// 0 lane/token budget, 1 KV memory).
+    Defer,
+    /// A later request overtook a budget-blocked head (`arg` = queue
+    /// depth at the overtake).
+    Overtake,
+    /// Prefix-cache pages adopted at admission (`arg` = tokens served
+    /// from cache).
+    PrefixAttach,
+    /// One chunked-prefill slice fed for a lane (`arg` = tokens fed).
+    PrefillChunk,
+    /// One decode pass over the live batch (engine-level; `arg` = lanes
+    /// decoded).
+    DecodeBatch,
+    /// Request finished and released its lane (`arg` = finish-reason
+    /// code, see `FinishReason` ordering in `coordinator::request`).
+    Retire,
+    /// Score-path kernel time for one pass (engine-level; `lane` = mode
+    /// code 0 dense / 1 sparse / 2 packed / 3 mixed, `arg` = ns).
+    Score,
+    /// A backend step error retired this lane (`arg` = consecutive
+    /// engine-level failures so far).
+    LaneFailure,
+    /// The supervisor rebuilt the engine (`arg` = restarts used).
+    EngineRestart,
+    /// Consecutive step failures hit the cap; the engine is failing
+    /// (`arg` = the cap).
+    Escalate,
+}
+
+impl TracePhase {
+    /// Failure-path phases recorded by `errors` (and `sampled`) mode.
+    pub fn is_error(&self) -> bool {
+        matches!(self, TracePhase::LaneFailure | TracePhase::EngineRestart | TracePhase::Escalate)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TracePhase::Enqueue => "enqueue",
+            TracePhase::Admit => "admit",
+            TracePhase::Defer => "defer",
+            TracePhase::Overtake => "overtake",
+            TracePhase::PrefixAttach => "prefix_attach",
+            TracePhase::PrefillChunk => "prefill_chunk",
+            TracePhase::DecodeBatch => "decode_batch",
+            TracePhase::Retire => "retire",
+            TracePhase::Score => "score",
+            TracePhase::LaneFailure => "lane_failure",
+            TracePhase::EngineRestart => "engine_restart",
+            TracePhase::Escalate => "escalate",
+        }
+    }
+}
+
+/// One compact recorded event. `req == 0` marks engine-level events;
+/// `lane == -1` marks events not tied to a lane.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    /// Monotonic ns since the recorder's epoch (deployment launch).
+    pub at_ns: u64,
+    pub req: u64,
+    pub lane: i32,
+    pub phase: TracePhase,
+    /// Phase-specific payload word (documented per phase).
+    pub arg: u64,
+}
+
+impl TraceEvent {
+    /// JSON object form (`GET /trace` default format).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("at_ns", Json::Num(self.at_ns as f64)),
+            ("req", Json::Num(self.req as f64)),
+            ("lane", Json::Num(self.lane as f64)),
+            ("phase", Json::Str(self.phase.name().to_string())),
+            ("arg", Json::Num(self.arg as f64)),
+        ])
+    }
+
+    /// One Chrome-trace-compatible instant-event line (`ts` in µs,
+    /// `tid` = lane). Concatenated lines load in chrome://tracing /
+    /// Perfetto as a JSONL stream (recipe in BENCHES.md).
+    pub fn to_chrome_line(&self) -> String {
+        format!(
+            r#"{{"name":"{}","ph":"i","ts":{:.3},"pid":1,"tid":{},"s":"t","args":{{"req":{},"arg":{}}}}}"#,
+            self.phase.name(),
+            self.at_ns as f64 / 1e3,
+            self.lane,
+            self.req,
+            self.arg
+        )
+    }
+}
+
+/// Render events as a Chrome-trace JSONL dump (one event per line).
+pub fn events_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::with_capacity(events.len() * 96);
+    for e in events {
+        out.push_str(&e.to_chrome_line());
+        out.push('\n');
+    }
+    out
+}
+
+// ----------------------------------------------------------- postmortem
+
+/// A failure snapshot: the trailing events relevant to a blamed lane (or
+/// the whole engine), frozen at the moment the failure was contained.
+#[derive(Debug, Clone)]
+pub struct Postmortem {
+    /// What failed, e.g. `lane failure (backend error)` or
+    /// `engine panicked`.
+    pub note: String,
+    /// The faulted lane, or -1 when the failure is engine-wide.
+    pub blamed_lane: i32,
+    /// Monotonic ns (recorder epoch) the snapshot was taken.
+    pub at_ns: u64,
+    /// Trailing ring events: the blamed lane's plus engine-level ones,
+    /// oldest first.
+    pub events: Vec<TraceEvent>,
+}
+
+impl Postmortem {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("note", Json::Str(self.note.clone())),
+            ("blamed_lane", Json::Num(self.blamed_lane as f64)),
+            ("at_ns", Json::Num(self.at_ns as f64)),
+            ("events", Json::Arr(self.events.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+}
+
+// ------------------------------------------------------------- recorder
+
+struct Ring {
+    /// Preallocated to capacity at construction; pushes within capacity
+    /// never allocate, wrap overwrites in place.
+    buf: Vec<TraceEvent>,
+    /// Next slot to (over)write; equals `buf.len()` until the first wrap.
+    next: usize,
+    /// Total events ever recorded (wraps excluded events are gone, this
+    /// count is not).
+    seq: u64,
+}
+
+/// The per-engine flight recorder. Cheap to share (`Arc`); all methods
+/// take `&self`.
+pub struct TraceRecorder {
+    mode: AtomicU8,
+    sample_n: AtomicU32,
+    epoch: Instant,
+    ring: Mutex<Ring>,
+    postmortems: Mutex<Vec<Postmortem>>,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        TraceRecorder::new(TraceMode::Off)
+    }
+}
+
+impl TraceRecorder {
+    pub fn new(mode: TraceMode) -> TraceRecorder {
+        TraceRecorder::with_capacity(mode, RING_CAP)
+    }
+
+    /// Test hook: a recorder with a custom ring capacity.
+    pub fn with_capacity(mode: TraceMode, cap: usize) -> TraceRecorder {
+        let (m, n) = mode.code();
+        TraceRecorder {
+            mode: AtomicU8::new(m),
+            sample_n: AtomicU32::new(n.max(1)),
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring { buf: Vec::with_capacity(cap.max(1)), next: 0, seq: 0 }),
+            postmortems: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn mode(&self) -> TraceMode {
+        match self.mode.load(Ordering::Relaxed) {
+            MODE_ERRORS => TraceMode::Errors,
+            MODE_SAMPLED => TraceMode::Sampled(self.sample_n.load(Ordering::Relaxed)),
+            MODE_FULL => TraceMode::Full,
+            _ => TraceMode::Off,
+        }
+    }
+
+    // Poison-tolerant locks, same rationale as `Metrics`: a panicked
+    // engine incarnation must not wipe the flight recorder — the
+    // postmortem is exactly the artifact we want after a panic.
+    fn ring_locked(&self) -> MutexGuard<'_, Ring> {
+        self.ring.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn pm_locked(&self) -> MutexGuard<'_, Vec<Postmortem>> {
+        self.postmortems.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Record one event. Hot path: one relaxed atomic load when off; one
+    /// short mutex-guarded slot write otherwise. Never allocates.
+    #[inline]
+    pub fn record(&self, phase: TracePhase, req: u64, lane: i32, arg: u64) {
+        let mode = self.mode.load(Ordering::Relaxed);
+        if mode == MODE_OFF {
+            return;
+        }
+        if !phase.is_error() {
+            match mode {
+                MODE_ERRORS => return,
+                MODE_SAMPLED => {
+                    let n = self.sample_n.load(Ordering::Relaxed) as u64;
+                    if req != 0 && req % n != 0 {
+                        return;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let ev = TraceEvent { at_ns: self.epoch.elapsed().as_nanos() as u64, req, lane, phase, arg };
+        let mut g = self.ring_locked();
+        let cap = g.buf.capacity();
+        if g.buf.len() < cap {
+            g.buf.push(ev);
+        } else {
+            let at = g.next;
+            g.buf[at] = ev;
+        }
+        g.next = (g.next + 1) % cap;
+        g.seq += 1;
+    }
+
+    /// Total events ever recorded (monotone across ring wraps).
+    pub fn total_recorded(&self) -> u64 {
+        self.ring_locked().seq
+    }
+
+    /// The newest `n` events, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<TraceEvent> {
+        let g = self.ring_locked();
+        let len = g.buf.len();
+        let take = n.min(len);
+        let mut out = Vec::with_capacity(take);
+        for i in 0..take {
+            // the i-th of the `take` newest: when wrapped (len == cap)
+            // the oldest live slot is at `next`
+            let idx = if len < g.buf.capacity() {
+                len - take + i
+            } else {
+                (g.next + (len - take) + i) % len
+            };
+            out.push(g.buf[idx]);
+        }
+        out
+    }
+
+    /// Nanoseconds since the recorder's epoch (for stamping snapshots).
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Freeze a failure snapshot: the trailing [`POSTMORTEM_TAIL`] ring
+    /// events filtered to the blamed lane + engine-level events
+    /// (`blamed_lane == -1` keeps everything). Failure path — allocation
+    /// here is fine.
+    pub fn snapshot_postmortem(&self, note: &str, blamed_lane: i32) {
+        let tail = self.recent(POSTMORTEM_TAIL);
+        let events: Vec<TraceEvent> = tail
+            .into_iter()
+            .filter(|e| blamed_lane < 0 || e.lane == blamed_lane || e.lane < 0)
+            .collect();
+        let pm = Postmortem {
+            note: note.to_string(),
+            blamed_lane,
+            at_ns: self.now_ns(),
+            events,
+        };
+        let mut g = self.pm_locked();
+        g.push(pm);
+        let excess = g.len().saturating_sub(POSTMORTEM_KEEP);
+        if excess > 0 {
+            g.drain(..excess);
+        }
+    }
+
+    /// All retained postmortem dumps, oldest first.
+    pub fn postmortems(&self) -> Vec<Postmortem> {
+        self.pm_locked().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for s in ["off", "errors", "sampled:16", "full"] {
+            let m = TraceMode::parse(s).unwrap();
+            assert_eq!(m.as_string(), s);
+            assert_eq!(TraceMode::parse(&m.as_string()).unwrap(), m);
+        }
+        assert_eq!(TraceMode::parse("").unwrap(), TraceMode::Off);
+        assert!(TraceMode::parse("sampled:0").is_err());
+        assert!(TraceMode::parse("sampled:x").is_err());
+        assert!(TraceMode::parse("verbose").is_err());
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_only_newest() {
+        let t = TraceRecorder::with_capacity(TraceMode::Full, 8);
+        for i in 0..20u64 {
+            t.record(TracePhase::DecodeBatch, 0, -1, i);
+        }
+        assert_eq!(t.total_recorded(), 20);
+        let all = t.recent(100);
+        assert_eq!(all.len(), 8, "ring holds at most its capacity");
+        let args: Vec<u64> = all.iter().map(|e| e.arg).collect();
+        assert_eq!(args, (12..20).collect::<Vec<u64>>(), "only the newest survive, oldest first");
+        let last3: Vec<u64> = t.recent(3).iter().map(|e| e.arg).collect();
+        assert_eq!(last3, vec![17, 18, 19]);
+        // timestamps are monotone
+        assert!(all.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
+    }
+
+    #[test]
+    fn errors_mode_filters_and_sampled_keeps_one_in_n() {
+        let t = TraceRecorder::with_capacity(TraceMode::Errors, 32);
+        t.record(TracePhase::Enqueue, 1, -1, 0);
+        t.record(TracePhase::DecodeBatch, 0, -1, 4);
+        assert_eq!(t.total_recorded(), 0, "healthy traffic records nothing in errors mode");
+        t.record(TracePhase::LaneFailure, 1, 2, 1);
+        t.record(TracePhase::EngineRestart, 0, -1, 1);
+        assert_eq!(t.total_recorded(), 2);
+
+        let s = TraceRecorder::with_capacity(TraceMode::Sampled(4), 64);
+        for id in 1..=12u64 {
+            s.record(TracePhase::Enqueue, id, -1, 0);
+        }
+        let kept: Vec<u64> = s.recent(64).iter().map(|e| e.req).collect();
+        assert_eq!(kept, vec![4, 8, 12], "1-in-N by request id");
+        s.record(TracePhase::DecodeBatch, 0, -1, 4);
+        s.record(TracePhase::LaneFailure, 7, 0, 1);
+        assert_eq!(s.total_recorded(), 5, "engine-level + error events always recorded");
+    }
+
+    #[test]
+    fn off_mode_records_nothing() {
+        let t = TraceRecorder::new(TraceMode::Off);
+        t.record(TracePhase::LaneFailure, 1, 0, 1);
+        t.record(TracePhase::Enqueue, 1, -1, 0);
+        assert_eq!(t.total_recorded(), 0);
+        assert!(t.recent(10).is_empty());
+    }
+
+    #[test]
+    fn postmortem_filters_to_blamed_lane_and_caps_retention() {
+        let t = TraceRecorder::with_capacity(TraceMode::Full, 64);
+        t.record(TracePhase::PrefillChunk, 1, 0, 8);
+        t.record(TracePhase::PrefillChunk, 2, 1, 8);
+        t.record(TracePhase::DecodeBatch, 0, -1, 2);
+        t.record(TracePhase::LaneFailure, 2, 1, 1);
+        t.snapshot_postmortem("lane failure (backend error)", 1);
+        let pms = t.postmortems();
+        assert_eq!(pms.len(), 1);
+        let pm = &pms[0];
+        assert_eq!(pm.blamed_lane, 1);
+        assert!(pm.note.contains("lane failure"));
+        assert!(pm.events.iter().all(|e| e.lane == 1 || e.lane < 0));
+        assert!(pm.events.iter().any(|e| e.phase == TracePhase::LaneFailure));
+        assert!(pm.events.iter().any(|e| e.phase == TracePhase::PrefillChunk && e.req == 2));
+        assert!(
+            !pm.events.iter().any(|e| e.req == 1 && e.phase == TracePhase::PrefillChunk),
+            "other lanes' request events are excluded"
+        );
+
+        for i in 0..(POSTMORTEM_KEEP + 3) {
+            t.snapshot_postmortem(&format!("dump {i}"), -1);
+        }
+        assert_eq!(t.postmortems().len(), POSTMORTEM_KEEP, "retention is capped");
+    }
+
+    #[test]
+    fn chrome_jsonl_lines_parse_as_json() {
+        let t = TraceRecorder::with_capacity(TraceMode::Full, 8);
+        t.record(TracePhase::Admit, 3, 1, 24);
+        t.record(TracePhase::Score, 0, 2, 12345);
+        let dump = events_jsonl(&t.recent(8));
+        let lines: Vec<&str> = dump.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("name").as_str().is_some());
+            assert_eq!(j.get("ph").as_str(), Some("i"));
+            assert!(j.get("ts").as_f64().is_some());
+            assert!(j.get("tid").as_i64().is_some());
+            assert!(j.get("args").get("req").as_i64().is_some());
+        }
+        let first = Json::parse(dump.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("name").as_str(), Some("admit"));
+        assert_eq!(first.get("args").get("arg").as_i64(), Some(24));
+    }
+}

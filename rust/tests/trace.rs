@@ -1,0 +1,289 @@
+//! Flight-recorder suite: span timelines from admission to last token,
+//! per-request timings over HTTP, postmortem dumps on engine failure —
+//! hermetic, on the native/sharded backends plus the deterministic
+//! `fault:` chaos wrapper.
+//!
+//! Acceptance surface (ROADMAP PR 8): `"timings": true` on `/generate`
+//! returns an enqueue-relative span breakdown that reconciles
+//! (queue_wait + prefill + decode ≈ total, ttft ≤ total); the ring keeps
+//! only the newest events across wraps; `trace=errors` records nothing
+//! for healthy traffic; a lane kill under `fault:` leaves a postmortem
+//! naming the blamed lane with its trailing steps, served over
+//! `GET /trace/postmortem`; sharded and native engines produce identical
+//! per-request event timelines.
+//!
+//! CI runs this file under `--release` too (like the chaos suite — the
+//! engine threads and result pump are timing-sensitive).
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use aqua_serve::coordinator::{Engine, EngineConfig, FinishReason, GenRequest, Health};
+use aqua_serve::registry::{Admission, DeploymentSpec, ModelRegistry};
+use aqua_serve::runtime::BackendSpec;
+use aqua_serve::server;
+use aqua_serve::tokenizer::ByteTokenizer;
+use aqua_serve::trace::{TraceMode, TracePhase, TraceRecorder};
+use aqua_serve::util::json::Json;
+
+// ---------------------------------------------------------------- helpers
+
+fn registry_of(specs: &[&str]) -> Arc<ModelRegistry> {
+    let reg = ModelRegistry::new("no-such-artifacts-dir");
+    for s in specs {
+        reg.deploy(DeploymentSpec::parse_kv(s).unwrap()).unwrap();
+    }
+    Arc::new(reg)
+}
+
+fn start_server(registry: Arc<ModelRegistry>) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let _ = server::serve_on(listener, registry);
+    });
+    addr
+}
+
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    server::http::client_request(addr, method, path, body).expect("http request")
+}
+
+fn prompt_tokens(text: &str) -> Vec<i32> {
+    ByteTokenizer.encode(text)
+}
+
+fn wait_for<F: FnMut() -> bool>(what: &str, deadline: Duration, mut cond: F) {
+    let end = Instant::now() + deadline;
+    while !cond() {
+        assert!(Instant::now() < end, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+// ------------------------------------------------------------------ tests
+
+/// `"timings": true` over real HTTP: the enqueue-relative spans reconcile
+/// — queue_wait + prefill + decode equals total up to µs truncation, ttft
+/// never exceeds total — and the same request's timeline shows up on
+/// `GET /trace` with admission and retire events.
+#[test]
+fn generate_timings_reconcile_and_trace_shows_the_timeline() {
+    let reg = registry_of(&["name=traced,backend=native,seed=0,k=1.0,batch=2,queue=8,trace=full"]);
+    let addr = start_server(reg.clone());
+
+    let (status, body) = http(
+        addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "the capital of ", "max_new_tokens": 8, "stop_newline": false,
+            "timings": true}"#,
+    );
+    assert_eq!(status, 200, "generate failed: {body}");
+    let doc = Json::parse(&body).unwrap();
+    let t = doc.get("timings");
+    assert!(t.get("queue_wait_ms").as_f64().is_some(), "timings missing: {body}");
+    let total = t.get("total_ms").as_f64().unwrap();
+    let parts = t.get("queue_wait_ms").as_f64().unwrap()
+        + t.get("prefill_ms").as_f64().unwrap()
+        + t.get("decode_ms").as_f64().unwrap();
+    assert!(
+        (parts - total).abs() <= 0.02 + total * 0.01,
+        "span breakdown must reconcile: queue+prefill+decode = {parts}ms, total = {total}ms"
+    );
+    let ttft = t.get("ttft_ms").as_f64().unwrap();
+    assert!(ttft <= total + 1e-9, "ttft {ttft}ms exceeds total {total}ms");
+    assert!(ttft >= t.get("queue_wait_ms").as_f64().unwrap() - 1e-9, "ttft includes queue wait");
+    assert!(t.get("prefix_hit_tokens").as_f64().is_some());
+
+    // timings stay opt-in
+    let (_, body) = http(addr, "POST", "/generate", r#"{"prompt": "hi", "max_new_tokens": 2}"#);
+    assert_eq!(Json::parse(&body).unwrap().get("timings"), &Json::Null);
+
+    // the flight recorder saw the whole story
+    let (status, body) = http(addr, "GET", "/trace?model=traced&n=512", "");
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("mode").as_str(), Some("full"));
+    assert!(doc.get("total_recorded").as_i64().unwrap() > 0);
+    let events = doc.get("events").as_arr().unwrap();
+    let has = |phase: &str| events.iter().any(|e| e.get("phase").as_str() == Some(phase));
+    for phase in ["enqueue", "admit", "prefill_chunk", "decode_batch", "retire", "score"] {
+        assert!(has(phase), "missing {phase} in /trace: {body}");
+    }
+    // the JSONL dump is line-per-event Chrome-trace JSON
+    let (status, dump) = http(addr, "GET", "/trace?model=traced&format=jsonl", "");
+    assert_eq!(status, 200);
+    assert!(dump.lines().count() > 0);
+    for line in dump.lines() {
+        let j = Json::parse(line).unwrap();
+        assert_eq!(j.get("ph").as_str(), Some("i"), "chrome instant event: {line}");
+        assert!(j.get("ts").as_f64().is_some());
+    }
+    reg.shutdown_all().unwrap();
+}
+
+/// Ring wraparound through the public API: capacity bounds residency,
+/// only the newest events survive, the lifetime count stays monotone.
+#[test]
+fn ring_wraparound_keeps_only_the_newest_events() {
+    let t = TraceRecorder::with_capacity(TraceMode::Full, 16);
+    for i in 0..100u64 {
+        t.record(TracePhase::DecodeBatch, 0, -1, i);
+    }
+    assert_eq!(t.total_recorded(), 100);
+    let all = t.recent(1000);
+    assert_eq!(all.len(), 16, "ring residency is bounded by capacity");
+    let args: Vec<u64> = all.iter().map(|e| e.arg).collect();
+    assert_eq!(args, (84..100).collect::<Vec<u64>>(), "newest only, oldest first");
+    assert!(all.windows(2).all(|w| w[0].at_ns <= w[1].at_ns), "timestamps monotone");
+}
+
+/// `trace=errors` on a healthy deployment: full request lifecycles leave
+/// the ring empty — the recorder arms only on the failure path.
+#[test]
+fn errors_mode_records_nothing_for_healthy_traffic() {
+    let reg =
+        registry_of(&["name=quiet,backend=native,seed=0,k=1.0,batch=2,queue=8,trace=errors"]);
+    let dep = reg.get(Some("quiet")).unwrap();
+    for _ in 0..3 {
+        let id = dep.fresh_id();
+        assert_eq!(
+            dep.submit(GenRequest::new(id, prompt_tokens("the capital of "), 4)).unwrap(),
+            Admission::Accepted
+        );
+        let res = dep.wait_result(id, Duration::from_secs(30)).expect("healthy result");
+        assert_eq!(res.finish, FinishReason::Length);
+    }
+    assert_eq!(dep.trace().mode(), TraceMode::Errors);
+    assert_eq!(dep.trace().total_recorded(), 0, "healthy traffic must not touch the ring");
+    assert!(dep.trace().recent(100).is_empty());
+    assert!(dep.trace().postmortems().is_empty());
+    reg.shutdown_all().unwrap();
+}
+
+/// A scripted lane kill leaves a postmortem naming the blamed lane, with
+/// the lane's trailing request events plus engine-level steps frozen at
+/// containment time.
+#[test]
+fn lane_failure_postmortem_names_the_blamed_lane() {
+    let spec =
+        BackendSpec::from_kind("fault:native,err_every=1,err_count=1,err_lane=1", "pm", 3, 2, "x")
+            .unwrap();
+    let cfg = EngineConfig { batch: 2, trace: TraceMode::Full, ..EngineConfig::default() };
+    let mut engine = Engine::with_spec(&spec, cfg).unwrap();
+    let reqs: Vec<GenRequest> = (0..4)
+        .map(|i| GenRequest::new(i + 1, prompt_tokens(&format!("the color {i} of ")), 4))
+        .collect();
+    let res = engine.run_batch(reqs).unwrap();
+    assert_eq!(res[1].finish, FinishReason::BackendError, "blamed lane fails");
+
+    let pms = engine.trace.postmortems();
+    assert_eq!(pms.len(), 1, "exactly one containment, one postmortem");
+    let pm = &pms[0];
+    assert_eq!(pm.blamed_lane, 1, "the postmortem names the faulted lane");
+    assert!(pm.note.contains("lane failure"), "note explains itself: {}", pm.note);
+    assert!(!pm.events.is_empty(), "trailing steps are frozen into the dump");
+    assert!(
+        pm.events.iter().all(|e| e.lane == 1 || e.lane < 0),
+        "dump is filtered to the blamed lane + engine-level events"
+    );
+    assert!(
+        pm.events.iter().any(|e| e.phase == TracePhase::LaneFailure),
+        "the failure event itself is in the dump"
+    );
+}
+
+/// An engine panic under supervision: the shared recorder survives the
+/// incarnation, the supervisor freezes an engine-wide postmortem and
+/// stamps the restart, and `GET /trace/postmortem` serves it — all in
+/// `trace=errors`, the always-on production setting.
+#[test]
+fn panic_postmortem_is_served_over_http() {
+    let reg = registry_of(&[
+        "name=pm,backend=fault:native;panic_at=12,seed=0,k=1.0,batch=1,queue=4,\
+         restart=1,restart_backoff_ms=1,trace=errors",
+    ]);
+    let dep = reg.get(Some("pm")).unwrap();
+    let addr = start_server(reg.clone());
+
+    let id = dep.fresh_id();
+    assert_eq!(
+        dep.submit(GenRequest::new(id, prompt_tokens("hi"), 100)).unwrap(),
+        Admission::Accepted
+    );
+    let res = dep.wait_result(id, Duration::from_secs(10)).expect("terminal result");
+    assert_eq!(res.finish, FinishReason::EngineFailed);
+    wait_for("postmortem snapshot", Duration::from_secs(10), || {
+        !dep.trace().postmortems().is_empty()
+    });
+    wait_for("supervised restart", Duration::from_secs(10), || {
+        dep.health() == Health::Healthy
+    });
+
+    let pm = &dep.trace().postmortems()[0];
+    assert_eq!(pm.blamed_lane, -1, "a panic is engine-wide, no single blamed lane");
+    assert!(pm.note.contains("panic"), "note explains itself: {}", pm.note);
+
+    let (status, body) = http(addr, "GET", "/trace/postmortem?model=pm", "");
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).unwrap();
+    assert!(doc.get("postmortems_total").as_i64().unwrap() >= 1);
+    let dumps = doc.get("models").get("pm").as_arr().unwrap();
+    assert!(!dumps.is_empty());
+    assert!(dumps[0].get("note").as_str().unwrap().contains("panic"));
+    assert!(dumps[0].get("events").as_arr().is_some());
+
+    // errors mode still stamped the restart into the ring
+    wait_for("engine_restart event", Duration::from_secs(10), || {
+        dep.trace().recent(100).iter().any(|e| e.phase == TracePhase::EngineRestart)
+    });
+    assert_eq!(http(addr, "GET", "/trace/postmortem?model=nope", "").0, 404);
+    reg.shutdown_all().unwrap();
+}
+
+/// The lane-sharded backend must tell the same story as the native one:
+/// identical per-request counts of admission-to-retire events for the
+/// same workload (and exactly one enqueue/admit/retire per request).
+#[test]
+fn sharded_matches_native_event_counts_per_request() {
+    let mut per_backend: Vec<BTreeMap<(u64, &'static str), usize>> = vec![];
+    for kind in ["native", "sharded"] {
+        let spec = BackendSpec::from_kind(kind, "trace", 3, 2, "x").unwrap();
+        let cfg = EngineConfig { batch: 2, trace: TraceMode::Full, ..EngineConfig::default() };
+        let mut engine = Engine::with_spec(&spec, cfg).unwrap();
+        let reqs: Vec<GenRequest> = (0..4)
+            .map(|i| GenRequest::new(i + 1, prompt_tokens(&format!("the color {i} of ")), 4))
+            .collect();
+        engine.run_batch(reqs).unwrap();
+        let mut counts: BTreeMap<(u64, &'static str), usize> = BTreeMap::new();
+        for e in engine.trace.recent(usize::MAX) {
+            let per_request = matches!(
+                e.phase,
+                TracePhase::Enqueue
+                    | TracePhase::Admit
+                    | TracePhase::PrefillChunk
+                    | TracePhase::Retire
+            );
+            if e.req != 0 && per_request {
+                *counts.entry((e.req, e.phase.name())).or_insert(0) += 1;
+            }
+        }
+        for id in 1..=4u64 {
+            for phase in ["enqueue", "admit", "retire"] {
+                assert_eq!(
+                    counts.get(&(id, phase)),
+                    Some(&1),
+                    "{kind}: req {id} must {phase} exactly once"
+                );
+            }
+        }
+        per_backend.push(counts);
+    }
+    assert_eq!(
+        per_backend[0], per_backend[1],
+        "sharded and native engines must record identical per-request timelines"
+    );
+}
