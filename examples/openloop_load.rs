@@ -132,7 +132,13 @@ fn main() -> anyhow::Result<()> {
     registry.deploy(DeploymentSpec::parse_kv(&format!(
         "name=pruned,backend={backend_kind},k=0.25,batch=4,queue=8{lifecycle},trace={trace_mode}"
     ))?)?;
-    let names: [&'static str; 2] = ["exact", "pruned"];
+    // self-speculative decoding: drafts through the k=0.25 sparse path,
+    // verifies exactly — output matches `exact`, throughput shouldn't
+    registry.deploy(DeploymentSpec::parse_kv(&format!(
+        "name=spec,backend={backend_kind},k=0.25,speculate=3,batch=4,queue=8{lifecycle},\
+         trace={trace_mode}"
+    ))?)?;
+    let names: [&'static str; 3] = ["exact", "pruned", "spec"];
     let deps: Vec<_> = names.iter().map(|&n| registry.get(Some(n)).unwrap()).collect();
     let backend = deps[0].backend_kind();
 
@@ -155,13 +161,16 @@ fn main() -> anyhow::Result<()> {
         names.len()
     );
     println!(
-        "{:>8} {:>8} {:>6} {:>6} {:>6} {:>6} {:>6} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "{:>8} {:>8} {:>6} {:>6} {:>6} {:>6} {:>6} {:>12} {:>12} {:>12} {:>12} {:>10} {:>8} {:>8}",
         "req/s", "model", "sent", "done", "shed", "cancel", "failed", "e2e p50", "e2e p99",
-        "ttft p50", "ttft p99", "tok/s"
+        "ttft p50", "ttft p99", "tok/s", "accept%", "eff t/s"
     );
 
     let mut rows: Vec<Json> = vec![];
     for &rate in &rates {
+        // per-rate speculation ledger deltas (the deployments persist
+        // across rate windows, so their counters accumulate)
+        let pre: Vec<_> = deps.iter().map(|d| d.stats().unwrap()).collect();
         let mut rng = Rng::new(7);
         let mut loads: Vec<ModelLoad> = names.iter().map(|&n| ModelLoad::new(n)).collect();
         let t0 = Instant::now();
@@ -260,10 +269,24 @@ fn main() -> anyhow::Result<()> {
             std::thread::sleep(Duration::from_millis(1));
         }
         let wall = t0.elapsed().as_secs_f64().max(1e-9);
-        for load in &loads {
+        for (m, load) in loads.iter().enumerate() {
+            // this window's draft ledger: counter deltas vs the pre-window
+            // snapshot ("-" for deployments that never speculated)
+            let post = deps[m].stats().unwrap();
+            let drafted = post.spec_drafted - pre[m].spec_drafted;
+            let accepted = post.spec_accepted - pre[m].spec_accepted;
+            let committed = post.spec_committed - pre[m].spec_committed;
+            let cycles = post.spec_lane_cycles - pre[m].spec_lane_cycles;
+            let accept_rate = if drafted > 0 { accepted as f64 / drafted as f64 } else { 0.0 };
+            let eff = if cycles > 0 { committed as f64 / cycles as f64 } else { 0.0 };
+            let (accept_col, eff_col) = if cycles > 0 {
+                (format!("{:.0}%", 100.0 * accept_rate), format!("{eff:.2}"))
+            } else {
+                ("-".into(), "-".into())
+            };
             println!(
                 "{:>8.1} {:>8} {:>6} {:>6} {:>6} {:>6} {:>6} {:>10.1}ms {:>10.1}ms {:>10.1}ms \
-                 {:>10.1}ms {:>10.1}",
+                 {:>10.1}ms {:>10.1} {:>8} {:>8}",
                 rate,
                 load.name,
                 load.sent,
@@ -275,7 +298,9 @@ fn main() -> anyhow::Result<()> {
                 percentile(&load.e2e_ms, 99.0),
                 percentile(&load.ttft_ms, 50.0),
                 percentile(&load.ttft_ms, 99.0),
-                load.tokens as f64 / wall
+                load.tokens as f64 / wall,
+                accept_col,
+                eff_col
             );
             rows.push(Json::obj(vec![
                 ("model", Json::Str(load.name.to_string())),
@@ -307,6 +332,8 @@ fn main() -> anyhow::Result<()> {
                 ("e2e_p99_ms", Json::Num(percentile(&load.e2e_ms, 99.0))),
                 ("ttft_p50_ms", Json::Num(percentile(&load.ttft_ms, 50.0))),
                 ("ttft_p99_ms", Json::Num(percentile(&load.ttft_ms, 99.0))),
+                ("spec_acceptance_rate", Json::Num(accept_rate)),
+                ("tokens_per_step_effective", Json::Num(eff)),
             ]));
         }
     }

@@ -61,21 +61,27 @@ fn main() -> anyhow::Result<()> {
     println!("# serving_demo — {n} batched requests per operating point (batch=4, {} backend, \
               prefix cache on)\n",
              spec.name());
-    println!("{:<34} {:>10} {:>12} {:>12} {:>12} {:>10} {:>12} {:>8} {:>22}",
+    println!("{:<34} {:>10} {:>12} {:>12} {:>12} {:>10} {:>12} {:>8} {:>8} {:>8} {:>22}",
              "operating point", "tok/s", "ttft p50", "ttft p99", "lat mean", "evictions",
-             "kv peak", "prefix%", "kernels (d/s/p)");
-    for (label, aqua) in [
-        ("baseline (standard attention)", AquaConfig::baseline()),
-        ("AQUA k=0.75", AquaConfig { k_ratio: 0.75, ..Default::default() }),
-        ("AQUA k=0.50", AquaConfig { k_ratio: 0.50, ..Default::default() }),
+             "kv peak", "prefix%", "accept%", "eff t/s", "kernels (d/s/p)");
+    for (label, aqua, speculate) in [
+        ("baseline (standard attention)", AquaConfig::baseline(), 0usize),
+        ("AQUA k=0.75", AquaConfig { k_ratio: 0.75, ..Default::default() }, 0),
+        ("AQUA k=0.50", AquaConfig { k_ratio: 0.50, ..Default::default() }, 0),
         ("AQUA-H2O k=0.75 h2o=0.50",
-         AquaConfig { k_ratio: 0.75, h2o_ratio: 0.5, ..Default::default() }),
+         AquaConfig { k_ratio: 0.75, h2o_ratio: 0.5, ..Default::default() }, 0),
         ("AQUA-Memory S=0.10 k=0.90",
-         AquaConfig { k_ratio: 0.90, s_ratio: 0.10, ..Default::default() }),
+         AquaConfig { k_ratio: 0.90, s_ratio: 0.10, ..Default::default() }, 0),
+        // self-speculative decoding: AQUA-sparse draft, exact verify over
+        // the same KV — output stays bit-identical to the baseline row
+        ("AQUA-spec k=0.25 speculate=4",
+         AquaConfig { k_ratio: 0.25, ..Default::default() }, 4),
+        ("AQUA-spec k=0.50 speculate=2",
+         AquaConfig { k_ratio: 0.50, ..Default::default() }, 2),
     ] {
         let mut engine = Engine::with_spec(
             &spec,
-            EngineConfig { batch: 4, aqua, prefix_cache: true, ..Default::default() },
+            EngineConfig { batch: 4, aqua, speculate, prefix_cache: true, ..Default::default() },
         )?;
         let mut rng = Rng::new(42);
         let reqs = workload(&corpus, n, max_prompt, &mut rng);
@@ -93,9 +99,18 @@ fn main() -> anyhow::Result<()> {
         let kern = format!("{}/{}/{}", s.kernels.dense, s.kernels.sparse, s.kernels.packed);
         let kv_peak = format!("{:.1}KiB", s.kv_resident_peak_bytes as f64 / 1024.0);
         let hits = format!("{:.0}%", 100.0 * s.prefix_hit_rate());
-        println!("{:<34} {:>10.1} {:>10.1}ms {:>10.1}ms {:>10.1}ms {:>10} {:>12} {:>8} {:>22}",
+        // draft acceptance and committed-tokens-per-verify-cycle, when
+        // this operating point speculates ("-" on plain-decode rows)
+        let (accept, eff) = if s.spec_lane_cycles > 0 {
+            (format!("{:.0}%", 100.0 * s.spec_acceptance_rate),
+             format!("{:.2}", s.tokens_per_step_effective))
+        } else {
+            ("-".into(), "-".into())
+        };
+        println!("{:<34} {:>10.1} {:>10.1}ms {:>10.1}ms {:>10.1}ms {:>10} {:>12} {:>8} {:>8} \
+                  {:>8} {:>22}",
                  label, total_tokens as f64 / wall, s.p50_ttft_ms, s.p99_ttft_ms,
-                 s.mean_latency_ms, s.h2o_evictions, kv_peak, hits, kern);
+                 s.mean_latency_ms, s.h2o_evictions, kv_peak, hits, accept, eff, kern);
     }
     println!("\n(swap in the PJRT model via --features pjrt + make artifacts; see DESIGN.md)");
     Ok(())

@@ -1,0 +1,257 @@
+//! Self-speculative decoding trajectory: draft acceptance rate, effective
+//! tokens per verify cycle, and wall-clock inter-token latency vs the
+//! plain dense baseline — the AQUA-sparse-draft / dense-verify duty cycle
+//! measured end to end through the engine.
+//!
+//! One engine per (`k_ratio`, `speculate`) operating point, all greedy,
+//! H2O off, native backend. The first point — `k_ratio = 1.0`,
+//! `speculate = 0` — is the exact-decode baseline every other row's
+//! `itl_ratio_vs_off` is measured against; because speculation is
+//! lossless, every speculative row must reproduce the baseline's tokens
+//! bit-for-bit (asserted here, and formally in `tests/speculative.rs`).
+//!
+//! Each point runs three windows:
+//!
+//! * **warmup** — admit the batch, stream a few cycles so the lazy
+//!   metrics buffers are sized and the measurement below is steady-state;
+//! * **armed** — a fixed number of engine steps with a counting
+//!   `#[global_allocator]`: beyond the native backend's two
+//!   return-by-value buffers per call (logits + attention mass, times
+//!   `speculate` draft calls + 1 verify call per step), the draft/verify
+//!   loop must add **zero** heap allocations — with `trace=full`, so the
+//!   bound covers the new draft_block/verify_block/rollback events too.
+//!   The window is also the throughput clock: committed tokens over
+//!   elapsed wall time;
+//! * **drain** — run to completion un-timed, collect outputs for the
+//!   losslessness assertion and the final draft-ledger counters.
+//!
+//! Writes the `speculate` section of `BENCH_speculate.json` (schema in
+//! BENCHES.md; `aqua benchcheck` re-derives the acceptance rate and
+//! effective-tokens ratios from the raw counters and refuses the file if
+//! they disagree). `--fast` shrinks the windows for CI smoke.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+use aqua_serve::aqua::policy::AquaConfig;
+use aqua_serve::bench::report::{speculate_path, BenchReport};
+use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use aqua_serve::model::config::ModelConfig;
+use aqua_serve::runtime::BackendSpec;
+use aqua_serve::trace::TraceMode;
+use aqua_serve::util::json::Json;
+
+/// Counts heap allocations while armed (the measured decode window only).
+struct CountingAlloc;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Allocations the native backend makes per call by API contract: the
+/// `StepOut` logits and attention-mass buffers it returns by value. A
+/// speculative step makes `speculate` draft calls + 1 verify call.
+const BACKEND_ALLOCS_PER_CALL: u64 = 2;
+
+const BATCH: usize = 4;
+const PROMPT: usize = 8;
+
+struct PointOut {
+    tokens: Vec<Vec<i32>>,
+    tok_per_s: f64,
+    itl_ms: f64,
+    steady_spec_allocs: i64,
+    drafted: u64,
+    accepted: u64,
+    rejected: u64,
+    committed: u64,
+    lane_cycles: u64,
+    acceptance_rate: f64,
+    tokens_per_step_effective: f64,
+}
+
+fn prompt(lane: usize) -> Vec<i32> {
+    (0..PROMPT).map(|j| 32 + ((11 * lane + 3 * j) % 90) as i32).collect()
+}
+
+fn run_point(k_ratio: f64, speculate: usize, fast: bool) -> anyhow::Result<PointOut> {
+    let cfg = ModelConfig::tiny("llama-analog");
+    let spec = BackendSpec::native(cfg, 0)?;
+    let ecfg = EngineConfig {
+        batch: BATCH,
+        speculate,
+        aqua: AquaConfig { k_ratio, ..Default::default() },
+        // most verbose recorder: the no-alloc window proves the new
+        // draft/verify/rollback events ride the hot loop for free
+        trace: TraceMode::Full,
+        ..Default::default()
+    };
+    let mut engine = Engine::with_spec(&spec, ecfg)?;
+    // Sized so no lane can finish before the armed window closes: warmup
+    // + armed steps each commit at most `speculate + 1` tokens per lane.
+    let (warmup_steps, armed_steps) = if fast { (5u64, 10u64) } else { (5u64, 20u64) };
+    let worst = ((warmup_steps + armed_steps) * (speculate as u64 + 1) + 4) as usize;
+    let max_new = worst.min(engine.model_config().max_seq - PROMPT - 1);
+    for lane in 0..BATCH {
+        assert!(engine.submit(GenRequest::new(lane as u64 + 1, prompt(lane), max_new)));
+    }
+
+    // Warmup: prefill + first decode cycles (sizes the lazy ITL buffers).
+    for _ in 0..warmup_steps + 1 {
+        engine.step()?;
+    }
+
+    // Armed window: allocation-counted, and the throughput clock.
+    let gen0 = engine.metrics.snapshot().tokens_generated;
+    ALLOCS.store(0, Ordering::Relaxed);
+    let t0 = Instant::now();
+    for _ in 0..armed_steps {
+        ARMED.store(true, Ordering::Relaxed);
+        engine.step()?;
+        ARMED.store(false, Ordering::Relaxed);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let window_tokens = engine.metrics.snapshot().tokens_generated - gen0;
+    assert!(window_tokens > 0, "armed window generated nothing");
+    let calls_per_step = if speculate > 0 { speculate as u64 + 1 } else { 1 };
+    let steady_spec_allocs = ALLOCS.load(Ordering::Relaxed) as i64
+        - (BACKEND_ALLOCS_PER_CALL * calls_per_step * armed_steps) as i64;
+
+    // Drain un-timed; collect outputs for the losslessness assertion.
+    engine.run_until_idle()?;
+    let mut tokens = vec![];
+    for lane in 0..BATCH {
+        let r = engine.take_result(lane as u64 + 1).expect("lane result");
+        tokens.push(r.tokens);
+    }
+    let snap = engine.metrics.snapshot();
+    Ok(PointOut {
+        tokens,
+        tok_per_s: window_tokens as f64 / elapsed,
+        itl_ms: elapsed * 1e3 / window_tokens as f64,
+        steady_spec_allocs,
+        drafted: snap.spec_drafted,
+        accepted: snap.spec_accepted,
+        rejected: snap.spec_rejected,
+        committed: snap.spec_committed,
+        lane_cycles: snap.spec_lane_cycles,
+        acceptance_rate: snap.spec_acceptance_rate,
+        tokens_per_step_effective: snap.tokens_per_step_effective,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    // Baseline first: exact decode, no speculation. Every speculative
+    // point is lossless against it (bit-identical committed tokens).
+    let points: &[(f64, usize)] = &[(1.0, 0), (0.25, 2), (0.25, 4), (0.5, 4), (1.0, 4)];
+    println!(
+        "# speculate — {} lanes, greedy, native backend \
+         (itl_ratio_vs_off = row wall-clock per token / baseline's)\n",
+        BATCH
+    );
+    println!(
+        "{:>8} {:>10} {:>9} {:>9} {:>11} {:>10} {:>10} {:>7}",
+        "k_ratio", "speculate", "accept%", "eff t/s", "tok/s", "itl ms", "itl ratio", "allocs"
+    );
+
+    let mut rows: Vec<Json> = vec![];
+    let mut baseline: Option<PointOut> = None;
+    for &(k, s) in points {
+        let out = run_point(k, s, fast)?;
+        if let Some(base) = &baseline {
+            // truncate to the shorter run: points size max_new to their
+            // own window, but the shared prefix must match bit-for-bit
+            for lane in 0..BATCH {
+                let n = out.tokens[lane].len().min(base.tokens[lane].len());
+                assert_eq!(
+                    out.tokens[lane][..n],
+                    base.tokens[lane][..n],
+                    "speculation must be lossless (k={k}, speculate={s}, lane {lane})"
+                );
+            }
+        }
+        let itl_ratio = match &baseline {
+            Some(base) => out.itl_ms / base.itl_ms,
+            None => 1.0,
+        };
+        println!(
+            "{:>8.2} {:>10} {:>8.1}% {:>9.2} {:>11.1} {:>10.4} {:>9.2}x {:>7}",
+            k,
+            s,
+            100.0 * out.acceptance_rate,
+            out.tokens_per_step_effective,
+            out.tok_per_s,
+            out.itl_ms,
+            itl_ratio,
+            out.steady_spec_allocs
+        );
+        rows.push(Json::obj(vec![
+            ("backend", Json::Str("native".into())),
+            ("k_ratio", Json::Num(k)),
+            ("speculate", Json::Num(s as f64)),
+            ("batch", Json::Num(BATCH as f64)),
+            ("drafted", Json::Num(out.drafted as f64)),
+            ("accepted", Json::Num(out.accepted as f64)),
+            ("rejected", Json::Num(out.rejected as f64)),
+            ("committed", Json::Num(out.committed as f64)),
+            ("lane_cycles", Json::Num(out.lane_cycles as f64)),
+            ("acceptance_rate", Json::Num(out.acceptance_rate)),
+            ("tokens_per_step_effective", Json::Num(out.tokens_per_step_effective)),
+            ("tok_per_s", Json::Num(out.tok_per_s)),
+            ("itl_ms", Json::Num(out.itl_ms)),
+            ("itl_ratio_vs_off", Json::Num(itl_ratio)),
+            ("steady_spec_allocs", Json::Num(out.steady_spec_allocs as f64)),
+        ]));
+        if baseline.is_none() {
+            baseline = Some(out);
+        }
+    }
+
+    let section = Json::obj(vec![
+        ("rows", Json::Arr(rows)),
+        ("model", Json::Str("llama-analog".into())),
+        (
+            "units",
+            Json::Str(
+                "acceptance_rate = accepted/drafted; tokens_per_step_effective = \
+                 committed/lane_cycles (> 1.0 means speculation pays); itl_ratio_vs_off = \
+                 wall-clock ms per committed token relative to the k_ratio=1.0 speculate=0 \
+                 exact baseline (< 1.0 is a win); steady_spec_allocs = heap allocations per \
+                 armed window beyond the backend's 2-per-call output buffers, must be 0"
+                    .into(),
+            ),
+        ),
+        ("fast", Json::Bool(fast)),
+    ]);
+    let path = Path::new(speculate_path());
+    let mut rep = BenchReport::load_or_new(path);
+    rep.set_section("speculate", section);
+    rep.save(path)?;
+    println!("\nwrote speculate section to {}", path.display());
+    Ok(())
+}

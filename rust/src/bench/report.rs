@@ -63,6 +63,14 @@ pub fn interleave_path() -> &'static str {
     concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_interleave.json")
 }
 
+/// Repo-root path of the speculation report (`BENCH_speculate.json`),
+/// written by the `speculate` bench — draft acceptance rate, effective
+/// tokens per verify cycle, and ITL vs the speculate=0 baseline, one row
+/// per (`k_ratio`, `speculate`) point (schema in BENCHES.md).
+pub fn speculate_path() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_speculate.json")
+}
+
 /// An on-disk report being updated section-by-section.
 pub struct BenchReport {
     doc: Json,
@@ -438,6 +446,95 @@ pub fn validate_interleave(doc: &Json, strict: bool) -> Result<()> {
     Ok(())
 }
 
+/// Validate a `BENCH_speculate.json` document (the `speculate` section the
+/// speculate bench emits: per-(`k_ratio`, `speculate`) draft acceptance
+/// rate, effective tokens per verify cycle, and ITL vs the speculate=0
+/// baseline; schema in BENCHES.md). The schema pass enforces the counter
+/// reconciliation the serving metrics promise — `accepted + rejected ==
+/// drafted`, the acceptance rate and effective-tokens ratios re-derive
+/// from the raw counters, and the steady-state draft/verify loop reported
+/// zero heap allocations. `strict` refuses projected snapshots and asserts
+/// the speculation acceptance bound: at `k_ratio = 0.25` (k = d/4) the
+/// sparse draft must be right often enough that each exact verify pass
+/// commits more than one token on average (`tokens_per_step_effective >
+/// 1.0`) — otherwise speculating is pure overhead at that operating point.
+pub fn validate_speculate(doc: &Json, strict: bool) -> Result<()> {
+    let ver = doc.get("schema_version").as_i64().unwrap_or(0);
+    if ver != SCHEMA_VERSION {
+        bail!("schema_version {ver} != {SCHEMA_VERSION}");
+    }
+    let rows = rows_of(doc, "speculate")?;
+    for r in rows {
+        if r.get("backend").as_str().is_none() {
+            bail!("speculate row missing 'backend': {r}");
+        }
+        for f in ["k_ratio", "acceptance_rate", "tokens_per_step_effective", "tok_per_s",
+                  "itl_ratio_vs_off"] {
+            if r.get(f).as_f64().is_none() {
+                bail!("speculate row missing '{f}': {r}");
+            }
+        }
+        for f in ["speculate", "batch", "drafted", "accepted", "rejected", "committed",
+                  "lane_cycles", "steady_spec_allocs"] {
+            if r.get(f).as_i64().is_none() {
+                bail!("speculate row missing '{f}': {r}");
+            }
+        }
+        let (drafted, accepted, rejected) = (
+            r.get("drafted").as_i64().unwrap_or(0),
+            r.get("accepted").as_i64().unwrap_or(0),
+            r.get("rejected").as_i64().unwrap_or(0),
+        );
+        if accepted + rejected != drafted {
+            bail!("speculate row inconsistent (accepted {accepted} + rejected {rejected} != \
+                   drafted {drafted}): the draft ledger must reconcile");
+        }
+        if drafted > 0 {
+            let rate = r.get("acceptance_rate").as_f64().unwrap_or(-1.0);
+            let derived = accepted as f64 / drafted as f64;
+            if (rate - derived).abs() > 1e-6 {
+                bail!("speculate row: acceptance_rate {rate} != accepted/drafted {derived}: {r}");
+            }
+        }
+        let cycles = r.get("lane_cycles").as_i64().unwrap_or(0);
+        if cycles > 0 {
+            let eff = r.get("tokens_per_step_effective").as_f64().unwrap_or(-1.0);
+            let derived = r.get("committed").as_i64().unwrap_or(0) as f64 / cycles as f64;
+            if (eff - derived).abs() > 1e-6 {
+                bail!("speculate row: tokens_per_step_effective {eff} != committed/lane_cycles \
+                       {derived}: {r}");
+            }
+        }
+        if r.get("speculate").as_i64() == Some(0) && drafted != 0 {
+            bail!("speculate row: speculate=0 baseline reports drafted tokens: {r}");
+        }
+        // tentpole acceptance: the draft/verify loop is allocation-free
+        if r.get("steady_spec_allocs").as_i64() != Some(0) {
+            bail!("speculate row reports steady-state draft/verify allocations: {r}");
+        }
+    }
+    if !strict {
+        return Ok(());
+    }
+    if doc.get("projected").as_bool() == Some(true) {
+        bail!("strict validation refused: numbers are cost-model projections, not measurements \
+               (regenerate with the speculate bench)");
+    }
+    let row = rows
+        .iter()
+        .find(|r| {
+            (r.get("k_ratio").as_f64().unwrap_or(-1.0) - 0.25).abs() < 1e-9
+                && r.get("speculate").as_i64().unwrap_or(0) > 0
+        })
+        .context("missing k_ratio=0.25 speculate>0 row")?;
+    let eff = row.get("tokens_per_step_effective").as_f64().unwrap_or(0.0);
+    if eff <= 1.0 {
+        bail!("k_ratio=0.25 speculation commits only {eff:.3} tokens per verify cycle — \
+               speculating must beat one-token-per-step to pay for itself");
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -801,6 +898,93 @@ mod tests {
         assert!(validate_interleave(&projected, true).is_err());
 
         assert!(validate_interleave(&Json::obj(vec![]), false).is_err());
+    }
+
+    fn speculate_row(k: f64, spec: f64, drafted: f64, accepted: f64, eff: f64) -> Json {
+        let cycles = 100.0;
+        Json::obj(vec![
+            ("backend", Json::Str("native".into())),
+            ("k_ratio", Json::Num(k)),
+            ("speculate", Json::Num(spec)),
+            ("batch", Json::Num(4.0)),
+            ("drafted", Json::Num(drafted)),
+            ("accepted", Json::Num(accepted)),
+            ("rejected", Json::Num(drafted - accepted)),
+            ("committed", Json::Num(eff * cycles)),
+            ("lane_cycles", Json::Num(cycles)),
+            (
+                "acceptance_rate",
+                Json::Num(if drafted > 0.0 { accepted / drafted } else { 0.0 }),
+            ),
+            ("tokens_per_step_effective", Json::Num(eff)),
+            ("tok_per_s", Json::Num(900.0)),
+            ("itl_ratio_vs_off", Json::Num(1.0 / eff.max(1e-9))),
+            ("steady_spec_allocs", Json::Num(0.0)),
+        ])
+    }
+
+    fn speculate_doc(rows: Vec<Json>) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            (
+                "sections",
+                Json::obj(vec![("speculate", Json::obj(vec![("rows", Json::Arr(rows))]))]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn validate_speculate_schema_and_invariants() {
+        let good = speculate_doc(vec![
+            speculate_row(0.25, 0.0, 0.0, 0.0, 1.0),
+            speculate_row(0.25, 4.0, 380.0, 290.0, 2.9),
+            speculate_row(0.5, 4.0, 390.0, 340.0, 3.4),
+        ]);
+        validate_speculate(&good, false).unwrap();
+        validate_speculate(&good, true).unwrap();
+
+        // the draft ledger must reconcile
+        let mut bad = speculate_row(0.25, 4.0, 380.0, 290.0, 2.9);
+        if let Json::Obj(r) = &mut bad {
+            r.insert("rejected".into(), Json::Num(5.0));
+        }
+        assert!(validate_speculate(&speculate_doc(vec![bad]), false).is_err());
+
+        // derived rates must match the raw counters
+        let mut fudged = speculate_row(0.25, 4.0, 380.0, 290.0, 2.9);
+        if let Json::Obj(r) = &mut fudged {
+            r.insert("acceptance_rate".into(), Json::Num(0.99));
+        }
+        assert!(validate_speculate(&speculate_doc(vec![fudged]), false).is_err());
+
+        // a speculate=0 baseline claiming drafts is lying
+        let lying = speculate_doc(vec![speculate_row(0.25, 0.0, 10.0, 10.0, 1.0)]);
+        assert!(validate_speculate(&lying, false).is_err());
+
+        // a draft/verify-loop allocation is a schema failure
+        let mut leaky = speculate_row(0.25, 4.0, 380.0, 290.0, 2.9);
+        if let Json::Obj(r) = &mut leaky {
+            r.insert("steady_spec_allocs".into(), Json::Num(2.0));
+        }
+        assert!(validate_speculate(&speculate_doc(vec![leaky]), false).is_err());
+
+        // effective tokens/step must beat 1.0 at k=d/4 under --strict only
+        let weak = speculate_doc(vec![
+            speculate_row(0.25, 0.0, 0.0, 0.0, 1.0),
+            speculate_row(0.25, 4.0, 380.0, 0.0, 1.0),
+        ]);
+        validate_speculate(&weak, false).unwrap();
+        assert!(validate_speculate(&weak, true).is_err());
+
+        // projected snapshots pass the schema but refuse strict validation
+        let mut projected = good.clone();
+        if let Json::Obj(o) = &mut projected {
+            o.insert("projected".into(), Json::Bool(true));
+        }
+        validate_speculate(&projected, false).unwrap();
+        assert!(validate_speculate(&projected, true).is_err());
+
+        assert!(validate_speculate(&Json::obj(vec![]), false).is_err());
     }
 
     #[test]

@@ -1,14 +1,15 @@
 //! Admission queue + lane table (continuous batching).
 //!
-//! Requests enter a FIFO; the lane table assigns them to free batch lanes
+//! Requests enter a priority-ordered queue (higher `priority` first,
+//! FIFO within a class); the lane table assigns them to free batch lanes
 //! as capacity opens up (a finished request frees its lane immediately —
 //! no epoch barriers). Under waiting-vs-served pressure the queue may
 //! promote a later request past a head the budget cannot admit yet —
 //! bounded by [`MAX_HEAD_OVERTAKES`] so the head is never starved
 //! indefinitely either. Invariants (property-tested):
 //! * a request occupies at most one lane,
-//! * admission order is FIFO among waiting requests except for bounded
-//!   pressure overtakes of a blocked head,
+//! * admission order is FIFO among waiting requests of the same priority
+//!   class except for bounded pressure overtakes of a blocked head,
 //! * a blocked head is overtaken at most `MAX_HEAD_OVERTAKES` times,
 //! * occupied lanes ≤ batch size.
 
@@ -43,8 +44,20 @@ pub struct AdmissionQueue {
 }
 
 impl AdmissionQueue {
+    /// Enqueue ordered by priority class: the new entry goes after the
+    /// last waiter whose `priority >= r.priority`, so higher-priority
+    /// requests jump ahead of lower ones while FIFO age is preserved
+    /// within a class. Everything downstream (`requeue_front`,
+    /// `pop_past_head`, the overtake bound) operates on positions, not
+    /// priorities, so the `waiting_served_ratio` head-starvation bound
+    /// holds for whatever sits at the head.
     pub fn push(&mut self, r: GenRequest) {
-        self.q.push_back(Queued { req: r, enqueued_at: Instant::now(), overtaken: 0 });
+        let idx = self
+            .q
+            .iter()
+            .rposition(|e| e.req.priority >= r.priority)
+            .map_or(0, |i| i + 1);
+        self.q.insert(idx, Queued { req: r, enqueued_at: Instant::now(), overtaken: 0 });
     }
 
     /// Return a popped entry to the head of the queue (memory-aware
@@ -169,6 +182,43 @@ mod tests {
             assert_eq!(q.pop_front().unwrap().req.id, i);
         }
         assert!(q.pop_front().is_none());
+    }
+
+    #[test]
+    fn priority_orders_ahead_of_fifo_age() {
+        let mut q = AdmissionQueue::default();
+        let mut push = |id: u64, pri: i64| {
+            let mut r = GenRequest::new(id, vec![], 1);
+            r.priority = pri;
+            q.push(r);
+        };
+        push(0, 0);
+        push(1, 0);
+        push(2, 5); // jumps both default-priority waiters
+        push(3, 5); // same class — behind 2 (FIFO within class)
+        push(4, -1); // below default — tail
+        push(5, 0); // behind the existing default-class waiters
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_front()).map(|e| e.req.id).collect();
+        assert_eq!(order, vec![2, 3, 0, 1, 5, 4]);
+    }
+
+    #[test]
+    fn priority_head_keeps_overtake_bound() {
+        let mut q = AdmissionQueue::default();
+        // a high-priority head too big for the budget must still be
+        // admitted after MAX_HEAD_OVERTAKES pressure skips
+        let mut big = GenRequest::new(0, vec![], 100);
+        big.priority = 9;
+        q.push(big);
+        for i in 1..=MAX_HEAD_OVERTAKES + 1 {
+            q.push(GenRequest::new(i as u64, vec![], 1));
+        }
+        let fits = |r: &GenRequest| r.max_new_tokens <= 10;
+        for _ in 0..MAX_HEAD_OVERTAKES {
+            assert!(q.pop_past_head(fits).is_some());
+        }
+        assert!(q.pop_past_head(fits).is_none(), "priority head keeps the bound");
+        assert_eq!(q.pop_front().unwrap().req.id, 0);
     }
 
     #[test]
@@ -362,6 +412,84 @@ mod tests {
                 }
                 // no still-queued fitting request was overtaken more than
                 // the bound while at the head
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_priority_classes_order_and_bound_survive() {
+        check(
+            "queue-priority-fairness",
+            100,
+            |g| {
+                // random pushes across 3 priority classes + random pops
+                let budget = 1 + g.rng.below(12);
+                let ops: Vec<(bool, usize, i64)> = (0..10 + g.rng.below(60))
+                    .map(|_| (g.rng.f64() < 0.5, 1 + g.rng.below(20), g.rng.below(3) as i64))
+                    .collect();
+                (budget, ops)
+            },
+            |(budget, ops)| {
+                let budget = *budget;
+                let mut q = AdmissionQueue::default();
+                let mut next_id = 0u64;
+                let mut admitted: Vec<u64> = vec![];
+                let mut pushed: Vec<(u64, usize, i64)> = vec![];
+                for &(is_push, cost, pri) in ops {
+                    if is_push {
+                        let mut r = GenRequest::new(next_id, vec![], cost);
+                        r.priority = pri;
+                        q.push(r);
+                        pushed.push((next_id, cost, pri));
+                        next_id += 1;
+                    } else {
+                        let fits = |r: &GenRequest| r.max_new_tokens <= budget;
+                        let head_fits = match q.pop_front() {
+                            Some(e) if fits(&e.req) => {
+                                admitted.push(e.req.id);
+                                true
+                            }
+                            Some(e) => {
+                                q.requeue_front(e);
+                                false
+                            }
+                            None => false,
+                        };
+                        if !head_fits {
+                            if let Some(e) = q.pop_past_head(fits) {
+                                admitted.push(e.req.id);
+                            }
+                        }
+                    }
+                }
+                // every admitted id was pushed exactly once
+                let mut seen = std::collections::HashSet::new();
+                for id in &admitted {
+                    if !seen.insert(*id) {
+                        return Err(format!("id {id} admitted twice"));
+                    }
+                }
+                // within each priority class, fitting requests are
+                // admitted in push order (cross-class jumps are the
+                // feature; intra-class FIFO is the invariant)
+                for class in 0..3i64 {
+                    let fit_order: Vec<u64> = pushed
+                        .iter()
+                        .filter(|(id, c, p)| *p == class && *c <= budget && admitted.contains(id))
+                        .map(|(id, _, _)| *id)
+                        .collect();
+                    let admitted_fit: Vec<u64> = admitted
+                        .iter()
+                        .copied()
+                        .filter(|id| fit_order.contains(id))
+                        .collect();
+                    if fit_order != admitted_fit {
+                        return Err(format!(
+                            "class {class}: fit order {fit_order:?} != admitted {admitted_fit:?}"
+                        ));
+                    }
+                }
                 Ok(())
             },
         );

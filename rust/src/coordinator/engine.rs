@@ -47,6 +47,7 @@ use crate::aqua::policy::AquaConfig;
 use crate::kvpool::{budget_pages, KvPoolConfig, PoolLayout, DEFAULT_PAGE_SLOTS};
 use crate::model::sampling::Sampler;
 use crate::runtime::backend::{AquaKnobs, BackendSpec, ExecBackend, LaneError};
+use crate::spec::SpecController;
 use crate::tensor::softmax::log_softmax_at;
 use crate::trace::{TraceMode, TracePhase, TraceRecorder};
 use crate::util::prng::Rng;
@@ -105,6 +106,17 @@ pub struct EngineConfig {
     /// relaxed atomic load per would-be event), `Errors` (failure-path
     /// phases only), `Sampled(n)` (1-in-N request timelines), `Full`.
     pub trace: TraceMode,
+    /// Self-speculative decoding draft depth (0 = off, byte-identical to
+    /// the plain decode path). Each decode turn drafts up to this many
+    /// tokens per lane through the configured sparse score path
+    /// (`aqua.k_ratio`), then verifies the block in one batched exact
+    /// pass over the same KV cache and commits the longest matching
+    /// prefix — lossless: outputs are bit-identical to running
+    /// `k_ratio = 1.0` with speculation off. Engages only with the
+    /// greedy sampler, H2O eviction off, and a verify-capable backend;
+    /// otherwise the engine silently falls back to plain decoding (see
+    /// [`crate::spec`]).
+    pub speculate: usize,
 }
 
 impl Default for EngineConfig {
@@ -125,6 +137,7 @@ impl Default for EngineConfig {
             interleave: true,
             max_consecutive_step_failures: 3,
             trace: TraceMode::Off,
+            speculate: 0,
         }
     }
 }
@@ -221,7 +234,9 @@ impl StepScratch {
             live: Vec::with_capacity(batch),
             slot_mask: Vec::with_capacity(batch * s_cap),
             mass: Vec::with_capacity(s_cap),
-            itl_us: Vec::with_capacity(batch),
+            // a speculative cycle commits bursts of up to `chunk`
+            // (= speculate + 1) tokens per lane in one pass
+            itl_us: Vec::with_capacity(batch * chunk.max(1)),
         }
     }
 }
@@ -266,6 +281,21 @@ pub struct Engine {
     kv_reserved: Vec<usize>,
     /// Reusable per-pass buffers (no steady-state allocation).
     scratch: StepScratch,
+    /// Score-path knobs derived from `cfg.aqua` (rebuilt by `with_aqua`;
+    /// cached so the steady-state loop never re-allocates `dim_keep`).
+    knobs: AquaKnobs,
+    /// Exact-read knobs: `k_ratio = 1.0` over the resident key width.
+    /// The verify pass's score path — and, when speculation is on, the
+    /// prefill/attach knobs too (KV content depends on read knobs
+    /// through layer stacking, so the whole non-draft path runs
+    /// exact-read to keep committed outputs bit-identical to the
+    /// `k_ratio = 1.0`, `speculate = 0` baseline).
+    xknobs: AquaKnobs,
+    /// Speculation engaged this run: `speculate > 0`, greedy sampler,
+    /// H2O off, verify-capable backend. Re-evaluated by `with_aqua`.
+    spec_on: bool,
+    /// Draft bookkeeping (`Some` iff `cfg.speculate > 0`).
+    spec: Option<SpecController>,
     /// Duty-cycle state: what the previous pass ran (drives the 1:1
     /// prefill/decode alternation when both have work).
     last_pass_was_prefill: bool,
@@ -286,6 +316,15 @@ impl Engine {
         let cap = backend.model_config().max_seq;
         let chunk = backend.prefill_chunk();
         let h2o = H2oPolicy::new(cfg.aqua.h2o_ratio, cfg.h2o_recent_window);
+        let d = backend.model_config().d_head;
+        let knobs = AquaKnobs::from_config(&cfg.aqua, d);
+        let xknobs = AquaKnobs::from_config(&AquaConfig { k_ratio: 1.0, ..cfg.aqua }, d);
+        let spec_on = cfg.speculate > 0
+            && !h2o.enabled()
+            && matches!(cfg.sampler, Sampler::Greedy)
+            && backend.supports_verify();
+        let spec =
+            if cfg.speculate > 0 { Some(SpecController::new(cfg.batch, cfg.speculate)) } else { None };
         Ok(Engine {
             backend,
             queue: AdmissionQueue::default(),
@@ -300,7 +339,13 @@ impl Engine {
             kv_layout,
             kv_budget_pages,
             kv_reserved: vec![0; cfg.batch],
-            scratch: StepScratch::new(cfg.batch, chunk, cap),
+            // the verify window is up to `speculate + 1` tokens wide, so
+            // the token scratch must cover it allocation-free
+            scratch: StepScratch::new(cfg.batch, chunk.max(cfg.speculate + 1), cap),
+            knobs,
+            xknobs,
+            spec_on,
+            spec,
             last_pass_was_prefill: false,
             consecutive_failures: 0,
             cfg,
@@ -374,6 +419,13 @@ impl Engine {
         let old_kd = self.cfg.aqua.mem_dims(d);
         self.cfg.aqua = aqua;
         self.h2o = H2oPolicy::new(aqua.h2o_ratio, self.cfg.h2o_recent_window);
+        self.knobs = AquaKnobs::from_config(&self.cfg.aqua, d);
+        self.xknobs = AquaKnobs::from_config(&AquaConfig { k_ratio: 1.0, ..self.cfg.aqua }, d);
+        // knob swaps can flip H2O on/off, which gates speculation
+        self.spec_on = self.cfg.speculate > 0
+            && !self.h2o.enabled()
+            && matches!(self.cfg.sampler, Sampler::Greedy)
+            && self.backend.supports_verify();
         if aqua.mem_dims(d) != old_kd {
             if !self.lanes.is_idle() || !self.queue.is_empty() {
                 // Rebuilding would drop in-flight lanes' cached context and
@@ -502,7 +554,7 @@ impl Engine {
         }
         if !self.lanes.is_idle() {
             self.metrics.record_step(self.lanes.occupied() as u64, self.cfg.batch as u64);
-            let pass = self.decode_pass();
+            let pass = if self.spec_on { self.spec_pass() } else { self.decode_pass() };
             self.last_pass_was_prefill = false;
             self.contain(pass, false)?;
             return Ok(true);
@@ -783,8 +835,10 @@ impl Engine {
         // attach raises page refcounts; if admission defers after all,
         // retire_lane() rolls it back.
         let attach = if self.prefix_share_ok(&entry.req) {
-            let knobs = AquaKnobs::from_config(&self.cfg.aqua, self.backend.model_config().d_head);
-            match self.backend.attach_prefix(lane, &entry.req.prompt, &knobs) {
+            // under speculation the whole committed path (prefill, attach,
+            // verify) runs exact-read, so cached chains must match
+            let knobs = if self.spec_on { &self.xknobs } else { &self.knobs };
+            match self.backend.attach_prefix(lane, &entry.req.prompt, knobs) {
                 Ok(a) => a,
                 Err(e) => {
                     crate::log_warn!("attach_prefix failed (serving cold): {e:#}");
@@ -859,9 +913,9 @@ impl Engine {
     fn prefill_pass(&mut self) -> Result<()> {
         let b = self.cfg.batch;
         let chunk = self.backend.prefill_chunk();
-        let (s_cap, d, n_layers, vocab) = {
+        let (s_cap, n_layers, vocab) = {
             let c = self.backend.model_config();
-            (c.max_seq, c.d_head, c.n_layers, c.vocab)
+            (c.max_seq, c.n_layers, c.vocab)
         };
 
         // Plan the pass: whole per-lane chunks under the token budget
@@ -894,7 +948,7 @@ impl Engine {
             }
         }
         self.fill_mask();
-        let knobs = AquaKnobs::from_config(&self.cfg.aqua, d);
+        let knobs = if self.spec_on { &self.xknobs } else { &self.knobs };
 
         let t0 = Instant::now();
         let out = self.backend.prefill(
@@ -902,7 +956,7 @@ impl Engine {
             &self.scratch.tokens,
             &self.scratch.pos,
             &self.scratch.slot_mask,
-            &knobs,
+            knobs,
         )?;
         let real_tokens: u64 = self.scratch.fed_now.iter().map(|&n| n as u64).sum();
         self.metrics.record_prefill(t0.elapsed(), real_tokens);
@@ -985,9 +1039,9 @@ impl Engine {
 
     fn decode_pass(&mut self) -> Result<()> {
         let b = self.cfg.batch;
-        let (s_cap, d, n_layers, vocab) = {
+        let (s_cap, n_layers, vocab) = {
             let c = self.backend.model_config();
-            (c.max_seq, c.d_head, c.n_layers, c.vocab)
+            (c.max_seq, c.n_layers, c.vocab)
         };
 
         // -1 marks dead lanes (idle or still prefilling); backends may
@@ -1020,7 +1074,6 @@ impl Engine {
         }
 
         self.fill_mask();
-        let knobs = AquaKnobs::from_config(&self.cfg.aqua, d);
 
         let t0 = Instant::now();
         let out = self.backend.decode(
@@ -1028,7 +1081,7 @@ impl Engine {
             &self.scratch.tokens,
             &self.scratch.pos,
             &self.scratch.slot_mask,
-            &knobs,
+            &self.knobs,
         )?;
         let live_count = self.scratch.live.iter().filter(|&&l| l).count() as u64;
         self.metrics.record_decode(t0.elapsed(), live_count);
@@ -1081,6 +1134,246 @@ impl Engine {
             }
         }
         self.metrics.record_itl(&self.scratch.itl_us);
+        for lane in finish_list {
+            self.finish_lane(lane, None);
+        }
+        Ok(())
+    }
+
+    // ----------------------------------------------------------- speculation
+
+    /// One self-speculative decode turn: AQUA-sparse draft, exact batched
+    /// verify, longest-matching-prefix commit — all against the one
+    /// shared KV cache (see [`crate::spec`] for the full protocol).
+    ///
+    /// Lossless by construction: every committed token is the argmax of
+    /// an exact-read logits row, so outputs are bit-identical to plain
+    /// decoding with `k_ratio = 1.0` and `speculate = 0`. On a backend
+    /// error the pass restores every enrolled lane's committed state
+    /// (mask + page write-index) before the error reaches
+    /// [`Engine::contain`], preserving the no-side-effects contract the
+    /// containment re-run relies on.
+    fn spec_pass(&mut self) -> Result<()> {
+        let mut spec = self.spec.take().expect("spec_pass requires a controller");
+        let r = self.spec_cycle(&mut spec);
+        if r.is_err() {
+            for lane in 0..self.cfg.batch {
+                if spec.is_active(lane) {
+                    let base = spec.base_len(lane);
+                    self.kv[lane].rollback(base);
+                    self.backend.rollback_lane(lane, base);
+                }
+            }
+        }
+        self.spec = Some(spec);
+        r
+    }
+
+    fn spec_cycle(&mut self, spec: &mut SpecController) -> Result<()> {
+        let b = self.cfg.batch;
+        let (s_cap, vocab) = {
+            let c = self.backend.model_config();
+            (c.max_seq, c.vocab)
+        };
+
+        // ---- enroll: every decode-ready lane joins the cycle
+        spec.begin_cycle();
+        for lane in 0..b {
+            let Some(a) = &self.active[lane] else { continue };
+            if a.pending_token < 0 || self.kv[lane].is_full() {
+                continue;
+            }
+            let base_len = self.kv[lane].len;
+            // the cycle commits up to `n_plan + 1` tokens: cap the plan
+            // so neither `max_new_tokens` nor KV capacity can overrun
+            let remaining = a.req.max_new_tokens - a.generated.len();
+            let n_plan = self
+                .cfg
+                .speculate
+                .min(remaining.saturating_sub(1))
+                .min(s_cap - 1 - base_len);
+            spec.plan_lane(lane, base_len, a.pending_token, n_plan);
+        }
+        if spec.active_lanes() == 0 {
+            // every decode-ready lane is blocked (capacity) — finish
+            // them, exactly like the plain decode pass
+            for lane in 0..b {
+                if matches!(&self.active[lane], Some(a) if a.prompt_fed >= a.req.prompt.len()) {
+                    self.finish_lane(lane, Some(FinishReason::Length));
+                }
+            }
+            return Ok(());
+        }
+
+        let t0 = Instant::now();
+
+        // ---- draft: greedy steps through the configured sparse score
+        // path; the KV these steps append is approximate (verify
+        // rewrites every drafted position through the exact path)
+        loop {
+            self.scratch.tokens.clear();
+            self.scratch.tokens.resize(b, -1);
+            self.scratch.pos.clear();
+            self.scratch.pos.resize(b, 0);
+            self.scratch.live.clear();
+            self.scratch.live.resize(b, false);
+            let mut any = false;
+            for lane in 0..b {
+                self.scratch.pos[lane] = self.kv[lane].len.min(s_cap - 1) as i32;
+                if spec.wants_draft(lane) {
+                    self.scratch.tokens[lane] = spec.feed_token(lane, spec.n_draft(lane));
+                    self.scratch.live[lane] = true;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+            self.fill_mask();
+            let out = self.backend.decode(
+                b,
+                &self.scratch.tokens,
+                &self.scratch.pos,
+                &self.scratch.slot_mask,
+                &self.knobs,
+            )?;
+            self.metrics.record_kernels(&out.kernels, true);
+            for lane in 0..b {
+                if !self.scratch.live[lane] {
+                    continue;
+                }
+                let row = &out.logits[lane * vocab..(lane + 1) * vocab];
+                let tok = self.cfg.sampler.sample(row, &mut self.rng);
+                spec.push_draft(lane, tok);
+                self.kv[lane].commit_write(1);
+                // no point drafting past a stop token
+                if self.active[lane].as_ref().unwrap().req.stop_token == Some(tok) {
+                    spec.truncate_plan(lane);
+                }
+            }
+        }
+
+        // ---- rewind: restore every enrolled lane's pre-draft attendable
+        // mask, so verify scores against exactly the committed state
+        for lane in 0..b {
+            if spec.is_active(lane) {
+                self.kv[lane].rollback(spec.base_len(lane));
+            }
+        }
+
+        // ---- verify: one batched exact pass over [pending, drafts...]
+        // rows; -1 pads shorter lanes and parks idle ones
+        let t = spec.max_draft() + 1;
+        self.scratch.tokens.clear();
+        self.scratch.tokens.resize(b * t, -1);
+        self.scratch.pos.clear();
+        self.scratch.pos.resize(b, 0);
+        self.scratch.live.clear();
+        self.scratch.live.resize(b, false);
+        for lane in 0..b {
+            if spec.is_active(lane) {
+                let row = lane * t;
+                self.scratch.tokens[row] = spec.base_pending(lane);
+                let drafts = spec.drafts(lane);
+                self.scratch.tokens[row + 1..row + 1 + drafts.len()].copy_from_slice(drafts);
+                self.scratch.pos[lane] = spec.base_len(lane) as i32;
+                self.scratch.live[lane] = true;
+            } else {
+                self.scratch.pos[lane] = self.kv[lane].len.min(s_cap - 1) as i32;
+            }
+        }
+        self.fill_mask();
+        let out = self.backend.verify(
+            b,
+            &self.scratch.tokens,
+            &self.scratch.pos,
+            t,
+            &self.scratch.slot_mask,
+            &self.xknobs,
+        )?;
+        self.metrics.record_kernels(&out.kernels, true);
+        self.trace.record(
+            TracePhase::Score,
+            0,
+            out.kernels.dominant_mode() as i32,
+            out.kernels.score_ns,
+        );
+
+        // ---- commit: per lane, the longest draft prefix matching the
+        // exact argmax plus the one token the verify pass itself produced
+        self.scratch.itl_us.clear();
+        let now = Instant::now();
+        let mut finish_list: Vec<usize> = vec![];
+        let mut accepted_total = 0u64;
+        let mut committed_total = 0u64;
+        for lane in 0..b {
+            if !self.scratch.live[lane] {
+                continue;
+            }
+            let base_len = spec.base_len(lane);
+            let n_draft = spec.n_draft(lane);
+            let mut n_committed = 0usize;
+            let mut lane_accepted = 0usize;
+            let mut stop_hit = false;
+            for j in 1..=n_draft + 1 {
+                let row = &out.logits[(lane * t + j - 1) * vocab..(lane * t + j) * vocab];
+                let tok = self.cfg.sampler.sample(row, &mut self.rng);
+                let a = self.active[lane].as_mut().unwrap();
+                // burst delivery, honestly: the first committed token of
+                // the cycle carries the real inter-token gap, the rest
+                // arrive in the same instant
+                if n_committed == 0 {
+                    if let Some(prev) = a.last_token_at {
+                        self.scratch.itl_us.push(now.duration_since(prev).as_micros() as u64);
+                    }
+                } else {
+                    self.scratch.itl_us.push(0);
+                }
+                if a.first_token_at.is_none() {
+                    a.first_token_at = Some(now);
+                }
+                a.last_token_at = Some(now);
+                a.gen_logprobs.push(log_softmax_at(row, tok as usize));
+                a.generated.push(tok);
+                a.pending_token = tok;
+                n_committed = j;
+                let matched = j <= n_draft && spec.drafts(lane)[j - 1] == tok;
+                if matched {
+                    lane_accepted += 1;
+                }
+                stop_hit = a.generated.len() >= a.req.max_new_tokens
+                    || a.req.stop_token == Some(tok)
+                    || base_len + j >= s_cap;
+                if stop_hit || !matched {
+                    break;
+                }
+            }
+            // committed tokens become attendable; drafted-but-unverified
+            // pages past the commit point return to the pool
+            self.kv[lane].commit_write(n_committed);
+            self.backend.rollback_lane(lane, base_len + n_committed);
+            self.active[lane].as_mut().unwrap().next_pos = base_len + n_committed;
+            accepted_total += lane_accepted as u64;
+            committed_total += n_committed as u64;
+            let rejected = n_draft - lane_accepted;
+            let rid = self.active[lane].as_ref().map(|a| a.req.id).unwrap_or(0);
+            if n_draft > 0 {
+                self.trace.record(TracePhase::DraftBlock, rid, lane as i32, n_draft as u64);
+            }
+            self.trace.record(TracePhase::VerifyBlock, rid, lane as i32, n_committed as u64);
+            if rejected > 0 {
+                self.trace.record(TracePhase::Rollback, rid, lane as i32, rejected as u64);
+            }
+            if stop_hit {
+                finish_list.push(lane);
+            }
+        }
+        let lane_cycles = spec.active_lanes();
+        self.metrics.record_decode(t0.elapsed(), committed_total);
+        self.metrics.record_kv(&out.kv, self.live_slots_total());
+        self.metrics.record_spec(spec.total_drafted(), accepted_total, committed_total, lane_cycles);
+        self.metrics.record_itl(&self.scratch.itl_us);
+        self.trace.record(TracePhase::DecodeBatch, 0, -1, lane_cycles);
         for lane in finish_list {
             self.finish_lane(lane, None);
         }

@@ -57,6 +57,20 @@ impl LaneKv {
         self.len = end;
     }
 
+    /// Rewind the write cursor to `new_len`, marking every slot at or past
+    /// it dead again. Used by speculative decoding to discard drafted
+    /// positions past the verifier's accepted prefix; a no-op when the
+    /// cursor is already at or below `new_len`.
+    pub fn rollback(&mut self, new_len: usize) {
+        if new_len >= self.len {
+            return;
+        }
+        for i in new_len..self.len {
+            self.slot_mask[i] = 0.0;
+        }
+        self.len = new_len;
+    }
+
     /// Number of currently attendable slots.
     pub fn live_slots(&self) -> usize {
         self.slot_mask.iter().filter(|&&m| m > 0.5).count()
@@ -132,6 +146,23 @@ mod tests {
         assert_eq!(l.len, 0);
         assert_eq!(l.live_slots(), 0);
         assert!(l.h2o_acc.iter().all(|&a| a == 0.0));
+    }
+
+    #[test]
+    fn rollback_rewinds_mask_and_cursor() {
+        let mut l = LaneKv::new(8);
+        l.commit_write(6);
+        l.rollback(3);
+        assert_eq!(l.len, 3);
+        assert_eq!(l.live_slots(), 3);
+        assert!(l.slot_mask[3..].iter().all(|&m| m == 0.0));
+        // no-op when already at or below the target
+        l.rollback(5);
+        assert_eq!(l.len, 3);
+        // writes resume at the rolled-back cursor
+        l.commit_write(2);
+        assert_eq!(l.len, 5);
+        assert_eq!(l.live_slots(), 5);
     }
 
     #[test]

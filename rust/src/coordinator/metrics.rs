@@ -106,6 +106,22 @@ struct Inner {
     /// of prefilled). `prompt_tokens` counts only *computed* tokens, so
     /// `prefix_hit_tokens + prompt_tokens` is the total prompt volume.
     prefix_hit_tokens: u64,
+    /// Speculative decoding: tokens drafted via the sparse score path.
+    spec_drafted: u64,
+    /// Of `spec_drafted`, tokens the exact verify pass accepted.
+    spec_accepted: u64,
+    /// Of `spec_drafted`, tokens rolled back after verification
+    /// (`drafted == accepted + rejected` is the reconciliation `/stats`
+    /// and `benchcheck` assert).
+    spec_rejected: u64,
+    /// Tokens committed by speculative cycles (accepted drafts plus the
+    /// verifier's own next-token per lane).
+    spec_committed: u64,
+    /// Lane-cycle participations: one per live lane per draft/verify
+    /// cycle — the `tokens_per_step_effective` denominator.
+    spec_lane_cycles: u64,
+    /// Batched exact verification passes run.
+    spec_verify_passes: u64,
     wall_start: Option<std::time::Instant>,
 }
 
@@ -200,6 +216,33 @@ pub struct Snapshot {
     /// running prefill (`prompt_tokens` counts only computed tokens —
     /// the two reconcile to the total submitted prompt volume).
     pub prefix_hit_tokens: u64,
+    /// Prefix-index LRU evictions (chains unkeyed by the
+    /// `prefix_cache_pages` cap), from the latest pool gauges.
+    pub kv_prefix_evictions: u64,
+    /// Speculative decoding: tokens drafted via the sparse score path.
+    pub spec_drafted: u64,
+    /// Of `spec_drafted`, tokens the exact verify pass accepted.
+    pub spec_accepted: u64,
+    /// Of `spec_drafted`, tokens rolled back after verification. The
+    /// reconciliation `spec_drafted == spec_accepted + spec_rejected`
+    /// holds by construction and survives fleet merges.
+    pub spec_rejected: u64,
+    /// Tokens committed by speculative cycles (accepted drafts + the
+    /// verifier's own next-token per lane) — the
+    /// `tokens_per_step_effective` numerator.
+    pub spec_committed: u64,
+    /// Lane-cycle participations (one per live lane per cycle) — the
+    /// `tokens_per_step_effective` denominator.
+    pub spec_lane_cycles: u64,
+    /// Batched exact verification passes run.
+    pub spec_verify_passes: u64,
+    /// `spec_accepted / spec_drafted` (0 with speculation off). Re-derived
+    /// from the counters on every fleet merge.
+    pub spec_acceptance_rate: f64,
+    /// Mean tokens committed per lane per speculative cycle
+    /// (`spec_committed / spec_lane_cycles`; > 1.0 means speculation is
+    /// beating one-token-per-step decoding). 0 with speculation off.
+    pub tokens_per_step_effective: f64,
 }
 
 impl Metrics {
@@ -352,6 +395,20 @@ impl Metrics {
         self.locked().prefix_hit_tokens += tokens;
     }
 
+    /// Record one speculative draft/verify cycle: `drafted` tokens drafted
+    /// across the cycle's lanes, `accepted` of them verified, `committed`
+    /// tokens emitted in total (accepted + one verifier token per lane),
+    /// over `lane_cycles` participating lanes.
+    pub fn record_spec(&self, drafted: u64, accepted: u64, committed: u64, lane_cycles: u64) {
+        let mut i = self.locked();
+        i.spec_drafted += drafted;
+        i.spec_accepted += accepted;
+        i.spec_rejected += drafted - accepted;
+        i.spec_committed += committed;
+        i.spec_lane_cycles += lane_cycles;
+        i.spec_verify_passes += 1;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         use crate::util::{mean, percentile};
         let i = self.locked();
@@ -432,6 +489,23 @@ impl Metrics {
             kv_shared_pages: i.kv.shared_pages,
             kv_cow_copies: i.kv.cow_copies,
             prefix_hit_tokens: i.prefix_hit_tokens,
+            kv_prefix_evictions: i.kv.prefix_evictions,
+            spec_drafted: i.spec_drafted,
+            spec_accepted: i.spec_accepted,
+            spec_rejected: i.spec_rejected,
+            spec_committed: i.spec_committed,
+            spec_lane_cycles: i.spec_lane_cycles,
+            spec_verify_passes: i.spec_verify_passes,
+            spec_acceptance_rate: if i.spec_drafted > 0 {
+                i.spec_accepted as f64 / i.spec_drafted as f64
+            } else {
+                0.0
+            },
+            tokens_per_step_effective: if i.spec_lane_cycles > 0 {
+                i.spec_committed as f64 / i.spec_lane_cycles as f64
+            } else {
+                0.0
+            },
         }
     }
 }
@@ -494,6 +568,26 @@ impl Snapshot {
         self.kv_shared_pages += o.kv_shared_pages;
         self.kv_cow_copies += o.kv_cow_copies;
         self.prefix_hit_tokens += o.prefix_hit_tokens;
+        self.kv_prefix_evictions += o.kv_prefix_evictions;
+        // speculative counters add; the derived rates re-derive from the
+        // merged counters (like decode_tok_per_s below) so the aggregate
+        // reconciliation drafted == accepted + rejected keeps holding
+        self.spec_drafted += o.spec_drafted;
+        self.spec_accepted += o.spec_accepted;
+        self.spec_rejected += o.spec_rejected;
+        self.spec_committed += o.spec_committed;
+        self.spec_lane_cycles += o.spec_lane_cycles;
+        self.spec_verify_passes += o.spec_verify_passes;
+        self.spec_acceptance_rate = if self.spec_drafted > 0 {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        } else {
+            0.0
+        };
+        self.tokens_per_step_effective = if self.spec_lane_cycles > 0 {
+            self.spec_committed as f64 / self.spec_lane_cycles as f64
+        } else {
+            0.0
+        };
         self.p50_ttft_ms = self.p50_ttft_ms.max(o.p50_ttft_ms);
         self.p99_ttft_ms = self.p99_ttft_ms.max(o.p99_ttft_ms);
         self.requests_done += o.requests_done;
@@ -534,7 +628,9 @@ impl Snapshot {
              | queue wait p50 {:.2}ms p99 {:.2}ms\n\
              kernels dense={} sparse={} packed={} | score path {:.2}µs/decode\n\
              kv resident {:.1}KiB (peak {:.1}KiB) pages={} util {:.0}% stalls={} free={}\n\
-             prefix hits={} tok ({:.0}% of prompt volume) shared_pages={} cow={}",
+             prefix hits={} tok ({:.0}% of prompt volume) shared_pages={} cow={} evictions={}\n\
+             spec drafted={} accepted={} rejected={} (acceptance {:.0}%) \
+             effective {:.2} tok/step over {} verify passes",
             self.requests_done, self.requests_served, self.requests_rejected,
             self.requests_cancelled, self.requests_expired, self.requests_failed,
             self.lane_failures, self.tokens_generated, self.prompt_tokens,
@@ -556,6 +652,13 @@ impl Snapshot {
             100.0 * self.prefix_hit_rate(),
             self.kv_shared_pages,
             self.kv_cow_copies,
+            self.kv_prefix_evictions,
+            self.spec_drafted,
+            self.spec_accepted,
+            self.spec_rejected,
+            100.0 * self.spec_acceptance_rate,
+            self.tokens_per_step_effective,
+            self.spec_verify_passes,
         )
     }
 }
@@ -769,6 +872,38 @@ mod tests {
         let s2 = m2.snapshot();
         assert_eq!(s2.mean_ttft_ms, 0.0);
         assert_eq!(s2.p99_ttft_ms, 0.0);
+    }
+
+    #[test]
+    fn spec_counters_reconcile_and_merge() {
+        let m = Metrics::default();
+        // cycle 1: 2 lanes, 6 drafted, 5 accepted, 7 committed
+        m.record_spec(6, 5, 7, 2);
+        // cycle 2: 1 lane, 4 drafted, 2 accepted, 3 committed
+        m.record_spec(4, 2, 3, 1);
+        let s = m.snapshot();
+        assert_eq!(s.spec_drafted, 10);
+        assert_eq!(s.spec_accepted, 7);
+        assert_eq!(s.spec_rejected, 3);
+        assert_eq!(s.spec_drafted, s.spec_accepted + s.spec_rejected, "must reconcile");
+        assert_eq!(s.spec_verify_passes, 2);
+        assert!((s.spec_acceptance_rate - 0.7).abs() < 1e-12);
+        // 10 committed tokens over 3 lane-cycles
+        assert!((s.tokens_per_step_effective - 10.0 / 3.0).abs() < 1e-12);
+        assert!(s.report().contains("spec drafted=10"));
+
+        // fleet merge: counters add, rates re-derive, reconciliation holds
+        let mut a = s.clone();
+        a.merge(&s);
+        assert_eq!(a.spec_drafted, 20);
+        assert_eq!(a.spec_drafted, a.spec_accepted + a.spec_rejected);
+        assert!((a.spec_acceptance_rate - 0.7).abs() < 1e-12);
+        assert!((a.tokens_per_step_effective - 10.0 / 3.0).abs() < 1e-12);
+
+        // speculation off: rates report 0, not NaN
+        let off = Metrics::default().snapshot();
+        assert_eq!(off.spec_acceptance_rate, 0.0);
+        assert_eq!(off.tokens_per_step_effective, 0.0);
     }
 
     #[test]

@@ -21,6 +21,12 @@ pub struct GenRequest {
     /// request finishes terminally with [`FinishReason::DeadlineExpired`]
     /// and releases its lane + KV pages immediately.
     pub deadline_ms: u64,
+    /// Admission priority (JSON `"priority"`; default 0, higher admits
+    /// first). The queue orders by priority class ahead of FIFO age —
+    /// FIFO is preserved within a class, and the `waiting_served_ratio`
+    /// overtake bound applies to whatever sits at the head regardless of
+    /// class (see `batcher::AdmissionQueue::push`).
+    pub priority: i64,
 }
 
 impl GenRequest {
@@ -33,6 +39,7 @@ impl GenRequest {
             aqua: None,
             score_only: false,
             deadline_ms: 0,
+            priority: 0,
         }
     }
 }

@@ -119,6 +119,33 @@ impl LanePageTable {
         freed
     }
 
+    /// Rewind the write cursor to `new_written` and drop this lane's
+    /// reference to every mapped page that lies *wholly* at or past it —
+    /// the un-append path speculative decoding takes when the verifier
+    /// rejects drafted tokens. The page containing the new cursor is kept
+    /// (its slots past the cursor are dead in the engine's mask and get
+    /// overwritten positionally on the next write). Pages this lane wrote
+    /// during the draft were either freshly leased or copied-on-write
+    /// first, so dropping them never disturbs a COW donor. Returns the
+    /// number of pages unmapped.
+    pub fn rollback(&mut self, pool: &mut PagePool, new_written: usize) -> usize {
+        let mut freed = 0;
+        if new_written < self.written {
+            let ps = pool.layout().page_slots;
+            for (p, slot) in self.pages.iter_mut().enumerate() {
+                if p * ps < new_written {
+                    continue;
+                }
+                if let Some(id) = slot.take() {
+                    pool.free(id).expect("rollback freed a page the pool disowned");
+                    freed += 1;
+                }
+            }
+            self.written = new_written;
+        }
+        freed
+    }
+
     /// Lane retirement: drop every mapped page's reference and rewind the
     /// cursor.
     pub fn release_all(&mut self, pool: &mut PagePool) -> usize {
@@ -211,6 +238,59 @@ mod tests {
         assert_eq!(sharer.ensure_mut(&mut pool, 0).unwrap(), copy);
         assert_eq!(pool.gauges().cow_copies, 1);
         assert_eq!(donor.release_all(&mut pool) + sharer.release_all(&mut pool), 2);
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn rollback_frees_only_pages_wholly_past_the_cursor() {
+        let mut pool = pool();
+        let mut t = LanePageTable::new(4);
+        // write 14 positions: pages 0..2 full, page 3 partial (cursor at 14)
+        for pos in 0..14 {
+            t.ensure(&mut pool, pos / 4).unwrap();
+            t.note_write(pos);
+        }
+        assert_eq!(pool.pages_in_use(), 4);
+        // rewind into the middle of page 1: pages 2 and 3 unmap, page 1
+        // (contains the new cursor) stays
+        let freed = t.rollback(&mut pool, 6);
+        assert_eq!(freed, 2);
+        assert_eq!(t.written(), 6);
+        assert!(t.page(1).is_some());
+        assert!(t.page(2).is_none());
+        assert!(t.page(3).is_none());
+        assert_eq!(pool.pages_in_use(), 2);
+        // idempotent / no-op when the cursor is already at or below
+        assert_eq!(t.rollback(&mut pool, 6), 0);
+        assert_eq!(t.rollback(&mut pool, 10), 0);
+        assert_eq!(t.written(), 6);
+        // writes resume and re-lease on demand
+        t.ensure(&mut pool, 1).unwrap();
+        t.ensure(&mut pool, 2).unwrap();
+        t.note_write(8);
+        assert_eq!(t.written(), 9);
+        assert_eq!(pool.pages_in_use(), 3);
+    }
+
+    #[test]
+    fn rollback_drops_a_cow_sharers_reference_without_touching_the_donor() {
+        let mut pool = pool();
+        let mut donor = LanePageTable::new(4);
+        let page = donor.ensure(&mut pool, 0).unwrap();
+        pool.page_mut(page)[1] = 2.5;
+        donor.note_write(3);
+        let mut sharer = LanePageTable::new(4);
+        pool.retain(page).unwrap();
+        sharer.adopt(0, page);
+        sharer.set_written(4);
+        // sharer drafts into page 1 (fresh) and rolls all of it back
+        sharer.ensure_mut(&mut pool, 1).unwrap();
+        sharer.note_write(5);
+        assert_eq!(sharer.rollback(&mut pool, 4), 1);
+        assert_eq!(pool.ref_count(page), 2, "shared page refs untouched");
+        assert_eq!(pool.page(page)[1], 2.5);
+        sharer.release_all(&mut pool);
+        donor.release_all(&mut pool);
         assert_eq!(pool.pages_in_use(), 0);
     }
 

@@ -103,6 +103,9 @@ pub struct KvPoolGauges {
     pub alloc_stalls: u64,
     /// Cumulative copy-on-write page copies (a write hit a shared page).
     pub cow_copies: u64,
+    /// Cumulative prefix-index LRU evictions: chains unkeyed because the
+    /// `prefix_cache_pages` cap displaced the least-recently-attached one.
+    pub prefix_evictions: u64,
 }
 
 impl KvPoolGauges {
@@ -121,6 +124,7 @@ impl KvPoolGauges {
         self.frees += o.frees;
         self.alloc_stalls += o.alloc_stalls;
         self.cow_copies += o.cow_copies;
+        self.prefix_evictions += o.prefix_evictions;
     }
 }
 
@@ -192,6 +196,7 @@ mod tests {
             frees: 1,
             alloc_stalls: 0,
             cow_copies: 1,
+            prefix_evictions: 2,
         };
         let b = KvPoolGauges {
             resident_bytes: 50,
@@ -206,6 +211,7 @@ mod tests {
             frees: 0,
             alloc_stalls: 2,
             cow_copies: 0,
+            prefix_evictions: 1,
         };
         a.merge(&b);
         assert_eq!(a.resident_bytes, 150);
@@ -217,5 +223,6 @@ mod tests {
         assert_eq!(a.leases, 4);
         assert_eq!(a.alloc_stalls, 2);
         assert_eq!(a.cow_copies, 1);
+        assert_eq!(a.prefix_evictions, 3);
     }
 }

@@ -100,6 +100,7 @@ pub struct PagePool {
     frees: u64,
     stalls: u64,
     cow_copies: u64,
+    prefix_evictions: u64,
 }
 
 impl PagePool {
@@ -117,6 +118,7 @@ impl PagePool {
             frees: 0,
             stalls: 0,
             cow_copies: 0,
+            prefix_evictions: 0,
         }
     }
 
@@ -278,6 +280,12 @@ impl PagePool {
         }
     }
 
+    /// Count one prefix-index LRU eviction (the caller just unkeyed the
+    /// victim chain's page via [`PagePool::clear_page_key`]).
+    pub fn note_prefix_eviction(&mut self) {
+        self.prefix_evictions += 1;
+    }
+
     /// A page's content key (0 = none / recycled). Valid for leased pages
     /// and cached (freed-but-keyed) pages alike.
     pub fn page_key(&self, id: u32) -> u64 {
@@ -338,6 +346,7 @@ impl PagePool {
             frees: self.frees,
             alloc_stalls: self.stalls,
             cow_copies: self.cow_copies,
+            prefix_evictions: self.prefix_evictions,
         }
     }
 }

@@ -50,32 +50,41 @@ struct Node {
     /// The chunk's token ids — compared verbatim at lookup so a 64-bit
     /// hash collision degrades to a cache miss, never a false share.
     tokens: Vec<i32>,
+    /// Monotonic recency stamp: bumped on registration and on every
+    /// successful lookup (an attach walk touches each chain link it
+    /// reuses), so the LRU victim is the least-recently-attached chain.
+    last_used: u64,
 }
 
 /// Outcome of [`PrefixIndex::insert`]. The caller stamps the page key
-/// only on acceptance, and unkeys a displaced page so it cannot linger as
-/// an unreachable "cached" page that plain leases skip.
+/// only on acceptance, and unkeys a displaced or evicted page so it
+/// cannot linger as an unreachable "cached" page that plain leases skip.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Register {
     /// Registered under a fresh chain hash.
     Fresh,
     /// Registered, displacing the named page's node (unkey that page).
     Displaced(u32),
-    /// The capacity cap refused the entry.
-    Refused,
+    /// Registered at capacity by evicting the least-recently-used chain
+    /// node (unkey that page and count a `prefix_evictions`).
+    Evicted(u32),
 }
 
-/// Chain-hash → page map over registered full prompt chunks.
+/// Chain-hash → page map over registered full prompt chunks, LRU-bounded.
 pub struct PrefixIndex {
     nodes: HashMap<u64, Node>,
-    /// Max registered nodes (0 = unlimited); registration beyond the cap
-    /// is refused (existing chains stay valid).
+    /// Max registered nodes (0 = unlimited). Since every registered page
+    /// carries exactly one node's key, this also bounds the keyed
+    /// (resurrectable) page set; registration at the cap evicts the
+    /// least-recently-used chain instead of refusing.
     capacity: usize,
+    /// Monotonic recency clock.
+    tick: u64,
 }
 
 impl PrefixIndex {
     pub fn new(capacity: usize) -> PrefixIndex {
-        PrefixIndex { nodes: HashMap::new(), capacity }
+        PrefixIndex { nodes: HashMap::new(), capacity, tick: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -86,23 +95,38 @@ impl PrefixIndex {
         self.nodes.is_empty()
     }
 
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
     /// Register `page` as holding the chunk whose chain hash is `hash`.
     /// A node with the same hash is replaced (its page was recycled or the
     /// chunk was re-written by another lane) and the displaced page id is
-    /// reported so the caller can drop its stale key.
+    /// reported so the caller can drop its stale key. At capacity the
+    /// least-recently-used node is evicted to make room and its page
+    /// reported for unkeying.
     pub fn insert(&mut self, hash: u64, page: u32, tokens: Vec<i32>) -> Register {
         use std::collections::hash_map::Entry;
         let len = self.nodes.len();
+        let stamp = self.next_tick();
         match self.nodes.entry(hash) {
             Entry::Occupied(mut o) => {
-                let old = o.insert(Node { page, tokens });
+                let old = o.insert(Node { page, tokens, last_used: stamp });
                 Register::Displaced(old.page)
             }
             Entry::Vacant(v) => {
+                v.insert(Node { page, tokens, last_used: stamp });
                 if self.capacity != 0 && len >= self.capacity {
-                    return Register::Refused;
+                    let victim = self
+                        .nodes
+                        .iter()
+                        .min_by_key(|(_, n)| n.last_used)
+                        .map(|(&h, n)| (h, n.page))
+                        .expect("over-capacity index cannot be empty");
+                    self.nodes.remove(&victim.0);
+                    return Register::Evicted(victim.1);
                 }
-                v.insert(Node { page, tokens });
                 Register::Fresh
             }
         }
@@ -110,7 +134,8 @@ impl PrefixIndex {
 
     /// Resolve the page holding chain `hash`, validating both liveness
     /// (the page still carries this key in `pool` — leased *or* cached)
-    /// and content (the chunk tokens match). Stale nodes are pruned.
+    /// and content (the chunk tokens match). Stale nodes are pruned; a
+    /// hit refreshes the chain's LRU recency.
     pub fn lookup(&mut self, pool: &PagePool, hash: u64, chunk: &[i32]) -> Option<u32> {
         let (page, content_ok) = {
             let node = self.nodes.get(&hash)?;
@@ -124,6 +149,10 @@ impl PrefixIndex {
         if !content_ok {
             // 64-bit collision: refuse the share, keep the honest entry
             return None;
+        }
+        let stamp = self.next_tick();
+        if let Some(node) = self.nodes.get_mut(&hash) {
+            node.last_used = stamp;
         }
         Some(page)
     }
@@ -183,7 +212,7 @@ mod tests {
     }
 
     #[test]
-    fn capacity_refuses_new_chains_and_reports_displacement() {
+    fn capacity_evicts_lru_and_reports_displacement() {
         let mut p = pool();
         let mut idx = PrefixIndex::new(1);
         let a = p.lease().unwrap();
@@ -191,9 +220,35 @@ mod tests {
         let (ha, hb) = (fold_token(PREFIX_SEED, 1), fold_token(PREFIX_SEED, 2));
         p.set_page_key(a, ha).unwrap();
         assert_eq!(idx.insert(ha, a, vec![1]), Register::Fresh);
-        assert_eq!(idx.insert(hb, b, vec![2]), Register::Refused, "capacity cap");
-        // replacing an existing hash is not growth, and names the loser
-        assert_eq!(idx.insert(ha, b, vec![1]), Register::Displaced(a));
+        // at capacity a new chain evicts the least-recently-used node
+        assert_eq!(idx.insert(hb, b, vec![2]), Register::Evicted(a), "LRU eviction at cap");
         assert_eq!(idx.len(), 1);
+        // replacing an existing hash is not growth, and names the loser
+        assert_eq!(idx.insert(hb, a, vec![2]), Register::Displaced(b));
+        assert_eq!(idx.len(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_prefers_the_least_recently_attached_chain() {
+        let mut p = pool();
+        let mut idx = PrefixIndex::new(2);
+        let a = p.lease().unwrap();
+        let b = p.lease().unwrap();
+        let c = p.lease().unwrap();
+        let ha = fold_chunk(PREFIX_SEED, &[1, 1, 1, 1]);
+        let hb = fold_chunk(PREFIX_SEED, &[2, 2, 2, 2]);
+        let hc = fold_chunk(PREFIX_SEED, &[3, 3, 3, 3]);
+        p.set_page_key(a, ha).unwrap();
+        p.set_page_key(b, hb).unwrap();
+        assert_eq!(idx.insert(ha, a, vec![1, 1, 1, 1]), Register::Fresh);
+        assert_eq!(idx.insert(hb, b, vec![2, 2, 2, 2]), Register::Fresh);
+        // touch `a` via lookup: `b` becomes the LRU victim
+        assert_eq!(idx.lookup(&p, ha, &[1, 1, 1, 1]), Some(a));
+        assert_eq!(idx.insert(hc, c, vec![3, 3, 3, 3]), Register::Evicted(b));
+        assert_eq!(idx.len(), 2);
+        // the survivor and the newcomer both still resolve
+        p.set_page_key(c, hc).unwrap();
+        assert_eq!(idx.lookup(&p, ha, &[1, 1, 1, 1]), Some(a));
+        assert_eq!(idx.lookup(&p, hc, &[3, 3, 3, 3]), Some(c));
     }
 }

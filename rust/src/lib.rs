@@ -36,6 +36,9 @@
 //! * [`registry`] — multi-model fleet: named deployments (engine thread +
 //!   result pump + bounded admission) behind one mutable registry.
 //! * [`server`] — minimal HTTP/1.1 front-end, routing over the registry.
+//! * [`spec`] — self-speculative decoding: per-lane draft bookkeeping for
+//!   the AQUA-sparse draft / dense verify duty cycle (one shared KV cache,
+//!   no second model).
 //! * [`trace`] — per-engine flight recorder: compact event ring, request
 //!   span timelines, postmortem dumps on lane/engine failure.
 //! * [`eval`] — perplexity + SynthBench harness (the paper's tables).
@@ -55,6 +58,7 @@ pub mod model;
 pub mod registry;
 pub mod runtime;
 pub mod server;
+pub mod spec;
 pub mod tensor;
 pub mod tokenizer;
 pub mod trace;

@@ -38,7 +38,7 @@ use cli::Args;
 const USAGE: &str = "usage: aqua <serve|generate|eval|table1|table2|table3|table7|fig2|fig3|fig5|ablation|breakeven|benchcheck|selftest> [flags]
 common flags: --backend auto|native|sharded|pjrt --threads N --seed N --artifacts DIR --model NAME --k-ratio R --s-ratio R --h2o-ratio R --batch N --items N --fast
 serve fleet: --fleet fleet.json | repeated --model name=N,backend=B,k=R,threads=T,batch=B,queue=Q,kv_mb=M,prefix=0|1,prefix_pages=P,prefill_tokens=N,total_tokens=N,wsr=R,interleave=0|1 [--default-model N] (plain --model NAME [--kv-budget-mb M] [--prefix-cache] [--prefix-pages P] serves one deployment named 'default'; kv_mb caps resident KV pages — over-budget requests shed with a memory-pressure 429; prefix enables page-granular prefix sharing: one prefill's KV pages serve every lane with the prefix)
-serve scheduling: --max-prefill-tokens N (per-step prefill token budget, 0 = unlimited) --max-total-tokens N (admission cap on worst-case batch tokens, 0 = unlimited) --waiting-ratio R (queue pressure threshold for bounded head overtakes) --no-interleave (legacy FIFO run-to-completion; disables chunked-prefill/decode interleaving)
+serve scheduling: --max-prefill-tokens N (per-step prefill token budget, 0 = unlimited) --max-total-tokens N (admission cap on worst-case batch tokens, 0 = unlimited) --waiting-ratio R (queue pressure threshold for bounded head overtakes) --no-interleave (legacy FIFO run-to-completion; disables chunked-prefill/decode interleaving) --speculate N (self-speculative decoding: AQUA-sparse draft depth per duty cycle, dense verify over the same KV; 0 = off, lossless when on; kv-spec key speculate= sets it per deployment; requests may send 'priority': N to jump the admission queue)
 serve lifecycle: --restart N (engine rebuilds after a crash; 0 = fail fast) --restart-backoff-ms MS --deadline-ms MS (default per-request deadline from enqueue, 0 = none; requests may override via the JSON 'deadline_ms' field) --max-step-failures N (consecutive failing passes before the engine is declared failed); kv-spec keys restart=,restart_backoff_ms=,deadline_ms=,max_step_failures= set the same per deployment
 serve tracing: --trace off|errors|sampled:N|full (flight recorder; kv-spec key trace= sets it per deployment). GET /trace?model=&n= dumps recent events (format=jsonl → Perfetto-loadable), GET /trace/postmortem serves failure snapshots, and 'timings': true on /generate returns the request's span breakdown; AQUA_LOG=level,module=level tunes stderr logging
 chaos: --backend fault:<inner>,err_every=N,err_p=R,err_count=N,err_lane=L,unattributed=1,panic_at=N,delay_every=N,delay_ms=MS,seed=N (deterministic fault injection over any backend; inside a --model kv-spec use ';' between fault params: backend=fault:native;err_every=50)";
@@ -119,6 +119,7 @@ fn fleet_registry(args: &Args, arts_dir: &str) -> Result<ModelRegistry> {
             max_batch_total_tokens: args.usize("max-total-tokens", 0)?,
             waiting_served_ratio: args.f64("waiting-ratio", 1.2)?,
             interleave: !args.switch("no-interleave"),
+            speculate: args.usize("speculate", 0)?,
             restart: args.u64("restart", 0)? as u32,
             restart_backoff_ms: args.u64("restart-backoff-ms", 50)?,
             deadline_ms: args.u64("deadline-ms", 0)?,
@@ -322,6 +323,17 @@ fn run(argv: &[String]) -> Result<()> {
                 aqua_serve::bench::report::validate_interleave(&doc, args.switch("strict"))
                     .with_context(|| format!("validating {ipath}"))?;
                 println!("{ipath} ok (interleave schema)");
+            }
+            // BENCH_speculate.json (speculate bench): same convention.
+            let xdefault = aqua_serve::bench::report::speculate_path().to_string();
+            let xpath = args.str("speculate-path", &xdefault);
+            if std::path::Path::new(&xpath).exists() {
+                let text = std::fs::read_to_string(&xpath)?;
+                let doc = aqua_serve::util::json::Json::parse(&text)
+                    .with_context(|| format!("parsing {xpath}"))?;
+                aqua_serve::bench::report::validate_speculate(&doc, args.switch("strict"))
+                    .with_context(|| format!("validating {xpath}"))?;
+                println!("{xpath} ok (speculate schema)");
             }
             Ok(())
         }

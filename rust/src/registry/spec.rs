@@ -82,6 +82,11 @@ pub struct DeploymentSpec {
     /// `Arc` shared across engine incarnations (like metrics), surfaced
     /// at `GET /trace` / `GET /trace/postmortem`.
     pub trace: String,
+    /// Self-speculative decoding draft depth (kv/JSON key `speculate`;
+    /// 0 = off, byte-identical to the plain decode path). Lossless —
+    /// committed tokens are always the exact path's argmax; the engine
+    /// falls back to plain decoding under H2O or non-greedy sampling.
+    pub speculate: usize,
     /// AQUA operating point for every request this deployment serves.
     pub aqua: AquaConfig,
 }
@@ -108,6 +113,7 @@ impl Default for DeploymentSpec {
             deadline_ms: 0,
             max_step_failures: 3,
             trace: "off".to_string(),
+            speculate: 0,
             aqua: AquaConfig::default(),
         }
     }
@@ -120,8 +126,8 @@ impl DeploymentSpec {
     /// `prefix_pages`, `prefill_tokens`, `total_tokens`, `wsr`,
     /// `interleave` (0/1), `restart`, `restart_backoff_ms`,
     /// `deadline_ms`, `max_step_failures`, `trace`
-    /// (off|errors|sampled:N|full), `k`/`k_ratio`, `s`/`s_ratio`,
-    /// `h2o`/`h2o_ratio`, `proj` (0/1).
+    /// (off|errors|sampled:N|full), `speculate` (draft depth, 0 = off),
+    /// `k`/`k_ratio`, `s`/`s_ratio`, `h2o`/`h2o_ratio`, `proj` (0/1).
     ///
     /// Note the comma is the pair separator, so fault-backend parameters
     /// inside a kv-spec use `;`: `backend=fault:native;err_every=50`.
@@ -196,6 +202,9 @@ impl DeploymentSpec {
                         v.parse().with_context(|| format!("bad max_step_failures '{v}'"))?
                 }
                 "trace" => spec.trace = v.to_string(),
+                "speculate" => {
+                    spec.speculate = v.parse().with_context(|| format!("bad speculate '{v}'"))?
+                }
                 "k" | "k_ratio" => {
                     spec.aqua.k_ratio = v.parse().with_context(|| format!("bad k_ratio '{v}'"))?
                 }
@@ -272,6 +281,9 @@ impl DeploymentSpec {
         if let Some(v) = j.get("trace").as_str() {
             spec.trace = v.to_string();
         }
+        if let Some(v) = j.get("speculate").as_i64() {
+            spec.speculate = v.max(0) as usize;
+        }
         if let Some(v) = j.get("k_ratio").as_f64() {
             spec.aqua.k_ratio = v;
         }
@@ -310,6 +322,7 @@ impl DeploymentSpec {
             ("deadline_ms", Json::Num(self.deadline_ms as f64)),
             ("max_step_failures", Json::Num(self.max_step_failures as f64)),
             ("trace", Json::Str(self.trace.clone())),
+            ("speculate", Json::Num(self.speculate as f64)),
             ("k_ratio", Json::Num(self.aqua.k_ratio)),
             ("s_ratio", Json::Num(self.aqua.s_ratio)),
             ("h2o_ratio", Json::Num(self.aqua.h2o_ratio)),
@@ -403,6 +416,7 @@ impl DeploymentSpec {
             interleave: self.interleave,
             max_consecutive_step_failures: self.max_step_failures.max(1),
             trace: self.trace_mode(),
+            speculate: self.speculate,
             ..Default::default()
         }
     }
@@ -545,6 +559,20 @@ mod tests {
         assert_eq!(DeploymentSpec::from_json(&j).unwrap().trace_mode(), TraceMode::Errors);
         let bad = Json::parse(r#"{"name": "a", "trace": "shouty"}"#).unwrap();
         assert!(DeploymentSpec::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn speculate_knob_parses_on_every_surface() {
+        assert_eq!(DeploymentSpec::default().speculate, 0, "off by default");
+        let spec = DeploymentSpec::parse_kv("name=a,speculate=4,k=0.25").unwrap();
+        assert_eq!(spec.speculate, 4);
+        let back = DeploymentSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // the knob reaches the engine config
+        assert_eq!(spec.engine_config().speculate, 4);
+        let j = Json::parse(r#"{"name": "a", "speculate": 3}"#).unwrap();
+        assert_eq!(DeploymentSpec::from_json(&j).unwrap().speculate, 3);
+        assert!(DeploymentSpec::parse_kv("name=a,speculate=many").is_err());
     }
 
     #[test]

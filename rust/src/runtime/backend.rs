@@ -235,6 +235,46 @@ pub trait ExecBackend {
         slot_mask: &[f32],
         knobs: &AquaKnobs,
     ) -> Result<StepOut>;
+
+    /// Multi-position verify scoring for self-speculative decoding:
+    /// `tokens` is [B, t] row-major (each lane's pending token followed by
+    /// its drafted block, `-1`-padded), `pos0` [B] the per-lane write
+    /// position of the window's first token. Every non-padding token is
+    /// (re)written at `pos0 + i` — *overwriting* any approximate KV the
+    /// sparse draft pass left there — and attends causally over
+    /// `slot_mask` ∪ the window's earlier positions, exactly like a
+    /// prefill chunk but without registering anything in a prefix cache.
+    /// Logits are [B, t, vocab]; row `i` is the exact next-token
+    /// distribution after the window's first `i + 1` tokens. Backends that
+    /// cannot score multiple positions mid-sequence (`supports_verify()
+    /// == false`) error.
+    fn verify(
+        &mut self,
+        b: usize,
+        tokens: &[i32],
+        pos0: &[i32],
+        t: usize,
+        slot_mask: &[f32],
+        knobs: &AquaKnobs,
+    ) -> Result<StepOut> {
+        let _ = (b, tokens, pos0, t, slot_mask, knobs);
+        anyhow::bail!("backend '{}' does not support speculative verify", self.name())
+    }
+
+    /// Whether `verify` is implemented — the engine only enables
+    /// speculative decoding on backends that report true.
+    fn supports_verify(&self) -> bool {
+        false
+    }
+
+    /// Rewind `lane`'s KV write cursor to `to_len` tokens, un-appending
+    /// (freeing) any pages that lie wholly past it — the speculative
+    /// rollback past the verifier's first rejection. Never touches pages
+    /// shared with other lanes (drafted pages are lane-private by the COW
+    /// write path). Dense backends ignore it: the engine's slot mask
+    /// already marks the rolled-back positions dead, and their slots are
+    /// overwritten positionally on the next write.
+    fn rollback_lane(&mut self, _lane: usize, _to_len: usize) {}
 }
 
 // ---------------------------------------------------------------------------

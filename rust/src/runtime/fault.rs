@@ -110,7 +110,7 @@ pub struct FaultBackend {
     inner: Box<dyn ExecBackend>,
     plan: FaultPlan,
     rng: Rng,
-    /// Prefill + decode calls so far (the injection clock).
+    /// Prefill + decode + verify calls so far (the injection clock).
     steps: u64,
     /// Errors injected so far (the `err_count` budget).
     injected: u64,
@@ -226,6 +226,40 @@ impl ExecBackend for FaultBackend {
     ) -> Result<StepOut> {
         self.inject(tokens)?;
         self.inner.decode(b, tokens, pos, slot_mask, knobs)
+    }
+
+    fn verify(
+        &mut self,
+        b: usize,
+        tokens: &[i32],
+        pos0: &[i32],
+        t: usize,
+        slot_mask: &[f32],
+        knobs: &AquaKnobs,
+    ) -> Result<StepOut> {
+        // a verify call's live lanes are those whose t-wide row holds any
+        // real token; dead rows are all -1 padding
+        let t = t.max(1);
+        let lane_live: Vec<i32> = (0..b)
+            .map(|lane| {
+                let row = &tokens[lane * t..(lane + 1) * t];
+                if row.iter().any(|&tok| tok >= 0) {
+                    0
+                } else {
+                    -1
+                }
+            })
+            .collect();
+        self.inject(&lane_live)?;
+        self.inner.verify(b, tokens, pos0, t, slot_mask, knobs)
+    }
+
+    fn supports_verify(&self) -> bool {
+        self.inner.supports_verify()
+    }
+
+    fn rollback_lane(&mut self, lane: usize, to_len: usize) {
+        self.inner.rollback_lane(lane, to_len)
     }
 }
 

@@ -848,7 +848,6 @@ impl NativeBackend {
                                         // unreachable cached page
                                         if pool.ref_count(pid) == 1 && pool.page_key(pid) == 0 {
                                             match index.insert(cur.hash, pid, chunk) {
-                                                Register::Refused => {}
                                                 Register::Fresh => {
                                                     pool.set_page_key(pid, cur.hash)?;
                                                 }
@@ -857,6 +856,13 @@ impl NativeBackend {
                                                     if old != pid {
                                                         pool.clear_page_key(old);
                                                     }
+                                                }
+                                                Register::Evicted(old) => {
+                                                    pool.set_page_key(pid, cur.hash)?;
+                                                    if old != pid {
+                                                        pool.clear_page_key(old);
+                                                    }
+                                                    pool.note_prefix_eviction();
                                                 }
                                             }
                                         }
@@ -1014,6 +1020,34 @@ impl ExecBackend for NativeBackend {
         knobs: &AquaKnobs,
     ) -> Result<StepOut> {
         self.step(b, tokens, pos, 1, false, slot_mask, knobs)
+    }
+
+    fn verify(
+        &mut self,
+        b: usize,
+        tokens: &[i32],
+        pos0: &[i32],
+        t: usize,
+        slot_mask: &[f32],
+        knobs: &AquaKnobs,
+    ) -> Result<StepOut> {
+        // A verify pass is a multi-token decode: step() already handles
+        // arbitrary window widths with in-call causality (each written
+        // position joins the attendable set for the next), rewrites the
+        // drafted KV in place through the normal write path (COW-safe),
+        // and registers nothing in the prefix index (is_prefill = false
+        // kills the cursor, so drafted content never becomes shareable).
+        self.step(b, tokens, pos0, t, false, slot_mask, knobs)
+    }
+
+    fn supports_verify(&self) -> bool {
+        true
+    }
+
+    fn rollback_lane(&mut self, lane: usize, to_len: usize) {
+        if let Some(table) = self.tables.get_mut(lane) {
+            table.rollback(&mut self.pool, to_len);
+        }
     }
 }
 

@@ -31,12 +31,23 @@ use super::native::{NativeBackend, NativeModel, ScoreMode};
 use crate::kvpool::{KvPoolConfig, KvPoolGauges};
 use crate::model::config::ModelConfig;
 
+/// Which forward-pass entry point a `Cmd::Run` scatters to the shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StepOp {
+    Prefill,
+    Decode,
+    /// Multi-position speculative verify: `t` window tokens per lane,
+    /// rewriting drafted KV exactly (see [`ExecBackend::verify`]).
+    Verify,
+}
+
 /// One step's inputs, copied once and shared (`Arc`) by every worker —
 /// each worker slices out its own lane range, so scatter cost does not
 /// scale with the thread count.
 struct StepInputs {
-    decode: bool,
-    /// Tokens per lane (1 for decode, prefill chunk otherwise).
+    op: StepOp,
+    /// Tokens per lane (1 for decode, prefill chunk for prefill, the
+    /// verify window width for verify).
     t: usize,
     s_cap: usize,
     tokens: Vec<i32>,
@@ -53,6 +64,9 @@ enum Cmd {
     /// Free one worker-local lane's pages (fire-and-forget, like
     /// SetScoreMode — the ordered channel serializes it against steps).
     RetireLane(usize),
+    /// Un-append one worker-local lane's KV past `to_len` (speculative
+    /// rollback; fire-and-forget, serialized by the ordered channel).
+    RollbackLane { lane: usize, to_len: usize },
     /// Prefix-cache attach for one worker-local lane; replies on its own
     /// channel so the Run gather never sees a stray message. Sharing is
     /// per worker sub-pool: lanes on the same shard share pages, a prefix
@@ -96,6 +110,10 @@ fn spawn_worker(model: Arc<NativeModel>) -> Worker {
                     be.retire_lane(lane);
                     continue;
                 }
+                Cmd::RollbackLane { lane, to_len } => {
+                    be.rollback_lane(lane, to_len);
+                    continue;
+                }
                 Cmd::AttachPrefix { lane, tokens, knobs, reply } => {
                     let _ = reply.send(be.attach_prefix(lane, &tokens, &knobs));
                     continue;
@@ -109,10 +127,10 @@ fn spawn_worker(model: Arc<NativeModel>) -> Worker {
                     let toks = &inputs.tokens[lanes.start * t..lanes.end * t];
                     let pos = &inputs.pos[lanes.start..lanes.end];
                     let mask = &inputs.slot_mask[lanes.start * s_cap..lanes.end * s_cap];
-                    if inputs.decode {
-                        be.decode(bw, toks, pos, mask, &inputs.knobs)
-                    } else {
-                        be.prefill(bw, toks, pos, mask, &inputs.knobs)
+                    match inputs.op {
+                        StepOp::Decode => be.decode(bw, toks, pos, mask, &inputs.knobs),
+                        StepOp::Prefill => be.prefill(bw, toks, pos, mask, &inputs.knobs),
+                        StepOp::Verify => be.verify(bw, toks, pos, t, mask, &inputs.knobs),
                     }
                 }
                 Cmd::Shutdown => return,
@@ -180,13 +198,16 @@ impl ShardedBackend {
     }
 
     /// Scatter one step across the shards, run concurrently, gather the
-    /// outputs back into engine lane order.
+    /// outputs back into engine lane order. `t` is the window width per
+    /// lane (1 for decode, the prefill chunk for prefill, the caller's
+    /// width for verify).
     fn run(
         &mut self,
-        decode: bool,
+        op: StepOp,
         b: usize,
         tokens: &[i32],
         pos: &[i32],
+        t: usize,
         slot_mask: &[f32],
         knobs: &AquaKnobs,
     ) -> Result<StepOut> {
@@ -195,13 +216,12 @@ impl ShardedBackend {
         if b != self.batch {
             bail!("sharded step: batch {b} but shards sized for {} (call empty_cache)", self.batch);
         }
-        let t = if decode { 1 } else { self.prefill_chunk };
-        if tokens.len() != b * t || pos.len() != b || slot_mask.len() != b * s_cap {
+        if t == 0 || tokens.len() != b * t || pos.len() != b || slot_mask.len() != b * s_cap {
             bail!("sharded step: arg shape mismatch (b={b}, t={t})");
         }
 
         let inputs = Arc::new(StepInputs {
-            decode,
+            op,
             t,
             s_cap,
             tokens: tokens.to_vec(),
@@ -395,7 +415,7 @@ impl ExecBackend for ShardedBackend {
         slot_mask: &[f32],
         knobs: &AquaKnobs,
     ) -> Result<StepOut> {
-        self.run(false, b, tokens, pos0, slot_mask, knobs)
+        self.run(StepOp::Prefill, b, tokens, pos0, self.prefill_chunk, slot_mask, knobs)
     }
 
     fn decode(
@@ -406,7 +426,35 @@ impl ExecBackend for ShardedBackend {
         slot_mask: &[f32],
         knobs: &AquaKnobs,
     ) -> Result<StepOut> {
-        self.run(true, b, tokens, pos, slot_mask, knobs)
+        self.run(StepOp::Decode, b, tokens, pos, 1, slot_mask, knobs)
+    }
+
+    fn verify(
+        &mut self,
+        b: usize,
+        tokens: &[i32],
+        pos0: &[i32],
+        t: usize,
+        slot_mask: &[f32],
+        knobs: &AquaKnobs,
+    ) -> Result<StepOut> {
+        // Lanes never interact inside a step, so verify shards exactly
+        // like decode — the gather already handles arbitrary `t` (logits
+        // rows concatenate per shard).
+        self.run(StepOp::Verify, b, tokens, pos0, t, slot_mask, knobs)
+    }
+
+    fn supports_verify(&self) -> bool {
+        true
+    }
+
+    fn rollback_lane(&mut self, lane: usize, to_len: usize) {
+        for (w, shard) in self.workers.iter().zip(&self.shards) {
+            if shard.contains(&lane) {
+                let _ = w.tx.send(Cmd::RollbackLane { lane: lane - shard.start, to_len });
+                return;
+            }
+        }
     }
 }
 
@@ -465,6 +513,54 @@ mod tests {
                 mask[lane * cfg.max_seq + i] = 1.0;
             }
         }
+    }
+
+    #[test]
+    fn verify_matches_native_backend_exactly() {
+        let cfg = tiny();
+        let d = cfg.d_head;
+        let model = Arc::new(NativeModel::new(cfg.clone(), 17).unwrap());
+        let knobs = AquaKnobs { k_dims: d, dim_keep: vec![1.0; d], use_projection: true };
+        let b = 3;
+
+        let mut native = NativeBackend::from_model(model.clone());
+        native.empty_cache(b).unwrap();
+        let mut sharded = ShardedBackend::from_model(model, 2);
+        sharded.empty_cache(b).unwrap();
+
+        // two decode steps of shared context
+        let mut mask = vec![0.0f32; b * cfg.max_seq];
+        for i in 0..2usize {
+            let tokens: Vec<i32> = (0..b).map(|lane| 30 + (lane + i) as i32).collect();
+            let pos = vec![i as i32; b];
+            native.decode(b, &tokens, &pos, &mask, &knobs).unwrap();
+            sharded.decode(b, &tokens, &pos, &mask, &knobs).unwrap();
+            for lane in 0..b {
+                mask[lane * cfg.max_seq + i] = 1.0;
+            }
+        }
+        // a width-3 verify window (-1 pads a ragged lane)
+        let t = 3usize;
+        let tokens: Vec<i32> =
+            vec![50, 51, 52, /* lane 1 */ 60, 61, -1, /* lane 2 */ 70, 71, 72];
+        let pos = vec![2i32; b];
+        let a = native.verify(b, &tokens, &pos, t, &mask, &knobs).unwrap();
+        let s = sharded.verify(b, &tokens, &pos, t, &mask, &knobs).unwrap();
+        assert_eq!(a.logits.len(), b * t * cfg.vocab);
+        assert_eq!(a.logits, s.logits, "verify logits diverged");
+        assert_eq!(a.attn_acc, s.attn_acc, "verify attn mass diverged");
+
+        // rollback keeps both backends in lockstep for the next decode
+        for lane in 0..b {
+            native.rollback_lane(lane, 3);
+            sharded.rollback_lane(lane, 3);
+            mask[lane * cfg.max_seq + 2] = 1.0;
+        }
+        let tokens: Vec<i32> = (0..b).map(|lane| 80 + lane as i32).collect();
+        let pos = vec![3i32; b];
+        let a = native.decode(b, &tokens, &pos, &mask, &knobs).unwrap();
+        let s = sharded.decode(b, &tokens, &pos, &mask, &knobs).unwrap();
+        assert_eq!(a.logits, s.logits, "post-rollback decode diverged");
     }
 
     #[test]

@@ -198,6 +198,8 @@ fn generate(req: &Request, conn: Option<&TcpStream>, registry: &ModelRegistry) -
     }
     // per-request deadline (ms from enqueue, 0 = the spec's default)
     r.deadline_ms = body.get("deadline_ms").as_i64().unwrap_or(0).max(0) as u64;
+    // admission priority (higher first, FIFO within a class; default 0)
+    r.priority = body.get("priority").as_i64().unwrap_or(0);
     // opt-in span breakdown in the response (`"timings": true`)
     let want_timings = body.get("timings").as_bool() == Some(true);
     match dep.submit(r) {
@@ -394,6 +396,8 @@ fn snapshot_fields(s: &Snapshot, full: bool) -> Vec<(&'static str, Json)> {
         ("requests_failed", Json::Num(s.requests_failed as f64)),
         ("batch_occupancy", Json::Num(s.batch_occupancy)),
         ("itl_p99_ms", Json::Num(s.itl_p99_ms)),
+        ("spec_acceptance_rate", Json::Num(s.spec_acceptance_rate)),
+        ("tokens_per_step_effective", Json::Num(s.tokens_per_step_effective)),
     ];
     if full {
         fields.extend([
@@ -418,6 +422,11 @@ fn snapshot_fields(s: &Snapshot, full: bool) -> Vec<(&'static str, Json)> {
             ("kv_cow_copies", Json::Num(s.kv_cow_copies as f64)),
             ("kv_page_utilization", Json::Num(s.kv_page_utilization)),
             ("kv_alloc_stalls", Json::Num(s.kv_alloc_stalls as f64)),
+            ("prefix_evictions", Json::Num(s.kv_prefix_evictions as f64)),
+            ("spec_drafted", Json::Num(s.spec_drafted as f64)),
+            ("spec_accepted", Json::Num(s.spec_accepted as f64)),
+            ("spec_rejected", Json::Num(s.spec_rejected as f64)),
+            ("spec_verify_passes", Json::Num(s.spec_verify_passes as f64)),
         ]);
     }
     fields
@@ -526,6 +535,11 @@ fn prometheus_kind(name: &str) -> &'static str {
                 | "kernel_dense"
                 | "kernel_sparse"
                 | "kernel_packed"
+                | "prefix_evictions"
+                | "spec_drafted"
+                | "spec_accepted"
+                | "spec_rejected"
+                | "spec_verify_passes"
         )
     {
         "counter"
@@ -682,11 +696,18 @@ mod tests {
         assert_eq!(doc.get("default_model"), &Json::Null);
         // scheduler detail gauges are /metrics (full) only
         assert_eq!(doc.get("queue_wait_p99_ms"), &Json::Null);
+        // speculation headline gauges are in /stats; counters /metrics-only
+        assert!(doc.get("spec_acceptance_rate").as_f64().is_some());
+        assert!(doc.get("tokens_per_step_effective").as_f64().is_some());
+        assert_eq!(doc.get("spec_drafted"), &Json::Null);
         let m = route(&request("GET", "/metrics", ""), &reg);
         let mdoc = Json::parse(&m.body).unwrap();
         assert!(mdoc.get("queue_wait_p99_ms").as_f64().is_some());
         assert!(mdoc.get("prefill_tokens_per_step").as_f64().is_some());
         assert!(mdoc.get("sched_steps").as_i64().is_some());
+        assert_eq!(mdoc.get("spec_drafted").as_i64(), Some(0));
+        assert_eq!(mdoc.get("spec_rejected").as_i64(), Some(0));
+        assert_eq!(mdoc.get("prefix_evictions").as_i64(), Some(0));
     }
 
     #[test]

@@ -1,0 +1,269 @@
+//! Self-speculative decoding bookkeeping: AQUA-sparse draft, dense
+//! verify, one shared KV cache.
+//!
+//! The AQUA insight that powers this subsystem: the *same* weights score
+//! attention cheaply (query-magnitude top-k over the truncated resident
+//! keys, the lane's configured `k_ratio`) or exactly (`k_ratio = 1.0`,
+//! every resident dimension). That duality is a draft/verifier pair for
+//! free — no second model, no separate KV cache, no extra weights.
+//!
+//! Per engine duty cycle (see `coordinator::engine`):
+//!
+//! 1. **Draft.** Each live lane greedily decodes up to `speculate`
+//!    tokens through the sparse score path, appending *approximate* KV
+//!    entries to its own page chain.
+//! 2. **Rewind.** Every lane's KV is rolled back to its pre-draft
+//!    length (mask + page write-index; shared COW donor pages are never
+//!    disturbed).
+//! 3. **Verify.** One batched exact pass re-scores the drafted block
+//!    (width `max_draft + 1`), rewriting the drafted positions' KV
+//!    through the normal causal write path.
+//! 4. **Commit.** The longest prefix of drafts matching the exact
+//!    argmax is accepted, plus the one token the verify pass itself
+//!    produces; the KV is rolled back past the first rejection.
+//!
+//! The output is **lossless**: bit-identical to plain dense decoding,
+//! because every committed token is the exact path's argmax — the
+//! sparse draft only decides how many positions the exact pass gets to
+//! score per step.
+//!
+//! [`SpecController`] owns the per-lane draft state. All buffers are
+//! preallocated at construction and sized `batch x speculate`; the
+//! steady-state draft/verify loop performs zero heap allocations (the
+//! `interleave` bench's counting allocator enforces this with
+//! `trace=full`).
+
+/// Per-lane draft bookkeeping for one engine. Reused across cycles;
+/// never allocates after construction.
+#[derive(Debug)]
+pub struct SpecController {
+    /// Configured draft depth (`EngineConfig::speculate`, >= 1 here —
+    /// the engine never constructs a controller when speculation is off).
+    speculate: usize,
+    /// Engine batch width (lane count).
+    batch: usize,
+    /// Lane participates in the current cycle.
+    active: Vec<bool>,
+    /// Committed KV length when the cycle began (rollback target).
+    base_len: Vec<usize>,
+    /// The lane's pending token when the cycle began (first verify row
+    /// entry; re-fed unchanged if the cycle aborts).
+    base_pending: Vec<i32>,
+    /// Drafted tokens, lane-major `[batch * speculate]`.
+    drafts: Vec<i32>,
+    /// Tokens drafted so far this cycle, per lane.
+    n_draft: Vec<usize>,
+    /// Planned draft depth for this cycle, per lane (`<= speculate`;
+    /// truncated when a draft emits the stop token).
+    n_plan: Vec<usize>,
+}
+
+impl SpecController {
+    pub fn new(batch: usize, speculate: usize) -> SpecController {
+        assert!(speculate >= 1, "SpecController requires speculate >= 1");
+        assert!(batch >= 1, "SpecController requires batch >= 1");
+        SpecController {
+            speculate,
+            batch,
+            active: vec![false; batch],
+            base_len: vec![0; batch],
+            base_pending: vec![-1; batch],
+            drafts: vec![-1; batch * speculate],
+            n_draft: vec![0; batch],
+            n_plan: vec![0; batch],
+        }
+    }
+
+    pub fn speculate(&self) -> usize {
+        self.speculate
+    }
+
+    /// Reset all per-lane state for a fresh draft/verify cycle.
+    pub fn begin_cycle(&mut self) {
+        for lane in 0..self.batch {
+            self.active[lane] = false;
+            self.base_len[lane] = 0;
+            self.base_pending[lane] = -1;
+            self.n_draft[lane] = 0;
+            self.n_plan[lane] = 0;
+        }
+        self.drafts.fill(-1);
+    }
+
+    /// Enroll a lane in the cycle. `n_plan` may be 0 (the lane still
+    /// joins the verify pass at width 1 — a degenerate exact decode);
+    /// it is clamped to `speculate`.
+    pub fn plan_lane(&mut self, lane: usize, base_len: usize, pending: i32, n_plan: usize) {
+        self.active[lane] = true;
+        self.base_len[lane] = base_len;
+        self.base_pending[lane] = pending;
+        self.n_draft[lane] = 0;
+        self.n_plan[lane] = n_plan.min(self.speculate);
+    }
+
+    pub fn is_active(&self, lane: usize) -> bool {
+        self.active[lane]
+    }
+
+    /// Lane still has draft steps left in its plan.
+    pub fn wants_draft(&self, lane: usize) -> bool {
+        self.active[lane] && self.n_draft[lane] < self.n_plan[lane]
+    }
+
+    pub fn base_len(&self, lane: usize) -> usize {
+        self.base_len[lane]
+    }
+
+    pub fn base_pending(&self, lane: usize) -> i32 {
+        self.base_pending[lane]
+    }
+
+    pub fn n_draft(&self, lane: usize) -> usize {
+        self.n_draft[lane]
+    }
+
+    pub fn n_plan(&self, lane: usize) -> usize {
+        self.n_plan[lane]
+    }
+
+    /// The token the lane feeds at draft step `j` (0-based): the pending
+    /// token for step 0, the previous draft after.
+    pub fn feed_token(&self, lane: usize, j: usize) -> i32 {
+        if j == 0 {
+            self.base_pending[lane]
+        } else {
+            self.drafts[lane * self.speculate + (j - 1)]
+        }
+    }
+
+    /// Append a drafted token for a lane.
+    pub fn push_draft(&mut self, lane: usize, token: i32) {
+        let j = self.n_draft[lane];
+        debug_assert!(j < self.n_plan[lane], "draft past the lane's plan");
+        self.drafts[lane * self.speculate + j] = token;
+        self.n_draft[lane] = j + 1;
+    }
+
+    /// Truncate the lane's plan at its current draft count (drafted a
+    /// stop token — no point speculating past it).
+    pub fn truncate_plan(&mut self, lane: usize) {
+        self.n_plan[lane] = self.n_draft[lane];
+    }
+
+    /// The lane's drafted tokens so far.
+    pub fn drafts(&self, lane: usize) -> &[i32] {
+        &self.drafts[lane * self.speculate..lane * self.speculate + self.n_draft[lane]]
+    }
+
+    /// Widest draft among active lanes — the verify window is this + 1.
+    pub fn max_draft(&self) -> usize {
+        let mut m = 0;
+        for lane in 0..self.batch {
+            if self.active[lane] && self.n_draft[lane] > m {
+                m = self.n_draft[lane];
+            }
+        }
+        m
+    }
+
+    /// Total tokens drafted across active lanes this cycle.
+    pub fn total_drafted(&self) -> u64 {
+        let mut total = 0u64;
+        for lane in 0..self.batch {
+            if self.active[lane] {
+                total += self.n_draft[lane] as u64;
+            }
+        }
+        total
+    }
+
+    /// Active lane count this cycle.
+    pub fn active_lanes(&self) -> u64 {
+        self.active.iter().filter(|&&a| a).count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_draft_and_feed_sequence() {
+        let mut c = SpecController::new(4, 3);
+        c.begin_cycle();
+        c.plan_lane(0, 10, 42, 3);
+        c.plan_lane(2, 5, 7, 2);
+        assert!(c.is_active(0) && c.is_active(2));
+        assert!(!c.is_active(1) && !c.is_active(3));
+        assert_eq!(c.active_lanes(), 2);
+        assert_eq!(c.base_len(0), 10);
+        assert_eq!(c.base_pending(2), 7);
+
+        // step 0 feeds the pending token
+        assert_eq!(c.feed_token(0, 0), 42);
+        assert_eq!(c.feed_token(2, 0), 7);
+        c.push_draft(0, 100);
+        c.push_draft(2, 200);
+        // step 1 feeds the previous draft
+        assert_eq!(c.feed_token(0, 1), 100);
+        assert_eq!(c.feed_token(2, 1), 200);
+        c.push_draft(0, 101);
+        c.push_draft(2, 201);
+        assert!(!c.wants_draft(2), "lane 2 planned only 2");
+        assert!(c.wants_draft(0));
+        c.push_draft(0, 102);
+        assert!(!c.wants_draft(0));
+
+        assert_eq!(c.drafts(0), &[100, 101, 102]);
+        assert_eq!(c.drafts(2), &[200, 201]);
+        assert_eq!(c.max_draft(), 3);
+        assert_eq!(c.total_drafted(), 5);
+    }
+
+    #[test]
+    fn zero_plan_lane_joins_without_drafting() {
+        let mut c = SpecController::new(2, 4);
+        c.begin_cycle();
+        c.plan_lane(1, 3, 9, 0);
+        assert!(c.is_active(1));
+        assert!(!c.wants_draft(1));
+        assert_eq!(c.n_draft(1), 0);
+        assert_eq!(c.drafts(1), &[] as &[i32]);
+        assert_eq!(c.max_draft(), 0, "verify window degenerates to width 1");
+        assert_eq!(c.total_drafted(), 0);
+    }
+
+    #[test]
+    fn truncate_plan_stops_at_stop_token() {
+        let mut c = SpecController::new(1, 4);
+        c.begin_cycle();
+        c.plan_lane(0, 0, 1, 4);
+        c.push_draft(0, 2);
+        c.push_draft(0, 0); // stop token drafted
+        c.truncate_plan(0);
+        assert!(!c.wants_draft(0));
+        assert_eq!(c.n_plan(0), 2);
+        assert_eq!(c.drafts(0), &[2, 0]);
+    }
+
+    #[test]
+    fn begin_cycle_clears_previous_state() {
+        let mut c = SpecController::new(2, 2);
+        c.begin_cycle();
+        c.plan_lane(0, 8, 3, 2);
+        c.push_draft(0, 5);
+        c.begin_cycle();
+        assert!(!c.is_active(0));
+        assert_eq!(c.n_draft(0), 0);
+        assert_eq!(c.max_draft(), 0);
+        assert_eq!(c.total_drafted(), 0);
+    }
+
+    #[test]
+    fn plan_clamps_to_speculate() {
+        let mut c = SpecController::new(1, 2);
+        c.begin_cycle();
+        c.plan_lane(0, 0, 1, 99);
+        assert_eq!(c.n_plan(0), 2);
+    }
+}

@@ -132,6 +132,15 @@ pub enum TracePhase {
     /// Score-path kernel time for one pass (engine-level; `lane` = mode
     /// code 0 dense / 1 sparse / 2 packed / 3 mixed, `arg` = ns).
     Score,
+    /// Speculative draft block emitted for a lane (`arg` = tokens
+    /// drafted via the sparse score path).
+    DraftBlock,
+    /// Exact verify pass committed tokens for a lane (`arg` = tokens
+    /// committed, accepted drafts + the one verify-sampled token).
+    VerifyBlock,
+    /// Rejected drafts rolled back for a lane (`arg` = tokens whose KV
+    /// pages were un-appended; only recorded when nonzero).
+    Rollback,
     /// A backend step error retired this lane (`arg` = consecutive
     /// engine-level failures so far).
     LaneFailure,
@@ -159,6 +168,9 @@ impl TracePhase {
             TracePhase::DecodeBatch => "decode_batch",
             TracePhase::Retire => "retire",
             TracePhase::Score => "score",
+            TracePhase::DraftBlock => "draft_block",
+            TracePhase::VerifyBlock => "verify_block",
+            TracePhase::Rollback => "rollback",
             TracePhase::LaneFailure => "lane_failure",
             TracePhase::EngineRestart => "engine_restart",
             TracePhase::Escalate => "escalate",

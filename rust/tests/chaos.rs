@@ -367,3 +367,70 @@ fn cancel_frees_capacity_and_disconnect_cancels() {
     assert_reconciled(&snap);
     reg.shutdown_all().unwrap();
 }
+
+/// A scripted fault landing *mid-verify* — after the lane's draft tokens
+/// were written to shared KV pages but before the exact pass vouched for
+/// them — retires only the blamed lane. The speculative pass must restore
+/// every enrolled lane's committed state before containment re-runs the
+/// cycle, so survivors stay bit-identical to a plain dense engine and the
+/// drafted-but-unverified pages all return to the pool.
+#[test]
+fn mid_verify_fault_retires_only_blamed_lane_and_releases_draft_pages() {
+    use aqua_serve::aqua::policy::AquaConfig;
+
+    let reqs: Vec<GenRequest> = (0..4)
+        .map(|i| GenRequest::new(i + 1, prompt_tokens(&format!("the color {i} of ")), 4))
+        .collect();
+
+    // ground truth: dense greedy, no speculation, no faults
+    let clean_spec = BackendSpec::from_kind("native", "chaos", 3, 2, "x").unwrap();
+    let dense_cfg = EngineConfig { batch: 2, ..EngineConfig::default() };
+    let mut clean = Engine::with_spec(&clean_spec, dense_cfg).unwrap();
+    let clean_res = clean.run_batch(reqs.clone()).unwrap();
+
+    // speculative engine behind the fault wrapper. The injection clock
+    // counts prefill + draft + verify calls: step 1 is the batched
+    // prefill, the first duty cycle drafts twice (steps 2, 3) and
+    // verifies at step 4 — `err_every=4,err_count=1` fires exactly there,
+    // blaming lane 1 (request id 2) while both lanes hold drafted pages.
+    let faulty_spec = BackendSpec::from_kind(
+        "fault:native,err_every=4,err_count=1,err_lane=1",
+        "chaos",
+        3,
+        2,
+        "x",
+    )
+    .unwrap();
+    let spec_cfg = EngineConfig {
+        batch: 2,
+        speculate: 2,
+        aqua: AquaConfig { k_ratio: 0.25, ..Default::default() },
+        ..EngineConfig::default()
+    };
+    let mut faulty = Engine::with_spec(&faulty_spec, spec_cfg).unwrap();
+    let res = faulty.run_batch(reqs).unwrap();
+
+    assert_eq!(res[1].finish, FinishReason::BackendError, "blamed lane fails mid-verify");
+    // whatever the failed lane got out before the fault is a prefix of
+    // the clean stream — never an unverified draft token
+    assert_eq!(
+        res[1].tokens,
+        clean_res[1].tokens[..res[1].tokens.len()],
+        "failed lane leaked unverified drafts"
+    );
+    for i in [0usize, 2, 3] {
+        assert_eq!(res[i].finish, clean_res[i].finish, "req {i} finish");
+        assert_eq!(
+            res[i].tokens, clean_res[i].tokens,
+            "surviving req {i} must be bit-identical to the fault-free dense run"
+        );
+    }
+    assert_eq!(faulty.kv_gauges().pages_in_use, 0, "drafted pages leak after the fault");
+    let snap = faulty.metrics.snapshot();
+    assert_eq!(snap.requests_failed, 1);
+    assert_eq!(snap.lane_failures, 1);
+    assert_eq!(snap.requests_served, 3);
+    assert!(snap.spec_drafted > 0, "speculation never engaged");
+    assert_eq!(snap.spec_accepted + snap.spec_rejected, snap.spec_drafted);
+    assert_reconciled(&snap);
+}

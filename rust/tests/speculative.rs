@@ -1,0 +1,240 @@
+//! Self-speculative decoding acceptance surface (ROADMAP PR 9), hermetic
+//! and release-tested: drafting through the AQUA-sparse score path and
+//! verifying with one exact batched pass over the *same* paged KV cache
+//! must be **lossless** — bit-identical tokens, finish reasons, and
+//! per-token logprobs versus plain dense greedy decoding — on the native
+//! backend and the lane-sharded backend at every thread count; rolled-back
+//! draft pages must return to the pool; and the draft-ledger counters
+//! (`spec_drafted = spec_accepted + spec_rejected`) must reconcile with
+//! the derived rates the server exports.
+
+use aqua_serve::aqua::policy::AquaConfig;
+use aqua_serve::coordinator::{Engine, EngineConfig, FinishReason, GenRequest, Snapshot};
+use aqua_serve::model::config::ModelConfig;
+use aqua_serve::runtime::BackendSpec;
+use aqua_serve::trace::TraceMode;
+
+const BATCH: usize = 4;
+
+/// Deterministic per-lane prompts of different lengths so lanes sit at
+/// different KV depths (staggered draft plans, staggered retirement).
+fn prompt(lane: usize) -> Vec<i32> {
+    let len = 6 + 3 * lane;
+    (0..len).map(|j| 32 + ((17 * lane + 5 * j) % 90) as i32).collect()
+}
+
+/// Staggered budgets: lanes retire at different cycles, so late cycles
+/// run partially-empty verify batches (the `-1` row-padding path).
+fn budget(lane: usize) -> usize {
+    24 + 7 * lane
+}
+
+fn requests(stop_token: Option<i32>) -> Vec<GenRequest> {
+    (0..BATCH)
+        .map(|lane| {
+            let mut r = GenRequest::new(lane as u64 + 1, prompt(lane), budget(lane));
+            r.stop_token = stop_token;
+            r
+        })
+        .collect()
+}
+
+struct RunOut {
+    results: Vec<aqua_serve::coordinator::GenResult>,
+    snap: Snapshot,
+    pages_in_use_after: u64,
+}
+
+/// Drive one engine over the shared request set and drain it.
+fn run(spec: &BackendSpec, speculate: usize, k_ratio: f64, stop: Option<i32>) -> RunOut {
+    let cfg = EngineConfig {
+        batch: BATCH,
+        speculate,
+        aqua: AquaConfig { k_ratio, ..Default::default() },
+        trace: TraceMode::Full,
+        ..Default::default()
+    };
+    let mut engine = Engine::with_spec(spec, cfg).expect("engine");
+    for r in requests(stop) {
+        assert!(engine.submit(r), "submit refused");
+    }
+    engine.run_until_idle().expect("drain");
+    let results: Vec<_> = (0..BATCH)
+        .map(|lane| engine.take_result(lane as u64 + 1).expect("result"))
+        .collect();
+    let pages = engine.kv_gauges().pages_in_use;
+    RunOut { results, snap: engine.metrics.snapshot(), pages_in_use_after: pages }
+}
+
+/// Every observable client output must match bit-for-bit: tokens, finish
+/// reason, generated-token logprobs, and teacher-forced prompt logprobs.
+fn assert_bit_identical(a: &RunOut, b: &RunOut, what: &str) {
+    for lane in 0..BATCH {
+        let (x, y) = (&a.results[lane], &b.results[lane]);
+        assert_eq!(x.tokens, y.tokens, "{what}: lane {lane} tokens diverge");
+        assert_eq!(x.finish, y.finish, "{what}: lane {lane} finish diverges");
+        assert_eq!(
+            x.gen_logprobs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y.gen_logprobs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "{what}: lane {lane} gen_logprobs not bit-identical"
+        );
+        assert_eq!(
+            x.prompt_logprobs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y.prompt_logprobs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "{what}: lane {lane} prompt_logprobs not bit-identical"
+        );
+    }
+}
+
+/// The schema-level identity `aqua benchcheck` re-derives, asserted on the
+/// live counters: the ledger balances and the exported rates are exactly
+/// the ratios of the raw counters.
+fn assert_spec_reconciled(s: &Snapshot, what: &str) {
+    assert_eq!(s.spec_accepted + s.spec_rejected, s.spec_drafted, "{what}: draft ledger");
+    if s.spec_drafted > 0 {
+        let rate = s.spec_accepted as f64 / s.spec_drafted as f64;
+        assert!((s.spec_acceptance_rate - rate).abs() < 1e-12, "{what}: acceptance rate");
+    } else {
+        assert_eq!(s.spec_acceptance_rate, 0.0, "{what}: rate without drafts");
+    }
+    if s.spec_lane_cycles > 0 {
+        let eff = s.spec_committed as f64 / s.spec_lane_cycles as f64;
+        assert!((s.tokens_per_step_effective - eff).abs() < 1e-12, "{what}: effective t/s");
+        assert!(eff >= 1.0, "{what}: every verify cycle commits at least one token");
+    } else {
+        assert_eq!(s.tokens_per_step_effective, 0.0, "{what}: eff without cycles");
+    }
+}
+
+// ------------------------------------------------------------- losslessness
+
+/// The headline guarantee: speculation at any draft depth and any draft
+/// sparsity reproduces plain dense greedy decoding exactly — on the
+/// single-threaded native backend and on the lane-sharded backend at 2
+/// and 4 threads (which must themselves stay bit-identical to native).
+#[test]
+fn speculation_is_lossless_vs_exact_decode() {
+    let model = ModelConfig::tiny("llama-analog");
+    let native = BackendSpec::native(model.clone(), 0xA11A).unwrap();
+    let baseline = run(&native, 0, 1.0, None);
+    assert_eq!(baseline.snap.spec_drafted, 0, "baseline must not draft");
+
+    for &(speculate, k_ratio) in &[(1usize, 0.25f64), (4, 0.25), (3, 0.5), (4, 1.0)] {
+        let out = run(&native, speculate, k_ratio, None);
+        assert_bit_identical(&out, &baseline, &format!("native spec={speculate} k={k_ratio}"));
+        assert!(out.snap.spec_drafted > 0, "speculation never engaged");
+        assert_spec_reconciled(&out.snap, "native");
+    }
+
+    for &threads in &[2usize, 4] {
+        let sharded = BackendSpec::sharded(model.clone(), 0xA11A, threads).unwrap();
+        let out = run(&sharded, 4, 0.25, None);
+        assert_bit_identical(&out, &baseline, &format!("sharded x{threads} spec=4"));
+        assert!(out.snap.spec_drafted > 0, "sharded speculation never engaged");
+        assert_spec_reconciled(&out.snap, "sharded");
+    }
+}
+
+/// Stop tokens fire mid-draft-plan too: pick a token the baseline really
+/// emits mid-stream, re-run both engines with it as `stop_token`, and the
+/// speculative engine must truncate at exactly the same position with
+/// `FinishReason::Stop` (the drafted overshoot rolled back, not emitted).
+#[test]
+fn stop_token_parity_under_speculation() {
+    let model = ModelConfig::tiny("llama-analog");
+    let native = BackendSpec::native(model.clone(), 0xA11A).unwrap();
+    let probe = run(&native, 0, 1.0, None);
+    // a token from the middle of lane 0's stream — guaranteed reachable
+    let mid = probe.results[0].tokens.len() / 2;
+    let stop = probe.results[0].tokens[mid];
+
+    let exact = run(&native, 0, 1.0, Some(stop));
+    let spec = run(&native, 4, 0.25, Some(stop));
+    assert_bit_identical(&spec, &exact, "stop-token");
+    assert!(
+        exact.results.iter().any(|r| r.finish == FinishReason::Stop),
+        "probe token never stopped any lane"
+    );
+    assert_spec_reconciled(&spec.snap, "stop-token");
+}
+
+// ------------------------------------------------- rollback page accounting
+
+/// Rejected draft tokens wrote real KV pages; rollback must hand every one
+/// of them back — after a full drain the pool gauge reads zero, on both
+/// backends, exactly as for non-speculative decoding.
+#[test]
+fn rollback_releases_drafted_pages() {
+    let model = ModelConfig::tiny("llama-analog");
+    for (name, spec) in [
+        ("native", BackendSpec::native(model.clone(), 0xD0D0).unwrap()),
+        ("sharded", BackendSpec::sharded(model.clone(), 0xD0D0, 2).unwrap()),
+    ] {
+        let out = run(&spec, 4, 0.25, None);
+        assert_eq!(out.pages_in_use_after, 0, "{name}: drafted pages leaked after drain");
+        assert!(out.snap.spec_drafted > 0, "{name}: speculation never engaged");
+    }
+}
+
+// --------------------------------------------------- metrics reconciliation
+
+/// The counters the server exports (`/stats`, `/metrics`) reconcile with
+/// the client-visible token streams: committed speculative tokens are a
+/// subset of `tokens_generated`, every verify pass is accounted, and the
+/// derived rates re-derive from the raw ledger.
+#[test]
+fn acceptance_metrics_reconcile_with_output() {
+    let model = ModelConfig::tiny("llama-analog");
+    let spec = BackendSpec::native(model, 0xFACE).unwrap();
+    let out = run(&spec, 4, 0.25, None);
+    let s = &out.snap;
+    assert_spec_reconciled(s, "reconcile");
+    assert!(s.spec_verify_passes > 0, "no verify pass recorded");
+    assert!(s.spec_lane_cycles >= s.spec_verify_passes, "cycles undercount passes");
+    // each lane-cycle commits >= 1 token; committed tokens all reached
+    // clients, so the global generation counter bounds the spec ledger
+    assert!(s.spec_committed >= s.spec_lane_cycles);
+    assert!(s.spec_committed <= s.tokens_generated, "committed exceeds generated");
+    let client_tokens: u64 = out.results.iter().map(|r| r.tokens.len() as u64).sum();
+    assert_eq!(s.tokens_generated, client_tokens, "generated != delivered");
+}
+
+// ------------------------------------------------------------ off == legacy
+
+/// `speculate = 0` is byte-identical to the legacy engine: same outputs as
+/// a default-config engine that never heard of speculation, and the spec
+/// ledger stays all-zero (so dashboards on non-speculative deployments
+/// render zeros, not NaNs).
+#[test]
+fn speculate_zero_is_legacy_decode() {
+    let model = ModelConfig::tiny("llama-analog");
+    let spec = BackendSpec::native(model, 0xBEEF).unwrap();
+
+    let mut legacy = Engine::with_spec(
+        &spec,
+        EngineConfig { batch: BATCH, ..Default::default() },
+    )
+    .expect("engine");
+    for r in requests(None) {
+        assert!(legacy.submit(r));
+    }
+    legacy.run_until_idle().expect("drain");
+    let legacy_out = RunOut {
+        results: (0..BATCH).map(|l| legacy.take_result(l as u64 + 1).unwrap()).collect(),
+        pages_in_use_after: legacy.kv_gauges().pages_in_use,
+        snap: legacy.metrics.snapshot(),
+    };
+
+    let off = run(&spec, 0, 1.0, None);
+    assert_bit_identical(&off, &legacy_out, "speculate=0 vs legacy");
+    for s in [&off.snap, &legacy_out.snap] {
+        assert_eq!(s.spec_drafted, 0);
+        assert_eq!(s.spec_accepted, 0);
+        assert_eq!(s.spec_rejected, 0);
+        assert_eq!(s.spec_committed, 0);
+        assert_eq!(s.spec_lane_cycles, 0);
+        assert_eq!(s.spec_verify_passes, 0);
+        assert_eq!(s.spec_acceptance_rate, 0.0);
+        assert_eq!(s.tokens_per_step_effective, 0.0);
+    }
+}
