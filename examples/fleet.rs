@@ -81,10 +81,12 @@ fn main() -> Result<()> {
     for name in ["exact", "pruned"] {
         let m = doc.get("models").get(name);
         println!(
-            "  {name:<7} requests={} kernels dense={} packed={} queue_depth={} shed={}",
+            "  {name:<7} requests={} kernels dense={} packed={} fused_passes={} queue_depth={} \
+             shed={}",
             m.get("requests_done").as_i64().unwrap_or(0),
             m.get("kernel_dense").as_i64().unwrap_or(0),
             m.get("kernel_packed").as_i64().unwrap_or(0),
+            m.get("kernel_fused_passes").as_i64().unwrap_or(0),
             m.get("queue_depth").as_i64().unwrap_or(0),
             m.get("shed_total").as_i64().unwrap_or(0)
         );

@@ -5,9 +5,11 @@
 //! `BENCH_decode.json` (see BENCHES.md):
 //!
 //! * **score-kernel routing** on the native backend: the masked-dense
-//!   oracle vs the sparse and dim-major packed kernels at k = d/4, plus
-//!   the k = d dense reference — the steady-state form of the §5
-//!   break-even claim;
+//!   oracle vs the sparse, dim-major packed, and page-fused streaming
+//!   kernels at k = d/4, plus the k = d dense reference and an
+//!   int8-resident-KV fused point — the steady-state form of the §5
+//!   break-even claim (the deep fused trajectory lives in the `fused`
+//!   bench / BENCH_fused.json);
 //! * **sharded scaling**: the lane-sharded backend at 1/2/4 worker
 //!   threads on a batch-8 decode workload, vs the single-threaded native
 //!   backend.
@@ -20,6 +22,7 @@ use std::sync::Arc;
 use aqua_serve::aqua::policy::AquaConfig;
 use aqua_serve::bench::report::{default_path, BenchReport};
 use aqua_serve::bench::{black_box, BenchResult, Bencher};
+use aqua_serve::kvpool::{KvPoolConfig, KvQuant};
 use aqua_serve::model::config::ModelConfig;
 use aqua_serve::runtime::{
     AquaKnobs, ExecBackend, NativeBackend, NativeModel, ScoreMode, ShardedBackend,
@@ -29,6 +32,7 @@ use aqua_serve::util::json::Json;
 struct Row {
     backend: &'static str,
     score_mode: &'static str,
+    kv_quant: &'static str,
     k_ratio: f64,
     batch: usize,
     threads: usize,
@@ -44,6 +48,7 @@ impl Row {
         Json::obj(vec![
             ("backend", Json::Str(self.backend.into())),
             ("score_mode", Json::Str(self.score_mode.into())),
+            ("kv_quant", Json::Str(self.kv_quant.into())),
             ("k_ratio", Json::Num(self.k_ratio)),
             ("batch", Json::Num(self.batch as f64)),
             ("threads", Json::Num(self.threads as f64)),
@@ -107,11 +112,12 @@ fn main() -> anyhow::Result<()> {
     let mut rows: Vec<Row> = vec![];
 
     // ---- score-kernel routing on the native backend ----------------------
-    let kernel_grid: [(&str, ScoreMode, f64); 4] = [
+    let kernel_grid: [(&str, ScoreMode, f64); 5] = [
         ("dense", ScoreMode::Auto, 1.0),
         ("masked", ScoreMode::MaskedDense, 0.25),
         ("sparse", ScoreMode::Sparse, 0.25),
         ("packed", ScoreMode::Packed, 0.25),
+        ("fused", ScoreMode::Fused, 0.25),
     ];
     for b in [1usize, 4] {
         for (label, mode, k_ratio) in kernel_grid {
@@ -123,6 +129,7 @@ fn main() -> anyhow::Result<()> {
             rows.push(Row {
                 backend: "native",
                 score_mode: label,
+                kv_quant: "f32",
                 k_ratio,
                 batch: b,
                 threads: 1,
@@ -130,6 +137,27 @@ fn main() -> anyhow::Result<()> {
             });
         }
         println!();
+    }
+
+    // ---- int8 resident KV (fused dequantizing kernels) -------------------
+    {
+        let (b, k_ratio) = (4usize, 0.25);
+        let mut be = NativeBackend::from_model(model.clone());
+        be.configure_kv_pool(KvPoolConfig { kv_quant: KvQuant::Int8, ..Default::default() })
+            .expect("configure_kv_pool");
+        be.set_score_mode(ScoreMode::Fused);
+        let name = format!("native b={b} fused int8 k={k_ratio:.2}");
+        let result = measure_decode(&mut be, &bench, &name, b, k_ratio);
+        println!("{}  ({:.1} tok/s)\n", result.report(), b as f64 * 1e9 / result.mean_ns);
+        rows.push(Row {
+            backend: "native",
+            score_mode: "fused",
+            kv_quant: "int8",
+            k_ratio,
+            batch: b,
+            threads: 1,
+            result,
+        });
     }
 
     // ---- sharded scaling at batch 8 --------------------------------------
@@ -143,6 +171,7 @@ fn main() -> anyhow::Result<()> {
         rows.push(Row {
             backend: "native",
             score_mode: "auto",
+            kv_quant: "f32",
             k_ratio,
             batch: b,
             threads: 1,
@@ -157,6 +186,7 @@ fn main() -> anyhow::Result<()> {
         rows.push(Row {
             backend: "sharded",
             score_mode: "auto",
+            kv_quant: "f32",
             k_ratio,
             batch: b,
             threads,
@@ -176,6 +206,7 @@ fn main() -> anyhow::Result<()> {
                 rows.push(Row {
                     backend: "pjrt",
                     score_mode: label,
+                    kv_quant: "f32",
                     k_ratio,
                     batch: 4,
                     threads: 1,

@@ -1,0 +1,362 @@
+//! Fused-kernel trajectory: the page-fused streaming decode path
+//! (`ScoreMode::Fused` — packed AQUA scores + online softmax + value
+//! reduction in one pass per resident KV page) vs the three-pass packed
+//! baseline, plus the int8-quantized resident pool riding the same fused
+//! loop.
+//!
+//! One row per (`mode`, `kv_quant`, `context_slots`) operating point on a
+//! long-sequence analog (`max_seq = 576`, so the strict 1.3x bound is
+//! measured at `context_slots >= 512` where the three-pass S-scratch walk
+//! actually hurts). Per row the bench:
+//!
+//! * writes the context **for real** (unleased pages score for free — a
+//!   mask-only context would understate the streamed page work);
+//! * takes one instrumented decode to read `KernelCounters` — asserting
+//!   the read-each-page-once invariant (`fused_passes == lanes x layers x
+//!   heads x resident pages`) and recording per-page-pass ns, SIMD lane
+//!   width, and int8 dequant time;
+//! * checks parity against the packed three-pass baseline's logits on the
+//!   identical content (f32 fused is bit-identical by construction; int8
+//!   must stay inside the quantization bound);
+//! * runs an alloc-armed window with a counting `#[global_allocator]`:
+//!   beyond the backend's two return-by-value buffers per call, the fused
+//!   decode loop must add **zero** heap allocations;
+//! * times the steady-state step with the shared `Bencher`.
+//!
+//! A final engine-level leg drives `kv_quant=int8` (which routes decode
+//! through the fused kernels) with `trace=full` and the same allocation
+//! gate, so the no-alloc claim covers the production path with the most
+//! verbose recorder attached.
+//!
+//! Writes the `fused` section of `BENCH_fused.json` (schema in BENCHES.md,
+//! validated by `aqua benchcheck`; `--strict` asserts the 1.3x throughput
+//! bound). Pass `--fast` for a smoke run (CI).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use aqua_serve::aqua::policy::AquaConfig;
+use aqua_serve::bench::report::{fused_path, BenchReport};
+use aqua_serve::bench::{black_box, BenchResult, Bencher};
+use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use aqua_serve::kvpool::{KvPoolConfig, KvQuant, PoolLayout, DEFAULT_PAGE_SLOTS};
+use aqua_serve::model::config::ModelConfig;
+use aqua_serve::runtime::{
+    AquaKnobs, BackendSpec, ExecBackend, NativeBackend, NativeModel, ScoreMode,
+};
+use aqua_serve::trace::TraceMode;
+use aqua_serve::util::json::Json;
+
+/// Counts heap allocations while armed (the measured windows only).
+struct CountingAlloc;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Allocations the native backend makes per call by API contract: the
+/// `StepOut` logits and attention-mass buffers it returns by value.
+const BACKEND_ALLOCS_PER_CALL: u64 = 2;
+
+const BATCH: usize = 4;
+const K_RATIO: f64 = 0.25;
+
+/// Long-sequence analog: `tiny` widths, but enough KV capacity that the
+/// strict fused-vs-packed bound is measured at `context_slots >= 512`.
+fn long_cfg() -> ModelConfig {
+    ModelConfig { max_seq: 576, ..ModelConfig::tiny("llama-analog-long") }
+}
+
+/// Write `ctx` real context slots (identical token stream per backend, so
+/// cross-backend logits are comparable bit-for-bit) and return the
+/// steady-state decode arguments.
+fn write_context(
+    be: &mut dyn ExecBackend,
+    ctx: usize,
+    knobs: &AquaKnobs,
+) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+    let s_cap = be.model_config().max_seq;
+    be.empty_cache(BATCH).expect("empty_cache");
+    let mut slot_mask = vec![0.0f32; BATCH * s_cap];
+    for i in 0..ctx {
+        let toks = vec![(32 + (i % 64)) as i32; BATCH];
+        let ppos = vec![i as i32; BATCH];
+        be.decode(BATCH, &toks, &ppos, &slot_mask, knobs).expect("context decode");
+        for lane in 0..BATCH {
+            slot_mask[lane * s_cap + i] = 1.0;
+        }
+    }
+    (vec![5i32; BATCH], vec![ctx as i32; BATCH], slot_mask)
+}
+
+struct Point {
+    result: BenchResult,
+    logits: Vec<f32>,
+    fused_passes: u64,
+    simd_lanes: u64,
+    dequant_ns: u64,
+    score_ns: u64,
+    resident_bytes: u64,
+    steady_decode_allocs: i64,
+}
+
+fn run_point(
+    model: &Arc<NativeModel>,
+    mode: ScoreMode,
+    quant: KvQuant,
+    ctx: usize,
+    bench: &Bencher,
+    name: &str,
+) -> Point {
+    let mut be = NativeBackend::from_model(model.clone());
+    be.configure_kv_pool(KvPoolConfig { kv_quant: quant, ..Default::default() })
+        .expect("configure_kv_pool");
+    be.set_score_mode(mode);
+    let d = model.cfg.d_head;
+    let aqua = AquaConfig { k_ratio: K_RATIO, ..Default::default() };
+    let knobs = AquaKnobs::from_config(&aqua, d);
+    let (tokens, pos, slot_mask) = write_context(&mut be, ctx, &knobs);
+
+    // one instrumented call: counters + logits for the parity check
+    let out = be.decode(BATCH, &tokens, &pos, &slot_mask, &knobs).expect("decode");
+    let (fused_passes, simd_lanes, dequant_ns, score_ns) = (
+        out.kernels.fused_passes,
+        out.kernels.simd_lanes_used,
+        out.kernels.dequant_ns,
+        out.kernels.score_ns,
+    );
+    let resident_bytes = out.kv.resident_bytes;
+
+    // alloc-armed window: the steady decode loop must not touch the heap
+    // beyond the backend's two return-by-value buffers per call
+    let armed_calls = 8u64;
+    ALLOCS.store(0, Ordering::Relaxed);
+    for _ in 0..armed_calls {
+        ARMED.store(true, Ordering::Relaxed);
+        let o = be.decode(BATCH, &tokens, &pos, &slot_mask, &knobs).expect("decode");
+        ARMED.store(false, Ordering::Relaxed);
+        black_box(o.logits.len());
+    }
+    let steady_decode_allocs =
+        ALLOCS.load(Ordering::Relaxed) as i64 - (BACKEND_ALLOCS_PER_CALL * armed_calls) as i64;
+
+    let result = bench.run(name, || {
+        let o = be.decode(BATCH, &tokens, &pos, &slot_mask, &knobs).expect("decode");
+        black_box(o.logits.len());
+    });
+    Point {
+        result,
+        logits: out.logits,
+        fused_passes,
+        simd_lanes,
+        dequant_ns,
+        score_ns,
+        resident_bytes,
+        steady_decode_allocs,
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b.iter()).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+}
+
+/// Engine-level no-alloc gate: `kv_quant=int8` routes decode through the
+/// fused kernels, `trace=full` attaches the most verbose recorder — the
+/// fused path must still add zero steady-state heap allocations.
+fn engine_trace_full_allocs(fast: bool) -> anyhow::Result<i64> {
+    let spec = BackendSpec::native(ModelConfig::tiny("llama-analog"), 0)?;
+    let ecfg = EngineConfig {
+        batch: BATCH,
+        kv_quant: KvQuant::Int8,
+        aqua: AquaConfig { k_ratio: K_RATIO, ..Default::default() },
+        trace: TraceMode::Full,
+        ..Default::default()
+    };
+    let mut engine = Engine::with_spec(&spec, ecfg)?;
+    let (warmup_steps, armed_steps) = if fast { (5u64, 8u64) } else { (5u64, 16u64) };
+    // sized so no lane retires before the armed window closes
+    let max_new = (warmup_steps + armed_steps + 4) as usize;
+    for lane in 0..BATCH {
+        let prompt: Vec<i32> = (0..8).map(|j| 32 + ((11 * lane + 3 * j) % 90) as i32).collect();
+        assert!(engine.submit(GenRequest::new(lane as u64 + 1, prompt, max_new)));
+    }
+    for _ in 0..warmup_steps + 1 {
+        engine.step()?;
+    }
+    ALLOCS.store(0, Ordering::Relaxed);
+    for _ in 0..armed_steps {
+        ARMED.store(true, Ordering::Relaxed);
+        engine.step()?;
+        ARMED.store(false, Ordering::Relaxed);
+    }
+    engine.run_until_idle()?;
+    Ok(ALLOCS.load(Ordering::Relaxed) as i64 - (BACKEND_ALLOCS_PER_CALL * armed_steps) as i64)
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let bench = if fast {
+        Bencher { warmup: 1, iters: 10, ..Bencher::quick() }
+    } else {
+        Bencher { warmup: 3, iters: 25, ..Default::default() }
+    };
+    let cfg = long_cfg();
+    let (d, nq, nkv, nl) = (cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.n_layers);
+    let model = Arc::new(NativeModel::new(cfg.clone(), 0)?);
+    let ps = DEFAULT_PAGE_SLOTS;
+    let layout_for = |quant: KvQuant| PoolLayout {
+        page_slots: ps,
+        key_dims: d,
+        head_dim: d,
+        layers: nl,
+        kv_heads: nkv,
+        kv_quant: quant,
+    };
+    println!(
+        "# fused — page-fused streaming decode vs three-pass packed, S={}, batch={BATCH}, \
+         k={K_RATIO:.2}\n",
+        cfg.max_seq
+    );
+
+    let grid: [(&str, ScoreMode, KvQuant); 3] = [
+        ("packed", ScoreMode::Packed, KvQuant::F32),
+        ("fused", ScoreMode::Fused, KvQuant::F32),
+        ("fused", ScoreMode::Fused, KvQuant::Int8),
+    ];
+    let contexts: [usize; 2] = [128, 560];
+
+    let mut rows: Vec<Json> = vec![];
+    for ctx in contexts {
+        // resident pages per lane: slots 0..=ctx (the step's own write
+        // lands at `ctx`), all leased because the context was written
+        let pages = ctx / ps + 1;
+        let expected_fused = (BATCH * nl * nq * pages) as u64;
+        let mut packed_logits: Option<Vec<f32>> = None;
+        let mut f32_resident: Option<u64> = None;
+        for (label, mode, quant) in grid {
+            let name = format!("{label} {} ctx={ctx}", quant.as_str());
+            let pt = run_point(&model, mode, quant, ctx, &bench, &name);
+            let fused = mode == ScoreMode::Fused;
+            if fused {
+                assert_eq!(
+                    pt.fused_passes, expected_fused,
+                    "{name}: fused passes != lanes x layers x heads x resident pages \
+                     (a page was re-read or skipped)"
+                );
+            } else {
+                assert_eq!(pt.fused_passes, 0, "{name}: packed baseline took fused passes");
+            }
+            assert_eq!(pt.steady_decode_allocs, 0, "{name}: steady decode loop allocated");
+            let parity = match &packed_logits {
+                Some(base) => max_abs_diff(base, &pt.logits) as f64,
+                None => 0.0,
+            };
+            if packed_logits.is_none() {
+                packed_logits = Some(pt.logits.clone());
+            }
+            let ratio = match (quant, f32_resident) {
+                (KvQuant::Int8, Some(f)) => pt.resident_bytes as f64 / f as f64,
+                _ => {
+                    f32_resident = Some(pt.resident_bytes);
+                    1.0
+                }
+            };
+            let page_pass_ns = if fused && pt.fused_passes > 0 {
+                pt.score_ns as f64 / pt.fused_passes as f64
+            } else {
+                0.0
+            };
+            // fused streams with one page-sized score strip; the
+            // three-pass baseline carries the S-length score scratch
+            let scratch_bytes = if fused { ps * 4 } else { cfg.max_seq * 4 };
+            let tok_per_s = BATCH as f64 * 1e9 / pt.result.mean_ns;
+            println!(
+                "{}  ({tok_per_s:.1} tok/s, parity {parity:.2e}, {} passes, allocs {})",
+                pt.result.report(),
+                pt.fused_passes,
+                pt.steady_decode_allocs
+            );
+            rows.push(Json::obj(vec![
+                ("backend", Json::Str("native".into())),
+                ("mode", Json::Str(label.into())),
+                ("kv_quant", Json::Str(quant.as_str().into())),
+                ("k_ratio", Json::Num(K_RATIO)),
+                ("batch", Json::Num(BATCH as f64)),
+                ("threads", Json::Num(1.0)),
+                ("context_slots", Json::Num(ctx as f64)),
+                ("page_slots", Json::Num(ps as f64)),
+                ("page_bytes", Json::Num(layout_for(quant).page_bytes() as f64)),
+                ("scratch_bytes", Json::Num(scratch_bytes as f64)),
+                ("mean_step_us", Json::Num(pt.result.mean_ns / 1e3)),
+                ("tok_per_s", Json::Num(tok_per_s)),
+                ("page_pass_ns", Json::Num(page_pass_ns)),
+                ("fused_passes_per_step", Json::Num(pt.fused_passes as f64)),
+                (
+                    "expected_page_loads_per_step",
+                    Json::Num(if fused { expected_fused as f64 } else { 0.0 }),
+                ),
+                ("parity_max_abs_delta", Json::Num(parity)),
+                ("resident_bytes_ratio_vs_f32", Json::Num(ratio)),
+                ("dequant_ns_per_step", Json::Num(pt.dequant_ns as f64)),
+                ("steady_decode_allocs", Json::Num(pt.steady_decode_allocs as f64)),
+                ("simd_lanes", Json::Num(pt.simd_lanes as f64)),
+            ]));
+        }
+        println!();
+    }
+
+    let engine_allocs = engine_trace_full_allocs(fast)?;
+    assert_eq!(engine_allocs, 0, "int8 engine decode under trace=full allocated");
+    println!("engine int8 trace=full steady allocs: {engine_allocs}");
+
+    let section = Json::obj(vec![
+        ("rows", Json::Arr(rows)),
+        ("model", Json::Str(cfg.name.clone())),
+        ("batch", Json::Num(BATCH as f64)),
+        ("engine_trace_full_steady_allocs", Json::Num(engine_allocs as f64)),
+        (
+            "units",
+            Json::Str(
+                "page_pass_ns = score-path ns per fused page pass (scores + online softmax + \
+                 value mix, one load of the page); scratch_bytes = kernel score scratch (fused: \
+                 one page strip, packed: S-length); parity_max_abs_delta = max |logit delta| vs \
+                 the packed three-pass baseline on identical content (0 for the baseline row); \
+                 resident_bytes_ratio_vs_f32 = measured resident pool bytes vs the f32 row at \
+                 the same operating point; steady_decode_allocs = heap allocations per armed \
+                 window beyond the backend's 2-per-call output buffers, must be 0"
+                    .into(),
+            ),
+        ),
+        ("fast", Json::Bool(fast)),
+    ]);
+    let path = Path::new(fused_path());
+    let mut rep = BenchReport::load_or_new(path);
+    rep.set_section("fused", section);
+    rep.save(path)?;
+    println!("\nwrote fused section to {}", path.display());
+    Ok(())
+}

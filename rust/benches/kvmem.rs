@@ -16,6 +16,11 @@
 //!   budget admits (`budget_pages / pages_per_lane`) — "serve more lanes
 //!   per byte".
 //!
+//! The sweep runs twice: once on the f32 pool (the trajectory every prior
+//! PR baselined) and once with `kv_quant=int8` — per-page block-scaled
+//! resident KV decoded through the fused dequantizing kernels — showing
+//! the quantization saving compounding with AQUA-Memory truncation.
+//!
 //! Writes the `kvmem` section of `BENCH_kvmem.json` (schema in BENCHES.md,
 //! validated by `aqua benchcheck`; `--strict` asserts the kv_keep=0.5
 //! acceptance bound). Pass `--fast` for a smoke run (CI).
@@ -25,7 +30,7 @@ use std::path::Path;
 use aqua_serve::aqua::policy::AquaConfig;
 use aqua_serve::bench::report::{kvmem_path, BenchReport};
 use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
-use aqua_serve::kvpool::{budget_pages, PoolLayout, DEFAULT_PAGE_SLOTS};
+use aqua_serve::kvpool::{budget_pages, KvQuant, PoolLayout, DEFAULT_PAGE_SLOTS};
 use aqua_serve::model::config::ModelConfig;
 use aqua_serve::runtime::{corpus_or_synthetic, BackendSpec};
 use aqua_serve::tokenizer::ByteTokenizer;
@@ -67,48 +72,60 @@ fn main() -> anyhow::Result<()> {
          dense preallocation {dense_alloc} B)\n"
     );
     println!(
-        "{:>8} {:>9} {:>11} {:>14} {:>15} {:>10}",
-        "kv_keep", "mem_dims", "B/token", "peak resident", "resident ratio", "max lanes"
+        "{:>8} {:>6} {:>9} {:>11} {:>14} {:>15} {:>10}",
+        "kv_keep", "quant", "mem_dims", "B/token", "peak resident", "resident ratio", "max lanes"
     );
 
     let mut rows: Vec<Json> = vec![];
-    for keep in [1.0f64, 0.75, 0.5, 0.25] {
-        let aqua = AquaConfig { s_ratio: 1.0 - keep, ..Default::default() };
-        let mem_dims = aqua.mem_dims(d);
-        let layout = PoolLayout {
-            page_slots: DEFAULT_PAGE_SLOTS,
-            key_dims: mem_dims,
-            head_dim: d,
-            layers: nl,
-            kv_heads: nkv,
-        };
-        let bytes_per_token = layout.bytes_per_slot();
-        let pages_per_lane = layout.pages_for_slots(s_cap);
-        let max_lanes = budget_pages(BUDGET_MB, &layout).unwrap_or(0) / pages_per_lane.max(1);
+    // f32 first (the pre-quantization trajectory the acceptance bounds
+    // are stated on), then the int8-resident sweep compounding on top
+    for quant in [KvQuant::F32, KvQuant::Int8] {
+        for keep in [1.0f64, 0.75, 0.5, 0.25] {
+            let aqua = AquaConfig { s_ratio: 1.0 - keep, ..Default::default() };
+            let mem_dims = aqua.mem_dims(d);
+            let layout = PoolLayout {
+                page_slots: DEFAULT_PAGE_SLOTS,
+                key_dims: mem_dims,
+                head_dim: d,
+                layers: nl,
+                kv_heads: nkv,
+                kv_quant: quant,
+            };
+            let bytes_per_token = layout.bytes_per_slot();
+            let pages_per_lane = layout.pages_for_slots(s_cap);
+            let max_lanes = budget_pages(BUDGET_MB, &layout).unwrap_or(0) / pages_per_lane.max(1);
 
-        let mut engine =
-            Engine::with_spec(&spec, EngineConfig { batch: BATCH, aqua, ..Default::default() })?;
-        let mut rng = Rng::new(11);
-        engine.run_batch(workload(&corpus, n_requests, max_prompt, &mut rng))?;
-        let snap = engine.metrics.snapshot();
-        let peak = snap.kv_resident_peak_bytes;
-        let ratio = peak as f64 / dense_alloc as f64;
+            let ecfg = EngineConfig { batch: BATCH, aqua, kv_quant: quant, ..Default::default() };
+            let mut engine = Engine::with_spec(&spec, ecfg)?;
+            let mut rng = Rng::new(11);
+            engine.run_batch(workload(&corpus, n_requests, max_prompt, &mut rng))?;
+            let snap = engine.metrics.snapshot();
+            let peak = snap.kv_resident_peak_bytes;
+            let ratio = peak as f64 / dense_alloc as f64;
 
-        println!(
-            "{:>8.2} {:>9} {:>11} {:>13}B {:>15.3} {:>10}",
-            keep, mem_dims, bytes_per_token, peak, ratio, max_lanes
-        );
-        rows.push(Json::obj(vec![
-            ("kv_keep", Json::Num(keep)),
-            ("mem_dims", Json::Num(mem_dims as f64)),
-            ("page_slots", Json::Num(layout.page_slots as f64)),
-            ("bytes_per_token", Json::Num(bytes_per_token as f64)),
-            ("dense_bytes_per_token", Json::Num(dense_bytes_per_token as f64)),
-            ("peak_resident_bytes", Json::Num(peak as f64)),
-            ("resident_ratio", Json::Num(ratio)),
-            ("max_lanes", Json::Num(max_lanes as f64)),
-            ("budget_mb", Json::Num(BUDGET_MB)),
-        ]));
+            println!(
+                "{:>8.2} {:>6} {:>9} {:>11} {:>13}B {:>15.3} {:>10}",
+                keep,
+                quant.as_str(),
+                mem_dims,
+                bytes_per_token,
+                peak,
+                ratio,
+                max_lanes
+            );
+            rows.push(Json::obj(vec![
+                ("kv_keep", Json::Num(keep)),
+                ("kv_quant", Json::Str(quant.as_str().into())),
+                ("mem_dims", Json::Num(mem_dims as f64)),
+                ("page_slots", Json::Num(layout.page_slots as f64)),
+                ("bytes_per_token", Json::Num(bytes_per_token as f64)),
+                ("dense_bytes_per_token", Json::Num(dense_bytes_per_token as f64)),
+                ("peak_resident_bytes", Json::Num(peak as f64)),
+                ("resident_ratio", Json::Num(ratio)),
+                ("max_lanes", Json::Num(max_lanes as f64)),
+                ("budget_mb", Json::Num(BUDGET_MB)),
+            ]));
+        }
     }
 
     let section = Json::obj(vec![

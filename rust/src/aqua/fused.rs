@@ -1,0 +1,628 @@
+//! Page-fused streaming attention (PR 10 tentpole).
+//!
+//! The three-pass decode path (scores over all S slots → softmax over an
+//! S-length scratch → AV reduction re-walking the value rows) becomes ONE
+//! streaming pass per KV page:
+//!
+//! ```text
+//! for page in lane.pages (attendable slots only):
+//!     z[0..page_slots] = packed AQUA scores of the page   (O(page) scratch)
+//!     fold max(z) into the online softmax (rescale acc by alpha)
+//!     for slot in page: e = exp(z - m); denom += e; acc += e · V[slot]
+//! out = acc / denom
+//! ```
+//!
+//! so each resident page is loaded **exactly once** per (layer, head,
+//! token) — keys and values together, while the page is hot in cache —
+//! and the kernel's own scratch is `O(page_slots)` instead of `O(S)`
+//! (the flash-attention shape, folded over AQUA's truncated dim-major
+//! pages). The raw scaled scores are also written once per slot into the
+//! caller's S-length staging row so the engine's per-slot attention
+//! accumulator (H2O's input) can be normalized afterwards without a
+//! second walk over any KV page.
+//!
+//! Numerics:
+//! * the per-page score block accumulates selected dims in ascending
+//!   order with the same `q·0 = skip` convention as
+//!   [`crate::aqua::native::aqua_scores_packed_cols`], so fused f32
+//!   scores are **bit-identical** to the packed kernel's — only the
+//!   softmax/AV association order differs (within 1e-5 of the
+//!   masked-dense oracle; the parity suite pins it);
+//! * SIMD is strictly **elementwise** (per-lane mul then add, the same
+//!   IEEE operation sequence as the scalar loop), so lane width never
+//!   changes a single bit — the masked-dense oracle stays the accuracy
+//!   referee whether AVX is used or not, and native/sharded stay
+//!   bit-identical on any machine;
+//! * slots on never-leased pages score exactly 0.0 with a zero value row
+//!   (the packed path's dense-zero semantics), and fully-masked page
+//!   segments fold as identities (`OnlineSoftmax`'s -inf guard), never
+//!   NaN;
+//! * under [`KvQuant::Int8`] the per-page dequantization (`q · scale`) is
+//!   fused into the same score/AV loop — the int8 payload is never
+//!   materialized at full width, and the time spent in dequantizing
+//!   passes is reported per step (`KernelCounters::dequant_ns`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+use crate::kvpool::{KvQuant, LanePageTable, PagePool};
+use crate::tensor::softmax::OnlineSoftmax;
+
+// ---------------------------------------------------------------------------
+// SIMD policy (f32x8 on x86-64 AVX, scalar everywhere else)
+// ---------------------------------------------------------------------------
+
+/// 0 = unprobed, 1 = scalar, 2 = f32x8. Runtime feature detection probed
+/// once; tests can force scalar to pin the bit-identity claim.
+static SIMD_STATE: AtomicU8 = AtomicU8::new(0);
+/// 0 = auto, 1 = forced scalar (tests / `AQUA_NO_SIMD`).
+static SIMD_FORCE_SCALAR: AtomicU8 = AtomicU8::new(0);
+
+#[cfg(target_arch = "x86_64")]
+fn probe_simd() -> u8 {
+    if std::arch::is_x86_feature_detected!("avx") {
+        2
+    } else {
+        1
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn probe_simd() -> u8 {
+    1
+}
+
+/// Force the scalar fallback on (or release it) — the bit-control switch
+/// the parity tests flip to show SIMD on/off never changes results.
+pub fn force_scalar(on: bool) {
+    SIMD_FORCE_SCALAR.store(on as u8, Ordering::Relaxed);
+}
+
+/// Whether the f32x8 path is active right now.
+pub fn simd_active() -> bool {
+    if SIMD_FORCE_SCALAR.load(Ordering::Relaxed) == 1 {
+        return false;
+    }
+    let mut s = SIMD_STATE.load(Ordering::Relaxed);
+    if s == 0 {
+        s = probe_simd();
+        SIMD_STATE.store(s, Ordering::Relaxed);
+    }
+    s == 2
+}
+
+/// f32 lanes per SIMD op on the active path (8 with AVX, 1 scalar).
+pub fn simd_lanes() -> u32 {
+    if simd_active() {
+        8
+    } else {
+        1
+    }
+}
+
+/// `out[i] += a * x[i]`, elementwise. The AVX body performs the exact
+/// per-element mul-then-add the scalar loop performs (no FMA, no
+/// horizontal reduction), so both paths are bit-identical.
+#[inline]
+pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: probed `avx` above; slices are bounds-checked inside.
+        unsafe { axpy_avx(out, a, x) };
+        return;
+    }
+    axpy_scalar(out, a, x);
+}
+
+#[inline]
+fn axpy_scalar(out: &mut [f32], a: f32, x: &[f32]) {
+    for (o, &xv) in out.iter_mut().zip(x) {
+        *o += a * xv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn axpy_avx(out: &mut [f32], a: f32, x: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = out.len().min(x.len());
+    let va = _mm256_set1_ps(a);
+    let vec_n = n & !7;
+    let (op, xp) = (out.as_mut_ptr(), x.as_ptr());
+    let mut i = 0;
+    while i < vec_n {
+        let o = _mm256_loadu_ps(op.add(i));
+        let xv = _mm256_loadu_ps(xp.add(i));
+        _mm256_storeu_ps(op.add(i), _mm256_add_ps(o, _mm256_mul_ps(va, xv)));
+        i += 8;
+    }
+    for j in vec_n..n {
+        *out.get_unchecked_mut(j) += a * *x.get_unchecked(j);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-page score blocks
+// ---------------------------------------------------------------------------
+
+/// Packed AQUA scores of one page for the attendable slots `slots`
+/// (absolute positions, ascending, all within this page; `base` is the
+/// page's first position). `kcols` is the page's dim-major (l, g) key
+/// block (`key_dims * ps`). Accumulation order per slot is ascending
+/// selected dims with `q == 0` skipped — bit-identical to
+/// [`crate::aqua::native::aqua_scores_packed_cols`].
+pub fn page_scores_f32(
+    qsel: &[f32],
+    idx: &[usize],
+    kcols: &[f32],
+    ps: usize,
+    slots: &[usize],
+    base: usize,
+    out: &mut [f32],
+) {
+    let n = slots.len();
+    let out = &mut out[..n];
+    out.fill(0.0);
+    if n == 0 {
+        return;
+    }
+    let lo = slots[0] - base;
+    if slots[n - 1] - slots[0] + 1 == n {
+        // contiguous run: stream each selected dim's column with the
+        // elementwise f32x8 kernel
+        for (j, &i) in idx.iter().enumerate() {
+            let qv = qsel[j];
+            if qv == 0.0 {
+                continue;
+            }
+            axpy(out, qv, &kcols[i * ps + lo..i * ps + lo + n]);
+        }
+    } else {
+        // H2O holes: gather only the live slots
+        for (j, &i) in idx.iter().enumerate() {
+            let qv = qsel[j];
+            if qv == 0.0 {
+                continue;
+            }
+            let col = &kcols[i * ps..(i + 1) * ps];
+            for (o, &s) in out.iter_mut().zip(slots) {
+                *o += qv * col[s - base];
+            }
+        }
+    }
+}
+
+/// Int8 variant: same shape, with the block dequantization scale folded
+/// out of the inner loop (`Σ q·(k_q·s) = s · Σ q·k_q`).
+pub fn page_scores_i8(
+    qsel: &[f32],
+    idx: &[usize],
+    kcols: &[i8],
+    k_scale: f32,
+    ps: usize,
+    slots: &[usize],
+    base: usize,
+    out: &mut [f32],
+) {
+    let n = slots.len();
+    let out = &mut out[..n];
+    out.fill(0.0);
+    if n == 0 {
+        return;
+    }
+    for (j, &i) in idx.iter().enumerate() {
+        let qv = qsel[j];
+        if qv == 0.0 {
+            continue;
+        }
+        let col = &kcols[i * ps..(i + 1) * ps];
+        for (o, &s) in out.iter_mut().zip(slots) {
+            *o += qv * col[s - base] as f32;
+        }
+    }
+    for o in out.iter_mut() {
+        *o *= k_scale;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The fused streaming pass
+// ---------------------------------------------------------------------------
+
+/// Per-call observability from one fused pass (folded into
+/// `KernelCounters` by the backend).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FusedStats {
+    /// Resident pages streamed (each exactly once).
+    pub pages: u64,
+    /// Nanoseconds spent in int8 dequantizing page passes.
+    pub dequant_ns: u64,
+}
+
+/// One fused attention pass for one (layer, kv-head group, query head):
+/// streams the lane's pages once, computing scores, online softmax, and
+/// the value reduction together.
+///
+/// * `att` — attendable absolute slots, ascending (the engine's H2O mask
+///   plus in-call causality).
+/// * `page_scores` — the `O(page_slots)` scratch (caller-persistent; no
+///   allocation on this path).
+/// * `z_out` — S-length staging row owned by the caller: the raw scaled
+///   score of every attendable slot is written exactly once, so the
+///   caller can emit normalized per-slot probabilities afterwards
+///   without touching any page again.
+/// * `out_h` — the head's value accumulator (`head_dim`, zeroed by the
+///   caller); on return it holds `Σ e·V` *unnormalized* — multiply by
+///   `osm.finish()` to get the attention output.
+///
+/// Returns the final [`OnlineSoftmax`] state. Never-leased pages score
+/// 0.0 with zero value rows (dense-zero semantics); their probability
+/// mass is accounted like the packed path's.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_attend(
+    qsel: &[f32],
+    idx: &[usize],
+    pool: &PagePool,
+    table: &LanePageTable,
+    l: usize,
+    g: usize,
+    att: &[usize],
+    scale: f32,
+    page_scores: &mut [f32],
+    z_out: &mut [f32],
+    out_h: &mut [f32],
+    stats: &mut FusedStats,
+) -> OnlineSoftmax {
+    let layout = *pool.layout();
+    let (ps, kd, d) = (layout.page_slots, layout.key_dims, layout.head_dim);
+    let ko = layout.key_off(l, g);
+    let mut osm = OnlineSoftmax::new();
+    let mut i = 0usize;
+    while i < att.len() {
+        let p = att[i] / ps;
+        let mut end = i + 1;
+        while end < att.len() && att[end] / ps == p {
+            end += 1;
+        }
+        let slots = &att[i..end];
+        let base = p * ps;
+        match table.page(p) {
+            Some(pid) => {
+                stats.pages += 1;
+                match layout.kv_quant {
+                    KvQuant::F32 => {
+                        let page = pool.page(pid);
+                        page_scores_f32(
+                            qsel,
+                            idx,
+                            &page[ko..ko + kd * ps],
+                            ps,
+                            slots,
+                            base,
+                            page_scores,
+                        );
+                        fold_page(&mut osm, scale, slots, page_scores, z_out, out_h, |s, e, o| {
+                            let vo = layout.val_off(l, g, s - base);
+                            axpy(o, e, &page[vo..vo + d]);
+                        });
+                    }
+                    KvQuant::Int8 => {
+                        let t0 = Instant::now();
+                        let page = pool.page_i8(pid);
+                        let (sk, sv) = (pool.k_scale(pid, l, g), pool.v_scale(pid, l, g));
+                        page_scores_i8(
+                            qsel,
+                            idx,
+                            &page[ko..ko + kd * ps],
+                            sk,
+                            ps,
+                            slots,
+                            base,
+                            page_scores,
+                        );
+                        fold_page(&mut osm, scale, slots, page_scores, z_out, out_h, |s, e, o| {
+                            // dequant fused into the AV reduction: e·(q·sv)
+                            let vo = layout.val_off(l, g, s - base);
+                            let a = e * sv;
+                            for (ov, &q) in o.iter_mut().zip(&page[vo..vo + d]) {
+                                *ov += a * q as f32;
+                            }
+                        });
+                        stats.dequant_ns += t0.elapsed().as_nanos() as u64;
+                    }
+                }
+            }
+            None => {
+                // dense-zero semantics: a never-leased page scores exactly
+                // 0.0 on every attendable slot, value rows are zero — the
+                // mass is accounted, the mix contributes nothing
+                let alpha = osm.fold_max(0.0);
+                if alpha != 1.0 {
+                    for o in out_h.iter_mut() {
+                        *o *= alpha;
+                    }
+                }
+                for &s in slots {
+                    z_out[s] = 0.0;
+                    osm.push(0.0);
+                }
+            }
+        }
+        i = end;
+    }
+    osm
+}
+
+/// Fold one scored page into the online softmax + value accumulator:
+/// scale scores in place, advance the running max (rescaling `out_h` by
+/// alpha), then push each slot's weight and hand it to `accum_v`.
+#[inline]
+fn fold_page(
+    osm: &mut OnlineSoftmax,
+    scale: f32,
+    slots: &[usize],
+    page_scores: &mut [f32],
+    z_out: &mut [f32],
+    out_h: &mut [f32],
+    mut accum_v: impl FnMut(usize, f32, &mut [f32]),
+) {
+    let n = slots.len();
+    let mut cmax = f32::NEG_INFINITY;
+    for z in page_scores[..n].iter_mut() {
+        *z *= scale;
+        cmax = cmax.max(*z);
+    }
+    let alpha = osm.fold_max(cmax);
+    if alpha != 1.0 {
+        for o in out_h.iter_mut() {
+            *o *= alpha;
+        }
+    }
+    for (j, &s) in slots.iter().enumerate() {
+        let z = page_scores[j];
+        z_out[s] = z;
+        let e = osm.push(z);
+        if e != 0.0 {
+            accum_v(s, e, out_h);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aqua::native::aqua_scores_packed_cols;
+    use crate::kvpool::PoolLayout;
+    use crate::tensor::softmax::softmax_inplace;
+    use crate::util::prng::Rng;
+
+    fn layout(quant: KvQuant) -> PoolLayout {
+        PoolLayout {
+            page_slots: 8,
+            key_dims: 4,
+            head_dim: 4,
+            layers: 1,
+            kv_heads: 1,
+            kv_quant: quant,
+        }
+    }
+
+    /// Pool + table with `n` written positions of seeded random KV.
+    #[allow(clippy::type_complexity)]
+    fn build_lane(
+        quant: KvQuant,
+        n: usize,
+        seed: u64,
+    ) -> (PagePool, LanePageTable, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let lay = layout(quant);
+        let (ps, kd, d) = (lay.page_slots, lay.key_dims, lay.head_dim);
+        let mut pool = PagePool::new(lay, 64);
+        let mut table = LanePageTable::new(64);
+        let mut rng = Rng::new(seed);
+        let (mut keys, mut vals) = (vec![], vec![]);
+        for pos in 0..n {
+            let id = table.ensure_mut(&mut pool, pos / ps).unwrap();
+            table.note_write(pos);
+            let k: Vec<f32> = rng.normal_vec(kd, 1.0);
+            let v: Vec<f32> = rng.normal_vec(d, 1.0);
+            pool.write_token(id, 0, 0, pos % ps, &k, &v);
+            keys.push(k);
+            vals.push(v);
+        }
+        (pool, table, keys, vals)
+    }
+
+    #[test]
+    fn axpy_simd_and_scalar_are_bit_identical() {
+        let mut rng = Rng::new(7);
+        for n in [1usize, 7, 8, 9, 31, 64, 100] {
+            let x = rng.normal_vec(n, 2.0);
+            let base = rng.normal_vec(n, 2.0);
+            let a = rng.normal() as f32;
+            let mut with = base.clone();
+            force_scalar(false);
+            axpy(&mut with, a, &x);
+            let mut without = base.clone();
+            force_scalar(true);
+            axpy(&mut without, a, &x);
+            force_scalar(false);
+            assert_eq!(with, without, "lane width changed bits at n={n}");
+        }
+    }
+
+    #[test]
+    fn page_scores_match_packed_kernel_bitwise() {
+        let (pool, table, _, _) = build_lane(KvQuant::F32, 8, 3);
+        let lay = *pool.layout();
+        let (ps, kd) = (lay.page_slots, lay.key_dims);
+        let mut rng = Rng::new(4);
+        let qsel = rng.normal_vec(kd, 1.0);
+        let idx: Vec<usize> = (0..kd).collect();
+        let pid = table.page(0).unwrap();
+        let kcols = &pool.page(pid)[..kd * ps];
+        let mut want = vec![0.0f32; ps];
+        aqua_scores_packed_cols(&qsel, &idx, kcols, ps, ps, &mut want);
+        let slots: Vec<usize> = (0..ps).collect();
+        let mut got = vec![0.0f32; ps];
+        page_scores_f32(&qsel, &idx, kcols, ps, &slots, 0, &mut got);
+        assert_eq!(got, want, "fused page scores must be bit-identical to packed");
+        // subset (H2O-holes) path agrees with the contiguous one per slot
+        let sub = [1usize, 4, 6];
+        let mut got_sub = vec![0.0f32; sub.len()];
+        page_scores_f32(&qsel, &idx, kcols, ps, &sub, 0, &mut got_sub);
+        for (j, &s) in sub.iter().enumerate() {
+            assert_eq!(got_sub[j], want[s], "gather slot {s}");
+        }
+    }
+
+    /// Reference three-pass attention over the same pool content.
+    fn three_pass(
+        qsel: &[f32],
+        idx: &[usize],
+        keys: &[Vec<f32>],
+        vals: &[Vec<f32>],
+        att: &[usize],
+        scale: f32,
+        d: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let n = att.iter().copied().max().map_or(0, |m| m + 1);
+        let mut z = vec![f32::NEG_INFINITY; n];
+        for &s in att {
+            let mut acc = 0.0f32;
+            if s < keys.len() {
+                for (j, &i) in idx.iter().enumerate() {
+                    acc += qsel[j] * keys[s][i];
+                }
+            }
+            z[s] = acc * scale;
+        }
+        let mut probs: Vec<f32> = att.iter().map(|&s| z[s]).collect();
+        softmax_inplace(&mut probs);
+        let mut out = vec![0.0f32; d];
+        let mut pr = vec![0.0f32; n];
+        for (j, &s) in att.iter().enumerate() {
+            pr[s] = probs[j];
+            if s < vals.len() {
+                for (o, &v) in out.iter_mut().zip(&vals[s]) {
+                    *o += probs[j] * v;
+                }
+            }
+        }
+        (out, pr)
+    }
+
+    fn fused_vs_three_pass(quant: KvQuant, att: &[usize], tol: f32) {
+        let (pool, table, keys, vals) = build_lane(quant, 20, 11);
+        let lay = *pool.layout();
+        let (kd, d) = (lay.key_dims, lay.head_dim);
+        let mut rng = Rng::new(12);
+        let qsel = rng.normal_vec(kd, 1.0);
+        let idx: Vec<usize> = (0..kd).collect();
+        let scale = 0.5f32;
+        let mut page_scores = vec![0.0f32; lay.page_slots];
+        let mut z_out = vec![0.0f32; 64 * lay.page_slots];
+        let mut out_h = vec![0.0f32; d];
+        let mut stats = FusedStats::default();
+        let osm = fused_attend(
+            &qsel, &idx, &pool, &table, 0, 0, att, scale, &mut page_scores, &mut z_out,
+            &mut out_h, &mut stats,
+        );
+        let inv = osm.finish().expect("non-empty att");
+        let (want_out, want_pr) = three_pass(&qsel, &idx, &keys, &vals, att, scale, d);
+        for (i, (&got, &want)) in out_h.iter().zip(&want_out).enumerate() {
+            assert!(
+                (got * inv - want).abs() <= tol,
+                "out[{i}] fused {} vs three-pass {want}",
+                got * inv
+            );
+        }
+        for &s in att {
+            let p = (z_out[s] - osm.m).exp() * inv;
+            assert!((p - want_pr[s]).abs() <= tol, "prob[{s}] {p} vs {}", want_pr[s]);
+        }
+        // every resident page with an attendable slot was read exactly once
+        let resident: usize = {
+            let ps = lay.page_slots;
+            let mut pages: Vec<usize> =
+                att.iter().map(|&s| s / ps).filter(|&p| table.page(p).is_some()).collect();
+            pages.dedup();
+            pages.len()
+        };
+        assert_eq!(stats.pages, resident as u64, "each resident page streamed once");
+    }
+
+    #[test]
+    fn fused_matches_three_pass_f32_contiguous_and_with_holes() {
+        let att: Vec<usize> = (0..20).collect();
+        fused_vs_three_pass(KvQuant::F32, &att, 1e-5);
+        // H2O holes: drop whole pages and scattered slots
+        let holey: Vec<usize> = (0..20).filter(|s| s % 3 != 1 && !(8..16).contains(s)).collect();
+        fused_vs_three_pass(KvQuant::F32, &holey, 1e-5);
+    }
+
+    #[test]
+    fn fused_int8_stays_within_the_quantization_bound() {
+        // int8 K and V: the error of the fused output is bounded by the
+        // measured block scales, far looser than f32 parity but measured
+        let att: Vec<usize> = (0..20).collect();
+        fused_vs_three_pass(KvQuant::Int8, &att, 0.25);
+    }
+
+    #[test]
+    fn unleased_pages_score_dense_zero() {
+        // att extends past the written range into a page the table never
+        // leased: those slots take score 0.0 (mass accounted, zero value),
+        // exactly the packed path's semantics for never-written slots
+        let (pool, table, keys, vals) = build_lane(KvQuant::F32, 8, 21);
+        let lay = *pool.layout();
+        let (kd, d) = (lay.key_dims, lay.head_dim);
+        let qsel = vec![1.0f32; kd];
+        let idx: Vec<usize> = (0..kd).collect();
+        let att: Vec<usize> = (0..24).collect(); // pages 1, 2 never leased
+        let mut page_scores = vec![0.0f32; lay.page_slots];
+        let mut z_out = vec![9.0f32; 64];
+        let mut out_h = vec![0.0f32; d];
+        let mut stats = FusedStats::default();
+        let osm = fused_attend(
+            &qsel, &idx, &pool, &table, 0, 0, &att, 1.0, &mut page_scores, &mut z_out,
+            &mut out_h, &mut stats,
+        );
+        assert_eq!(stats.pages, 1, "only the single resident page streamed");
+        let inv = osm.finish().unwrap();
+        for s in 8..24 {
+            assert_eq!(z_out[s], 0.0, "unleased slot {s} scores dense zero");
+        }
+        let (want_out, want_pr) = three_pass(&qsel, &idx, &keys, &vals, &att, 1.0, d);
+        for (got, want) in out_h.iter().zip(&want_out) {
+            assert!((got * inv - want).abs() < 1e-5);
+        }
+        assert!((((z_out[9] - osm.m).exp() * inv) - want_pr[9]).abs() < 1e-6);
+        assert!(!out_h.iter().any(|x| x.is_nan()), "dense-zero fold must not NaN");
+    }
+
+    #[test]
+    fn fused_results_are_simd_invariant() {
+        let (pool, table, _, _) = build_lane(KvQuant::F32, 20, 31);
+        let lay = *pool.layout();
+        let (kd, d) = (lay.key_dims, lay.head_dim);
+        let mut rng = Rng::new(32);
+        let qsel = rng.normal_vec(kd, 1.0);
+        let idx: Vec<usize> = (0..kd).collect();
+        let att: Vec<usize> = (0..20).collect();
+        let run = |scalar: bool| {
+            force_scalar(scalar);
+            let mut page_scores = vec![0.0f32; lay.page_slots];
+            let mut z_out = vec![0.0f32; 64];
+            let mut out_h = vec![0.0f32; d];
+            let mut stats = FusedStats::default();
+            let osm = fused_attend(
+                &qsel, &idx, &pool, &table, 0, 0, &att, 0.5, &mut page_scores, &mut z_out,
+                &mut out_h, &mut stats,
+            );
+            force_scalar(false);
+            (out_h, z_out, osm.m, osm.denom)
+        };
+        assert_eq!(run(false), run(true), "SIMD on/off must be bit-identical");
+    }
+}

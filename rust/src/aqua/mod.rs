@@ -5,9 +5,14 @@
 //! * [`native`] — dense/sparse score kernels: the *real* O((i+1)·k) gather
 //!   implementation the complexity claims are measured on (the HLO path
 //!   uses the numerically-identical masked-dense formulation).
+//! * [`fused`] — the PR 10 page-fused streaming decode path: packed
+//!   scores + online softmax + value reduction in one pass per KV page,
+//!   `O(page_slots)` scratch, SIMD (f32x8) score/AV loops with a
+//!   bit-identical scalar fallback, and fused int8 dequantization.
 //! * [`info_loss`] — §6.2 information-retention loss (Figures 2, 3/4).
 //! * [`overlap`] — §7 / Fig. 5 magnitude-vs-PCA overlap analysis.
 
+pub mod fused;
 pub mod info_loss;
 pub mod native;
 pub mod overlap;

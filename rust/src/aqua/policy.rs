@@ -177,6 +177,7 @@ mod tests {
             head_dim: 32,
             layers: 4,
             kv_heads: 2,
+            kv_quant: crate::kvpool::KvQuant::F32,
         };
         assert_eq!(sliced, layout.bytes_per_slot());
     }

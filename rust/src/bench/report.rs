@@ -71,6 +71,15 @@ pub fn speculate_path() -> &'static str {
     concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_speculate.json")
 }
 
+/// Repo-root path of the fused-kernel report (`BENCH_fused.json`), written
+/// by the `fused` bench — page-fused streaming decode vs the three-pass
+/// packed baseline, per-page-pass cost, scratch footprint, and the int8
+/// resident-KV ratio, one row per (`mode`, `kv_quant`, context) operating
+/// point (schema in BENCHES.md).
+pub fn fused_path() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fused.json")
+}
+
 /// An on-disk report being updated section-by-section.
 pub struct BenchReport {
     doc: Json,
@@ -254,6 +263,11 @@ pub fn validate_kvmem(doc: &Json, strict: bool) -> Result<()> {
         if bpt > dense {
             bail!("kvmem row: resident bytes_per_token {bpt} exceeds dense {dense}: {r}");
         }
+        // `kv_quant` is optional (pre-PR-10 rows are f32)
+        match r.get("kv_quant").as_str() {
+            None | Some("f32") | Some("int8") => {}
+            other => bail!("kvmem row has unknown kv_quant {other:?}: {r}"),
+        }
     }
     if !strict {
         return Ok(());
@@ -262,9 +276,25 @@ pub fn validate_kvmem(doc: &Json, strict: bool) -> Result<()> {
         bail!("strict validation refused: numbers are cost-model projections, not measurements \
                (regenerate with the kvmem bench)");
     }
-    let find = |keep: f64| -> Option<&Json> {
-        rows.iter().find(|r| (r.get("kv_keep").as_f64().unwrap_or(-1.0) - keep).abs() < 1e-9)
+    let find_quant = |keep: f64, quant: &str| -> Option<&Json> {
+        rows.iter().find(|r| {
+            (r.get("kv_keep").as_f64().unwrap_or(-1.0) - keep).abs() < 1e-9
+                && r.get("kv_quant").as_str().unwrap_or("f32") == quant
+        })
     };
+    // the memory-claim bounds are stated on the f32 pool; int8 rows
+    // (when present) must compound on top of the same kv_keep point
+    let find = |keep: f64| find_quant(keep, "f32");
+    if let (Some(q), Some(f)) = (find_quant(0.5, "int8"), find_quant(0.5, "f32")) {
+        let (qp, fp) = (
+            q.get("peak_resident_bytes").as_f64().unwrap_or(f64::MAX),
+            f.get("peak_resident_bytes").as_f64().unwrap_or(0.0),
+        );
+        if qp > 0.6 * fp {
+            bail!("kv_quant=int8 at kv_keep=0.5 resides {qp} B vs f32's {fp} B — misses the \
+                   >= 40% reduction bound");
+        }
+    }
     let half = find(0.5).context("missing kv_keep=0.5 row")?;
     let full = find(1.0).context("missing kv_keep=1.0 row")?;
     let ratio = half.get("resident_ratio").as_f64().unwrap_or(1.0);
@@ -535,6 +565,120 @@ pub fn validate_speculate(doc: &Json, strict: bool) -> Result<()> {
     Ok(())
 }
 
+/// Validate a `BENCH_fused.json` document (the `fused` section the fused
+/// bench emits: page-fused streaming decode vs the three-pass packed
+/// baseline, one row per (`mode`, `kv_quant`, context) operating point;
+/// schema in BENCHES.md). The schema pass enforces the tentpole's
+/// structural invariants — they are deterministic counter/byte arithmetic,
+/// not timings, so a projected snapshot must satisfy them too: fused rows
+/// keep `scratch_bytes` within one page (`<= page_bytes`, the O(page_slots)
+/// claim), reconcile `fused_passes_per_step` with
+/// `expected_page_loads_per_step` (each resident page read exactly once),
+/// report zero steady-state decode allocations, carry a finite parity
+/// delta (<= 1e-5 vs packed on f32; <= 0.5 on int8), and int8 rows cut
+/// resident bytes to <= 0.6x their f32 twin. `strict` refuses projected
+/// snapshots and asserts the perf acceptance bound: at `context_slots >=
+/// 512` the fused f32 path sustains >= 1.3x the packed three-pass decode
+/// throughput at the same operating point.
+pub fn validate_fused(doc: &Json, strict: bool) -> Result<()> {
+    let ver = doc.get("schema_version").as_i64().unwrap_or(0);
+    if ver != SCHEMA_VERSION {
+        bail!("schema_version {ver} != {SCHEMA_VERSION}");
+    }
+    let rows = rows_of(doc, "fused")?;
+    for r in rows {
+        for f in ["backend", "mode", "kv_quant"] {
+            if r.get(f).as_str().is_none() {
+                bail!("fused row missing '{f}': {r}");
+            }
+        }
+        match r.get("mode").as_str() {
+            Some("fused") | Some("packed") => {}
+            other => bail!("fused row has unknown mode {other:?}: {r}"),
+        }
+        match r.get("kv_quant").as_str() {
+            Some("f32") | Some("int8") => {}
+            other => bail!("fused row has unknown kv_quant {other:?}: {r}"),
+        }
+        for f in ["k_ratio", "mean_step_us", "tok_per_s", "page_pass_ns", "parity_max_abs_delta",
+                  "resident_bytes_ratio_vs_f32", "dequant_ns_per_step"] {
+            if r.get(f).as_f64().is_none() {
+                bail!("fused row missing '{f}': {r}");
+            }
+        }
+        for f in ["batch", "threads", "context_slots", "page_slots", "page_bytes", "scratch_bytes",
+                  "fused_passes_per_step", "expected_page_loads_per_step", "steady_decode_allocs",
+                  "simd_lanes"] {
+            if r.get(f).as_i64().is_none() {
+                bail!("fused row missing '{f}': {r}");
+            }
+        }
+        let parity = r.get("parity_max_abs_delta").as_f64().unwrap_or(f64::NAN);
+        if !parity.is_finite() || parity < 0.0 {
+            bail!("fused row has non-finite parity delta: {r}");
+        }
+        let fused = r.get("mode").as_str() == Some("fused");
+        let int8 = r.get("kv_quant").as_str() == Some("int8");
+        if fused {
+            let (scratch, page) = (
+                r.get("scratch_bytes").as_i64().unwrap_or(i64::MAX),
+                r.get("page_bytes").as_i64().unwrap_or(0),
+            );
+            if scratch > page {
+                bail!("fused row scratch {scratch} B exceeds one page ({page} B) — the kernel \
+                       must stream with O(page_slots) scratch: {r}");
+            }
+            let (passes, expected) = (
+                r.get("fused_passes_per_step").as_i64().unwrap_or(-1),
+                r.get("expected_page_loads_per_step").as_i64().unwrap_or(-2),
+            );
+            if passes != expected {
+                bail!("fused row reads each resident page {passes} times per step, expected \
+                       {expected} (lanes x layers x heads x resident pages): {r}");
+            }
+            // satellite: the fused decode loop is allocation-free
+            if r.get("steady_decode_allocs").as_i64() != Some(0) {
+                bail!("fused row reports steady-state decode allocations: {r}");
+            }
+            let bound = if int8 { 0.5 } else { 1e-5 };
+            if parity > bound {
+                bail!("fused row parity delta {parity} exceeds the {bound} bound vs the packed \
+                       three-pass baseline: {r}");
+            }
+        } else if r.get("fused_passes_per_step").as_i64() != Some(0) {
+            bail!("packed baseline row claims fused page passes: {r}");
+        }
+        let ratio = r.get("resident_bytes_ratio_vs_f32").as_f64().unwrap_or(1.0);
+        if int8 && ratio > 0.6 {
+            bail!("int8 row resident bytes are {ratio:.3}x f32 — misses the >= 40% reduction \
+                   acceptance bound: {r}");
+        }
+    }
+    if !strict {
+        return Ok(());
+    }
+    if doc.get("projected").as_bool() == Some(true) {
+        bail!("strict validation refused: numbers are cost-model projections, not measurements \
+               (regenerate with the fused bench)");
+    }
+    let find = |mode: &str| -> Option<f64> {
+        rows.iter()
+            .find(|r| {
+                r.get("mode").as_str() == Some(mode)
+                    && r.get("kv_quant").as_str() == Some("f32")
+                    && r.get("context_slots").as_i64().unwrap_or(0) >= 512
+            })
+            .and_then(|r| r.get("tok_per_s").as_f64())
+    };
+    let fused = find("fused").context("missing fused f32 row at context_slots >= 512")?;
+    let packed = find("packed").context("missing packed f32 row at context_slots >= 512")?;
+    if fused < 1.3 * packed {
+        bail!("fused decode ({fused:.1} tok/s) is under 1.3x the packed three-pass baseline \
+               ({packed:.1} tok/s) at context >= 512");
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -732,6 +876,35 @@ mod tests {
         let shrunk =
             kvmem_doc(vec![kvmem_row(1.0, 256.0, 0.40, 25.0), kvmem_row(0.5, 192.0, 0.30, 20.0)]);
         assert!(validate_kvmem(&shrunk, true).is_err());
+
+        // int8 rows ride the same section: they must compound the saving
+        // at the same kv_keep point (and an unknown kv_quant is rejected)
+        let int8_row = |ratio: f64| {
+            let mut r = kvmem_row(0.5, 50.0, ratio, 131.0);
+            if let Json::Obj(o) = &mut r {
+                o.insert("kv_quant".into(), Json::Str("int8".into()));
+            }
+            r
+        };
+        let compounded = kvmem_doc(vec![
+            kvmem_row(1.0, 256.0, 0.40, 25.0),
+            kvmem_row(0.5, 192.0, 0.30, 34.0),
+            int8_row(0.08),
+        ]);
+        validate_kvmem(&compounded, false).unwrap();
+        validate_kvmem(&compounded, true).unwrap();
+        let heavy = kvmem_doc(vec![
+            kvmem_row(1.0, 256.0, 0.40, 25.0),
+            kvmem_row(0.5, 192.0, 0.30, 34.0),
+            int8_row(0.25),
+        ]);
+        validate_kvmem(&heavy, false).unwrap();
+        assert!(validate_kvmem(&heavy, true).is_err());
+        let mut odd = kvmem_row(0.5, 50.0, 0.08, 131.0);
+        if let Json::Obj(o) = &mut odd {
+            o.insert("kv_quant".into(), Json::Str("fp4".into()));
+        }
+        assert!(validate_kvmem(&kvmem_doc(vec![odd]), false).is_err());
 
         // projected snapshots pass the schema but refuse strict validation
         let mut projected = good.clone();
@@ -985,6 +1158,128 @@ mod tests {
         assert!(validate_speculate(&projected, true).is_err());
 
         assert!(validate_speculate(&Json::obj(vec![]), false).is_err());
+    }
+
+    fn fused_row(mode: &str, quant: &str, ctx: f64, tps: f64) -> Json {
+        let fused = mode == "fused";
+        let pages = (ctx / 16.0).floor() + 1.0;
+        Json::obj(vec![
+            ("backend", Json::Str("native".into())),
+            ("mode", Json::Str(mode.into())),
+            ("kv_quant", Json::Str(quant.into())),
+            ("k_ratio", Json::Num(0.25)),
+            ("batch", Json::Num(4.0)),
+            ("threads", Json::Num(1.0)),
+            ("context_slots", Json::Num(ctx)),
+            ("page_slots", Json::Num(16.0)),
+            ("page_bytes", Json::Num(4096.0)),
+            ("scratch_bytes", Json::Num(if fused { 64.0 } else { 2560.0 })),
+            ("mean_step_us", Json::Num(1e6 * 4.0 / tps)),
+            ("tok_per_s", Json::Num(tps)),
+            ("page_pass_ns", Json::Num(if fused { 180.0 } else { 0.0 })),
+            ("fused_passes_per_step", Json::Num(if fused { 4.0 * 2.0 * 4.0 * pages } else { 0.0 })),
+            (
+                "expected_page_loads_per_step",
+                Json::Num(if fused { 4.0 * 2.0 * 4.0 * pages } else { 0.0 }),
+            ),
+            ("parity_max_abs_delta", Json::Num(if quant == "int8" { 0.08 } else { 0.0 })),
+            (
+                "resident_bytes_ratio_vs_f32",
+                Json::Num(if quant == "int8" { 0.26 } else { 1.0 }),
+            ),
+            ("dequant_ns_per_step", Json::Num(if quant == "int8" { 900.0 } else { 0.0 })),
+            ("steady_decode_allocs", Json::Num(0.0)),
+            ("simd_lanes", Json::Num(8.0)),
+        ])
+    }
+
+    fn fused_doc(rows: Vec<Json>) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            (
+                "sections",
+                Json::obj(vec![("fused", Json::obj(vec![("rows", Json::Arr(rows))]))]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn validate_fused_schema_and_invariants() {
+        let good = fused_doc(vec![
+            fused_row("packed", "f32", 560.0, 1000.0),
+            fused_row("fused", "f32", 560.0, 1500.0),
+            fused_row("fused", "int8", 560.0, 1400.0),
+        ]);
+        validate_fused(&good, false).unwrap();
+        validate_fused(&good, true).unwrap();
+
+        // O(S) scratch on the fused path is a schema failure
+        let mut fat = fused_row("fused", "f32", 560.0, 1500.0);
+        if let Json::Obj(r) = &mut fat {
+            r.insert("scratch_bytes".into(), Json::Num(999999.0));
+        }
+        assert!(validate_fused(&fused_doc(vec![fat]), false).is_err());
+
+        // re-reading a page breaks the read-once invariant
+        let mut rereads = fused_row("fused", "f32", 560.0, 1500.0);
+        if let Json::Obj(r) = &mut rereads {
+            r.insert("fused_passes_per_step".into(), Json::Num(9999.0));
+        }
+        assert!(validate_fused(&fused_doc(vec![rereads]), false).is_err());
+
+        // a decode-loop allocation is a schema failure (no-alloc gate)
+        let mut leaky = fused_row("fused", "f32", 560.0, 1500.0);
+        if let Json::Obj(r) = &mut leaky {
+            r.insert("steady_decode_allocs".into(), Json::Num(2.0));
+        }
+        assert!(validate_fused(&fused_doc(vec![leaky]), false).is_err());
+
+        // f32 fused must match packed to 1e-5; int8 gets the loose bound
+        let mut drifted = fused_row("fused", "f32", 560.0, 1500.0);
+        if let Json::Obj(r) = &mut drifted {
+            r.insert("parity_max_abs_delta".into(), Json::Num(0.01));
+        }
+        assert!(validate_fused(&fused_doc(vec![drifted]), false).is_err());
+
+        // int8 missing the 40% resident-KV reduction is a schema failure
+        let mut heavy = fused_row("fused", "int8", 560.0, 1400.0);
+        if let Json::Obj(r) = &mut heavy {
+            r.insert("resident_bytes_ratio_vs_f32".into(), Json::Num(0.8));
+        }
+        assert!(validate_fused(&fused_doc(vec![heavy]), false).is_err());
+
+        // a packed baseline claiming fused passes is lying
+        let mut fake = fused_row("packed", "f32", 560.0, 1000.0);
+        if let Json::Obj(r) = &mut fake {
+            r.insert("fused_passes_per_step".into(), Json::Num(64.0));
+        }
+        assert!(validate_fused(&fused_doc(vec![fake]), false).is_err());
+
+        // the 1.3x throughput bound at S >= 512 is a strict failure only
+        let slow = fused_doc(vec![
+            fused_row("packed", "f32", 560.0, 1000.0),
+            fused_row("fused", "f32", 560.0, 1100.0),
+        ]);
+        validate_fused(&slow, false).unwrap();
+        assert!(validate_fused(&slow, true).is_err());
+
+        // short-context rows alone cannot satisfy strict
+        let short = fused_doc(vec![
+            fused_row("packed", "f32", 80.0, 1000.0),
+            fused_row("fused", "f32", 80.0, 1500.0),
+        ]);
+        validate_fused(&short, false).unwrap();
+        assert!(validate_fused(&short, true).is_err());
+
+        // projected snapshots pass the schema but refuse strict validation
+        let mut projected = good.clone();
+        if let Json::Obj(o) = &mut projected {
+            o.insert("projected".into(), Json::Bool(true));
+        }
+        validate_fused(&projected, false).unwrap();
+        assert!(validate_fused(&projected, true).is_err());
+
+        assert!(validate_fused(&Json::obj(vec![]), false).is_err());
     }
 
     #[test]

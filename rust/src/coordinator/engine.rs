@@ -44,7 +44,7 @@ use super::kvcache::LaneKv;
 use super::metrics::Metrics;
 use super::request::{ActiveReq, FinishReason, GenRequest, GenResult, ReqTimings};
 use crate::aqua::policy::AquaConfig;
-use crate::kvpool::{budget_pages, KvPoolConfig, PoolLayout, DEFAULT_PAGE_SLOTS};
+use crate::kvpool::{budget_pages, KvPoolConfig, KvQuant, PoolLayout, DEFAULT_PAGE_SLOTS};
 use crate::model::sampling::Sampler;
 use crate::runtime::backend::{AquaKnobs, BackendSpec, ExecBackend, LaneError};
 use crate::spec::SpecController;
@@ -75,6 +75,11 @@ pub struct EngineConfig {
     pub prefix_cache: bool,
     /// Max chains the backend's prefix index registers (0 = unlimited).
     pub prefix_cache_pages: usize,
+    /// Resident KV payload element type: `F32` (default, bit-identical to
+    /// the pre-quantization pool) or `Int8` (per-page block scales, ~4x
+    /// smaller resident pages, decode routed through the fused
+    /// dequantizing kernels).
+    pub kv_quant: KvQuant,
     /// Per-pass cap on prefill tokens summed across lanes (0 = unlimited).
     /// Lanes are still fed whole `min(remaining, chunk)` slices — the cap
     /// is rounded up to one chunk so a prefill pass always makes progress
@@ -131,6 +136,7 @@ impl Default for EngineConfig {
             kv_budget_mb: 0.0,
             prefix_cache: false,
             prefix_cache_pages: 0,
+            kv_quant: KvQuant::F32,
             max_batch_prefill_tokens: 0,
             max_batch_total_tokens: 0,
             waiting_served_ratio: 1.2,
@@ -154,6 +160,7 @@ impl EngineConfig {
             head_dim: c.d_head,
             layers: c.n_layers,
             kv_heads: c.n_kv_heads,
+            kv_quant: self.kv_quant,
         }
     }
 
@@ -166,6 +173,7 @@ impl EngineConfig {
             max_pages,
             prefix_cache: self.prefix_cache,
             prefix_cache_pages: self.prefix_cache_pages,
+            kv_quant: self.kv_quant,
         }
     }
 }

@@ -626,7 +626,8 @@ impl Snapshot {
              ttft mean {:.2}ms p50 {:.2}ms p99 {:.2}ms | latency mean {:.2}ms | h2o_evictions={}\n\
              sched steps={} occupancy {:.0}% prefill {:.1} tok/step | itl mean {:.3}ms p99 {:.3}ms \
              | queue wait p50 {:.2}ms p99 {:.2}ms\n\
-             kernels dense={} sparse={} packed={} | score path {:.2}µs/decode\n\
+             kernels dense={} sparse={} packed={} fused_pages={} simd_lanes={} \
+             | score path {:.2}µs/decode (dequant {:.1}µs total)\n\
              kv resident {:.1}KiB (peak {:.1}KiB) pages={} util {:.0}% stalls={} free={}\n\
              prefix hits={} tok ({:.0}% of prompt volume) shared_pages={} cow={} evictions={}\n\
              spec drafted={} accepted={} rejected={} (acceptance {:.0}%) \
@@ -641,7 +642,9 @@ impl Snapshot {
             self.sched_steps, 100.0 * self.batch_occupancy, self.prefill_tokens_per_step,
             self.itl_mean_ms, self.itl_p99_ms, self.queue_wait_p50_ms, self.queue_wait_p99_ms,
             self.kernels.dense, self.kernels.sparse, self.kernels.packed,
+            self.kernels.fused_passes, self.kernels.simd_lanes_used,
             self.score_us_per_decode,
+            self.kernels.dequant_ns as f64 / 1000.0,
             self.kv_resident_bytes as f64 / 1024.0,
             self.kv_resident_peak_bytes as f64 / 1024.0,
             self.kv_pages_in_use,
@@ -676,10 +679,33 @@ mod tests {
         m.record_prefill(Duration::from_millis(5), 32);
         m.record_finish(Some(Duration::from_millis(15)), Duration::from_millis(50));
         m.record_evictions(3);
-        m.record_kernels(&KernelCounters { dense: 2, sparse: 1, packed: 5, score_ns: 4_000 }, true);
-        m.record_kernels(&KernelCounters { dense: 0, sparse: 0, packed: 3, score_ns: 2_000 }, true);
+        m.record_kernels(
+            &KernelCounters {
+                dense: 2,
+                sparse: 1,
+                packed: 5,
+                score_ns: 4_000,
+                fused_passes: 2,
+                simd_lanes_used: 8,
+                dequant_ns: 500,
+            },
+            true,
+        );
+        m.record_kernels(
+            &KernelCounters {
+                dense: 0,
+                sparse: 0,
+                packed: 3,
+                score_ns: 2_000,
+                fused_passes: 3,
+                simd_lanes_used: 1,
+                dequant_ns: 250,
+            },
+            true,
+        );
         // prefill score time counts in the pooled counters, not per-decode
-        let prefill = KernelCounters { dense: 4, sparse: 0, packed: 0, score_ns: 9_000 };
+        let prefill =
+            KernelCounters { dense: 4, sparse: 0, packed: 0, score_ns: 9_000, ..Default::default() };
         m.record_kernels(&prefill, false);
         let s = m.snapshot();
         assert_eq!(s.tokens_generated, 8);
@@ -691,11 +717,15 @@ mod tests {
         assert_eq!(s.kernels.sparse, 1);
         assert_eq!(s.kernels.packed, 8);
         assert_eq!(s.kernels.score_ns, 15_000);
+        assert_eq!(s.kernels.fused_passes, 5);
+        assert_eq!(s.kernels.simd_lanes_used, 8, "lane width is max-merged, not summed");
+        assert_eq!(s.kernels.dequant_ns, 750);
         // (4000 + 2000) ns of *decode* score time over 2 decode calls
         assert!((s.score_us_per_decode - 3.0).abs() < 1e-9);
         assert!((s.decode_tok_per_s - 400.0).abs() < 1.0);
         assert!(s.mean_ttft_ms > 14.0 && s.mean_ttft_ms < 16.0);
         assert!(s.report().contains("packed=8"));
+        assert!(s.report().contains("fused_pages=5"));
     }
 
     #[test]
@@ -969,7 +999,15 @@ mod tests {
             h2o_evictions: 3,
             wall_tok_per_s: 50.0,
             score_us_per_decode: 4.0,
-            kernels: KernelCounters { dense: 5, sparse: 0, packed: 0, score_ns: 100 },
+            kernels: KernelCounters {
+                dense: 5,
+                sparse: 0,
+                packed: 0,
+                score_ns: 100,
+                fused_passes: 1,
+                simd_lanes_used: 8,
+                dequant_ns: 40,
+            },
             ..Default::default()
         };
         let b = Snapshot {
@@ -982,14 +1020,33 @@ mod tests {
             h2o_evictions: 1,
             wall_tok_per_s: 150.0,
             score_us_per_decode: 8.0,
-            kernels: KernelCounters { dense: 0, sparse: 2, packed: 7, score_ns: 50 },
+            kernels: KernelCounters {
+                dense: 0,
+                sparse: 2,
+                packed: 7,
+                score_ns: 50,
+                fused_passes: 4,
+                simd_lanes_used: 1,
+                dequant_ns: 10,
+            },
             ..Default::default()
         };
         a.merge(&b);
         assert_eq!(a.requests_done, 8);
         assert_eq!(a.tokens_generated, 400);
         assert_eq!(a.h2o_evictions, 4);
-        assert_eq!(a.kernels, KernelCounters { dense: 5, sparse: 2, packed: 7, score_ns: 150 });
+        assert_eq!(
+            a.kernels,
+            KernelCounters {
+                dense: 5,
+                sparse: 2,
+                packed: 7,
+                score_ns: 150,
+                fused_passes: 5,
+                simd_lanes_used: 8,
+                dequant_ns: 50,
+            }
+        );
         assert!((a.mean_ttft_ms - 25.0).abs() < 1e-9, "weighted by requests: (10*2+30*6)/8");
         assert!((a.p99_ttft_ms - 20.0).abs() < 1e-9, "worst-of");
         assert!((a.wall_tok_per_s - 200.0).abs() < 1e-9, "concurrent engines add");

@@ -167,8 +167,14 @@ mod tests {
     use super::*;
 
     fn pool() -> PagePool {
-        let layout =
-            PoolLayout { page_slots: 4, key_dims: 2, head_dim: 4, layers: 1, kv_heads: 1 };
+        let layout = PoolLayout {
+            page_slots: 4,
+            key_dims: 2,
+            head_dim: 4,
+            layers: 1,
+            kv_heads: 1,
+            kv_quant: super::super::KvQuant::F32,
+        };
         PagePool::new(layout, 8)
     }
 

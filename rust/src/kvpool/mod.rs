@@ -63,6 +63,51 @@ pub use lane::LanePageTable;
 pub use pool::{PagePool, PoolLayout};
 pub use prefix::{PrefixIndex, Register};
 
+use anyhow::{bail, Result};
+
+/// Element type of the resident KV payload (PR 10). `F32` is the
+/// byte-for-byte pre-quantization layout; `Int8` stores both the
+/// truncated projected keys and the values as int8 with per-page,
+/// per-(layer, kv-head) dequantization scales in a small f32 sidecar —
+/// dequantization is fused into the streaming score/AV loop, so the
+/// payload is never materialized at full width.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum KvQuant {
+    /// Full-precision resident KV (the default; bit-identical to the
+    /// pre-PR-10 pool).
+    #[default]
+    F32,
+    /// Int8 payload + per-page f32 scale sidecar (~4x smaller resident
+    /// pages; readable only through the fused dequantizing kernels).
+    Int8,
+}
+
+impl KvQuant {
+    /// Bytes per payload element.
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            KvQuant::F32 => 4,
+            KvQuant::Int8 => 1,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KvQuant::F32 => "f32",
+            KvQuant::Int8 => "int8",
+        }
+    }
+
+    /// Parse the deployment-spec / CLI spelling.
+    pub fn parse(s: &str) -> Result<KvQuant> {
+        match s {
+            "f32" => Ok(KvQuant::F32),
+            "int8" => Ok(KvQuant::Int8),
+            other => bail!("kv_quant must be \"f32\" or \"int8\", got {other:?}"),
+        }
+    }
+}
+
 /// Default page size in token slots. Matches the native prefill chunk so
 /// one prefill call touches at most two pages per lane.
 pub const DEFAULT_PAGE_SLOTS: usize = 16;
@@ -147,6 +192,8 @@ pub struct KvPoolConfig {
     pub prefix_cache: bool,
     /// Max chains the prefix index registers (0 = unlimited).
     pub prefix_cache_pages: usize,
+    /// Resident KV payload element type (default [`KvQuant::F32`]).
+    pub kv_quant: KvQuant,
 }
 
 /// Pages a `kv_budget_mb` megabyte budget buys under `layout`; `None` when
@@ -165,7 +212,14 @@ mod tests {
     use super::*;
 
     fn layout() -> PoolLayout {
-        PoolLayout { page_slots: 16, key_dims: 4, head_dim: 8, layers: 2, kv_heads: 2 }
+        PoolLayout {
+            page_slots: 16,
+            key_dims: 4,
+            head_dim: 8,
+            layers: 2,
+            kv_heads: 2,
+            kv_quant: KvQuant::F32,
+        }
     }
 
     #[test]
@@ -179,6 +233,16 @@ mod tests {
         // a budget smaller than one page buys zero pages (sheds everything
         // deterministically rather than over-allocating)
         assert_eq!(budget_pages(0.001, &l), Some(0));
+    }
+
+    #[test]
+    fn int8_budget_buys_almost_4x_the_pages() {
+        let f = layout();
+        let q = PoolLayout { kv_quant: KvQuant::Int8, ..f };
+        // payload 768 int8 bytes + 2*2*2 f32 scales = 800 bytes/page
+        assert_eq!(q.page_bytes(), 768 + 32);
+        let (pf, pq) = (budget_pages(4.0, &f).unwrap(), budget_pages(4.0, &q).unwrap());
+        assert!(pq > 3 * pf, "int8 budget pages {pq} vs f32 {pf}");
     }
 
     #[test]

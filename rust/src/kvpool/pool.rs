@@ -21,7 +21,7 @@
 
 use anyhow::{bail, Result};
 
-use super::KvPoolGauges;
+use super::{KvPoolGauges, KvQuant};
 
 /// Geometry of one page (see the module docs for the memory layout).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,22 +34,36 @@ pub struct PoolLayout {
     pub head_dim: usize,
     pub layers: usize,
     pub kv_heads: usize,
+    /// Payload element type: f32, or int8 + per-page scale sidecar.
+    pub kv_quant: KvQuant,
 }
 
 impl PoolLayout {
-    /// f32 elements per page: K region + V region.
+    /// Payload elements per page: K region + V region (element width set
+    /// by `kv_quant`; offsets are element indices either way).
     pub fn page_elems(&self) -> usize {
         self.layers * self.kv_heads * self.page_slots * (self.key_dims + self.head_dim)
     }
 
-    pub fn page_bytes(&self) -> usize {
-        self.page_elems() * std::mem::size_of::<f32>()
+    /// f32 scale-sidecar elements per page: one K scale and one V scale
+    /// per (layer, kv-head) under int8, none under f32.
+    pub fn scale_elems(&self) -> usize {
+        match self.kv_quant {
+            KvQuant::F32 => 0,
+            KvQuant::Int8 => self.layers * self.kv_heads * 2,
+        }
     }
 
-    /// Resident KV bytes per token slot (`page_bytes / page_slots`): the
+    pub fn page_bytes(&self) -> usize {
+        self.page_elems() * self.kv_quant.elem_bytes()
+            + self.scale_elems() * std::mem::size_of::<f32>()
+    }
+
+    /// Resident KV bytes per token slot (`page_bytes / page_slots`,
+    /// rounded up — exact for f32, where the scale sidecar is empty): the
     /// quantity `AquaConfig::kv_bytes_per_slot` models.
     pub fn bytes_per_slot(&self) -> usize {
-        self.layers * self.kv_heads * (self.key_dims + self.head_dim) * 4
+        self.page_bytes().div_ceil(self.page_slots)
     }
 
     /// Offset of the (layer, kv-head) dim-major key block inside a page;
@@ -79,12 +93,55 @@ impl PoolLayout {
     }
 }
 
+/// Max-abs of a row (0.0 for empty rows).
+fn amax(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+}
+
+/// Symmetric int8 quantization: `round(x / scale)` clamped to ±127.
+/// A zero scale means the region has only ever seen zeros.
+fn quantize(x: f32, scale: f32) -> i8 {
+    if scale <= 0.0 {
+        0
+    } else {
+        (x / scale).round().clamp(-127.0, 127.0) as i8
+    }
+}
+
+/// Grow a quantized region's scale to cover a new row magnitude,
+/// deterministically requantizing the existing int8 content under the new
+/// scale (bounded extra error ≤ old quantization step; never widens).
+/// Shrinking never happens — the scale is monotone per region lifetime,
+/// so requantization order (and therefore content) is a pure function of
+/// the write sequence, which is what keeps warm prefix pages bit-equal to
+/// cold ones and the sharded workers bit-equal to the native backend.
+fn grow_scale(region: &mut [i8], scale: &mut f32, new_amax: f32) {
+    let need = new_amax / 127.0;
+    if need <= *scale {
+        return;
+    }
+    if *scale > 0.0 {
+        let r = *scale / need;
+        for q in region.iter_mut() {
+            *q = ((*q as f32) * r).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    *scale = need;
+}
+
 /// Page allocator with a free list. Page ids are dense indices into the
 /// backing vector; a leased bitmap catches double-frees and stale ids.
 pub struct PagePool {
     layout: PoolLayout,
     max_pages: usize,
+    /// f32 payload (empty under `KvQuant::Int8`).
     data: Vec<f32>,
+    /// int8 payload (empty under `KvQuant::F32`).
+    qdata: Vec<i8>,
+    /// Per-page dequantization scales (`layout.scale_elems()` per page):
+    /// `[(l, g) K scale, (l, g) V scale, ...]`. Rides every page copy
+    /// (COW) and survives cache/resurrect exactly like the payload.
+    scales: Vec<f32>,
     /// Free pages with no content identity — the O(1) hot-path pop.
     free_plain: Vec<u32>,
     /// Free pages still carrying a key ("cached"): resurrectable until a
@@ -109,6 +166,8 @@ impl PagePool {
             layout,
             max_pages,
             data: vec![],
+            qdata: vec![],
+            scales: vec![],
             free_plain: vec![],
             free_cached: vec![],
             leased: vec![],
@@ -134,7 +193,14 @@ impl PagePool {
     fn reset_page(&mut self, id: u32) {
         let elems = self.layout.page_elems();
         let base = id as usize * elems;
-        self.data[base..base + elems].fill(0.0);
+        match self.layout.kv_quant {
+            KvQuant::F32 => self.data[base..base + elems].fill(0.0),
+            KvQuant::Int8 => {
+                self.qdata[base..base + elems].fill(0);
+                let se = self.layout.scale_elems();
+                self.scales[id as usize * se..(id as usize + 1) * se].fill(0.0);
+            }
+        }
         self.leased[id as usize] = true;
         self.refs[id as usize] = 1;
         self.keys[id as usize] = 0;
@@ -158,7 +224,13 @@ impl PagePool {
         let hwm = self.leased.len();
         if hwm < self.max_pages {
             let elems = self.layout.page_elems();
-            self.data.resize((hwm + 1) * elems, 0.0);
+            match self.layout.kv_quant {
+                KvQuant::F32 => self.data.resize((hwm + 1) * elems, 0.0),
+                KvQuant::Int8 => {
+                    self.qdata.resize((hwm + 1) * elems, 0);
+                    self.scales.resize((hwm + 1) * self.layout.scale_elems(), 0.0);
+                }
+            }
             self.leased.push(true);
             self.refs.push(1);
             self.keys.push(0);
@@ -246,7 +318,17 @@ impl PagePool {
         let fresh = self.lease()?;
         let elems = self.layout.page_elems();
         let src = id as usize * elems;
-        self.data.copy_within(src..src + elems, fresh as usize * elems);
+        match self.layout.kv_quant {
+            KvQuant::F32 => self.data.copy_within(src..src + elems, fresh as usize * elems),
+            KvQuant::Int8 => {
+                self.qdata.copy_within(src..src + elems, fresh as usize * elems);
+                // the scale sidecar is content: it rides every copy, or
+                // dequantized reads of the copy would silently diverge
+                let se = self.layout.scale_elems();
+                let ssrc = id as usize * se;
+                self.scales.copy_within(ssrc..ssrc + se, fresh as usize * se);
+            }
+        }
         self.refs[id as usize] -= 1;
         self.cow_copies += 1;
         Ok(fresh)
@@ -301,16 +383,103 @@ impl PagePool {
         self.leased.get(id as usize) == Some(&true)
     }
 
+    /// f32 payload of one page. Valid only under [`KvQuant::F32`] (int8
+    /// pages are read through [`PagePool::page_i8`] + the scale getters).
     pub fn page(&self, id: u32) -> &[f32] {
+        debug_assert_eq!(self.layout.kv_quant, KvQuant::F32, "f32 read of an int8 pool");
         let elems = self.layout.page_elems();
         let base = id as usize * elems;
         &self.data[base..base + elems]
     }
 
+    /// f32 payload of one page, mutable (see [`PagePool::page`]).
     pub fn page_mut(&mut self, id: u32) -> &mut [f32] {
+        debug_assert_eq!(self.layout.kv_quant, KvQuant::F32, "f32 write of an int8 pool");
         let elems = self.layout.page_elems();
         let base = id as usize * elems;
         &mut self.data[base..base + elems]
+    }
+
+    /// int8 payload of one page (same element offsets as the f32 layout).
+    /// Valid only under [`KvQuant::Int8`].
+    pub fn page_i8(&self, id: u32) -> &[i8] {
+        debug_assert_eq!(self.layout.kv_quant, KvQuant::Int8, "int8 read of an f32 pool");
+        let elems = self.layout.page_elems();
+        let base = id as usize * elems;
+        &self.qdata[base..base + elems]
+    }
+
+    fn scale_slot(&self, id: u32, l: usize, g: usize) -> usize {
+        id as usize * self.layout.scale_elems() + (l * self.layout.kv_heads + g) * 2
+    }
+
+    /// Dequantization scale of the (layer, kv-head) key block (int8 only;
+    /// 0.0 means the block has only ever held zeros).
+    pub fn k_scale(&self, id: u32, l: usize, g: usize) -> f32 {
+        self.scales[self.scale_slot(id, l, g)]
+    }
+
+    /// Dequantization scale of the (layer, kv-head) value block (int8).
+    pub fn v_scale(&self, id: u32, l: usize, g: usize) -> f32 {
+        self.scales[self.scale_slot(id, l, g) + 1]
+    }
+
+    /// One resident key element, dequantized as needed — the slow generic
+    /// read the masked-dense oracle's shadow sync uses (hot paths stream
+    /// whole blocks through `page` / `page_i8` instead).
+    pub fn key_at(&self, id: u32, l: usize, g: usize, dim: usize, local: usize) -> f32 {
+        let off = self.layout.key_off(l, g) + dim * self.layout.page_slots + local;
+        match self.layout.kv_quant {
+            KvQuant::F32 => self.page(id)[off],
+            KvQuant::Int8 => self.page_i8(id)[off] as f32 * self.k_scale(id, l, g),
+        }
+    }
+
+    /// Write one token's resident KV — the `key_dims` projected/truncated
+    /// key dims (dim-major strided) and the full-width value row — into a
+    /// leased page. Under f32 this is exactly the pre-PR-10 store
+    /// sequence (bit-identical); under int8 it quantizes against the
+    /// page's (layer, kv-head) block scales, deterministically requantizing
+    /// the block first whenever a new token's magnitude outgrows them.
+    pub fn write_token(
+        &mut self,
+        id: u32,
+        l: usize,
+        g: usize,
+        local: usize,
+        khat: &[f32],
+        vrow: &[f32],
+    ) {
+        let layout = self.layout;
+        let (ps, kd, d) = (layout.page_slots, layout.key_dims, layout.head_dim);
+        debug_assert!(khat.len() == kd && vrow.len() == d && local < ps);
+        let base = id as usize * layout.page_elems();
+        let ko = base + layout.key_off(l, g);
+        let vo = base + layout.val_off(l, g, local);
+        match layout.kv_quant {
+            KvQuant::F32 => {
+                for (i, &kv) in khat.iter().enumerate() {
+                    self.data[ko + i * ps + local] = kv;
+                }
+                self.data[vo..vo + d].copy_from_slice(vrow);
+            }
+            KvQuant::Int8 => {
+                let sb = self.scale_slot(id, l, g);
+                let kreg = &mut self.qdata[ko..ko + kd * ps];
+                grow_scale(kreg, &mut self.scales[sb], amax(khat));
+                let sk = self.scales[sb];
+                for (i, &kv) in khat.iter().enumerate() {
+                    kreg[i * ps + local] = quantize(kv, sk);
+                }
+                let v0 = base + layout.val_off(l, g, 0);
+                let vreg = &mut self.qdata[v0..v0 + ps * d];
+                grow_scale(vreg, &mut self.scales[sb + 1], amax(vrow));
+                let sv = self.scales[sb + 1];
+                for (q, &x) in vreg[local * d..(local + 1) * d].iter_mut().zip(vrow) {
+                    *q = quantize(x, sv);
+                }
+            }
+        }
     }
 
     pub fn pages_in_use(&self) -> usize {
@@ -356,12 +525,26 @@ mod tests {
     use super::*;
 
     fn layout() -> PoolLayout {
-        PoolLayout { page_slots: 4, key_dims: 2, head_dim: 4, layers: 1, kv_heads: 1 }
+        PoolLayout {
+            page_slots: 4,
+            key_dims: 2,
+            head_dim: 4,
+            layers: 1,
+            kv_heads: 1,
+            kv_quant: KvQuant::F32,
+        }
     }
 
     #[test]
     fn layout_offsets_tile_the_page() {
-        let l = PoolLayout { page_slots: 8, key_dims: 3, head_dim: 4, layers: 2, kv_heads: 2 };
+        let l = PoolLayout {
+            page_slots: 8,
+            key_dims: 3,
+            head_dim: 4,
+            layers: 2,
+            kv_heads: 2,
+            kv_quant: KvQuant::F32,
+        };
         // K region: 2*2*3*8 = 96 elems, V region: 2*2*8*4 = 128 elems
         assert_eq!(l.page_elems(), 96 + 128);
         assert_eq!(l.page_bytes(), (96 + 128) * 4);
@@ -504,5 +687,133 @@ mod tests {
         // unknown / unkeyed ids are no-ops
         p.clear_page_key(99);
         p.clear_page_key(b);
+    }
+
+    fn layout_i8() -> PoolLayout {
+        PoolLayout { kv_quant: KvQuant::Int8, ..layout() }
+    }
+
+    /// All dequantized elements of one (l, g) block of a page.
+    fn dequant_block(p: &PagePool, id: u32, l: usize, g: usize) -> (Vec<f32>, Vec<f32>) {
+        let lay = *p.layout();
+        let (ps, kd, d) = (lay.page_slots, lay.key_dims, lay.head_dim);
+        let page = p.page_i8(id);
+        let (sk, sv) = (p.k_scale(id, l, g), p.v_scale(id, l, g));
+        let ko = lay.key_off(l, g);
+        let keys = (0..kd * ps).map(|i| page[ko + i] as f32 * sk).collect();
+        let vo = lay.val_off(l, g, 0);
+        let vals = (0..ps * d).map(|i| page[vo + i] as f32 * sv).collect();
+        (keys, vals)
+    }
+
+    #[test]
+    fn int8_layout_shrinks_pages_but_keeps_offsets() {
+        let (f, q) = (layout(), layout_i8());
+        assert_eq!(f.page_elems(), q.page_elems(), "offsets are element indices either way");
+        // payload 4x smaller + the small scale sidecar (1*1*2 f32 = 8B)
+        assert_eq!(q.page_bytes(), f.page_elems() + q.scale_elems() * 4);
+        assert!(q.page_bytes() * 2 < f.page_bytes(), "int8 page must be < half the f32 page");
+        assert!(
+            (q.page_bytes() as f64) < 0.6 * f.page_bytes() as f64,
+            "int8 resident bytes must clear the ≥40% reduction bound at equal kv_keep"
+        );
+    }
+
+    #[test]
+    fn int8_write_read_round_trips_within_the_scale_bound() {
+        let mut p = PagePool::new(layout_i8(), 4);
+        let id = p.lease().unwrap();
+        let lay = *p.layout();
+        let (kd, d) = (lay.key_dims, lay.head_dim);
+        // growing magnitudes force a deterministic requantization of the
+        // earlier slots; the error bound must still hold afterwards
+        let rows: Vec<(Vec<f32>, Vec<f32>)> = (0..lay.page_slots)
+            .map(|s| {
+                let k: Vec<f32> = (0..kd).map(|i| (s as f32 + 1.0) * (i as f32 - 0.7)).collect();
+                let v: Vec<f32> = (0..d).map(|i| (s as f32 + 1.0) * (0.3 - i as f32)).collect();
+                (k, v)
+            })
+            .collect();
+        for (s, (k, v)) in rows.iter().enumerate() {
+            p.write_token(id, 0, 0, s, k, v);
+        }
+        let (sk, sv) = (p.k_scale(id, 0, 0), p.v_scale(id, 0, 0));
+        assert!(sk > 0.0 && sv > 0.0);
+        let (keys, vals) = dequant_block(&p, id, 0, 0);
+        for (s, (k, v)) in rows.iter().enumerate() {
+            for (i, &want) in k.iter().enumerate() {
+                let got = keys[i * lay.page_slots + s];
+                // one quantization + at most a chain of requantizations:
+                // each step adds ≤ scale/2 at the final (monotone) scale
+                assert!(
+                    (got - want).abs() <= 1.5 * sk,
+                    "key[{i},{s}] dequant {got} vs {want} (scale {sk})"
+                );
+            }
+            for (i, &want) in v.iter().enumerate() {
+                let got = vals[s * d + i];
+                assert!((got - want).abs() <= 1.5 * sv, "val[{s},{i}] {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_scales_ride_cow_copies_and_resurrection() {
+        // the property the prefix-sharing paths depend on: a COW copy and
+        // a cached/resurrected page dequantize to exactly the same values
+        // as the original — payload AND scale sidecar both travel
+        let mut p = PagePool::new(layout_i8(), 4);
+        let a = p.lease().unwrap();
+        let lay = *p.layout();
+        let k: Vec<f32> = (0..lay.key_dims).map(|i| 3.25 * (i as f32 + 1.0)).collect();
+        let v: Vec<f32> = (0..lay.head_dim).map(|i| -1.5 * (i as f32 + 1.0)).collect();
+        p.write_token(a, 0, 0, 1, &k, &v);
+        let before = dequant_block(&p, a, 0, 0);
+
+        p.retain(a).unwrap();
+        let b = p.cow(a).unwrap();
+        assert_eq!(dequant_block(&p, b, 0, 0), before, "cow copy dequantizes identically");
+        assert_eq!(p.k_scale(b, 0, 0), p.k_scale(a, 0, 0));
+        assert_eq!(p.v_scale(b, 0, 0), p.v_scale(a, 0, 0));
+
+        // diverge the copy with a larger-magnitude token: only the copy's
+        // scale grows
+        let big: Vec<f32> = k.iter().map(|&x| 10.0 * x).collect();
+        p.write_token(b, 0, 0, 2, &big, &v);
+        assert!(p.k_scale(b, 0, 0) > p.k_scale(a, 0, 0));
+        assert_eq!(dequant_block(&p, a, 0, 0), before, "original page untouched");
+
+        // cached → resurrected pages keep payload + scales intact
+        p.set_page_key(a, 0xCAFE).unwrap();
+        p.free(a).unwrap();
+        p.resurrect(a, 0xCAFE).unwrap();
+        assert_eq!(dequant_block(&p, a, 0, 0), before, "resurrection keeps scales");
+
+        // recycling zeroes the sidecar along with the payload
+        p.free(a).unwrap();
+        p.clear_page_key(a);
+        let c = p.lease().unwrap();
+        assert_eq!(c, a);
+        assert_eq!(p.k_scale(c, 0, 0), 0.0, "recycled page has no stale scale");
+        assert!(p.page_i8(c).iter().all(|&q| q == 0));
+    }
+
+    #[test]
+    fn f32_write_token_is_the_old_store_sequence() {
+        // write_token under f32 must land exactly where the old direct
+        // page_mut stores landed (bit-identity of the pre-PR-10 layout)
+        let mut p = PagePool::new(layout(), 2);
+        let id = p.lease().unwrap();
+        let lay = *p.layout();
+        let k: Vec<f32> = (0..lay.key_dims).map(|i| i as f32 + 0.5).collect();
+        let v: Vec<f32> = (0..lay.head_dim).map(|i| -(i as f32) - 0.25).collect();
+        p.write_token(id, 0, 0, 3, &k, &v);
+        let page = p.page(id);
+        let ko = lay.key_off(0, 0);
+        for (i, &kv) in k.iter().enumerate() {
+            assert_eq!(page[ko + i * lay.page_slots + 3], kv);
+        }
+        let vo = lay.val_off(0, 0, 3);
+        assert_eq!(&page[vo..vo + lay.head_dim], &v[..]);
     }
 }

@@ -164,8 +164,14 @@ mod tests {
     use super::*;
 
     fn pool() -> PagePool {
-        let layout =
-            PoolLayout { page_slots: 4, key_dims: 2, head_dim: 4, layers: 1, kv_heads: 1 };
+        let layout = PoolLayout {
+            page_slots: 4,
+            key_dims: 2,
+            head_dim: 4,
+            layers: 1,
+            kv_heads: 1,
+            kv_quant: super::super::KvQuant::F32,
+        };
         PagePool::new(layout, 8)
     }
 
@@ -184,8 +190,14 @@ mod tests {
     fn lookup_validates_liveness_and_content() {
         // max_pages 1: growth is exhausted, so the cached page is the one
         // a plain lease recycles
-        let layout =
-            PoolLayout { page_slots: 4, key_dims: 2, head_dim: 4, layers: 1, kv_heads: 1 };
+        let layout = PoolLayout {
+            page_slots: 4,
+            key_dims: 2,
+            head_dim: 4,
+            layers: 1,
+            kv_heads: 1,
+            kv_quant: super::super::KvQuant::F32,
+        };
         let mut p = PagePool::new(layout, 1);
         let mut idx = PrefixIndex::new(0);
         let chunk = [10, 11, 12, 13];

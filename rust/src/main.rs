@@ -38,6 +38,7 @@ use cli::Args;
 const USAGE: &str = "usage: aqua <serve|generate|eval|table1|table2|table3|table7|fig2|fig3|fig5|ablation|breakeven|benchcheck|selftest> [flags]
 common flags: --backend auto|native|sharded|pjrt --threads N --seed N --artifacts DIR --model NAME --k-ratio R --s-ratio R --h2o-ratio R --batch N --items N --fast
 serve fleet: --fleet fleet.json | repeated --model name=N,backend=B,k=R,threads=T,batch=B,queue=Q,kv_mb=M,prefix=0|1,prefix_pages=P,prefill_tokens=N,total_tokens=N,wsr=R,interleave=0|1 [--default-model N] (plain --model NAME [--kv-budget-mb M] [--prefix-cache] [--prefix-pages P] serves one deployment named 'default'; kv_mb caps resident KV pages — over-budget requests shed with a memory-pressure 429; prefix enables page-granular prefix sharing: one prefill's KV pages serve every lane with the prefix)
+serve kv residency: --kv-quant f32|int8 (resident-KV payload element type; int8 quantizes truncated keys and values with per-page scales and routes decode through the fused streaming kernel — resident KV bytes drop >= 40% at equal kv_keep with greedy outputs unchanged; kv-spec key kv_quant= sets it per deployment)
 serve scheduling: --max-prefill-tokens N (per-step prefill token budget, 0 = unlimited) --max-total-tokens N (admission cap on worst-case batch tokens, 0 = unlimited) --waiting-ratio R (queue pressure threshold for bounded head overtakes) --no-interleave (legacy FIFO run-to-completion; disables chunked-prefill/decode interleaving) --speculate N (self-speculative decoding: AQUA-sparse draft depth per duty cycle, dense verify over the same KV; 0 = off, lossless when on; kv-spec key speculate= sets it per deployment; requests may send 'priority': N to jump the admission queue)
 serve lifecycle: --restart N (engine rebuilds after a crash; 0 = fail fast) --restart-backoff-ms MS --deadline-ms MS (default per-request deadline from enqueue, 0 = none; requests may override via the JSON 'deadline_ms' field) --max-step-failures N (consecutive failing passes before the engine is declared failed); kv-spec keys restart=,restart_backoff_ms=,deadline_ms=,max_step_failures= set the same per deployment
 serve tracing: --trace off|errors|sampled:N|full (flight recorder; kv-spec key trace= sets it per deployment). GET /trace?model=&n= dumps recent events (format=jsonl → Perfetto-loadable), GET /trace/postmortem serves failure snapshots, and 'timings': true on /generate returns the request's span breakdown; AQUA_LOG=level,module=level tunes stderr logging
@@ -115,6 +116,7 @@ fn fleet_registry(args: &Args, arts_dir: &str) -> Result<ModelRegistry> {
             kv_budget_mb: args.f64("kv-budget-mb", 0.0)?,
             prefix_cache: args.switch("prefix-cache"),
             prefix_cache_pages: args.usize("prefix-pages", 0)?,
+            kv_quant: args.str("kv-quant", "f32"),
             max_batch_prefill_tokens: args.usize("max-prefill-tokens", 0)?,
             max_batch_total_tokens: args.usize("max-total-tokens", 0)?,
             waiting_served_ratio: args.f64("waiting-ratio", 1.2)?,
@@ -323,6 +325,17 @@ fn run(argv: &[String]) -> Result<()> {
                 aqua_serve::bench::report::validate_interleave(&doc, args.switch("strict"))
                     .with_context(|| format!("validating {ipath}"))?;
                 println!("{ipath} ok (interleave schema)");
+            }
+            // BENCH_fused.json (fused bench): same convention.
+            let fdefault = aqua_serve::bench::report::fused_path().to_string();
+            let fpath = args.str("fused-path", &fdefault);
+            if std::path::Path::new(&fpath).exists() {
+                let text = std::fs::read_to_string(&fpath)?;
+                let doc = aqua_serve::util::json::Json::parse(&text)
+                    .with_context(|| format!("parsing {fpath}"))?;
+                aqua_serve::bench::report::validate_fused(&doc, args.switch("strict"))
+                    .with_context(|| format!("validating {fpath}"))?;
+                println!("{fpath} ok (fused schema)");
             }
             // BENCH_speculate.json (speculate bench): same convention.
             let xdefault = aqua_serve::bench::report::speculate_path().to_string();

@@ -48,6 +48,12 @@ pub struct DeploymentSpec {
     /// Prefix-index capacity in registered page chains (kv key
     /// `prefix_pages`, JSON `prefix_cache_pages`; 0 = unlimited).
     pub prefix_cache_pages: usize,
+    /// Resident-KV payload element type: `"f32"` (default) or `"int8"`
+    /// (kv/JSON key `kv_quant`). Int8 stores truncated keys and values
+    /// as symmetric int8 with per-page/(layer,head) scales and routes
+    /// decode through the fused dequantizing kernel; f32 stays
+    /// bit-identical to the pre-quantization pool.
+    pub kv_quant: String,
     /// Scheduler budget: prefill tokens per engine pass (kv key
     /// `prefill_tokens`; 0 = unlimited). Whole per-lane chunks, so
     /// outputs stay bit-identical to the uncapped path.
@@ -104,6 +110,7 @@ impl Default for DeploymentSpec {
             kv_budget_mb: 0.0,
             prefix_cache: false,
             prefix_cache_pages: 0,
+            kv_quant: "f32".to_string(),
             max_batch_prefill_tokens: 0,
             max_batch_total_tokens: 0,
             waiting_served_ratio: 1.2,
@@ -123,7 +130,8 @@ impl DeploymentSpec {
     /// Parse a CLI kv-spec: comma-separated `key=value` pairs. Keys:
     /// `name` (required), `backend`, `model`, `seed`, `threads`, `batch`,
     /// `queue` (max in-flight), `kv_mb`, `prefix` (0/1 prefix sharing),
-    /// `prefix_pages`, `prefill_tokens`, `total_tokens`, `wsr`,
+    /// `prefix_pages`, `kv_quant` (f32|int8), `prefill_tokens`,
+    /// `total_tokens`, `wsr`,
     /// `interleave` (0/1), `restart`, `restart_backoff_ms`,
     /// `deadline_ms`, `max_step_failures`, `trace`
     /// (off|errors|sampled:N|full), `speculate` (draft depth, 0 = off),
@@ -167,6 +175,7 @@ impl DeploymentSpec {
                     spec.prefix_cache_pages =
                         v.parse().with_context(|| format!("bad prefix_pages '{v}'"))?
                 }
+                "kv_quant" => spec.kv_quant = v.to_string(),
                 "prefill_tokens" | "max_batch_prefill_tokens" => {
                     spec.max_batch_prefill_tokens =
                         v.parse().with_context(|| format!("bad prefill_tokens '{v}'"))?
@@ -254,6 +263,9 @@ impl DeploymentSpec {
         if let Some(v) = j.get("prefix_cache_pages").as_i64() {
             spec.prefix_cache_pages = v.max(0) as usize;
         }
+        if let Some(v) = j.get("kv_quant").as_str() {
+            spec.kv_quant = v.to_string();
+        }
         if let Some(v) = j.get("max_batch_prefill_tokens").as_i64() {
             spec.max_batch_prefill_tokens = v.max(0) as usize;
         }
@@ -313,6 +325,7 @@ impl DeploymentSpec {
             ("kv_budget_mb", Json::Num(self.kv_budget_mb)),
             ("prefix_cache", Json::Bool(self.prefix_cache)),
             ("prefix_cache_pages", Json::Num(self.prefix_cache_pages as f64)),
+            ("kv_quant", Json::Str(self.kv_quant.clone())),
             ("max_batch_prefill_tokens", Json::Num(self.max_batch_prefill_tokens as f64)),
             ("max_batch_total_tokens", Json::Num(self.max_batch_total_tokens as f64)),
             ("waiting_served_ratio", Json::Num(self.waiting_served_ratio)),
@@ -385,6 +398,8 @@ impl DeploymentSpec {
         }
         crate::trace::TraceMode::parse(&self.trace)
             .with_context(|| format!("deployment '{}'", self.name))?;
+        crate::kvpool::KvQuant::parse(&self.kv_quant)
+            .with_context(|| format!("deployment '{}'", self.name))?;
         Ok(())
     }
 
@@ -417,6 +432,7 @@ impl DeploymentSpec {
             max_consecutive_step_failures: self.max_step_failures.max(1),
             trace: self.trace_mode(),
             speculate: self.speculate,
+            kv_quant: crate::kvpool::KvQuant::parse(&self.kv_quant).unwrap_or_default(),
             ..Default::default()
         }
     }
@@ -439,7 +455,8 @@ mod tests {
     fn kv_roundtrip_through_json() {
         let spec = DeploymentSpec::parse_kv(
             "name=fast,backend=sharded,k=0.25,threads=2,batch=8,queue=5,kv_mb=2.5,prefix=1,\
-             prefix_pages=64,prefill_tokens=96,total_tokens=512,wsr=1.5,interleave=0",
+             prefix_pages=64,kv_quant=int8,prefill_tokens=96,total_tokens=512,wsr=1.5,\
+             interleave=0",
         )
         .unwrap();
         assert_eq!(spec.name, "fast");
@@ -450,6 +467,7 @@ mod tests {
         assert!((spec.kv_budget_mb - 2.5).abs() < 1e-12);
         assert!(spec.prefix_cache);
         assert_eq!(spec.prefix_cache_pages, 64);
+        assert_eq!(spec.kv_quant, "int8");
         assert_eq!(spec.max_batch_prefill_tokens, 96);
         assert_eq!(spec.max_batch_total_tokens, 512);
         assert!((spec.waiting_served_ratio - 1.5).abs() < 1e-12);
@@ -573,6 +591,25 @@ mod tests {
         let j = Json::parse(r#"{"name": "a", "speculate": 3}"#).unwrap();
         assert_eq!(DeploymentSpec::from_json(&j).unwrap().speculate, 3);
         assert!(DeploymentSpec::parse_kv("name=a,speculate=many").is_err());
+    }
+
+    #[test]
+    fn kv_quant_knob_parses_on_every_surface() {
+        use crate::kvpool::KvQuant;
+        assert_eq!(DeploymentSpec::default().kv_quant, "f32", "f32 by default");
+        assert_eq!(DeploymentSpec::default().engine_config().kv_quant, KvQuant::F32);
+        let spec = DeploymentSpec::parse_kv("name=a,kv_quant=int8").unwrap();
+        assert_eq!(spec.kv_quant, "int8");
+        let back = DeploymentSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // the knob reaches the engine config; bad spellings rejected on
+        // both surfaces
+        assert_eq!(spec.engine_config().kv_quant, KvQuant::Int8);
+        assert!(DeploymentSpec::parse_kv("name=a,kv_quant=fp8").is_err());
+        let j = Json::parse(r#"{"name": "a", "kv_quant": "int8"}"#).unwrap();
+        assert_eq!(DeploymentSpec::from_json(&j).unwrap().kv_quant, "int8");
+        let bad = Json::parse(r#"{"name": "a", "kv_quant": "int4"}"#).unwrap();
+        assert!(DeploymentSpec::from_json(&bad).is_err());
     }
 
     #[test]

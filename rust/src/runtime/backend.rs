@@ -93,6 +93,18 @@ pub struct KernelCounters {
     /// softmax + value mix), summed over lanes/tokens/layers. For threaded
     /// backends this is CPU time across workers, not wall time.
     pub score_ns: u64,
+    /// Page-fused streaming attention passes: one per resident KV page
+    /// streamed (scores + online softmax + value mix in a single load of
+    /// the page). `fused_passes / (lanes · layers · heads)` = pages each
+    /// decode call touched — the read-each-page-once invariant the fused
+    /// bench asserts.
+    pub fused_passes: u64,
+    /// f32 lanes per SIMD op on the fused path (8 = AVX f32x8, 1 =
+    /// scalar fallback, 0 = fused path not used). Merged by max, not sum.
+    pub simd_lanes_used: u64,
+    /// Nanoseconds inside int8-dequantizing fused page passes (subset of
+    /// `score_ns`); 0 under `kv_quant=f32`.
+    pub dequant_ns: u64,
 }
 
 impl KernelCounters {
@@ -101,19 +113,27 @@ impl KernelCounters {
         self.sparse += other.sparse;
         self.packed += other.packed;
         self.score_ns += other.score_ns;
+        self.fused_passes += other.fused_passes;
+        self.simd_lanes_used = self.simd_lanes_used.max(other.simd_lanes_used);
+        self.dequant_ns += other.dequant_ns;
     }
 
-    /// Total score-kernel invocations of any variant.
+    /// Total score-kernel invocations of any variant (the fused path
+    /// counts per-page passes separately in `fused_passes`).
     pub fn calls(&self) -> u64 {
         self.dense + self.sparse + self.packed
     }
 
     /// Which score path dominated this step, as a small stable code for
     /// the trace `Score` event: 0 dense, 1 sparse, 2 packed, 3 mixed (or
-    /// none — e.g. PJRT's opaque fused executables).
+    /// none — e.g. PJRT's opaque fused executables), 4 fused-only.
     pub fn dominant_mode(&self) -> u64 {
         let nonzero = [self.dense, self.sparse, self.packed];
-        match nonzero.iter().filter(|&&c| c > 0).count() {
+        let variants = nonzero.iter().filter(|&&c| c > 0).count();
+        if self.fused_passes > 0 {
+            return if variants == 0 { 4 } else { 3 };
+        }
+        match variants {
             1 if self.dense > 0 => 0,
             1 if self.sparse > 0 => 1,
             1 => 2,
@@ -697,10 +717,51 @@ mod tests {
 
     #[test]
     fn kernel_counters_merge_and_count() {
-        let mut a = KernelCounters { dense: 1, sparse: 2, packed: 3, score_ns: 10 };
-        a.merge(&KernelCounters { dense: 4, sparse: 0, packed: 1, score_ns: 5 });
-        assert_eq!(a, KernelCounters { dense: 5, sparse: 2, packed: 4, score_ns: 15 });
-        assert_eq!(a.calls(), 11);
+        let mut a = KernelCounters {
+            dense: 1,
+            sparse: 2,
+            packed: 3,
+            score_ns: 10,
+            fused_passes: 2,
+            simd_lanes_used: 8,
+            dequant_ns: 7,
+        };
+        a.merge(&KernelCounters {
+            dense: 4,
+            sparse: 0,
+            packed: 1,
+            score_ns: 5,
+            fused_passes: 3,
+            simd_lanes_used: 1,
+            dequant_ns: 2,
+        });
+        assert_eq!(
+            a,
+            KernelCounters {
+                dense: 5,
+                sparse: 2,
+                packed: 4,
+                score_ns: 15,
+                fused_passes: 5,
+                simd_lanes_used: 8,
+                dequant_ns: 9,
+            }
+        );
+        assert_eq!(a.calls(), 11, "fused passes are counted separately");
+    }
+
+    #[test]
+    fn dominant_mode_codes_cover_the_fused_path() {
+        let f = |dense, sparse, packed, fused_passes| {
+            KernelCounters { dense, sparse, packed, fused_passes, ..Default::default() }
+                .dominant_mode()
+        };
+        assert_eq!(f(1, 0, 0, 0), 0);
+        assert_eq!(f(0, 1, 0, 0), 1);
+        assert_eq!(f(0, 0, 1, 0), 2);
+        assert_eq!(f(1, 1, 0, 0), 3);
+        assert_eq!(f(0, 0, 0, 4), 4, "fused-only steps report code 4");
+        assert_eq!(f(1, 0, 0, 4), 3, "fused + oracle is mixed");
     }
 
     #[test]

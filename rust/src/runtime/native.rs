@@ -70,10 +70,11 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::backend::{AquaKnobs, ExecBackend, KernelCounters, PrefixAttach, StepOut};
+use crate::aqua::fused::{fused_attend, simd_lanes, FusedStats};
 use crate::aqua::native::{aqua_scores_masked, aqua_scores_packed_cols, project};
 use crate::kvpool::prefix::{fold_byte, fold_chunk, fold_token, Register, PREFIX_SEED};
 use crate::kvpool::{
-    KvPoolConfig, KvPoolGauges, LanePageTable, PagePool, PoolLayout, PrefixIndex,
+    KvPoolConfig, KvPoolGauges, KvQuant, LanePageTable, PagePool, PoolLayout, PrefixIndex,
     DEFAULT_PAGE_SLOTS,
 };
 use crate::model::config::ModelConfig;
@@ -270,6 +271,7 @@ fn pool_layout(c: &ModelConfig, cfg: &KvPoolConfig) -> PoolLayout {
         head_dim: d,
         layers: c.n_layers,
         kv_heads: c.n_kv_heads,
+        kv_quant: cfg.kv_quant,
     }
 }
 
@@ -358,6 +360,12 @@ pub enum ScoreMode {
     Sparse,
     /// Always the contiguous dim-major packed kernel.
     Packed,
+    /// The page-fused streaming path ([`crate::aqua::fused`]): packed
+    /// scores + online softmax + value reduction in one pass per KV page,
+    /// `O(page_slots)` kernel scratch, SIMD with a bit-identical scalar
+    /// fallback. An `Int8` pool routes every non-oracle mode here (the
+    /// quantized payload is only readable through the fused dequant).
+    Fused,
 }
 
 /// Persistent per-backend step scratch: every buffer the forward pass
@@ -380,6 +388,11 @@ struct Scratch {
     /// The identity index set 0..d (the dense kernel's "selection").
     all_dims: Vec<usize>,
     scores: Vec<f32>,
+    /// Fused-path per-page score block — the kernel's whole working set is
+    /// this `O(page_slots)` window (sized `max_seq` only because the pool
+    /// may be reshaped after scratch allocation; the used region is always
+    /// the pool's `page_slots`).
+    page_scores: Vec<f32>,
     attn_out: Vec<f32>,
     o_proj: Vec<f32>,
     ff1: Vec<f32>,
@@ -406,6 +419,7 @@ impl Scratch {
             idx: Vec::with_capacity(d),
             all_dims: (0..d).collect(),
             scores: vec![0.0; s_cap],
+            page_scores: vec![0.0; s_cap],
             attn_out: vec![0.0; nq * d],
             o_proj: vec![0.0; dm],
             ff1: vec![0.0; dff],
@@ -507,16 +521,16 @@ impl NativeBackend {
         for (lane, table) in self.tables.iter().enumerate() {
             for p in 0..s_cap.div_ceil(ps) {
                 let Some(id) = table.page(p) else { continue };
-                let page = self.pool.page(id);
                 let filled = table.written().saturating_sub(p * ps).min(ps);
                 for l in 0..nl {
                     for g in 0..nkv {
-                        let ko = layout.key_off(l, g);
                         for local in 0..filled {
                             let s = p * ps + local;
                             let rb = (((l * b + lane) * nkv + g) * s_cap + s) * d;
                             for i in 0..kd {
-                                rows[rb + i] = page[ko + i * ps + local];
+                                // quant-generic read: dequantizes int8
+                                // payloads, passes f32 through bit-exactly
+                                rows[rb + i] = self.pool.key_at(id, l, g, i, local);
                             }
                         }
                     }
@@ -568,6 +582,11 @@ impl NativeBackend {
         }
         let layout = *self.pool.layout();
         let (ps, kd) = (layout.page_slots, layout.key_dims);
+        // Int8 pages are only readable through the fused dequantizing
+        // kernels, so a quantized pool routes every non-oracle mode fused
+        // (the oracle scores its own f32 shadow and dequantizes V reads).
+        let use_fused = score_mode == ScoreMode::Fused
+            || (layout.kv_quant == KvQuant::Int8 && score_mode != ScoreMode::MaskedDense);
         if kd < d && knobs.dim_keep[kd..].iter().any(|&m| m != 0.0) {
             bail!(
                 "native step: dim_keep keeps dims beyond the pool's {kd} resident key dims \
@@ -672,14 +691,17 @@ impl NativeBackend {
                             }
                             // dim-major key write into the leased page: one
                             // strided store per *resident* dim, paid once
-                            // per token (not per decode step)
-                            let page = pool.page_mut(pid);
-                            let ko = layout.key_off(l, g);
-                            for (i, &kv) in sc.khat.iter().take(kd).enumerate() {
-                                page[ko + i * ps + local] = kv;
-                            }
-                            let vo = layout.val_off(l, g, local);
-                            page[vo..vo + d].copy_from_slice(&sc.vs[g * d..(g + 1) * d]);
+                            // per token (not per decode step). Under int8
+                            // the pool quantizes against (and deterministically
+                            // grows) the page's per-(l, g) block scales.
+                            pool.write_token(
+                                pid,
+                                l,
+                                g,
+                                local,
+                                &sc.khat[..kd],
+                                &sc.vs[g * d..(g + 1) * d],
+                            );
                         }
                     }
 
@@ -697,6 +719,59 @@ impl NativeBackend {
                             }
                             for (qv, &keep) in sc.qhat.iter_mut().zip(&knobs.dim_keep) {
                                 *qv *= keep;
+                            }
+                            // Page-fused streaming path (PR 10): scores,
+                            // online softmax, and the value reduction in one
+                            // pass per resident page — each page loaded
+                            // once, O(page_slots) kernel scratch. Selection
+                            // is identical to the packed route below, so
+                            // f32 scores are bit-identical to packed.
+                            if use_fused {
+                                let (qk, idx): (&[f32], &[usize]) = if k_dims == d {
+                                    (&sc.qhat[..kd], &sc.all_dims[..kd])
+                                } else {
+                                    topk_indices_into(&sc.qhat, k_dims, &mut sc.idx);
+                                    if kd < d {
+                                        sc.idx.retain(|&i| i < kd);
+                                    }
+                                    for (j, &i) in sc.idx.iter().enumerate() {
+                                        sc.qsel[j] = sc.qhat[i];
+                                    }
+                                    (&sc.qsel[..sc.idx.len()], &sc.idx[..])
+                                };
+                                let mut stats = FusedStats::default();
+                                let out_h = &mut sc.attn_out[qh * d..(qh + 1) * d];
+                                let osm = fused_attend(
+                                    qk,
+                                    idx,
+                                    pool,
+                                    &tables[lane],
+                                    l,
+                                    g,
+                                    &sc.att,
+                                    scale,
+                                    &mut sc.page_scores,
+                                    &mut sc.scores,
+                                    out_h,
+                                    &mut stats,
+                                );
+                                kernels.fused_passes += stats.pages;
+                                kernels.dequant_ns += stats.dequant_ns;
+                                kernels.simd_lanes_used =
+                                    kernels.simd_lanes_used.max(simd_lanes() as u64);
+                                if let Some(inv) = osm.finish() {
+                                    let acc_base = (l * b + lane) * s_cap;
+                                    for &s in &sc.att {
+                                        attn_acc[acc_base + s] +=
+                                            (sc.scores[s] - osm.m).exp() * inv;
+                                    }
+                                    for o in out_h.iter_mut() {
+                                        *o *= inv;
+                                    }
+                                } else {
+                                    out_h.fill(0.0);
+                                }
+                                continue;
                             }
                             // AQUA Algorithm 1: top-k |q̂| dims, then route to
                             // the cheapest equivalent kernel (all variants are
@@ -791,9 +866,22 @@ impl NativeBackend {
                                 // still accounted, the mix contributes 0
                                 let Some(pid) = table.page(s / ps) else { continue };
                                 let vo = layout.val_off(l, g, s % ps);
-                                let vrow = &pool.page(pid)[vo..vo + d];
-                                for (o, &vv) in out_h.iter_mut().zip(vrow) {
-                                    *o += p * vv;
+                                match layout.kv_quant {
+                                    KvQuant::F32 => {
+                                        let vrow = &pool.page(pid)[vo..vo + d];
+                                        for (o, &vv) in out_h.iter_mut().zip(vrow) {
+                                            *o += p * vv;
+                                        }
+                                    }
+                                    KvQuant::Int8 => {
+                                        // oracle under int8: dequantize the
+                                        // value row through the block scale
+                                        let a = p * pool.v_scale(pid, l, g);
+                                        let qrow = &pool.page_i8(pid)[vo..vo + d];
+                                        for (o, &qv) in out_h.iter_mut().zip(qrow) {
+                                            *o += a * qv as f32;
+                                        }
+                                    }
                                 }
                             }
                         }

@@ -410,7 +410,10 @@ fn snapshot_fields(s: &Snapshot, full: bool) -> Vec<(&'static str, Json)> {
             ("kernel_dense", Json::Num(s.kernels.dense as f64)),
             ("kernel_sparse", Json::Num(s.kernels.sparse as f64)),
             ("kernel_packed", Json::Num(s.kernels.packed as f64)),
+            ("kernel_fused_passes", Json::Num(s.kernels.fused_passes as f64)),
+            ("kernel_simd_lanes", Json::Num(s.kernels.simd_lanes_used as f64)),
             ("score_time_s", Json::Num(s.kernels.score_ns as f64 / 1e9)),
+            ("dequant_time_s", Json::Num(s.kernels.dequant_ns as f64 / 1e9)),
             ("score_us_per_decode", Json::Num(s.score_us_per_decode)),
             ("decode_calls", Json::Num(s.decode_calls as f64)),
             ("prefill_calls", Json::Num(s.prefill_calls as f64)),
@@ -535,6 +538,7 @@ fn prometheus_kind(name: &str) -> &'static str {
                 | "kernel_dense"
                 | "kernel_sparse"
                 | "kernel_packed"
+                | "kernel_fused_passes"
                 | "prefix_evictions"
                 | "spec_drafted"
                 | "spec_accepted"

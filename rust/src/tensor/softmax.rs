@@ -27,6 +27,75 @@ pub fn log_softmax_at(xs: &[f32], idx: usize) -> f32 {
     xs[idx] - lse
 }
 
+/// Streaming (running-max) softmax state for the page-fused attention
+/// path: fold one segment's maximum at a time, push exponent weights as
+/// their rows stream by, and normalize once at the end — O(1) state
+/// instead of a second O(S) pass over the scores.
+///
+/// The caller owns any accumulators that are relative to the running max
+/// (the fused kernel's value accumulator): [`OnlineSoftmax::fold_max`]
+/// returns the factor `alpha` they must be rescaled by when the max
+/// advances. `denom` is rescaled internally.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OnlineSoftmax {
+    /// Running maximum over everything folded so far (`-inf` while empty).
+    pub m: f32,
+    /// Exponent sum, always relative to the current `m`.
+    pub denom: f32,
+}
+
+impl Default for OnlineSoftmax {
+    fn default() -> OnlineSoftmax {
+        OnlineSoftmax::new()
+    }
+}
+
+impl OnlineSoftmax {
+    pub fn new() -> OnlineSoftmax {
+        OnlineSoftmax { m: f32::NEG_INFINITY, denom: 0.0 }
+    }
+
+    /// Fold one segment's maximum into the running max; returns the
+    /// rescale factor `alpha` for caller-held accumulators.
+    ///
+    /// Fully-masked / zero-length segments (`chunk_max = -inf`, or NaN
+    /// from a max over no rows) are identities: without the guard the
+    /// very first masked segment would compute `exp(-inf - -inf)` = NaN
+    /// and poison every later row.
+    pub fn fold_max(&mut self, chunk_max: f32) -> f32 {
+        if !(chunk_max > self.m) {
+            return 1.0; // covers chunk_max <= m, -inf == -inf, and NaN
+        }
+        let alpha = (self.m - chunk_max).exp(); // m = -inf → alpha = 0, never NaN
+        self.m = chunk_max;
+        self.denom *= alpha;
+        alpha
+    }
+
+    /// Accumulate one row's weight `exp(z - m)` into `denom` and return
+    /// it. Masked rows (`z = -inf`) weigh 0; pushing into an empty
+    /// accumulator (`m = -inf`, nothing folded yet) is a 0-weight no-op
+    /// rather than NaN.
+    pub fn push(&mut self, z: f32) -> f32 {
+        if self.m == f32::NEG_INFINITY {
+            return 0.0;
+        }
+        let e = (z - self.m).exp();
+        self.denom += e;
+        e
+    }
+
+    /// `1 / denom`, or `None` when nothing (or only fully-masked rows)
+    /// was folded — callers skip normalization instead of dividing by 0.
+    pub fn finish(&self) -> Option<f32> {
+        if self.denom > 0.0 {
+            Some(1.0 / self.denom)
+        } else {
+            None
+        }
+    }
+}
+
 /// Argmax index (first on ties).
 pub fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
@@ -95,5 +164,87 @@ mod tests {
     fn argmax_first_on_ties() {
         assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
         assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn online_softmax_matches_batch_softmax_over_random_chunks() {
+        check(
+            "online-softmax-props",
+            100,
+            |g| {
+                let n = 1 + g.rng.below(48);
+                (g.vec_f32(n, 4.0), 1 + g.rng.below(7))
+            },
+            |(v, chunk)| {
+                // streaming pass: fold per-chunk maxima, push rows, keep a
+                // scalar accumulator Σ e·x the way the fused kernel keeps
+                // its value accumulator
+                let mut osm = OnlineSoftmax::new();
+                let mut acc = 0.0f64;
+                for seg in v.chunks(*chunk) {
+                    let cmax = seg.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                    let alpha = osm.fold_max(cmax);
+                    acc *= alpha as f64;
+                    for &z in seg {
+                        let e = osm.push(z);
+                        acc += e as f64 * z as f64;
+                    }
+                }
+                let inv = osm.finish().ok_or("finish() empty on non-empty input")?;
+                // reference: plain two-pass softmax
+                let mut probs = v.clone();
+                softmax_inplace(&mut probs);
+                let want: f64 = probs.iter().zip(v).map(|(&p, &z)| p as f64 * z as f64).sum();
+                let got = acc * inv as f64;
+                if (got - want).abs() > 1e-4 * (1.0 + want.abs()) {
+                    return Err(format!("Σp·z online {got} vs batch {want}"));
+                }
+                // per-row probabilities agree too
+                let m = osm.m;
+                for (&p, &z) in probs.iter().zip(v) {
+                    let online = (z - m).exp() * inv;
+                    if (online - p).abs() > 1e-5 {
+                        return Err(format!("row prob {online} vs {p}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn online_softmax_survives_fully_masked_segments_without_nan() {
+        // the bugfix this PR pins: an all-(-inf) (fully-masked / empty)
+        // segment folded first, last, or in the middle must never produce
+        // NaN in m, denom, alpha, or any later weight
+        let mut osm = OnlineSoftmax::new();
+        let a = osm.fold_max(f32::NEG_INFINITY); // empty segment first
+        assert_eq!(a, 1.0);
+        assert_eq!(osm.push(f32::NEG_INFINITY), 0.0, "masked row in empty state");
+        assert!(osm.finish().is_none(), "nothing folded → no normalizer");
+
+        let alpha = osm.fold_max(2.0);
+        assert!(alpha.is_finite() && !osm.m.is_nan());
+        let e = osm.push(2.0);
+        assert!((e - 1.0).abs() < 1e-6);
+        let a2 = osm.fold_max(f32::NEG_INFINITY); // masked segment in the middle
+        assert_eq!(a2, 1.0);
+        assert_eq!(osm.push(f32::NEG_INFINITY), 0.0, "masked row weighs zero");
+        let a3 = osm.fold_max(f32::NAN); // max over zero rows can be NaN
+        assert_eq!(a3, 1.0);
+        assert!(!osm.m.is_nan() && !osm.denom.is_nan());
+        let inv = osm.finish().unwrap();
+        assert!((inv - 1.0).abs() < 1e-6, "one real row → prob 1");
+    }
+
+    #[test]
+    fn online_softmax_all_masked_is_empty() {
+        let mut osm = OnlineSoftmax::new();
+        for _ in 0..4 {
+            assert_eq!(osm.fold_max(f32::NEG_INFINITY), 1.0);
+            assert_eq!(osm.push(f32::NEG_INFINITY), 0.0);
+        }
+        assert!(osm.finish().is_none());
+        assert!(!osm.m.is_nan() && !osm.denom.is_nan());
     }
 }

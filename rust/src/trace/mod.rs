@@ -130,7 +130,8 @@ pub enum TracePhase {
     /// code, see `FinishReason` ordering in `coordinator::request`).
     Retire,
     /// Score-path kernel time for one pass (engine-level; `lane` = mode
-    /// code 0 dense / 1 sparse / 2 packed / 3 mixed, `arg` = ns).
+    /// code 0 dense / 1 sparse / 2 packed / 3 mixed / 4 fused, `arg` =
+    /// ns; see `KernelCounters::dominant_mode`).
     Score,
     /// Speculative draft block emitted for a lane (`arg` = tokens
     /// drafted via the sparse score path).

@@ -1,0 +1,231 @@
+//! Fused streaming-decode parity (hermetic): the page-fused online-softmax
+//! path (`ScoreMode::Fused`) must match the three-pass packed routing
+//! within 1e-5 and the masked-dense oracle end-to-end — across
+//! k ∈ {d/4, d/2, d}, with H2O eviction on and off, on the native backend
+//! and bit-identically on the lane-sharded backend at 2 and 4 threads.
+//! The int8-quantized resident-KV path must stay inside its measured
+//! quantization-error bound on raw logits, keep greedy generations exactly
+//! equal to f32 on seed workloads, cut resident KV bytes by >= 40% at
+//! equal kv_keep, and round-trip its per-page dequantization scales
+//! through prefix-shared / COW pages.
+//!
+//! CI runs this file under `--release` (the fused kernel's SIMD path and
+//! the sharded scheduling are both release-sensitive).
+
+use std::sync::Arc;
+
+use aqua_serve::aqua::policy::AquaConfig;
+use aqua_serve::coordinator::h2o::H2oPolicy;
+use aqua_serve::coordinator::kvcache::LaneKv;
+use aqua_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use aqua_serve::kvpool::{KvPoolConfig, KvQuant};
+use aqua_serve::model::config::ModelConfig;
+use aqua_serve::runtime::{
+    AquaKnobs, BackendSpec, ExecBackend, NativeBackend, NativeModel, ScoreMode, ShardedBackend,
+};
+use aqua_serve::util::prng::Rng;
+
+/// Drive identical decode traffic through several backends (same shape as
+/// `decode_parity.rs`): random tokens, per-lane write cursors, and slot
+/// masks evolved by an H2O policy fed the *first* backend's attention
+/// mass, so every backend sees the exact same eviction interleaving.
+fn drive_parity(
+    backends: &mut [&mut dyn ExecBackend],
+    b: usize,
+    k_dims: usize,
+    steps: usize,
+    h2o: &H2oPolicy,
+    seed: u64,
+) -> Vec<Vec<Vec<f32>>> {
+    let cfg = backends[0].model_config().clone();
+    let (s_cap, d, n_layers) = (cfg.max_seq, cfg.d_head, cfg.n_layers);
+    assert!(steps < s_cap, "test drives more steps than KV capacity");
+    let knobs = AquaKnobs { k_dims, dim_keep: vec![1.0; d], use_projection: true };
+    let mut rng = Rng::new(seed);
+    for be in backends.iter_mut() {
+        be.empty_cache(b).unwrap();
+    }
+    let mut lanes: Vec<LaneKv> = (0..b).map(|_| LaneKv::new(s_cap)).collect();
+    let mut outs: Vec<Vec<Vec<f32>>> = vec![vec![]; backends.len()];
+    for _ in 0..steps {
+        let tokens: Vec<i32> = (0..b).map(|_| 32 + rng.below(90) as i32).collect();
+        let pos: Vec<i32> = lanes.iter().map(|l| l.len as i32).collect();
+        let mut mask = vec![0.0f32; b * s_cap];
+        for (lane, kv) in lanes.iter().enumerate() {
+            mask[lane * s_cap..(lane + 1) * s_cap].copy_from_slice(&kv.slot_mask);
+        }
+        let mut step_outs = vec![];
+        for be in backends.iter_mut() {
+            step_outs.push(be.decode(b, &tokens, &pos, &mask, &knobs).unwrap());
+        }
+        for lane in 0..b {
+            lanes[lane].commit_write(1);
+            let mut mass = vec![0.0f32; s_cap];
+            for l in 0..n_layers {
+                let base = (l * b + lane) * s_cap;
+                for s in 0..s_cap {
+                    mass[s] += step_outs[0].attn_acc[base + s];
+                }
+            }
+            lanes[lane].accumulate(&mass);
+            h2o.apply(&mut lanes[lane]);
+        }
+        for (i, o) in step_outs.into_iter().enumerate() {
+            outs[i].push(o.logits);
+        }
+    }
+    outs
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b.iter()).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+}
+
+#[test]
+fn fused_matches_packed_and_masked_oracle() {
+    let cfg = ModelConfig::tiny("fused-parity");
+    let d = cfg.d_head;
+    let model = Arc::new(NativeModel::new(cfg, 0xF0D5).unwrap());
+    // h2o ratio 1.0 disables eviction entirely; 0.3 evicts hard enough
+    // that fused page passes see real holes and fully-dead pages
+    for &h2o_ratio in &[1.0f64, 0.3] {
+        let h2o = H2oPolicy::new(h2o_ratio, 3);
+        for &k_dims in &[d / 4, d / 2, d] {
+            let mut oracle = NativeBackend::from_model(model.clone());
+            oracle.set_score_mode(ScoreMode::MaskedDense);
+            let mut packed = NativeBackend::from_model(model.clone());
+            packed.set_score_mode(ScoreMode::Packed);
+            let mut fused = NativeBackend::from_model(model.clone());
+            fused.set_score_mode(ScoreMode::Fused);
+            let mut bes: Vec<&mut dyn ExecBackend> = vec![&mut oracle, &mut packed, &mut fused];
+            let outs = drive_parity(&mut bes, 3, k_dims, 30, &h2o, 77 + k_dims as u64);
+            for (step, ((orc, pck), fus)) in
+                outs[0].iter().zip(&outs[1]).zip(&outs[2]).enumerate()
+            {
+                let dp = max_abs_diff(pck, fus);
+                assert!(
+                    dp <= 1e-5,
+                    "fused vs packed diff {dp} at step {step} (k={k_dims}, h2o={h2o_ratio})"
+                );
+                let do_ = max_abs_diff(orc, fus);
+                assert!(
+                    do_ <= 1e-4,
+                    "fused vs oracle diff {do_} at step {step} (k={k_dims}, h2o={h2o_ratio})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_fused_decode_is_bit_identical_to_native() {
+    let cfg = ModelConfig::tiny("fused-shard");
+    let d = cfg.d_head;
+    let model = Arc::new(NativeModel::new(cfg, 0x5A5A).unwrap());
+    let h2o = H2oPolicy::new(0.5, 4);
+    for &threads in &[2usize, 4] {
+        let mut native = NativeBackend::from_model(model.clone());
+        native.set_score_mode(ScoreMode::Fused);
+        let mut sharded = ShardedBackend::from_model(model.clone(), threads);
+        sharded.set_score_mode(ScoreMode::Fused).unwrap();
+        let mut bes: Vec<&mut dyn ExecBackend> = vec![&mut native, &mut sharded];
+        let outs = drive_parity(&mut bes, 8, d / 2, 24, &h2o, 9);
+        for (step, (a, s)) in outs[0].iter().zip(&outs[1]).enumerate() {
+            assert_eq!(a, s, "sharded(threads={threads}) fused logits diverged at step {step}");
+        }
+    }
+}
+
+#[test]
+fn int8_decode_stays_within_quantization_bound() {
+    let cfg = ModelConfig::tiny("fused-int8");
+    let d = cfg.d_head;
+    let model = Arc::new(NativeModel::new(cfg, 0x17A8).unwrap());
+    let h2o = H2oPolicy::new(1.0, 3);
+    for &k_dims in &[d / 2, d] {
+        let mut f32_be = NativeBackend::from_model(model.clone());
+        f32_be.set_score_mode(ScoreMode::Fused);
+        let mut int8_be = NativeBackend::from_model(model.clone());
+        int8_be
+            .configure_kv_pool(KvPoolConfig { kv_quant: KvQuant::Int8, ..Default::default() })
+            .unwrap();
+        let mut bes: Vec<&mut dyn ExecBackend> = vec![&mut f32_be, &mut int8_be];
+        let outs = drive_parity(&mut bes, 2, k_dims, 24, &h2o, 13 + k_dims as u64);
+        // symmetric int8 with per-page amax scales keeps each resident
+        // element within scale/2 ≈ 0.4% of its block amax; through score,
+        // softmax, AV mix and the output head the logit error stays well
+        // inside this empirical bound on the tiny analog models
+        for (step, (a, q)) in outs[0].iter().zip(&outs[1]).enumerate() {
+            let diff = max_abs_diff(a, q);
+            assert!(diff <= 0.25, "int8 logit drift {diff} at step {step} (k={k_dims})");
+        }
+    }
+}
+
+/// Run one greedy seed workload through an engine and return the token
+/// streams plus the resident-KV peak the metrics pipeline observed.
+fn engine_run(spec: &BackendSpec, quant: KvQuant) -> (Vec<Vec<i32>>, u64) {
+    let aqua = AquaConfig { k_ratio: 0.5, ..Default::default() };
+    let cfg = EngineConfig { batch: 4, aqua, kv_quant: quant, ..Default::default() };
+    let mut engine = Engine::with_spec(spec, cfg).unwrap();
+    let reqs: Vec<GenRequest> = (0..6)
+        .map(|i| GenRequest::new(i as u64 + 1, vec![65 + i as i32, 66, 67, 68, 69, 70], 20))
+        .collect();
+    let results = engine.run_batch(reqs).unwrap();
+    let snap = engine.metrics.snapshot();
+    (results.into_iter().map(|r| r.tokens).collect(), snap.kv_resident_peak_bytes)
+}
+
+#[test]
+fn int8_greedy_outputs_match_f32_and_cut_resident_bytes() {
+    let cfg = ModelConfig::tiny("fused-int8-engine");
+    let native = BackendSpec::native(cfg.clone(), 11).unwrap();
+    let (f32_tokens, f32_peak) = engine_run(&native, KvQuant::F32);
+    let (int8_tokens, int8_peak) = engine_run(&native, KvQuant::Int8);
+    assert_eq!(f32_tokens, int8_tokens, "int8 residency changed greedy outputs");
+    assert!(f32_peak > 0 && int8_peak > 0, "kv gauges did not flow");
+    // acceptance bound: >= 40% resident-KV reduction at equal kv_keep
+    assert!(
+        (int8_peak as f64) <= 0.6 * f32_peak as f64,
+        "int8 resident peak {int8_peak} vs f32 {f32_peak}: less than 40% saved"
+    );
+    // and the sharded backend decodes the quantized pool bit-identically
+    let sharded = BackendSpec::sharded(cfg, 11, 3).unwrap();
+    let (sharded_tokens, _) = engine_run(&sharded, KvQuant::Int8);
+    assert_eq!(int8_tokens, sharded_tokens, "int8 greedy diverged native vs sharded");
+}
+
+#[test]
+fn int8_scales_round_trip_through_prefix_shared_pages() {
+    // Property-style sweep: across seeds, a prefix-sharing int8 engine
+    // (COW pages + scale sidecars riding the share/copy path) must emit
+    // exactly what the sharing-disabled int8 engine emits.
+    let cfg = ModelConfig::tiny("fused-int8-prefix");
+    for seed in [1u64, 2, 3, 4, 5] {
+        let spec = BackendSpec::native(cfg.clone(), seed).unwrap();
+        let run = |prefix_cache: bool| {
+            let aqua = AquaConfig { k_ratio: 0.5, ..Default::default() };
+            let ecfg = EngineConfig {
+                batch: 4,
+                aqua,
+                kv_quant: KvQuant::Int8,
+                prefix_cache,
+                ..Default::default()
+            };
+            let mut engine = Engine::with_spec(&spec, ecfg).unwrap();
+            // shared long prefix, divergent tails → page-granular sharing
+            // with COW on the partially-filled tail page
+            let prefix: Vec<i32> = (0..40).map(|i| 40 + (i % 50) as i32).collect();
+            let reqs: Vec<GenRequest> = (0..4)
+                .map(|i| {
+                    let mut toks = prefix.clone();
+                    toks.push(90 + i as i32);
+                    GenRequest::new(i as u64 + 1, toks, 12)
+                })
+                .collect();
+            let results = engine.run_batch(reqs).unwrap();
+            results.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(run(true), run(false), "prefix-shared int8 diverged (seed {seed})");
+    }
+}

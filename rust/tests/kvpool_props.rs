@@ -20,7 +20,7 @@ use aqua_serve::aqua::policy::AquaConfig;
 use aqua_serve::coordinator::h2o::H2oPolicy;
 use aqua_serve::coordinator::kvcache::LaneKv;
 use aqua_serve::coordinator::{Engine, EngineConfig, FinishReason, GenRequest};
-use aqua_serve::kvpool::{budget_pages, KvPoolConfig, PagePool, PoolLayout, DEFAULT_PAGE_SLOTS};
+use aqua_serve::kvpool::{budget_pages, KvPoolConfig, KvQuant, PagePool, PoolLayout, DEFAULT_PAGE_SLOTS};
 use aqua_serve::model::config::ModelConfig;
 use aqua_serve::registry::ModelRegistry;
 use aqua_serve::runtime::{
@@ -51,8 +51,14 @@ fn prop_allocator_never_leaks_or_double_frees() {
             (max_pages, ops)
         },
         |(max_pages, ops)| {
-            let layout =
-                PoolLayout { page_slots: 4, key_dims: 2, head_dim: 4, layers: 1, kv_heads: 1 };
+            let layout = PoolLayout {
+                page_slots: 4,
+                key_dims: 2,
+                head_dim: 4,
+                layers: 1,
+                kv_heads: 1,
+                kv_quant: KvQuant::F32,
+            };
             let mut pool = PagePool::new(layout, *max_pages);
             let mut model: Vec<u32> = vec![]; // leased ids, oracle
             for &op in ops {
@@ -431,6 +437,7 @@ fn budget_pages_and_engine_pool_agree() {
         head_dim: cfg.d_head,
         layers: cfg.n_layers,
         kv_heads: cfg.n_kv_heads,
+        kv_quant: KvQuant::F32,
     };
     let pages = budget_pages(0.05, &layout).unwrap();
     let spec = BackendSpec::native(cfg.clone(), 1).unwrap();
